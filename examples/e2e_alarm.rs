@@ -1,0 +1,128 @@
+//! End-to-end driver (DESIGN.md E9): the full pipeline on the paper's
+//! workload, proving all layers compose.
+//!
+//! 1. build the ALARM generative substrate (published structure/arities)
+//! 2. forward-sample n = 200 rows (the paper's sample size)
+//! 3. learn the first-p-variable network with BOTH exact solvers on the
+//!    native engine, verifying they agree bit-for-bit
+//! 4. re-score a subsample through the AOT JAX/Pallas artifact via PJRT
+//!    and check cross-engine agreement (L1/L2/L3 composition)
+//! 5. report the paper's headline metrics: wall time, peak memory,
+//!    traversal counts, plus structure quality vs the ground truth CPDAG
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_alarm [-- p]
+//! ```
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+use bnsl::bn::{repo, shd_cpdag};
+use bnsl::data::Dataset;
+use bnsl::engine::{JaxEngine, NativeEngine, ScoreEngine};
+use bnsl::memtrack;
+use bnsl::score::ScoreKind;
+use bnsl::solver::{LeveledSolver, SilanderSolver};
+use std::path::Path;
+
+fn main() {
+    let p: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(17);
+    let n = 200;
+
+    println!("=== E2E: ALARM first {p} variables, n = {n} ===\n");
+
+    // 1–2. substrate + data
+    let truth = repo::alarm();
+    let data: Dataset = truth.sample(n, 2024).take_vars(p);
+    println!(
+        "[data] sampled {}×{} from ALARM (37 nodes, 46 edges, seeded CPTs)",
+        data.n(),
+        data.p()
+    );
+
+    // 3. both exact solvers, measured
+    let engine = NativeEngine::new(&data, ScoreKind::Jeffreys);
+    let (existing, mem_existing) =
+        memtrack::measure(|| SilanderSolver::new(&engine).solve());
+    let (proposed, mem_proposed) = memtrack::measure(|| LeveledSolver::new(&engine).solve());
+    assert_eq!(
+        existing.log_score.to_bits(),
+        proposed.log_score.to_bits(),
+        "solvers disagree!"
+    );
+    println!("\n[solve] optimal log R(V) = {:.4}", proposed.log_score);
+    println!(
+        "[solve] existing (Silander–Myllymäki): {:.2}s, peak {:.1} MB, {} traversals",
+        existing.stats.wall.as_secs_f64(),
+        mem_existing as f64 / 1e6,
+        existing.stats.traversals
+    );
+    println!(
+        "[solve] proposed (level-by-level)    : {:.2}s, peak {:.1} MB, {} traversal",
+        proposed.stats.wall.as_secs_f64(),
+        mem_proposed as f64 / 1e6,
+        proposed.stats.traversals
+    );
+    println!(
+        "[solve] headline ratios              : time {:.2}x, memory {:.2}x",
+        existing.stats.wall.as_secs_f64() / proposed.stats.wall.as_secs_f64(),
+        mem_existing as f64 / mem_proposed as f64
+    );
+
+    // 4. cross-engine check through the PJRT artifact
+    let artifact_dir = Path::new("artifacts");
+    match JaxEngine::new(&data, ScoreKind::Jeffreys, artifact_dir) {
+        Ok(jax) => {
+            let mut js = jax.scorer();
+            let mut ns = engine.scorer();
+            let masks: Vec<u32> = (1u32..128.min(1 << p)).collect();
+            let mut jv = Vec::new();
+            let mut nv = Vec::new();
+            js.log_q_batch(&masks, &mut jv);
+            ns.log_q_batch(&masks, &mut nv);
+            let max_rel = masks
+                .iter()
+                .enumerate()
+                .map(|(i, _)| (jv[i] - nv[i]).abs() / nv[i].abs().max(1.0))
+                .fold(0.0f64, f64::max);
+            println!(
+                "\n[jax] PJRT artifact ({} subsets scored): max rel err vs native = {max_rel:.2e}",
+                masks.len()
+            );
+            assert!(max_rel < 1e-4, "cross-engine disagreement");
+        }
+        Err(e) => println!("\n[jax] skipped ({e}); run `make artifacts`"),
+    }
+
+    // 5. structure quality vs ground truth (restricted to the first p vars)
+    let truth_sub = induced_subgraph(&truth, p);
+    let diff = shd_cpdag(&proposed.network, &truth_sub);
+    println!(
+        "\n[quality] CPDAG SHD vs ground truth: {} (extra {}, missing {}, misoriented {})",
+        diff.total(),
+        diff.extra,
+        diff.missing,
+        diff.misoriented
+    );
+    println!(
+        "[quality] learned {} edges, truth subgraph has {}",
+        proposed.network.edge_count(),
+        truth_sub.edge_count()
+    );
+    println!("\n[done] all layers composed: data → native/PJRT scoring → DP → network");
+}
+
+/// Ground-truth DAG restricted to the first `p` ALARM variables (edges
+/// among them only) — the comparable object for the learned network.
+fn induced_subgraph(net: &bnsl::bn::Network, p: usize) -> bnsl::bn::Dag {
+    let edges: Vec<(usize, usize)> = net
+        .dag()
+        .edges()
+        .into_iter()
+        .filter(|&(u, v)| u < p && v < p)
+        .collect();
+    bnsl::bn::Dag::from_edges(p, &edges)
+}

@@ -1,0 +1,98 @@
+//! The paper's §1 method taxonomy, head to head: constraint-based
+//! (PC-Stable), score-based local search (hill-climbing), hybrid
+//! (PC-restricted HC), and the globally-optimal DP — on the SACHS
+//! workload, across scores.
+//!
+//! ```bash
+//! cargo run --release --example hillclimb_vs_exact
+//! ```
+
+use bnsl::bn::{repo, shd_cpdag};
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::search::{hill_climb, pc_hill_climb, pc_stable, HillClimbOptions, PcOptions};
+use bnsl::solver::LeveledSolver;
+use bnsl::util::table::Table;
+
+fn main() {
+    let truth = repo::sachs();
+    let data = truth.sample(500, 11);
+    println!(
+        "SACHS consensus network: {} ternary nodes, {} edges; n = {}\n",
+        truth.p(),
+        truth.dag().edge_count(),
+        data.n()
+    );
+
+    let mut table = Table::new(vec![
+        "score",
+        "exact log-score",
+        "HC log-score",
+        "gap",
+        "HC optimal?",
+        "exact SHD",
+        "HC SHD",
+    ]);
+    for kind in [ScoreKind::Jeffreys, ScoreKind::Bic, ScoreKind::Bdeu { ess: 1.0 }] {
+        let engine = NativeEngine::new(&data, kind);
+        let exact = LeveledSolver::new(&engine).solve();
+        let hc = hill_climb(
+            &data,
+            kind,
+            &HillClimbOptions {
+                restarts: 6,
+                seed: 1,
+                ..Default::default()
+            },
+        );
+        assert!(
+            hc.log_score <= exact.log_score + 1e-9,
+            "local search must not beat the global optimum"
+        );
+        let gap = exact.log_score - hc.log_score;
+        table.row(vec![
+            kind.name(),
+            format!("{:.3}", exact.log_score),
+            format!("{:.3}", hc.log_score),
+            format!("{:.4}", gap),
+            if gap < 1e-9 { "yes".into() } else { "no".into() },
+            shd_cpdag(&exact.network, truth.dag()).total().to_string(),
+            shd_cpdag(&hc.network, truth.dag()).total().to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // constraint-based + hybrid rows (Jeffreys for the score-based part)
+    let pc = pc_stable(&data, &PcOptions::default());
+    println!(
+        "PC-Stable: {} G² tests, skeleton {} edges (truth: {})",
+        pc.tests,
+        pc.skeleton.len(),
+        truth.dag().skeleton().len()
+    );
+    let hybrid = pc_hill_climb(
+        &data,
+        ScoreKind::Jeffreys,
+        &PcOptions::default(),
+        &HillClimbOptions {
+            restarts: 6,
+            seed: 1,
+            ..Default::default()
+        },
+    );
+    let engine = NativeEngine::new(&data, ScoreKind::Jeffreys);
+    let exact = LeveledSolver::new(&engine).solve();
+    println!(
+        "hybrid (PC→HC): log-score {:.3} vs exact {:.3} (gap {:.3}), SHD {} vs exact {}",
+        hybrid.search.log_score,
+        exact.log_score,
+        exact.log_score - hybrid.search.log_score,
+        shd_cpdag(&hybrid.search.network, truth.dag()).total(),
+        shd_cpdag(&exact.network, truth.dag()).total()
+    );
+
+    println!("
+HC/PC/hybrid can match the optimum on easy instances but have no");
+    println!("guarantee; the paper's contribution makes the guaranteed optimum");
+    println!("affordable in memory.");
+}

@@ -1,0 +1,61 @@
+//! Fig. 6 path: learn a large ALARM prefix with the proposed method
+//! (optionally with the §5.3 disk-spill extension) and emit the network.
+//!
+//! The paper's full run is `--p 28` (10 GB peak, 32 h on their testbed);
+//! the default here is a containers-scale p = 18. The code path is
+//! identical — only the level widths change.
+//!
+//! ```bash
+//! cargo run --release --example large_network -- 18
+//! cargo run --release --example large_network -- 20 --spill
+//! ```
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+use bnsl::cli::exp::{alarm_data, run_solver};
+use bnsl::coordinator::plan::memory_plan;
+use bnsl::solver::SolveOptions;
+use bnsl::util::human_bytes;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p: usize = args
+        .first()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(18);
+    let spill = args.iter().any(|a| a == "--spill");
+
+    // analytic plan first, like the paper's §5.3 analysis
+    let plan = memory_plan(p, 0.5);
+    println!(
+        "p = {p}: planned peak {} at level {} (baseline would need {})",
+        human_bytes(plan.peak_bytes),
+        plan.peak_level,
+        human_bytes(plan.baseline_bytes)
+    );
+
+    let data = alarm_data(p, 200, 2024);
+    let options = SolveOptions {
+        spill_dir: spill.then(|| std::env::temp_dir().join("bnsl_large_spill")),
+        spill_threshold: 0.5,
+        ..Default::default()
+    };
+    let m = run_solver("leveled", &data, &options);
+    println!(
+        "solved: log-score {:.4}, wall {:.2}s, heap peak {}, spilled {}",
+        m.result.log_score,
+        m.wall_secs,
+        human_bytes(m.heap_peak as u64),
+        human_bytes(m.result.stats.spilled_bytes)
+    );
+    println!(
+        "order: {:?}",
+        m.result
+            .order
+            .iter()
+            .map(|&x| data.names()[x].as_str())
+            .collect::<Vec<_>>()
+    );
+    println!("\n{}", m.result.network.to_dot(data.names()));
+}

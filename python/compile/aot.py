@@ -1,0 +1,49 @@
+"""AOT driver: lower the L2 scorer to HLO-text artifacts.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+
+Artifact filenames carry the shape contract the rust runtime parses:
+`score_b{B}_n{N}_m{M}.hlo.txt` (M — count-table width — equals N here).
+Two shapes are emitted: a small one that keeps the interpret-mode Pallas
+latency low for tests, and the default batch the solvers use.
+"""
+
+import argparse
+import pathlib
+
+from .model import lower_to_hlo_text
+
+# (B, N): batch rows x max samples. M = N (dense ids < n <= N).
+SHAPES = [
+    (64, 256),
+    (256, 256),
+]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--outdir", default="../artifacts")
+    parser.add_argument(
+        "--shapes",
+        default=None,
+        help="comma-separated BxN pairs, e.g. '64x256,256x256'",
+    )
+    args = parser.parse_args()
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    shapes = SHAPES
+    if args.shapes:
+        shapes = [
+            tuple(int(x) for x in pair.split("x")) for pair in args.shapes.split(",")
+        ]
+
+    for b, n in shapes:
+        text = lower_to_hlo_text(b, n)
+        path = outdir / f"score_b{b}_n{n}_m{n}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""L1 — Pallas kernel: batched quotient-Jeffreys' local scores.
+
+The paper's compute hot-spot is evaluating `log Q(S)` (Eq. 6) for every
+subset `S` of the variable lattice. The closed form is a contingency
+count followed by a `lgamma` accumulation:
+
+    log Q(S) = sum_v [lgamma(c_v + 1/2) - lgamma(1/2)]
+             + lgamma(sigma/2) - lgamma(n + sigma/2)
+
+The rust coordinator radix-encodes each sample's restriction to `S` into a
+*dense configuration id* (bookkeeping); this kernel does the heavy part:
+
+  inputs  (one batch of B subsets)
+    idx    : i32[B, N]  dense ids per sample, -1 = padding
+    sigma  : f32[B]     joint state-space size sigma(S) (1 for padded rows)
+    nvalid : f32[B]     true sample count          (0 for padded rows)
+  output
+    logq   : f32[B]
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): counting is a
+one-hot compare-and-reduce — `(idx[:, :, None] == iota(M)).sum(axis=1)` —
+rather than a scatter, because scatters do not vectorise on the TPU VPU
+while the one-hot tile feeds a clean (TB, N, M) -> (TB, M) reduction. The
+grid tiles the batch dimension in TB-row blocks so each program instance
+holds a (TB, N) idx tile plus a (TB, N, M) one-hot tile in VMEM
+(TB=8, N=M=256: 8*256*256*4 B = 2 MiB, well under the ~16 MiB budget,
+leaving room to double-buffer the HBM->VMEM idx stream).
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-tile height: rows of the batch processed per program instance.
+TILE_B = 8
+
+
+def _score_kernel(idx_ref, sigma_ref, nvalid_ref, out_ref, *, m: int):
+    """One (TILE_B, N) tile of subsets -> TILE_B log-scores."""
+    idx = idx_ref[...]  # (TB, N) int32
+    n = idx.shape[1]
+    # one-hot contingency counting: (TB, N, M) compare, reduce over N.
+    # padding ids (-1) match no slot and vanish from the counts.
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, 1, m), 2)  # (1,1,M)
+    onehot = (idx[:, :, None] == slots).astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=1)  # (TB, M)
+
+    lg = jax.lax.lgamma
+    # per-configuration terms; counts == 0 contributes exactly 0
+    terms = lg(counts + 0.5) - lg(jnp.float32(0.5))
+    terms = jnp.where(counts > 0, terms, 0.0)
+    acc = jnp.sum(terms, axis=1)  # (TB,)
+
+    sigma = sigma_ref[...]  # (TB,)
+    nvalid = nvalid_ref[...]  # (TB,)
+    # Normaliser lgamma(σ/2) − lgamma(n+σ/2) expanded as −Σ_{i<n} ln(σ/2+i):
+    # σ(S) reaches ~4^28 for large subsets, where the difference of two f32
+    # lgammas is catastrophically cancelled; the per-step logs are exact to
+    # f32 eps. (Found by the hypothesis sweep in python/tests.)
+    steps = jax.lax.broadcasted_iota(jnp.float32, (1, n), 1)  # (1, N)
+    live = steps < nvalid[:, None]
+    denom = jnp.where(live, jnp.log(0.5 * sigma[:, None] + steps), 0.0)
+    out_ref[...] = acc - jnp.sum(denom, axis=1)
+
+
+def batched_log_q(idx, sigma, nvalid, *, m: int | None = None):
+    """Pallas-backed batched `log Q`: idx i32[B,N], sigma/nvalid f32[B].
+
+    `m` is the count-table width (dense ids must be < m); defaults to N.
+    B must be a multiple of TILE_B (the AOT shapes guarantee this).
+    """
+    b, n = idx.shape
+    if m is None:
+        m = n
+    if b % TILE_B != 0:
+        raise ValueError(f"batch {b} not a multiple of TILE_B={TILE_B}")
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        partial(_score_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B,), lambda i: (i,)),
+            pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(idx, sigma, nvalid)

@@ -1,0 +1,82 @@
+"""Pure-jnp / pure-python oracles for the L1 kernel.
+
+Two independent references:
+
+* :func:`ref_log_q` — the closed form in plain jnp (scatter-add counting),
+  the primary allclose target for the Pallas kernel.
+* :func:`ref_log_q_sequential` — the paper's Eq. 6 evaluated literally as
+  the sequential product, in float64 python. Proves the closed form is
+  the right formula (not just that two vectorisations agree).
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import gammaln
+
+
+def ref_log_q(idx, sigma, nvalid, *, m: int | None = None):
+    """Closed form with jnp scatter-add counting. Shapes as the kernel."""
+    idx = jnp.asarray(idx)
+    b, n = idx.shape
+    if m is None:
+        m = n
+    # -1 padding: redirect to an out-of-range slot and drop it
+    safe = jnp.where(idx >= 0, idx, m)
+    counts = jnp.zeros((b, m + 1), jnp.float32)
+    counts = counts.at[jnp.arange(b)[:, None], safe].add(1.0)
+    counts = counts[:, :m]
+    terms = jnp.where(counts > 0, gammaln(counts + 0.5) - gammaln(0.5), 0.0)
+    acc = jnp.sum(terms, axis=1)
+    sigma = jnp.asarray(sigma, jnp.float32)
+    nvalid = jnp.asarray(nvalid, jnp.float32)
+    # stable normaliser (same rationale as the kernel; the f64 oracle
+    # ref_log_q_closed_f64 independently checks this expansion)
+    steps = jnp.arange(n, dtype=jnp.float32)[None, :]
+    live = steps < nvalid[:, None]
+    denom = jnp.where(live, jnp.log(0.5 * sigma[:, None] + steps), 0.0)
+    return acc - jnp.sum(denom, axis=1)
+
+
+def ref_log_q_sequential(ids, sigma):
+    """Paper Eq. 6, literally, in float64:
+
+        log Q = sum_i log[(c_{i-1}(x_i) + 1/2) / (i - 1 + sigma/2)]
+
+    ``ids``: 1-D sequence of configuration ids (no padding); ``sigma``
+    a scalar.
+    """
+    seen: dict[int, int] = {}
+    acc = 0.0
+    for i, x in enumerate(ids):
+        c = seen.get(int(x), 0)
+        acc += math.log((c + 0.5) / (i + 0.5 * sigma))
+        seen[int(x)] = c + 1
+    return acc
+
+
+def ref_log_q_closed_f64(ids, sigma):
+    """Closed form in float64 python (precision reference)."""
+    counts: dict[int, int] = {}
+    for x in ids:
+        counts[int(x)] = counts.get(int(x), 0) + 1
+    n = len(ids)
+    acc = sum(math.lgamma(c + 0.5) - math.lgamma(0.5) for c in counts.values())
+    return acc + math.lgamma(0.5 * sigma) - math.lgamma(n + 0.5 * sigma)
+
+
+def encode_subset(columns, arities):
+    """Radix-encode rows over the given columns into dense ids (what the
+    rust coordinator does before calling the artifact). Returns
+    (dense_ids int32 array, num_distinct)."""
+    columns = [np.asarray(c) for c in columns]
+    if not columns:
+        return np.zeros(0, np.int32), 1
+    codes = np.zeros(len(columns[0]), np.int64)
+    stride = 1
+    for col, arity in zip(columns, arities):
+        codes += stride * col.astype(np.int64)
+        stride *= int(arity)
+    uniq, dense = np.unique(codes, return_inverse=True)
+    return dense.astype(np.int32), len(uniq)

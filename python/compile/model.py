@@ -1,0 +1,59 @@
+"""L2 — the JAX compute graph the rust coordinator executes.
+
+For this paper the "model" is the **batched local-score evaluator**: a
+jitted function mapping a batch of encoded subsets to their `log Q(S)`
+values, with the L1 Pallas kernel as its body so that lowering the L2
+function lowers the kernel into the same HLO module.
+
+Build-time only: `aot.py` lowers :func:`batched_local_scores` once per
+artifact shape; at runtime rust feeds it via PJRT. Python never sits on
+the solve path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.jeffreys_score import batched_log_q
+
+
+def batched_local_scores(idx, sigma, nvalid):
+    """`log Q` for a batch of subsets.
+
+    idx    : i32[B, N] dense joint-configuration ids, -1 padding
+    sigma  : f32[B]    joint state-space sizes sigma(S)
+    nvalid : f32[B]    true sample counts
+    returns f32[B]
+    """
+    return batched_log_q(idx, sigma, nvalid)
+
+
+def family_scores(joint_logq, parent_logq):
+    """Quotient family score (paper Eq. 7) given two score batches:
+    `log Q(X | P) = log Q(P ∪ {X}) − log Q(P)`.
+
+    Exposed for completeness/tests; the rust DP performs this subtraction
+    natively because the parent scores live in its level-(k) frontier.
+    """
+    return joint_logq - parent_logq
+
+
+def lower_to_hlo_text(b: int, n: int) -> str:
+    """Lower the L2 function for shapes (B=b, N=n) to HLO *text*.
+
+    Text, not serialized proto: jax >= 0.5 emits 64-bit instruction ids
+    that xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+    /opt/xla-example/README.md)."""
+    from jax._src.lib import xla_client as xc
+
+    idx = jax.ShapeDtypeStruct((b, n), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((b,), jnp.float32)
+
+    def fn(idx, sigma, nvalid):
+        return (batched_local_scores(idx, sigma, nvalid),)
+
+    lowered = jax.jit(fn).lower(idx, scalar, scalar)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernel vs pure-jnp ref vs literal Eq. 6.
+
+This is the build-time gate: `make test` runs these before anything is
+allowed to ship into `artifacts/`.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.jeffreys_score import TILE_B, batched_log_q
+from compile.kernels.ref import (
+    encode_subset,
+    ref_log_q,
+    ref_log_q_closed_f64,
+    ref_log_q_sequential,
+)
+
+
+def pad_batch(rows, n, b):
+    """rows: list of (ids list, sigma). Returns kernel-shaped operands."""
+    idx = np.full((b, n), -1, np.int32)
+    sigma = np.ones(b, np.float32)
+    nvalid = np.zeros(b, np.float32)
+    for r, (ids, sg) in enumerate(rows):
+        idx[r, : len(ids)] = ids
+        sigma[r] = sg
+        nvalid[r] = len(ids)
+    return idx, sigma, nvalid
+
+
+def kernel_scores(rows, n=64, b=TILE_B):
+    idx, sigma, nvalid = pad_batch(rows, n, b)
+    return np.asarray(batched_log_q(idx, sigma, nvalid))
+
+
+class TestWorkedExample:
+    """Paper §2.3: X=(0,1,0,1,1), Y=(0,0,1,1,1)."""
+
+    X = [0, 1, 0, 1, 1]
+    Y = [0, 0, 1, 1, 1]
+
+    def test_q_x_is_3_over_256(self):
+        ids, _ = encode_subset([self.X], [2])
+        got = kernel_scores([(ids, 2.0)])[0]
+        assert math.isclose(math.exp(got), 3 / 256, rel_tol=1e-5)
+
+    def test_q_x_given_y_is_1_over_90(self):
+        ids_xy, _ = encode_subset([self.X, self.Y], [2, 2])
+        ids_y, _ = encode_subset([self.Y], [2])
+        scores = kernel_scores([(ids_xy, 4.0), (ids_y, 2.0)])
+        quotient = math.exp(scores[0] - scores[1])
+        assert math.isclose(quotient, 1 / 90, rel_tol=1e-5)
+
+    def test_sequential_oracle_matches_paper_numbers(self):
+        ids, _ = encode_subset([self.X], [2])
+        assert math.isclose(
+            math.exp(ref_log_q_sequential(ids, 2.0)), 3 / 256, rel_tol=1e-12
+        )
+
+
+class TestOracleAgreement:
+    def test_closed_form_equals_sequential_f64(self):
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            n = int(rng.integers(1, 120))
+            sigma = float(rng.integers(1, 64))
+            ids = rng.integers(0, max(1, int(rng.integers(1, 40))), n)
+            a = ref_log_q_sequential(ids, sigma)
+            b = ref_log_q_closed_f64(ids, sigma)
+            assert math.isclose(a, b, rel_tol=1e-10, abs_tol=1e-10)
+
+    def test_jnp_ref_matches_f64_closed_form(self):
+        rng = np.random.default_rng(1)
+        rows = []
+        expected = []
+        for _ in range(TILE_B):
+            n = int(rng.integers(1, 60))
+            sigma = float(rng.integers(1, 32))
+            ids = rng.integers(0, 20, n)
+            rows.append((ids, sigma))
+            expected.append(ref_log_q_closed_f64(ids, sigma))
+        idx, sigma, nvalid = pad_batch(rows, 64, TILE_B)
+        got = np.asarray(ref_log_q(idx, sigma, nvalid))
+        np.testing.assert_allclose(got, expected, rtol=2e-5)
+
+
+class TestKernelVsRef:
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_hypothesis_sweep(self, data):
+        """Random shapes/arities: kernel == jnp ref == f64 closed form."""
+        n_samples = data.draw(st.integers(1, 100), label="n")
+        n_cap = data.draw(st.sampled_from([64, 128, 256]), label="N")
+        if n_samples > n_cap:
+            n_samples = n_cap
+        distinct = data.draw(st.integers(1, min(n_samples, 50)), label="distinct")
+        sigma = data.draw(
+            st.floats(1.0, 1e6, allow_nan=False, allow_infinity=False), label="sigma"
+        )
+        seed = data.draw(st.integers(0, 2**31), label="seed")
+        rng = np.random.default_rng(seed)
+        ids = rng.integers(0, distinct, n_samples)
+
+        got = kernel_scores([(ids, sigma)], n=n_cap)[0]
+        want64 = ref_log_q_closed_f64(ids, float(sigma))
+        assert math.isclose(got, want64, rel_tol=3e-4, abs_tol=3e-4)
+
+    def test_full_batch_against_ref(self):
+        rng = np.random.default_rng(7)
+        rows = [
+            (rng.integers(0, 10, int(rng.integers(1, 64))), float(rng.integers(1, 100)))
+            for _ in range(TILE_B * 3)
+        ]
+        idx, sigma, nvalid = pad_batch(rows, 64, TILE_B * 3)
+        got = np.asarray(batched_log_q(idx, sigma, nvalid))
+        want = np.asarray(ref_log_q(idx, sigma, nvalid))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_padding_rows_do_not_disturb_live_rows(self):
+        ids = np.array([0, 1, 0, 2], np.int32)
+        alone = kernel_scores([(ids, 4.0)])[0]
+        padded = kernel_scores([(ids, 4.0)] + [([], 1.0)] * 3)[0]
+        assert alone == padded
+
+    def test_sample_padding_is_inert(self):
+        """Widening N with -1 padding must not change scores."""
+        ids = np.array([0, 1, 1, 2, 0], np.int32)
+        a = kernel_scores([(ids, 8.0)], n=16)[0]
+        b = kernel_scores([(ids, 8.0)], n=256)[0]
+        assert math.isclose(a, b, rel_tol=1e-6)
+
+    def test_empty_subset_row_scores_zero(self):
+        """sigma = 1, all samples in one configuration: log Q(∅) = 0."""
+        ids = np.zeros(10, np.int32)
+        got = kernel_scores([(ids, 1.0)])[0]
+        assert abs(got) < 1e-5
+
+    def test_batch_must_be_tile_aligned(self):
+        idx = np.full((TILE_B + 1, 16), -1, np.int32)
+        s = np.ones(TILE_B + 1, np.float32)
+        with pytest.raises(ValueError, match="TILE_B"):
+            batched_log_q(idx, s, s)
+
+    def test_deterministic(self):
+        ids = np.array([3, 1, 4, 1, 5], np.int32)
+        a = kernel_scores([(ids, 9.0)])
+        b = kernel_scores([(ids, 9.0)])
+        np.testing.assert_array_equal(a, b)
+
+
+class TestEncodeSubset:
+    def test_dense_ids_are_compact(self):
+        cols = [np.array([0, 1, 0, 1]), np.array([0, 0, 1, 1])]
+        ids, distinct = encode_subset(cols, [2, 2])
+        assert distinct == 4
+        assert sorted(set(ids.tolist())) == [0, 1, 2, 3]
+
+    def test_identical_rows_share_ids(self):
+        cols = [np.array([1, 1, 1])]
+        ids, distinct = encode_subset(cols, [2])
+        assert distinct == 1
+        assert set(ids.tolist()) == {0}
+
+    def test_empty_subset(self):
+        ids, distinct = encode_subset([], [])
+        assert len(ids) == 0
+        assert distinct == 1

@@ -1,0 +1,62 @@
+"""L2 + AOT tests: the jitted model wrapper and the HLO-text lowering."""
+
+import math
+
+import numpy as np
+
+from compile.kernels.ref import encode_subset, ref_log_q_closed_f64
+from compile.model import batched_local_scores, family_scores, lower_to_hlo_text
+
+
+class TestModel:
+    def test_model_matches_f64_oracle(self):
+        rng = np.random.default_rng(3)
+        b, n = 8, 64
+        idx = np.full((b, n), -1, np.int32)
+        sigma = np.ones(b, np.float32)
+        nvalid = np.zeros(b, np.float32)
+        want = []
+        for r in range(b):
+            rows = int(rng.integers(1, n))
+            ids = rng.integers(0, 12, rows)
+            sg = float(rng.integers(1, 200))
+            idx[r, :rows] = ids
+            sigma[r] = sg
+            nvalid[r] = rows
+            want.append(ref_log_q_closed_f64(ids, sg))
+        got = np.asarray(batched_local_scores(idx, sigma, nvalid))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_family_scores_is_eq7_quotient(self):
+        # paper §2.3: log Q(X|Y) = log Q(X,Y) − log Q(Y) = log(1/90)
+        x = [0, 1, 0, 1, 1]
+        y = [0, 0, 1, 1, 1]
+        ids_xy, _ = encode_subset([x, y], [2, 2])
+        ids_y, _ = encode_subset([y], [2])
+        joint = ref_log_q_closed_f64(ids_xy, 4.0)
+        parent = ref_log_q_closed_f64(ids_y, 2.0)
+        fam = family_scores(np.float64(joint), np.float64(parent))
+        assert math.isclose(math.exp(float(fam)), 1 / 90, rel_tol=1e-10)
+
+
+class TestAot:
+    def test_lowering_produces_parseable_hlo_text(self):
+        text = lower_to_hlo_text(8, 32)
+        assert text.startswith("HloModule")
+        # the rust loader needs an entry computation with our 3 operands
+        assert "ENTRY" in text
+        assert text.count("parameter(") >= 3
+        # shapes are baked in
+        assert "s32[8,32]" in text
+        assert "f32[8]" in text
+
+    def test_lowering_is_deterministic(self):
+        a = lower_to_hlo_text(8, 32)
+        b = lower_to_hlo_text(8, 32)
+        assert a == b
+
+    def test_artifact_shapes_differ_by_request(self):
+        small = lower_to_hlo_text(8, 32)
+        large = lower_to_hlo_text(16, 32)
+        assert "s32[16,32]" in large
+        assert small != large

@@ -1,0 +1,28 @@
+//! Bench E5 — validates **Table 1**: operation counts against the
+//! Appendix-A closed forms, and traversal counts (proposed = 1,
+//! existing = 3 passes over the subset lattice).
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+use bnsl::cli::exp::{complexity, ExpConfig};
+
+fn main() {
+    let pmin: usize = std::env::var("BNSL_PMIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let pmax: usize = std::env::var("BNSL_PMAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let cfg = ExpConfig {
+        out_dir: std::path::PathBuf::from("results"),
+        ..Default::default()
+    };
+    println!("=== Table 1: computation counters vs closed forms ===");
+    println!("both methods: O(p²2^p) compute; bps updates must equal p(p−1)2^(p−2)\n");
+    let table = complexity(&cfg, pmin, pmax).expect("complexity failed");
+    println!("{}", table.render());
+    println!("memory: proposed O(√p·2^p) vs existing O(p·2^p) — see bench levels/table2");
+}

@@ -1,0 +1,52 @@
+//! Bench E4 — regenerates **Fig. 7**: the per-level combination counts
+//! (and frontier bytes) for p = 29, plus the §5.1 16 GB feasibility
+//! analysis (existing max 26 variables vs proposed max 28).
+
+use bnsl::coordinator::plan::{memory_plan, MemoryPlan};
+use bnsl::util::{human_bytes, table::Table};
+
+fn main() {
+    let p: usize = std::env::var("BNSL_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(29);
+    println!("=== Fig 7: combinations per level, p = {p} ===\n");
+    let plan = memory_plan(p, 0.5);
+    let mut table = Table::new(vec!["level k", "C(p,k)", "frontier", "near-peak"]);
+    for l in &plan.levels {
+        table.row(vec![
+            l.k.to_string(),
+            l.combinations.to_string(),
+            human_bytes(l.frontier_bytes),
+            if l.is_peak { "*".into() } else { String::new() },
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "peak: level {} — paper: \"the 15th level will be the peak\" (p = 29)",
+        plan.peak_level
+    );
+    println!(
+        "proposed peak {} vs baseline {}",
+        human_bytes(plan.peak_bytes),
+        human_bytes(plan.baseline_bytes)
+    );
+
+    println!("\n=== §5.1 feasibility on a 16 GB budget ===");
+    let budget = 16u64 << 30;
+    println!(
+        "existing method max p: {}   (paper: 26)",
+        MemoryPlan::max_p_within(budget, true)
+    );
+    println!(
+        "proposed method max p: {}   (paper: 28)",
+        MemoryPlan::max_p_within(budget, false)
+    );
+    println!("\npaper's own accounting for p=29 level-15 parent vectors:");
+    let binom = bnsl::bitset::BinomTable::new(29);
+    let bytes = binom.c(28, 14) * 29 * 8;
+    println!(
+        "C(28,14)·29·8 bytes = {} (paper: 8.6679 GB)",
+        human_bytes(bytes)
+    );
+}

@@ -1,0 +1,83 @@
+//! Scoring micro-benchmarks (the perf-pass instrument, EXPERIMENTS.md
+//! §Perf): per-subset cost of the native engine's counting strategies
+//! and, when artifacts are built, the PJRT/Pallas path.
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+use bnsl::cli::exp::{alarm_data, engine_bench};
+use bnsl::data::Dataset;
+use bnsl::score::counts::Counter;
+use bnsl::score::{LocalScorer, ScoreKind};
+use bnsl::util::table::Table;
+use std::time::Instant;
+
+fn time_counter(data: &Dataset, masks: &[u32], mut counter: Counter) -> f64 {
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for &m in masks {
+        sink += counter.count(data, m).len() as u64;
+    }
+    std::hint::black_box(sink);
+    t0.elapsed().as_secs_f64() / masks.len() as f64
+}
+
+fn main() {
+    let p = 20;
+    let n = 200;
+    let data = alarm_data(p, n, 2024);
+    // representative mid-lattice masks (where the DP spends its time)
+    let masks: Vec<u32> = bnsl::bitset::LevelIter::new(p, p / 2).take(200_000).collect();
+    println!("=== scoring micro-bench: p={p}, n={n}, {} masks of size {} ===\n", masks.len(), p / 2);
+
+    let mut table = Table::new(vec!["path", "ns/subset", "subsets/s"]);
+    let hash = time_counter(&data, &masks, Counter::new(n));
+    let sort = time_counter(&data, &masks, Counter::new(n).with_sort_strategy());
+    table.row(vec![
+        "count: open-addressing".to_string(),
+        format!("{:.0}", hash * 1e9),
+        format!("{:.2e}", 1.0 / hash),
+    ]);
+    table.row(vec![
+        "count: sort+runlength".to_string(),
+        format!("{:.0}", sort * 1e9),
+        format!("{:.2e}", 1.0 / sort),
+    ]);
+
+    // full Jeffreys scoring (count + lgamma + σ)
+    let mut scorer = LocalScorer::new(&data, ScoreKind::Jeffreys);
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for &m in &masks {
+        acc += scorer.log_q(m);
+    }
+    std::hint::black_box(acc);
+    let per = t0.elapsed().as_secs_f64() / masks.len() as f64;
+    table.row(vec![
+        "native log Q (full)".to_string(),
+        format!("{:.0}", per * 1e9),
+        format!("{:.2e}", 1.0 / per),
+    ]);
+
+    // PJRT path on a smaller sample (interpret-mode Pallas is slow)
+    let small: Vec<u32> = masks.iter().copied().take(512).collect();
+    let (native_per, jax_per) = engine_bench(&data, &small, std::path::Path::new("artifacts"));
+    table.row(vec![
+        "native log Q (512-batch)".to_string(),
+        format!("{:.0}", native_per * 1e9),
+        format!("{:.2e}", 1.0 / native_per),
+    ]);
+    match jax_per {
+        Some(jp) => {
+            table.row(vec![
+                "jax/PJRT log Q (512-batch)".to_string(),
+                format!("{:.0}", jp * 1e9),
+                format!("{:.2e}", 1.0 / jp),
+            ]);
+        }
+        None => println!("(PJRT path skipped: run `make artifacts`)"),
+    }
+    println!("{}", table.render());
+    println!("note: the jax path runs the Pallas kernel under interpret=True —");
+    println!("a correctness vehicle; real-TPU throughput is estimated in DESIGN.md.");
+}

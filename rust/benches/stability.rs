@@ -1,0 +1,31 @@
+//! Bench E2 — regenerates **Fig. 5 / Tables 3–4**: stability of the
+//! proposed method's runtime and peak memory over repeated identical
+//! runs (the paper runs each size 10 times and reports per-run values).
+//!
+//! Paper scale: BNSL_PS=20,21,22,23,24,25 BNSL_RUNS=10 cargo bench --bench stability
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+use bnsl::cli::exp::{stability, ExpConfig};
+
+fn main() {
+    let ps: Vec<usize> = std::env::var("BNSL_PS")
+        .unwrap_or_else(|_| "13,14,15,16".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let runs: usize = std::env::var("BNSL_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let cfg = ExpConfig {
+        out_dir: std::path::PathBuf::from("results"),
+        ..Default::default()
+    };
+    println!("=== Fig 5 / Tables 3–4: proposed-method stability ({runs} runs per p) ===");
+    println!("paper: time cv ≲ 3%, memory cv ≲ 4% across 10 runs\n");
+    let table = stability(&cfg, &ps, runs).expect("stability failed");
+    println!("{}", table.render());
+    println!("records: results/stability.json (per-run values, as Tables 3–4)");
+}

@@ -1,0 +1,34 @@
+//! Bench E1 — regenerates **Table 2 / Fig. 4(a,b)**: wall time and peak
+//! memory of the existing (Silander–Myllymäki) vs proposed (leveled)
+//! method on ALARM prefixes, n = 200.
+//!
+//! Default range is container-scale (p = 14…19, ~seconds each). The
+//! paper's exact range:  BNSL_PMIN=20 BNSL_PMAX=25 BNSL_RUNS=10 cargo bench --bench table2
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+use bnsl::cli::exp::{table2, ExpConfig};
+
+fn env(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let pmin = env("BNSL_PMIN", 14);
+    let pmax = env("BNSL_PMAX", 19);
+    let runs = env("BNSL_RUNS", 3);
+    let cfg = ExpConfig {
+        out_dir: std::path::PathBuf::from("results"),
+        ..Default::default()
+    };
+    println!("=== Table 2 / Fig 4: existing vs proposed (n = {}, {} runs) ===", cfg.n, runs);
+    println!("paper @ p=20..25: time 7.5→285.7 min vs 5.2→217.7 min (1.3–1.6x),");
+    println!("                  mem 148→5810 MB vs 85→1290 MB (1.7→4.5x)\n");
+    let table = table2(&cfg, pmin, pmax, runs).expect("table2 failed");
+    println!("{}", table.render());
+    println!("records: results/table2.json");
+}

@@ -1,0 +1,111 @@
+//! Binomial coefficient table.
+//!
+//! Shared by colex ranking (hot path: one row lookup per rank step) and the
+//! Appendix-A / Fig. 7 memory model. Stored row-major as a flat `Vec` for
+//! cache-friendly access: `c[n][k]` with `n, k ≤ p`.
+
+/// Precomputed Pascal triangle up to `n = p`.
+#[derive(Clone, Debug)]
+pub struct BinomTable {
+    p: usize,
+    // (p+1) x (p+2) row-major; the extra column keeps c(n, n+1) = 0 reads
+    // in-bounds for the ranking loop.
+    table: Vec<u64>,
+}
+
+impl BinomTable {
+    /// Build the triangle for ground sets up to `p` elements.
+    pub fn new(p: usize) -> BinomTable {
+        let cols = p + 2;
+        let mut table = vec![0u64; (p + 1) * cols];
+        for n in 0..=p {
+            table[n * cols] = 1;
+            for k in 1..=n {
+                table[n * cols + k] =
+                    table[(n - 1) * cols + k - 1] + table[(n - 1) * cols + k];
+            }
+        }
+        BinomTable { p, table }
+    }
+
+    /// `C(n, k)`; zero when `k > n`. Panics if `n` exceeds the table size.
+    #[inline]
+    pub fn c(&self, n: usize, k: usize) -> u64 {
+        debug_assert!(n <= self.p, "BinomTable::c({n},{k}) beyond p={}", self.p);
+        if k > n {
+            return 0;
+        }
+        self.table[n * (self.p + 2) + k]
+    }
+
+    /// Ground-set size the table was built for.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// The paper's Fig. 7 series: `C(p, k)` for `k = 0..=p`.
+    pub fn level_sizes(&self, p: usize) -> Vec<u64> {
+        (0..=p).map(|k| self.c(p, k)).collect()
+    }
+
+    /// Appendix-A frontier weight `k·C(p,k)` for `k = 0..=p` — the series
+    /// whose maximum (`≈ √p·2^p` at `k ≈ p/2`) sets the proposed method's
+    /// peak memory.
+    pub fn frontier_weights(&self, p: usize) -> Vec<u64> {
+        (0..=p).map(|k| k as u64 * self.c(p, k)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pascal_identity_holds() {
+        let b = BinomTable::new(20);
+        for n in 2..=20 {
+            for k in 1..n {
+                assert_eq!(b.c(n, k), b.c(n - 1, k - 1) + b.c(n - 1, k));
+            }
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        let b = BinomTable::new(30);
+        assert_eq!(b.c(0, 0), 1);
+        assert_eq!(b.c(5, 2), 10);
+        assert_eq!(b.c(28, 14), 40_116_600);
+        assert_eq!(b.c(30, 15), 155_117_520);
+    }
+
+    #[test]
+    fn out_of_range_k_is_zero() {
+        let b = BinomTable::new(6);
+        assert_eq!(b.c(4, 5), 0);
+        assert_eq!(b.c(6, 7), 0);
+    }
+
+    #[test]
+    fn rows_sum_to_powers_of_two() {
+        let b = BinomTable::new(24);
+        for p in 0..=24usize {
+            let total: u64 = b.level_sizes(p).iter().sum();
+            assert_eq!(total, 1u64 << p);
+        }
+    }
+
+    #[test]
+    fn frontier_weight_peaks_near_half_p() {
+        // Appendix A: argmax_k k·C(p,k) is slightly above p/2.
+        let b = BinomTable::new(29);
+        let w = b.frontier_weights(29);
+        let argmax = w
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(k, _)| k)
+            .unwrap();
+        assert_eq!(argmax, 15, "paper: level 15 is the p=29 peak");
+    }
+}

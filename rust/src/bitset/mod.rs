@@ -1,0 +1,288 @@
+//! Subset combinatorics over variable masks.
+//!
+//! Variable subsets `S ⊆ {0,…,p−1}` are `u32` bitmasks (`p ≤ 30`,
+//! [`crate::MAX_VARS`]). The level-by-level DP needs:
+//!
+//! * per-level enumeration of all `C(p,k)` masks (Gosper's hack, colex order),
+//! * **colex ranking**: mask → dense index within its level, so level arrays
+//!   are plain `Vec`s instead of hash maps,
+//! * binomial tables shared by ranking and the paper's Appendix-A memory
+//!   model (Fig. 7).
+
+mod binom;
+mod rank;
+
+pub use binom::BinomTable;
+pub use rank::{colex_rank, colex_unrank, DropRanks};
+
+/// Iterator over all subsets of `{0..p}` with exactly `k` bits, in
+/// colexicographic (= numeric) order, via Gosper's hack.
+#[derive(Clone, Debug)]
+pub struct LevelIter {
+    next: Option<u32>,
+    limit: u32, // first mask past the level, i.e. 1 << p
+}
+
+impl LevelIter {
+    /// All `k`-subsets of a `p`-element ground set.
+    pub fn new(p: usize, k: usize) -> LevelIter {
+        assert!(p <= crate::MAX_VARS, "p={p} exceeds MAX_VARS");
+        assert!(k <= p, "k={k} > p={p}");
+        let next = if k == 0 {
+            Some(0)
+        } else {
+            Some((1u32 << k) - 1)
+        };
+        LevelIter {
+            next,
+            limit: 1u32 << p,
+        }
+    }
+
+    /// Resume enumeration at an arbitrary mask of the level (used by the
+    /// parallel solver to start a worker mid-level; combine with
+    /// [`colex_unrank`] to jump to a rank).
+    pub fn resume(p: usize, first: u32) -> LevelIter {
+        assert!(p <= crate::MAX_VARS);
+        LevelIter {
+            next: Some(first),
+            limit: 1u32 << p,
+        }
+    }
+}
+
+impl Iterator for LevelIter {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        let cur = self.next?;
+        if cur >= self.limit {
+            self.next = None;
+            return None;
+        }
+        // Gosper's hack: next integer with the same popcount.
+        self.next = if cur == 0 {
+            None // the empty set is the only 0-bit subset
+        } else {
+            let c = cur & cur.wrapping_neg();
+            let r = cur + c;
+            if r == 0 {
+                None // would overflow past u32: no further subsets
+            } else {
+                Some((((r ^ cur) >> 2) / c) | r)
+            }
+        };
+        Some(cur)
+    }
+}
+
+/// The bit positions of `mask`, ascending. `O(popcount)` with
+/// trailing-zero extraction.
+#[inline]
+pub fn bits_of(mask: u32) -> BitsIter {
+    BitsIter { rest: mask }
+}
+
+/// Iterator companion of [`bits_of`].
+#[derive(Clone, Copy, Debug)]
+pub struct BitsIter {
+    rest: u32,
+}
+
+impl Iterator for BitsIter {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.rest == 0 {
+            return None;
+        }
+        let bit = self.rest.trailing_zeros() as usize;
+        self.rest &= self.rest - 1;
+        Some(bit)
+    }
+}
+
+impl ExactSizeIterator for BitsIter {
+    fn len(&self) -> usize {
+        self.rest.count_ones() as usize
+    }
+}
+
+/// The bit positions of a `u64` mask, ascending (wide graphs: [`crate::bn::Dag`]).
+#[inline]
+pub fn bits_of64(mask: u64) -> Bits64Iter {
+    Bits64Iter { rest: mask }
+}
+
+/// Iterator companion of [`bits_of64`].
+#[derive(Clone, Copy, Debug)]
+pub struct Bits64Iter {
+    rest: u64,
+}
+
+impl Iterator for Bits64Iter {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.rest == 0 {
+            return None;
+        }
+        let bit = self.rest.trailing_zeros() as usize;
+        self.rest &= self.rest - 1;
+        Some(bit)
+    }
+}
+
+/// Position of set-bit `var` among the set bits of `mask` (0-based).
+/// Precondition: `mask` contains `var`.
+#[inline]
+pub fn bit_index(mask: u32, var: usize) -> usize {
+    debug_assert!(mask & (1 << var) != 0, "bit_index: var {var} not in mask {mask:#b}");
+    (mask & ((1u32 << var) - 1)).count_ones() as usize
+}
+
+/// Iterate all subsets of `mask` (including `mask` itself and the empty
+/// set), in descending numeric order of the subset bits. Standard
+/// `sub = (sub - 1) & mask` trick.
+#[derive(Clone, Debug)]
+pub struct SubsetsIter {
+    mask: u32,
+    sub: u32,
+    done: bool,
+}
+
+/// All subsets of `mask` (2^|mask| of them).
+pub fn subsets_of(mask: u32) -> SubsetsIter {
+    SubsetsIter {
+        mask,
+        sub: mask,
+        done: false,
+    }
+}
+
+impl Iterator for SubsetsIter {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.done {
+            return None;
+        }
+        let cur = self.sub;
+        if cur == 0 {
+            self.done = true;
+        } else {
+            self.sub = (cur - 1) & self.mask;
+        }
+        Some(cur)
+    }
+}
+
+/// Render a mask as `{X0, X3, X7}` using optional names.
+pub fn format_mask(mask: u32, names: Option<&[String]>) -> String {
+    let items: Vec<String> = bits_of(mask)
+        .map(|b| match names {
+            Some(ns) if b < ns.len() => ns[b].clone(),
+            _ => format!("X{b}"),
+        })
+        .collect();
+    format!("{{{}}}", items.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Check;
+
+    #[test]
+    fn level_iter_counts_match_binomials() {
+        let binom = BinomTable::new(12);
+        for p in 0..=12usize {
+            for k in 0..=p {
+                let count = LevelIter::new(p, k).count() as u64;
+                assert_eq!(count, binom.c(p, k), "C({p},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn level_iter_is_sorted_and_correct_popcount() {
+        let mut prev = None;
+        for mask in LevelIter::new(10, 4) {
+            assert_eq!(mask.count_ones(), 4);
+            if let Some(p) = prev {
+                assert!(mask > p, "colex order is numeric order");
+            }
+            prev = Some(mask);
+        }
+    }
+
+    #[test]
+    fn level_iter_empty_set() {
+        let all: Vec<u32> = LevelIter::new(5, 0).collect();
+        assert_eq!(all, vec![0]);
+    }
+
+    #[test]
+    fn level_iter_full_set() {
+        let all: Vec<u32> = LevelIter::new(5, 5).collect();
+        assert_eq!(all, vec![0b11111]);
+    }
+
+    #[test]
+    fn level_iter_handles_full_width() {
+        // p = MAX_VARS must not overflow Gosper's increment.
+        let p = crate::MAX_VARS;
+        let last = LevelIter::new(p, p).last().unwrap();
+        assert_eq!(last, (1u32 << p) - 1);
+        assert_eq!(LevelIter::new(p, 1).count(), p);
+    }
+
+    #[test]
+    fn bits_of_extracts_positions() {
+        let bits: Vec<usize> = bits_of(0b1010_0110).collect();
+        assert_eq!(bits, vec![1, 2, 5, 7]);
+        assert_eq!(bits_of(0).count(), 0);
+    }
+
+    #[test]
+    fn bit_index_counts_lower_bits() {
+        let mask = 0b1010_0110;
+        assert_eq!(bit_index(mask, 1), 0);
+        assert_eq!(bit_index(mask, 2), 1);
+        assert_eq!(bit_index(mask, 5), 2);
+        assert_eq!(bit_index(mask, 7), 3);
+    }
+
+    #[test]
+    fn subsets_of_enumerates_powerset() {
+        let subs: Vec<u32> = subsets_of(0b101).collect();
+        assert_eq!(subs, vec![0b101, 0b100, 0b001, 0b000]);
+        assert_eq!(subsets_of(0).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn format_mask_with_and_without_names() {
+        assert_eq!(format_mask(0b101, None), "{X0, X2}");
+        let names: Vec<String> = vec!["A".into(), "B".into(), "C".into()];
+        assert_eq!(format_mask(0b110, Some(&names)), "{B, C}");
+    }
+
+    #[test]
+    fn prop_levels_partition_the_powerset() {
+        Check::new("levels partition 2^p").cases(20).run(|g| {
+            let p = 1 + g.rng.below_usize(10);
+            let mut seen = vec![false; 1 << p];
+            for k in 0..=p {
+                for mask in LevelIter::new(p, k) {
+                    let m = mask as usize;
+                    g.assert(!seen[m], "each mask appears in exactly one level");
+                    seen[m] = true;
+                }
+            }
+            g.assert(seen.iter().all(|&s| s), "every mask appears");
+        });
+    }
+}

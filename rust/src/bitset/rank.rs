@@ -1,0 +1,217 @@
+//! Colexicographic ranking of fixed-size subsets.
+//!
+//! For the level arrays the DP needs a bijection between the `C(p,k)` masks
+//! of popcount `k` and `0..C(p,k)`. Colex rank does this and respects the
+//! numeric enumeration order produced by Gosper's hack:
+//!
+//! `rank(S) = Σ_i C(b_i, i+1)` where `b_0 < b_1 < …` are the set bits.
+//!
+//! The transition for a level-(k+1) subset needs the ranks of all `k+1`
+//! *drop-one* subsets `S \ b_j`; [`DropRanks`] computes them all in `O(k)`
+//! via prefix/suffix sums instead of `O(k²)` repeated ranking.
+
+use super::binom::BinomTable;
+use super::bits_of;
+
+/// Rank of `mask` among all masks of equal popcount, colex order.
+#[inline]
+pub fn colex_rank(binom: &BinomTable, mask: u32) -> u64 {
+    let mut rank = 0u64;
+    for (i, b) in bits_of(mask).enumerate() {
+        rank += binom.c(b, i + 1);
+    }
+    rank
+}
+
+/// Inverse of [`colex_rank`]: the `rank`-th popcount-`k` mask over `p`
+/// variables. Greedy from the largest element down.
+pub fn colex_unrank(binom: &BinomTable, p: usize, k: usize, mut rank: u64) -> u32 {
+    let mut mask = 0u32;
+    let mut kk = k;
+    // For each position from high to low, take bit b if C(b, kk) <= rank.
+    let mut b = p;
+    while kk > 0 {
+        b -= 1;
+        let c = binom.c(b, kk);
+        if c <= rank {
+            rank -= c;
+            mask |= 1 << b;
+            kk -= 1;
+        }
+    }
+    debug_assert_eq!(rank, 0, "rank out of range for C({p},{k})");
+    mask
+}
+
+/// Scratch-free computation of the ranks of all drop-one subsets of a mask.
+///
+/// For `S` with ascending bits `b_0..b_k` (|S| = k+1), the rank of
+/// `S \ b_j` at level `k` is `Σ_{i<j} C(b_i, i+1) + Σ_{i>j} C(b_i, i)`.
+/// `compute` fills the caller's buffer (hot loop: zero allocation).
+pub struct DropRanks {
+    prefix: Vec<u64>,
+    suffix: Vec<u64>,
+}
+
+impl DropRanks {
+    /// Scratch sized for subsets up to `max_k + 1` elements.
+    pub fn new(max_size: usize) -> DropRanks {
+        DropRanks {
+            prefix: vec![0; max_size + 1],
+            suffix: vec![0; max_size + 1],
+        }
+    }
+
+    /// Fill `out[j] = colex_rank(S \ b_j)` for each ascending set bit `b_j`
+    /// of `mask`. Also returns `colex_rank(mask)` itself (free by-product:
+    /// `prefix[size]`).
+    pub fn compute(&mut self, binom: &BinomTable, mask: u32, out: &mut Vec<u64>) -> u64 {
+        let size = mask.count_ones() as usize;
+        debug_assert!(size < self.prefix.len(), "DropRanks scratch too small");
+        out.clear();
+        self.prefix[0] = 0;
+        self.suffix[size] = 0;
+        // ascending bits, forward pass for prefix
+        for (i, b) in bits_of(mask).enumerate() {
+            self.prefix[i + 1] = self.prefix[i] + binom.c(b, i + 1);
+        }
+        // backward pass for suffix: Σ_{i>j} C(b_i, i)
+        let bits: BitsCollect = BitsCollect::new(mask);
+        for i in (0..size).rev() {
+            let b = bits.get(i);
+            self.suffix[i] = self.suffix[i + 1] + binom.c(b, i);
+        }
+        for j in 0..size {
+            out.push(self.prefix[j] + self.suffix[j + 1]);
+        }
+        self.prefix[size]
+    }
+}
+
+/// Small fixed helper: random access to the ascending bits of a mask
+/// without allocating (recomputes via select; masks have ≤ 30 bits so a
+/// tiny loop is fine — but we cache into a stack array for the reverse
+/// pass above).
+struct BitsCollect {
+    bits: [u8; 32],
+    len: usize,
+}
+
+impl BitsCollect {
+    #[inline]
+    fn new(mask: u32) -> BitsCollect {
+        let mut bits = [0u8; 32];
+        let mut len = 0;
+        for b in bits_of(mask) {
+            bits[len] = b as u8;
+            len += 1;
+        }
+        BitsCollect { bits, len }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> usize {
+        debug_assert!(i < self.len);
+        self.bits[i] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitset::LevelIter;
+    use crate::util::check::Check;
+
+    #[test]
+    fn rank_matches_enumeration_order() {
+        let binom = BinomTable::new(12);
+        for p in 1..=12usize {
+            for k in 0..=p {
+                for (expected, mask) in LevelIter::new(p, k).enumerate() {
+                    assert_eq!(
+                        colex_rank(&binom, mask),
+                        expected as u64,
+                        "p={p} k={k} mask={mask:#b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unrank_inverts_rank_exhaustively() {
+        let binom = BinomTable::new(10);
+        for p in 1..=10usize {
+            for k in 0..=p {
+                for mask in LevelIter::new(p, k) {
+                    let r = colex_rank(&binom, mask);
+                    assert_eq!(colex_unrank(&binom, p, k, r), mask);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_rank_unrank_roundtrip_large_p() {
+        Check::new("rank/unrank roundtrip p<=30").cases(300).run(|g| {
+            let binom = BinomTable::new(30);
+            let p = 1 + g.rng.below_usize(30);
+            let k = g.rng.below_usize(p + 1);
+            // random k-subset of p
+            let mut vars: Vec<usize> = (0..p).collect();
+            g.rng.shuffle(&mut vars);
+            let mask = vars[..k].iter().fold(0u32, |m, &v| m | (1 << v));
+            let r = colex_rank(&binom, mask);
+            g.assert(r < binom.c(p, k), "rank within C(p,k)");
+            g.assert_eq(colex_unrank(&binom, p, k, r), mask, "roundtrip");
+        });
+    }
+
+    #[test]
+    fn drop_ranks_match_direct_ranking() {
+        let binom = BinomTable::new(16);
+        let mut dr = DropRanks::new(17);
+        let mut out = Vec::new();
+        for p in 2..=16usize {
+            for mask in LevelIter::new(p, 4.min(p)) {
+                let own = dr.compute(&binom, mask, &mut out);
+                assert_eq!(own, colex_rank(&binom, mask));
+                for (j, b) in bits_of(mask).enumerate() {
+                    let sub = mask & !(1u32 << b);
+                    assert_eq!(
+                        out[j],
+                        colex_rank(&binom, sub),
+                        "mask={mask:#b} drop bit {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_drop_ranks_random_masks() {
+        Check::new("drop ranks O(k) == direct").cases(200).run(|g| {
+            let binom = BinomTable::new(30);
+            let mut dr = DropRanks::new(31);
+            let mut out = Vec::new();
+            let p = 2 + g.rng.below_usize(29);
+            let k = 1 + g.rng.below_usize(p);
+            let mut vars: Vec<usize> = (0..p).collect();
+            g.rng.shuffle(&mut vars);
+            let mask = vars[..k].iter().fold(0u32, |m, &v| m | (1 << v));
+            dr.compute(&binom, mask, &mut out);
+            for (j, b) in bits_of(mask).enumerate() {
+                let sub = mask & !(1u32 << b);
+                g.assert_eq(out[j], colex_rank(&binom, sub), "drop rank matches");
+            }
+        });
+    }
+
+    #[test]
+    fn rank_of_empty_and_full() {
+        let binom = BinomTable::new(8);
+        assert_eq!(colex_rank(&binom, 0), 0);
+        assert_eq!(colex_rank(&binom, 0b1111_1111), 0);
+        assert_eq!(colex_unrank(&binom, 8, 0, 0), 0);
+    }
+}

@@ -1,0 +1,292 @@
+//! CPDAG (essential graph) construction — Markov equivalence classes.
+//!
+//! Two DAGs are Markov equivalent iff they share skeleton and v-structures
+//! (Verma & Pearl); the paper (§1, Fig. 1) treats equivalent structures as
+//! identical, so learned networks are compared through their CPDAGs.
+//!
+//! Construction: keep the skeleton; direct exactly the v-structure edges;
+//! close under Meek's rules R1–R3 (R4 is only needed with background
+//! knowledge, which we never supply).
+
+use super::dag::Dag;
+
+/// Partially directed graph: compelled (directed) and reversible
+/// (undirected) edges.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Cpdag {
+    p: usize,
+    /// directed[u*p + v] = true ⇔ compelled edge u → v
+    directed: Vec<bool>,
+    /// undirected[u*p + v] = undirected[v*p + u] = true ⇔ reversible edge
+    undirected: Vec<bool>,
+}
+
+impl Cpdag {
+    fn new(p: usize) -> Cpdag {
+        Cpdag {
+            p,
+            directed: vec![false; p * p],
+            undirected: vec![false; p * p],
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    fn idx(&self, u: usize, v: usize) -> usize {
+        u * self.p + v
+    }
+
+    /// Compelled edge u → v?
+    #[inline]
+    pub fn has_directed(&self, u: usize, v: usize) -> bool {
+        self.directed[self.idx(u, v)]
+    }
+
+    /// Reversible edge u — v?
+    #[inline]
+    pub fn has_undirected(&self, u: usize, v: usize) -> bool {
+        self.undirected[self.idx(u, v)]
+    }
+
+    /// Adjacent in the skeleton?
+    #[inline]
+    pub fn adjacent(&self, u: usize, v: usize) -> bool {
+        self.has_undirected(u, v) || self.has_directed(u, v) || self.has_directed(v, u)
+    }
+
+    /// Compelled edges as a sorted list.
+    pub fn directed_edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for u in 0..self.p {
+            for v in 0..self.p {
+                if self.has_directed(u, v) {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Reversible edges as a sorted list of (u < v) pairs.
+    pub fn undirected_edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for u in 0..self.p {
+            for v in (u + 1)..self.p {
+                if self.has_undirected(u, v) {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Compel `u → v` (removes any reversible mark on the pair).
+    pub fn orient(&mut self, u: usize, v: usize) {
+        let (iu, iv) = (self.idx(u, v), self.idx(v, u));
+        self.undirected[iu] = false;
+        self.undirected[iv] = false;
+        self.directed[iu] = true;
+    }
+
+    /// Bare partially-directed graph builder (used by [`cpdag_of`] and by
+    /// the PC algorithm's orientation phase).
+    pub fn with_skeleton(p: usize, skeleton: &[(usize, usize)]) -> Cpdag {
+        let mut g = Cpdag::new(p);
+        for &(u, v) in skeleton {
+            g.undirected[u * p + v] = true;
+            g.undirected[v * p + u] = true;
+        }
+        g
+    }
+
+    /// Close the orientation under Meek's rules R1–R3.
+    pub fn meek_close(&mut self) {
+        let p = self.p;
+        loop {
+            let mut changed = false;
+            for a in 0..p {
+                for b in 0..p {
+                    if !self.has_undirected(a, b) {
+                        continue;
+                    }
+                    // R1: c → a, c not adjacent to b  ⇒  a → b
+                    let r1 = (0..p).any(|c| self.has_directed(c, a) && !self.adjacent(c, b));
+                    // R2: a → c → b  ⇒  a → b
+                    let r2 =
+                        (0..p).any(|c| self.has_directed(a, c) && self.has_directed(c, b));
+                    // R3: a — c → b, a — d → b, c ≁ d  ⇒  a → b
+                    let r3 = {
+                        let mids: Vec<usize> = (0..p)
+                            .filter(|&c| self.has_undirected(a, c) && self.has_directed(c, b))
+                            .collect();
+                        mids.iter()
+                            .enumerate()
+                            .any(|(i, &c)| mids[i + 1..].iter().any(|&d| !self.adjacent(c, d)))
+                    };
+                    if r1 || r2 || r3 {
+                        self.orient(a, b);
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+}
+
+/// Build the CPDAG of a DAG.
+pub fn cpdag_of(dag: &Dag) -> Cpdag {
+    let p = dag.p();
+    let skeleton: Vec<(usize, usize)> = dag.edges();
+    let mut g = Cpdag::with_skeleton(p, &skeleton);
+    // v-structures u → v ← w with u, w non-adjacent: compel both edges
+    for v in 0..p {
+        let parents: Vec<usize> = crate::bitset::bits_of64(dag.parents(v)).collect();
+        for (i, &u) in parents.iter().enumerate() {
+            for &w in &parents[i + 1..] {
+                if !dag.has_edge(u, w) && !dag.has_edge(w, u) {
+                    g.orient(u, v);
+                    g.orient(w, v);
+                }
+            }
+        }
+    }
+    g.meek_close();
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Check;
+    use crate::util::rng::Rng;
+
+    /// Random DAG via random topological order + edge probability.
+    pub fn random_dag(p: usize, edge_prob: f64, rng: &mut Rng) -> Dag {
+        let mut order: Vec<usize> = (0..p).collect();
+        rng.shuffle(&mut order);
+        let mut dag = Dag::empty(p);
+        for i in 0..p {
+            for j in (i + 1)..p {
+                if rng.chance(edge_prob) {
+                    dag.add_edge_unchecked(order[i], order[j]);
+                }
+            }
+        }
+        dag
+    }
+
+    #[test]
+    fn fig1_markov_equivalent_chains_share_cpdag() {
+        // (a) X ← Y → Z, (b) X → Y → Z, (c) X ← Y ← Z — all equivalent.
+        let a = Dag::from_edges(3, &[(1, 0), (1, 2)]);
+        let b = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let c = Dag::from_edges(3, &[(2, 1), (1, 0)]);
+        let ca = cpdag_of(&a);
+        assert_eq!(ca, cpdag_of(&b));
+        assert_eq!(ca, cpdag_of(&c));
+        // fully reversible: no compelled edges
+        assert!(ca.directed_edges().is_empty());
+        assert_eq!(ca.undirected_edges(), vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn v_structure_is_compelled() {
+        // X → Y ← Z is NOT equivalent to the chains
+        let v = Dag::from_edges(3, &[(0, 1), (2, 1)]);
+        let cv = cpdag_of(&v);
+        assert_eq!(cv.directed_edges(), vec![(0, 1), (2, 1)]);
+        assert!(cv.undirected_edges().is_empty());
+        let chain = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        assert_ne!(cv, cpdag_of(&chain));
+    }
+
+    #[test]
+    fn meek_r1_orients_descendant_of_v_structure() {
+        // a → b ← c plus b — d: R1 compels b → d (else a new v-structure).
+        let dag = Dag::from_edges(4, &[(0, 1), (2, 1), (1, 3)]);
+        let g = cpdag_of(&dag);
+        assert!(g.has_directed(1, 3));
+        assert!(!g.has_undirected(1, 3));
+    }
+
+    #[test]
+    fn meek_r2_closes_transitive_triangle() {
+        // triangle a→b, b→c compelled via surroundings forces a→c when a—c.
+        // Construct: v-structures x→a←y ensure... simpler direct unit test
+        // of the rule through a graph where R2 must fire:
+        // d → a → b → c? Use: a→b←e (v-structure), b→c via R1, a—c in skeleton
+        let dag = Dag::from_edges(5, &[(0, 1), (4, 1), (1, 2), (0, 2)]);
+        let g = cpdag_of(&dag);
+        // v-structure 0→1←4 compelled; R1 gives 1→2; R2 then compels 0→2.
+        assert!(g.has_directed(0, 2));
+    }
+
+    #[test]
+    fn prop_cpdag_preserves_skeleton() {
+        Check::new("cpdag skeleton == dag skeleton").cases(100).run(|g| {
+            let p = 2 + g.rng.below_usize(7);
+            let dag = random_dag(p, 0.4, &mut g.rng);
+            let c = cpdag_of(&dag);
+            for u in 0..p {
+                for v in (u + 1)..p {
+                    let adj_dag = dag.has_edge(u, v) || dag.has_edge(v, u);
+                    g.assert_eq(c.adjacent(u, v), adj_dag, "adjacency preserved");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_compelled_edges_agree_with_dag_orientation() {
+        // Every compelled edge in the CPDAG must appear with the same
+        // orientation in the generating DAG.
+        Check::new("compelled ⊆ dag edges").cases(100).run(|g| {
+            let p = 2 + g.rng.below_usize(7);
+            let dag = random_dag(p, 0.4, &mut g.rng);
+            let c = cpdag_of(&dag);
+            for (u, v) in c.directed_edges() {
+                g.assert(dag.has_edge(u, v), "compelled edge matches DAG");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_covered_edge_reversal_preserves_cpdag() {
+        // Chickering: reversing a covered edge (parents(u) = parents(v)\{u})
+        // yields a Markov-equivalent DAG ⇒ identical CPDAG.
+        Check::new("covered edge reversal ⇒ same cpdag")
+            .cases(120)
+            .run(|g| {
+                let p = 3 + g.rng.below_usize(5);
+                let dag = random_dag(p, 0.4, &mut g.rng);
+                let covered: Vec<(usize, usize)> = dag
+                    .edges()
+                    .into_iter()
+                    .filter(|&(u, v)| dag.parents(v) & !(1 << u) == dag.parents(u))
+                    .collect();
+                if covered.is_empty() {
+                    return;
+                }
+                let (u, v) = covered[g.rng.below_usize(covered.len())];
+                let mut parents = dag.parent_masks().to_vec();
+                parents[v] &= !(1u64 << u);
+                parents[u] |= 1 << v;
+                let reversed = Dag::from_parents(parents);
+                g.assert_eq(cpdag_of(&dag), cpdag_of(&reversed), "cpdag invariant");
+            });
+    }
+
+    #[test]
+    fn empty_and_full_independence() {
+        let d = Dag::empty(4);
+        let c = cpdag_of(&d);
+        assert!(c.directed_edges().is_empty());
+        assert!(c.undirected_edges().is_empty());
+    }
+}

@@ -1,0 +1,273 @@
+//! Directed acyclic graphs over ≤ 30 variables, stored as parent masks.
+
+use crate::bitset::bits_of64;
+use crate::util::json::Json;
+
+/// A DAG: `parents[x]` is the bitmask of x's parent set.
+///
+/// Masks are `u64` (up to [`crate::MAX_NET_VARS`] nodes) so generative
+/// networks like ALARM (37 nodes) fit; the DP solvers restrict themselves
+/// to `u32` masks / [`crate::MAX_VARS`] variables.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Dag {
+    parents: Vec<u64>,
+}
+
+impl Dag {
+    /// Empty graph on `p` nodes.
+    pub fn empty(p: usize) -> Dag {
+        assert!(p <= crate::MAX_NET_VARS);
+        Dag {
+            parents: vec![0; p],
+        }
+    }
+
+    /// From explicit parent masks; panics on self-loops or cycles.
+    pub fn from_parents(parents: Vec<u64>) -> Dag {
+        let dag = Dag { parents };
+        assert!(dag.parents.len() <= crate::MAX_NET_VARS);
+        for (x, &pm) in dag.parents.iter().enumerate() {
+            assert_eq!(pm & (1 << x), 0, "self-loop on {x}");
+        }
+        assert!(dag.topological_order().is_some(), "graph has a cycle");
+        dag
+    }
+
+    /// From an edge list `u → v`.
+    pub fn from_edges(p: usize, edges: &[(usize, usize)]) -> Dag {
+        let mut parents = vec![0u64; p];
+        for &(u, v) in edges {
+            assert!(u < p && v < p && u != v);
+            parents[v] |= 1 << u;
+        }
+        Dag::from_parents(parents)
+    }
+
+    pub fn p(&self) -> usize {
+        self.parents.len()
+    }
+
+    /// Parent mask of node `x`.
+    #[inline]
+    pub fn parents(&self, x: usize) -> u64 {
+        self.parents[x]
+    }
+
+    /// All parent masks.
+    pub fn parent_masks(&self) -> &[u64] {
+        &self.parents
+    }
+
+    /// Is there an edge `u → v`?
+    #[inline]
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.parents[v] & (1 << u) != 0
+    }
+
+    /// Edge list in (u, v) order.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for (v, &pm) in self.parents.iter().enumerate() {
+            for u in bits_of64(pm) {
+                out.push((u, v));
+            }
+        }
+        out
+    }
+
+    /// Number of edges.
+    pub fn edge_count(&self) -> usize {
+        self.parents.iter().map(|pm| pm.count_ones() as usize).sum()
+    }
+
+    /// Add edge `u → v` without cycle checking (builder use only).
+    pub fn add_edge_unchecked(&mut self, u: usize, v: usize) {
+        self.parents[v] |= 1 << u;
+    }
+
+    /// Remove edge `u → v` if present.
+    pub fn remove_edge(&mut self, u: usize, v: usize) {
+        self.parents[v] &= !(1u64 << u);
+    }
+
+    /// Would adding `u → v` keep the graph acyclic? (is there no directed
+    /// path v ⇝ u already?)
+    pub fn can_add_edge(&self, u: usize, v: usize) -> bool {
+        if u == v || self.has_edge(u, v) {
+            return false;
+        }
+        // DFS from u following parent links == walking edges backwards;
+        // a path v ⇝ u exists iff u reaches v via parents.
+        let mut stack = vec![u];
+        let mut seen = 0u64;
+        while let Some(node) = stack.pop() {
+            if node == v {
+                return false;
+            }
+            for parent in bits_of64(self.parents[node]) {
+                if seen & (1 << parent) == 0 {
+                    seen |= 1 << parent;
+                    stack.push(parent);
+                }
+            }
+        }
+        true
+    }
+
+    /// A topological order (parents before children), or `None` if cyclic.
+    pub fn topological_order(&self) -> Option<Vec<usize>> {
+        let p = self.p();
+        let mut placed = 0u64;
+        let mut order = Vec::with_capacity(p);
+        // Kahn's algorithm over masks: repeatedly place nodes whose
+        // parents are all placed.
+        while order.len() < p {
+            let before = order.len();
+            for x in 0..p {
+                if placed & (1 << x) == 0 && self.parents[x] & !placed == 0 {
+                    placed |= 1 << x;
+                    order.push(x);
+                }
+            }
+            if order.len() == before {
+                return None; // no progress → cycle
+            }
+        }
+        Some(order)
+    }
+
+    /// Skeleton: set of undirected adjacent pairs (u < v).
+    pub fn skeleton(&self) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = self
+            .edges()
+            .into_iter()
+            .map(|(u, v)| (u.min(v), u.max(v)))
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Graphviz DOT rendering.
+    pub fn to_dot(&self, names: &[String]) -> String {
+        let name = |x: usize| -> String {
+            names
+                .get(x)
+                .cloned()
+                .unwrap_or_else(|| format!("X{x}"))
+        };
+        let mut out = String::from("digraph bn {\n  rankdir=LR;\n  node [shape=ellipse];\n");
+        for x in 0..self.p() {
+            out.push_str(&format!("  \"{}\";\n", name(x)));
+        }
+        for (u, v) in self.edges() {
+            out.push_str(&format!("  \"{}\" -> \"{}\";\n", name(u), name(v)));
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// JSON record of the structure.
+    pub fn to_json(&self, names: &[String]) -> Json {
+        let mut nodes = Json::arr();
+        for x in 0..self.p() {
+            let parents: Vec<String> = bits_of64(self.parents[x])
+                .map(|u| names.get(u).cloned().unwrap_or_else(|| format!("X{u}")))
+                .collect();
+            nodes = nodes.push(
+                Json::obj()
+                    .set(
+                        "name",
+                        names.get(x).cloned().unwrap_or_else(|| format!("X{x}")),
+                    )
+                    .set("parents", parents),
+            );
+        }
+        Json::obj().set("p", self.p()).set("nodes", nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_from_edges() {
+        let d = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        assert!(d.has_edge(0, 1));
+        assert!(d.has_edge(1, 2));
+        assert!(!d.has_edge(0, 2));
+        assert_eq!(d.edge_count(), 2);
+        assert_eq!(d.parents(2), 0b010);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn rejects_cycles() {
+        Dag::from_edges(3, &[(0, 1), (1, 2), (2, 0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loops() {
+        Dag::from_parents(vec![0b001u64]);
+    }
+
+    #[test]
+    fn supports_wide_graphs_beyond_solver_limit() {
+        // ALARM-scale: 37 nodes needs u64 masks
+        let mut d = Dag::empty(40);
+        d.add_edge_unchecked(36, 39);
+        assert!(d.has_edge(36, 39));
+        assert!(d.topological_order().is_some());
+    }
+
+    #[test]
+    fn topological_order_respects_edges() {
+        let d = Dag::from_edges(5, &[(3, 1), (1, 0), (4, 0), (2, 4)]);
+        let order = d.topological_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut pos = vec![0; 5];
+            for (i, &x) in order.iter().enumerate() {
+                pos[x] = i;
+            }
+            pos
+        };
+        for (u, v) in d.edges() {
+            assert!(pos[u] < pos[v], "{u}→{v} out of order in {order:?}");
+        }
+    }
+
+    #[test]
+    fn can_add_edge_detects_would_be_cycles() {
+        let d = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+        assert!(!d.can_add_edge(2, 0), "2→0 closes a cycle");
+        assert!(!d.can_add_edge(1, 1), "self loop");
+        assert!(!d.can_add_edge(0, 1), "already present");
+        assert!(d.can_add_edge(0, 2));
+        assert!(d.can_add_edge(3, 0));
+    }
+
+    #[test]
+    fn skeleton_deduplicates_and_sorts() {
+        let d = Dag::from_edges(3, &[(2, 0), (0, 1)]);
+        assert_eq!(d.skeleton(), vec![(0, 1), (0, 2)]);
+    }
+
+    #[test]
+    fn dot_contains_all_edges() {
+        let names: Vec<String> = vec!["A".into(), "B".into()];
+        let d = Dag::from_edges(2, &[(0, 1)]);
+        let dot = d.to_dot(&names);
+        assert!(dot.contains("\"A\" -> \"B\";"));
+        assert!(dot.starts_with("digraph"));
+    }
+
+    #[test]
+    fn json_lists_parents_by_name() {
+        let names: Vec<String> = vec!["A".into(), "B".into()];
+        let d = Dag::from_edges(2, &[(0, 1)]);
+        let j = d.to_json(&names).to_string();
+        assert!(j.contains(r#""name":"B","parents":["A"]"#), "{j}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Structural comparison metrics for learned vs. ground-truth graphs.
+
+use super::cpdag::{cpdag_of, Cpdag};
+use super::dag::Dag;
+
+/// Edge-level diff between two DAGs (directionality-aware).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StructureDiff {
+    /// skeleton edges present in `learned` but not `truth`
+    pub extra: usize,
+    /// skeleton edges present in `truth` but not `learned`
+    pub missing: usize,
+    /// shared skeleton edges whose compelled orientation differs
+    pub misoriented: usize,
+}
+
+impl StructureDiff {
+    /// Total structural hamming distance.
+    pub fn total(&self) -> usize {
+        self.extra + self.missing + self.misoriented
+    }
+}
+
+/// Structural Hamming distance between plain DAGs: skeleton differences
+/// count 1 each; shared edges with opposite direction count 1.
+pub fn shd(learned: &Dag, truth: &Dag) -> StructureDiff {
+    assert_eq!(learned.p(), truth.p());
+    let mut diff = StructureDiff::default();
+    let p = learned.p();
+    for u in 0..p {
+        for v in (u + 1)..p {
+            let l = (learned.has_edge(u, v), learned.has_edge(v, u));
+            let t = (truth.has_edge(u, v), truth.has_edge(v, u));
+            let l_adj = l.0 || l.1;
+            let t_adj = t.0 || t.1;
+            match (l_adj, t_adj) {
+                (true, false) => diff.extra += 1,
+                (false, true) => diff.missing += 1,
+                (true, true) if l != t => diff.misoriented += 1,
+                _ => {}
+            }
+        }
+    }
+    diff
+}
+
+/// SHD between the *CPDAGs* of two DAGs — the Markov-equivalence-respecting
+/// metric the paper's philosophy calls for (§1): orientation differences
+/// within an equivalence class cost nothing.
+pub fn shd_cpdag(learned: &Dag, truth: &Dag) -> StructureDiff {
+    let lc = cpdag_of(learned);
+    let tc = cpdag_of(truth);
+    cpdag_diff(&lc, &tc)
+}
+
+fn cpdag_diff(lc: &Cpdag, tc: &Cpdag) -> StructureDiff {
+    assert_eq!(lc.p(), tc.p());
+    let p = lc.p();
+    let mut diff = StructureDiff::default();
+    for u in 0..p {
+        for v in (u + 1)..p {
+            match (lc.adjacent(u, v), tc.adjacent(u, v)) {
+                (true, false) => diff.extra += 1,
+                (false, true) => diff.missing += 1,
+                (true, true) => {
+                    // mark types: compelled u→v / v→u / reversible
+                    let l_mark = (lc.has_directed(u, v), lc.has_directed(v, u));
+                    let t_mark = (tc.has_directed(u, v), tc.has_directed(v, u));
+                    if l_mark != t_mark {
+                        diff.misoriented += 1;
+                    }
+                }
+                (false, false) => {}
+            }
+        }
+    }
+    diff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_dags_have_zero_shd() {
+        let d = Dag::from_edges(4, &[(0, 1), (1, 2), (0, 3)]);
+        assert_eq!(shd(&d, &d).total(), 0);
+        assert_eq!(shd_cpdag(&d, &d).total(), 0);
+    }
+
+    #[test]
+    fn counts_extra_missing_misoriented() {
+        let truth = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let learned = Dag::from_edges(3, &[(1, 0), (0, 2)]);
+        let d = shd(&learned, &truth);
+        // (0,1) shared but reversed → misoriented; (0,2) extra; (1,2) missing
+        assert_eq!(
+            d,
+            StructureDiff {
+                extra: 1,
+                missing: 1,
+                misoriented: 1
+            }
+        );
+        assert_eq!(d.total(), 3);
+    }
+
+    #[test]
+    fn cpdag_shd_forgives_equivalent_reorientation() {
+        // chains X→Y→Z and X←Y←Z are Markov equivalent
+        let a = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let b = Dag::from_edges(3, &[(2, 1), (1, 0)]);
+        assert_eq!(shd(&a, &b).misoriented, 2);
+        assert_eq!(shd_cpdag(&a, &b).total(), 0);
+    }
+
+    #[test]
+    fn cpdag_shd_charges_v_structure_differences() {
+        let chain = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let collider = Dag::from_edges(3, &[(0, 1), (2, 1)]);
+        let d = shd_cpdag(&collider, &chain);
+        assert_eq!(d.extra, 0);
+        assert_eq!(d.missing, 0);
+        assert_eq!(d.misoriented, 2);
+    }
+}

@@ -1,0 +1,19 @@
+//! Bayesian-network substrate: DAGs, CPTs, sampling, equivalence classes.
+//!
+//! The solvers output a [`Dag`] (parent masks per variable); this module
+//! supplies everything around it — generative [`Network`]s with CPTs for
+//! producing experiment data (the paper samples n = 200 rows from ALARM),
+//! CPDAG conversion so learned structures are compared up to Markov
+//! equivalence (paper §1: "we will adhere to Markov equivalence"), and the
+//! structural metrics used by the end-to-end example.
+
+mod cpdag;
+mod dag;
+mod metrics;
+mod network;
+pub mod repo;
+
+pub use cpdag::{cpdag_of, Cpdag};
+pub use dag::Dag;
+pub use metrics::{shd, shd_cpdag, StructureDiff};
+pub use network::Network;

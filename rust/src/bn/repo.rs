@@ -1,0 +1,302 @@
+//! Embedded benchmark networks.
+//!
+//! * [`asia`] — the 8-node ASIA network (Lauritzen & Spiegelhalter 1988)
+//!   with its published CPTs: small enough for exact solvers in tests and
+//!   the quickstart, with a known ground truth.
+//! * [`alarm`] — the 37-node / 46-edge ALARM network (Beinlich et al. 1989)
+//!   used by the paper's experiments: published structure and arities;
+//!   CPTs are seeded Dirichlet draws (DESIGN.md §3 substitution — the
+//!   DP's time/memory depend only on (p, arities, n), and structure-quality
+//!   experiments use ASIA/SACHS where we carry real or fully-specified
+//!   parameters).
+//! * [`sachs`] — the 11-node / 17-edge consensus network of Sachs et
+//!   al. (2005), all-ternary, seeded CPTs; a mid-size example workload.
+
+use super::dag::Dag;
+use super::network::Network;
+
+fn names(list: &[&str]) -> Vec<String> {
+    list.iter().map(|s| s.to_string()).collect()
+}
+
+/// ASIA ("chest clinic"), published parameters. State 1 = "yes".
+///
+/// Structure: asia→tub, smoke→lung, smoke→bronc, tub→either,
+/// lung→either, either→xray, either→dysp, bronc→dysp.
+pub fn asia() -> Network {
+    let node_names = names(&[
+        "asia", "tub", "smoke", "lung", "bronc", "either", "xray", "dysp",
+    ]);
+    let (asia, tub, smoke, lung, bronc, either, xray, dysp) = (0, 1, 2, 3, 4, 5, 6, 7);
+    let dag = Dag::from_edges(
+        8,
+        &[
+            (asia, tub),
+            (smoke, lung),
+            (smoke, bronc),
+            (tub, either),
+            (lung, either),
+            (either, xray),
+            (either, dysp),
+            (bronc, dysp),
+        ],
+    );
+    // CPT row layout: parent configurations in radix order, lowest-index
+    // parent fastest-varying; each row is (P(state 0), P(state 1)).
+    let cpts = vec![
+        vec![0.99, 0.01],                                       // asia
+        vec![0.99, 0.01, 0.95, 0.05],                           // tub | asia = 0, 1
+        vec![0.5, 0.5],                                         // smoke
+        vec![0.99, 0.01, 0.9, 0.1],                             // lung | smoke
+        vec![0.7, 0.3, 0.4, 0.6],                               // bronc | smoke
+        // either | (tub, lung): logical OR. Rows: (tub,lung) = (0,0),(1,0),(0,1),(1,1)
+        vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0],           // either
+        vec![0.95, 0.05, 0.02, 0.98],                           // xray | either
+        // dysp | (bronc, either): rows (0,0),(1,0),(0,1),(1,1)
+        vec![0.9, 0.1, 0.2, 0.8, 0.3, 0.7, 0.1, 0.9],           // dysp
+    ];
+    Network::new(node_names, vec![2; 8], dag, cpts)
+}
+
+/// Canonical ALARM node order used throughout this repository (bnlearn
+/// ordering); "first p variables" in the paper's sense follows this order.
+pub const ALARM_NAMES: [&str; 37] = [
+    "HISTORY",
+    "CVP",
+    "PCWP",
+    "HYPOVOLEMIA",
+    "LVEDVOLUME",
+    "LVFAILURE",
+    "STROKEVOLUME",
+    "ERRLOWOUTPUT",
+    "HRBP",
+    "HREKG",
+    "ERRCAUTER",
+    "HRSAT",
+    "INSUFFANESTH",
+    "ANAPHYLAXIS",
+    "TPR",
+    "EXPCO2",
+    "KINKEDTUBE",
+    "MINVOL",
+    "FIO2",
+    "PVSAT",
+    "SAO2",
+    "PAP",
+    "PULMEMBOLUS",
+    "SHUNT",
+    "INTUBATION",
+    "PRESS",
+    "DISCONNECT",
+    "MINVOLSET",
+    "VENTMACH",
+    "VENTTUBE",
+    "VENTLUNG",
+    "VENTALV",
+    "ARTCO2",
+    "CATECHOL",
+    "HR",
+    "CO",
+    "BP",
+];
+
+/// Published per-node arities (same order as [`ALARM_NAMES`]).
+pub const ALARM_ARITIES: [u8; 37] = [
+    2, 3, 3, 2, 3, 2, 3, 2, 3, 3, 2, 3, 2, 2, 3, 4, 2, 4, 2, 3, 3, 3, 2, 2, 3, 4, 2, 3, 4, 4,
+    4, 4, 3, 2, 3, 3, 3,
+];
+
+/// Published 46-edge ALARM structure (Beinlich et al. 1989), by name.
+pub const ALARM_EDGES: [(&str, &str); 46] = [
+    ("LVFAILURE", "HISTORY"),
+    ("LVEDVOLUME", "CVP"),
+    ("LVEDVOLUME", "PCWP"),
+    ("HYPOVOLEMIA", "LVEDVOLUME"),
+    ("LVFAILURE", "LVEDVOLUME"),
+    ("HYPOVOLEMIA", "STROKEVOLUME"),
+    ("LVFAILURE", "STROKEVOLUME"),
+    ("ERRLOWOUTPUT", "HRBP"),
+    ("HR", "HRBP"),
+    ("ERRCAUTER", "HREKG"),
+    ("HR", "HREKG"),
+    ("ERRCAUTER", "HRSAT"),
+    ("HR", "HRSAT"),
+    ("ANAPHYLAXIS", "TPR"),
+    ("ARTCO2", "EXPCO2"),
+    ("VENTLUNG", "EXPCO2"),
+    ("INTUBATION", "MINVOL"),
+    ("VENTLUNG", "MINVOL"),
+    ("FIO2", "PVSAT"),
+    ("VENTALV", "PVSAT"),
+    ("PVSAT", "SAO2"),
+    ("SHUNT", "SAO2"),
+    ("PULMEMBOLUS", "PAP"),
+    ("INTUBATION", "SHUNT"),
+    ("PULMEMBOLUS", "SHUNT"),
+    ("INTUBATION", "PRESS"),
+    ("KINKEDTUBE", "PRESS"),
+    ("VENTTUBE", "PRESS"),
+    ("MINVOLSET", "VENTMACH"),
+    ("DISCONNECT", "VENTTUBE"),
+    ("VENTMACH", "VENTTUBE"),
+    ("INTUBATION", "VENTLUNG"),
+    ("KINKEDTUBE", "VENTLUNG"),
+    ("VENTTUBE", "VENTLUNG"),
+    ("INTUBATION", "VENTALV"),
+    ("VENTLUNG", "VENTALV"),
+    ("VENTALV", "ARTCO2"),
+    ("ARTCO2", "CATECHOL"),
+    ("INSUFFANESTH", "CATECHOL"),
+    ("SAO2", "CATECHOL"),
+    ("TPR", "CATECHOL"),
+    ("CATECHOL", "HR"),
+    ("HR", "CO"),
+    ("STROKEVOLUME", "CO"),
+    ("CO", "BP"),
+    ("TPR", "BP"),
+];
+
+/// The ALARM network: published structure/arities, seeded Dirichlet(α) CPTs.
+pub fn alarm_with(alpha: f64, seed: u64) -> Network {
+    let index = |name: &str| -> usize {
+        ALARM_NAMES
+            .iter()
+            .position(|&n| n == name)
+            .unwrap_or_else(|| panic!("unknown ALARM node {name}"))
+    };
+    let edges: Vec<(usize, usize)> = ALARM_EDGES
+        .iter()
+        .map(|&(u, v)| (index(u), index(v)))
+        .collect();
+    let dag = Dag::from_edges(37, &edges);
+    Network::with_random_cpts(
+        names(&ALARM_NAMES),
+        ALARM_ARITIES.to_vec(),
+        dag,
+        alpha,
+        seed,
+    )
+}
+
+/// ALARM with the repository's default parameterisation (α = 0.5 gives
+/// fairly deterministic, structure-revealing CPTs; seed fixed for
+/// reproducibility across every experiment in EXPERIMENTS.md).
+pub fn alarm() -> Network {
+    alarm_with(0.5, 2024)
+}
+
+/// SACHS consensus network (Sachs et al. 2005): 11 ternary nodes, 17
+/// edges; seeded CPTs.
+pub fn sachs() -> Network {
+    let node_names = names(&[
+        "Raf", "Mek", "Plcg", "PIP2", "PIP3", "Erk", "Akt", "PKA", "PKC", "P38", "Jnk",
+    ]);
+    let ix = |n: &str| node_names.iter().position(|m| m == n).unwrap();
+    let edge_list = [
+        ("Raf", "Mek"),
+        ("Mek", "Erk"),
+        ("Plcg", "PIP2"),
+        ("Plcg", "PIP3"),
+        ("PIP3", "PIP2"),
+        ("Erk", "Akt"),
+        ("PKA", "Akt"),
+        ("PKA", "Erk"),
+        ("PKA", "Mek"),
+        ("PKA", "Raf"),
+        ("PKA", "Jnk"),
+        ("PKA", "P38"),
+        ("PKC", "Raf"),
+        ("PKC", "Mek"),
+        ("PKC", "Jnk"),
+        ("PKC", "P38"),
+        ("PKC", "PKA"),
+    ];
+    let edges: Vec<(usize, usize)> = edge_list.iter().map(|&(u, v)| (ix(u), ix(v))).collect();
+    let dag = Dag::from_edges(11, &edges);
+    Network::with_random_cpts(node_names, vec![3; 11], dag, 0.5, 2024)
+}
+
+/// Look up an embedded network by CLI name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "asia" => Some(asia()),
+        "alarm" => Some(alarm()),
+        "sachs" => Some(sachs()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asia_matches_published_shape() {
+        let net = asia();
+        assert_eq!(net.p(), 8);
+        assert_eq!(net.dag().edge_count(), 8);
+        assert!(net.dag().has_edge(0, 1)); // asia → tub
+        assert!(net.dag().has_edge(5, 7)); // either → dysp
+    }
+
+    #[test]
+    fn asia_either_is_logical_or() {
+        let net = asia();
+        let d = net.sample(5000, 3);
+        let (tub, lung, either) = (1, 3, 5);
+        for i in 0..d.n() {
+            let expected = (d.value(i, tub) == 1 || d.value(i, lung) == 1) as u8;
+            assert_eq!(d.value(i, either), expected, "row {i}");
+        }
+    }
+
+    #[test]
+    fn alarm_matches_published_shape() {
+        let net = alarm();
+        assert_eq!(net.p(), 37);
+        assert_eq!(net.dag().edge_count(), 46);
+        assert_eq!(net.arities().iter().map(|&a| a as usize).sum::<usize>(), 105);
+        // spot checks
+        let ix = |n: &str| ALARM_NAMES.iter().position(|&m| m == n).unwrap();
+        assert!(net.dag().has_edge(ix("CATECHOL"), ix("HR")));
+        assert!(net.dag().has_edge(ix("CO"), ix("BP")));
+        assert_eq!(
+            net.dag().parents(ix("CATECHOL")).count_ones(),
+            4,
+            "CATECHOL has 4 parents"
+        );
+    }
+
+    #[test]
+    fn alarm_is_acyclic_and_samples() {
+        let net = alarm();
+        assert!(net.dag().topological_order().is_some());
+        let d = net.sample(200, 1);
+        assert_eq!(d.n(), 200);
+        assert_eq!(d.p(), 37);
+    }
+
+    #[test]
+    fn alarm_cpts_depend_on_seed_but_not_structure() {
+        let a = alarm_with(0.5, 1);
+        let b = alarm_with(0.5, 2);
+        assert_eq!(a.dag(), b.dag());
+        assert_ne!(a.sample(50, 9), b.sample(50, 9));
+    }
+
+    #[test]
+    fn sachs_shape() {
+        let net = sachs();
+        assert_eq!(net.p(), 11);
+        assert_eq!(net.dag().edge_count(), 17);
+        assert!(net.arities().iter().all(|&a| a == 3));
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("asia").is_some());
+        assert!(by_name("ALARM").is_some());
+        assert!(by_name("sachs").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Grammar: `bnsl <command> [positional…] [--key value…] [--switch…]`.
+//! Switches must be declared so `--switch value` is not mis-parsed.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, HashSet};
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/command prefix). `switch_names`
+    /// lists boolean flags that take no value.
+    pub fn parse<I, S>(argv: I, switch_names: &[&str]) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().map(Into::into).peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((key, value)) = name.split_once('=') {
+                    out.options.insert(key.to_string(), value.to_string());
+                } else if switch_names.contains(&name) {
+                    out.switches.insert(name.to_string());
+                } else {
+                    let value = iter
+                        .next()
+                        .ok_or_else(|| anyhow!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), value);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// A boolean switch.
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    /// Raw option lookup.
+    pub fn raw(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// Typed option with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| anyhow!("--{name}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Typed required option.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        let v = self
+            .options
+            .get(name)
+            .ok_or_else(|| anyhow!("missing required --{name}"))?;
+        v.parse::<T>()
+            .map_err(|_| anyhow!("--{name}: cannot parse '{v}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            ["data.csv", "--p", "20", "--runs=3", "--verbose"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["data.csv".to_string()]);
+        assert_eq!(a.get::<usize>("p", 0).unwrap(), 20);
+        assert_eq!(a.get::<usize>("runs", 0).unwrap(), 3);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_requires() {
+        let a = Args::parse(["--x", "5"], &[]).unwrap();
+        assert_eq!(a.get::<u64>("y", 7).unwrap(), 7);
+        assert_eq!(a.require::<u64>("x").unwrap(), 5);
+        assert!(a.require::<u64>("y").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Args::parse(["--p"], &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_parse() {
+        let a = Args::parse(["--p", "abc"], &[]).unwrap();
+        assert!(a.get::<usize>("p", 0).is_err());
+    }
+
+    #[test]
+    fn equals_form_allows_switch_like_values() {
+        let a = Args::parse(["--mode=fast", "--quiet"], &["quiet"]).unwrap();
+        assert_eq!(a.raw("mode"), Some("fast"));
+        assert!(a.switch("quiet"));
+    }
+}

@@ -1,0 +1,380 @@
+//! Command-line interface: `bnsl <command> [options]`.
+//!
+//! Commands
+//! --------
+//! * `learn`    — learn a network from a CSV file or an embedded network
+//! * `sample`   — forward-sample an embedded network to CSV
+//! * `exp ...`  — the paper's experiment harnesses (table2, stability,
+//!   levels, large, spill, complexity)
+//! * `info`     — environment/runtime diagnostics
+
+mod args;
+pub mod exp;
+
+pub use args::Args;
+
+use crate::bn::repo;
+use crate::data::{read_csv, write_csv, Dataset};
+use crate::engine::{JaxEngine, NativeEngine};
+use crate::score::ScoreKind;
+use crate::search::{hill_climb, pc_hill_climb, HillClimbOptions, PcOptions};
+use crate::solver::{LeveledSolver, SilanderSolver, SolveOptions};
+use anyhow::{anyhow, bail, Result};
+use std::path::PathBuf;
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+bnsl — globally-optimal Bayesian network structure learning
+        (Huang & Suzuki 2024, single-traversal level-by-level DP)
+
+USAGE:
+  bnsl learn  (--data file.csv | --network asia|alarm|sachs [--p P] [--n N])
+              [--solver leveled|silander|hillclimb|hybrid] [--score jeffreys|bdeu[:e]|bic|aic]
+              [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
+  bnsl sample --network asia|alarm|sachs --n N [--seed S] --out data.csv
+  bnsl exp table2     [--pmin 14] [--pmax 18] [--runs 3]  [--n 200] [--threads T]
+  bnsl exp stability  [--ps 12,14,16] [--runs 10] [--n 200]
+  bnsl exp levels     [--p 29] [--threshold 0.5]
+  bnsl exp large      [--p 20] [--n 200]          (paper Fig. 6 uses --p 28)
+  bnsl exp spill      [--pmin 14] [--pmax 16] [--threshold 0.5]
+  bnsl exp complexity [--pmin 8] [--pmax 12]
+  bnsl info           [--artifacts DIR]
+
+All experiment commands write JSON records to --out-dir (default results/).
+";
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let Some((command, rest)) = argv.split_first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    match command.as_str() {
+        "learn" => cmd_learn(Args::parse(rest.to_vec(), &["dot"])?),
+        "sample" => cmd_sample(Args::parse(rest.to_vec(), &[])?),
+        "exp" => cmd_exp(rest),
+        "info" => cmd_info(Args::parse(rest.to_vec(), &[])?),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn load_data(args: &Args) -> Result<Dataset> {
+    if let Some(path) = args.raw("data") {
+        let data = read_csv(&PathBuf::from(path))?;
+        let p = args.get::<usize>("p", data.p())?;
+        return Ok(data.take_vars(p.min(data.p())));
+    }
+    if let Some(name) = args.raw("network") {
+        let net = repo::by_name(name).ok_or_else(|| anyhow!("unknown network '{name}'"))?;
+        let n = args.get::<usize>("n", 200)?;
+        let seed = args.get::<u64>("seed", 2024)?;
+        let p = args.get::<usize>("p", net.p())?;
+        return Ok(net.sample(n, seed).take_vars(p.min(net.p())));
+    }
+    bail!("learn needs --data <csv> or --network <name>");
+}
+
+fn cmd_learn(args: Args) -> Result<()> {
+    let data = load_data(&args)?;
+    if data.p() > crate::MAX_VARS {
+        bail!(
+            "dataset has {} variables; exact solvers support ≤ {} (use --p)",
+            data.p(),
+            crate::MAX_VARS
+        );
+    }
+    let kind = ScoreKind::parse(args.raw("score").unwrap_or("jeffreys"))
+        .ok_or_else(|| anyhow!("bad --score"))?;
+    let solver = args.raw("solver").unwrap_or("leveled").to_string();
+    let engine_name = args.raw("engine").unwrap_or("native").to_string();
+    let options = SolveOptions {
+        threads: args.get::<usize>("threads", 1)?,
+        spill_dir: args.raw("spill-dir").map(PathBuf::from),
+        spill_threshold: args.get::<f64>("spill-threshold", 0.5)?,
+        batch: args.get::<usize>("batch", 1024)?,
+    };
+
+    let (result, heap) = crate::memtrack::measure(|| -> Result<_> {
+        Ok(match (solver.as_str(), engine_name.as_str()) {
+            ("hybrid", _) => {
+                let hy = pc_hill_climb(
+                    &data,
+                    kind,
+                    &PcOptions {
+                        alpha: args.get::<f64>("alpha", 0.05)?,
+                        max_cond: args.get::<usize>("max-cond", 3)?,
+                    },
+                    &HillClimbOptions {
+                        seed: args.get::<u64>("seed", 0)?,
+                        max_parents: args.get::<usize>("max-parents", 0)?,
+                        ..Default::default()
+                    },
+                );
+                eprintln!(
+                    "PC phase: {} tests, skeleton {} edges",
+                    hy.pc.tests,
+                    hy.pc.skeleton.len()
+                );
+                crate::solver::SolveResult {
+                    order: hy
+                        .search
+                        .network
+                        .topological_order()
+                        .expect("hybrid network is a DAG"),
+                    log_score: hy.search.log_score,
+                    network: hy.search.network,
+                    stats: Default::default(),
+                }
+            }
+            ("hillclimb", _) => {
+                let hc = hill_climb(
+                    &data,
+                    kind,
+                    &HillClimbOptions {
+                        seed: args.get::<u64>("seed", 0)?,
+                        max_parents: args.get::<usize>("max-parents", 0)?,
+                        ..Default::default()
+                    },
+                );
+                // package as a SolveResult-shaped record
+                crate::solver::SolveResult {
+                    order: hc
+                        .network
+                        .topological_order()
+                        .expect("hc network is a DAG"),
+                    log_score: hc.log_score,
+                    network: hc.network,
+                    stats: Default::default(),
+                }
+            }
+            (_, "jax") => {
+                let dir = PathBuf::from(args.raw("artifacts").unwrap_or("artifacts"));
+                let engine = JaxEngine::new(&data, kind, &dir)?;
+                match solver.as_str() {
+                    "leveled" => LeveledSolver::with_options_local(&engine, options).solve(),
+                    "silander" => SilanderSolver::with_options(&engine, options).solve(),
+                    other => bail!("unknown solver '{other}'"),
+                }
+            }
+            (_, "native") => {
+                let engine = NativeEngine::new(&data, kind);
+                match solver.as_str() {
+                    "leveled" => LeveledSolver::with_options(&engine, options).solve(),
+                    "silander" => SilanderSolver::with_options(&engine, options).solve(),
+                    other => bail!("unknown solver '{other}'"),
+                }
+            }
+            (_, other) => bail!("unknown engine '{other}'"),
+        })
+    });
+    let result = result?;
+
+    eprintln!(
+        "solver={solver} engine={engine_name} score={} p={} n={}",
+        kind.name(),
+        data.p(),
+        data.n()
+    );
+    eprintln!(
+        "log-score={:.6}  wall={:.3}s  heap-peak={}  state-peak={}",
+        result.log_score,
+        result.stats.wall.as_secs_f64(),
+        crate::util::human_bytes(heap as u64),
+        crate::util::human_bytes(result.stats.peak_state_bytes as u64),
+    );
+    let json = result.to_json(data.names()).to_pretty();
+    if let Some(out) = args.raw("out") {
+        std::fs::write(out, &json)?;
+        eprintln!("wrote {out}");
+    } else {
+        println!("{json}");
+    }
+    if args.switch("dot") {
+        println!("{}", result.network.to_dot(data.names()));
+    }
+    Ok(())
+}
+
+fn cmd_sample(args: Args) -> Result<()> {
+    let name: String = args.require("network")?;
+    let net = repo::by_name(&name).ok_or_else(|| anyhow!("unknown network '{name}'"))?;
+    let n: usize = args.require("n")?;
+    let seed = args.get::<u64>("seed", 2024)?;
+    let out: String = args.require("out")?;
+    let data = net.sample(n, seed);
+    write_csv(&data, &PathBuf::from(&out))?;
+    eprintln!("wrote {n} rows × {} vars to {out}", data.p());
+    Ok(())
+}
+
+fn cmd_exp(rest: &[String]) -> Result<()> {
+    let Some((which, rest)) = rest.split_first() else {
+        bail!("exp needs a sub-command (table2|stability|levels|large|spill|complexity)");
+    };
+    let args = Args::parse(rest.to_vec(), &[])?;
+    let cfg = exp::ExpConfig {
+        n: args.get::<usize>("n", 200)?,
+        seed: args.get::<u64>("seed", 2024)?,
+        threads: args.get::<usize>("threads", 1)?,
+        kind: ScoreKind::parse(args.raw("score").unwrap_or("jeffreys"))
+            .ok_or_else(|| anyhow!("bad --score"))?,
+        out_dir: PathBuf::from(args.raw("out-dir").unwrap_or("results")),
+    };
+    let table = match which.as_str() {
+        "table2" => exp::table2(
+            &cfg,
+            args.get::<usize>("pmin", 14)?,
+            args.get::<usize>("pmax", 18)?,
+            args.get::<usize>("runs", 3)?,
+        )?,
+        "stability" => {
+            let ps: Vec<usize> = args
+                .raw("ps")
+                .unwrap_or("12,14,16")
+                .split(',')
+                .map(|s| s.trim().parse())
+                .collect::<Result<_, _>>()
+                .map_err(|e| anyhow!("bad --ps: {e}"))?;
+            exp::stability(&cfg, &ps, args.get::<usize>("runs", 10)?)?
+        }
+        "levels" => exp::levels(
+            &cfg,
+            args.get::<usize>("p", 29)?,
+            args.get::<f64>("threshold", 0.5)?,
+        )?,
+        "large" => {
+            let p = args.get::<usize>("p", 20)?;
+            let (result, data) = exp::large(&cfg, p)?;
+            println!("{}", result.network.to_dot(data.names()));
+            eprintln!(
+                "p={p}  log-score={:.4}  wall={:.2}s  (records in {})",
+                result.log_score,
+                result.stats.wall.as_secs_f64(),
+                cfg.out_dir.display()
+            );
+            return Ok(());
+        }
+        "spill" => exp::spill(
+            &cfg,
+            args.get::<usize>("pmin", 14)?,
+            args.get::<usize>("pmax", 16)?,
+            args.get::<f64>("threshold", 0.5)?,
+        )?,
+        "complexity" => exp::complexity(
+            &cfg,
+            args.get::<usize>("pmin", 8)?,
+            args.get::<usize>("pmax", 12)?,
+        )?,
+        other => bail!("unknown experiment '{other}'"),
+    };
+    println!("{}", table.render());
+    eprintln!("records written to {}", cfg.out_dir.display());
+    Ok(())
+}
+
+fn cmd_info(args: Args) -> Result<()> {
+    println!("bnsl {}", env!("CARGO_PKG_VERSION"));
+    println!("max exact-solver variables: {}", crate::MAX_VARS);
+    let dir = PathBuf::from(args.raw("artifacts").unwrap_or("artifacts"));
+    match crate::runtime::Runtime::cpu(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            match rt.available() {
+                Ok(shapes) if !shapes.is_empty() => {
+                    for s in shapes {
+                        println!("  artifact: B={} N={} M={}", s.b, s.n, s.m);
+                    }
+                }
+                _ => println!("  no scoring artifacts in {} (run `make artifacts`)", dir.display()),
+            }
+        }
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    for p in [16, 20, 24, 26, 28, 29] {
+        let plan = crate::coordinator::plan::memory_plan(p, 0.0);
+        println!(
+            "p={p:2}: proposed peak {}, baseline {}",
+            crate::util::human_bytes(plan.peak_bytes),
+            crate::util::human_bytes(plan.baseline_bytes)
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_mentions_every_command() {
+        for cmd in ["learn", "sample", "exp", "info"] {
+            assert!(USAGE.contains(cmd), "{cmd} missing from usage");
+        }
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn sample_then_learn_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cli_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("asia.csv").to_string_lossy().to_string();
+        run(vec![
+            "sample".into(),
+            "--network".into(),
+            "asia".into(),
+            "--n".into(),
+            "80".into(),
+            "--out".into(),
+            csv.clone(),
+        ])
+        .unwrap();
+        let out = dir.join("net.json").to_string_lossy().to_string();
+        run(vec![
+            "learn".into(),
+            "--data".into(),
+            csv,
+            "--out".into(),
+            out.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("\"log_score\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn learn_requires_a_source() {
+        assert!(run(vec!["learn".into()]).is_err());
+    }
+
+    #[test]
+    fn learn_with_hillclimb_and_bic() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cli_hc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("hc.json").to_string_lossy().to_string();
+        run(vec![
+            "learn".into(),
+            "--network".into(),
+            "asia".into(),
+            "--n".into(),
+            "60".into(),
+            "--solver".into(),
+            "hillclimb".into(),
+            "--score".into(),
+            "bic".into(),
+            "--out".into(),
+            out.clone(),
+        ])
+        .unwrap();
+        assert!(std::path::Path::new(&out).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordination utilities around the solvers.
+//!
+//! * [`spill`] — the paper's §5.3 extension: keep the level-`k`
+//!   best-parent-set vectors on disk *at the peak levels only*, serving
+//!   the level-`k+1` sweep through a windowed read cache. "The proposed
+//!   method can reduce the memory peak by using the disk only at the peak
+//!   or near-peak levels, rather than throughout the entire process."
+//! * [`plan`] — the analytic level/memory planner behind Fig. 7 and the
+//!   `bnsl exp levels` harness.
+
+pub mod plan;
+pub mod spill;

@@ -1,0 +1,193 @@
+//! Analytic memory/level planner — the model behind the paper's Fig. 7
+//! and the §5.1 "maximum p on 16 GB" analysis.
+
+use crate::bitset::BinomTable;
+use crate::util::json::Json;
+
+/// Per-level accounting of the proposed method's frontier.
+#[derive(Clone, Debug)]
+pub struct LevelPlan {
+    pub k: usize,
+    /// `C(p, k)` — the paper's Fig. 7 series
+    pub combinations: u64,
+    /// bytes of the level's frontier arrays: `C(p,k)·(16 + k·12)`
+    /// (q + r f64 per subset, bps f64 + bpm u32 per member)
+    pub frontier_bytes: u64,
+    /// true while `k·C(p,k)` is within `threshold·max` — the near-peak
+    /// region the §5.3 extension spills
+    pub is_peak: bool,
+}
+
+/// Whole-run plan for `p` variables.
+#[derive(Clone, Debug)]
+pub struct MemoryPlan {
+    pub p: usize,
+    pub levels: Vec<LevelPlan>,
+    /// peak of two adjacent frontiers + the 5·2^p sink tables
+    pub peak_bytes: u64,
+    /// the level index at the peak (paper: 15 for p = 29)
+    pub peak_level: usize,
+    /// baseline (Silander all-in-RAM): `2^p·8 + p·2^p·12 + 2^p·13`
+    pub baseline_bytes: u64,
+}
+
+/// Build the plan (pure arithmetic; `p ≤ 64` supported analytically).
+pub fn memory_plan(p: usize, spill_threshold: f64) -> MemoryPlan {
+    assert!((1..=62).contains(&p), "analytic planner supports p ≤ 62");
+    let binom = BinomTable::new(p);
+    let weights = binom.frontier_weights(p);
+    let max_weight = *weights.iter().max().unwrap();
+    let frontier =
+        |k: usize| -> u64 { binom.c(p, k) * (16 + 12 * k as u64) };
+    let levels: Vec<LevelPlan> = (0..=p)
+        .map(|k| LevelPlan {
+            k,
+            combinations: binom.c(p, k),
+            frontier_bytes: frontier(k),
+            is_peak: spill_threshold > 0.0
+                && weights[k] as f64 >= spill_threshold * max_weight as f64,
+        })
+        .collect();
+    let sink_bytes = 5u64 << p;
+    let (peak_level, peak_bytes) = (0..p)
+        .map(|k| (k + 1, frontier(k) + frontier(k + 1) + sink_bytes))
+        .max_by_key(|&(_, b)| b)
+        .unwrap();
+    let baseline_bytes = (8u64 << p) + 12 * (p as u64) * (1u64 << p) + (13u64 << p);
+    MemoryPlan {
+        p,
+        levels,
+        peak_bytes,
+        peak_level,
+        baseline_bytes,
+    }
+}
+
+impl MemoryPlan {
+    /// Largest `p` whose planned peak fits a byte budget (paper §5.1:
+    /// 16 GB ⇒ 26 for the baseline vs 28 for the proposed method).
+    pub fn max_p_within(budget_bytes: u64, baseline: bool) -> usize {
+        let mut best = 0;
+        for p in 1..=40 {
+            let plan = memory_plan(p, 0.0);
+            let need = if baseline {
+                plan.baseline_bytes
+            } else {
+                plan.peak_bytes
+            };
+            if need <= budget_bytes {
+                best = p;
+            }
+        }
+        best
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut levels = Json::arr();
+        for l in &self.levels {
+            levels = levels.push(
+                Json::obj()
+                    .set("k", l.k)
+                    .set("combinations", l.combinations)
+                    .set("frontier_bytes", l.frontier_bytes)
+                    .set("is_peak", l.is_peak),
+            );
+        }
+        Json::obj()
+            .set("p", self.p)
+            .set("peak_bytes", self.peak_bytes)
+            .set("peak_level", self.peak_level)
+            .set("baseline_bytes", self.baseline_bytes)
+            .set("levels", levels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_peak_level_for_p29_is_15() {
+        // Paper §5.3: "Considering 29 variables … the 15th level will be
+        // the peak of memory usage."
+        let plan = memory_plan(29, 0.5);
+        assert_eq!(plan.peak_level, 15);
+    }
+
+    #[test]
+    fn fig7_combination_series_is_symmetric_and_peaks_mid() {
+        let plan = memory_plan(29, 0.0);
+        let combos: Vec<u64> = plan.levels.iter().map(|l| l.combinations).collect();
+        assert_eq!(combos[0], 1);
+        assert_eq!(combos[29], 1);
+        for k in 0..=29 {
+            assert_eq!(combos[k], combos[29 - k]);
+        }
+        let argmax = combos
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .unwrap()
+            .0;
+        assert!(argmax == 14 || argmax == 15);
+    }
+
+    #[test]
+    fn paper_81gb_estimate_for_p29_level15_reproduced() {
+        // §5.3: at p = 29 the level-15 parent-set vector alone is
+        // C(28,14)·29·8 bytes = 8.6679 GB (the paper's accounting). Our
+        // frontier counts k·C(p,k)·8 for bps, which equals the same
+        // quantity: 15·C(29,15)·8 … check the paper's own figure via its
+        // formula:
+        let binom = BinomTable::new(29);
+        let paper_bytes = binom.c(28, 14) * 29 * 8;
+        let gb = paper_bytes as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!((gb - 8.6679).abs() < 0.01, "{gb}");
+    }
+
+    #[test]
+    fn proposed_beats_baseline_memory_for_all_p() {
+        for p in 4..=30 {
+            let plan = memory_plan(p, 0.0);
+            assert!(
+                plan.peak_bytes < plan.baseline_bytes,
+                "p={p}: {} vs {}",
+                plan.peak_bytes,
+                plan.baseline_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn max_p_within_16gb_matches_paper_claims() {
+        let budget = 16u64 << 30;
+        let baseline = MemoryPlan::max_p_within(budget, true);
+        let proposed = MemoryPlan::max_p_within(budget, false);
+        // §5.1: "the upper limit is 26 variables, whereas our proposed
+        // method can handle up to 28." Our accounting includes the
+        // reconstruction tables the paper ignores, so allow ±1.
+        assert!(
+            (25..=27).contains(&baseline),
+            "baseline max p = {baseline}"
+        );
+        assert!(
+            (27..=29).contains(&proposed),
+            "proposed max p = {proposed}"
+        );
+        assert!(proposed >= baseline + 2);
+    }
+
+    #[test]
+    fn spill_threshold_marks_near_peak_levels_only() {
+        let plan = memory_plan(20, 0.9);
+        let peaks: Vec<usize> = plan
+            .levels
+            .iter()
+            .filter(|l| l.is_peak)
+            .map(|l| l.k)
+            .collect();
+        assert!(!peaks.is_empty());
+        assert!(peaks.len() < 8, "only near-peak levels spill: {peaks:?}");
+        assert!(peaks.contains(&11) || peaks.contains(&10));
+    }
+}

@@ -1,0 +1,260 @@
+//! Disk-backed frontier level — the paper's §5.3 extension.
+//!
+//! At a *peak* level (where `k·C(p,k)` is near its maximum) the
+//! best-parent-set vectors dominate memory. This store writes them to a
+//! temporary file right after the level is computed and serves the next
+//! level's random-access reads through a direct-mapped window cache. The
+//! subset scores `q`/`r` (16 bytes per subset — the non-dominant part)
+//! stay in RAM, mirroring the paper's "store the optimal parent set
+//! vector of one level on disk".
+//!
+//! Colex locality makes the cache effective: the drop-one ranks of
+//! consecutively enumerated masks are themselves nearly consecutive, so
+//! most reads hit a recently loaded window.
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// Entries per cache window (12 bytes each → 48 KiB windows).
+const WINDOW: usize = 4096;
+/// Direct-mapped cache slots (64 windows → 3 MiB resident).
+const SLOTS: usize = 64;
+
+/// Record layout on disk: little-endian f64 score + u32 mask, 12 bytes.
+const RECORD: usize = 12;
+
+/// A frontier level whose `bps`/`bpm` arrays live on disk.
+pub struct SpilledLevel {
+    pub k: usize,
+    /// `log Q` per subset (RAM)
+    pub q: Vec<f64>,
+    /// `log R` per subset (RAM)
+    pub r: Vec<f64>,
+    entries: usize,
+    file: RefCell<File>,
+    cache: RefCell<WindowCache>,
+    bytes_on_disk: u64,
+    hits: std::cell::Cell<u64>,
+    misses: std::cell::Cell<u64>,
+}
+
+struct WindowCache {
+    /// which window each slot holds (-1 = empty)
+    tags: Vec<i64>,
+    /// slot data, SLOTS × WINDOW records
+    data: Vec<u8>,
+}
+
+/// Incremental writer: the level sweep appends each batch's parent-set
+/// records as they are computed, so the full `bps`/`bpm` arrays of a
+/// spilled level never exist in RAM at once (the paper's §5.3 point —
+/// the in-flight level holds only its `q`/`r` plus one batch of records).
+pub struct SpilledLevelWriter {
+    k: usize,
+    file: File,
+    buf: Vec<u8>,
+    entries: usize,
+}
+
+impl SpilledLevelWriter {
+    /// Open the spill file for level `k` in `dir`.
+    pub fn create(dir: &Path, k: usize) -> Result<SpilledLevelWriter> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("bnsl_spill_level_{k}.bin"));
+        let file = File::options()
+            .create(true)
+            .truncate(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("creating spill file {}", path.display()))?;
+        // unlink immediately: the open handle keeps the data readable and
+        // the file vanishes automatically on drop/crash (POSIX).
+        let _ = std::fs::remove_file(&path);
+        Ok(SpilledLevelWriter {
+            k,
+            file,
+            buf: Vec::with_capacity(WINDOW * RECORD),
+            entries: 0,
+        })
+    }
+
+    /// Append one computed batch of records.
+    pub fn append(&mut self, bps: &[f64], bpm: &[u32]) -> Result<()> {
+        assert_eq!(bps.len(), bpm.len());
+        self.buf.clear();
+        for i in 0..bps.len() {
+            self.buf.extend_from_slice(&bps[i].to_le_bytes());
+            self.buf.extend_from_slice(&bpm[i].to_le_bytes());
+        }
+        self.file.write_all(&self.buf)?;
+        self.entries += bps.len();
+        Ok(())
+    }
+
+    /// Seal the file and attach the level's in-RAM scores.
+    pub fn finish(mut self, q: Vec<f64>, r: Vec<f64>) -> Result<SpilledLevel> {
+        self.file.flush()?;
+        Ok(SpilledLevel {
+            k: self.k,
+            q,
+            r,
+            entries: self.entries,
+            bytes_on_disk: (self.entries * RECORD) as u64,
+            file: RefCell::new(self.file),
+            cache: RefCell::new(WindowCache {
+                tags: vec![-1; SLOTS],
+                data: vec![0; SLOTS * WINDOW * RECORD],
+            }),
+            hits: std::cell::Cell::new(0),
+            misses: std::cell::Cell::new(0),
+        })
+    }
+}
+
+impl SpilledLevel {
+    /// Write a fully-materialised level's parent-set vectors to `dir` and
+    /// return the disk-backed frontier (bulk path; the solver prefers the
+    /// incremental [`SpilledLevelWriter`]).
+    pub fn write(
+        dir: &Path,
+        k: usize,
+        q: Vec<f64>,
+        r: Vec<f64>,
+        bps: &[f64],
+        bpm: &[u32],
+    ) -> Result<SpilledLevel> {
+        let mut writer = SpilledLevelWriter::create(dir, k)?;
+        let mut off = 0usize;
+        while off < bps.len() {
+            let take = WINDOW.min(bps.len() - off);
+            writer.append(&bps[off..off + take], &bpm[off..off + take])?;
+            off += take;
+        }
+        writer.finish(q, r)
+    }
+
+    /// Bytes written to disk.
+    pub fn bytes_on_disk(&self) -> u64 {
+        self.bytes_on_disk
+    }
+
+    /// Resident bytes (q + r + cache), for the memory accounting.
+    pub fn resident_bytes(&self) -> usize {
+        self.q.len() * 16 + SLOTS * WINDOW * RECORD + SLOTS * 8
+    }
+
+    /// (cache hits, cache misses) so far.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits.get(), self.misses.get())
+    }
+
+    /// Read record `idx` (= `t*k + pos`).
+    #[inline]
+    pub fn read(&self, idx: usize) -> (f64, u32) {
+        debug_assert!(idx < self.entries);
+        let window = idx / WINDOW;
+        let within = idx % WINDOW;
+        let slot = window % SLOTS;
+        let mut cache = self.cache.borrow_mut();
+        if cache.tags[slot] != window as i64 {
+            self.misses.set(self.misses.get() + 1);
+            let start = window * WINDOW;
+            let len = WINDOW.min(self.entries - start);
+            let mut file = self.file.borrow_mut();
+            file.seek(SeekFrom::Start((start * RECORD) as u64))
+                .expect("spill seek");
+            let base = slot * WINDOW * RECORD;
+            file.read_exact(&mut cache.data[base..base + len * RECORD])
+                .expect("spill read");
+            cache.tags[slot] = window as i64;
+        } else {
+            self.hits.set(self.hits.get() + 1);
+        }
+        let off = slot * WINDOW * RECORD + within * RECORD;
+        let score = f64::from_le_bytes(cache.data[off..off + 8].try_into().unwrap());
+        let mask = u32::from_le_bytes(cache.data[off + 8..off + 12].try_into().unwrap());
+        (score, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("bnsl_spill_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrips_all_records() {
+        let n = 3 * WINDOW + 17; // exercise a partial tail window
+        let bps: Vec<f64> = (0..n).map(|i| i as f64 * 0.5 - 100.0).collect();
+        let bpm: Vec<u32> = (0..n).map(|i| (i * 7) as u32).collect();
+        let lvl = SpilledLevel::write(&tmpdir(), 3, vec![0.0; 4], vec![0.0; 4], &bps, &bpm)
+            .unwrap();
+        for i in 0..n {
+            let (s, m) = lvl.read(i);
+            assert_eq!(s, bps[i], "record {i}");
+            assert_eq!(m, bpm[i]);
+        }
+        assert_eq!(lvl.bytes_on_disk(), (n * RECORD) as u64);
+    }
+
+    #[test]
+    fn random_access_pattern_is_correct_under_thrashing() {
+        // more windows than slots → forced evictions
+        let n = (SLOTS + 8) * WINDOW;
+        let bps: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let bpm: Vec<u32> = (0..n).map(|i| i as u32).collect();
+        let lvl =
+            SpilledLevel::write(&tmpdir(), 5, Vec::new(), Vec::new(), &bps, &bpm).unwrap();
+        let mut state = 0x1234_5678_u64;
+        for _ in 0..50_000 {
+            state = crate::util::rng::splitmix64(&mut state);
+            let i = (state % n as u64) as usize;
+            let (s, m) = lvl.read(i);
+            assert_eq!(m, i as u32);
+            assert_eq!(s, bps[i]);
+        }
+        let (hits, misses) = lvl.cache_stats();
+        assert!(misses > 0, "thrashing expected");
+        assert_eq!(hits + misses, 50_000);
+    }
+
+    #[test]
+    fn sequential_reads_mostly_hit() {
+        let n = 4 * WINDOW;
+        let bps = vec![1.5f64; n];
+        let bpm = vec![9u32; n];
+        let lvl =
+            SpilledLevel::write(&tmpdir(), 2, Vec::new(), Vec::new(), &bps, &bpm).unwrap();
+        for i in 0..n {
+            let _ = lvl.read(i);
+        }
+        let (hits, misses) = lvl.cache_stats();
+        assert_eq!(misses, 4, "one miss per window");
+        assert_eq!(hits, (n - 4) as u64);
+    }
+
+    #[test]
+    fn resident_bytes_are_bounded_by_cache_not_level() {
+        let n = SLOTS * 10 * WINDOW; // 640 windows on disk (~30 MiB)
+        let lvl = SpilledLevel::write(
+            &tmpdir(),
+            7,
+            vec![0.0; 10],
+            vec![0.0; 10],
+            &vec![0.0; n],
+            &vec![0; n],
+        )
+        .unwrap();
+        // resident = q/r + the fixed window cache, far below the level
+        assert!(lvl.resident_bytes() < n * RECORD / 8);
+    }
+}

@@ -1,0 +1,158 @@
+//! CSV input/output for discrete datasets.
+//!
+//! Format: header row of variable names; each following row one sample.
+//! Cells may be non-negative integers (taken as state indices) or arbitrary
+//! strings (mapped to indices by sorted first-occurrence order so the
+//! encoding is order-independent and deterministic).
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Read a dataset from a CSV file.
+pub fn read_csv(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_csv(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse CSV text into a dataset.
+pub fn parse_csv(text: &str) -> Result<Dataset> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = match lines.next() {
+        Some(h) => h,
+        None => bail!("empty CSV"),
+    };
+    let names: Vec<String> = split_row(header);
+    let p = names.len();
+    if p == 0 {
+        bail!("CSV header has no columns");
+    }
+    if p > crate::MAX_NET_VARS {
+        bail!("CSV has {p} columns, max supported is {}", crate::MAX_NET_VARS);
+    }
+    let mut raw: Vec<Vec<String>> = vec![Vec::new(); p];
+    for (lineno, line) in lines.enumerate() {
+        let cells = split_row(line);
+        if cells.len() != p {
+            bail!(
+                "row {} has {} cells, expected {p}",
+                lineno + 2,
+                cells.len()
+            );
+        }
+        for (v, cell) in cells.into_iter().enumerate() {
+            raw[v].push(cell);
+        }
+    }
+    // Encode each column: all-integer columns keep their numeric states;
+    // otherwise map distinct strings (sorted) to 0..k.
+    let mut columns = Vec::with_capacity(p);
+    for (v, col) in raw.iter().enumerate() {
+        let as_ints: Option<Vec<u32>> = col.iter().map(|c| c.parse::<u32>().ok()).collect();
+        let encoded: Vec<u8> = match as_ints {
+            Some(ints) => {
+                let max = ints.iter().copied().max().unwrap_or(0);
+                if max > 254 {
+                    bail!("column '{}' has state {max} > 254", names[v]);
+                }
+                ints.into_iter().map(|x| x as u8).collect()
+            }
+            None => {
+                let mut levels: Vec<&String> = col.iter().collect();
+                levels.sort();
+                levels.dedup();
+                if levels.len() > 255 {
+                    bail!("column '{}' has {} levels > 255", names[v], levels.len());
+                }
+                col.iter()
+                    .map(|c| levels.binary_search(&c).unwrap() as u8)
+                    .collect()
+            }
+        };
+        columns.push(encoded);
+    }
+    Ok(Dataset::with_inferred_arities(names, columns))
+}
+
+/// Write a dataset as CSV (numeric state indices).
+pub fn write_csv(data: &Dataset, path: &Path) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&data.names().join(","));
+    out.push('\n');
+    for i in 0..data.n() {
+        for v in 0..data.p() {
+            if v > 0 {
+                out.push(',');
+            }
+            out.push_str(&data.value(i, v).to_string());
+        }
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+fn split_row(line: &str) -> Vec<String> {
+    // No quoted-comma support needed for our numeric/categorical data, but
+    // trim whitespace and a UTF-8 BOM defensively.
+    line.trim_start_matches('\u{feff}')
+        .split(',')
+        .map(|c| c.trim().to_string())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_numeric_csv() {
+        let d = parse_csv("A,B\n0,1\n1,0\n2,1\n").unwrap();
+        assert_eq!(d.p(), 2);
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.arities(), &[3, 2]);
+        assert_eq!(d.column(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn parses_string_categories_sorted() {
+        let d = parse_csv("W\nyes\nno\nyes\nmaybe\n").unwrap();
+        // sorted levels: maybe=0, no=1, yes=2
+        assert_eq!(d.column(0), &[2, 1, 2, 0]);
+        assert_eq!(d.arities(), &[3]);
+    }
+
+    #[test]
+    fn mixed_column_falls_back_to_strings() {
+        let d = parse_csv("A\n1\nx\n1\n").unwrap();
+        // levels sorted: "1"=0, "x"=1
+        assert_eq!(d.column(0), &[0, 1, 0]);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(parse_csv("A,B\n0\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_csv("").is_err());
+        assert!(parse_csv("\n\n").is_err());
+    }
+
+    #[test]
+    fn roundtrips_through_file() {
+        let d = parse_csv("A,B\n0,1\n1,0\n").unwrap();
+        let tmp = std::env::temp_dir().join("bnsl_csv_roundtrip_test.csv");
+        write_csv(&d, &tmp).unwrap();
+        let back = read_csv(&tmp).unwrap();
+        assert_eq!(back, d);
+        let _ = std::fs::remove_file(&tmp);
+    }
+
+    #[test]
+    fn skips_blank_lines_and_bom() {
+        let d = parse_csv("\u{feff}A,B\n\n0,0\n\n1,1\n").unwrap();
+        assert_eq!(d.n(), 2);
+    }
+}

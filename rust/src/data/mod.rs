@@ -1,0 +1,241 @@
+//! Dataset substrate: complete multivariate discrete data.
+//!
+//! The paper's setting (§2.3) is complete discrete data with finitely many
+//! values per variable. [`Dataset`] stores values column-major as `u8`
+//! state indices — the scoring hot loop walks one cache-resident column per
+//! subset variable.
+
+mod csv;
+pub mod synth;
+
+pub use csv::{read_csv, write_csv};
+
+/// A complete discrete dataset: `n` rows over `p` categorical variables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    names: Vec<String>,
+    arities: Vec<u8>,
+    /// Column-major values; `columns[v][i]` ∈ `0..arities[v]`.
+    columns: Vec<Vec<u8>>,
+    n: usize,
+}
+
+impl Dataset {
+    /// Build from columns; arity of each variable is given explicitly
+    /// (allows states unobserved in the sample, which matter for σ).
+    pub fn new(names: Vec<String>, arities: Vec<u8>, columns: Vec<Vec<u8>>) -> Dataset {
+        assert_eq!(names.len(), arities.len());
+        assert_eq!(names.len(), columns.len());
+        assert!(
+            names.len() <= crate::MAX_NET_VARS,
+            "p={} exceeds MAX_NET_VARS={}",
+            names.len(),
+            crate::MAX_NET_VARS
+        );
+        let n = columns.first().map_or(0, |c| c.len());
+        for (v, col) in columns.iter().enumerate() {
+            assert_eq!(col.len(), n, "ragged column {v}");
+            assert!(arities[v] >= 1, "variable {v} has arity 0");
+            if let Some(&bad) = col.iter().find(|&&x| x >= arities[v]) {
+                panic!(
+                    "column {v} ('{}') contains state {bad} >= arity {}",
+                    names[v], arities[v]
+                );
+            }
+        }
+        Dataset {
+            names,
+            arities,
+            columns,
+            n,
+        }
+    }
+
+    /// Build with arities inferred as `max(column) + 1`.
+    pub fn with_inferred_arities(names: Vec<String>, columns: Vec<Vec<u8>>) -> Dataset {
+        let arities: Vec<u8> = columns
+            .iter()
+            .map(|c| c.iter().copied().max().map_or(1, |m| m + 1))
+            .collect();
+        Dataset::new(names, arities, columns)
+    }
+
+    /// Number of rows.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of variables.
+    pub fn p(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Variable names.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Per-variable state counts σ(X).
+    pub fn arities(&self) -> &[u8] {
+        &self.arities
+    }
+
+    /// One column of state indices.
+    #[inline]
+    pub fn column(&self, v: usize) -> &[u8] {
+        &self.columns[v]
+    }
+
+    /// Value of variable `v` in row `i`.
+    #[inline]
+    pub fn value(&self, i: usize, v: usize) -> u8 {
+        self.columns[v][i]
+    }
+
+    /// Keep only the first `p` variables (paper: "the first 28 variables of
+    /// the Alarm dataset").
+    pub fn take_vars(&self, p: usize) -> Dataset {
+        assert!(p <= self.p());
+        Dataset {
+            names: self.names[..p].to_vec(),
+            arities: self.arities[..p].to_vec(),
+            columns: self.columns[..p].to_vec(),
+            n: self.n,
+        }
+    }
+
+    /// Keep an arbitrary subset/permutation of variables.
+    pub fn select_vars(&self, vars: &[usize]) -> Dataset {
+        Dataset {
+            names: vars.iter().map(|&v| self.names[v].clone()).collect(),
+            arities: vars.iter().map(|&v| self.arities[v]).collect(),
+            columns: vars.iter().map(|&v| self.columns[v].clone()).collect(),
+            n: self.n,
+        }
+    }
+
+    /// Keep only the first `n` rows.
+    pub fn take_rows(&self, n: usize) -> Dataset {
+        assert!(n <= self.n);
+        Dataset {
+            names: self.names.clone(),
+            arities: self.arities.clone(),
+            columns: self.columns.iter().map(|c| c[..n].to_vec()).collect(),
+            n,
+        }
+    }
+
+    /// Joint state-space size σ(S) = Π_{v∈S} σ(v) for a subset mask,
+    /// saturating at `f64` (σ is only ever used inside `lgamma`).
+    pub fn sigma(&self, mask: u32) -> f64 {
+        crate::bitset::bits_of(mask)
+            .map(|v| self.arities[v] as f64)
+            .product()
+    }
+
+    /// Number of *distinct realised* joint configurations of the subset —
+    /// the alternative σ definition (paper §2.3 defines σ(X) as the number
+    /// of different values X takes; for sets we expose both conventions).
+    pub fn sigma_observed(&self, mask: u32) -> usize {
+        if mask == 0 {
+            return 1;
+        }
+        let vars: Vec<usize> = crate::bitset::bits_of(mask).collect();
+        let mut codes: Vec<u64> = (0..self.n)
+            .map(|i| {
+                let mut code = 0u64;
+                for &v in &vars {
+                    code = code * self.arities[v] as u64 + self.columns[v][i] as u64;
+                }
+                code
+            })
+            .collect();
+        codes.sort_unstable();
+        codes.dedup();
+        codes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        // §2.3 example: X = (0,1,0,1,1), Y = (0,0,1,1,1)
+        Dataset::new(
+            vec!["X".into(), "Y".into()],
+            vec![2, 2],
+            vec![vec![0, 1, 0, 1, 1], vec![0, 0, 1, 1, 1]],
+        )
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let d = toy();
+        assert_eq!(d.n(), 5);
+        assert_eq!(d.p(), 2);
+        assert_eq!(d.value(2, 0), 0);
+        assert_eq!(d.value(2, 1), 1);
+        assert_eq!(d.arities(), &[2, 2]);
+    }
+
+    #[test]
+    fn sigma_is_product_of_arities() {
+        let d = toy();
+        assert_eq!(d.sigma(0b11), 4.0);
+        assert_eq!(d.sigma(0b01), 2.0);
+        assert_eq!(d.sigma(0), 1.0);
+    }
+
+    #[test]
+    fn sigma_observed_counts_distinct_configs() {
+        let d = toy();
+        // joint (X,Y) configs: (0,0),(1,0),(0,1),(1,1),(1,1) → 4 distinct
+        assert_eq!(d.sigma_observed(0b11), 4);
+        assert_eq!(d.sigma_observed(0b01), 2);
+        assert_eq!(d.sigma_observed(0), 1);
+    }
+
+    #[test]
+    fn take_and_select_vars() {
+        let d = toy();
+        let first = d.take_vars(1);
+        assert_eq!(first.p(), 1);
+        assert_eq!(first.names(), &["X".to_string()]);
+        let swapped = d.select_vars(&[1, 0]);
+        assert_eq!(swapped.names(), &["Y".to_string(), "X".to_string()]);
+        assert_eq!(swapped.column(0), d.column(1));
+    }
+
+    #[test]
+    fn take_rows_truncates() {
+        let d = toy().take_rows(3);
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.column(0), &[0, 1, 0]);
+    }
+
+    #[test]
+    fn inferred_arities_use_max_plus_one() {
+        let d = Dataset::with_inferred_arities(
+            vec!["A".into(), "B".into()],
+            vec![vec![0, 2, 1], vec![0, 0, 0]],
+        );
+        assert_eq!(d.arities(), &[3, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "contains state")]
+    fn rejects_out_of_range_states() {
+        Dataset::new(vec!["A".into()], vec![2], vec![vec![0, 2]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged_columns() {
+        Dataset::new(
+            vec!["A".into(), "B".into()],
+            vec![2, 2],
+            vec![vec![0, 1], vec![0]],
+        );
+    }
+}

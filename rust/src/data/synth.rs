@@ -1,0 +1,127 @@
+//! Synthetic dataset generators for tests and benches.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Uniform i.i.d. noise: every variable independent uniform over its arity.
+/// The DP's running time is data-independent, so benches default to this.
+pub fn uniform(p: usize, n: usize, arities: &[u8], seed: u64) -> Dataset {
+    assert_eq!(arities.len(), p);
+    let mut rng = Rng::new(seed);
+    let columns: Vec<Vec<u8>> = (0..p)
+        .map(|v| {
+            (0..n)
+                .map(|_| rng.below(arities[v] as u64) as u8)
+                .collect()
+        })
+        .collect();
+    let names = (0..p).map(|v| format!("X{v}")).collect();
+    Dataset::new(names, arities.to_vec(), columns)
+}
+
+/// All-binary uniform dataset.
+pub fn binary(p: usize, n: usize, seed: u64) -> Dataset {
+    uniform(p, n, &vec![2u8; p], seed)
+}
+
+/// A dataset with a planted chain X0 → X1 → … → X(p−1): each variable
+/// copies its predecessor with probability `fidelity`, else re-rolls
+/// uniformly. Strong, easily-recoverable structure for integration tests.
+pub fn chain(p: usize, n: usize, fidelity: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut columns: Vec<Vec<u8>> = vec![Vec::with_capacity(n); p];
+    for _ in 0..n {
+        let mut prev = rng.below(2) as u8;
+        columns[0].push(prev);
+        for col in columns.iter_mut().skip(1) {
+            let val = if rng.chance(fidelity) {
+                prev
+            } else {
+                rng.below(2) as u8
+            };
+            col.push(val);
+            prev = val;
+        }
+    }
+    let names = (0..p).map(|v| format!("X{v}")).collect();
+    Dataset::new(names, vec![2u8; p], columns)
+}
+
+/// The regularity counter-example family from Suzuki (2017) / paper §1:
+/// X is a deterministic function of Y, and Z is independent noise. A
+/// *regular* score must pick π(X) = {Y}; BDeu prefers the over-complex
+/// {Y, Z} for suitable data. We generate (Y uniform, X = Y, Z uniform).
+pub fn deterministic_xy_noise_z(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let y: Vec<u8> = (0..n).map(|_| rng.below(2) as u8).collect();
+    let x = y.clone();
+    let z: Vec<u8> = (0..n).map(|_| rng.below(2) as u8).collect();
+    Dataset::new(
+        vec!["X".into(), "Y".into(), "Z".into()],
+        vec![2, 2, 2],
+        vec![x, y, z],
+    )
+}
+
+/// Random dataset with random arities in `[2, max_arity]` — fuzzing input
+/// for property tests.
+pub fn random(p: usize, n: usize, max_arity: u8, rng: &mut Rng) -> Dataset {
+    let arities: Vec<u8> = (0..p)
+        .map(|_| rng.range_u32(2, max_arity as u32) as u8)
+        .collect();
+    let columns: Vec<Vec<u8>> = (0..p)
+        .map(|v| (0..n).map(|_| rng.below(arities[v] as u64) as u8).collect())
+        .collect();
+    let names = (0..p).map(|v| format!("X{v}")).collect();
+    Dataset::new(names, arities, columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_respects_arities() {
+        let d = uniform(4, 100, &[2, 3, 4, 2], 1);
+        assert_eq!(d.p(), 4);
+        assert_eq!(d.n(), 100);
+        for v in 0..4 {
+            assert!(d.column(v).iter().all(|&x| x < d.arities()[v]));
+        }
+    }
+
+    #[test]
+    fn uniform_is_seed_deterministic() {
+        assert_eq!(binary(5, 50, 9), binary(5, 50, 9));
+        assert_ne!(binary(5, 50, 9), binary(5, 50, 10));
+    }
+
+    #[test]
+    fn chain_correlates_neighbours() {
+        let d = chain(3, 2000, 0.95, 3);
+        let agree = d
+            .column(0)
+            .iter()
+            .zip(d.column(1))
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(agree > 1800, "agree={agree}");
+    }
+
+    #[test]
+    fn deterministic_xy_is_deterministic_in_y() {
+        let d = deterministic_xy_noise_z(500, 4);
+        assert_eq!(d.column(0), d.column(1));
+    }
+
+    #[test]
+    fn random_within_bounds() {
+        let mut rng = Rng::new(5);
+        let d = random(6, 30, 4, &mut rng);
+        for v in 0..6 {
+            let a = d.arities()[v];
+            assert!((2..=4).contains(&a));
+            assert!(d.column(v).iter().all(|&x| x < a));
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! PJRT-backed scoring engine: batches subset evaluations through the
+//! AOT-compiled JAX + Pallas artifact.
+//!
+//! The rust side prepares, per subset, the *dense joint-configuration id*
+//! of every sample (a `O(n·k)` radix-encode + remap — bookkeeping, not
+//! compute); the artifact does the heavy part (contingency counting +
+//! `lgamma` accumulation) exactly as the L1 kernel defines it. Results are
+//! f32 (TPU-realistic); the native engine is the f64 reference.
+//!
+//! Only the Jeffreys score is artifact-backed (it is the paper's score;
+//! the kernel hard-codes its closed form). Other kinds fall back to
+//! native scoring with a warning at construction.
+
+use super::{ScoreEngine, SubsetScorer};
+use crate::bitset::bits_of;
+use crate::data::Dataset;
+use crate::runtime::{Runtime, ScoreArtifact};
+use crate::score::ScoreKind;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Engine that evaluates `log Q(S)` via the PJRT executable.
+pub struct JaxEngine<'a> {
+    data: &'a Dataset,
+    artifact: ScoreArtifact,
+    #[allow(dead_code)]
+    runtime: Runtime, // keeps the client alive for the executable
+}
+
+impl<'a> JaxEngine<'a> {
+    /// Load the best-fitting artifact from `artifact_dir` (built by
+    /// `make artifacts`). Fails if none covers the dataset's sample count
+    /// or if the score kind is not Jeffreys.
+    pub fn new(data: &'a Dataset, kind: ScoreKind, artifact_dir: &Path) -> Result<JaxEngine<'a>> {
+        if kind != ScoreKind::Jeffreys {
+            bail!(
+                "JaxEngine artifact implements the Jeffreys score only (got {}); \
+                 use --engine native for other scores",
+                kind.name()
+            );
+        }
+        let runtime = Runtime::cpu(artifact_dir)?;
+        let artifact = runtime.load_for(data.n())?;
+        if data.n() > artifact.shape().n {
+            bail!(
+                "dataset has n={} rows but artifact supports at most {}",
+                data.n(),
+                artifact.shape().n
+            );
+        }
+        Ok(JaxEngine {
+            data,
+            artifact,
+            runtime,
+        })
+    }
+
+    /// Shape of the loaded artifact.
+    pub fn artifact_shape(&self) -> crate::runtime::ArtifactShape {
+        self.artifact.shape()
+    }
+
+    /// PJRT executions so far.
+    pub fn executions(&self) -> u64 {
+        self.artifact.executions()
+    }
+}
+
+impl<'a> ScoreEngine for JaxEngine<'a> {
+    fn p(&self) -> usize {
+        self.data.p()
+    }
+
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    fn kind(&self) -> ScoreKind {
+        ScoreKind::Jeffreys
+    }
+
+    fn data(&self) -> &Dataset {
+        self.data
+    }
+
+    fn scorer(&self) -> Box<dyn SubsetScorer + '_> {
+        let shape = self.artifact.shape();
+        Box::new(JaxScorer {
+            data: self.data,
+            artifact: &self.artifact,
+            idx: vec![-1; shape.b * shape.n],
+            sigma: vec![1.0; shape.b],
+            nvalid: vec![0.0; shape.b],
+            codes: Vec::with_capacity(self.data.n()),
+            remap: Vec::new(),
+            evals: 0,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "jax"
+    }
+}
+
+struct JaxScorer<'a> {
+    data: &'a Dataset,
+    artifact: &'a ScoreArtifact,
+    // persistent batch buffers
+    idx: Vec<i32>,
+    sigma: Vec<f32>,
+    nvalid: Vec<f32>,
+    // per-subset scratch
+    codes: Vec<u64>,
+    remap: Vec<u64>,
+    evals: u64,
+}
+
+impl<'a> JaxScorer<'a> {
+    /// Fill one batch row: dense ids of the subset's joint configurations.
+    fn fill_row(&mut self, row: usize, mask: u32) {
+        let shape = self.artifact.shape();
+        let n = self.data.n();
+        let base = row * shape.n;
+        if mask == 0 {
+            // empty subset: single configuration, id 0, observed n times
+            for i in 0..n {
+                self.idx[base + i] = 0;
+            }
+            for slot in &mut self.idx[base + n..base + shape.n] {
+                *slot = -1;
+            }
+            self.sigma[row] = 1.0;
+            self.nvalid[row] = n as f32;
+            return;
+        }
+        // radix-encode
+        self.codes.clear();
+        self.codes.resize(n, 0);
+        let mut stride = 1u64;
+        for v in bits_of(mask) {
+            let col = self.data.column(v);
+            for (code, &x) in self.codes.iter_mut().zip(col) {
+                *code += stride * x as u64;
+            }
+            stride *= self.data.arities()[v] as u64;
+        }
+        // dense remap (sorted unique codes → ids); ids < n ≤ M by design
+        self.remap.clear();
+        self.remap.extend_from_slice(&self.codes);
+        self.remap.sort_unstable();
+        self.remap.dedup();
+        for (i, &code) in self.codes.iter().enumerate() {
+            let dense = self.remap.binary_search(&code).expect("code present") as i32;
+            self.idx[base + i] = dense;
+        }
+        for slot in &mut self.idx[base + n..base + shape.n] {
+            *slot = -1;
+        }
+        self.sigma[row] = self.data.sigma(mask) as f32;
+        self.nvalid[row] = n as f32;
+    }
+
+    fn pad_row(&mut self, row: usize) {
+        let shape = self.artifact.shape();
+        let base = row * shape.n;
+        for slot in &mut self.idx[base..base + shape.n] {
+            *slot = -1;
+        }
+        self.sigma[row] = 1.0;
+        self.nvalid[row] = 0.0;
+    }
+}
+
+impl<'a> SubsetScorer for JaxScorer<'a> {
+    fn log_q(&mut self, mask: u32) -> f64 {
+        let mut out = Vec::with_capacity(1);
+        self.log_q_batch(&[mask], &mut out);
+        out[0]
+    }
+
+    fn log_q_batch(&mut self, masks: &[u32], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(masks.len());
+        let b = self.artifact.shape().b;
+        for chunk in masks.chunks(b) {
+            for (row, &mask) in chunk.iter().enumerate() {
+                self.fill_row(row, mask);
+            }
+            for row in chunk.len()..b {
+                self.pad_row(row);
+            }
+            let scores = self
+                .artifact
+                .run(&self.idx, &self.sigma, &self.nvalid)
+                .expect("PJRT execution failed");
+            out.extend(scores[..chunk.len()].iter().map(|&v| v as f64));
+            self.evals += chunk.len() as u64;
+        }
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+// Execution-path tests live in rust/tests/jax_engine.rs (require built
+// artifacts); filename/shape plumbing is tested in crate::runtime.

@@ -1,0 +1,82 @@
+//! Scoring engines: where `log Q(S)` values come from.
+//!
+//! The DP solvers are engine-agnostic: they ask an engine for subset
+//! potentials in batches and never touch the data directly. Two engines:
+//!
+//! * [`NativeEngine`] — pure-rust f64 hot path ([`crate::score`]); the
+//!   default for paper-scale runs and the perf-pass target.
+//! * [`JaxEngine`] — routes batches through the AOT-compiled JAX/Pallas
+//!   artifact via PJRT ([`crate::runtime`]); the mandated L2/L1 path,
+//!   numerically cross-checked against the native engine in integration
+//!   tests.
+
+mod native;
+
+pub use native::NativeEngine;
+pub mod jax;
+pub use jax::JaxEngine;
+
+use crate::data::Dataset;
+use crate::score::ScoreKind;
+
+/// A source of subset potentials for one dataset under one score.
+///
+/// Engines need not be [`Sync`]: the PJRT client is single-threaded by
+/// construction. The multi-threaded solver path requires
+/// `dyn ScoreEngine + Sync` explicitly (see
+/// [`crate::solver::LeveledSolver::new`] vs `new_local`).
+pub trait ScoreEngine {
+    /// Number of variables.
+    fn p(&self) -> usize;
+    /// Number of samples.
+    fn n(&self) -> usize;
+    /// Scoring function.
+    fn kind(&self) -> ScoreKind;
+    /// The dataset being scored.
+    fn data(&self) -> &Dataset;
+    /// A per-thread scorer handle (owns mutable scratch).
+    fn scorer(&self) -> Box<dyn SubsetScorer + '_>;
+    /// Engine name for logs/records.
+    fn name(&self) -> &'static str;
+}
+
+/// Mutable per-thread scoring handle.
+pub trait SubsetScorer {
+    /// `pot(S)` for one subset mask.
+    fn log_q(&mut self, mask: u32) -> f64;
+
+    /// Batched evaluation; `out` is cleared and filled 1:1 with `masks`.
+    /// Engines with per-call overhead (PJRT) override this.
+    fn log_q_batch(&mut self, masks: &[u32], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(masks.len());
+        for &m in masks {
+            let v = self.log_q(m);
+            out.push(v);
+        }
+    }
+
+    /// Number of subset evaluations so far (complexity accounting).
+    fn evals(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn default_batch_matches_singles() {
+        let d = synth::binary(5, 60, 3);
+        let engine = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let mut s1 = engine.scorer();
+        let mut s2 = engine.scorer();
+        let masks: Vec<u32> = (0..32).collect();
+        let mut batch = Vec::new();
+        s1.log_q_batch(&masks, &mut batch);
+        for (i, &m) in masks.iter().enumerate() {
+            assert_eq!(batch[i], s2.log_q(m));
+        }
+        assert_eq!(s1.evals(), 32);
+    }
+}

@@ -1,0 +1,15 @@
+//! `bnsl` binary — L3 leader entrypoint.
+//!
+//! Installs the tracking allocator (the paper's Tables 2–4 report peak
+//! memory; we measure live heap bytes, not RSS) and dispatches to the CLI.
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = bnsl::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

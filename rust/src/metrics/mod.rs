@@ -1,0 +1,174 @@
+//! Experiment metrics: timing, summary statistics, run records.
+
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// Simple scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Summary statistics over repeated measurements (the paper's Tables 3–4
+/// report per-run values plus the average; Fig. 5 shows the dispersion).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Summary {
+        assert!(!values.is_empty(), "summary of empty sample");
+        let n = values.len();
+        let mean = values.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: values.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: values.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Coefficient of variation (stability metric for Fig. 5).
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean.abs()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("n", self.n)
+            .set("mean", self.mean)
+            .set("std", self.std)
+            .set("min", self.min)
+            .set("max", self.max)
+    }
+}
+
+/// A named experiment record accumulating rows, written to
+/// `results/<name>.json` + `.csv` by the harnesses.
+pub struct ExpRecord {
+    name: String,
+    meta: Json,
+    rows: Vec<Json>,
+}
+
+impl ExpRecord {
+    pub fn new(name: &str) -> ExpRecord {
+        ExpRecord {
+            name: name.to_string(),
+            meta: Json::obj(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn meta(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        let meta = std::mem::replace(&mut self.meta, Json::Null);
+        self.meta = meta.set(key, value);
+        self
+    }
+
+    pub fn row(&mut self, row: Json) -> &mut Self {
+        self.rows.push(row);
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("experiment", self.name.as_str())
+            .set("meta", self.meta.clone())
+            .set("rows", Json::Arr(self.rows.clone()))
+    }
+
+    /// Write `<dir>/<name>.json`; creates the directory if needed.
+    pub fn write(&self, dir: &std::path::Path) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_sample() {
+        let s = Summary::of(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.cv(), 0.0);
+        assert_eq!((s.min, s.max), (2.0, 2.0));
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        // sample std of 1..4 = sqrt(5/3)
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (1.0, 4.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn summary_rejects_empty() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let mut rec = ExpRecord::new("table2");
+        rec.meta("p", 20usize);
+        rec.row(Json::obj().set("time", 1.5));
+        let j = rec.to_json().to_string();
+        assert!(j.contains(r#""experiment":"table2""#));
+        assert!(j.contains(r#""time":1.5"#));
+    }
+
+    #[test]
+    fn record_writes_file() {
+        let dir = std::env::temp_dir().join("bnsl_metrics_test");
+        let mut rec = ExpRecord::new("unit");
+        rec.row(Json::obj().set("v", 1i64));
+        let path = rec.write(&dir).unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn timer_measures_time() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+}

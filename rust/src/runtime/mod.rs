@@ -1,0 +1,201 @@
+//! PJRT runtime: load and execute the AOT-compiled scoring artifact.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX batched-scorer (which calls
+//! the L1 Pallas kernel) to **HLO text** — the interchange format that
+//! round-trips through the `xla` crate's 0.5.1 extension (serialized
+//! protos from jax ≥ 0.5 are rejected; see /opt/xla-example/README.md).
+//! This module compiles the text once per process and serves batched
+//! executions from the solver hot path. Python is never on that path.
+//!
+//! Artifact contract (see `python/compile/aot.py`):
+//!
+//! * inputs: `idx : i32[B, N]` (dense joint-configuration ids per sample,
+//!   `-1` = padding), `sigma : f32[B]` (joint state-space size σ(S); `1`
+//!   for padded rows), `nvalid : f32[B]` (true sample count; `0` padded)
+//! * output: 1-tuple of `logq : f32[B]` — `log Q(S)` per subset row
+//! * filename encodes the shapes: `score_b{B}_n{N}_m{M}.hlo.txt`, where
+//!   `M` is the kernel's count-table width (dense ids must be `< M`).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape metadata parsed from an artifact filename.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactShape {
+    /// batch rows per execution
+    pub b: usize,
+    /// max samples per row
+    pub n: usize,
+    /// count-table width (dense configuration ids must stay below this)
+    pub m: usize,
+}
+
+impl ArtifactShape {
+    /// Parse `score_b{B}_n{N}_m{M}.hlo.txt`.
+    pub fn from_filename(name: &str) -> Option<ArtifactShape> {
+        let stem = name.strip_suffix(".hlo.txt")?;
+        let rest = stem.strip_prefix("score_b")?;
+        let (b, rest) = rest.split_once("_n")?;
+        let (n, m) = rest.split_once("_m")?;
+        Some(ArtifactShape {
+            b: b.parse().ok()?,
+            n: n.parse().ok()?,
+            m: m.parse().ok()?,
+        })
+    }
+}
+
+/// A compiled scoring executable on the PJRT CPU client.
+pub struct ScoreArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    shape: ArtifactShape,
+    path: PathBuf,
+    executions: std::cell::Cell<u64>,
+}
+
+impl ScoreArtifact {
+    /// Load one artifact file and compile it.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<ScoreArtifact> {
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| anyhow!("bad artifact path {}", path.display()))?;
+        let shape = ArtifactShape::from_filename(name)
+            .ok_or_else(|| anyhow!("artifact name {name} does not match score_b*_n*_m*.hlo.txt"))?;
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {}", path.display()))?;
+        Ok(ScoreArtifact {
+            exe,
+            shape,
+            path: path.to_path_buf(),
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn shape(&self) -> ArtifactShape {
+        self.shape
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of PJRT executions so far.
+    pub fn executions(&self) -> u64 {
+        self.executions.get()
+    }
+
+    /// Execute one full batch. `idx.len() == b*n`, `sigma.len() == b`,
+    /// `nvalid.len() == b`; returns `b` log-scores.
+    pub fn run(&self, idx: &[i32], sigma: &[f32], nvalid: &[f32]) -> Result<Vec<f32>> {
+        let ArtifactShape { b, n, .. } = self.shape;
+        if idx.len() != b * n || sigma.len() != b || nvalid.len() != b {
+            bail!(
+                "batch shape mismatch: idx={} (want {}), sigma={} nvalid={} (want {b})",
+                idx.len(),
+                b * n,
+                sigma.len(),
+                nvalid.len()
+            );
+        }
+        let idx_lit = xla::Literal::vec1(idx).reshape(&[b as i64, n as i64])?;
+        let sigma_lit = xla::Literal::vec1(sigma);
+        let nvalid_lit = xla::Literal::vec1(nvalid);
+        let result = self.exe.execute::<xla::Literal>(&[idx_lit, sigma_lit, nvalid_lit])?[0][0]
+            .to_literal_sync()?;
+        self.executions.set(self.executions.get() + 1);
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Runtime: one PJRT CPU client plus the artifacts found in a directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Connect a CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.to_path_buf(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// List the scoring artifacts available in the directory.
+    pub fn available(&self) -> Result<Vec<ArtifactShape>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("reading artifact dir {}", self.dir.display()))?
+        {
+            let entry = entry?;
+            if let Some(name) = entry.file_name().to_str() {
+                if let Some(shape) = ArtifactShape::from_filename(name) {
+                    out.push(shape);
+                }
+            }
+        }
+        out.sort_by_key(|s| (s.n, s.b, s.m));
+        Ok(out)
+    }
+
+    /// Load the smallest artifact whose `n` and `m` cover the dataset
+    /// (`n_rows` samples ⇒ dense ids < `n_rows` ≤ M required).
+    pub fn load_for(&self, n_rows: usize) -> Result<ScoreArtifact> {
+        let shapes = self.available()?;
+        let best = shapes
+            .into_iter()
+            .filter(|s| s.n >= n_rows && s.m >= n_rows.min(s.n))
+            .min_by_key(|s| (s.n, s.b))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact in {} covers n={n_rows}; run `make artifacts`",
+                    self.dir.display()
+                )
+            })?;
+        let file = self.dir.join(format!(
+            "score_b{}_n{}_m{}.hlo.txt",
+            best.b, best.n, best.m
+        ));
+        ScoreArtifact::load(&self.client, &file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_artifact_filenames() {
+        let s = ArtifactShape::from_filename("score_b256_n256_m256.hlo.txt").unwrap();
+        assert_eq!(
+            s,
+            ArtifactShape {
+                b: 256,
+                n: 256,
+                m: 256
+            }
+        );
+        assert!(ArtifactShape::from_filename("model.hlo.txt").is_none());
+        assert!(ArtifactShape::from_filename("score_bX_n1_m1.hlo.txt").is_none());
+        assert!(ArtifactShape::from_filename("score_b1_n1_m1.txt").is_none());
+    }
+
+    // Execution tests live in rust/tests/jax_engine.rs (they need the
+    // artifacts built by `make artifacts`).
+}

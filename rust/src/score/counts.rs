@@ -1,0 +1,335 @@
+//! Contingency counting: joint configuration counts for a variable subset.
+//!
+//! Every local score is a function of the counts `{c_v}` of the observed
+//! joint configurations of `S` (plus σ(S) and n). This module turns a
+//! subset mask into those counts, reusing scratch buffers so the DP's
+//! per-subset work allocates nothing.
+//!
+//! The per-subset pipeline is the solver's hot path (≈90% of solve time,
+//! see EXPERIMENTS.md §Perf), so three strategies are kept:
+//!
+//! * **direct** — when σ(S) fits a small table, radix codes index a count
+//!   array directly; touched slots are tracked for O(distinct) reset.
+//!   No hashing, no sorting. The default for most of the lattice.
+//! * **hash** — epoch-tagged open addressing (no table clearing between
+//!   subsets) for large-σ subsets.
+//! * **sort** — sort + run-length; kept as the ablation baseline the
+//!   `scoring` bench compares against.
+
+use crate::bitset::bits_of;
+use crate::data::Dataset;
+
+/// Largest σ(S) served by the direct-index strategy (table bytes =
+/// 4·DIRECT_MAX; 64 KiB stays L1/L2-resident).
+const DIRECT_MAX: u64 = 16_384;
+
+/// Reusable scratch for contingency counting.
+#[derive(Clone, Debug)]
+pub struct Counter {
+    codes: Vec<u64>,
+    /// direct-index table (σ ≤ DIRECT_MAX) + touched list for reset
+    direct: Vec<u32>,
+    touched: Vec<u32>,
+    /// epoch-tagged open-addressing table
+    keys: Vec<u64>,
+    vals: Vec<u32>,
+    epochs: Vec<u32>,
+    epoch: u32,
+    table_mask: usize,
+    /// output counts (run lengths), reused across calls
+    counts: Vec<u32>,
+    strategy: Strategy,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// direct-index when σ is small, epoch-hash otherwise (default)
+    Auto,
+    /// always epoch-hash
+    Hash,
+    /// always sort + run-length (ablation baseline)
+    Sort,
+}
+
+impl Counter {
+    /// Scratch for datasets with `n` rows.
+    pub fn new(n: usize) -> Counter {
+        // table sized to keep load factor ≤ 0.5 at n distinct codes
+        let cap = (2 * n.max(4)).next_power_of_two();
+        Counter {
+            codes: Vec::with_capacity(n),
+            direct: Vec::new(), // grown lazily to DIRECT_MAX on first use
+            touched: Vec::with_capacity(n),
+            keys: vec![0; cap],
+            vals: vec![0; cap],
+            epochs: vec![0; cap],
+            epoch: 0,
+            table_mask: cap - 1,
+            counts: Vec::with_capacity(n),
+            strategy: Strategy::Auto,
+        }
+    }
+
+    /// Select a counting strategy (benches/ablation).
+    pub fn with_strategy(mut self, strategy: Strategy) -> Counter {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Back-compat helper for the sort ablation.
+    pub fn with_sort_strategy(self) -> Counter {
+        self.with_strategy(Strategy::Sort)
+    }
+
+    /// Compute the counts of the observed joint configurations of `mask`.
+    /// Returns a slice valid until the next call. For `mask == 0` the
+    /// single "empty configuration" has count `n`.
+    pub fn count(&mut self, data: &Dataset, mask: u32) -> &[u32] {
+        self.counts.clear();
+        let n = data.n();
+        if mask == 0 {
+            self.counts.push(n as u32);
+            return &self.counts;
+        }
+        let sigma = self.encode(data, mask);
+        match self.strategy {
+            Strategy::Sort => self.count_sort(),
+            Strategy::Hash => self.count_hash(),
+            Strategy::Auto => {
+                if sigma <= DIRECT_MAX {
+                    self.count_direct(sigma as usize);
+                } else {
+                    self.count_hash();
+                }
+            }
+        }
+        &self.counts
+    }
+
+    /// Radix-encode each row's restriction to `mask` into `self.codes`;
+    /// returns σ(S) (saturating, only used for the strategy cut-off).
+    fn encode(&mut self, data: &Dataset, mask: u32) -> u64 {
+        let n = data.n();
+        self.codes.clear();
+        self.codes.resize(n, 0);
+        let mut stride: u64 = 1;
+        for v in bits_of(mask) {
+            let col = data.column(v);
+            let arity = data.arities()[v] as u64;
+            if stride == 1 {
+                for (code, &x) in self.codes.iter_mut().zip(col) {
+                    *code = x as u64;
+                }
+            } else {
+                for (code, &x) in self.codes.iter_mut().zip(col) {
+                    *code += stride * x as u64;
+                }
+            }
+            stride = stride.saturating_mul(arity);
+        }
+        stride
+    }
+
+    fn count_direct(&mut self, sigma: usize) {
+        if self.direct.len() < sigma {
+            self.direct.resize(DIRECT_MAX as usize, 0);
+        }
+        self.touched.clear();
+        for &code in &self.codes {
+            let slot = code as usize;
+            debug_assert!(slot < self.direct.len());
+            if self.direct[slot] == 0 {
+                self.touched.push(code as u32);
+            }
+            self.direct[slot] += 1;
+        }
+        for &slot in &self.touched {
+            let c = std::mem::take(&mut self.direct[slot as usize]);
+            self.counts.push(c);
+        }
+    }
+
+    fn count_sort(&mut self) {
+        self.codes.sort_unstable();
+        let mut run = 1u32;
+        for i in 1..self.codes.len() {
+            if self.codes[i] == self.codes[i - 1] {
+                run += 1;
+            } else {
+                self.counts.push(run);
+                run = 1;
+            }
+        }
+        self.counts.push(run);
+    }
+
+    fn count_hash(&mut self) {
+        // epoch tagging: stale slots are recognised by epoch mismatch, so
+        // the table is never cleared (the p·2^p subsets would otherwise
+        // pay a fill per subset).
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // epoch wrapped: one-off full reset keeps tags unambiguous
+            self.epochs.fill(0);
+            self.epoch = 1;
+        }
+        let epoch = self.epoch;
+        self.touched.clear();
+        for &code in &self.codes {
+            let key = code + 1; // reserve 0 for "empty"
+            let mut slot = (mix(code) as usize) & self.table_mask;
+            loop {
+                if self.epochs[slot] != epoch {
+                    self.epochs[slot] = epoch;
+                    self.keys[slot] = key;
+                    self.vals[slot] = 1;
+                    self.touched.push(slot as u32); // remember for collect
+                    break;
+                }
+                if self.keys[slot] == key {
+                    self.vals[slot] += 1;
+                    break;
+                }
+                slot = (slot + 1) & self.table_mask;
+            }
+        }
+        // collect straight off the touched-slot list (one entry per
+        // distinct configuration — no second probe pass)
+        for &slot in &self.touched {
+            self.counts.push(self.vals[slot as usize]);
+        }
+    }
+}
+
+/// splitmix64-style finaliser as a hash for radix codes.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::check::Check;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            vec!["X".into(), "Y".into()],
+            vec![2, 2],
+            vec![vec![0, 1, 0, 1, 1], vec![0, 0, 1, 1, 1]],
+        )
+    }
+
+    #[test]
+    fn empty_mask_counts_all_rows() {
+        let d = toy();
+        let mut c = Counter::new(d.n());
+        assert_eq!(c.count(&d, 0), &[5]);
+    }
+
+    #[test]
+    fn single_variable_counts() {
+        let d = toy();
+        let mut c = Counter::new(d.n());
+        let mut counts = c.count(&d, 0b01).to_vec();
+        counts.sort_unstable();
+        assert_eq!(counts, vec![2, 3]); // X: two 0s, three 1s
+    }
+
+    #[test]
+    fn joint_counts_match_hand_computation() {
+        let d = toy();
+        let mut c = Counter::new(d.n());
+        // (X,Y): (0,0),(1,0),(0,1),(1,1),(1,1) → counts {1,1,1,2}
+        let mut counts = c.count(&d, 0b11).to_vec();
+        counts.sort_unstable();
+        assert_eq!(counts, vec![1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn counts_always_sum_to_n_across_strategies() {
+        let d = synth::uniform(6, 157, &[2, 3, 4, 2, 3, 2], 8);
+        for strategy in [Strategy::Auto, Strategy::Hash, Strategy::Sort] {
+            let mut c = Counter::new(d.n()).with_strategy(strategy);
+            for mask in 0u32..(1 << 6) {
+                let total: u32 = c.count(&d, mask).iter().sum();
+                assert_eq!(total as usize, d.n(), "mask={mask:#b} {strategy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        Check::new("auto == hash == sort counting").cases(60).run(|g| {
+            let p = 1 + g.rng.below_usize(8);
+            let n = 1 + g.rng.below_usize(300);
+            let d = synth::random(p, n, 5, &mut g.rng);
+            let mut auto = Counter::new(n);
+            let mut hash = Counter::new(n).with_strategy(Strategy::Hash);
+            let mut sort = Counter::new(n).with_strategy(Strategy::Sort);
+            let mask = (g.rng.below(1 << p as u64)) as u32;
+            let mut a = auto.count(&d, mask).to_vec();
+            let mut h = hash.count(&d, mask).to_vec();
+            let mut s = sort.count(&d, mask).to_vec();
+            a.sort_unstable();
+            h.sort_unstable();
+            s.sort_unstable();
+            g.assert_eq(a.clone(), s.clone(), "auto == sort");
+            g.assert_eq(h, s, "hash == sort");
+        });
+    }
+
+    #[test]
+    fn hash_strategy_forced_on_large_sigma() {
+        // σ = 5^10 ≈ 9.7e6 > DIRECT_MAX forces the hash path under Auto
+        let d = synth::uniform(10, 200, &[5; 10], 4);
+        let mut auto = Counter::new(d.n());
+        let mut sort = Counter::new(d.n()).with_strategy(Strategy::Sort);
+        let mask = (1u32 << 10) - 1;
+        let mut a = auto.count(&d, mask).to_vec();
+        let mut s = sort.count(&d, mask).to_vec();
+        a.sort_unstable();
+        s.sort_unstable();
+        assert_eq!(a, s);
+    }
+
+    #[test]
+    fn distinct_configs_bounded_by_n_and_sigma() {
+        let d = synth::uniform(4, 50, &[3, 3, 3, 3], 3);
+        let mut c = Counter::new(d.n());
+        for mask in 0u32..16 {
+            let k = c.count(&d, mask).len();
+            assert!(k <= d.n());
+            assert!(k as f64 <= d.sigma(mask));
+            assert_eq!(k, d.sigma_observed(mask), "mask={mask}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_calls_and_epochs() {
+        let d = toy();
+        let mut c = Counter::new(d.n()).with_strategy(Strategy::Hash);
+        let mut first = c.count(&d, 0b11).to_vec();
+        // churn the epoch counter hard
+        for _ in 0..1000 {
+            let _ = c.count(&d, 0b01);
+        }
+        let mut again = c.count(&d, 0b11).to_vec();
+        first.sort_unstable();
+        again.sort_unstable();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn direct_table_reset_is_complete() {
+        let d = synth::uniform(3, 80, &[4, 4, 4], 9);
+        let mut c = Counter::new(d.n()); // Auto → direct (σ=64)
+        let a: u32 = c.count(&d, 0b111).iter().sum();
+        let b: u32 = c.count(&d, 0b111).iter().sum();
+        assert_eq!(a, 80);
+        assert_eq!(b, 80, "stale counts leaked between calls");
+    }
+}

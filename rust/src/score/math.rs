@@ -1,0 +1,243 @@
+//! Special-function substrate: `ln Γ` and cached variants.
+//!
+//! `std` exposes no `lgamma`, and no math crate is available offline, so we
+//! implement the Lanczos approximation (g = 7, 9 coefficients — the classic
+//! Godfrey set, ~15 significant digits over the positive axis) plus the
+//! reflection formula for completeness.
+//!
+//! The scoring hot loop only ever evaluates `ln Γ` at `c + ½` and `c + a`
+//! for integer counts `c ≤ n`, so [`LgammaCache`] precomputes the half-odd
+//! lattice — turning the kernel's transcendental into a table lookup (see
+//! DESIGN.md §8 and EXPERIMENTS.md §Perf).
+
+use std::f64::consts::PI;
+
+const LANCZOS_G: f64 = 7.0;
+const LANCZOS: [f64; 9] = [
+    0.999_999_999_999_809_9,
+    676.520_368_121_885_1,
+    -1_259.139_216_722_402_8,
+    771.323_428_777_653_1,
+    -176.615_029_162_140_6,
+    12.507_343_278_686_905,
+    -0.138_571_095_265_720_12,
+    9.984_369_578_019_572e-6,
+    1.505_632_735_149_311_6e-7,
+];
+
+/// Natural log of the Gamma function for `x > 0` (reflection handles
+/// `x < 0.5` including negatives off the poles).
+pub fn ln_gamma(x: f64) -> f64 {
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1−x) = π / sin(πx)
+        return PI.ln() - (PI * x).sin().abs().ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = LANCZOS[0];
+    for (i, &c) in LANCZOS.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + LANCZOS_G + 0.5;
+    0.5 * (2.0 * PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+/// `ln n!` via `ln Γ(n+1)`.
+pub fn ln_factorial(n: u64) -> f64 {
+    ln_gamma(n as f64 + 1.0)
+}
+
+/// Lower regularized incomplete gamma `P(a, x) = γ(a,x)/Γ(a)`.
+///
+/// Series expansion for `x < a + 1`, Lentz continued fraction otherwise
+/// (Numerical Recipes 6.2). Needed for the χ² CDF behind the PC
+/// algorithm's G² independence tests.
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0, "gamma_p domain: a={a}, x={x}");
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // series: P(a,x) = e^{-x} x^a / Γ(a) · Σ x^n / (a·(a+1)…(a+n))
+        let mut term = 1.0 / a;
+        let mut sum = term;
+        let mut ap = a;
+        for _ in 0..500 {
+            ap += 1.0;
+            term *= x / ap;
+            sum += term;
+            if term.abs() < sum.abs() * 1e-16 {
+                break;
+            }
+        }
+        sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    } else {
+        // continued fraction for Q(a,x); P = 1 − Q
+        let tiny = 1e-300;
+        let mut b = x + 1.0 - a;
+        let mut c = 1.0 / tiny;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < tiny {
+                d = tiny;
+            }
+            c = b + an / c;
+            if c.abs() < tiny {
+                c = tiny;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-16 {
+                break;
+            }
+        }
+        let q = (-x + a * x.ln() - ln_gamma(a)).exp() * h;
+        1.0 - q
+    }
+}
+
+/// Survival function of the χ² distribution with `df` degrees of freedom:
+/// `P[X > x]`. `df = 0` is treated as a point mass at 0 (always reject
+/// nothing: returns 1 for x = 0, 0 otherwise).
+pub fn chi2_sf(x: f64, df: u64) -> f64 {
+    if df == 0 {
+        return if x <= 0.0 { 1.0 } else { 0.0 };
+    }
+    if x <= 0.0 {
+        return 1.0;
+    }
+    1.0 - gamma_p(df as f64 / 2.0, x / 2.0)
+}
+
+/// Precomputed `ln Γ` on the lattices the scores touch:
+/// `half[i] = ln Γ(i + ½)` and `int[i] = ln Γ(i)` (with `int[0]` unused),
+/// for `i ≤ cap`. Counts never exceed the sample size `n`, so `cap = n + 2`
+/// covers every lookup; anything else falls through to [`ln_gamma`].
+#[derive(Clone, Debug)]
+pub struct LgammaCache {
+    half: Vec<f64>,
+    int: Vec<f64>,
+}
+
+impl LgammaCache {
+    /// Build tables covering integer arguments `0..=cap`.
+    pub fn new(cap: usize) -> LgammaCache {
+        // Recurrences are exact-ish and faster than repeated Lanczos:
+        // ln Γ(x+1) = ln Γ(x) + ln x.
+        let mut half = Vec::with_capacity(cap + 1);
+        // ln Γ(1/2) = ln √π
+        half.push(0.5 * PI.ln());
+        for i in 1..=cap {
+            let x = (i - 1) as f64 + 0.5;
+            let prev = half[i - 1];
+            half.push(prev + x.ln());
+        }
+        let mut int = Vec::with_capacity(cap + 1);
+        int.push(f64::INFINITY); // ln Γ(0) — pole; never used
+        int.push(0.0); // ln Γ(1)
+        for i in 2..=cap {
+            let prev = int[i - 1];
+            int.push(prev + ((i - 1) as f64).ln());
+        }
+        LgammaCache { half, int }
+    }
+
+    /// `ln Γ(c + ½)` — table hit for `c ≤ cap`.
+    #[inline]
+    pub fn at_half(&self, c: usize) -> f64 {
+        match self.half.get(c) {
+            Some(&v) => v,
+            None => ln_gamma(c as f64 + 0.5),
+        }
+    }
+
+    /// `ln Γ(x)` for arbitrary positive `x`; integer arguments hit the table.
+    #[inline]
+    pub fn at(&self, x: f64) -> f64 {
+        if x > 0.0 && x.fract() == 0.0 {
+            let i = x as usize;
+            if i < self.int.len() && i > 0 {
+                return self.int[i];
+            }
+        } else if x > 0.5 && (x - 0.5).fract() == 0.0 {
+            let i = (x - 0.5) as usize;
+            if i < self.half.len() {
+                return self.half[i];
+            }
+        }
+        ln_gamma(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Check;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn matches_known_values() {
+        // Γ(1) = Γ(2) = 1, Γ(5) = 24, Γ(1/2) = √π
+        assert!(ln_gamma(1.0).abs() < 1e-13);
+        assert!(ln_gamma(2.0).abs() < 1e-13);
+        assert!(close(ln_gamma(5.0), 24f64.ln(), 1e-14));
+        assert!(close(ln_gamma(0.5), 0.5 * PI.ln(), 1e-14));
+        // Γ(3/2) = √π / 2
+        assert!(close(ln_gamma(1.5), 0.5 * PI.ln() - 2f64.ln(), 1e-14));
+        // large argument vs Stirling: lnΓ(100) = 359.1342053695754
+        assert!(close(ln_gamma(100.0), 359.1342053695754, 1e-14));
+    }
+
+    #[test]
+    fn recurrence_property() {
+        Check::new("lnΓ(x+1) = lnΓ(x) + ln x").cases(300).run(|g| {
+            let x = 0.5 + g.rng.next_f64() * 500.0;
+            g.assert_close(ln_gamma(x + 1.0), ln_gamma(x) + x.ln(), 1e-12, "recurrence");
+        });
+    }
+
+    #[test]
+    fn ln_factorial_matches_product() {
+        let mut acc = 0.0;
+        for n in 1..=30u64 {
+            acc += (n as f64).ln();
+            assert!(close(ln_factorial(n), acc, 1e-13), "n={n}");
+        }
+        assert!(ln_factorial(0).abs() < 1e-13);
+    }
+
+    #[test]
+    fn cache_agrees_with_direct() {
+        let cache = LgammaCache::new(1000);
+        for c in 0..=1000usize {
+            assert!(
+                close(cache.at_half(c), ln_gamma(c as f64 + 0.5), 1e-12),
+                "half c={c}"
+            );
+        }
+        for i in 1..=1000usize {
+            assert!(close(cache.at(i as f64), ln_gamma(i as f64), 1e-12), "int {i}");
+        }
+    }
+
+    #[test]
+    fn cache_falls_back_beyond_cap() {
+        let cache = LgammaCache::new(10);
+        assert!(close(cache.at_half(50), ln_gamma(50.5), 1e-12));
+        assert!(close(cache.at(123.25), ln_gamma(123.25), 1e-12));
+    }
+
+    #[test]
+    fn reflection_for_small_arguments() {
+        // Γ(0.25)·Γ(0.75) = π / sin(π/4) = π√2
+        let sum = ln_gamma(0.25) + ln_gamma(0.75);
+        assert!(close(sum, (PI * std::f64::consts::SQRT_2).ln(), 1e-12));
+    }
+}

@@ -1,0 +1,100 @@
+//! Hybrid structure learning (paper §1's third family): a
+//! constraint-based skeleton restricts the search space of a score-based
+//! optimiser — the MMHC/H2PC pattern, here PC-Stable + hill-climbing.
+
+use super::hillclimb::{hill_climb, HillClimbOptions, HillClimbResult};
+use super::pc::{pc_stable, PcOptions, PcResult};
+use crate::data::Dataset;
+use crate::score::ScoreKind;
+
+/// Hybrid result: search outcome plus the constraining skeleton.
+#[derive(Clone, Debug)]
+pub struct HybridResult {
+    pub search: HillClimbResult,
+    pub pc: PcResult,
+}
+
+/// PC-restricted hill climbing: edges may only be added along the PC
+/// skeleton (each endpoint pair PC judged dependent), then scored and
+/// oriented by the hill climber under `kind`.
+pub fn pc_hill_climb(
+    data: &Dataset,
+    kind: ScoreKind,
+    pc_options: &PcOptions,
+    hc_options: &HillClimbOptions,
+) -> HybridResult {
+    let pc = pc_stable(data, pc_options);
+    let p = data.p();
+    let mut allowed = vec![0u32; p];
+    for &(u, v) in &pc.skeleton {
+        allowed[u] |= 1 << v;
+        allowed[v] |= 1 << u;
+    }
+    let mut options = hc_options.clone();
+    options.allowed = Some(allowed);
+    let search = hill_climb(data, kind, &options);
+    HybridResult { search, pc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::repo;
+    use crate::data::synth;
+    use crate::engine::NativeEngine;
+    use crate::solver::LeveledSolver;
+
+    #[test]
+    fn hybrid_respects_the_pc_skeleton() {
+        let d = synth::chain(6, 2000, 0.95, 3);
+        let r = pc_hill_climb(
+            &d,
+            ScoreKind::Jeffreys,
+            &PcOptions::default(),
+            &HillClimbOptions::default(),
+        );
+        for (u, v) in r.search.network.edges() {
+            let (a, b) = (u.min(v), u.max(v));
+            assert!(
+                r.pc.skeleton.contains(&(a, b)),
+                "edge {u}→{v} outside the PC skeleton"
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_close_to_exact_on_easy_instance() {
+        let truth = repo::asia();
+        let d = truth.sample(3000, 9);
+        let hybrid = pc_hill_climb(
+            &d,
+            ScoreKind::Jeffreys,
+            &PcOptions::default(),
+            &HillClimbOptions {
+                restarts: 4,
+                seed: 2,
+                ..Default::default()
+            },
+        );
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let exact = LeveledSolver::new(&e).solve();
+        assert!(hybrid.search.log_score <= exact.log_score + 1e-9);
+        // the restriction should cost little score on faithful-ish data
+        let gap = exact.log_score - hybrid.search.log_score;
+        assert!(gap < 50.0, "hybrid gap suspiciously large: {gap}");
+    }
+
+    #[test]
+    fn hybrid_shrinks_the_search_space() {
+        let d = synth::chain(7, 2000, 0.95, 4);
+        let r = pc_hill_climb(
+            &d,
+            ScoreKind::Jeffreys,
+            &PcOptions::default(),
+            &HillClimbOptions::default(),
+        );
+        // chain skeleton has 6 edges; unrestricted space has 21 pairs
+        assert!(r.pc.skeleton.len() <= 10);
+        assert!(r.search.moves_evaluated > 0);
+    }
+}

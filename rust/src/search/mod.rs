@@ -1,0 +1,19 @@
+//! Non-exact structure-learning baselines from the paper's §1 taxonomy:
+//!
+//! * [`hill_climb`] — score-based local search with tabu + restarts
+//!   (Bouckaert 1994/1995; Heckerman et al. 1995)
+//! * [`pc_stable`] — constraint-based PC-Stable with G² tests
+//!   (Spirtes & Glymour 1991; Colombo & Maathuis 2014)
+//! * [`pc_hill_climb`] — the hybrid pattern (PC skeleton restricts the
+//!   score search, cf. Kuipers et al. 2022 / MMHC)
+//!
+//! None are globally optimal — they are the reference points the exact
+//! solvers are compared against in `examples/hillclimb_vs_exact.rs`.
+
+mod hillclimb;
+pub mod hybrid;
+pub mod pc;
+
+pub use hillclimb::{hill_climb, HillClimbOptions, HillClimbResult};
+pub use hybrid::{pc_hill_climb, HybridResult};
+pub use pc::{pc_stable, PcOptions, PcResult};

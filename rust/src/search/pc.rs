@@ -1,0 +1,321 @@
+//! PC-Stable: order-independent constraint-based structure learning
+//! (Spirtes & Glymour 1991; Colombo & Maathuis 2014 — paper §1's first
+//! method family, and the skeleton source for the hybrid mode).
+//!
+//! Pipeline: complete undirected graph → remove edges whose endpoints
+//! test conditionally independent given some subset of their neighbours
+//! (G² test, conditioning-set size growing level by level, adjacency
+//! *snapshot per level* = the "stable" variant) → orient v-structures
+//! from the recorded separating sets → Meek closure.
+
+use crate::bitset::bits_of;
+use crate::bn::Cpdag;
+use crate::data::Dataset;
+use crate::score::counts::Counter;
+use crate::score::math::chi2_sf;
+use std::collections::HashMap;
+
+/// PC configuration.
+#[derive(Clone, Debug)]
+pub struct PcOptions {
+    /// significance level for the G² independence test
+    pub alpha: f64,
+    /// cap on conditioning-set size (0 = marginal tests only)
+    pub max_cond: usize,
+}
+
+impl Default for PcOptions {
+    fn default() -> PcOptions {
+        PcOptions {
+            alpha: 0.05,
+            max_cond: 3,
+        }
+    }
+}
+
+/// PC result: the estimated CPDAG plus diagnostics.
+#[derive(Clone, Debug)]
+pub struct PcResult {
+    pub cpdag: Cpdag,
+    /// undirected skeleton as (u < v) pairs
+    pub skeleton: Vec<(usize, usize)>,
+    /// number of G² tests performed
+    pub tests: u64,
+    /// recorded separating sets (for v-structure orientation)
+    pub sepsets: HashMap<(usize, usize), u32>,
+}
+
+/// G² conditional-independence test: X ⟂ Y | Z (Z a variable mask).
+/// Returns (statistic, degrees of freedom, p-value).
+pub fn g2_test(data: &Dataset, x: usize, y: usize, z_mask: u32, counter: &mut Counter) -> (f64, u64, f64) {
+    // joint counts over (Z, X, Y) via three contingency passes share the
+    // same codes; do it in one pass with a local map keyed by (z, x, y).
+    let _ = counter; // contingency scratch reserved for future use
+    let n = data.n();
+    let zvars: Vec<usize> = bits_of(z_mask).collect();
+    let mut nz: HashMap<u64, f64> = HashMap::new();
+    let mut nxz: HashMap<(u64, u8), f64> = HashMap::new();
+    let mut nyz: HashMap<(u64, u8), f64> = HashMap::new();
+    let mut nxyz: HashMap<(u64, u8, u8), f64> = HashMap::new();
+    for i in 0..n {
+        let mut zc = 0u64;
+        for &v in &zvars {
+            zc = zc * data.arities()[v] as u64 + data.value(i, v) as u64;
+        }
+        let xv = data.value(i, x);
+        let yv = data.value(i, y);
+        *nz.entry(zc).or_default() += 1.0;
+        *nxz.entry((zc, xv)).or_default() += 1.0;
+        *nyz.entry((zc, yv)).or_default() += 1.0;
+        *nxyz.entry((zc, xv, yv)).or_default() += 1.0;
+    }
+    let mut g2 = 0.0;
+    for (&(zc, xv, yv), &nxy) in &nxyz {
+        let expected = nxz[&(zc, xv)] * nyz[&(zc, yv)] / nz[&zc];
+        if nxy > 0.0 && expected > 0.0 {
+            g2 += 2.0 * nxy * (nxy / expected).ln();
+        }
+    }
+    let rx = data.arities()[x] as u64;
+    let ry = data.arities()[y] as u64;
+    let qz: u64 = zvars
+        .iter()
+        .map(|&v| data.arities()[v] as u64)
+        .product();
+    let df = (rx - 1) * (ry - 1) * qz;
+    let pval = chi2_sf(g2, df.max(1));
+    (g2, df.max(1), pval)
+}
+
+/// Run PC-Stable.
+pub fn pc_stable(data: &Dataset, options: &PcOptions) -> PcResult {
+    let p = data.p();
+    assert!(p <= 32, "PC uses u32 adjacency masks");
+    let mut counter = Counter::new(data.n());
+    // adjacency masks; complete graph to start
+    let mut adj: Vec<u32> = (0..p)
+        .map(|x| {
+            let full = if p == 32 { u32::MAX } else { (1u32 << p) - 1 };
+            full & !(1u32 << x)
+        })
+        .collect();
+    let mut sepsets: HashMap<(usize, usize), u32> = HashMap::new();
+    let mut tests = 0u64;
+
+    for level in 0..=options.max_cond {
+        // PC-Stable: freeze adjacencies for this level so edge-removal
+        // order cannot change the outcome
+        let snapshot = adj.clone();
+        let mut removed_any = false;
+        for x in 0..p {
+            for y in (x + 1)..p {
+                if adj[x] & (1 << y) == 0 {
+                    continue;
+                }
+                // condition on subsets of snapshot-neighbours of x (then y)
+                let mut separated = false;
+                'outer: for &base in &[snapshot[x] & !(1u32 << y), snapshot[y] & !(1u32 << x)] {
+                    if (base.count_ones() as usize) < level {
+                        continue;
+                    }
+                    for z in k_subsets(base, level) {
+                        tests += 1;
+                        let (_, _, pval) = g2_test(data, x, y, z, &mut counter);
+                        if pval > options.alpha {
+                            sepsets.insert((x, y), z);
+                            separated = true;
+                            break 'outer;
+                        }
+                    }
+                }
+                if separated {
+                    adj[x] &= !(1u32 << y);
+                    adj[y] &= !(1u32 << x);
+                    removed_any = true;
+                }
+            }
+        }
+        // classic termination: stop when no node has enough neighbours
+        let max_deg = adj.iter().map(|m| m.count_ones() as usize).max().unwrap_or(0);
+        if max_deg <= level + 1 && !removed_any {
+            break;
+        }
+    }
+
+    // orientation: v-structures x → z ← y for non-adjacent (x, y) with
+    // common neighbour z ∉ sepset(x, y)
+    let mut skeleton = Vec::new();
+    for x in 0..p {
+        for y in (x + 1)..p {
+            if adj[x] & (1 << y) != 0 {
+                skeleton.push((x, y));
+            }
+        }
+    }
+    let mut g = Cpdag::with_skeleton(p, &skeleton);
+    for x in 0..p {
+        for y in (x + 1)..p {
+            if adj[x] & (1 << y) != 0 {
+                continue; // adjacent: no v-structure candidate
+            }
+            let common = adj[x] & adj[y];
+            for z in bits_of(common) {
+                let sep = sepsets.get(&(x, y)).copied().unwrap_or(0);
+                if sep & (1 << z) == 0 {
+                    g.orient(x, z);
+                    g.orient(y, z);
+                }
+            }
+        }
+    }
+    g.meek_close();
+    PcResult {
+        cpdag: g,
+        skeleton,
+        tests,
+        sepsets,
+    }
+}
+
+/// All `k`-subsets of the set bits of `base`, as masks.
+fn k_subsets(base: u32, k: usize) -> Vec<u32> {
+    let bits: Vec<usize> = bits_of(base).collect();
+    let mut out = Vec::new();
+    if k > bits.len() {
+        return out;
+    }
+    // iterative combination enumeration over positions
+    let mut idx: Vec<usize> = (0..k).collect();
+    loop {
+        let mask = idx.iter().fold(0u32, |m, &i| m | (1 << bits[i]));
+        out.push(mask);
+        // advance
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return out;
+            }
+            i -= 1;
+            if idx[i] != i + bits.len() - k {
+                idx[i] += 1;
+                for j in (i + 1)..k {
+                    idx[j] = idx[j - 1] + 1;
+                }
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{cpdag_of, repo};
+    use crate::data::synth;
+
+    #[test]
+    fn k_subsets_enumerates_combinations() {
+        let subs = k_subsets(0b1011, 2);
+        assert_eq!(subs.len(), 3);
+        assert!(subs.contains(&0b0011));
+        assert!(subs.contains(&0b1001));
+        assert!(subs.contains(&0b1010));
+        assert_eq!(k_subsets(0b1011, 0), vec![0]);
+        assert!(k_subsets(0b1, 2).is_empty());
+    }
+
+    #[test]
+    fn g2_detects_dependence_and_independence() {
+        let d = synth::chain(3, 2000, 0.95, 3);
+        let mut c = Counter::new(d.n());
+        // X0 and X1 strongly dependent
+        let (_, _, p01) = g2_test(&d, 0, 1, 0, &mut c);
+        assert!(p01 < 1e-6, "p={p01}");
+        // X0 ⟂ X2 | X1 in a chain
+        let (_, _, p02_1) = g2_test(&d, 0, 2, 0b010, &mut c);
+        assert!(p02_1 > 0.01, "p={p02_1}");
+        // ...but X0 and X2 are marginally dependent
+        let (_, _, p02) = g2_test(&d, 0, 2, 0, &mut c);
+        assert!(p02 < 1e-6, "p={p02}");
+    }
+
+    #[test]
+    fn g2_on_independent_noise_is_uniform_ish() {
+        // independence: p-values should not be systematically tiny
+        let mut rejections = 0;
+        for seed in 0..40 {
+            let d = synth::binary(2, 300, seed);
+            let mut c = Counter::new(d.n());
+            let (_, _, pval) = g2_test(&d, 0, 1, 0, &mut c);
+            if pval < 0.05 {
+                rejections += 1;
+            }
+        }
+        assert!(rejections <= 6, "α=0.05 ⇒ ≈2 expected, got {rejections}");
+    }
+
+    #[test]
+    fn pc_recovers_chain_skeleton() {
+        let d = synth::chain(5, 3000, 0.95, 7);
+        let r = pc_stable(&d, &PcOptions::default());
+        assert_eq!(r.skeleton, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert!(r.tests > 0);
+    }
+
+    #[test]
+    fn pc_recovers_collider_orientation() {
+        // X → Z ← Y with X, Y independent: PC must orient the v-structure
+        let mut rng = crate::util::rng::Rng::new(5);
+        let n = 4000;
+        let x: Vec<u8> = (0..n).map(|_| rng.below(2) as u8).collect();
+        let y: Vec<u8> = (0..n).map(|_| rng.below(2) as u8).collect();
+        // noisy AND (an XOR collider would be *pairwise* independent and
+        // correctly invisible to PC's bivariate skeleton phase)
+        let z: Vec<u8> = (0..n)
+            .map(|i| {
+                let base = x[i] & y[i];
+                if rng.chance(0.9) {
+                    base
+                } else {
+                    1 - base
+                }
+            })
+            .collect();
+        let d = Dataset::new(
+            vec!["X".into(), "Y".into(), "Z".into()],
+            vec![2, 2, 2],
+            vec![x, y, z],
+        );
+        let r = pc_stable(&d, &PcOptions::default());
+        assert!(r.cpdag.has_directed(0, 2), "X → Z");
+        assert!(r.cpdag.has_directed(1, 2), "Y → Z");
+        assert!(!r.cpdag.adjacent(0, 1));
+    }
+
+    #[test]
+    fn pc_on_asia_approximates_truth_at_scale() {
+        let truth = repo::asia();
+        let d = truth.sample(8000, 17);
+        let r = pc_stable(&d, &PcOptions::default());
+        let true_skel = truth.dag().skeleton();
+        // PC won't be perfect (deterministic 'either' breaks faithfulness),
+        // but most true edges must be found
+        let found = true_skel
+            .iter()
+            .filter(|e| r.skeleton.contains(e))
+            .count();
+        assert!(
+            found * 2 >= true_skel.len(),
+            "PC found only {found}/{} true edges",
+            true_skel.len()
+        );
+    }
+
+    #[test]
+    fn pc_cpdag_on_strong_data_is_close_to_true_class() {
+        let d = synth::chain(4, 5000, 0.95, 13);
+        let r = pc_stable(&d, &PcOptions::default());
+        let truth = crate::bn::Dag::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(r.cpdag, cpdag_of(&truth));
+    }
+}

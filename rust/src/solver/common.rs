@@ -1,0 +1,174 @@
+//! Shared solver types: options, results, statistics.
+
+use crate::bn::Dag;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Tuning knobs shared by the DP solvers.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// Subsets scored per engine batch (amortises PJRT call overhead;
+    /// irrelevant for the native engine's default batching).
+    pub batch: usize,
+    /// Worker threads per level (1 = the paper's sequential execution).
+    pub threads: usize,
+    /// Spill directory: when set, the leveled solver writes each level's
+    /// best-parent-set vectors to disk at the *peak levels only* and
+    /// re-reads them for the next level — the paper's §5.3 extension.
+    pub spill_dir: Option<std::path::PathBuf>,
+    /// Spill only levels whose frontier weight `k·C(p,k)` is within this
+    /// fraction of the maximum (1.0 = only the single peak level; 0.0 =
+    /// never spill). Paper §5.3: "using the disk only at the peak or
+    /// near-peak levels".
+    pub spill_threshold: f64,
+}
+
+impl Default for SolveOptions {
+    fn default() -> SolveOptions {
+        SolveOptions {
+            batch: 1024,
+            threads: 1,
+            spill_dir: None,
+            spill_threshold: 0.5,
+        }
+    }
+}
+
+/// Operation counters and resource accounting for one solve.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SolveStats {
+    /// Subset-potential evaluations (paper step 1 / first traversal term).
+    pub score_evals: u64,
+    /// Best-parent-set candidate comparisons (the `k(k−1)` term of
+    /// Appendix A).
+    pub bps_updates: u64,
+    /// Sink candidate comparisons (the `k` term of Appendix A).
+    pub sink_updates: u64,
+    /// Number of full passes over the `2^p` subset lattice the algorithm
+    /// performed (the paper's headline: proposed = 1, existing ≥ 2).
+    pub traversals: u32,
+    /// Peak bytes of solver-owned arrays, analytically accounted
+    /// (frontier levels + global sink tables). Measured heap peaks come
+    /// from [`crate::memtrack`] in the bench harness.
+    pub peak_state_bytes: usize,
+    /// Bytes spilled to disk (0 unless the §5.3 extension is active).
+    pub spilled_bytes: u64,
+    /// Wall-clock time of `solve()`.
+    pub wall: Duration,
+}
+
+/// Output of an exact solver.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    /// The globally optimal DAG.
+    pub network: Dag,
+    /// `log R(V)` — the optimal network's total log-score.
+    pub log_score: f64,
+    /// Sink-derived optimal variable order, most-upstream first (§3 step 4).
+    pub order: Vec<usize>,
+    /// Operation counters / accounting.
+    pub stats: SolveStats,
+}
+
+impl SolveResult {
+    /// JSON record used by the CLI and the experiment harnesses.
+    pub fn to_json(&self, names: &[String]) -> Json {
+        Json::obj()
+            .set("log_score", self.log_score)
+            .set(
+                "order",
+                self.order
+                    .iter()
+                    .map(|&x| {
+                        names
+                            .get(x)
+                            .cloned()
+                            .unwrap_or_else(|| format!("X{x}"))
+                    })
+                    .collect::<Vec<String>>(),
+            )
+            .set("network", self.network.to_json(names))
+            .set(
+                "stats",
+                Json::obj()
+                    .set("score_evals", self.stats.score_evals)
+                    .set("bps_updates", self.stats.bps_updates)
+                    .set("sink_updates", self.stats.sink_updates)
+                    .set("traversals", self.stats.traversals)
+                    .set("peak_state_bytes", self.stats.peak_state_bytes)
+                    .set("spilled_bytes", self.stats.spilled_bytes)
+                    .set("wall_secs", self.stats.wall.as_secs_f64()),
+            )
+    }
+}
+
+/// Shared reconstruction: walk the per-mask sink tables from the full set
+/// down to ∅, reading off the optimal order and each sink's parent set.
+pub(crate) fn reconstruct(p: usize, sink: &[u8], sink_pmask: &[u32]) -> (Dag, Vec<usize>) {
+    let full: u32 = if p == 32 { u32::MAX } else { (1u32 << p) - 1 };
+    let mut mask = full;
+    let mut parents = vec![0u64; p];
+    let mut order_rev = Vec::with_capacity(p);
+    while mask != 0 {
+        let x = sink[mask as usize] as usize;
+        debug_assert!(mask & (1 << x) != 0, "recorded sink not in subset");
+        parents[x] = sink_pmask[mask as usize] as u64;
+        debug_assert_eq!(
+            parents[x] & !((mask & !(1u32 << x)) as u64),
+            0,
+            "parent set escapes the prefix subset"
+        );
+        order_rev.push(x);
+        mask &= !(1u32 << x);
+    }
+    order_rev.reverse();
+    (Dag::from_parents(parents), order_rev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconstruct_reads_sinks_and_parents() {
+        // p = 3, optimal order X0, X1, X2 with X1 ← X0, X2 ← {X0, X1}.
+        let p = 3;
+        let mut sink = vec![0u8; 8];
+        let mut pm = vec![0u32; 8];
+        sink[0b111] = 2;
+        pm[0b111] = 0b011;
+        sink[0b011] = 1;
+        pm[0b011] = 0b001;
+        sink[0b001] = 0;
+        pm[0b001] = 0;
+        let (dag, order) = reconstruct(p, &sink, &pm);
+        assert_eq!(order, vec![0, 1, 2]);
+        assert_eq!(dag.parents(2), 0b011);
+        assert_eq!(dag.parents(1), 0b001);
+        assert_eq!(dag.parents(0), 0);
+    }
+
+    #[test]
+    fn default_options_are_paper_faithful() {
+        let o = SolveOptions::default();
+        assert_eq!(o.threads, 1);
+        assert!(o.spill_dir.is_none());
+    }
+
+    #[test]
+    fn result_json_contains_counters() {
+        let r = SolveResult {
+            network: Dag::empty(2),
+            log_score: -1.5,
+            order: vec![0, 1],
+            stats: SolveStats {
+                score_evals: 4,
+                traversals: 1,
+                ..Default::default()
+            },
+        };
+        let j = r.to_json(&["A".into(), "B".into()]).to_string();
+        assert!(j.contains(r#""score_evals":4"#));
+        assert!(j.contains(r#""order":["A","B"]"#));
+    }
+}

@@ -1,0 +1,780 @@
+//! The paper's proposed method (§4): single-traversal, level-by-level DP.
+//!
+//! For each level `k+1` (all subsets `S` with `|S| = k+1`, colex order),
+//! one pass computes — per subset — the local score `Q(S)`, the best
+//! parent set of every `X ∈ S` within `S\X` (Eq. 10), and the sink of `S`
+//! (Eq. 9), using **only** the level-`k` frontier. The frontier is then
+//! swapped and level `k` is freed: peak memory is two adjacent levels,
+//! `O(√p·2^p)` (Appendix A), instead of the baseline's all-levels
+//! `O(p·2^p)`.
+//!
+//! Reconstruction needs one sink id and its parent mask per subset —
+//! `5·2^p` bytes, asymptotically below the frontier — recorded in two
+//! global tables as the sweep passes each subset.
+//!
+//! With `SolveOptions::spill_dir` set, the §5.3 extension additionally
+//! pushes the best-parent-set vectors of *near-peak* levels to disk
+//! ([`crate::coordinator::spill`]), trading peak RAM for windowed reads.
+
+use super::common::{reconstruct, SolveOptions, SolveResult, SolveStats};
+use crate::bitset::{colex_unrank, BinomTable, LevelIter};
+use crate::coordinator::plan::memory_plan;
+use crate::coordinator::spill::{SpilledLevel, SpilledLevelWriter};
+use crate::engine::ScoreEngine;
+use std::time::Instant;
+
+/// Engine reference that records whether cross-thread sharing is allowed.
+enum EngineRef<'e> {
+    /// Thread-safe engine: the level sweep may be parallelised.
+    Shared(&'e (dyn ScoreEngine + Sync)),
+    /// Single-thread-only engine (e.g. [`crate::engine::JaxEngine`], whose
+    /// PJRT client is not Sync): `options.threads` is clamped to 1.
+    Local(&'e dyn ScoreEngine),
+}
+
+impl<'e> EngineRef<'e> {
+    fn plain(&self) -> &'e dyn ScoreEngine {
+        match *self {
+            EngineRef::Shared(e) => e,
+            EngineRef::Local(e) => e,
+        }
+    }
+}
+
+/// The proposed single-traversal solver.
+pub struct LeveledSolver<'e> {
+    engine: EngineRef<'e>,
+    options: SolveOptions,
+}
+
+/// Read access to the previous level's frontier, abstracted so the hot
+/// transition loop monomorphises over RAM ([`Level`]) and disk
+/// ([`SpilledLevel`]) backings.
+trait PrevLevel {
+    fn q(&self, t: usize) -> f64;
+    fn r(&self, t: usize) -> f64;
+    /// best family score + argmax parent mask at flat index `t*k + pos`
+    fn bps(&self, idx: usize) -> (f64, u32);
+}
+
+/// One in-RAM frontier level: scores and best-parent tables for all
+/// `C(p,k)` subsets of size `k`.
+struct Level {
+    /// `log Q(T)` per subset rank
+    q: Vec<f64>,
+    /// `log R(T)` per subset rank
+    r: Vec<f64>,
+    /// best family score `bps[t*k + j]` for the j-th set bit of subset t
+    bps: Vec<f64>,
+    /// argmax parent mask, same indexing
+    bpm: Vec<u32>,
+}
+
+impl Level {
+    fn empty_set(log_q_empty: f64) -> Level {
+        Level {
+            q: vec![log_q_empty],
+            r: vec![0.0], // log R(∅) = 0  (Eq. 9 base case)
+            bps: Vec::new(),
+            bpm: Vec::new(),
+        }
+    }
+
+    fn allocate(k: usize, size: usize) -> Level {
+        Level {
+            q: vec![0.0; size],
+            r: vec![0.0; size],
+            bps: vec![0.0; size * k],
+            bpm: vec![0; size * k],
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.q.len() * 8 + self.r.len() * 8 + self.bps.len() * 8 + self.bpm.len() * 4
+    }
+}
+
+impl PrevLevel for Level {
+    #[inline]
+    fn q(&self, t: usize) -> f64 {
+        self.q[t]
+    }
+
+    #[inline]
+    fn r(&self, t: usize) -> f64 {
+        self.r[t]
+    }
+
+    #[inline]
+    fn bps(&self, idx: usize) -> (f64, u32) {
+        (self.bps[idx], self.bpm[idx])
+    }
+}
+
+impl PrevLevel for SpilledLevel {
+    #[inline]
+    fn q(&self, t: usize) -> f64 {
+        self.q[t]
+    }
+
+    #[inline]
+    fn r(&self, t: usize) -> f64 {
+        self.r[t]
+    }
+
+    #[inline]
+    fn bps(&self, idx: usize) -> (f64, u32) {
+        self.read(idx)
+    }
+}
+
+/// Either backing for the frontier.
+enum Frontier {
+    Ram(Level),
+    Disk(SpilledLevel),
+}
+
+impl Frontier {
+    fn resident_bytes(&self) -> usize {
+        match self {
+            Frontier::Ram(l) => l.bytes(),
+            Frontier::Disk(d) => d.resident_bytes(),
+        }
+    }
+}
+
+/// Raw-pointer wrapper letting scoped threads write disjoint mask-indexed
+/// slots of the global sink tables.
+///
+/// Safety: every subset mask belongs to exactly one worker's contiguous
+/// rank range, so no two threads ever write the same index, and the
+/// borrow ends before the scope joins.
+struct SinkTables {
+    sink: *mut u8,
+    pmask: *mut u32,
+}
+
+unsafe impl Sync for SinkTables {}
+
+impl SinkTables {
+    #[inline]
+    unsafe fn write(&self, mask: u32, sink: u8, pmask: u32) {
+        *self.sink.add(mask as usize) = sink;
+        *self.pmask.add(mask as usize) = pmask;
+    }
+}
+
+impl<'e> LeveledSolver<'e> {
+    /// Solver over a thread-safe engine (multithreading available).
+    pub fn new(engine: &'e (dyn ScoreEngine + Sync)) -> LeveledSolver<'e> {
+        LeveledSolver {
+            engine: EngineRef::Shared(engine),
+            options: SolveOptions::default(),
+        }
+    }
+
+    /// Solver over a single-thread engine (`threads` forced to 1).
+    pub fn new_local(engine: &'e dyn ScoreEngine) -> LeveledSolver<'e> {
+        LeveledSolver {
+            engine: EngineRef::Local(engine),
+            options: SolveOptions::default(),
+        }
+    }
+
+    pub fn with_options(
+        engine: &'e (dyn ScoreEngine + Sync),
+        options: SolveOptions,
+    ) -> LeveledSolver<'e> {
+        LeveledSolver {
+            engine: EngineRef::Shared(engine),
+            options,
+        }
+    }
+
+    pub fn with_options_local(
+        engine: &'e dyn ScoreEngine,
+        options: SolveOptions,
+    ) -> LeveledSolver<'e> {
+        LeveledSolver {
+            engine: EngineRef::Local(engine),
+            options,
+        }
+    }
+
+    /// Run the single-traversal DP and return the globally optimal network.
+    pub fn solve(&self) -> SolveResult {
+        let start = Instant::now();
+        let p = self.engine.plain().p();
+        assert!(p >= 1, "need at least one variable");
+        assert!(p <= crate::MAX_VARS);
+        let binom = BinomTable::new(p);
+        let spill_plan = self
+            .options
+            .spill_dir
+            .as_ref()
+            .map(|_| memory_plan(p, self.options.spill_threshold));
+
+        let subset_count = 1usize << p;
+        let mut sink = vec![0u8; subset_count];
+        let mut sink_pmask = vec![0u32; subset_count];
+        let mut stats = SolveStats {
+            traversals: 1,
+            ..Default::default()
+        };
+        let sink_bytes = subset_count * 5;
+
+        // level 0
+        let mut scorer0 = self.engine.plain().scorer();
+        let mut prev = Frontier::Ram(Level::empty_set(scorer0.log_q(0)));
+        let mut score_evals = scorer0.evals();
+        drop(scorer0);
+
+        let max_threads = match (&self.engine, &spill_plan) {
+            (EngineRef::Shared(_), None) => self.options.threads.max(1),
+            // PJRT client and the spill read-cache are single-threaded
+            _ => 1,
+        };
+
+        for k1 in 1..=p {
+            let size1 = binom.c(p, k1) as usize;
+            // §5.3 extension: near-peak levels stream their parent-set
+            // vectors to disk *as they are computed* — the level's full
+            // bps/bpm arrays never materialise in RAM.
+            let spill_now = spill_plan
+                .as_ref()
+                .map(|plan| k1 < p && plan.levels[k1].is_peak)
+                .unwrap_or(false);
+
+            let tables = SinkTables {
+                sink: sink.as_mut_ptr(),
+                pmask: sink_pmask.as_mut_ptr(),
+            };
+
+            if spill_now {
+                let dir = self.options.spill_dir.as_ref().unwrap();
+                let mut writer = SpilledLevelWriter::create(dir, k1).expect("spill create");
+                let batch = self.options.batch.max(1);
+                let mut q1 = vec![0.0f64; size1];
+                let mut r1 = vec![0.0f64; size1];
+                let mut bps_buf = vec![0.0f64; batch * k1];
+                let mut bpm_buf = vec![0u32; batch * k1];
+                stats.peak_state_bytes = stats.peak_state_bytes.max(
+                    prev.resident_bytes()
+                        + size1 * 16
+                        + batch * k1 * 12
+                        + sink_bytes,
+                );
+                let mut worker =
+                    LevelWorker::new(self.engine.plain(), &binom, k1, batch);
+                let mut iter = LevelIter::new(p, k1);
+                let mut start = 0usize;
+                while start < size1 {
+                    let take = batch.min(size1 - start);
+                    let (evals0, bu, su) = match &prev {
+                        Frontier::Ram(level) => worker.run_range(
+                            level,
+                            start,
+                            take,
+                            iter.clone(),
+                            &mut q1[start..start + take],
+                            &mut r1[start..start + take],
+                            &mut bps_buf[..take * k1],
+                            &mut bpm_buf[..take * k1],
+                            &tables,
+                        ),
+                        Frontier::Disk(spilled) => worker.run_range(
+                            spilled,
+                            start,
+                            take,
+                            iter.clone(),
+                            &mut q1[start..start + take],
+                            &mut r1[start..start + take],
+                            &mut bps_buf[..take * k1],
+                            &mut bpm_buf[..take * k1],
+                            &tables,
+                        ),
+                    };
+                    let _ = evals0; // scorer accumulates; read once below
+                    stats.bps_updates += bu;
+                    stats.sink_updates += su;
+                    writer
+                        .append(&bps_buf[..take * k1], &bpm_buf[..take * k1])
+                        .expect("spill append");
+                    for _ in 0..take {
+                        iter.next();
+                    }
+                    start += take;
+                }
+                score_evals += worker.scorer.evals();
+                let spilled = writer.finish(q1, r1).expect("spill finish");
+                stats.spilled_bytes += spilled.bytes_on_disk();
+                prev = Frontier::Disk(spilled);
+                continue;
+            }
+
+            let mut cur = Level::allocate(k1, size1);
+            stats.peak_state_bytes = stats
+                .peak_state_bytes
+                .max(prev.resident_bytes() + cur.bytes() + sink_bytes);
+
+            let threads = max_threads.min(size1.max(1));
+            let (evals, bu, su) = match (&prev, threads) {
+                (Frontier::Ram(level), 1) => {
+                    let mut worker =
+                        LevelWorker::new(self.engine.plain(), &binom, k1, self.options.batch);
+                    worker.run_range(
+                        level,
+                        0,
+                        size1,
+                        LevelIter::new(p, k1),
+                        &mut cur.q,
+                        &mut cur.r,
+                        &mut cur.bps,
+                        &mut cur.bpm,
+                        &tables,
+                    )
+                }
+                (Frontier::Disk(spilled), _) => {
+                    let mut worker =
+                        LevelWorker::new(self.engine.plain(), &binom, k1, self.options.batch);
+                    worker.run_range(
+                        spilled,
+                        0,
+                        size1,
+                        LevelIter::new(p, k1),
+                        &mut cur.q,
+                        &mut cur.r,
+                        &mut cur.bps,
+                        &mut cur.bpm,
+                        &tables,
+                    )
+                }
+                (Frontier::Ram(level), threads) => self.run_parallel(
+                    level, &binom, p, k1, size1, threads, &mut cur, &tables,
+                ),
+            };
+            score_evals += evals;
+            stats.bps_updates += bu;
+            stats.sink_updates += su;
+            prev = Frontier::Ram(cur);
+        }
+
+        stats.score_evals = score_evals;
+        let (network, order) = reconstruct(p, &sink, &sink_pmask);
+        let log_score = match &prev {
+            Frontier::Ram(l) => l.r[0],
+            Frontier::Disk(d) => d.r[0],
+        };
+        stats.wall = start.elapsed();
+        SolveResult {
+            network,
+            log_score,
+            order,
+            stats,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_parallel(
+        &self,
+        level: &Level,
+        binom: &BinomTable,
+        p: usize,
+        k1: usize,
+        size1: usize,
+        threads: usize,
+        cur: &mut Level,
+        tables: &SinkTables,
+    ) -> (u64, u64, u64) {
+        let engine = match self.engine {
+            EngineRef::Shared(e) => e,
+            EngineRef::Local(_) => unreachable!("threads forced to 1 for local engines"),
+        };
+        let chunk = size1.div_ceil(threads);
+        let (mut q_rest, mut r_rest): (&mut [f64], &mut [f64]) = (&mut cur.q, &mut cur.r);
+        let (mut bps_rest, mut bpm_rest): (&mut [f64], &mut [u32]) =
+            (&mut cur.bps, &mut cur.bpm);
+        let mut jobs = Vec::new();
+        let mut startr = 0usize;
+        while startr < size1 {
+            let len = chunk.min(size1 - startr);
+            let (q_c, q_n) = q_rest.split_at_mut(len);
+            let (r_c, r_n) = r_rest.split_at_mut(len);
+            let (bps_c, bps_n) = bps_rest.split_at_mut(len * k1);
+            let (bpm_c, bpm_n) = bpm_rest.split_at_mut(len * k1);
+            q_rest = q_n;
+            r_rest = r_n;
+            bps_rest = bps_n;
+            bpm_rest = bpm_n;
+            jobs.push((startr, len, q_c, r_c, bps_c, bpm_c));
+            startr += len;
+        }
+        let batch = self.options.batch;
+        let results = std::thread::scope(|scope| {
+            let handles: Vec<_> = jobs
+                .into_iter()
+                .map(|(startr, len, q_c, r_c, bps_c, bpm_c)| {
+                    scope.spawn(move || {
+                        let mut worker = LevelWorker::new(engine, binom, k1, batch);
+                        let first = colex_unrank(binom, p, k1, startr as u64);
+                        let iter = LevelIter::resume(p, first);
+                        worker.run_range(level, startr, len, iter, q_c, r_c, bps_c, bpm_c, tables)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("level worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        let mut totals = (0, 0, 0);
+        for (e, b, s) in results {
+            totals.0 += e;
+            totals.1 += b;
+            totals.2 += s;
+        }
+        totals
+    }
+}
+
+/// Per-worker state for one level sweep over a contiguous rank range.
+struct LevelWorker<'e, 'b> {
+    scorer: Box<dyn crate::engine::SubsetScorer + 'e>,
+    binom: &'b BinomTable,
+    k1: usize,
+    batch: usize,
+    dropranks: Vec<u64>,
+    mask_buf: Vec<u32>,
+    q_buf: Vec<f64>,
+}
+
+impl<'e, 'b> LevelWorker<'e, 'b> {
+    fn new(
+        engine: &'e dyn ScoreEngine,
+        binom: &'b BinomTable,
+        k1: usize,
+        batch: usize,
+    ) -> LevelWorker<'e, 'b> {
+        LevelWorker {
+            scorer: engine.scorer(),
+            binom,
+            k1,
+            batch: batch.max(1),
+            dropranks: Vec::with_capacity(k1 + 1),
+            mask_buf: Vec::with_capacity(batch.max(1)),
+            q_buf: Vec::with_capacity(batch.max(1)),
+        }
+    }
+
+    /// Process `len` subsets starting at level rank `start_rank`, reading
+    /// the previous level and writing the (chunk-local) output slices.
+    /// Returns (score_evals, bps_updates, sink_updates).
+    #[allow(clippy::too_many_arguments)]
+    fn run_range<P: PrevLevel>(
+        &mut self,
+        prev: &P,
+        start_rank: usize,
+        len: usize,
+        mut iter: LevelIter,
+        q_out: &mut [f64],
+        r_out: &mut [f64],
+        bps_out: &mut [f64],
+        bpm_out: &mut [u32],
+        tables: &SinkTables,
+    ) -> (u64, u64, u64) {
+        let k1 = self.k1;
+        let kprev = k1 - 1;
+        let mut bps_updates = 0u64;
+        let mut sink_updates = 0u64;
+        let mut done = 0usize;
+        while done < len {
+            let take = self.batch.min(len - done);
+            self.mask_buf.clear();
+            for _ in 0..take {
+                self.mask_buf
+                    .push(iter.next().expect("level iterator exhausted early"));
+            }
+            self.scorer.log_q_batch(&self.mask_buf, &mut self.q_buf);
+            for i in 0..take {
+                let mask = self.mask_buf[i];
+                let q_s = self.q_buf[i];
+                let local = done + i; // chunk-local rank
+                debug_assert_eq!(
+                    crate::bitset::colex_rank(self.binom, mask) as usize,
+                    start_rank + local
+                );
+                q_out[local] = q_s;
+
+                // bits + drop-one colex ranks fused in one pass over the
+                // set bits (perf: the standalone DropRanks re-extracted
+                // the bits; see EXPERIMENTS.md §Perf)
+                let mut bits = [0u8; 32];
+                let mut prefix = [0u64; 33]; // prefix[j] = Σ_{i<j} C(b_i, i+1)
+                let mut suffix = [0u64; 33]; // suffix[j] = Σ_{i≥j} C(b_i, i)
+                {
+                    let mut rest = mask;
+                    let mut j = 0usize;
+                    while rest != 0 {
+                        let b = rest.trailing_zeros() as usize;
+                        rest &= rest - 1;
+                        bits[j] = b as u8;
+                        prefix[j + 1] = prefix[j] + self.binom.c(b, j + 1);
+                        j += 1;
+                    }
+                    suffix[k1] = 0;
+                    for j in (0..k1).rev() {
+                        suffix[j] = suffix[j + 1] + self.binom.c(bits[j] as usize, j);
+                    }
+                    self.dropranks.clear();
+                    for j in 0..k1 {
+                        self.dropranks.push(prefix[j] + suffix[j + 1]);
+                    }
+                }
+
+                let mut r_best = f64::NEG_INFINITY;
+                let mut sink_x = bits[0];
+                let mut sink_pm = 0u32;
+                for j in 0..k1 {
+                    let xj = bits[j] as usize;
+                    let t = self.dropranks[j] as usize;
+                    let sub_mask = mask & !(1u32 << xj);
+                    // Eq. 10, first candidate: the full complement S\X
+                    let mut best = q_s - prev.q(t);
+                    let mut best_pm = sub_mask;
+                    if kprev > 0 {
+                        // Eq. 10, inherited candidates π(X, S\{X,Y})
+                        for l in 0..k1 {
+                            if l == j {
+                                continue;
+                            }
+                            let tl = self.dropranks[l] as usize;
+                            let pos = if l < j { j - 1 } else { j };
+                            let (cand, cand_pm) = prev.bps(tl * kprev + pos);
+                            // ≥, not >: on exact ties prefer the inherited
+                            // (smaller) parent set — the regular-score
+                            // tie-break (matches SilanderSolver).
+                            if cand >= best {
+                                best = cand;
+                                best_pm = cand_pm;
+                            }
+                        }
+                        bps_updates += (k1 - 1) as u64;
+                    }
+                    bps_out[local * k1 + j] = best;
+                    bpm_out[local * k1 + j] = best_pm;
+                    // Eq. 9 fused in the same pass: sink candidate
+                    let r_cand = prev.r(t) + best;
+                    if r_cand > r_best {
+                        r_best = r_cand;
+                        sink_x = xj as u8;
+                        sink_pm = best_pm;
+                    }
+                    sink_updates += 1;
+                }
+                r_out[local] = r_best;
+                // Safety: each mask is processed by exactly one worker.
+                unsafe { tables.write(mask, sink_x, sink_pm) };
+            }
+            done += take;
+        }
+        (self.scorer.evals(), bps_updates, sink_updates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::engine::NativeEngine;
+    use crate::score::{LocalScorer, ScoreKind};
+    use crate::solver::brute;
+    use crate::util::check::Check;
+
+    #[test]
+    fn single_variable_network() {
+        let d = synth::binary(1, 30, 1);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = LeveledSolver::new(&e).solve();
+        assert_eq!(r.network.p(), 1);
+        assert_eq!(r.network.parents(0), 0);
+        assert_eq!(r.order, vec![0]);
+        let mut s = LocalScorer::new(&d, ScoreKind::Jeffreys);
+        assert!((r.log_score - s.family(0, 0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimal_score_matches_achieved_network_score() {
+        let d = synth::chain(6, 120, 0.9, 7);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = LeveledSolver::new(&e).solve();
+        let mut s = LocalScorer::new(&d, ScoreKind::Jeffreys);
+        let achieved = s.network(r.network.parent_masks());
+        assert!(
+            (achieved - r.log_score).abs() < 1e-9,
+            "claimed {} vs achieved {achieved}",
+            r.log_score
+        );
+    }
+
+    #[test]
+    fn recovers_planted_chain_skeleton() {
+        let d = synth::chain(5, 400, 0.95, 3);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = LeveledSolver::new(&e).solve();
+        // the chain skeleton X0—X1—…—X4 must be recovered
+        let skel = r.network.skeleton();
+        assert_eq!(skel, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+    }
+
+    #[test]
+    fn prop_matches_brute_force_global_optimum() {
+        Check::new("leveled == brute force").cases(25).run(|g| {
+            let p = 2 + g.rng.below_usize(3); // 2..=4
+            let n = 10 + g.rng.below_usize(60);
+            let d = synth::random(p, n, 3, &mut g.rng);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let r = LeveledSolver::new(&e).solve();
+            let best = brute::best_dag_score(&d, ScoreKind::Jeffreys);
+            g.assert_close(r.log_score, best, 1e-9, "global optimum");
+        });
+    }
+
+    #[test]
+    fn prop_multithreaded_equals_sequential() {
+        Check::new("threads=4 == threads=1").cases(10).run(|g| {
+            let p = 2 + g.rng.below_usize(6); // 2..=7
+            let n = 20 + g.rng.below_usize(80);
+            let d = synth::random(p, n, 3, &mut g.rng);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let seq = LeveledSolver::new(&e).solve();
+            let par = LeveledSolver::with_options(
+                &e,
+                SolveOptions {
+                    threads: 4,
+                    batch: 7, // stress odd batch boundaries too
+                    ..Default::default()
+                },
+            )
+            .solve();
+            g.assert_eq(
+                seq.log_score.to_bits(),
+                par.log_score.to_bits(),
+                "bit-identical optimum",
+            );
+            g.assert_eq(seq.network.clone(), par.network.clone(), "same network");
+        });
+    }
+
+    #[test]
+    fn prop_spill_equals_in_ram() {
+        let dir = std::env::temp_dir().join(format!("bnsl_spill_solve_{}", std::process::id()));
+        Check::new("spill == in-RAM").cases(8).run(|g| {
+            let p = 3 + g.rng.below_usize(6); // 3..=8
+            let n = 20 + g.rng.below_usize(80);
+            let d = synth::random(p, n, 3, &mut g.rng);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let plain = LeveledSolver::new(&e).solve();
+            let spilled = LeveledSolver::with_options(
+                &e,
+                SolveOptions {
+                    spill_dir: Some(dir.clone()),
+                    spill_threshold: 0.5,
+                    ..Default::default()
+                },
+            )
+            .solve();
+            g.assert_eq(
+                plain.log_score.to_bits(),
+                spilled.log_score.to_bits(),
+                "bit-identical optimum under spill",
+            );
+            g.assert_eq(plain.network.clone(), spilled.network.clone(), "same network");
+            g.assert(spilled.stats.spilled_bytes > 0, "spill actually engaged");
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn counters_match_appendix_a_closed_forms() {
+        let p = 7;
+        let d = synth::binary(p, 40, 5);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = LeveledSolver::new(&e).solve();
+        // score evals: one per subset (single traversal!) incl. ∅
+        assert_eq!(r.stats.score_evals, 1u64 << p);
+        // Appendix A: Σ k(k−1) C(p,k) = p(p−1)·2^{p−2}
+        assert_eq!(
+            r.stats.bps_updates,
+            (p as u64) * (p as u64 - 1) * (1u64 << (p - 2))
+        );
+        // Σ k·C(p,k) = p·2^{p−1}
+        assert_eq!(r.stats.sink_updates, (p as u64) * (1u64 << (p - 1)));
+        assert_eq!(r.stats.traversals, 1);
+    }
+
+    #[test]
+    fn works_with_all_score_kinds() {
+        let d = synth::random(4, 60, 3, &mut crate::util::rng::Rng::new(2));
+        for kind in [
+            ScoreKind::Jeffreys,
+            ScoreKind::JeffreysObserved,
+            ScoreKind::Bdeu { ess: 1.0 },
+            ScoreKind::Bic,
+            ScoreKind::Aic,
+        ] {
+            let e = NativeEngine::new(&d, kind);
+            let r = LeveledSolver::new(&e).solve();
+            let best = brute::best_dag_score(&d, kind);
+            assert!(
+                (r.log_score - best).abs() < 1e-9,
+                "{}: {} vs {best}",
+                kind.name(),
+                r.log_score
+            );
+        }
+    }
+
+    #[test]
+    fn peak_state_accounting_is_two_levels_plus_sinks() {
+        let p = 10;
+        let d = synth::binary(p, 30, 9);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = LeveledSolver::new(&e).solve();
+        let binom = BinomTable::new(p);
+        // expected peak: max over k of bytes(level k) + bytes(level k+1) + 5·2^p
+        let level_bytes = |k: usize| -> usize {
+            let size = binom.c(p, k) as usize;
+            size * 16 + size * k * 12
+        };
+        let expected = (0..p)
+            .map(|k| level_bytes(k) + level_bytes(k + 1) + 5 * (1 << p))
+            .max()
+            .unwrap();
+        assert_eq!(r.stats.peak_state_bytes, expected);
+    }
+
+    #[test]
+    fn spill_reduces_accounted_peak_memory() {
+        let p = 12;
+        let d = synth::binary(p, 30, 13);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let dir = std::env::temp_dir().join(format!("bnsl_spill_peak_{}", std::process::id()));
+        let plain = LeveledSolver::new(&e).solve();
+        let spilled = LeveledSolver::with_options(
+            &e,
+            SolveOptions {
+                spill_dir: Some(dir.clone()),
+                spill_threshold: 0.3,
+                ..Default::default()
+            },
+        )
+        .solve();
+        // Note: at p = 12 the 3 MiB window cache can rival the level
+        // arrays; the claim here is only "spill accounting engaged and
+        // bounded", the asymptotic claim is exercised by bench `spill`.
+        assert!(spilled.stats.spilled_bytes > 0);
+        assert!(spilled.stats.peak_state_bytes <= plain.stats.peak_state_bytes + (3 << 20) + (1 << 20));
+        assert_eq!(plain.log_score.to_bits(), spilled.log_score.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

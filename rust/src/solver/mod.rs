@@ -1,0 +1,22 @@
+//! Exact, globally-optimal structure-learning solvers.
+//!
+//! * [`LeveledSolver`] — **the paper's proposed method** (§4): one sweep
+//!   over all `2^p` subsets, level by level, fusing local scores, best
+//!   parent sets (Eq. 10) and sink identification (Eq. 9) into a single
+//!   traversal with a two-level memory frontier.
+//! * [`SilanderSolver`] — the Silander–Myllymäki (2012) baseline (§3):
+//!   faithful multi-pass pipeline with all-in-RAM full arrays.
+//! * [`brute`] — exhaustive all-DAGs oracle for `p ≤ 5` (test harness).
+//!
+//! Both DP solvers return bit-identical optima for the same engine — an
+//! integration-tested invariant — and expose the operation counters that
+//! back the Table-1 complexity accounting.
+
+pub mod brute;
+mod common;
+mod leveled;
+mod silander;
+
+pub use common::{SolveOptions, SolveResult, SolveStats};
+pub use leveled::LeveledSolver;
+pub use silander::SilanderSolver;

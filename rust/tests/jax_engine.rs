@@ -1,0 +1,112 @@
+//! Cross-layer integration: rust loads the AOT JAX/Pallas artifact via
+//! PJRT and must agree with the native f64 engine.
+//!
+//! Requires `make artifacts` (skipped with a loud message otherwise).
+
+use bnsl::data::synth;
+use bnsl::engine::{JaxEngine, NativeEngine, ScoreEngine};
+use bnsl::score::ScoreKind;
+use bnsl::solver::{LeveledSolver, SilanderSolver};
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let has_artifacts = std::fs::read_dir(&dir)
+        .map(|entries| {
+            entries
+                .flatten()
+                .any(|e| e.file_name().to_string_lossy().ends_with(".hlo.txt"))
+        })
+        .unwrap_or(false);
+    if has_artifacts {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts in {dir:?}; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn jax_engine_matches_native_on_random_subsets() {
+    let Some(dir) = artifact_dir() else { return };
+    let d = synth::uniform(8, 120, &[2, 3, 2, 4, 2, 3, 2, 2], 42);
+    let native = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let jax = JaxEngine::new(&d, ScoreKind::Jeffreys, &dir).expect("load artifact");
+
+    let mut ns = native.scorer();
+    let mut js = jax.scorer();
+    let masks: Vec<u32> = (0u32..256).collect();
+    let mut nv = Vec::new();
+    let mut jv = Vec::new();
+    ns.log_q_batch(&masks, &mut nv);
+    js.log_q_batch(&masks, &mut jv);
+    for (i, &mask) in masks.iter().enumerate() {
+        let scale = nv[i].abs().max(1.0);
+        assert!(
+            (nv[i] - jv[i]).abs() / scale < 1e-4,
+            "mask {mask:#b}: native {} vs jax {}",
+            nv[i],
+            jv[i]
+        );
+    }
+    assert!(jax.executions() >= 1, "PJRT actually executed");
+}
+
+#[test]
+fn jax_engine_handles_empty_and_full_masks() {
+    let Some(dir) = artifact_dir() else { return };
+    let d = synth::binary(6, 200, 7);
+    let jax = JaxEngine::new(&d, ScoreKind::Jeffreys, &dir).expect("load artifact");
+    let mut s = jax.scorer();
+    let empty = s.log_q(0);
+    assert!(empty.abs() < 1e-4, "log Q(∅) = 0, got {empty}");
+    let full = s.log_q((1 << 6) - 1);
+    assert!(full < 0.0);
+}
+
+#[test]
+fn leveled_solver_over_jax_engine_matches_native_solvers() {
+    let Some(dir) = artifact_dir() else { return };
+    // p small: interpret-mode Pallas is a correctness vehicle, not fast
+    let d = synth::uniform(6, 80, &[2, 2, 3, 2, 2, 2], 11);
+    let native = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let exact = LeveledSolver::new(&native).solve();
+
+    let jax = JaxEngine::new(&d, ScoreKind::Jeffreys, &dir).expect("load artifact");
+    let approx = LeveledSolver::new_local(&jax).solve();
+
+    let scale = exact.log_score.abs().max(1.0);
+    assert!(
+        (exact.log_score - approx.log_score).abs() / scale < 1e-3,
+        "native {} vs jax {}",
+        exact.log_score,
+        approx.log_score
+    );
+    // f32 scoring may flip exact ties, but on random data the optimum is
+    // unique: demand the same Markov equivalence class.
+    assert_eq!(
+        bnsl::bn::cpdag_of(&exact.network),
+        bnsl::bn::cpdag_of(&approx.network),
+        "same equivalence class"
+    );
+
+    // and silander over jax agrees with leveled over jax bit-for-bit
+    let silander = SilanderSolver::new(&jax).solve();
+    assert_eq!(silander.log_score.to_bits(), approx.log_score.to_bits());
+}
+
+#[test]
+fn jax_engine_rejects_non_jeffreys_scores() {
+    let Some(dir) = artifact_dir() else { return };
+    let d = synth::binary(4, 50, 1);
+    assert!(JaxEngine::new(&d, ScoreKind::Bic, &dir).is_err());
+    assert!(JaxEngine::new(&d, ScoreKind::Bdeu { ess: 1.0 }, &dir).is_err());
+}
+
+#[test]
+fn jax_engine_rejects_oversized_datasets() {
+    let Some(dir) = artifact_dir() else { return };
+    // artifacts cover n ≤ 256
+    let d = synth::binary(4, 300, 1);
+    assert!(JaxEngine::new(&d, ScoreKind::Jeffreys, &dir).is_err());
+}
