@@ -17,9 +17,9 @@ fn main() {
         vec![vec![0, 1, 0, 1, 1], vec![0, 0, 1, 1, 1]],
     );
     let mut s = LocalScorer::new(&d, ScoreKind::Jeffreys);
-    let q_x = s.log_q(0b01).exp();
-    let q_y = s.log_q(0b10).exp();
-    let q_xy = s.log_q(0b11).exp();
+    let q_x = s.log_q(0b01u32).exp();
+    let q_y = s.log_q(0b10u32).exp();
+    let q_xy = s.log_q(0b11u32).exp();
     println!("paper §2.3 worked example (Eq. 6):");
     println!("  Q(X)   = {q_x:.10}  (paper: 3/256 = {:.10})", 3.0 / 256.0);
     println!("  Q(Y)   = {q_y:.10}");
@@ -35,10 +35,10 @@ fn main() {
     );
 
     // closed form vs the literal sequential product
-    let seq = log_q_sequential(&d, 0b11, 4.0);
+    let seq = log_q_sequential(&d, 0b11u32, 4.0);
     println!(
         "\nclosed form log Q(X,Y) = {:.12}, sequential Eq. 6 = {seq:.12}",
-        s.log_q(0b11)
+        s.log_q(0b11u32)
     );
 
     // Suzuki-2017 irregularity witness: X = Y exactly, Z ≈ Y
@@ -56,14 +56,14 @@ fn main() {
     let mut j = LocalScorer::new(&w, ScoreKind::Jeffreys);
     println!(
         "  Jeffreys : score(X|{{Y}}) = {:.4} > score(X|{{Y,Z}}) = {:.4}  ✓ regular",
-        j.family(0, 0b010),
-        j.family(0, 0b110)
+        j.family(0, 0b010u32),
+        j.family(0, 0b110u32)
     );
     let mut b = LocalScorer::new(&w, ScoreKind::Bdeu { ess: 4.0 });
     println!(
         "  BDeu(4)  : score(X|{{Y}}) = {:.4} < score(X|{{Y,Z}}) = {:.4}  ✗ prefers the useless extra parent",
-        b.family(0, 0b010),
-        b.family(0, 0b110)
+        b.family(0, 0b010u32),
+        b.family(0, 0b110u32)
     );
 
     // all supported scores on the same family, for orientation
@@ -76,6 +76,6 @@ fn main() {
         ScoreKind::Aic,
     ] {
         let mut s = LocalScorer::new(&w, kind);
-        println!("  {:18} {:+.4}", kind.name(), s.family(0, 0b010));
+        println!("  {:18} {:+.4}", kind.name(), s.family(0, 0b010u32));
     }
 }

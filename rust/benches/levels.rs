@@ -1,9 +1,56 @@
 //! Bench E4 — regenerates **Fig. 7**: the per-level combination counts
 //! (and frontier bytes) for p = 29, plus the §5.1 16 GB feasibility
 //! analysis (existing max 26 variables vs proposed max 28).
+//!
+//! Also tracks the **wide-mask (u64) path** for the perf trajectory:
+//! the p = 33 spill-enabled memory plan (16-byte records), and a timed
+//! narrow-vs-forced-wide solve at a container-feasible `BNSL_SOLVE_P`
+//! (default 18, spill enabled, small n) so a monomorphization regression
+//! in either hot loop shows up here. Set `BNSL_WIDE_FULL=1` on a
+//! large-memory host to run the true p = 33 spilled solve.
 
 use bnsl::coordinator::plan::{memory_plan, MemoryPlan};
+use bnsl::data::synth;
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::solver::{LeveledSolver, SolveOptions};
 use bnsl::util::{human_bytes, table::Table};
+
+fn spill_options() -> SolveOptions {
+    SolveOptions {
+        spill_dir: Some(std::env::temp_dir().join(format!(
+            "bnsl_levels_bench_{}",
+            std::process::id()
+        ))),
+        spill_threshold: 0.5,
+        ..Default::default()
+    }
+}
+
+/// Timed solve at both widths on the same engine; returns ns/subset.
+fn race_widths(p: usize, n: usize) -> (f64, f64, f64) {
+    let d = synth::binary(p, n, 4807);
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let subsets = (1u64 << p) as f64;
+    let narrow = LeveledSolver::new(&e).solve();
+    let wide = LeveledSolver::<u64>::new_generic(&e).solve();
+    let wide_spill = LeveledSolver::<u64>::with_options_generic(&e, spill_options()).solve();
+    assert_eq!(
+        narrow.log_score.to_bits(),
+        wide.log_score.to_bits(),
+        "widths disagree"
+    );
+    assert_eq!(
+        narrow.log_score.to_bits(),
+        wide_spill.log_score.to_bits(),
+        "wide spill disagrees"
+    );
+    (
+        narrow.stats.wall.as_secs_f64() / subsets * 1e9,
+        wide.stats.wall.as_secs_f64() / subsets * 1e9,
+        wide_spill.stats.wall.as_secs_f64() / subsets * 1e9,
+    )
+}
 
 fn main() {
     let p: usize = std::env::var("BNSL_P")
@@ -49,4 +96,53 @@ fn main() {
         "C(28,14)·29·8 bytes = {} (paper: 8.6679 GB)",
         human_bytes(bytes)
     );
+
+    // === wide-mask (u64) path ==========================================
+    println!("\n=== wide path: p = 33 spill plan (u64 masks, 16-byte records) ===");
+    let wide_plan = memory_plan(33, 0.5);
+    assert_eq!(wide_plan.mask_bytes, 8);
+    let spilled: Vec<usize> = wide_plan
+        .levels
+        .iter()
+        .filter(|l| l.is_peak)
+        .map(|l| l.k)
+        .collect();
+    println!(
+        "peak level {} — proposed peak {} (baseline {}), near-peak levels spilled: {spilled:?}",
+        wide_plan.peak_level,
+        human_bytes(wide_plan.peak_bytes),
+        human_bytes(wide_plan.baseline_bytes)
+    );
+
+    let solve_p: usize = std::env::var("BNSL_SOLVE_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(18);
+    let n: usize = std::env::var("BNSL_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    println!("\n=== u32 vs forced-u64 solve, p = {solve_p}, n = {n} (no-regression check) ===");
+    let (narrow_ns, wide_ns, wide_spill_ns) = race_widths(solve_p, n);
+    println!("u32 path        : {narrow_ns:8.1} ns/subset");
+    println!(
+        "u64 path        : {wide_ns:8.1} ns/subset  ({:+.1}% vs u32)",
+        (wide_ns / narrow_ns - 1.0) * 100.0
+    );
+    println!("u64 path + spill: {wide_spill_ns:8.1} ns/subset");
+
+    if std::env::var("BNSL_WIDE_FULL").is_ok() {
+        // The real thing: 2^33 subsets, ~170 GB of tables. Only on request.
+        println!("\n=== FULL p = 33 spilled solve (BNSL_WIDE_FULL set) ===");
+        let mut rng = bnsl::util::rng::Rng::new(3303);
+        let d = synth::random(33, 50, 2, &mut rng);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = LeveledSolver::<u64>::with_options_generic(&e, spill_options()).solve();
+        println!(
+            "log-score {:.4}, wall {:.1}s, spilled {}",
+            r.log_score,
+            r.stats.wall.as_secs_f64(),
+            human_bytes(r.stats.spilled_bytes)
+        );
+    }
 }

@@ -1,0 +1,338 @@
+//! The `VarMask` abstraction: variable-subset bitmasks, generic over word
+//! width.
+//!
+//! The whole pipeline — level enumeration, colex ranking, contingency
+//! counting, both score engines, all three solvers, the spill format and
+//! the searches — is monomorphized over this trait, so the `u32` path
+//! compiles to exactly the code the hardcoded-`u32` seed produced (no
+//! dynamic dispatch, no width branches in hot loops) while the same source
+//! serves 64-bit masks for wide instances.
+//!
+//! The trait is **sealed**: exactly two implementations exist, [`u32`]
+//! (the narrow path, `p ≤ MAX_VARS = 30`) and [`u64`] (the wide path,
+//! `p ≤ MAX_VARS_WIDE` for the exact DP, `p ≤ MAX_NET_VARS = 64` for the
+//! approximate searches). Runtime width dispatch happens exactly once, at
+//! the CLI/solver boundary; everything below it is monomorphic.
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u32 {}
+    impl Sealed for u64 {}
+}
+
+/// A fixed-width variable-subset bitmask (`u32` or `u64`).
+///
+/// Bit `i` set ⇔ variable `X_i ∈ S`. All operations are `#[inline]`
+/// single-instruction wrappers; the trait exists so the DP layers can be
+/// written once and monomorphized per width.
+pub trait VarMask:
+    sealed::Sealed
+    + Copy
+    + Eq
+    + Ord
+    + std::hash::Hash
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::fmt::Binary
+    + Send
+    + Sync
+    + 'static
+    + std::ops::BitAnd<Output = Self>
+    + std::ops::BitOr<Output = Self>
+    + std::ops::BitXor<Output = Self>
+    + std::ops::Not<Output = Self>
+    + std::ops::BitAndAssign
+    + std::ops::BitOrAssign
+{
+    /// Word width in bits: the hard ceiling on `p` for this mask type.
+    const BITS: usize;
+    /// Bytes per mask as stored in the spill record format.
+    const BYTES: usize;
+    /// The empty set.
+    const ZERO: Self;
+
+    /// The singleton `{i}`. Precondition: `i < BITS`.
+    fn bit(i: usize) -> Self;
+
+    /// The set `{0, …, k−1}` (the colex-first `k`-subset). `k ≤ BITS`.
+    fn low_bits(k: usize) -> Self;
+
+    /// Widen to `u64` (lossless for both widths).
+    fn to_u64(self) -> u64;
+
+    /// Narrow from `u64`; debug-asserts the value fits.
+    fn from_u64(v: u64) -> Self;
+
+    /// The mask as a table index. Debug-asserts it fits `usize`.
+    #[inline]
+    fn to_usize(self) -> usize {
+        debug_assert!(self.to_u64() <= usize::MAX as u64);
+        self.to_u64() as usize
+    }
+
+    /// `|S|`.
+    fn count_ones(self) -> u32;
+
+    /// Index of the lowest set bit (`BITS` when empty).
+    fn trailing_zeros(self) -> u32;
+
+    /// `S == ∅`.
+    #[inline]
+    fn is_zero(self) -> bool {
+        self == Self::ZERO
+    }
+
+    /// `i ∈ S`.
+    #[inline]
+    fn contains(self, i: usize) -> bool {
+        !(self & Self::bit(i)).is_zero()
+    }
+
+    /// `S ∪ {i}`.
+    #[inline]
+    fn with(self, i: usize) -> Self {
+        self | Self::bit(i)
+    }
+
+    /// `S \ {i}`.
+    #[inline]
+    fn without(self, i: usize) -> Self {
+        self & !Self::bit(i)
+    }
+
+    /// Clear the lowest set bit (`S & (S − 1)`). Precondition: `S ≠ ∅`.
+    fn drop_lowest(self) -> Self;
+
+    /// `S − 1` as an integer (subset-enumeration step). Precondition:
+    /// `S ≠ ∅`.
+    fn minus_one(self) -> Self;
+
+    /// Gosper's hack: the numerically-next mask with the same popcount,
+    /// or `None` when the increment overflows the word (end of the
+    /// full-width level). Width-safe: uses wrapping arithmetic so the
+    /// final subset of a `p = BITS` level terminates cleanly.
+    fn gosper_next(self) -> Option<Self>;
+}
+
+impl VarMask for u32 {
+    const BITS: usize = 32;
+    const BYTES: usize = 4;
+    const ZERO: u32 = 0;
+
+    #[inline]
+    fn bit(i: usize) -> u32 {
+        debug_assert!(i < 32, "bit index {i} out of u32 range");
+        1u32 << i
+    }
+
+    #[inline]
+    fn low_bits(k: usize) -> u32 {
+        debug_assert!(k <= 32);
+        if k >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << k) - 1
+        }
+    }
+
+    #[inline]
+    fn to_u64(self) -> u64 {
+        self as u64
+    }
+
+    #[inline]
+    fn from_u64(v: u64) -> u32 {
+        debug_assert!(v <= u32::MAX as u64, "mask {v:#x} does not fit u32");
+        v as u32
+    }
+
+    #[inline]
+    fn count_ones(self) -> u32 {
+        u32::count_ones(self)
+    }
+
+    #[inline]
+    fn trailing_zeros(self) -> u32 {
+        u32::trailing_zeros(self)
+    }
+
+    #[inline]
+    fn drop_lowest(self) -> u32 {
+        debug_assert!(self != 0);
+        self & (self - 1)
+    }
+
+    #[inline]
+    fn minus_one(self) -> u32 {
+        debug_assert!(self != 0);
+        self - 1
+    }
+
+    #[inline]
+    fn gosper_next(self) -> Option<u32> {
+        if self == 0 {
+            return None; // ∅ is the only 0-bit subset
+        }
+        let c = self & self.wrapping_neg();
+        let r = self.wrapping_add(c);
+        if r == 0 {
+            None // increment overflows the word: level exhausted
+        } else {
+            Some((((r ^ self) >> 2) / c) | r)
+        }
+    }
+}
+
+impl VarMask for u64 {
+    const BITS: usize = 64;
+    const BYTES: usize = 8;
+    const ZERO: u64 = 0;
+
+    #[inline]
+    fn bit(i: usize) -> u64 {
+        debug_assert!(i < 64, "bit index {i} out of u64 range");
+        1u64 << i
+    }
+
+    #[inline]
+    fn low_bits(k: usize) -> u64 {
+        debug_assert!(k <= 64);
+        if k >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << k) - 1
+        }
+    }
+
+    #[inline]
+    fn to_u64(self) -> u64 {
+        self
+    }
+
+    #[inline]
+    fn from_u64(v: u64) -> u64 {
+        v
+    }
+
+    #[inline]
+    fn count_ones(self) -> u32 {
+        u64::count_ones(self)
+    }
+
+    #[inline]
+    fn trailing_zeros(self) -> u32 {
+        u64::trailing_zeros(self)
+    }
+
+    #[inline]
+    fn drop_lowest(self) -> u64 {
+        debug_assert!(self != 0);
+        self & (self - 1)
+    }
+
+    #[inline]
+    fn minus_one(self) -> u64 {
+        debug_assert!(self != 0);
+        self - 1
+    }
+
+    #[inline]
+    fn gosper_next(self) -> Option<u64> {
+        if self == 0 {
+            return None;
+        }
+        let c = self & self.wrapping_neg();
+        let r = self.wrapping_add(c);
+        if r == 0 {
+            None
+        } else {
+            Some((((r ^ self) >> 2) / c) | r)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn singleton_roundtrip<M: VarMask>() {
+        for i in 0..M::BITS {
+            let m = M::bit(i);
+            assert_eq!(m.count_ones(), 1);
+            assert_eq!(m.trailing_zeros() as usize, i);
+            assert!(m.contains(i));
+            assert!(m.without(i).is_zero());
+            assert_eq!(M::ZERO.with(i), m);
+        }
+    }
+
+    #[test]
+    fn singletons_behave_for_both_widths() {
+        singleton_roundtrip::<u32>();
+        singleton_roundtrip::<u64>();
+    }
+
+    fn low_bits_edges<M: VarMask>() {
+        assert!(M::low_bits(0).is_zero());
+        assert_eq!(M::low_bits(M::BITS).count_ones() as usize, M::BITS);
+        assert_eq!(M::low_bits(3).count_ones(), 3);
+        assert_eq!(M::low_bits(3).to_u64(), 0b111);
+    }
+
+    #[test]
+    fn low_bits_handles_full_width() {
+        low_bits_edges::<u32>();
+        low_bits_edges::<u64>();
+    }
+
+    fn gosper_terminates_at_word_top<M: VarMask>() {
+        // The numerically-largest k-subset of the full word has no
+        // same-popcount successor; wrapping arithmetic must return None
+        // rather than overflow.
+        for k in [1usize, 2, 3, M::BITS - 1, M::BITS] {
+            let top = M::low_bits(k).to_u64() << (M::BITS - k);
+            let top = M::from_u64(if k == M::BITS {
+                M::low_bits(M::BITS).to_u64()
+            } else {
+                top
+            });
+            assert_eq!(top.gosper_next(), None, "k={k}");
+        }
+        assert_eq!(M::ZERO.gosper_next(), None);
+    }
+
+    #[test]
+    fn gosper_is_width_safe() {
+        gosper_terminates_at_word_top::<u32>();
+        gosper_terminates_at_word_top::<u64>();
+    }
+
+    #[test]
+    fn gosper_visits_all_k_subsets_in_order() {
+        // 3-subsets of an 8-element ground set, both widths, same orbit.
+        fn orbit<M: VarMask>() -> Vec<u64> {
+            let mut out = Vec::new();
+            let mut cur = Some(M::low_bits(3));
+            while let Some(m) = cur {
+                if m.to_u64() >= 1 << 8 {
+                    break;
+                }
+                out.push(m.to_u64());
+                cur = m.gosper_next();
+            }
+            out
+        }
+        let narrow = orbit::<u32>();
+        let wide = orbit::<u64>();
+        assert_eq!(narrow.len(), 56); // C(8,3)
+        assert_eq!(narrow, wide, "orbits agree across widths");
+        assert!(narrow.windows(2).all(|w| w[0] < w[1]), "numeric order");
+    }
+
+    #[test]
+    fn u64_from_u64_is_identity_and_u32_narrows() {
+        assert_eq!(u64::from_u64(u64::MAX), u64::MAX);
+        assert_eq!(u32::from_u64(0xFFFF_FFFF), u32::MAX);
+        assert_eq!(0xF0u32.to_u64(), 0xF0u64);
+    }
+}

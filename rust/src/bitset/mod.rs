@@ -1,160 +1,206 @@
-//! Subset combinatorics over variable masks.
+//! Subset combinatorics over variable masks, generic over mask width.
 //!
-//! Variable subsets `S ⊆ {0,…,p−1}` are `u32` bitmasks (`p ≤ 30`,
-//! [`crate::MAX_VARS`]). The level-by-level DP needs:
+//! Variable subsets `S ⊆ {0,…,p−1}` are [`VarMask`] bitmasks — `u32` on
+//! the narrow path (`p ≤ 32` representable, `p ≤ `[`crate::MAX_VARS`]` `
+//! for the exact DP) or `u64` on the wide path (`p ≤ 64`, exact DP capped
+//! at [`crate::MAX_VARS_WIDE`]). Width is chosen once at the top of a run;
+//! every iterator and ranking routine here monomorphizes, so the narrow
+//! path compiles to the same code the hardcoded-`u32` implementation did.
 //!
-//! * per-level enumeration of all `C(p,k)` masks (Gosper's hack, colex order),
-//! * **colex ranking**: mask → dense index within its level, so level arrays
-//!   are plain `Vec`s instead of hash maps,
+//! The level-by-level DP needs:
+//!
+//! * per-level enumeration of all `C(p,k)` masks (Gosper's hack, colex
+//!   order, via [`VarMask::gosper_next`]),
+//! * **colex ranking**: mask → dense index within its level, so level
+//!   arrays are plain `Vec`s instead of hash maps,
 //! * binomial tables shared by ranking and the paper's Appendix-A memory
 //!   model (Fig. 7).
 
 mod binom;
+mod mask;
 mod rank;
 
 pub use binom::BinomTable;
+pub use mask::VarMask;
 pub use rank::{colex_rank, colex_unrank, DropRanks};
+
+/// Why a [`LevelIter`] could not be constructed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LevelIterError {
+    /// `p` exceeds the mask word width.
+    WidthExceeded { p: usize, width: usize },
+    /// `k > p`.
+    LevelTooDeep { k: usize, p: usize },
+}
+
+impl std::fmt::Display for LevelIterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            LevelIterError::WidthExceeded { p, width } => write!(
+                f,
+                "p={p} exceeds the {width}-bit mask width. Use the wide \
+                 (u64) mask path for 32 < p ≤ 64 — the CLI dispatches \
+                 automatically, library callers instantiate \
+                 LevelIter::<u64>/LeveledSolver::<u64>. The exact DP is \
+                 additionally capped at p ≤ {narrow} (u32, MAX_VARS) and \
+                 p ≤ {wide} (u64, MAX_VARS_WIDE; pair with --spill-dir \
+                 near the top); approximate searches go to p ≤ {net}.",
+                narrow = crate::MAX_VARS,
+                wide = crate::MAX_VARS_WIDE,
+                net = crate::MAX_NET_VARS,
+            ),
+            LevelIterError::LevelTooDeep { k, p } => {
+                write!(f, "level k={k} exceeds the ground-set size p={p}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LevelIterError {}
 
 /// Iterator over all subsets of `{0..p}` with exactly `k` bits, in
 /// colexicographic (= numeric) order, via Gosper's hack.
 #[derive(Clone, Debug)]
-pub struct LevelIter {
-    next: Option<u32>,
-    limit: u32, // first mask past the level, i.e. 1 << p
+pub struct LevelIter<M: VarMask = u32> {
+    next: Option<M>,
+    /// First mask past the level (`2^p`), or `None` when `p == M::BITS`
+    /// (no representable limit; Gosper's overflow check terminates).
+    limit: Option<M>,
 }
 
-impl LevelIter {
-    /// All `k`-subsets of a `p`-element ground set.
-    pub fn new(p: usize, k: usize) -> LevelIter {
-        assert!(p <= crate::MAX_VARS, "p={p} exceeds MAX_VARS");
-        assert!(k <= p, "k={k} > p={p}");
-        let next = if k == 0 {
-            Some(0)
-        } else {
-            Some((1u32 << k) - 1)
-        };
-        LevelIter {
-            next,
-            limit: 1u32 << p,
+impl<M: VarMask> LevelIter<M> {
+    /// All `k`-subsets of a `p`-element ground set, or a
+    /// [`LevelIterError`] naming the width limits when `p` does not fit.
+    pub fn try_new(p: usize, k: usize) -> Result<LevelIter<M>, LevelIterError> {
+        if p > M::BITS {
+            return Err(LevelIterError::WidthExceeded { p, width: M::BITS });
+        }
+        if k > p {
+            return Err(LevelIterError::LevelTooDeep { k, p });
+        }
+        Ok(LevelIter {
+            next: Some(M::low_bits(k)),
+            limit: Self::limit_for(p),
+        })
+    }
+
+    /// Panicking form of [`LevelIter::try_new`].
+    ///
+    /// # Panics
+    /// With the [`LevelIterError`] message (which names the per-width
+    /// variable limits and the wide-mask escape hatch) when `p` exceeds
+    /// the mask width or `k > p`.
+    pub fn new(p: usize, k: usize) -> LevelIter<M> {
+        match Self::try_new(p, k) {
+            Ok(it) => it,
+            Err(e) => panic!("LevelIter::new: {e}"),
         }
     }
 
     /// Resume enumeration at an arbitrary mask of the level (used by the
     /// parallel solver to start a worker mid-level; combine with
     /// [`colex_unrank`] to jump to a rank).
-    pub fn resume(p: usize, first: u32) -> LevelIter {
-        assert!(p <= crate::MAX_VARS);
+    pub fn resume(p: usize, first: M) -> LevelIter<M> {
+        assert!(
+            p <= M::BITS,
+            "LevelIter::resume: {}",
+            LevelIterError::WidthExceeded { p, width: M::BITS }
+        );
         LevelIter {
             next: Some(first),
-            limit: 1u32 << p,
+            limit: Self::limit_for(p),
+        }
+    }
+
+    #[inline]
+    fn limit_for(p: usize) -> Option<M> {
+        if p == M::BITS {
+            None
+        } else {
+            Some(M::bit(p))
         }
     }
 }
 
-impl Iterator for LevelIter {
-    type Item = u32;
+impl<M: VarMask> Iterator for LevelIter<M> {
+    type Item = M;
 
-    fn next(&mut self) -> Option<u32> {
+    fn next(&mut self) -> Option<M> {
         let cur = self.next?;
-        if cur >= self.limit {
-            self.next = None;
-            return None;
-        }
-        // Gosper's hack: next integer with the same popcount.
-        self.next = if cur == 0 {
-            None // the empty set is the only 0-bit subset
-        } else {
-            let c = cur & cur.wrapping_neg();
-            let r = cur + c;
-            if r == 0 {
-                None // would overflow past u32: no further subsets
-            } else {
-                Some((((r ^ cur) >> 2) / c) | r)
+        if let Some(limit) = self.limit {
+            if cur >= limit {
+                self.next = None;
+                return None;
             }
-        };
+        }
+        self.next = cur.gosper_next();
         Some(cur)
     }
 }
 
 /// The bit positions of `mask`, ascending. `O(popcount)` with
-/// trailing-zero extraction.
+/// trailing-zero extraction. Works for either mask width.
 #[inline]
-pub fn bits_of(mask: u32) -> BitsIter {
+pub fn bits_of<M: VarMask>(mask: M) -> BitsIter<M> {
     BitsIter { rest: mask }
+}
+
+/// The bit positions of a `u64` mask, ascending (wide graphs:
+/// [`crate::bn::Dag`]). Alias of [`bits_of`] kept for call-site brevity.
+#[inline]
+pub fn bits_of64(mask: u64) -> BitsIter<u64> {
+    bits_of(mask)
 }
 
 /// Iterator companion of [`bits_of`].
 #[derive(Clone, Copy, Debug)]
-pub struct BitsIter {
-    rest: u32,
+pub struct BitsIter<M: VarMask> {
+    rest: M,
 }
 
-impl Iterator for BitsIter {
+impl<M: VarMask> Iterator for BitsIter<M> {
     type Item = usize;
 
     #[inline]
     fn next(&mut self) -> Option<usize> {
-        if self.rest == 0 {
+        if self.rest.is_zero() {
             return None;
         }
         let bit = self.rest.trailing_zeros() as usize;
-        self.rest &= self.rest - 1;
+        self.rest = self.rest.drop_lowest();
         Some(bit)
     }
 }
 
-impl ExactSizeIterator for BitsIter {
+impl<M: VarMask> ExactSizeIterator for BitsIter<M> {
     fn len(&self) -> usize {
         self.rest.count_ones() as usize
-    }
-}
-
-/// The bit positions of a `u64` mask, ascending (wide graphs: [`crate::bn::Dag`]).
-#[inline]
-pub fn bits_of64(mask: u64) -> Bits64Iter {
-    Bits64Iter { rest: mask }
-}
-
-/// Iterator companion of [`bits_of64`].
-#[derive(Clone, Copy, Debug)]
-pub struct Bits64Iter {
-    rest: u64,
-}
-
-impl Iterator for Bits64Iter {
-    type Item = usize;
-
-    #[inline]
-    fn next(&mut self) -> Option<usize> {
-        if self.rest == 0 {
-            return None;
-        }
-        let bit = self.rest.trailing_zeros() as usize;
-        self.rest &= self.rest - 1;
-        Some(bit)
     }
 }
 
 /// Position of set-bit `var` among the set bits of `mask` (0-based).
 /// Precondition: `mask` contains `var`.
 #[inline]
-pub fn bit_index(mask: u32, var: usize) -> usize {
-    debug_assert!(mask & (1 << var) != 0, "bit_index: var {var} not in mask {mask:#b}");
-    (mask & ((1u32 << var) - 1)).count_ones() as usize
+pub fn bit_index<M: VarMask>(mask: M, var: usize) -> usize {
+    debug_assert!(
+        mask.contains(var),
+        "bit_index: var {var} not in mask {mask:#b}"
+    );
+    (mask & M::low_bits(var)).count_ones() as usize
 }
 
 /// Iterate all subsets of `mask` (including `mask` itself and the empty
 /// set), in descending numeric order of the subset bits. Standard
 /// `sub = (sub - 1) & mask` trick.
 #[derive(Clone, Debug)]
-pub struct SubsetsIter {
-    mask: u32,
-    sub: u32,
+pub struct SubsetsIter<M: VarMask> {
+    mask: M,
+    sub: M,
     done: bool,
 }
 
 /// All subsets of `mask` (2^|mask| of them).
-pub fn subsets_of(mask: u32) -> SubsetsIter {
+pub fn subsets_of<M: VarMask>(mask: M) -> SubsetsIter<M> {
     SubsetsIter {
         mask,
         sub: mask,
@@ -162,26 +208,26 @@ pub fn subsets_of(mask: u32) -> SubsetsIter {
     }
 }
 
-impl Iterator for SubsetsIter {
-    type Item = u32;
+impl<M: VarMask> Iterator for SubsetsIter<M> {
+    type Item = M;
 
     #[inline]
-    fn next(&mut self) -> Option<u32> {
+    fn next(&mut self) -> Option<M> {
         if self.done {
             return None;
         }
         let cur = self.sub;
-        if cur == 0 {
+        if cur.is_zero() {
             self.done = true;
         } else {
-            self.sub = (cur - 1) & self.mask;
+            self.sub = cur.minus_one() & self.mask;
         }
         Some(cur)
     }
 }
 
 /// Render a mask as `{X0, X3, X7}` using optional names.
-pub fn format_mask(mask: u32, names: Option<&[String]>) -> String {
+pub fn format_mask<M: VarMask>(mask: M, names: Option<&[String]>) -> String {
     let items: Vec<String> = bits_of(mask)
         .map(|b| match names {
             Some(ns) if b < ns.len() => ns[b].clone(),
@@ -201,8 +247,10 @@ mod tests {
         let binom = BinomTable::new(12);
         for p in 0..=12usize {
             for k in 0..=p {
-                let count = LevelIter::new(p, k).count() as u64;
+                let count = LevelIter::<u32>::new(p, k).count() as u64;
                 assert_eq!(count, binom.c(p, k), "C({p},{k})");
+                let wide = LevelIter::<u64>::new(p, k).count() as u64;
+                assert_eq!(wide, binom.c(p, k), "C({p},{k}) wide");
             }
         }
     }
@@ -210,7 +258,7 @@ mod tests {
     #[test]
     fn level_iter_is_sorted_and_correct_popcount() {
         let mut prev = None;
-        for mask in LevelIter::new(10, 4) {
+        for mask in LevelIter::<u32>::new(10, 4) {
             assert_eq!(mask.count_ones(), 4);
             if let Some(p) = prev {
                 assert!(mask > p, "colex order is numeric order");
@@ -233,41 +281,85 @@ mod tests {
 
     #[test]
     fn level_iter_handles_full_width() {
-        // p = MAX_VARS must not overflow Gosper's increment.
-        let p = crate::MAX_VARS;
-        let last = LevelIter::new(p, p).last().unwrap();
-        assert_eq!(last, (1u32 << p) - 1);
-        assert_eq!(LevelIter::new(p, 1).count(), p);
+        // p = 32 must not overflow the u32 Gosper increment or the limit.
+        let last = LevelIter::<u32>::new(32, 32).last().unwrap();
+        assert_eq!(last, u32::MAX);
+        assert_eq!(LevelIter::<u32>::new(32, 1).count(), 32);
+        assert_eq!(LevelIter::<u32>::new(32, 31).count(), 32);
+        // and the wide path at its own full width
+        assert_eq!(LevelIter::<u64>::new(64, 1).count(), 64);
+        assert_eq!(LevelIter::<u64>::new(64, 64).last().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn try_new_reports_width_and_level_errors() {
+        let narrow = LevelIter::<u32>::try_new(33, 2);
+        assert_eq!(
+            narrow.clone().unwrap_err(),
+            LevelIterError::WidthExceeded { p: 33, width: 32 }
+        );
+        let msg = narrow.unwrap_err().to_string();
+        assert!(msg.contains("u64"), "actionable message names the wide path: {msg}");
+        assert!(msg.contains("spill"), "message mentions spill: {msg}");
+        assert!(LevelIter::<u64>::try_new(33, 2).is_ok());
+        assert_eq!(
+            LevelIter::<u64>::try_new(65, 0).unwrap_err(),
+            LevelIterError::WidthExceeded { p: 65, width: 64 }
+        );
+        assert_eq!(
+            LevelIter::<u32>::try_new(5, 6).unwrap_err(),
+            LevelIterError::LevelTooDeep { k: 6, p: 5 }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the 32-bit mask width")]
+    fn new_panics_with_actionable_message() {
+        let _ = LevelIter::<u32>::new(40, 3);
+    }
+
+    #[test]
+    fn narrow_and_wide_levels_agree() {
+        for k in 0..=9usize {
+            let narrow: Vec<u64> = LevelIter::<u32>::new(9, k).map(|m| m as u64).collect();
+            let wide: Vec<u64> = LevelIter::<u64>::new(9, k).collect();
+            assert_eq!(narrow, wide, "k={k}");
+        }
     }
 
     #[test]
     fn bits_of_extracts_positions() {
-        let bits: Vec<usize> = bits_of(0b1010_0110).collect();
+        let bits: Vec<usize> = bits_of(0b1010_0110u32).collect();
         assert_eq!(bits, vec![1, 2, 5, 7]);
-        assert_eq!(bits_of(0).count(), 0);
+        assert_eq!(bits_of(0u32).count(), 0);
+        let wide: Vec<usize> = bits_of(1u64 << 63 | 1).collect();
+        assert_eq!(wide, vec![0, 63]);
     }
 
     #[test]
     fn bit_index_counts_lower_bits() {
-        let mask = 0b1010_0110;
+        let mask = 0b1010_0110u32;
         assert_eq!(bit_index(mask, 1), 0);
         assert_eq!(bit_index(mask, 2), 1);
         assert_eq!(bit_index(mask, 5), 2);
         assert_eq!(bit_index(mask, 7), 3);
+        assert_eq!(bit_index(1u64 << 63 | 0b10, 63), 1);
     }
 
     #[test]
     fn subsets_of_enumerates_powerset() {
-        let subs: Vec<u32> = subsets_of(0b101).collect();
+        let subs: Vec<u32> = subsets_of(0b101u32).collect();
         assert_eq!(subs, vec![0b101, 0b100, 0b001, 0b000]);
-        assert_eq!(subsets_of(0).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(subsets_of(0u32).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(subsets_of(0b11u64).count(), 4);
     }
 
     #[test]
     fn format_mask_with_and_without_names() {
-        assert_eq!(format_mask(0b101, None), "{X0, X2}");
+        assert_eq!(format_mask(0b101u32, None), "{X0, X2}");
         let names: Vec<String> = vec!["A".into(), "B".into(), "C".into()];
-        assert_eq!(format_mask(0b110, Some(&names)), "{B, C}");
+        assert_eq!(format_mask(0b110u32, Some(&names)), "{B, C}");
+        assert_eq!(format_mask(1u64 << 40, None), "{X40}");
     }
 
     #[test]
@@ -276,7 +368,7 @@ mod tests {
             let p = 1 + g.rng.below_usize(10);
             let mut seen = vec![false; 1 << p];
             for k in 0..=p {
-                for mask in LevelIter::new(p, k) {
+                for mask in LevelIter::<u32>::new(p, k) {
                     let m = mask as usize;
                     g.assert(!seen[m], "each mask appears in exactly one level");
                     seen[m] = true;

@@ -1,4 +1,4 @@
-//! Colexicographic ranking of fixed-size subsets.
+//! Colexicographic ranking of fixed-size subsets (width-generic).
 //!
 //! For the level arrays the DP needs a bijection between the `C(p,k)` masks
 //! of popcount `k` and `0..C(p,k)`. Colex rank does this and respects the
@@ -9,13 +9,17 @@
 //! The transition for a level-(k+1) subset needs the ranks of all `k+1`
 //! *drop-one* subsets `S \ b_j`; [`DropRanks`] computes them all in `O(k)`
 //! via prefix/suffix sums instead of `O(k²)` repeated ranking.
+//!
+//! Everything here is generic over [`VarMask`] and monomorphizes per
+//! width; ranks themselves are `u64` regardless of mask width (a level of
+//! a 64-variable lattice has < 2^64 subsets).
 
 use super::binom::BinomTable;
-use super::bits_of;
+use super::{bits_of, VarMask};
 
 /// Rank of `mask` among all masks of equal popcount, colex order.
 #[inline]
-pub fn colex_rank(binom: &BinomTable, mask: u32) -> u64 {
+pub fn colex_rank<M: VarMask>(binom: &BinomTable, mask: M) -> u64 {
     let mut rank = 0u64;
     for (i, b) in bits_of(mask).enumerate() {
         rank += binom.c(b, i + 1);
@@ -25,8 +29,9 @@ pub fn colex_rank(binom: &BinomTable, mask: u32) -> u64 {
 
 /// Inverse of [`colex_rank`]: the `rank`-th popcount-`k` mask over `p`
 /// variables. Greedy from the largest element down.
-pub fn colex_unrank(binom: &BinomTable, p: usize, k: usize, mut rank: u64) -> u32 {
-    let mut mask = 0u32;
+pub fn colex_unrank<M: VarMask>(binom: &BinomTable, p: usize, k: usize, mut rank: u64) -> M {
+    debug_assert!(p <= M::BITS, "colex_unrank: p={p} beyond {}-bit masks", M::BITS);
+    let mut mask = M::ZERO;
     let mut kk = k;
     // For each position from high to low, take bit b if C(b, kk) <= rank.
     let mut b = p;
@@ -35,7 +40,7 @@ pub fn colex_unrank(binom: &BinomTable, p: usize, k: usize, mut rank: u64) -> u3
         let c = binom.c(b, kk);
         if c <= rank {
             rank -= c;
-            mask |= 1 << b;
+            mask = mask.with(b);
             kk -= 1;
         }
     }
@@ -65,7 +70,12 @@ impl DropRanks {
     /// Fill `out[j] = colex_rank(S \ b_j)` for each ascending set bit `b_j`
     /// of `mask`. Also returns `colex_rank(mask)` itself (free by-product:
     /// `prefix[size]`).
-    pub fn compute(&mut self, binom: &BinomTable, mask: u32, out: &mut Vec<u64>) -> u64 {
+    pub fn compute<M: VarMask>(
+        &mut self,
+        binom: &BinomTable,
+        mask: M,
+        out: &mut Vec<u64>,
+    ) -> u64 {
         let size = mask.count_ones() as usize;
         debug_assert!(size < self.prefix.len(), "DropRanks scratch too small");
         out.clear();
@@ -76,7 +86,7 @@ impl DropRanks {
             self.prefix[i + 1] = self.prefix[i] + binom.c(b, i + 1);
         }
         // backward pass for suffix: Σ_{i>j} C(b_i, i)
-        let bits: BitsCollect = BitsCollect::new(mask);
+        let bits = BitsCollect::new(mask);
         for i in (0..size).rev() {
             let b = bits.get(i);
             self.suffix[i] = self.suffix[i + 1] + binom.c(b, i);
@@ -89,18 +99,17 @@ impl DropRanks {
 }
 
 /// Small fixed helper: random access to the ascending bits of a mask
-/// without allocating (recomputes via select; masks have ≤ 30 bits so a
-/// tiny loop is fine — but we cache into a stack array for the reverse
-/// pass above).
+/// without allocating (masks have ≤ 64 bits so a stack array covers both
+/// widths; used for the reverse pass above).
 struct BitsCollect {
-    bits: [u8; 32],
+    bits: [u8; 64],
     len: usize,
 }
 
 impl BitsCollect {
     #[inline]
-    fn new(mask: u32) -> BitsCollect {
-        let mut bits = [0u8; 32];
+    fn new<M: VarMask>(mask: M) -> BitsCollect {
+        let mut bits = [0u8; 64];
         let mut len = 0;
         for b in bits_of(mask) {
             bits[len] = b as u8;
@@ -127,7 +136,7 @@ mod tests {
         let binom = BinomTable::new(12);
         for p in 1..=12usize {
             for k in 0..=p {
-                for (expected, mask) in LevelIter::new(p, k).enumerate() {
+                for (expected, mask) in LevelIter::<u32>::new(p, k).enumerate() {
                     assert_eq!(
                         colex_rank(&binom, mask),
                         expected as u64,
@@ -143,28 +152,49 @@ mod tests {
         let binom = BinomTable::new(10);
         for p in 1..=10usize {
             for k in 0..=p {
-                for mask in LevelIter::new(p, k) {
+                for mask in LevelIter::<u32>::new(p, k) {
                     let r = colex_rank(&binom, mask);
-                    assert_eq!(colex_unrank(&binom, p, k, r), mask);
+                    assert_eq!(colex_unrank::<u32>(&binom, p, k, r), mask);
                 }
             }
         }
     }
 
-    #[test]
-    fn prop_rank_unrank_roundtrip_large_p() {
-        Check::new("rank/unrank roundtrip p<=30").cases(300).run(|g| {
-            let binom = BinomTable::new(30);
-            let p = 1 + g.rng.below_usize(30);
+    /// Satellite coverage: rank/unrank roundtrip over BOTH mask widths,
+    /// with random subsets up to the width-appropriate p.
+    fn roundtrip_prop<M: VarMask>(name: &str, max_p: usize) {
+        Check::new(name).cases(300).run(|g| {
+            let binom = BinomTable::new(max_p);
+            let p = 1 + g.rng.below_usize(max_p);
             let k = g.rng.below_usize(p + 1);
             // random k-subset of p
             let mut vars: Vec<usize> = (0..p).collect();
             g.rng.shuffle(&mut vars);
-            let mask = vars[..k].iter().fold(0u32, |m, &v| m | (1 << v));
+            let mask = vars[..k].iter().fold(M::ZERO, |m, &v| m.with(v));
             let r = colex_rank(&binom, mask);
             g.assert(r < binom.c(p, k), "rank within C(p,k)");
-            g.assert_eq(colex_unrank(&binom, p, k, r), mask, "roundtrip");
+            g.assert_eq(colex_unrank::<M>(&binom, p, k, r), mask, "roundtrip");
         });
+    }
+
+    #[test]
+    fn prop_rank_unrank_roundtrip_narrow() {
+        roundtrip_prop::<u32>("rank/unrank roundtrip u32 p<=30", 30);
+    }
+
+    #[test]
+    fn prop_rank_unrank_roundtrip_wide() {
+        // p beyond the u32 wall: 33..62 (BinomTable is u64-exact there)
+        roundtrip_prop::<u64>("rank/unrank roundtrip u64 p<=48", 48);
+    }
+
+    #[test]
+    fn wide_ranks_agree_with_narrow_ranks_below_the_wall() {
+        let binom = BinomTable::new(20);
+        for mask in LevelIter::<u32>::new(20, 6).step_by(97) {
+            let wide = mask as u64;
+            assert_eq!(colex_rank(&binom, mask), colex_rank(&binom, wide));
+        }
     }
 
     #[test]
@@ -173,11 +203,11 @@ mod tests {
         let mut dr = DropRanks::new(17);
         let mut out = Vec::new();
         for p in 2..=16usize {
-            for mask in LevelIter::new(p, 4.min(p)) {
+            for mask in LevelIter::<u32>::new(p, 4.min(p)) {
                 let own = dr.compute(&binom, mask, &mut out);
                 assert_eq!(own, colex_rank(&binom, mask));
                 for (j, b) in bits_of(mask).enumerate() {
-                    let sub = mask & !(1u32 << b);
+                    let sub = mask.without(b);
                     assert_eq!(
                         out[j],
                         colex_rank(&binom, sub),
@@ -188,30 +218,42 @@ mod tests {
         }
     }
 
-    #[test]
-    fn prop_drop_ranks_random_masks() {
-        Check::new("drop ranks O(k) == direct").cases(200).run(|g| {
-            let binom = BinomTable::new(30);
-            let mut dr = DropRanks::new(31);
+    /// Satellite coverage: DropRanks over both widths on random masks.
+    fn drop_ranks_prop<M: VarMask>(name: &str, max_p: usize) {
+        Check::new(name).cases(200).run(|g| {
+            let binom = BinomTable::new(max_p);
+            let mut dr = DropRanks::new(max_p + 1);
             let mut out = Vec::new();
-            let p = 2 + g.rng.below_usize(29);
+            let p = 2 + g.rng.below_usize(max_p - 1);
             let k = 1 + g.rng.below_usize(p);
             let mut vars: Vec<usize> = (0..p).collect();
             g.rng.shuffle(&mut vars);
-            let mask = vars[..k].iter().fold(0u32, |m, &v| m | (1 << v));
+            let mask = vars[..k].iter().fold(M::ZERO, |m, &v| m.with(v));
             dr.compute(&binom, mask, &mut out);
             for (j, b) in bits_of(mask).enumerate() {
-                let sub = mask & !(1u32 << b);
+                let sub = mask.without(b);
                 g.assert_eq(out[j], colex_rank(&binom, sub), "drop rank matches");
             }
         });
     }
 
     #[test]
+    fn prop_drop_ranks_random_masks_narrow() {
+        drop_ranks_prop::<u32>("drop ranks O(k) == direct, u32", 30);
+    }
+
+    #[test]
+    fn prop_drop_ranks_random_masks_wide() {
+        drop_ranks_prop::<u64>("drop ranks O(k) == direct, u64", 48);
+    }
+
+    #[test]
     fn rank_of_empty_and_full() {
         let binom = BinomTable::new(8);
-        assert_eq!(colex_rank(&binom, 0), 0);
-        assert_eq!(colex_rank(&binom, 0b1111_1111), 0);
-        assert_eq!(colex_unrank(&binom, 8, 0, 0), 0);
+        assert_eq!(colex_rank(&binom, 0u32), 0);
+        assert_eq!(colex_rank(&binom, 0b1111_1111u32), 0);
+        assert_eq!(colex_unrank::<u32>(&binom, 8, 0, 0), 0);
+        assert_eq!(colex_rank(&binom, 0u64), 0);
+        assert_eq!(colex_unrank::<u64>(&binom, 8, 8, 0), 0xFF);
     }
 }

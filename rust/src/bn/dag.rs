@@ -1,13 +1,17 @@
-//! Directed acyclic graphs over ≤ 30 variables, stored as parent masks.
+//! Directed acyclic graphs over ≤ [`crate::MAX_NET_VARS`] variables,
+//! stored as parent masks.
 
 use crate::bitset::bits_of64;
 use crate::util::json::Json;
 
 /// A DAG: `parents[x]` is the bitmask of x's parent set.
 ///
-/// Masks are `u64` (up to [`crate::MAX_NET_VARS`] nodes) so generative
-/// networks like ALARM (37 nodes) fit; the DP solvers restrict themselves
-/// to `u32` masks / [`crate::MAX_VARS`] variables.
+/// Masks are `u64` (up to [`crate::MAX_NET_VARS`] = 64 nodes) so
+/// generative networks like ALARM (37 nodes) and wide search instances
+/// fit. The exact DP solvers learn over [`crate::bitset::VarMask`]
+/// subsets (`u32` up to [`crate::MAX_VARS`], `u64` up to
+/// [`crate::MAX_VARS_WIDE`]) and hand back parent sets widened into this
+/// type; the approximate searches operate on it directly.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Dag {
     parents: Vec<u64>,

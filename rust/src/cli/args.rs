@@ -6,6 +6,57 @@
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, HashSet};
 
+/// Mask width a run dispatches to, decided once from the variable count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskWidth {
+    /// `u32` masks — the paper-scale path, `p ≤ `[`crate::MAX_VARS`].
+    Narrow,
+    /// `u64` masks — the spill-assisted wide path,
+    /// `p ≤ `[`crate::MAX_VARS_WIDE`] for exact solvers.
+    Wide,
+}
+
+/// Validate a requested variable count against the per-width limits and
+/// pick the mask width. `exact` distinguishes the exact DP solvers
+/// (capped at [`crate::MAX_VARS_WIDE`]) from the approximate searches
+/// (hillclimb/hybrid, capped at [`crate::MAX_NET_VARS`]). Errors spell
+/// out every limit so a failing `--p` tells the user exactly which knob
+/// to turn. Note the wide exact range is leveled-solver territory: the
+/// all-in-RAM Silander baseline is additionally rejected above
+/// [`crate::MAX_VARS`] by `cmd_learn` (its `p·2^p` tables don't fit).
+pub fn validate_var_count(p: usize, exact: bool) -> Result<MaskWidth> {
+    if p == 0 {
+        bail!("need at least one variable");
+    }
+    if exact {
+        if p <= crate::MAX_VARS {
+            Ok(MaskWidth::Narrow)
+        } else if p <= crate::MAX_VARS_WIDE {
+            Ok(MaskWidth::Wide)
+        } else {
+            bail!(
+                "dataset has {p} variables; exact solvers support at most \
+                 {} (u32 masks) or {} with the wide u64 path — reduce \
+                 --p, or switch to --solver hillclimb/hybrid (up to {} \
+                 variables)",
+                crate::MAX_VARS,
+                crate::MAX_VARS_WIDE,
+                crate::MAX_NET_VARS
+            );
+        }
+    } else if p <= crate::MAX_NET_VARS {
+        // searches always run on the u64 Dag width
+        Ok(MaskWidth::Wide)
+    } else {
+        bail!(
+            "dataset has {p} variables; the approximate searches support \
+             at most {} (one u64 adjacency word per node) — use --p to \
+             restrict",
+            crate::MAX_NET_VARS
+        );
+    }
+}
+
 /// Parsed command-line arguments.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -123,5 +174,32 @@ mod tests {
         let a = Args::parse(["--mode=fast", "--quiet"], &["quiet"]).unwrap();
         assert_eq!(a.raw("mode"), Some("fast"));
         assert!(a.switch("quiet"));
+    }
+
+    #[test]
+    fn var_count_validation_picks_widths_and_reports_limits() {
+        assert_eq!(validate_var_count(10, true).unwrap(), MaskWidth::Narrow);
+        assert_eq!(
+            validate_var_count(crate::MAX_VARS, true).unwrap(),
+            MaskWidth::Narrow
+        );
+        assert_eq!(
+            validate_var_count(crate::MAX_VARS + 1, true).unwrap(),
+            MaskWidth::Wide
+        );
+        assert_eq!(
+            validate_var_count(crate::MAX_VARS_WIDE, true).unwrap(),
+            MaskWidth::Wide
+        );
+        let err = validate_var_count(crate::MAX_VARS_WIDE + 1, true)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(&crate::MAX_VARS.to_string()), "{err}");
+        assert!(err.contains(&crate::MAX_VARS_WIDE.to_string()), "{err}");
+        assert!(err.contains("hillclimb"), "{err}");
+        // approximate searches: wide up to MAX_NET_VARS
+        assert_eq!(validate_var_count(48, false).unwrap(), MaskWidth::Wide);
+        assert!(validate_var_count(crate::MAX_NET_VARS + 1, false).is_err());
+        assert!(validate_var_count(0, true).is_err());
     }
 }

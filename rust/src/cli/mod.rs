@@ -11,7 +11,7 @@
 mod args;
 pub mod exp;
 
-pub use args::Args;
+pub use args::{validate_var_count, Args, MaskWidth};
 
 use crate::bn::repo;
 use crate::data::{read_csv, write_csv, Dataset};
@@ -31,6 +31,9 @@ USAGE:
   bnsl learn  (--data file.csv | --network asia|alarm|sachs [--p P] [--n N])
               [--solver leveled|silander|hillclimb|hybrid] [--score jeffreys|bdeu[:e]|bic|aic]
               [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
+              exact solvers: p <= 30 on u32 masks, p <= 34 on the wide u64
+              path (auto-dispatched; pair with --spill-dir near the top);
+              hillclimb/hybrid: p <= 64
   bnsl sample --network asia|alarm|sachs --n N [--seed S] --out data.csv
   bnsl exp table2     [--pmin 14] [--pmax 18] [--runs 3]  [--n 200] [--threads T]
   bnsl exp stability  [--ps 12,14,16] [--runs 10] [--n 200]
@@ -80,23 +83,52 @@ fn load_data(args: &Args) -> Result<Dataset> {
 
 fn cmd_learn(args: Args) -> Result<()> {
     let data = load_data(&args)?;
-    if data.p() > crate::MAX_VARS {
-        bail!(
-            "dataset has {} variables; exact solvers support ≤ {} (use --p)",
-            data.p(),
-            crate::MAX_VARS
-        );
-    }
     let kind = ScoreKind::parse(args.raw("score").unwrap_or("jeffreys"))
         .ok_or_else(|| anyhow!("bad --score"))?;
     let solver = args.raw("solver").unwrap_or("leveled").to_string();
     let engine_name = args.raw("engine").unwrap_or("native").to_string();
+    // Runtime width dispatch happens exactly once, here: p ≤ MAX_VARS
+    // runs the narrow u32 monomorphization (the seed's exact hot path),
+    // larger exact runs take the wide u64 path, and the searches always
+    // run at the Dag's u64 width. Everything below stays monomorphic.
+    let exact = matches!(solver.as_str(), "leveled" | "silander");
+    let width = validate_var_count(data.p(), exact)?;
     let options = SolveOptions {
         threads: args.get::<usize>("threads", 1)?,
         spill_dir: args.raw("spill-dir").map(PathBuf::from),
         spill_threshold: args.get::<f64>("spill-threshold", 0.5)?,
         batch: args.get::<usize>("batch", 1024)?,
     };
+    if exact && width == MaskWidth::Wide {
+        // Only the leveled solver earns the 31–34 range: its two-level
+        // frontier (plus §5.3 spill) is what keeps wide runs feasible.
+        // The Silander baseline materialises p·2^p·16-byte tables — about
+        // a terabyte at p = 31 — so reject it with a pointer instead of
+        // letting the allocation die.
+        if solver == "silander" {
+            bail!(
+                "--solver silander is all-in-RAM (p·2^p best-parent tables \
+                 ≈ {} at p = {}) and only supports p ≤ {}; use --solver \
+                 leveled (optionally with --spill-dir) for 31–{} variables",
+                crate::util::human_bytes(
+                    (data.p() as u64) * (1u64 << data.p()) * 16
+                ),
+                data.p(),
+                crate::MAX_VARS,
+                crate::MAX_VARS_WIDE
+            );
+        }
+        eprintln!(
+            "wide-mask path: p={} > MAX_VARS={}; using u64 masks{}",
+            data.p(),
+            crate::MAX_VARS,
+            if options.spill_dir.is_none() {
+                " (tip: --spill-dir DIR keeps the near-peak levels on disk)"
+            } else {
+                ""
+            }
+        );
+    }
 
     let (result, heap) = crate::memtrack::measure(|| -> Result<_> {
         Ok(match (solver.as_str(), engine_name.as_str()) {
@@ -152,6 +184,14 @@ fn cmd_learn(args: Args) -> Result<()> {
                 }
             }
             (_, "jax") => {
+                if width == MaskWidth::Wide {
+                    bail!(
+                        "the JAX/PJRT engine is narrow-path only (u32 \
+                         masks, p ≤ {}); use --engine native for p = {}",
+                        crate::MAX_VARS,
+                        data.p()
+                    );
+                }
                 let dir = PathBuf::from(args.raw("artifacts").unwrap_or("artifacts"));
                 let engine = JaxEngine::new(&data, kind, &dir)?;
                 match solver.as_str() {
@@ -162,10 +202,20 @@ fn cmd_learn(args: Args) -> Result<()> {
             }
             (_, "native") => {
                 let engine = NativeEngine::new(&data, kind);
-                match solver.as_str() {
-                    "leveled" => LeveledSolver::with_options(&engine, options).solve(),
-                    "silander" => SilanderSolver::with_options(&engine, options).solve(),
-                    other => bail!("unknown solver '{other}'"),
+                match (solver.as_str(), width) {
+                    ("leveled", MaskWidth::Narrow) => {
+                        LeveledSolver::with_options(&engine, options).solve()
+                    }
+                    ("leveled", MaskWidth::Wide) => {
+                        LeveledSolver::<u64>::with_options_generic(&engine, options).solve()
+                    }
+                    ("silander", MaskWidth::Narrow) => {
+                        SilanderSolver::with_options(&engine, options).solve()
+                    }
+                    ("silander", MaskWidth::Wide) => {
+                        SilanderSolver::<u64>::with_options_generic(&engine, options).solve()
+                    }
+                    (other, _) => bail!("unknown solver '{other}'"),
                 }
             }
             (_, other) => bail!("unknown engine '{other}'"),
@@ -278,7 +328,12 @@ fn cmd_exp(rest: &[String]) -> Result<()> {
 
 fn cmd_info(args: Args) -> Result<()> {
     println!("bnsl {}", env!("CARGO_PKG_VERSION"));
-    println!("max exact-solver variables: {}", crate::MAX_VARS);
+    println!(
+        "max exact-solver variables: {} (u32 masks) / {} (wide u64 masks); searches: {}",
+        crate::MAX_VARS,
+        crate::MAX_VARS_WIDE,
+        crate::MAX_NET_VARS
+    );
     let dir = PathBuf::from(args.raw("artifacts").unwrap_or("artifacts"));
     match crate::runtime::Runtime::cpu(&dir) {
         Ok(rt) => {
@@ -294,7 +349,7 @@ fn cmd_info(args: Args) -> Result<()> {
         }
         Err(e) => println!("PJRT unavailable: {e}"),
     }
-    for p in [16, 20, 24, 26, 28, 29] {
+    for p in [16, 20, 24, 26, 28, 29, 33] {
         let plan = crate::coordinator::plan::memory_plan(p, 0.0);
         println!(
             "p={p:2}: proposed peak {}, baseline {}",

@@ -22,23 +22,32 @@ pub struct LevelPlan {
 #[derive(Clone, Debug)]
 pub struct MemoryPlan {
     pub p: usize,
+    /// Bytes per stored parent mask: 4 while `p` fits the narrow `u32`
+    /// path ([`crate::MAX_VARS`]), 8 beyond it (the wide `u64` path).
+    /// Every byte figure below scales with this.
+    pub mask_bytes: u64,
     pub levels: Vec<LevelPlan>,
-    /// peak of two adjacent frontiers + the 5·2^p sink tables
+    /// peak of two adjacent frontiers + the `(1+mask)·2^p` sink tables
     pub peak_bytes: u64,
     /// the level index at the peak (paper: 15 for p = 29)
     pub peak_level: usize,
-    /// baseline (Silander all-in-RAM): `2^p·8 + p·2^p·12 + 2^p·13`
+    /// baseline (Silander all-in-RAM):
+    /// `2^p·8 + p·2^p·(8+mask) + 2^p·(9+mask)`
     pub baseline_bytes: u64,
 }
 
-/// Build the plan (pure arithmetic; `p ≤ 64` supported analytically).
+/// Build the plan (pure arithmetic; `p ≤ 62` supported analytically —
+/// beyond the exact-DP caps, for feasibility studies). The record width
+/// follows the width the solver would dispatch to: `u32` masks up to
+/// [`crate::MAX_VARS`], `u64` masks above.
 pub fn memory_plan(p: usize, spill_threshold: f64) -> MemoryPlan {
     assert!((1..=62).contains(&p), "analytic planner supports p ≤ 62");
+    let mask_bytes: u64 = if p <= crate::MAX_VARS { 4 } else { 8 };
     let binom = BinomTable::new(p);
     let weights = binom.frontier_weights(p);
     let max_weight = *weights.iter().max().unwrap();
     let frontier =
-        |k: usize| -> u64 { binom.c(p, k) * (16 + 12 * k as u64) };
+        |k: usize| -> u64 { binom.c(p, k) * (16 + (8 + mask_bytes) * k as u64) };
     let levels: Vec<LevelPlan> = (0..=p)
         .map(|k| LevelPlan {
             k,
@@ -48,14 +57,17 @@ pub fn memory_plan(p: usize, spill_threshold: f64) -> MemoryPlan {
                 && weights[k] as f64 >= spill_threshold * max_weight as f64,
         })
         .collect();
-    let sink_bytes = 5u64 << p;
+    let sink_bytes = (1 + mask_bytes) << p;
     let (peak_level, peak_bytes) = (0..p)
         .map(|k| (k + 1, frontier(k) + frontier(k + 1) + sink_bytes))
         .max_by_key(|&(_, b)| b)
         .unwrap();
-    let baseline_bytes = (8u64 << p) + 12 * (p as u64) * (1u64 << p) + (13u64 << p);
+    let baseline_bytes = (8u64 << p)
+        + (8 + mask_bytes) * (p as u64) * (1u64 << p)
+        + ((9 + mask_bytes) << p);
     MemoryPlan {
         p,
+        mask_bytes,
         levels,
         peak_bytes,
         peak_level,
@@ -65,7 +77,9 @@ pub fn memory_plan(p: usize, spill_threshold: f64) -> MemoryPlan {
 
 impl MemoryPlan {
     /// Largest `p` whose planned peak fits a byte budget (paper §5.1:
-    /// 16 GB ⇒ 26 for the baseline vs 28 for the proposed method).
+    /// 16 GB ⇒ 26 for the baseline vs 28 for the proposed method). The
+    /// scan crosses the u32→u64 record-width boundary at
+    /// `p = MAX_VARS + 1`, so wide-path feasibility is priced honestly.
     pub fn max_p_within(budget_bytes: u64, baseline: bool) -> usize {
         let mut best = 0;
         for p in 1..=40 {
@@ -95,6 +109,7 @@ impl MemoryPlan {
         }
         Json::obj()
             .set("p", self.p)
+            .set("mask_bytes", self.mask_bytes)
             .set("peak_bytes", self.peak_bytes)
             .set("peak_level", self.peak_level)
             .set("baseline_bytes", self.baseline_bytes)
@@ -175,6 +190,25 @@ mod tests {
             "proposed max p = {proposed}"
         );
         assert!(proposed >= baseline + 2);
+    }
+
+    #[test]
+    fn wide_plans_use_eight_byte_masks() {
+        let narrow = memory_plan(30, 0.0);
+        assert_eq!(narrow.mask_bytes, 4);
+        let wide = memory_plan(31, 0.0);
+        assert_eq!(wide.mask_bytes, 8);
+        // frontier records are 16 bytes/member on the wide path
+        let k = 10;
+        assert_eq!(
+            wide.levels[k].frontier_bytes,
+            wide.levels[k].combinations * (16 + 16 * k as u64)
+        );
+        // p=33 (the spill-assisted target): plan is finite and the sink
+        // tables price in 9-byte entries
+        let p33 = memory_plan(33, 0.5);
+        assert!(p33.levels.iter().any(|l| l.is_peak));
+        assert!(p33.peak_bytes > (9u64 << 33));
     }
 
     #[test]

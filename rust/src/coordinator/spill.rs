@@ -8,26 +8,49 @@
 //! stay in RAM, mirroring the paper's "store the optimal parent set
 //! vector of one level on disk".
 //!
+//! # On-disk format (v1)
+//!
+//! A 16-byte header — magic `b"BNSLSPIL"`, format-version byte, mask-width
+//! byte (4 = `u32`, 8 = `u64`), level `k`, 5 reserved bytes — followed by
+//! fixed-size records: little-endian `f64` best score + the argmax parent
+//! mask at the tagged width. Records are therefore 12 bytes on the narrow
+//! path (unchanged from the untagged seed layout) and 16 bytes on the
+//! wide path; a reader always validates magic/version/width before
+//! trusting offsets, so mixing widths across files is caught immediately.
+//!
 //! Colex locality makes the cache effective: the drop-one ranks of
 //! consecutively enumerated masks are themselves nearly consecutive, so
 //! most reads hit a recently loaded window.
 
-use anyhow::{Context, Result};
+use crate::bitset::VarMask;
+use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom, Write};
+use std::marker::PhantomData;
 use std::path::Path;
 
-/// Entries per cache window (12 bytes each → 48 KiB windows).
+/// Entries per cache window (48 KiB windows narrow / 64 KiB wide).
 const WINDOW: usize = 4096;
-/// Direct-mapped cache slots (64 windows → 3 MiB resident).
+/// Direct-mapped cache slots (64 windows → 3–4 MiB resident).
 const SLOTS: usize = 64;
 
-/// Record layout on disk: little-endian f64 score + u32 mask, 12 bytes.
-const RECORD: usize = 12;
+/// Spill-file magic.
+const MAGIC: &[u8; 8] = b"BNSLSPIL";
+/// Current format version.
+const VERSION: u8 = 1;
+/// Header bytes: magic(8) + version(1) + mask width(1) + k(1) + reserved(5).
+const HEADER: usize = 16;
 
-/// A frontier level whose `bps`/`bpm` arrays live on disk.
-pub struct SpilledLevel {
+/// Bytes per record at width `M`: little-endian f64 score + mask.
+#[inline]
+const fn record_bytes<M: VarMask>() -> usize {
+    8 + M::BYTES
+}
+
+/// A frontier level whose `bps`/`bpm` arrays live on disk (masks of
+/// width `M`).
+pub struct SpilledLevel<M: VarMask> {
     pub k: usize,
     /// `log Q` per subset (RAM)
     pub q: Vec<f64>,
@@ -39,6 +62,7 @@ pub struct SpilledLevel {
     bytes_on_disk: u64,
     hits: std::cell::Cell<u64>,
     misses: std::cell::Cell<u64>,
+    _width: PhantomData<M>,
 }
 
 struct WindowCache {
@@ -52,19 +76,21 @@ struct WindowCache {
 /// records as they are computed, so the full `bps`/`bpm` arrays of a
 /// spilled level never exist in RAM at once (the paper's §5.3 point —
 /// the in-flight level holds only its `q`/`r` plus one batch of records).
-pub struct SpilledLevelWriter {
+pub struct SpilledLevelWriter<M: VarMask> {
     k: usize,
     file: File,
     buf: Vec<u8>,
     entries: usize,
+    _width: PhantomData<M>,
 }
 
-impl SpilledLevelWriter {
-    /// Open the spill file for level `k` in `dir`.
-    pub fn create(dir: &Path, k: usize) -> Result<SpilledLevelWriter> {
+impl<M: VarMask> SpilledLevelWriter<M> {
+    /// Open the spill file for level `k` in `dir` and write the v1
+    /// header (version + mask-width tag).
+    pub fn create(dir: &Path, k: usize) -> Result<SpilledLevelWriter<M>> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("bnsl_spill_level_{k}.bin"));
-        let file = File::options()
+        let mut file = File::options()
             .create(true)
             .truncate(true)
             .read(true)
@@ -74,48 +100,79 @@ impl SpilledLevelWriter {
         // unlink immediately: the open handle keeps the data readable and
         // the file vanishes automatically on drop/crash (POSIX).
         let _ = std::fs::remove_file(&path);
+        let mut header = [0u8; HEADER];
+        header[..8].copy_from_slice(MAGIC);
+        header[8] = VERSION;
+        header[9] = M::BYTES as u8;
+        header[10] = k as u8;
+        file.write_all(&header)?;
         Ok(SpilledLevelWriter {
             k,
             file,
-            buf: Vec::with_capacity(WINDOW * RECORD),
+            buf: Vec::with_capacity(WINDOW * record_bytes::<M>()),
             entries: 0,
+            _width: PhantomData,
         })
     }
 
     /// Append one computed batch of records.
-    pub fn append(&mut self, bps: &[f64], bpm: &[u32]) -> Result<()> {
+    pub fn append(&mut self, bps: &[f64], bpm: &[M]) -> Result<()> {
         assert_eq!(bps.len(), bpm.len());
         self.buf.clear();
         for i in 0..bps.len() {
             self.buf.extend_from_slice(&bps[i].to_le_bytes());
-            self.buf.extend_from_slice(&bpm[i].to_le_bytes());
+            self.buf
+                .extend_from_slice(&bpm[i].to_u64().to_le_bytes()[..M::BYTES]);
         }
         self.file.write_all(&self.buf)?;
         self.entries += bps.len();
         Ok(())
     }
 
-    /// Seal the file and attach the level's in-RAM scores.
-    pub fn finish(mut self, q: Vec<f64>, r: Vec<f64>) -> Result<SpilledLevel> {
+    /// Seal the file, re-validate its header, and attach the level's
+    /// in-RAM scores.
+    pub fn finish(mut self, q: Vec<f64>, r: Vec<f64>) -> Result<SpilledLevel<M>> {
         self.file.flush()?;
+        // Re-read and validate the header before serving reads: a wrong
+        // width or version here means every record offset would be junk.
+        self.file.seek(SeekFrom::Start(0))?;
+        let mut header = [0u8; HEADER];
+        self.file.read_exact(&mut header)?;
+        if &header[..8] != MAGIC {
+            bail!("spill file header corrupt (bad magic)");
+        }
+        if header[8] != VERSION {
+            bail!(
+                "spill file format v{} unsupported (reader is v{VERSION})",
+                header[8]
+            );
+        }
+        if header[9] as usize != M::BYTES {
+            bail!(
+                "spill file mask width {} bytes does not match reader width {} bytes",
+                header[9],
+                M::BYTES
+            );
+        }
         Ok(SpilledLevel {
             k: self.k,
             q,
             r,
             entries: self.entries,
-            bytes_on_disk: (self.entries * RECORD) as u64,
+            bytes_on_disk: (HEADER + self.entries * record_bytes::<M>()) as u64,
             file: RefCell::new(self.file),
             cache: RefCell::new(WindowCache {
                 tags: vec![-1; SLOTS],
-                data: vec![0; SLOTS * WINDOW * RECORD],
+                data: vec![0; SLOTS * WINDOW * record_bytes::<M>()],
             }),
             hits: std::cell::Cell::new(0),
             misses: std::cell::Cell::new(0),
+            _width: PhantomData,
         })
     }
 }
 
-impl SpilledLevel {
+impl<M: VarMask> SpilledLevel<M> {
     /// Write a fully-materialised level's parent-set vectors to `dir` and
     /// return the disk-backed frontier (bulk path; the solver prefers the
     /// incremental [`SpilledLevelWriter`]).
@@ -125,8 +182,8 @@ impl SpilledLevel {
         q: Vec<f64>,
         r: Vec<f64>,
         bps: &[f64],
-        bpm: &[u32],
-    ) -> Result<SpilledLevel> {
+        bpm: &[M],
+    ) -> Result<SpilledLevel<M>> {
         let mut writer = SpilledLevelWriter::create(dir, k)?;
         let mut off = 0usize;
         while off < bps.len() {
@@ -137,14 +194,14 @@ impl SpilledLevel {
         writer.finish(q, r)
     }
 
-    /// Bytes written to disk.
+    /// Bytes written to disk (header + records).
     pub fn bytes_on_disk(&self) -> u64 {
         self.bytes_on_disk
     }
 
     /// Resident bytes (q + r + cache), for the memory accounting.
     pub fn resident_bytes(&self) -> usize {
-        self.q.len() * 16 + SLOTS * WINDOW * RECORD + SLOTS * 8
+        self.q.len() * 16 + SLOTS * WINDOW * record_bytes::<M>() + SLOTS * 8
     }
 
     /// (cache hits, cache misses) so far.
@@ -154,8 +211,9 @@ impl SpilledLevel {
 
     /// Read record `idx` (= `t*k + pos`).
     #[inline]
-    pub fn read(&self, idx: usize) -> (f64, u32) {
+    pub fn read(&self, idx: usize) -> (f64, M) {
         debug_assert!(idx < self.entries);
+        let record = record_bytes::<M>();
         let window = idx / WINDOW;
         let within = idx % WINDOW;
         let slot = window % SLOTS;
@@ -165,18 +223,20 @@ impl SpilledLevel {
             let start = window * WINDOW;
             let len = WINDOW.min(self.entries - start);
             let mut file = self.file.borrow_mut();
-            file.seek(SeekFrom::Start((start * RECORD) as u64))
+            file.seek(SeekFrom::Start((HEADER + start * record) as u64))
                 .expect("spill seek");
-            let base = slot * WINDOW * RECORD;
-            file.read_exact(&mut cache.data[base..base + len * RECORD])
+            let base = slot * WINDOW * record;
+            file.read_exact(&mut cache.data[base..base + len * record])
                 .expect("spill read");
             cache.tags[slot] = window as i64;
         } else {
             self.hits.set(self.hits.get() + 1);
         }
-        let off = slot * WINDOW * RECORD + within * RECORD;
+        let off = slot * WINDOW * record + within * record;
         let score = f64::from_le_bytes(cache.data[off..off + 8].try_into().unwrap());
-        let mask = u32::from_le_bytes(cache.data[off + 8..off + 12].try_into().unwrap());
+        let mut raw = [0u8; 8];
+        raw[..M::BYTES].copy_from_slice(&cache.data[off + 8..off + 8 + M::BYTES]);
+        let mask = M::from_u64(u64::from_le_bytes(raw));
         (score, mask)
     }
 }
@@ -185,8 +245,11 @@ impl SpilledLevel {
 mod tests {
     use super::*;
 
-    fn tmpdir() -> std::path::PathBuf {
-        let dir = std::env::temp_dir().join(format!("bnsl_spill_test_{}", std::process::id()));
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bnsl_spill_test_{tag}_{}",
+            std::process::id()
+        ));
         std::fs::create_dir_all(&dir).unwrap();
         dir
     }
@@ -196,14 +259,84 @@ mod tests {
         let n = 3 * WINDOW + 17; // exercise a partial tail window
         let bps: Vec<f64> = (0..n).map(|i| i as f64 * 0.5 - 100.0).collect();
         let bpm: Vec<u32> = (0..n).map(|i| (i * 7) as u32).collect();
-        let lvl = SpilledLevel::write(&tmpdir(), 3, vec![0.0; 4], vec![0.0; 4], &bps, &bpm)
-            .unwrap();
+        let lvl =
+            SpilledLevel::write(&tmpdir("narrow"), 3, vec![0.0; 4], vec![0.0; 4], &bps, &bpm)
+                .unwrap();
         for i in 0..n {
             let (s, m) = lvl.read(i);
             assert_eq!(s, bps[i], "record {i}");
             assert_eq!(m, bpm[i]);
         }
-        assert_eq!(lvl.bytes_on_disk(), (n * RECORD) as u64);
+        assert_eq!(
+            lvl.bytes_on_disk(),
+            (HEADER + n * record_bytes::<u32>()) as u64
+        );
+    }
+
+    #[test]
+    fn roundtrips_wide_records_with_high_bits() {
+        // u64 masks whose top half is populated — the narrow record
+        // layout would truncate these.
+        let n = WINDOW + 300;
+        let bps: Vec<f64> = (0..n).map(|i| -(i as f64)).collect();
+        let bpm: Vec<u64> = (0..n).map(|i| (i as u64) << 33 | i as u64).collect();
+        let lvl =
+            SpilledLevel::write(&tmpdir("wide"), 4, Vec::new(), Vec::new(), &bps, &bpm).unwrap();
+        for i in (0..n).step_by(7) {
+            let (s, m) = lvl.read(i);
+            assert_eq!(s, bps[i]);
+            assert_eq!(m, bpm[i], "high mask bits survive the roundtrip");
+        }
+        assert_eq!(
+            lvl.bytes_on_disk(),
+            (HEADER + n * record_bytes::<u64>()) as u64
+        );
+    }
+
+    /// Satellite coverage: reads that straddle a window edge must hit the
+    /// correct windows on both sides of the 4096-entry boundary, for both
+    /// record widths.
+    #[test]
+    fn window_boundary_reads_are_exact() {
+        fn check<M: VarMask>(tag: &str) {
+            let n = 2 * WINDOW + 5;
+            let bps: Vec<f64> = (0..n).map(|i| i as f64 + 0.25).collect();
+            let bpm: Vec<M> = (0..n).map(|i| M::from_u64((i % 251) as u64)).collect();
+            let lvl =
+                SpilledLevel::write(&tmpdir(tag), 2, Vec::new(), Vec::new(), &bps, &bpm)
+                    .unwrap();
+            // straddle both boundaries: …, W−1, W, …, 2W−1, 2W, …
+            for idx in [
+                WINDOW - 2,
+                WINDOW - 1,
+                WINDOW,
+                WINDOW + 1,
+                2 * WINDOW - 1,
+                2 * WINDOW,
+                n - 1,
+            ] {
+                let (s, m) = lvl.read(idx);
+                assert_eq!(s, bps[idx], "{tag}: score at {idx}");
+                assert_eq!(m, bpm[idx], "{tag}: mask at {idx}");
+            }
+            let (_hits, misses) = lvl.cache_stats();
+            assert!(misses >= 3, "{tag}: three distinct windows touched");
+        }
+        check::<u32>("boundary32");
+        check::<u64>("boundary64");
+    }
+
+    #[test]
+    fn header_records_version_and_width() {
+        // Bulk-write a narrow and a wide level, then check the header
+        // fields drive the reader's width validation.
+        let dir = tmpdir("header");
+        let lvl32 =
+            SpilledLevel::<u32>::write(&dir, 1, Vec::new(), Vec::new(), &[1.0], &[7]).unwrap();
+        assert_eq!(lvl32.bytes_on_disk(), (HEADER + 12) as u64);
+        let lvl64 =
+            SpilledLevel::<u64>::write(&dir, 1, Vec::new(), Vec::new(), &[1.0], &[7]).unwrap();
+        assert_eq!(lvl64.bytes_on_disk(), (HEADER + 16) as u64);
     }
 
     #[test]
@@ -213,7 +346,8 @@ mod tests {
         let bps: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
         let bpm: Vec<u32> = (0..n).map(|i| i as u32).collect();
         let lvl =
-            SpilledLevel::write(&tmpdir(), 5, Vec::new(), Vec::new(), &bps, &bpm).unwrap();
+            SpilledLevel::write(&tmpdir("thrash"), 5, Vec::new(), Vec::new(), &bps, &bpm)
+                .unwrap();
         let mut state = 0x1234_5678_u64;
         for _ in 0..50_000 {
             state = crate::util::rng::splitmix64(&mut state);
@@ -233,7 +367,7 @@ mod tests {
         let bps = vec![1.5f64; n];
         let bpm = vec![9u32; n];
         let lvl =
-            SpilledLevel::write(&tmpdir(), 2, Vec::new(), Vec::new(), &bps, &bpm).unwrap();
+            SpilledLevel::write(&tmpdir("seq"), 2, Vec::new(), Vec::new(), &bps, &bpm).unwrap();
         for i in 0..n {
             let _ = lvl.read(i);
         }
@@ -245,8 +379,8 @@ mod tests {
     #[test]
     fn resident_bytes_are_bounded_by_cache_not_level() {
         let n = SLOTS * 10 * WINDOW; // 640 windows on disk (~30 MiB)
-        let lvl = SpilledLevel::write(
-            &tmpdir(),
+        let lvl = SpilledLevel::<u32>::write(
+            &tmpdir("resident"),
             7,
             vec![0.0; 10],
             vec![0.0; 10],
@@ -255,6 +389,6 @@ mod tests {
         )
         .unwrap();
         // resident = q/r + the fixed window cache, far below the level
-        assert!(lvl.resident_bytes() < n * RECORD / 8);
+        assert!(lvl.resident_bytes() < n * record_bytes::<u32>() / 8);
     }
 }

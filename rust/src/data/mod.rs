@@ -125,9 +125,10 @@ impl Dataset {
         }
     }
 
-    /// Joint state-space size σ(S) = Π_{v∈S} σ(v) for a subset mask,
-    /// saturating at `f64` (σ is only ever used inside `lgamma`).
-    pub fn sigma(&self, mask: u32) -> f64 {
+    /// Joint state-space size σ(S) = Π_{v∈S} σ(v) for a subset mask of
+    /// either width, saturating at `f64` (σ is only ever used inside
+    /// `lgamma`).
+    pub fn sigma<M: crate::bitset::VarMask>(&self, mask: M) -> f64 {
         crate::bitset::bits_of(mask)
             .map(|v| self.arities[v] as f64)
             .product()
@@ -136,8 +137,8 @@ impl Dataset {
     /// Number of *distinct realised* joint configurations of the subset —
     /// the alternative σ definition (paper §2.3 defines σ(X) as the number
     /// of different values X takes; for sets we expose both conventions).
-    pub fn sigma_observed(&self, mask: u32) -> usize {
-        if mask == 0 {
+    pub fn sigma_observed<M: crate::bitset::VarMask>(&self, mask: M) -> usize {
+        if mask.is_zero() {
             return 1;
         }
         let vars: Vec<usize> = crate::bitset::bits_of(mask).collect();
@@ -182,18 +183,21 @@ mod tests {
     #[test]
     fn sigma_is_product_of_arities() {
         let d = toy();
-        assert_eq!(d.sigma(0b11), 4.0);
-        assert_eq!(d.sigma(0b01), 2.0);
-        assert_eq!(d.sigma(0), 1.0);
+        assert_eq!(d.sigma(0b11u32), 4.0);
+        assert_eq!(d.sigma(0b01u32), 2.0);
+        assert_eq!(d.sigma(0u32), 1.0);
+        // width-agnostic: the wide path sees the same σ
+        assert_eq!(d.sigma(0b11u64), 4.0);
     }
 
     #[test]
     fn sigma_observed_counts_distinct_configs() {
         let d = toy();
         // joint (X,Y) configs: (0,0),(1,0),(0,1),(1,1),(1,1) → 4 distinct
-        assert_eq!(d.sigma_observed(0b11), 4);
-        assert_eq!(d.sigma_observed(0b01), 2);
-        assert_eq!(d.sigma_observed(0), 1);
+        assert_eq!(d.sigma_observed(0b11u32), 4);
+        assert_eq!(d.sigma_observed(0b01u32), 2);
+        assert_eq!(d.sigma_observed(0u32), 1);
+        assert_eq!(d.sigma_observed(0b11u64), 4);
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //! Only the Jeffreys score is artifact-backed (it is the paper's score;
 //! the kernel hard-codes its closed form). Other kinds fall back to
 //! native scoring with a warning at construction.
+//!
+//! The engine implements [`ScoreEngine`] at the **narrow (`u32`) width
+//! only**: artifact batches are bounded well inside the `p ≤ 30` regime,
+//! so the wide (`u64`) solver path always uses [`super::NativeEngine`].
 
 use super::{ScoreEngine, SubsetScorer};
 use crate::bitset::bits_of;

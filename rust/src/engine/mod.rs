@@ -16,16 +16,23 @@ pub use native::NativeEngine;
 pub mod jax;
 pub use jax::JaxEngine;
 
+use crate::bitset::VarMask;
 use crate::data::Dataset;
 use crate::score::ScoreKind;
 
-/// A source of subset potentials for one dataset under one score.
+/// A source of subset potentials for one dataset under one score,
+/// generic over the mask width `M` (default `u32`, the narrow path).
+///
+/// [`NativeEngine`] implements this for **both** widths; [`JaxEngine`]
+/// only for `u32` (the AOT artifact's mask plumbing is narrow, and PJRT
+/// runs are capped at `p ≤ `[`crate::MAX_VARS`] anyway). Solvers pick the
+/// width once at construction and stay monomorphic below it.
 ///
 /// Engines need not be [`Sync`]: the PJRT client is single-threaded by
 /// construction. The multi-threaded solver path requires
-/// `dyn ScoreEngine + Sync` explicitly (see
+/// `dyn ScoreEngine<M> + Sync` explicitly (see
 /// [`crate::solver::LeveledSolver::new`] vs `new_local`).
-pub trait ScoreEngine {
+pub trait ScoreEngine<M: VarMask = u32> {
     /// Number of variables.
     fn p(&self) -> usize;
     /// Number of samples.
@@ -35,19 +42,19 @@ pub trait ScoreEngine {
     /// The dataset being scored.
     fn data(&self) -> &Dataset;
     /// A per-thread scorer handle (owns mutable scratch).
-    fn scorer(&self) -> Box<dyn SubsetScorer + '_>;
+    fn scorer(&self) -> Box<dyn SubsetScorer<M> + '_>;
     /// Engine name for logs/records.
     fn name(&self) -> &'static str;
 }
 
-/// Mutable per-thread scoring handle.
-pub trait SubsetScorer {
+/// Mutable per-thread scoring handle over masks of width `M`.
+pub trait SubsetScorer<M: VarMask = u32> {
     /// `pot(S)` for one subset mask.
-    fn log_q(&mut self, mask: u32) -> f64;
+    fn log_q(&mut self, mask: M) -> f64;
 
     /// Batched evaluation; `out` is cleared and filled 1:1 with `masks`.
     /// Engines with per-call overhead (PJRT) override this.
-    fn log_q_batch(&mut self, masks: &[u32], out: &mut Vec<f64>) {
+    fn log_q_batch(&mut self, masks: &[M], out: &mut Vec<f64>) {
         out.clear();
         out.reserve(masks.len());
         for &m in masks {
@@ -69,8 +76,8 @@ mod tests {
     fn default_batch_matches_singles() {
         let d = synth::binary(5, 60, 3);
         let engine = NativeEngine::new(&d, ScoreKind::Jeffreys);
-        let mut s1 = engine.scorer();
-        let mut s2 = engine.scorer();
+        let mut s1 = ScoreEngine::<u32>::scorer(&engine);
+        let mut s2 = ScoreEngine::<u32>::scorer(&engine);
         let masks: Vec<u32> = (0..32).collect();
         let mut batch = Vec::new();
         s1.log_q_batch(&masks, &mut batch);

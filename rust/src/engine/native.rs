@@ -1,10 +1,17 @@
 //! Pure-rust scoring engine (f64, zero-allocation hot loop).
 
 use super::{ScoreEngine, SubsetScorer};
+use crate::bitset::VarMask;
 use crate::data::Dataset;
 use crate::score::{LocalScorer, ScoreKind};
 
 /// Scores subsets directly with [`crate::score::LocalScorer`].
+///
+/// Implements [`ScoreEngine`] for **both** mask widths: `LocalScorer` is
+/// width-generic, so the same engine value serves the narrow (`u32`) and
+/// wide (`u64`) solver paths. The inherent accessors below mirror the
+/// trait ones so call sites on the concrete type don't need a width
+/// annotation.
 pub struct NativeEngine<'a> {
     data: &'a Dataset,
     kind: ScoreKind,
@@ -14,9 +21,34 @@ impl<'a> NativeEngine<'a> {
     pub fn new(data: &'a Dataset, kind: ScoreKind) -> NativeEngine<'a> {
         NativeEngine { data, kind }
     }
+
+    /// Number of variables (width-independent inherent accessor).
+    pub fn p(&self) -> usize {
+        self.data.p()
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    /// Scoring function.
+    pub fn kind(&self) -> ScoreKind {
+        self.kind
+    }
+
+    /// The dataset being scored.
+    pub fn data(&self) -> &'a Dataset {
+        self.data
+    }
+
+    /// Engine name for logs/records.
+    pub fn name(&self) -> &'static str {
+        "native"
+    }
 }
 
-impl<'a> ScoreEngine for NativeEngine<'a> {
+impl<'a, M: VarMask> ScoreEngine<M> for NativeEngine<'a> {
     fn p(&self) -> usize {
         self.data.p()
     }
@@ -33,7 +65,7 @@ impl<'a> ScoreEngine for NativeEngine<'a> {
         self.data
     }
 
-    fn scorer(&self) -> Box<dyn SubsetScorer + '_> {
+    fn scorer(&self) -> Box<dyn SubsetScorer<M> + '_> {
         Box::new(NativeScorer {
             inner: LocalScorer::new(self.data, self.kind),
         })
@@ -48,9 +80,9 @@ struct NativeScorer<'a> {
     inner: LocalScorer<'a>,
 }
 
-impl<'a> SubsetScorer for NativeScorer<'a> {
+impl<'a, M: VarMask> SubsetScorer<M> for NativeScorer<'a> {
     #[inline]
-    fn log_q(&mut self, mask: u32) -> f64 {
+    fn log_q(&mut self, mask: M) -> f64 {
         self.inner.log_q(mask)
     }
 
@@ -78,10 +110,27 @@ mod tests {
     fn independent_scorers_agree() {
         let d = synth::binary(5, 80, 2);
         let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
-        let mut a = e.scorer();
-        let mut b = e.scorer();
+        let mut a = ScoreEngine::<u32>::scorer(&e);
+        let mut b = ScoreEngine::<u32>::scorer(&e);
         for mask in 0u32..32 {
             assert_eq!(a.log_q(mask), b.log_q(mask));
+        }
+    }
+
+    #[test]
+    fn narrow_and_wide_scorers_agree_bit_exactly() {
+        // The two monomorphizations must compute identical f64s: same
+        // counting order, same accumulation order.
+        let d = synth::uniform(6, 90, &[2, 3, 2, 4, 2, 3], 11);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let mut narrow = ScoreEngine::<u32>::scorer(&e);
+        let mut wide = ScoreEngine::<u64>::scorer(&e);
+        for mask in 0u32..(1 << 6) {
+            assert_eq!(
+                narrow.log_q(mask).to_bits(),
+                wide.log_q(mask as u64).to_bits(),
+                "mask={mask:#b}"
+            );
         }
     }
 }

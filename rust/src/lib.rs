@@ -32,6 +32,43 @@
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record of every table and figure.
+//!
+//! # Architecture: mask widths and limits
+//!
+//! Variable subsets are bitmasks behind the sealed
+//! [`bitset::VarMask`] trait, with exactly two implementations:
+//!
+//! | width | role | exact DP cap | search cap |
+//! |-------|------|--------------|------------|
+//! | `u32` | **narrow path** — the seed's original representation; the default type parameter everywhere | [`MAX_VARS`] = 30 | — |
+//! | `u64` | **wide path** — spill-assisted large exact runs and wide approximate searches | [`MAX_VARS_WIDE`] = 34 | [`MAX_NET_VARS`] = 64 |
+//!
+//! Everything between the CLI and the kernels — [`bitset::LevelIter`],
+//! colex ranking, [`score::counts::Counter`] radix coding,
+//! [`engine::ScoreEngine`]/[`engine::SubsetScorer`], all three solvers,
+//! the [`coordinator::spill`] record format (width-tagged, versioned
+//! header) and the [`coordinator::plan`] memory model — is generic over
+//! `VarMask` and **monomorphizes**: the `u32` instantiation compiles to
+//! the same hot loop the hardcoded seed had, so the `p ≤ 30` path pays
+//! nothing for the abstraction. Width is dispatched exactly once, at the
+//! top (`cli::run`: `p ≤ MAX_VARS` → `u32`, else `u64`); library callers
+//! pick a width by instantiating e.g. `LeveledSolver::<u64>`.
+//!
+//! Why the caps sit where they do:
+//!
+//! * **`MAX_VARS` = 30** — the `u32` format limit with headroom for the
+//!   `2^p`-indexed reconstruction tables (the paper's own analysis tops
+//!   out at p = 28–29 on 32 GB).
+//! * **`MAX_VARS_WIDE` = 34** — the wide exact-DP cap. The binding
+//!   constraints are the `(1 + 8)·2^p`-byte sink tables and the in-RAM
+//!   `q`/`r` frontier (`16·C(p, p/2)` bytes), both of which the §5.3
+//!   disk spill does *not* remove; beyond p ≈ 34 those alone exceed
+//!   commodity RAM, which is exactly the regime future sharding PRs
+//!   target (see ROADMAP.md).
+//! * **`MAX_NET_VARS` = 64** — one `u64` word of adjacency per node for
+//!   generative networks, hill climbing, PC-Stable and the hybrid
+//!   search (`search::hill_climb` handles p = 48 datasets end-to-end;
+//!   see `rust/tests/wide_masks.rs`).
 
 pub mod bitset;
 pub mod bn;
@@ -56,12 +93,34 @@ pub mod prelude {
     pub use crate::solver::{LeveledSolver, SilanderSolver, SolveResult};
 }
 
-/// Hard cap on the number of variables: subset masks are `u32` and the
-/// reconstruction tables index `2^p` entries. The paper's memory analysis
-/// tops out at p = 28–29 on 32 GB; 30 is the format limit here.
+/// Cap on the number of variables for the **narrow (`u32`) exact-DP
+/// path**: subset masks are `u32` and the reconstruction tables index
+/// `2^p` entries. The paper's memory analysis tops out at p = 28–29 on
+/// 32 GB; 30 is the narrow format limit here. Larger instances dispatch
+/// to the wide path (see [`MAX_VARS_WIDE`]).
 pub const MAX_VARS: usize = 30;
 
-/// Separate, looser cap for *generative* networks and datasets (`u64`
-/// adjacency): ALARM has 37 nodes; learning is still restricted to the
-/// first [`MAX_VARS`] of them, exactly like the paper's experiments.
+/// Cap on the number of variables for the **wide (`u64`) exact-DP
+/// path** — the spill-assisted 31–34 range. The `2^p` sink tables
+/// (9 bytes/subset) and the in-RAM `q`/`r` frontier are the binding
+/// constraints the §5.3 disk spill cannot remove; see the crate-level
+/// "mask widths and limits" section.
+pub const MAX_VARS_WIDE: usize = 34;
+
+/// Separate, looser cap for *generative* networks, datasets and the
+/// approximate searches (`u64` adjacency): ALARM has 37 nodes, and
+/// hill-climbing / PC-Stable / hybrid handle up to 64-variable datasets.
+/// Exact learning is still restricted to the first [`MAX_VARS`] /
+/// [`MAX_VARS_WIDE`] of them, exactly like the paper's experiments.
 pub const MAX_NET_VARS: usize = 64;
+
+/// The exact-DP variable cap for a mask width: [`MAX_VARS`] on the
+/// narrow path, [`MAX_VARS_WIDE`] on the wide path. Solvers assert
+/// against this once, at entry.
+pub fn exact_dp_cap<M: bitset::VarMask>() -> usize {
+    if M::BITS <= 32 {
+        MAX_VARS
+    } else {
+        MAX_VARS_WIDE
+    }
+}

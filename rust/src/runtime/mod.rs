@@ -19,6 +19,111 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// Offline stub for the `xla` PJRT bindings, used when the `pjrt` feature
+/// is disabled (the default — the real `xla` crate is unavailable in
+/// offline builds). Every entry point that would touch PJRT returns a
+/// descriptive error; shape/filename plumbing above it keeps working, so
+/// `bnsl info` and the CLI degrade gracefully to the native engine.
+///
+/// With `--features pjrt` this module is compiled out and the identifiers
+/// resolve to the real `xla` crate (which must then be added to
+/// `[dependencies]`; see Cargo.toml).
+#[cfg(not(feature = "pjrt"))]
+mod xla {
+    use std::fmt;
+
+    const UNAVAILABLE: &str = "bnsl was built without the `pjrt` feature; \
+         the XLA/PJRT runtime is unavailable — use the native engine \
+         (--engine native), or rebuild with --features pjrt and the `xla` \
+         crate in Cargo.toml";
+
+    /// Error surfaced by every stubbed PJRT call.
+    #[derive(Debug)]
+    pub struct Error(String);
+
+    impl fmt::Display for Error {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "{}", self.0)
+        }
+    }
+
+    impl std::error::Error for Error {}
+
+    type Result<T> = std::result::Result<T, Error>;
+
+    fn unavailable<T>() -> Result<T> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+            unavailable()
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    pub struct Literal;
+
+    impl Literal {
+        pub fn vec1<T>(_values: &[T]) -> Literal {
+            Literal
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+            Ok(Literal)
+        }
+
+        pub fn to_tuple1(&self) -> Result<Literal> {
+            unavailable()
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            unavailable()
+        }
+    }
+
+    pub struct Buffer;
+
+    impl Buffer {
+        pub fn to_literal_sync(&self) -> Result<Literal> {
+            unavailable()
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<Buffer>>> {
+            unavailable()
+        }
+    }
+
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient> {
+            unavailable()
+        }
+
+        pub fn platform_name(&self) -> String {
+            "unavailable (built without the pjrt feature)".to_string()
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+            unavailable()
+        }
+    }
+}
+
 /// Shape metadata parsed from an artifact filename.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ArtifactShape {

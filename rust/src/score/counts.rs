@@ -16,7 +16,7 @@
 //! * **sort** — sort + run-length; kept as the ablation baseline the
 //!   `scoring` bench compares against.
 
-use crate::bitset::bits_of;
+use crate::bitset::{bits_of, VarMask};
 use crate::data::Dataset;
 
 /// Largest σ(S) served by the direct-index strategy (table bytes =
@@ -81,13 +81,14 @@ impl Counter {
         self.with_strategy(Strategy::Sort)
     }
 
-    /// Compute the counts of the observed joint configurations of `mask`.
-    /// Returns a slice valid until the next call. For `mask == 0` the
+    /// Compute the counts of the observed joint configurations of `mask`
+    /// (either mask width — the radix coding below only walks set bits).
+    /// Returns a slice valid until the next call. For `mask == ∅` the
     /// single "empty configuration" has count `n`.
-    pub fn count(&mut self, data: &Dataset, mask: u32) -> &[u32] {
+    pub fn count<M: VarMask>(&mut self, data: &Dataset, mask: M) -> &[u32] {
         self.counts.clear();
         let n = data.n();
-        if mask == 0 {
+        if mask.is_zero() {
             self.counts.push(n as u32);
             return &self.counts;
         }
@@ -108,7 +109,7 @@ impl Counter {
 
     /// Radix-encode each row's restriction to `mask` into `self.codes`;
     /// returns σ(S) (saturating, only used for the strategy cut-off).
-    fn encode(&mut self, data: &Dataset, mask: u32) -> u64 {
+    fn encode<M: VarMask>(&mut self, data: &Dataset, mask: M) -> u64 {
         let n = data.n();
         self.codes.clear();
         self.codes.resize(n, 0);
@@ -227,14 +228,15 @@ mod tests {
     fn empty_mask_counts_all_rows() {
         let d = toy();
         let mut c = Counter::new(d.n());
-        assert_eq!(c.count(&d, 0), &[5]);
+        assert_eq!(c.count(&d, 0u32), &[5]);
+        assert_eq!(c.count(&d, 0u64), &[5]);
     }
 
     #[test]
     fn single_variable_counts() {
         let d = toy();
         let mut c = Counter::new(d.n());
-        let mut counts = c.count(&d, 0b01).to_vec();
+        let mut counts = c.count(&d, 0b01u32).to_vec();
         counts.sort_unstable();
         assert_eq!(counts, vec![2, 3]); // X: two 0s, three 1s
     }
@@ -244,7 +246,7 @@ mod tests {
         let d = toy();
         let mut c = Counter::new(d.n());
         // (X,Y): (0,0),(1,0),(0,1),(1,1),(1,1) → counts {1,1,1,2}
-        let mut counts = c.count(&d, 0b11).to_vec();
+        let mut counts = c.count(&d, 0b11u32).to_vec();
         counts.sort_unstable();
         assert_eq!(counts, vec![1, 1, 1, 2]);
     }
@@ -312,12 +314,12 @@ mod tests {
     fn scratch_reuse_is_clean_across_calls_and_epochs() {
         let d = toy();
         let mut c = Counter::new(d.n()).with_strategy(Strategy::Hash);
-        let mut first = c.count(&d, 0b11).to_vec();
+        let mut first = c.count(&d, 0b11u32).to_vec();
         // churn the epoch counter hard
         for _ in 0..1000 {
-            let _ = c.count(&d, 0b01);
+            let _ = c.count(&d, 0b01u32);
         }
-        let mut again = c.count(&d, 0b11).to_vec();
+        let mut again = c.count(&d, 0b11u32).to_vec();
         first.sort_unstable();
         again.sort_unstable();
         assert_eq!(first, again);
@@ -327,8 +329,8 @@ mod tests {
     fn direct_table_reset_is_complete() {
         let d = synth::uniform(3, 80, &[4, 4, 4], 9);
         let mut c = Counter::new(d.n()); // Auto → direct (σ=64)
-        let a: u32 = c.count(&d, 0b111).iter().sum();
-        let b: u32 = c.count(&d, 0b111).iter().sum();
+        let a: u32 = c.count(&d, 0b111u32).iter().sum();
+        let b: u32 = c.count(&d, 0b111u32).iter().sum();
         assert_eq!(a, 80);
         assert_eq!(b, 80, "stale counts leaked between calls");
     }

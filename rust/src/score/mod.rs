@@ -20,6 +20,7 @@
 pub mod counts;
 pub mod math;
 
+use crate::bitset::VarMask;
 use crate::data::Dataset;
 use counts::Counter;
 use math::{ln_gamma, LgammaCache};
@@ -55,7 +56,9 @@ impl ScoreKind {
             _ => {
                 if let Some(rest) = lower.strip_prefix("bdeu:") {
                     let ess: f64 = rest.parse().ok()?;
-                    if ess > 0.0 {
+                    // `ess > 0.0` alone admits `inf` (and `nan` fails it
+                    // silently): both would poison every lgamma downstream.
+                    if ess.is_finite() && ess > 0.0 {
                         return Some(ScoreKind::Bdeu { ess });
                     }
                 }
@@ -92,8 +95,10 @@ pub struct LocalScorer<'a> {
 impl<'a> LocalScorer<'a> {
     pub fn new(data: &'a Dataset, kind: ScoreKind) -> LocalScorer<'a> {
         assert!(
-            data.p() <= 32,
-            "subset masks are u32: restrict the dataset (take_vars) before scoring"
+            data.p() <= crate::MAX_NET_VARS,
+            "subset masks are at most u64: p={} exceeds MAX_NET_VARS={}",
+            data.p(),
+            crate::MAX_NET_VARS
         );
         LocalScorer {
             data,
@@ -118,9 +123,11 @@ impl<'a> LocalScorer<'a> {
         self.evals
     }
 
-    /// Subset potential `pot(S)`. For Jeffreys' this is the log marginal
-    /// likelihood `log Q(S)` of Eq. 6's closed form.
-    pub fn log_q(&mut self, mask: u32) -> f64 {
+    /// Subset potential `pot(S)` for a mask of either width. For
+    /// Jeffreys' this is the log marginal likelihood `log Q(S)` of
+    /// Eq. 6's closed form. Monomorphizes per width — the `u32`
+    /// instantiation is the seed's exact hot path.
+    pub fn log_q<M: VarMask>(&mut self, mask: M) -> f64 {
         self.evals += 1;
         let n = self.data.n();
         match self.kind {
@@ -167,23 +174,20 @@ impl<'a> LocalScorer<'a> {
     }
 
     /// Family score `score(x | parents)` = `pot(parents ∪ {x}) − pot(parents)`.
-    pub fn family(&mut self, x: usize, parents: u32) -> f64 {
-        debug_assert_eq!(parents & (1 << x), 0, "x in its own parent set");
-        self.log_q(parents | (1 << x)) - self.log_q(parents)
+    pub fn family<M: VarMask>(&mut self, x: usize, parents: M) -> f64 {
+        debug_assert!(!parents.contains(x), "x in its own parent set");
+        self.log_q(parents.with(x)) - self.log_q(parents)
     }
 
     /// Total score of a DAG given as per-variable parent masks:
     /// `Σ_x score(x | Π_x)` (Eq. 1 in log form; defined for any
     /// decomposable score). Masks are `u64` to accept [`crate::bn::Dag`]
-    /// directly; all variables must fit the `u32` scoring domain.
+    /// directly — scored on the wide path, so 64-node networks work.
     pub fn network(&mut self, parent_masks: &[u64]) -> f64 {
         parent_masks
             .iter()
             .enumerate()
-            .map(|(x, &pm)| {
-                debug_assert!(pm < (1u64 << 32));
-                self.family(x, pm as u32)
-            })
+            .map(|(x, &pm)| self.family(x, pm))
             .sum()
     }
 }
@@ -194,7 +198,7 @@ impl<'a> LocalScorer<'a> {
 ///
 /// Quadratic and allocation-happy — used only as a test oracle against the
 /// closed form in [`LocalScorer::log_q`].
-pub fn log_q_sequential(data: &Dataset, mask: u32, sigma: f64) -> f64 {
+pub fn log_q_sequential<M: VarMask>(data: &Dataset, mask: M, sigma: f64) -> f64 {
     let n = data.n();
     let vars: Vec<usize> = crate::bitset::bits_of(mask).collect();
     let code = |i: usize| -> u64 {
@@ -233,7 +237,7 @@ mod tests {
     fn worked_example_q_x_is_3_over_256() {
         let d = paper_example();
         let mut s = LocalScorer::new(&d, ScoreKind::Jeffreys);
-        let q_x = s.log_q(0b01).exp();
+        let q_x = s.log_q(0b01u32).exp();
         assert!((q_x - 3.0 / 256.0).abs() < 1e-12, "Q(X) = {q_x}");
     }
 
@@ -241,22 +245,23 @@ mod tests {
     fn worked_example_q_x_given_y_is_1_over_90() {
         let d = paper_example();
         let mut s = LocalScorer::new(&d, ScoreKind::Jeffreys);
-        let q_xy = s.log_q(0b11);
-        let q_y = s.log_q(0b10);
+        let q_xy = s.log_q(0b11u32);
+        let q_y = s.log_q(0b10u32);
         let quotient = (q_xy - q_y).exp();
         assert!((quotient - 1.0 / 90.0).abs() < 1e-12, "Q(X|Y) = {quotient}");
         // …so Y is NOT chosen as X's parent (paper's conclusion):
-        let q_x = s.log_q(0b01);
+        let q_x = s.log_q(0b01u32);
         assert!(q_x > q_xy - q_y);
         // family() is exactly the quotient
-        assert!((s.family(0, 0b10) - (q_xy - q_y)).abs() < 1e-12);
+        assert!((s.family(0, 0b10u32) - (q_xy - q_y)).abs() < 1e-12);
     }
 
     #[test]
     fn empty_set_potential_is_zero_for_jeffreys() {
         let d = paper_example();
         let mut s = LocalScorer::new(&d, ScoreKind::Jeffreys);
-        assert!(s.log_q(0).abs() < 1e-12);
+        assert!(s.log_q(0u32).abs() < 1e-12);
+        assert!(s.log_q(0u64).abs() < 1e-12);
     }
 
     #[test]
@@ -397,12 +402,12 @@ mod tests {
         let mut j = LocalScorer::new(&d, ScoreKind::Jeffreys);
         // Jeffreys: family(X | {Y}) must beat family(X | {Y,Z}) — regular.
         assert!(
-            j.family(0, 0b010) > j.family(0, 0b110),
+            j.family(0, 0b010u32) > j.family(0, 0b110u32),
             "Jeffreys must not pay for the useless extra parent"
         );
         let mut b = LocalScorer::new(&d, ScoreKind::Bdeu { ess: 4.0 });
         assert!(
-            b.family(0, 0b110) > b.family(0, 0b010),
+            b.family(0, 0b110u32) > b.family(0, 0b010u32),
             "BDeu prefers the over-complex parent set on deterministic \
              data — the irregularity the paper cites"
         );
@@ -420,6 +425,13 @@ mod tests {
         assert_eq!(ScoreKind::parse("mdl"), Some(ScoreKind::Bic));
         assert_eq!(ScoreKind::parse("nope"), None);
         assert_eq!(ScoreKind::parse("bdeu:-1"), None);
+        // non-finite ESS must be rejected, not wave through `ess > 0.0`
+        assert_eq!(ScoreKind::parse("bdeu:inf"), None);
+        assert_eq!(ScoreKind::parse("bdeu:+inf"), None);
+        assert_eq!(ScoreKind::parse("bdeu:infinity"), None);
+        assert_eq!(ScoreKind::parse("bdeu:nan"), None);
+        assert_eq!(ScoreKind::parse("bdeu:NaN"), None);
+        assert_eq!(ScoreKind::parse("bdeu:0"), None);
     }
 
     #[test]
@@ -429,7 +441,7 @@ mod tests {
         // chain X0 -> X1 -> X2
         let masks = vec![0u64, 0b001, 0b010];
         let total = s.network(&masks);
-        let manual = s.family(0, 0) + s.family(1, 0b001) + s.family(2, 0b010);
+        let manual = s.family(0, 0u64) + s.family(1, 0b001u64) + s.family(2, 0b010u64);
         assert!((total - manual).abs() < 1e-12);
     }
 
@@ -438,8 +450,8 @@ mod tests {
         let d = paper_example();
         let mut s = LocalScorer::new(&d, ScoreKind::Jeffreys);
         assert_eq!(s.evals(), 0);
-        let _ = s.log_q(1);
-        let _ = s.family(0, 0b10); // two more evals
+        let _ = s.log_q(1u32);
+        let _ = s.family(0, 0b10u32); // two more evals
         assert_eq!(s.evals(), 3);
     }
 }

@@ -1,4 +1,8 @@
 //! Greedy hill-climbing over DAG space with tabu list + random restarts.
+//!
+//! Runs entirely on `u64` parent masks (the [`crate::bn::Dag`] width), so
+//! datasets up to [`crate::MAX_NET_VARS`] = 64 variables work end-to-end —
+//! no exact-DP width cap applies here.
 
 use crate::bn::Dag;
 use crate::data::Dataset;
@@ -19,9 +23,9 @@ pub struct HillClimbOptions {
     pub max_parents: usize,
     /// RNG seed.
     pub seed: u64,
-    /// Optional adjacency restriction: `allowed[v]` is the mask of
+    /// Optional adjacency restriction: `allowed[v]` is the (u64) mask of
     /// permitted parents of `v` (hybrid mode; `None` = unrestricted).
-    pub allowed: Option<Vec<u32>>,
+    pub allowed: Option<Vec<u64>>,
 }
 
 impl Default for HillClimbOptions {
@@ -61,6 +65,11 @@ pub fn hill_climb(data: &Dataset, kind: ScoreKind, options: &HillClimbOptions) -
     let mut scorer = LocalScorer::new(data, kind);
     let mut rng = Rng::new(options.seed);
     let p = data.p();
+    assert!(
+        p <= crate::MAX_NET_VARS,
+        "hill climbing uses u64 adjacency masks: p={p} exceeds {}",
+        crate::MAX_NET_VARS
+    );
 
     let mut best_dag = Dag::empty(p);
     let mut best_score = total(&mut scorer, &best_dag);
@@ -123,7 +132,7 @@ fn neighbourhood(dag: &Dag, options: &HillClimbOptions) -> Vec<Move> {
         options
             .allowed
             .as_ref()
-            .is_none_or(|a| a[v] & (1 << u) != 0)
+            .is_none_or(|a| a[v] & (1u64 << u) != 0)
     };
     let mut out = Vec::new();
     for u in 0..p {
@@ -156,24 +165,23 @@ fn parent_ok(dag: &Dag, v: usize, max_parents: usize) -> bool {
 }
 
 /// Score change of a move — only the affected families are re-scored
-/// (decomposability, §1).
+/// (decomposability, §1). Families are scored on the wide (u64) mask
+/// path, matching the Dag's native width.
 fn move_delta(scorer: &mut LocalScorer, dag: &Dag, mv: Move) -> f64 {
-    // hill climbing runs in the u32 scoring domain (p ≤ 30)
-    let pm32 = |x: usize| dag.parents(x) as u32;
     match mv {
         Move::Add(u, v) => {
-            let pm = pm32(v);
-            scorer.family(v, pm | (1 << u)) - scorer.family(v, pm)
+            let pm = dag.parents(v);
+            scorer.family(v, pm | (1u64 << u)) - scorer.family(v, pm)
         }
         Move::Remove(u, v) => {
-            let pm = pm32(v);
-            scorer.family(v, pm & !(1u32 << u)) - scorer.family(v, pm)
+            let pm = dag.parents(v);
+            scorer.family(v, pm & !(1u64 << u)) - scorer.family(v, pm)
         }
         Move::Reverse(u, v) => {
-            let pv = pm32(v);
-            let pu = pm32(u);
-            (scorer.family(v, pv & !(1u32 << u)) - scorer.family(v, pv))
-                + (scorer.family(u, pu | (1 << v)) - scorer.family(u, pu))
+            let pv = dag.parents(v);
+            let pu = dag.parents(u);
+            (scorer.family(v, pv & !(1u64 << u)) - scorer.family(v, pv))
+                + (scorer.family(u, pu | (1u64 << v)) - scorer.family(u, pu))
         }
     }
 }

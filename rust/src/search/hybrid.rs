@@ -25,10 +25,10 @@ pub fn pc_hill_climb(
 ) -> HybridResult {
     let pc = pc_stable(data, pc_options);
     let p = data.p();
-    let mut allowed = vec![0u32; p];
+    let mut allowed = vec![0u64; p];
     for &(u, v) in &pc.skeleton {
-        allowed[u] |= 1 << v;
-        allowed[v] |= 1 << u;
+        allowed[u] |= 1u64 << v;
+        allowed[v] |= 1u64 << u;
     }
     let mut options = hc_options.clone();
     options.allowed = Some(allowed);

@@ -41,13 +41,14 @@ pub struct PcResult {
     pub skeleton: Vec<(usize, usize)>,
     /// number of G² tests performed
     pub tests: u64,
-    /// recorded separating sets (for v-structure orientation)
-    pub sepsets: HashMap<(usize, usize), u32>,
+    /// recorded separating sets (u64 variable masks, for v-structure
+    /// orientation)
+    pub sepsets: HashMap<(usize, usize), u64>,
 }
 
 /// G² conditional-independence test: X ⟂ Y | Z (Z a variable mask).
 /// Returns (statistic, degrees of freedom, p-value).
-pub fn g2_test(data: &Dataset, x: usize, y: usize, z_mask: u32, counter: &mut Counter) -> (f64, u64, f64) {
+pub fn g2_test(data: &Dataset, x: usize, y: usize, z_mask: u64, counter: &mut Counter) -> (f64, u64, f64) {
     // joint counts over (Z, X, Y) via three contingency passes share the
     // same codes; do it in one pass with a local map keyed by (z, x, y).
     let _ = counter; // contingency scratch reserved for future use
@@ -90,16 +91,20 @@ pub fn g2_test(data: &Dataset, x: usize, y: usize, z_mask: u32, counter: &mut Co
 /// Run PC-Stable.
 pub fn pc_stable(data: &Dataset, options: &PcOptions) -> PcResult {
     let p = data.p();
-    assert!(p <= 32, "PC uses u32 adjacency masks");
+    assert!(
+        p <= crate::MAX_NET_VARS,
+        "PC uses u64 adjacency masks: p={p} exceeds {}",
+        crate::MAX_NET_VARS
+    );
     let mut counter = Counter::new(data.n());
     // adjacency masks; complete graph to start
-    let mut adj: Vec<u32> = (0..p)
+    let mut adj: Vec<u64> = (0..p)
         .map(|x| {
-            let full = if p == 32 { u32::MAX } else { (1u32 << p) - 1 };
-            full & !(1u32 << x)
+            let full = if p == 64 { u64::MAX } else { (1u64 << p) - 1 };
+            full & !(1u64 << x)
         })
         .collect();
-    let mut sepsets: HashMap<(usize, usize), u32> = HashMap::new();
+    let mut sepsets: HashMap<(usize, usize), u64> = HashMap::new();
     let mut tests = 0u64;
 
     for level in 0..=options.max_cond {
@@ -114,7 +119,7 @@ pub fn pc_stable(data: &Dataset, options: &PcOptions) -> PcResult {
                 }
                 // condition on subsets of snapshot-neighbours of x (then y)
                 let mut separated = false;
-                'outer: for &base in &[snapshot[x] & !(1u32 << y), snapshot[y] & !(1u32 << x)] {
+                'outer: for &base in &[snapshot[x] & !(1u64 << y), snapshot[y] & !(1u64 << x)] {
                     if (base.count_ones() as usize) < level {
                         continue;
                     }
@@ -129,8 +134,8 @@ pub fn pc_stable(data: &Dataset, options: &PcOptions) -> PcResult {
                     }
                 }
                 if separated {
-                    adj[x] &= !(1u32 << y);
-                    adj[y] &= !(1u32 << x);
+                    adj[x] &= !(1u64 << y);
+                    adj[y] &= !(1u64 << x);
                     removed_any = true;
                 }
             }
@@ -178,7 +183,7 @@ pub fn pc_stable(data: &Dataset, options: &PcOptions) -> PcResult {
 }
 
 /// All `k`-subsets of the set bits of `base`, as masks.
-fn k_subsets(base: u32, k: usize) -> Vec<u32> {
+fn k_subsets(base: u64, k: usize) -> Vec<u64> {
     let bits: Vec<usize> = bits_of(base).collect();
     let mut out = Vec::new();
     if k > bits.len() {
@@ -187,7 +192,7 @@ fn k_subsets(base: u32, k: usize) -> Vec<u32> {
     // iterative combination enumeration over positions
     let mut idx: Vec<usize> = (0..k).collect();
     loop {
-        let mask = idx.iter().fold(0u32, |m, &i| m | (1 << bits[i]));
+        let mask = idx.iter().fold(0u64, |m, &i| m | (1u64 << bits[i]));
         out.push(mask);
         // advance
         let mut i = k;

@@ -104,22 +104,27 @@ impl SolveResult {
 
 /// Shared reconstruction: walk the per-mask sink tables from the full set
 /// down to ∅, reading off the optimal order and each sink's parent set.
-pub(crate) fn reconstruct(p: usize, sink: &[u8], sink_pmask: &[u32]) -> (Dag, Vec<usize>) {
-    let full: u32 = if p == 32 { u32::MAX } else { (1u32 << p) - 1 };
-    let mut mask = full;
+/// Width-generic — the tables are indexed by the mask value, so callers
+/// hand in whichever mask width their sweep used.
+pub(crate) fn reconstruct<M: crate::bitset::VarMask>(
+    p: usize,
+    sink: &[u8],
+    sink_pmask: &[M],
+) -> (Dag, Vec<usize>) {
+    let mut mask = M::low_bits(p);
     let mut parents = vec![0u64; p];
     let mut order_rev = Vec::with_capacity(p);
-    while mask != 0 {
-        let x = sink[mask as usize] as usize;
-        debug_assert!(mask & (1 << x) != 0, "recorded sink not in subset");
-        parents[x] = sink_pmask[mask as usize] as u64;
+    while !mask.is_zero() {
+        let x = sink[mask.to_usize()] as usize;
+        debug_assert!(mask.contains(x), "recorded sink not in subset");
+        parents[x] = sink_pmask[mask.to_usize()].to_u64();
         debug_assert_eq!(
-            parents[x] & !((mask & !(1u32 << x)) as u64),
+            parents[x] & !mask.without(x).to_u64(),
             0,
             "parent set escapes the prefix subset"
         );
         order_rev.push(x);
-        mask &= !(1u32 << x);
+        mask = mask.without(x);
     }
     order_rev.reverse();
     (Dag::from_parents(parents), order_rev)

@@ -9,31 +9,37 @@
 //! `O(p·2^p)`.
 //!
 //! Reconstruction needs one sink id and its parent mask per subset —
-//! `5·2^p` bytes, asymptotically below the frontier — recorded in two
-//! global tables as the sweep passes each subset.
+//! `(1 + mask_bytes)·2^p` bytes, asymptotically below the frontier —
+//! recorded in two global tables as the sweep passes each subset.
 //!
 //! With `SolveOptions::spill_dir` set, the §5.3 extension additionally
 //! pushes the best-parent-set vectors of *near-peak* levels to disk
 //! ([`crate::coordinator::spill`]), trading peak RAM for windowed reads.
+//!
+//! The solver is generic over the mask width [`VarMask`]: `LeveledSolver`
+//! (= `LeveledSolver<u32>`) is the seed's narrow path, byte-identical in
+//! the hot loop after monomorphization; `LeveledSolver::<u64>` opens the
+//! spill-assisted `31 ≤ p ≤ `[`crate::MAX_VARS_WIDE`] range. Width is
+//! chosen once here; nothing below this type branches on it at runtime.
 
 use super::common::{reconstruct, SolveOptions, SolveResult, SolveStats};
-use crate::bitset::{colex_unrank, BinomTable, LevelIter};
+use crate::bitset::{colex_unrank, BinomTable, LevelIter, VarMask};
 use crate::coordinator::plan::memory_plan;
 use crate::coordinator::spill::{SpilledLevel, SpilledLevelWriter};
 use crate::engine::ScoreEngine;
 use std::time::Instant;
 
 /// Engine reference that records whether cross-thread sharing is allowed.
-enum EngineRef<'e> {
+enum EngineRef<'e, M: VarMask> {
     /// Thread-safe engine: the level sweep may be parallelised.
-    Shared(&'e (dyn ScoreEngine + Sync)),
+    Shared(&'e (dyn ScoreEngine<M> + Sync)),
     /// Single-thread-only engine (e.g. [`crate::engine::JaxEngine`], whose
     /// PJRT client is not Sync): `options.threads` is clamped to 1.
-    Local(&'e dyn ScoreEngine),
+    Local(&'e dyn ScoreEngine<M>),
 }
 
-impl<'e> EngineRef<'e> {
-    fn plain(&self) -> &'e dyn ScoreEngine {
+impl<'e, M: VarMask> EngineRef<'e, M> {
+    fn plain(&self) -> &'e dyn ScoreEngine<M> {
         match *self {
             EngineRef::Shared(e) => e,
             EngineRef::Local(e) => e,
@@ -41,25 +47,26 @@ impl<'e> EngineRef<'e> {
     }
 }
 
-/// The proposed single-traversal solver.
-pub struct LeveledSolver<'e> {
-    engine: EngineRef<'e>,
+/// The proposed single-traversal solver (width-generic; defaults to the
+/// narrow `u32` path).
+pub struct LeveledSolver<'e, M: VarMask = u32> {
+    engine: EngineRef<'e, M>,
     options: SolveOptions,
 }
 
 /// Read access to the previous level's frontier, abstracted so the hot
 /// transition loop monomorphises over RAM ([`Level`]) and disk
 /// ([`SpilledLevel`]) backings.
-trait PrevLevel {
+trait PrevLevel<M: VarMask> {
     fn q(&self, t: usize) -> f64;
     fn r(&self, t: usize) -> f64;
     /// best family score + argmax parent mask at flat index `t*k + pos`
-    fn bps(&self, idx: usize) -> (f64, u32);
+    fn bps(&self, idx: usize) -> (f64, M);
 }
 
 /// One in-RAM frontier level: scores and best-parent tables for all
 /// `C(p,k)` subsets of size `k`.
-struct Level {
+struct Level<M: VarMask> {
     /// `log Q(T)` per subset rank
     q: Vec<f64>,
     /// `log R(T)` per subset rank
@@ -67,11 +74,11 @@ struct Level {
     /// best family score `bps[t*k + j]` for the j-th set bit of subset t
     bps: Vec<f64>,
     /// argmax parent mask, same indexing
-    bpm: Vec<u32>,
+    bpm: Vec<M>,
 }
 
-impl Level {
-    fn empty_set(log_q_empty: f64) -> Level {
+impl<M: VarMask> Level<M> {
+    fn empty_set(log_q_empty: f64) -> Level<M> {
         Level {
             q: vec![log_q_empty],
             r: vec![0.0], // log R(∅) = 0  (Eq. 9 base case)
@@ -80,21 +87,21 @@ impl Level {
         }
     }
 
-    fn allocate(k: usize, size: usize) -> Level {
+    fn allocate(k: usize, size: usize) -> Level<M> {
         Level {
             q: vec![0.0; size],
             r: vec![0.0; size],
             bps: vec![0.0; size * k],
-            bpm: vec![0; size * k],
+            bpm: vec![M::ZERO; size * k],
         }
     }
 
     fn bytes(&self) -> usize {
-        self.q.len() * 8 + self.r.len() * 8 + self.bps.len() * 8 + self.bpm.len() * 4
+        self.q.len() * 8 + self.r.len() * 8 + self.bps.len() * 8 + self.bpm.len() * M::BYTES
     }
 }
 
-impl PrevLevel for Level {
+impl<M: VarMask> PrevLevel<M> for Level<M> {
     #[inline]
     fn q(&self, t: usize) -> f64 {
         self.q[t]
@@ -106,12 +113,12 @@ impl PrevLevel for Level {
     }
 
     #[inline]
-    fn bps(&self, idx: usize) -> (f64, u32) {
+    fn bps(&self, idx: usize) -> (f64, M) {
         (self.bps[idx], self.bpm[idx])
     }
 }
 
-impl PrevLevel for SpilledLevel {
+impl<M: VarMask> PrevLevel<M> for SpilledLevel<M> {
     #[inline]
     fn q(&self, t: usize) -> f64 {
         self.q[t]
@@ -123,18 +130,18 @@ impl PrevLevel for SpilledLevel {
     }
 
     #[inline]
-    fn bps(&self, idx: usize) -> (f64, u32) {
+    fn bps(&self, idx: usize) -> (f64, M) {
         self.read(idx)
     }
 }
 
 /// Either backing for the frontier.
-enum Frontier {
-    Ram(Level),
-    Disk(SpilledLevel),
+enum Frontier<M: VarMask> {
+    Ram(Level<M>),
+    Disk(SpilledLevel<M>),
 }
 
-impl Frontier {
+impl<M: VarMask> Frontier<M> {
     fn resident_bytes(&self) -> usize {
         match self {
             Frontier::Ram(l) => l.bytes(),
@@ -149,52 +156,82 @@ impl Frontier {
 /// Safety: every subset mask belongs to exactly one worker's contiguous
 /// rank range, so no two threads ever write the same index, and the
 /// borrow ends before the scope joins.
-struct SinkTables {
+struct SinkTables<M: VarMask> {
     sink: *mut u8,
-    pmask: *mut u32,
+    pmask: *mut M,
 }
 
-unsafe impl Sync for SinkTables {}
+unsafe impl<M: VarMask> Sync for SinkTables<M> {}
 
-impl SinkTables {
+impl<M: VarMask> SinkTables<M> {
     #[inline]
-    unsafe fn write(&self, mask: u32, sink: u8, pmask: u32) {
-        *self.sink.add(mask as usize) = sink;
-        *self.pmask.add(mask as usize) = pmask;
+    unsafe fn write(&self, mask: M, sink: u8, pmask: M) {
+        *self.sink.add(mask.to_usize()) = sink;
+        *self.pmask.add(mask.to_usize()) = pmask;
     }
 }
 
-impl<'e> LeveledSolver<'e> {
-    /// Solver over a thread-safe engine (multithreading available).
+impl<'e> LeveledSolver<'e, u32> {
+    /// Narrow-path solver over a thread-safe engine (multithreading
+    /// available). For the wide path use [`LeveledSolver::new_generic`]
+    /// with an explicit `::<u64>` width.
     pub fn new(engine: &'e (dyn ScoreEngine + Sync)) -> LeveledSolver<'e> {
-        LeveledSolver {
-            engine: EngineRef::Shared(engine),
-            options: SolveOptions::default(),
-        }
+        LeveledSolver::new_generic(engine)
     }
 
-    /// Solver over a single-thread engine (`threads` forced to 1).
+    /// Narrow-path solver over a single-thread engine (`threads` forced
+    /// to 1).
     pub fn new_local(engine: &'e dyn ScoreEngine) -> LeveledSolver<'e> {
-        LeveledSolver {
-            engine: EngineRef::Local(engine),
-            options: SolveOptions::default(),
-        }
+        LeveledSolver::new_generic_local(engine)
     }
 
     pub fn with_options(
         engine: &'e (dyn ScoreEngine + Sync),
         options: SolveOptions,
     ) -> LeveledSolver<'e> {
-        LeveledSolver {
-            engine: EngineRef::Shared(engine),
-            options,
-        }
+        LeveledSolver::with_options_generic(engine, options)
     }
 
     pub fn with_options_local(
         engine: &'e dyn ScoreEngine,
         options: SolveOptions,
     ) -> LeveledSolver<'e> {
+        LeveledSolver::with_options_generic_local(engine, options)
+    }
+}
+
+impl<'e, M: VarMask> LeveledSolver<'e, M> {
+    /// Width-explicit solver over a thread-safe engine:
+    /// `LeveledSolver::<u64>::new_generic(&engine)` is the wide path.
+    pub fn new_generic(engine: &'e (dyn ScoreEngine<M> + Sync)) -> LeveledSolver<'e, M> {
+        LeveledSolver {
+            engine: EngineRef::Shared(engine),
+            options: SolveOptions::default(),
+        }
+    }
+
+    /// Width-explicit solver over a single-thread engine.
+    pub fn new_generic_local(engine: &'e dyn ScoreEngine<M>) -> LeveledSolver<'e, M> {
+        LeveledSolver {
+            engine: EngineRef::Local(engine),
+            options: SolveOptions::default(),
+        }
+    }
+
+    pub fn with_options_generic(
+        engine: &'e (dyn ScoreEngine<M> + Sync),
+        options: SolveOptions,
+    ) -> LeveledSolver<'e, M> {
+        LeveledSolver {
+            engine: EngineRef::Shared(engine),
+            options,
+        }
+    }
+
+    pub fn with_options_generic_local(
+        engine: &'e dyn ScoreEngine<M>,
+        options: SolveOptions,
+    ) -> LeveledSolver<'e, M> {
         LeveledSolver {
             engine: EngineRef::Local(engine),
             options,
@@ -206,7 +243,18 @@ impl<'e> LeveledSolver<'e> {
         let start = Instant::now();
         let p = self.engine.plain().p();
         assert!(p >= 1, "need at least one variable");
-        assert!(p <= crate::MAX_VARS);
+        let cap = crate::exact_dp_cap::<M>();
+        assert!(
+            p <= cap,
+            "p={p} exceeds the {}-bit exact-DP cap of {cap} variables \
+             (narrow u32 path: p ≤ {}; wide u64 path: p ≤ {}, pair with \
+             SolveOptions::spill_dir near the top; approximate searches \
+             handle p ≤ {})",
+            M::BITS,
+            crate::MAX_VARS,
+            crate::MAX_VARS_WIDE,
+            crate::MAX_NET_VARS,
+        );
         let binom = BinomTable::new(p);
         let spill_plan = self
             .options
@@ -216,16 +264,16 @@ impl<'e> LeveledSolver<'e> {
 
         let subset_count = 1usize << p;
         let mut sink = vec![0u8; subset_count];
-        let mut sink_pmask = vec![0u32; subset_count];
+        let mut sink_pmask = vec![M::ZERO; subset_count];
         let mut stats = SolveStats {
             traversals: 1,
             ..Default::default()
         };
-        let sink_bytes = subset_count * 5;
+        let sink_bytes = subset_count * (1 + M::BYTES);
 
         // level 0
         let mut scorer0 = self.engine.plain().scorer();
-        let mut prev = Frontier::Ram(Level::empty_set(scorer0.log_q(0)));
+        let mut prev = Frontier::Ram(Level::empty_set(scorer0.log_q(M::ZERO)));
         let mut score_evals = scorer0.evals();
         drop(scorer0);
 
@@ -257,16 +305,16 @@ impl<'e> LeveledSolver<'e> {
                 let mut q1 = vec![0.0f64; size1];
                 let mut r1 = vec![0.0f64; size1];
                 let mut bps_buf = vec![0.0f64; batch * k1];
-                let mut bpm_buf = vec![0u32; batch * k1];
+                let mut bpm_buf = vec![M::ZERO; batch * k1];
                 stats.peak_state_bytes = stats.peak_state_bytes.max(
                     prev.resident_bytes()
                         + size1 * 16
-                        + batch * k1 * 12
+                        + batch * k1 * (8 + M::BYTES)
                         + sink_bytes,
                 );
                 let mut worker =
                     LevelWorker::new(self.engine.plain(), &binom, k1, batch);
-                let mut iter = LevelIter::new(p, k1);
+                let mut iter = LevelIter::<M>::new(p, k1);
                 let mut start = 0usize;
                 while start < size1 {
                     let take = batch.min(size1 - start);
@@ -377,14 +425,14 @@ impl<'e> LeveledSolver<'e> {
     #[allow(clippy::too_many_arguments)]
     fn run_parallel(
         &self,
-        level: &Level,
+        level: &Level<M>,
         binom: &BinomTable,
         p: usize,
         k1: usize,
         size1: usize,
         threads: usize,
-        cur: &mut Level,
-        tables: &SinkTables,
+        cur: &mut Level<M>,
+        tables: &SinkTables<M>,
     ) -> (u64, u64, u64) {
         let engine = match self.engine {
             EngineRef::Shared(e) => e,
@@ -392,7 +440,7 @@ impl<'e> LeveledSolver<'e> {
         };
         let chunk = size1.div_ceil(threads);
         let (mut q_rest, mut r_rest): (&mut [f64], &mut [f64]) = (&mut cur.q, &mut cur.r);
-        let (mut bps_rest, mut bpm_rest): (&mut [f64], &mut [u32]) =
+        let (mut bps_rest, mut bpm_rest): (&mut [f64], &mut [M]) =
             (&mut cur.bps, &mut cur.bpm);
         let mut jobs = Vec::new();
         let mut startr = 0usize;
@@ -416,7 +464,7 @@ impl<'e> LeveledSolver<'e> {
                 .map(|(startr, len, q_c, r_c, bps_c, bpm_c)| {
                     scope.spawn(move || {
                         let mut worker = LevelWorker::new(engine, binom, k1, batch);
-                        let first = colex_unrank(binom, p, k1, startr as u64);
+                        let first = colex_unrank::<M>(binom, p, k1, startr as u64);
                         let iter = LevelIter::resume(p, first);
                         worker.run_range(level, startr, len, iter, q_c, r_c, bps_c, bpm_c, tables)
                     })
@@ -438,23 +486,29 @@ impl<'e> LeveledSolver<'e> {
 }
 
 /// Per-worker state for one level sweep over a contiguous rank range.
-struct LevelWorker<'e, 'b> {
-    scorer: Box<dyn crate::engine::SubsetScorer + 'e>,
+struct LevelWorker<'e, 'b, M: VarMask> {
+    scorer: Box<dyn crate::engine::SubsetScorer<M> + 'e>,
     binom: &'b BinomTable,
     k1: usize,
     batch: usize,
     dropranks: Vec<u64>,
-    mask_buf: Vec<u32>,
+    mask_buf: Vec<M>,
     q_buf: Vec<f64>,
+    // Per-subset scratch, hoisted so the hot loop never re-initialises
+    // it (sized for the widest mask; every cell in 0..k1 range is
+    // overwritten per subset, and prefix[0]/suffix[k1] stay 0).
+    bits: [u8; 64],
+    prefix: [u64; 65], // prefix[j] = Σ_{i<j} C(b_i, i+1)
+    suffix: [u64; 65], // suffix[j] = Σ_{i≥j} C(b_i, i)
 }
 
-impl<'e, 'b> LevelWorker<'e, 'b> {
+impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
     fn new(
-        engine: &'e dyn ScoreEngine,
+        engine: &'e dyn ScoreEngine<M>,
         binom: &'b BinomTable,
         k1: usize,
         batch: usize,
-    ) -> LevelWorker<'e, 'b> {
+    ) -> LevelWorker<'e, 'b, M> {
         LevelWorker {
             scorer: engine.scorer(),
             binom,
@@ -463,6 +517,9 @@ impl<'e, 'b> LevelWorker<'e, 'b> {
             dropranks: Vec::with_capacity(k1 + 1),
             mask_buf: Vec::with_capacity(batch.max(1)),
             q_buf: Vec::with_capacity(batch.max(1)),
+            bits: [0; 64],
+            prefix: [0; 65],
+            suffix: [0; 65],
         }
     }
 
@@ -470,17 +527,17 @@ impl<'e, 'b> LevelWorker<'e, 'b> {
     /// the previous level and writing the (chunk-local) output slices.
     /// Returns (score_evals, bps_updates, sink_updates).
     #[allow(clippy::too_many_arguments)]
-    fn run_range<P: PrevLevel>(
+    fn run_range<P: PrevLevel<M>>(
         &mut self,
         prev: &P,
         start_rank: usize,
         len: usize,
-        mut iter: LevelIter,
+        mut iter: LevelIter<M>,
         q_out: &mut [f64],
         r_out: &mut [f64],
         bps_out: &mut [f64],
-        bpm_out: &mut [u32],
-        tables: &SinkTables,
+        bpm_out: &mut [M],
+        tables: &SinkTables<M>,
     ) -> (u64, u64, u64) {
         let k1 = self.k1;
         let kprev = k1 - 1;
@@ -507,37 +564,35 @@ impl<'e, 'b> LevelWorker<'e, 'b> {
 
                 // bits + drop-one colex ranks fused in one pass over the
                 // set bits (perf: the standalone DropRanks re-extracted
-                // the bits; see EXPERIMENTS.md §Perf)
-                let mut bits = [0u8; 32];
-                let mut prefix = [0u64; 33]; // prefix[j] = Σ_{i<j} C(b_i, i+1)
-                let mut suffix = [0u64; 33]; // suffix[j] = Σ_{i≥j} C(b_i, i)
+                // the bits; see EXPERIMENTS.md §Perf). The scratch lives
+                // on the worker so this loop does no re-initialisation.
                 {
                     let mut rest = mask;
                     let mut j = 0usize;
-                    while rest != 0 {
+                    while !rest.is_zero() {
                         let b = rest.trailing_zeros() as usize;
-                        rest &= rest - 1;
-                        bits[j] = b as u8;
-                        prefix[j + 1] = prefix[j] + self.binom.c(b, j + 1);
+                        rest = rest.drop_lowest();
+                        self.bits[j] = b as u8;
+                        self.prefix[j + 1] = self.prefix[j] + self.binom.c(b, j + 1);
                         j += 1;
                     }
-                    suffix[k1] = 0;
                     for j in (0..k1).rev() {
-                        suffix[j] = suffix[j + 1] + self.binom.c(bits[j] as usize, j);
+                        self.suffix[j] =
+                            self.suffix[j + 1] + self.binom.c(self.bits[j] as usize, j);
                     }
                     self.dropranks.clear();
                     for j in 0..k1 {
-                        self.dropranks.push(prefix[j] + suffix[j + 1]);
+                        self.dropranks.push(self.prefix[j] + self.suffix[j + 1]);
                     }
                 }
 
                 let mut r_best = f64::NEG_INFINITY;
-                let mut sink_x = bits[0];
-                let mut sink_pm = 0u32;
+                let mut sink_x = self.bits[0];
+                let mut sink_pm = M::ZERO;
                 for j in 0..k1 {
-                    let xj = bits[j] as usize;
+                    let xj = self.bits[j] as usize;
                     let t = self.dropranks[j] as usize;
-                    let sub_mask = mask & !(1u32 << xj);
+                    let sub_mask = mask.without(xj);
                     // Eq. 10, first candidate: the full complement S\X
                     let mut best = q_s - prev.q(t);
                     let mut best_pm = sub_mask;
@@ -599,7 +654,7 @@ mod tests {
         assert_eq!(r.network.parents(0), 0);
         assert_eq!(r.order, vec![0]);
         let mut s = LocalScorer::new(&d, ScoreKind::Jeffreys);
-        assert!((r.log_score - s.family(0, 0)).abs() < 1e-12);
+        assert!((r.log_score - s.family(0, 0u32)).abs() < 1e-12);
     }
 
     #[test]
@@ -637,6 +692,54 @@ mod tests {
             let best = brute::best_dag_score(&d, ScoreKind::Jeffreys);
             g.assert_close(r.log_score, best, 1e-9, "global optimum");
         });
+    }
+
+    #[test]
+    fn prop_wide_path_is_bit_identical_to_narrow() {
+        // The tentpole invariant: forcing the u64 monomorphization on a
+        // narrow instance reproduces the u32 path bit for bit (same
+        // enumeration order, same accumulation order, same tie-breaks).
+        Check::new("u64 path == u32 path").cases(10).run(|g| {
+            let p = 2 + g.rng.below_usize(7); // 2..=8
+            let n = 20 + g.rng.below_usize(80);
+            let d = synth::random(p, n, 3, &mut g.rng);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let narrow = LeveledSolver::new(&e).solve();
+            let wide = LeveledSolver::<u64>::new_generic(&e).solve();
+            g.assert_eq(
+                narrow.log_score.to_bits(),
+                wide.log_score.to_bits(),
+                "bit-identical optimum across widths",
+            );
+            g.assert_eq(narrow.network.clone(), wide.network.clone(), "same network");
+            g.assert_eq(narrow.order.clone(), wide.order.clone(), "same order");
+            g.assert_eq(
+                narrow.stats.score_evals,
+                wide.stats.score_evals,
+                "same work",
+            );
+        });
+    }
+
+    #[test]
+    fn wide_path_spill_equals_narrow_in_ram() {
+        let dir = std::env::temp_dir().join(format!("bnsl_wide_spill_{}", std::process::id()));
+        let d = synth::random(9, 70, 3, &mut crate::util::rng::Rng::new(41));
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let narrow = LeveledSolver::new(&e).solve();
+        let wide = LeveledSolver::<u64>::with_options_generic(
+            &e,
+            SolveOptions {
+                spill_dir: Some(dir.clone()),
+                spill_threshold: 0.4,
+                ..Default::default()
+            },
+        )
+        .solve();
+        assert_eq!(narrow.log_score.to_bits(), wide.log_score.to_bits());
+        assert_eq!(narrow.network, wide.network);
+        assert!(wide.stats.spilled_bytes > 0, "spill engaged on wide path");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -748,6 +851,24 @@ mod tests {
         };
         let expected = (0..p)
             .map(|k| level_bytes(k) + level_bytes(k + 1) + 5 * (1 << p))
+            .max()
+            .unwrap();
+        assert_eq!(r.stats.peak_state_bytes, expected);
+    }
+
+    #[test]
+    fn wide_peak_accounting_uses_eight_byte_masks() {
+        let p = 10;
+        let d = synth::binary(p, 30, 9);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = LeveledSolver::<u64>::new_generic(&e).solve();
+        let binom = BinomTable::new(p);
+        let level_bytes = |k: usize| -> usize {
+            let size = binom.c(p, k) as usize;
+            size * 16 + size * k * 16 // 8-byte score + 8-byte mask
+        };
+        let expected = (0..p)
+            .map(|k| level_bytes(k) + level_bytes(k + 1) + 9 * (1 << p))
             .max()
             .unwrap();
         assert_eq!(r.stats.peak_state_bytes, expected);

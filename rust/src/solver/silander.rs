@@ -14,25 +14,44 @@
 //! paper's Table 1 assigns to the memory-only variant of this algorithm.
 
 use super::common::{reconstruct, SolveOptions, SolveResult, SolveStats};
-use crate::bitset::bits_of;
+use crate::bitset::{bits_of, VarMask};
 use crate::engine::ScoreEngine;
 use std::time::Instant;
 
-/// The baseline multi-pass solver.
-pub struct SilanderSolver<'e> {
-    engine: &'e dyn ScoreEngine,
+/// The baseline multi-pass solver (width-generic; defaults to the narrow
+/// `u32` path like [`crate::solver::LeveledSolver`]).
+pub struct SilanderSolver<'e, M: VarMask = u32> {
+    engine: &'e dyn ScoreEngine<M>,
     options: SolveOptions,
 }
 
-impl<'e> SilanderSolver<'e> {
+impl<'e> SilanderSolver<'e, u32> {
+    /// Narrow-path baseline; for the wide path use
+    /// [`SilanderSolver::new_generic`] with an explicit `::<u64>` width.
     pub fn new(engine: &'e dyn ScoreEngine) -> SilanderSolver<'e> {
+        SilanderSolver::new_generic(engine)
+    }
+
+    pub fn with_options(engine: &'e dyn ScoreEngine, options: SolveOptions) -> SilanderSolver<'e> {
+        SilanderSolver::with_options_generic(engine, options)
+    }
+}
+
+impl<'e, M: VarMask> SilanderSolver<'e, M> {
+    /// Width-explicit constructor (`SilanderSolver::<u64>::new_generic`
+    /// is the wide path; note its all-in-RAM `p·2^p` tables make it far
+    /// more memory-hungry than the leveled solver at the same `p`).
+    pub fn new_generic(engine: &'e dyn ScoreEngine<M>) -> SilanderSolver<'e, M> {
         SilanderSolver {
             engine,
             options: SolveOptions::default(),
         }
     }
 
-    pub fn with_options(engine: &'e dyn ScoreEngine, options: SolveOptions) -> SilanderSolver<'e> {
+    pub fn with_options_generic(
+        engine: &'e dyn ScoreEngine<M>,
+        options: SolveOptions,
+    ) -> SilanderSolver<'e, M> {
         SilanderSolver { engine, options }
     }
 
@@ -40,7 +59,13 @@ impl<'e> SilanderSolver<'e> {
     pub fn solve(&self) -> SolveResult {
         let start = Instant::now();
         let p = self.engine.p();
-        assert!((1..=crate::MAX_VARS).contains(&p));
+        assert!(p >= 1, "need at least one variable");
+        let cap = crate::exact_dp_cap::<M>();
+        assert!(
+            p <= cap,
+            "p={p} exceeds the {}-bit exact-DP cap of {cap} variables",
+            M::BITS
+        );
         let full_count = 1usize << p;
         let mut stats = SolveStats::default();
 
@@ -55,7 +80,7 @@ impl<'e> SilanderSolver<'e> {
             while next < full_count {
                 let take = batch.min(full_count - next);
                 masks.clear();
-                masks.extend((next..next + take).map(|m| m as u32));
+                masks.extend((next..next + take).map(|m| M::from_u64(m as u64)));
                 scorer.log_q_batch(&masks, &mut vals);
                 local[next..next + take].copy_from_slice(&vals[..take]);
                 next += take;
@@ -69,33 +94,33 @@ impl<'e> SilanderSolver<'e> {
         // raw candidate mask (entries with bit x set are unused padding —
         // exactly the all-in-RAM layout whose footprint the paper critiques).
         let mut bps: Vec<Vec<f64>> = Vec::with_capacity(p);
-        let mut bpm: Vec<Vec<u32>> = Vec::with_capacity(p);
+        let mut bpm: Vec<Vec<M>> = Vec::with_capacity(p);
         for x in 0..p {
-            let xbit = 1u32 << x;
             let mut bx = vec![f64::NEG_INFINITY; full_count];
-            let mut mx = vec![0u32; full_count];
+            let mut mx = vec![M::ZERO; full_count];
             // candidate sets in increasing numeric order: subsets precede
             // supersets, so the recurrence (Eq. 8) is well-founded.
-            for c in 0..full_count as u32 {
-                if c & xbit != 0 {
+            for c_raw in 0..full_count as u64 {
+                let c = M::from_u64(c_raw);
+                if c.contains(x) {
                     continue;
                 }
                 // candidate: the full set c itself as parents
-                let mut best = local[(c | xbit) as usize] - local[c as usize];
+                let mut best = local[c.with(x).to_usize()] - local[c.to_usize()];
                 let mut best_pm = c;
                 // candidates inherited from c \ {y}; ≥ prefers the smaller
                 // parent set on exact ties (regular-score tie-break,
                 // matches LeveledSolver)
                 for y in bits_of(c) {
-                    let sub = (c & !(1u32 << y)) as usize;
+                    let sub = c.without(y).to_usize();
                     if bx[sub] >= best {
                         best = bx[sub];
                         best_pm = mx[sub];
                     }
                     stats.bps_updates += 1;
                 }
-                bx[c as usize] = best;
-                mx[c as usize] = best_pm;
+                bx[c.to_usize()] = best;
+                mx[c.to_usize()] = best_pm;
             }
             bps.push(bx);
             bpm.push(mx);
@@ -103,19 +128,21 @@ impl<'e> SilanderSolver<'e> {
         stats.traversals += 1;
 
         // peak memory: local + all per-variable tables live here
-        stats.peak_state_bytes =
-            full_count * 8 + p * full_count * 12 + full_count * (8 + 5);
+        stats.peak_state_bytes = full_count * 8
+            + p * full_count * (8 + M::BYTES)
+            + full_count * (8 + 1 + M::BYTES);
 
         // ---- pass 3: best sinks ------------------------------------------
         let mut r = vec![0.0f64; full_count];
         let mut sink = vec![0u8; full_count];
-        let mut sink_pmask = vec![0u32; full_count];
-        for mask in 1..full_count as u32 {
+        let mut sink_pmask = vec![M::ZERO; full_count];
+        for mask_raw in 1..full_count as u64 {
+            let mask = M::from_u64(mask_raw);
             let mut best = f64::NEG_INFINITY;
             let mut best_x = 0u8;
-            let mut best_pm = 0u32;
+            let mut best_pm = M::ZERO;
             for x in bits_of(mask) {
-                let rest = (mask & !(1u32 << x)) as usize;
+                let rest = mask.without(x).to_usize();
                 let cand = r[rest] + bps[x][rest];
                 if cand > best {
                     best = cand;
@@ -124,9 +151,9 @@ impl<'e> SilanderSolver<'e> {
                 }
                 stats.sink_updates += 1;
             }
-            r[mask as usize] = best;
-            sink[mask as usize] = best_x;
-            sink_pmask[mask as usize] = best_pm;
+            r[mask.to_usize()] = best;
+            sink[mask.to_usize()] = best_x;
+            sink_pmask[mask.to_usize()] = best_pm;
         }
         stats.traversals += 1;
 
@@ -184,6 +211,17 @@ mod tests {
             // random continuous data ties are measure-zero, so expect equality.
             g.assert_eq(a.network.clone(), b.network.clone(), "same optimal DAG");
         });
+    }
+
+    #[test]
+    fn wide_path_matches_narrow_bit_exactly() {
+        let d = synth::random(7, 90, 3, &mut crate::util::rng::Rng::new(21));
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let narrow = SilanderSolver::new(&e).solve();
+        let wide = SilanderSolver::<u64>::new_generic(&e).solve();
+        assert_eq!(narrow.log_score.to_bits(), wide.log_score.to_bits());
+        assert_eq!(narrow.network, wide.network);
+        assert_eq!(narrow.order, wide.order);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Wide-mask (u64) pipeline integration: the `VarMask` refactor's
+//! acceptance checks.
+//!
+//! * exact solves on projections of a p = 33 synthetic dataset, run on
+//!   the forced-wide path with spill enabled, cross-checked bit-exactly
+//!   against the narrow path, the Silander baseline, and (at p ≤ 5)
+//!   the brute-force all-DAGs oracle;
+//! * hill climbing end-to-end on a p = 48 synthetic dataset (parent
+//!   masks with bits ≥ 32 — impossible before the refactor);
+//! * the full p = 33 spilled exact solve as an `#[ignore]`d opt-in run
+//!   (it needs ≳ 170 GB RAM for the 2^33 sink tables + mid-lattice
+//!   frontier and many core-hours; the projections above exercise the
+//!   identical code path at container scale).
+
+use bnsl::data::{synth, Dataset};
+use bnsl::engine::NativeEngine;
+use bnsl::score::{LocalScorer, ScoreKind};
+use bnsl::search::{hill_climb, HillClimbOptions};
+use bnsl::solver::{brute, LeveledSolver, SilanderSolver, SolveOptions};
+use bnsl::util::rng::Rng;
+
+fn p33_dataset() -> Dataset {
+    let mut rng = Rng::new(3303);
+    synth::random(33, 200, 3, &mut rng)
+}
+
+fn spill_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("bnsl_wide_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn p33_projections_solve_identically_on_the_wide_spilled_path() {
+    let data = p33_dataset();
+    assert_eq!(data.p(), 33);
+    // Three 10-variable projections, deliberately including indices ≥ 30
+    // (beyond the narrow exact cap in the original ordering).
+    let projections: [&[usize]; 3] = [
+        &[32, 30, 28, 5, 0, 17, 22, 9, 14, 31],
+        &[1, 3, 32, 8, 13, 21, 29, 30, 18, 27],
+        &[6, 11, 2, 25, 31, 4, 19, 24, 10, 16],
+    ];
+    let dir = spill_dir("proj");
+    for (i, proj) in projections.iter().enumerate() {
+        let d = data.select_vars(proj);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let narrow = LeveledSolver::new(&e).solve();
+        let wide = LeveledSolver::<u64>::with_options_generic(
+            &e,
+            SolveOptions {
+                spill_dir: Some(dir.clone()),
+                spill_threshold: 0.5,
+                ..Default::default()
+            },
+        )
+        .solve();
+        let baseline = SilanderSolver::new(&e).solve();
+        assert!(
+            wide.stats.spilled_bytes > 0,
+            "projection {i}: spill engaged on the wide path"
+        );
+        assert_eq!(
+            narrow.log_score.to_bits(),
+            wide.log_score.to_bits(),
+            "projection {i}: wide+spill == narrow, bit-exact"
+        );
+        assert_eq!(
+            baseline.log_score.to_bits(),
+            wide.log_score.to_bits(),
+            "projection {i}: wide+spill == Silander baseline"
+        );
+        assert_eq!(narrow.network, wide.network, "projection {i}: same DAG");
+
+        // brute-force oracle on the first five projected variables
+        let d5 = d.take_vars(5);
+        let e5 = NativeEngine::new(&d5, ScoreKind::Jeffreys);
+        let wide5 = LeveledSolver::<u64>::new_generic(&e5).solve();
+        let best5 = brute::best_dag_score(&d5, ScoreKind::Jeffreys);
+        assert!(
+            (wide5.log_score - best5).abs() < 1e-9,
+            "projection {i}: wide path matches the all-DAGs optimum"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hillclimb_runs_end_to_end_on_p48_synthetic() {
+    // A 48-variable planted chain: parent masks need bits ≥ 32, which
+    // the u32 search layer could not even represent.
+    let d = synth::chain(48, 120, 0.9, 4807);
+    let opts = HillClimbOptions {
+        restarts: 0,
+        seed: 7,
+        ..Default::default()
+    };
+    let r = hill_climb(&d, ScoreKind::Jeffreys, &opts);
+
+    let mut scorer = LocalScorer::new(&d, ScoreKind::Jeffreys);
+    let empty = scorer.network(&vec![0u64; 48]);
+    assert!(
+        r.log_score > empty,
+        "climbing must beat the empty graph on strongly-structured data"
+    );
+    let achieved = scorer.network(r.network.parent_masks());
+    assert!(
+        (achieved - r.log_score).abs() < 1e-6,
+        "claimed {} vs achieved {achieved}",
+        r.log_score
+    );
+    assert!(r.moves_taken > 0);
+    assert!(
+        r.network
+            .edges()
+            .iter()
+            .any(|&(u, v)| u >= 32 || v >= 32),
+        "structure found in the upper (bit ≥ 32) half of the mask"
+    );
+    // sanity: the result is a representable DAG over 48 nodes
+    assert!(r.network.topological_order().is_some());
+}
+
+#[test]
+fn wide_scorer_matches_narrow_on_shared_prefix() {
+    // log Q over the first 10 variables must not depend on whether the
+    // dataset carries 23 extra columns or on the mask width used.
+    let data = p33_dataset();
+    let d10 = data.take_vars(10);
+    let mut wide = LocalScorer::new(&data, ScoreKind::Jeffreys);
+    let mut narrow = LocalScorer::new(&d10, ScoreKind::Jeffreys);
+    let mut state = 0xBEEFu64;
+    for _ in 0..200 {
+        state = bnsl::util::rng::splitmix64(&mut state);
+        let mask = (state & 0x3FF) as u32; // subsets of the first 10 vars
+        assert_eq!(
+            narrow.log_q(mask).to_bits(),
+            wide.log_q(mask as u64).to_bits(),
+            "mask={mask:#b}"
+        );
+    }
+}
+
+/// The acceptance-criterion run at full scale. `2^33` subsets: the sink
+/// tables alone are `9·2^33` ≈ 77 GB and the peak `q`/`r` frontier adds
+/// `32·C(33,16)` ≈ 37 GB, so this only fits a large-memory host — run
+/// explicitly with `cargo test -q --release -- --ignored p33_full`.
+#[test]
+#[ignore = "needs ≳ 170 GB RAM and many core-hours; projections cover the code path"]
+fn p33_full_exact_solve_with_spill() {
+    let data = p33_dataset();
+    let e = NativeEngine::new(&data, ScoreKind::Jeffreys);
+    let dir = spill_dir("full33");
+    let r = LeveledSolver::<u64>::with_options_generic(
+        &e,
+        SolveOptions {
+            spill_dir: Some(dir.clone()),
+            spill_threshold: 0.5,
+            threads: 1,
+            ..Default::default()
+        },
+    )
+    .solve();
+    assert!(r.log_score.is_finite());
+    assert!(r.stats.spilled_bytes > 0);
+    assert_eq!(r.stats.score_evals, 1u64 << 33);
+    let _ = std::fs::remove_dir_all(&dir);
+}

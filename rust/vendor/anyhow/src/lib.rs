@@ -1,0 +1,222 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored so the
+//! repository builds fully offline. Implements the pieces `bnsl` uses:
+//!
+//! * [`Error`] — an opaque error value built from any `std::error::Error`
+//!   or a formatted message, carrying a human-readable context chain.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`anyhow!`] / [`bail!`] — message construction / early return.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, mirroring the upstream trait shape.
+//!
+//! Like upstream `anyhow`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// Opaque error: a display message plus an optional chain of context
+/// strings, rendered outermost-first like upstream anyhow.
+pub struct Error {
+    /// Context chain, most recent (outermost) first; the original cause
+    /// message is the last element.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (without the cause chain).
+    pub fn root_message(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full context chain, `outer: inner: cause`.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context lines.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Context extension for `Result` and `Option`, mirroring upstream.
+pub trait Context<T, E>: Sized {
+    /// Wrap the error with a context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::IntoShimError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_shim_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_shim_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+mod ext {
+    //! Coherence helper (same trick as upstream anyhow): a local trait
+    //! implemented both for every `std::error::Error` type and for
+    //! [`crate::Error`] itself, so `.context(..)` works on either.
+    pub trait IntoShimError {
+        fn into_shim_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoShimError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_shim_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoShimError for crate::Error {
+        fn into_shim_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("missing file"));
+    }
+
+    #[test]
+    fn context_chains_render_alternate() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u8> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+        let e2 = anyhow!("bad value {}", 42);
+        assert_eq!(format!("{e2}"), "bad value 42");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_shim_result_works() {
+        fn inner() -> Result<()> {
+            Err(anyhow!("cause"))
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: cause");
+    }
+}
