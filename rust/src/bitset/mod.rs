@@ -42,11 +42,14 @@ impl std::fmt::Display for LevelIterError {
                  (u64) mask path for 32 < p ≤ 64 — the CLI dispatches \
                  automatically, library callers instantiate \
                  LevelIter::<u64>/LeveledSolver::<u64>. The exact DP is \
-                 additionally capped at p ≤ {narrow} (u32, MAX_VARS) and \
+                 additionally capped at p ≤ {narrow} (u32, MAX_VARS), \
                  p ≤ {wide} (u64, MAX_VARS_WIDE; pair with --spill-dir \
-                 near the top); approximate searches go to p ≤ {net}.",
+                 near the top), and p ≤ {sharded} with the sharded \
+                 coordinator (MAX_VARS_SHARDED; --shards N, resumable \
+                 via --resume); approximate searches go to p ≤ {net}.",
                 narrow = crate::MAX_VARS,
                 wide = crate::MAX_VARS_WIDE,
+                sharded = crate::MAX_VARS_SHARDED,
                 net = crate::MAX_NET_VARS,
             ),
             LevelIterError::LevelTooDeep { k, p } => {

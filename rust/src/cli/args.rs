@@ -17,30 +17,53 @@ pub enum MaskWidth {
 }
 
 /// Validate a requested variable count against the per-width limits and
-/// pick the mask width. `exact` distinguishes the exact DP solvers
-/// (capped at [`crate::MAX_VARS_WIDE`]) from the approximate searches
-/// (hillclimb/hybrid, capped at [`crate::MAX_NET_VARS`]). Errors spell
-/// out every limit so a failing `--p` tells the user exactly which knob
-/// to turn. Note the wide exact range is leveled-solver territory: the
-/// all-in-RAM Silander baseline is additionally rejected above
-/// [`crate::MAX_VARS`] by `cmd_learn` (its `p·2^p` tables don't fit).
-pub fn validate_var_count(p: usize, exact: bool) -> Result<MaskWidth> {
+/// pick the mask width. `exact` distinguishes the exact DP solvers from
+/// the approximate searches (hillclimb/hybrid, capped at
+/// [`crate::MAX_NET_VARS`]); `sharded` raises the wide exact cap from
+/// [`crate::MAX_VARS_WIDE`] to [`crate::MAX_VARS_SHARDED`] (the sharded
+/// coordinator keeps the frontier and sink tables on disk). Every cap
+/// error names the **next-larger configuration that would work**, so a
+/// failing `--p` tells the user exactly which knob to turn. Note the
+/// wide exact range is leveled-solver territory: the all-in-RAM Silander
+/// baseline is additionally rejected above [`crate::MAX_VARS`] by
+/// `cmd_learn` (its `p·2^p` tables don't fit).
+pub fn validate_var_count(p: usize, exact: bool, sharded: bool) -> Result<MaskWidth> {
     if p == 0 {
         bail!("need at least one variable");
     }
     if exact {
+        let wide_cap = if sharded {
+            crate::MAX_VARS_SHARDED
+        } else {
+            crate::MAX_VARS_WIDE
+        };
         if p <= crate::MAX_VARS {
             Ok(MaskWidth::Narrow)
-        } else if p <= crate::MAX_VARS_WIDE {
+        } else if p <= wide_cap {
             Ok(MaskWidth::Wide)
+        } else if !sharded && p <= crate::MAX_VARS_SHARDED {
+            bail!(
+                "dataset has {p} variables; the in-RAM exact solvers stop \
+                 at {} (u32 masks) / {} (wide u64 masks). Next-larger \
+                 configuration that works: the sharded coordinator — add \
+                 --shards N (power of two) to run p ≤ {} with the \
+                 frontier on disk, resumable via --resume; or switch to \
+                 --solver hillclimb/hybrid (up to {} variables)",
+                crate::MAX_VARS,
+                crate::MAX_VARS_WIDE,
+                crate::MAX_VARS_SHARDED,
+                crate::MAX_NET_VARS
+            );
         } else {
             bail!(
                 "dataset has {p} variables; exact solvers support at most \
-                 {} (u32 masks) or {} with the wide u64 path — reduce \
-                 --p, or switch to --solver hillclimb/hybrid (up to {} \
-                 variables)",
+                 {} (u32 masks), {} (wide u64 masks) or {} sharded \
+                 (--shards). Next-larger configuration that works: \
+                 --solver hillclimb or hybrid (up to {} variables), or \
+                 restrict the dataset with --p",
                 crate::MAX_VARS,
                 crate::MAX_VARS_WIDE,
+                crate::MAX_VARS_SHARDED,
                 crate::MAX_NET_VARS
             );
         }
@@ -178,28 +201,56 @@ mod tests {
 
     #[test]
     fn var_count_validation_picks_widths_and_reports_limits() {
-        assert_eq!(validate_var_count(10, true).unwrap(), MaskWidth::Narrow);
         assert_eq!(
-            validate_var_count(crate::MAX_VARS, true).unwrap(),
+            validate_var_count(10, true, false).unwrap(),
             MaskWidth::Narrow
         );
         assert_eq!(
-            validate_var_count(crate::MAX_VARS + 1, true).unwrap(),
+            validate_var_count(crate::MAX_VARS, true, false).unwrap(),
+            MaskWidth::Narrow
+        );
+        assert_eq!(
+            validate_var_count(crate::MAX_VARS + 1, true, false).unwrap(),
             MaskWidth::Wide
         );
         assert_eq!(
-            validate_var_count(crate::MAX_VARS_WIDE, true).unwrap(),
+            validate_var_count(crate::MAX_VARS_WIDE, true, false).unwrap(),
             MaskWidth::Wide
         );
-        let err = validate_var_count(crate::MAX_VARS_WIDE + 1, true)
+        let err = validate_var_count(crate::MAX_VARS_WIDE + 1, true, false)
             .unwrap_err()
             .to_string();
         assert!(err.contains(&crate::MAX_VARS.to_string()), "{err}");
         assert!(err.contains(&crate::MAX_VARS_WIDE.to_string()), "{err}");
+        // the cap error names the next-larger configuration that works
+        assert!(err.contains("--shards"), "{err}");
         assert!(err.contains("hillclimb"), "{err}");
         // approximate searches: wide up to MAX_NET_VARS
-        assert_eq!(validate_var_count(48, false).unwrap(), MaskWidth::Wide);
-        assert!(validate_var_count(crate::MAX_NET_VARS + 1, false).is_err());
-        assert!(validate_var_count(0, true).is_err());
+        assert_eq!(validate_var_count(48, false, false).unwrap(), MaskWidth::Wide);
+        assert!(validate_var_count(crate::MAX_NET_VARS + 1, false, false).is_err());
+        assert!(validate_var_count(0, true, false).is_err());
+    }
+
+    #[test]
+    fn var_count_validation_sharded_extends_the_wide_cap() {
+        // 35–36 variables work only with --shards
+        assert_eq!(
+            validate_var_count(crate::MAX_VARS_WIDE + 1, true, true).unwrap(),
+            MaskWidth::Wide
+        );
+        assert_eq!(
+            validate_var_count(crate::MAX_VARS_SHARDED, true, true).unwrap(),
+            MaskWidth::Wide
+        );
+        // beyond the sharded cap, the error names the searches as the
+        // next-larger configuration
+        let err = validate_var_count(crate::MAX_VARS_SHARDED + 1, true, true)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("hillclimb"), "{err}");
+        assert!(
+            err.contains(&crate::MAX_NET_VARS.to_string()),
+            "{err}"
+        );
     }
 }

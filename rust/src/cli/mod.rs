@@ -14,11 +14,14 @@ pub mod exp;
 pub use args::{validate_var_count, Args, MaskWidth};
 
 use crate::bn::repo;
+use crate::coordinator::shard::ShardOptions;
 use crate::data::{read_csv, write_csv, Dataset};
 use crate::engine::{JaxEngine, NativeEngine};
 use crate::score::ScoreKind;
 use crate::search::{hill_climb, pc_hill_climb, HillClimbOptions, PcOptions};
-use crate::solver::{LeveledSolver, SilanderSolver, SolveOptions};
+use crate::solver::{
+    solve_sharded, LeveledSolver, ShardOutcome, SilanderSolver, SolveOptions, SolveResult,
+};
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 
@@ -31,8 +34,12 @@ USAGE:
   bnsl learn  (--data file.csv | --network asia|alarm|sachs [--p P] [--n N])
               [--solver leveled|silander|hillclimb|hybrid] [--score jeffreys|bdeu[:e]|bic|aic]
               [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
+              [--shards N [--shard-dir DIR] [--stop-after-level K]] [--resume DIR]
               exact solvers: p <= 30 on u32 masks, p <= 34 on the wide u64
-              path (auto-dispatched; pair with --spill-dir near the top);
+              path (auto-dispatched; pair with --spill-dir near the top),
+              p <= 36 sharded (--shards, power of two: frontier + sinks on
+              disk, manifest committed per level, --resume restarts a
+              killed run at the last completed level);
               hillclimb/hybrid: p <= 64
   bnsl sample --network asia|alarm|sachs --n N [--seed S] --out data.csv
   bnsl exp table2     [--pmin 14] [--pmax 18] [--runs 3]  [--n 200] [--threads T]
@@ -92,13 +99,77 @@ fn cmd_learn(args: Args) -> Result<()> {
     // larger exact runs take the wide u64 path, and the searches always
     // run at the Dag's u64 width. Everything below stays monomorphic.
     let exact = matches!(solver.as_str(), "leveled" | "silander");
-    let width = validate_var_count(data.p(), exact)?;
+    let shards_given = args.raw("shards").is_some();
+    let resume = args.raw("resume").map(PathBuf::from);
+    let sharded = shards_given || resume.is_some();
+    // The sharded flags must never be silently dropped: they drive the
+    // leveled coordinator only, whatever solver was asked for.
+    if sharded && solver != "leveled" {
+        bail!(
+            "--shards/--resume drive the sharded leveled coordinator; \
+             use --solver leveled (got '{solver}')"
+        );
+    }
+    let width = validate_var_count(data.p(), exact, sharded)?;
     let options = SolveOptions {
         threads: args.get::<usize>("threads", 1)?,
         spill_dir: args.raw("spill-dir").map(PathBuf::from),
         spill_threshold: args.get::<f64>("spill-threshold", 0.5)?,
         batch: args.get::<usize>("batch", 1024)?,
     };
+
+    if sharded {
+        // The sharded coordinator drives the leveled sweep over a Sync
+        // engine; it is the only path past MAX_VARS_WIDE.
+        if engine_name != "native" {
+            bail!(
+                "the sharded coordinator runs shards on a worker pool and \
+                 needs a thread-safe engine; --engine jax (PJRT) is \
+                 single-threaded — use --engine native"
+            );
+        }
+        let stop = args.get::<i64>("stop-after-level", -1)?;
+        if stop < -1 {
+            bail!("--stop-after-level expects a level ≥ 0 (got {stop})");
+        }
+        let shard_opts = ShardOptions {
+            // `0` = "take the shard count from the manifest" on resume
+            shards: if resume.is_some() && !shards_given {
+                0
+            } else {
+                args.get::<usize>("shards", 1)?
+            },
+            workers: args.get::<usize>("threads", 0)?,
+            batch: options.batch,
+            dir: resume
+                .clone()
+                .or_else(|| args.raw("shard-dir").map(PathBuf::from))
+                .unwrap_or_else(|| PathBuf::from("bnsl_shards")),
+            stop_after_level: usize::try_from(stop).ok(),
+            keep_levels: false,
+        };
+        let engine = NativeEngine::new(&data, kind);
+        let (outcome, heap) = crate::memtrack::measure(|| -> Result<_> {
+            Ok(match width {
+                MaskWidth::Narrow => solve_sharded::<u32>(&engine, &shard_opts)?,
+                MaskWidth::Wide => solve_sharded::<u64>(&engine, &shard_opts)?,
+            })
+        });
+        return match outcome? {
+            ShardOutcome::Checkpointed { level, dir } => {
+                eprintln!(
+                    "checkpoint: levels 0..={level} committed in {dir}; finish \
+                     the solve with `bnsl learn … --resume {dir}`",
+                    dir = dir.display()
+                );
+                Ok(())
+            }
+            ShardOutcome::Complete(result) => {
+                emit_result(&args, &data, kind, &solver, "native", result, heap)
+            }
+        };
+    }
+
     if exact && width == MaskWidth::Wide {
         // Only the leveled solver earns the 31–34 range: its two-level
         // frontier (plus §5.3 spill) is what keeps wide runs feasible.
@@ -108,14 +179,19 @@ fn cmd_learn(args: Args) -> Result<()> {
         if solver == "silander" {
             bail!(
                 "--solver silander is all-in-RAM (p·2^p best-parent tables \
-                 ≈ {} at p = {}) and only supports p ≤ {}; use --solver \
-                 leveled (optionally with --spill-dir) for 31–{} variables",
+                 ≈ {} at p = {}) and only supports p ≤ {}. Next-larger \
+                 configurations that work: --solver leveled (optionally \
+                 with --spill-dir) for 31–{} variables, --solver leveled \
+                 --shards N (sharded coordinator, resumable) up to {}, or \
+                 --solver hillclimb/hybrid up to {}",
                 crate::util::human_bytes(
                     (data.p() as u64) * (1u64 << data.p()) * 16
                 ),
                 data.p(),
                 crate::MAX_VARS,
-                crate::MAX_VARS_WIDE
+                crate::MAX_VARS_WIDE,
+                crate::MAX_VARS_SHARDED,
+                crate::MAX_NET_VARS
             );
         }
         eprintln!(
@@ -222,7 +298,20 @@ fn cmd_learn(args: Args) -> Result<()> {
         })
     });
     let result = result?;
+    emit_result(&args, &data, kind, &solver, &engine_name, result, heap)
+}
 
+/// Shared `learn` epilogue: human-readable summary to stderr, the JSON
+/// record to `--out`/stdout, optional DOT.
+fn emit_result(
+    args: &Args,
+    data: &Dataset,
+    kind: ScoreKind,
+    solver: &str,
+    engine_name: &str,
+    result: SolveResult,
+    heap: usize,
+) -> Result<()> {
     eprintln!(
         "solver={solver} engine={engine_name} score={} p={} n={}",
         kind.name(),
@@ -329,9 +418,10 @@ fn cmd_exp(rest: &[String]) -> Result<()> {
 fn cmd_info(args: Args) -> Result<()> {
     println!("bnsl {}", env!("CARGO_PKG_VERSION"));
     println!(
-        "max exact-solver variables: {} (u32 masks) / {} (wide u64 masks); searches: {}",
+        "max exact-solver variables: {} (u32 masks) / {} (wide u64 masks) / {} (sharded, --shards); searches: {}",
         crate::MAX_VARS,
         crate::MAX_VARS_WIDE,
+        crate::MAX_VARS_SHARDED,
         crate::MAX_NET_VARS
     );
     let dir = PathBuf::from(args.raw("artifacts").unwrap_or("artifacts"));
@@ -355,6 +445,14 @@ fn cmd_info(args: Args) -> Result<()> {
             "p={p:2}: proposed peak {}, baseline {}",
             crate::util::human_bytes(plan.peak_bytes),
             crate::util::human_bytes(plan.baseline_bytes)
+        );
+    }
+    for (p, shards) in [(29usize, 8usize), (33, 16), (crate::MAX_VARS_SHARDED, 64)] {
+        let plan = crate::coordinator::plan::sharded_plan(p, shards, 0, 1024);
+        println!(
+            "p={p:2} --shards {shards:2}: resident {}, disk {}",
+            crate::util::human_bytes(plan.peak_resident_bytes),
+            crate::util::human_bytes(plan.disk_bytes)
         );
     }
     Ok(())

@@ -5,8 +5,14 @@
 //!   the level-`k+1` sweep through a windowed read cache. "The proposed
 //!   method can reduce the memory peak by using the disk only at the peak
 //!   or near-peak levels, rather than throughout the entire process."
+//! * [`shard`] — the sharded frontier coordinator: every level split into
+//!   `2^k` colex-rank shards with one spill writer per shard, a
+//!   `manifest.json` committed per level, and disk-backed reconstruction —
+//!   external-memory frontier search (Malone-style) plus cross-run
+//!   `--resume`. Formats in `docs/FORMATS.md`.
 //! * [`plan`] — the analytic level/memory planner behind Fig. 7 and the
-//!   `bnsl exp levels` harness.
+//!   `bnsl exp levels` harness, including the sharded-run pricing.
 
 pub mod plan;
+pub mod shard;
 pub mod spill;

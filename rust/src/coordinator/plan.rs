@@ -1,7 +1,9 @@
 //! Analytic memory/level planner — the model behind the paper's Fig. 7
-//! and the §5.1 "maximum p on 16 GB" analysis.
+//! and the §5.1 "maximum p on 16 GB" analysis, plus the pricing of
+//! sharded runs ([`ShardedPlan`]) whose frontier lives entirely on disk.
 
 use crate::bitset::BinomTable;
+use crate::coordinator::shard::{reader_cache_bytes, QR_RECORD};
 use crate::util::json::Json;
 
 /// Per-level accounting of the proposed method's frontier.
@@ -72,6 +74,109 @@ pub fn memory_plan(p: usize, spill_threshold: f64) -> MemoryPlan {
         peak_bytes,
         peak_level,
         baseline_bytes,
+    }
+}
+
+/// Analytic accounting of a sharded run ([`crate::coordinator::shard`]):
+/// the frontier streams through per-shard files, so resident RAM is
+/// worker buffers + window caches — per-shard frontier, not per-level —
+/// and the former RAM peak (two frontiers + `2^p` sink tables) moves to
+/// disk.
+#[derive(Clone, Debug)]
+pub struct ShardedPlan {
+    pub p: usize,
+    pub shards: usize,
+    /// Concurrent workers priced (defaults to one per shard).
+    pub workers: usize,
+    /// Subsets per engine batch per worker.
+    pub batch: usize,
+    pub mask_bytes: u64,
+    /// Peak resident bytes across all levels: `workers ×`
+    /// (batch write buffers + previous-level read caches).
+    pub peak_resident_bytes: u64,
+    /// The level at the resident peak.
+    pub peak_level: usize,
+    /// Disk high-water mark: two adjacent levels' `.bps`/`.qr` shard
+    /// files (pre-prune) plus every committed level's `.sink` records
+    /// (`(1+mask)·2^p` in total by the end — kept for reconstruction).
+    pub disk_bytes: u64,
+}
+
+/// Price a sharded run. `workers == 0` means one worker per shard;
+/// `batch` is the per-worker engine batch ([`crate::solver::SolveOptions`]
+/// default 1024). Pure arithmetic, `p ≤ 62` like [`memory_plan`].
+pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> ShardedPlan {
+    assert!((1..=62).contains(&p), "analytic planner supports p ≤ 62");
+    assert!(shards >= 1 && shards.is_power_of_two());
+    let workers = if workers == 0 { shards } else { workers.min(shards) };
+    let batch = batch.max(1) as u64;
+    let mask_bytes: u64 = if p <= crate::MAX_VARS { 4 } else { 8 };
+    let binom = BinomTable::new(p);
+    let bps_record = 8 + mask_bytes;
+    let sink_record = 1 + mask_bytes;
+    // per-worker read caches over the previous level's shard files
+    let read_cache = |k_prev: usize| -> u64 {
+        let size = binom.c(p, k_prev);
+        let per_shard = size.div_ceil(shards as u64).max(1);
+        (0..shards)
+            .map(|s| {
+                let entries =
+                    per_shard.min(size.saturating_sub(s as u64 * per_shard)) as usize;
+                if entries == 0 {
+                    return 0u64;
+                }
+                let qr = reader_cache_bytes(entries, QR_RECORD, shards) as u64;
+                let bps = if k_prev == 0 {
+                    0
+                } else {
+                    reader_cache_bytes(entries * k_prev, bps_record as usize, shards) as u64
+                };
+                qr + bps
+            })
+            .sum()
+    };
+    let (peak_level, peak_resident_bytes) = (1..=p)
+        .map(|k1| {
+            let write_buffers =
+                batch * (QR_RECORD as u64 + k1 as u64 * bps_record + sink_record);
+            let per_worker = write_buffers + read_cache(k1 - 1);
+            (k1, workers as u64 * per_worker)
+        })
+        .max_by_key(|&(_, b)| b)
+        .unwrap();
+    // disk: adjacent-level frontier files + cumulative sink records
+    let frontier_files = |k: usize| -> u64 {
+        binom.c(p, k) * (QR_RECORD as u64 + k as u64 * bps_record)
+    };
+    let mut sink_cum = 0u64;
+    let mut disk_bytes = 0u64;
+    for k1 in 1..=p {
+        sink_cum += binom.c(p, k1) * sink_record;
+        disk_bytes = disk_bytes.max(frontier_files(k1 - 1) + frontier_files(k1) + sink_cum);
+    }
+    ShardedPlan {
+        p,
+        shards,
+        workers,
+        batch: batch as usize,
+        mask_bytes,
+        peak_resident_bytes,
+        peak_level,
+        disk_bytes,
+    }
+}
+
+impl ShardedPlan {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("p", self.p)
+            .set("shards", self.shards)
+            .set("workers", self.workers)
+            .set("batch", self.batch)
+            .set("mask_bytes", self.mask_bytes)
+            .set("peak_resident_bytes", self.peak_resident_bytes)
+            .set("peak_level", self.peak_level)
+            .set("disk_bytes", self.disk_bytes)
     }
 }
 
@@ -209,6 +314,49 @@ mod tests {
         let p33 = memory_plan(33, 0.5);
         assert!(p33.levels.iter().any(|l| l.is_peak));
         assert!(p33.peak_bytes > (9u64 << 33));
+    }
+
+    /// Acceptance criterion (ISSUE 2): at p = 20 a 4-shard run's planned
+    /// peak RAM is strictly below the unsharded two-level frontier.
+    #[test]
+    fn p20_four_shards_resident_strictly_below_unsharded() {
+        let unsharded = memory_plan(20, 0.0);
+        let sharded = sharded_plan(20, 4, 0, 1024);
+        assert!(
+            sharded.peak_resident_bytes < unsharded.peak_bytes,
+            "sharded {} vs unsharded {}",
+            sharded.peak_resident_bytes,
+            unsharded.peak_bytes
+        );
+    }
+
+    #[test]
+    fn sharded_resident_is_flat_where_unsharded_explodes() {
+        // p = 33 is deep in wide-path territory: the unsharded peak is
+        // hundreds of GB, the sharded resident stays in cache territory
+        // because the frontier and sink tables live on disk.
+        let unsharded = memory_plan(33, 0.0);
+        let sharded = sharded_plan(33, 8, 0, 1024);
+        assert!(unsharded.peak_bytes > 100u64 << 30);
+        assert!(sharded.peak_resident_bytes < 1u64 << 30);
+        // ...and the bill moved to disk, it did not vanish
+        assert!(sharded.disk_bytes > 10u64 << 30);
+        assert_eq!(sharded.mask_bytes, 8);
+    }
+
+    #[test]
+    fn sharded_plan_prices_the_cap_and_respects_worker_clamp() {
+        // the sharded cap (MAX_VARS_SHARDED) is disk-bound: single-digit
+        // TB of shard files at the cap, still finite and plan-able
+        let cap = sharded_plan(crate::MAX_VARS_SHARDED, 16, 0, 1024);
+        assert!(cap.disk_bytes > 1u64 << 40, "TB-scale disk at the cap");
+        assert!(cap.peak_resident_bytes < 4u64 << 30, "RAM stays commodity");
+        // workers default to one per shard and never exceed the shards
+        assert_eq!(sharded_plan(20, 4, 0, 64).workers, 4);
+        assert_eq!(sharded_plan(20, 4, 9, 64).workers, 4);
+        assert_eq!(sharded_plan(20, 4, 2, 64).workers, 2);
+        let j = cap.to_json().to_string();
+        assert!(j.contains("peak_resident_bytes"), "{j}");
     }
 
     #[test]

@@ -1,0 +1,1131 @@
+//! Sharded frontier files + run manifest — the external-memory
+//! coordinator behind [`crate::solver::solve_sharded`].
+//!
+//! The paper's single-traversal DP keeps two adjacent subset levels in
+//! RAM; the §5.3 spill pushes the dominant best-parent vectors of peak
+//! levels to disk but leaves the `16·C(p,p/2)`-byte `q`/`r` frontier and
+//! the `(1+mask)·2^p` sink tables resident, which caps the wide exact
+//! path at `p = `[`crate::MAX_VARS_WIDE`]. This module removes both
+//! residents, Malone-style (external-memory frontier breadth-first
+//! search): every level is partitioned into [`ShardSpec::shards`]
+//! equal colex-rank ranges — for power-of-two level sizes exactly the
+//! **top `log2(shards)` bits of the colex rank** — and each shard streams
+//! its third of the frontier (`.bps`, `.qr`, `.sink` files, one spill
+//! writer per shard) through a fixed-size batch buffer. The next level
+//! reads the previous one through per-worker window caches
+//! ([`ShardedLevelReader`]), and reconstruction random-accesses the
+//! per-level `.sink` files instead of a `2^p` in-RAM table, so peak RAM
+//! is `O(shards · (batch + cache))` — per-shard frontier, not per-level.
+//!
+//! A `manifest.json` in the run directory records the run's identity
+//! (`p`, shard count, mask width, score, dataset fingerprint) and the
+//! highest *committed* level. The manifest is rewritten atomically
+//! (write-temp-then-rename) after each level's shards all finish, which
+//! makes a killed run resumable at the last completed level:
+//! `--resume <dir>` revalidates the manifest and every surviving shard
+//! header, then continues the sweep without recomputing finished levels.
+//!
+//! All files share the 16-byte v1 header of [`crate::coordinator::spill`]
+//! (magic, version, mask width, level, record kind). The byte-level
+//! specification — header layout, the three record kinds, the manifest
+//! schema, and a worked hex example — lives in
+//! [`docs/FORMATS.md`](https://github.com/paper-repo-growth/bnsl/blob/main/docs/FORMATS.md)
+//! (in-tree: `docs/FORMATS.md`).
+
+use super::spill::{
+    decode_header, encode_header, record_bytes, HEADER, KIND_BPS, KIND_QR, KIND_SINK,
+};
+use crate::bitset::{colex_rank, BinomTable, VarMask};
+use crate::bn::Dag;
+use crate::data::Dataset;
+use crate::score::ScoreKind;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::cell::{Cell, RefCell};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+
+// Cache geometry is shared with the §5.3 spill reader so the two
+// direct-mapped window caches cannot drift apart.
+pub(crate) use super::spill::{SLOTS, WINDOW};
+
+/// Manifest format version.
+const MANIFEST_FORMAT: u64 = 1;
+
+/// Bytes of one `.qr` record: little-endian `f64` `log Q` + `f64` `log R`.
+pub(crate) const QR_RECORD: usize = 16;
+
+/// Bytes of one `.sink` record at width `M`: sink-variable byte + mask.
+#[inline]
+pub(crate) const fn sink_record_bytes<M: VarMask>() -> usize {
+    1 + M::BYTES
+}
+
+/// Cache-slot budget per open shard file: the fixed [`SLOTS`] total is
+/// divided across the level's shards so a reader's aggregate cache does
+/// not grow with the shard count.
+pub(crate) fn slot_cap(shards: usize) -> usize {
+    (SLOTS / shards).max(1)
+}
+
+/// Resident bytes of the window cache a reader opens over `entries`
+/// records of `record` bytes in one of `shards` shard files (shared with
+/// the memory planner so [`crate::coordinator::plan`] prices exactly
+/// what the reader allocates).
+pub(crate) fn reader_cache_bytes(entries: usize, record: usize, shards: usize) -> usize {
+    let slots = slot_cap(shards).min(entries.div_ceil(WINDOW)).max(1);
+    slots * WINDOW * record + slots * 8
+}
+
+/// Soft `RLIMIT_NOFILE` via `/proc/self/limits` (`None` off Linux or if
+/// unreadable) — the sharded driver preflights its per-worker handle
+/// budget against this instead of dying mid-level on EMFILE.
+pub(crate) fn fd_soft_limit() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/limits").ok()?;
+    let line = text.lines().find(|l| l.starts_with("Max open files"))?;
+    // "Max open files   <soft>   <hard>   files"
+    line.split_whitespace().nth(3)?.parse().ok()
+}
+
+/// Tuning knobs for one sharded run (see [`crate::solver::solve_sharded`]).
+#[derive(Clone, Debug)]
+pub struct ShardOptions {
+    /// Number of frontier shards per level. Must be a power of two
+    /// (shards are keyed by the top bits of the colex rank); `0` means
+    /// "take the count from the manifest" (resume).
+    pub shards: usize,
+    /// Worker threads draining the shard queue; `0` = one per shard,
+    /// capped at the machine's available parallelism (each worker holds
+    /// read handles for every previous-level shard, so more workers than
+    /// cores only burns file descriptors).
+    pub workers: usize,
+    /// Subsets scored per engine batch within each shard.
+    pub batch: usize,
+    /// Run directory: manifest + per-level shard files.
+    pub dir: PathBuf,
+    /// Checkpoint hook: commit levels up to and including this one, then
+    /// return [`crate::solver::ShardOutcome::Checkpointed`] instead of
+    /// finishing. Drives the kill-and-resume tests and time-boxed solves.
+    pub stop_after_level: Option<usize>,
+    /// Keep every level's `.bps`/`.qr` files instead of pruning levels
+    /// that are no longer needed for resume (debugging aid).
+    pub keep_levels: bool,
+}
+
+impl Default for ShardOptions {
+    fn default() -> ShardOptions {
+        ShardOptions {
+            shards: 1,
+            workers: 0,
+            batch: 1024,
+            dir: PathBuf::from("bnsl_shards"),
+            stop_after_level: None,
+            keep_levels: false,
+        }
+    }
+}
+
+/// Partition of one level's `C(p,k)` colex ranks into equal contiguous
+/// ranges. With a power-of-two level size the shard index is literally
+/// the top `log2(shards)` bits of the rank; ragged sizes round the range
+/// width up, leaving trailing shards short or empty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Level size `C(p,k)`.
+    pub size: u64,
+    /// Shard count (power of two).
+    pub shards: usize,
+    /// Ranks per shard: `ceil(size / shards)`.
+    pub width: u64,
+}
+
+impl ShardSpec {
+    pub fn new(size: u64, shards: usize) -> ShardSpec {
+        assert!(shards >= 1 && shards.is_power_of_two());
+        ShardSpec {
+            size,
+            shards,
+            width: size.div_ceil(shards as u64).max(1),
+        }
+    }
+
+    /// Global rank range `[lo, hi)` of shard `s` (empty when `lo >= hi`).
+    pub fn bounds(&self, s: usize) -> (u64, u64) {
+        let lo = (s as u64 * self.width).min(self.size);
+        let hi = ((s as u64 + 1) * self.width).min(self.size);
+        (lo, hi)
+    }
+
+    /// Entries in shard `s`.
+    pub fn entries(&self, s: usize) -> u64 {
+        let (lo, hi) = self.bounds(s);
+        hi - lo
+    }
+
+    /// Shard + shard-local offset of a global rank.
+    #[inline]
+    pub fn locate(&self, rank: u64) -> (usize, u64) {
+        debug_assert!(rank < self.size);
+        ((rank / self.width) as usize, rank % self.width)
+    }
+}
+
+/// Stable identity of (dataset, score): resuming against different data
+/// or a different scoring function is rejected up front instead of
+/// producing a silently wrong network. FNV-1a over the dataset shape,
+/// arities, raw column bytes and the score's debug form.
+pub fn run_fingerprint(data: &Dataset, kind: ScoreKind) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(&(data.p() as u64).to_le_bytes());
+    eat(&(data.n() as u64).to_le_bytes());
+    eat(data.arities());
+    for v in 0..data.p() {
+        eat(data.column(v));
+    }
+    eat(format!("{kind:?}").as_bytes());
+    format!("{h:016x}")
+}
+
+/// One sharded run rooted at a directory: identity + committed progress.
+///
+/// The manifest is the durability boundary. A level exists iff
+/// `completed >= Some(k)`; files of uncommitted levels are ignored (and
+/// overwritten) by the next attempt.
+#[derive(Clone, Debug)]
+pub struct ShardRun {
+    dir: PathBuf,
+    pub p: usize,
+    pub n: usize,
+    pub shards: usize,
+    pub mask_bytes: usize,
+    pub score: String,
+    pub fingerprint: String,
+    /// Highest committed level (`None` before level 0 commits).
+    pub completed: Option<usize>,
+}
+
+impl ShardRun {
+    /// Start a fresh run, or resume the one already rooted at
+    /// `options.dir`. A fresh run requires `options.shards >= 1`; a
+    /// resume (`options.shards == 0` or a matching explicit count)
+    /// revalidates `p`, mask width, score and dataset fingerprint
+    /// against the manifest and rejects mismatches by name.
+    pub fn open_or_create(
+        options: &ShardOptions,
+        p: usize,
+        n: usize,
+        mask_bytes: usize,
+        score: &str,
+        fingerprint: &str,
+    ) -> Result<ShardRun> {
+        let manifest = options.dir.join("manifest.json");
+        if manifest.exists() {
+            let run = ShardRun::open(&options.dir)?;
+            let reject = |field: &str, manifest_has: &str, caller_has: &str| -> anyhow::Error {
+                anyhow::anyhow!(
+                    "{}: cannot resume — manifest records {field} = {manifest_has} \
+                     but this invocation has {field} = {caller_has}; use a fresh \
+                     --shard-dir for a different run",
+                    manifest.display()
+                )
+            };
+            if run.p != p {
+                return Err(reject("p", &run.p.to_string(), &p.to_string()));
+            }
+            if run.mask_bytes != mask_bytes {
+                return Err(reject(
+                    "mask_bytes",
+                    &run.mask_bytes.to_string(),
+                    &mask_bytes.to_string(),
+                ));
+            }
+            if run.score != score {
+                return Err(reject("score", &run.score, score));
+            }
+            if run.fingerprint != fingerprint {
+                return Err(reject("data fingerprint", &run.fingerprint, fingerprint));
+            }
+            if options.shards != 0 && options.shards != run.shards {
+                return Err(reject(
+                    "shards",
+                    &run.shards.to_string(),
+                    &options.shards.to_string(),
+                ));
+            }
+            return Ok(run);
+        }
+        if options.shards == 0 {
+            bail!(
+                "{}: nothing to resume (no manifest.json); start a run with --shards N",
+                options.dir.display()
+            );
+        }
+        if !options.shards.is_power_of_two() {
+            bail!(
+                "--shards {} is not a power of two; shards are keyed by the \
+                 top bits of the colex rank (try {} or {})",
+                options.shards,
+                options.shards.next_power_of_two() >> 1,
+                options.shards.next_power_of_two()
+            );
+        }
+        std::fs::create_dir_all(&options.dir)
+            .with_context(|| format!("creating shard dir {}", options.dir.display()))?;
+        let run = ShardRun {
+            dir: options.dir.clone(),
+            p,
+            n,
+            shards: options.shards,
+            mask_bytes,
+            score: score.to_string(),
+            fingerprint: fingerprint.to_string(),
+            completed: None,
+        };
+        run.write_manifest()?;
+        Ok(run)
+    }
+
+    /// Load an existing run's manifest (resume entry point).
+    pub fn open(dir: &Path) -> Result<ShardRun> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: invalid JSON: {e}", path.display()))?;
+        fn field<'a>(doc: &'a Json, path: &Path, key: &str) -> Result<&'a Json> {
+            doc.get(key)
+                .ok_or_else(|| anyhow::anyhow!("{}: missing field '{key}'", path.display()))
+        }
+        fn as_usize(doc: &Json, path: &Path, key: &str) -> Result<usize> {
+            field(doc, path, key)?
+                .as_u64()
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow::anyhow!("{}: field '{key}' not a count", path.display()))
+        }
+        fn as_string(doc: &Json, path: &Path, key: &str) -> Result<String> {
+            field(doc, path, key)?
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("{}: field '{key}' not a string", path.display()))
+        }
+        let format = field(&doc, &path, "format")?.as_u64().unwrap_or(0);
+        if format != MANIFEST_FORMAT {
+            bail!(
+                "{}: manifest format {format} unsupported (reader is {MANIFEST_FORMAT})",
+                path.display()
+            );
+        }
+        let completed = match field(&doc, &path, "levels_complete")?.as_i64() {
+            Some(v) if v >= 0 => Some(v as usize),
+            Some(_) => None,
+            None => bail!("{}: field 'levels_complete' not an integer", path.display()),
+        };
+        let run = ShardRun {
+            dir: dir.to_path_buf(),
+            p: as_usize(&doc, &path, "p")?,
+            n: as_usize(&doc, &path, "n")?,
+            shards: as_usize(&doc, &path, "shards")?,
+            mask_bytes: as_usize(&doc, &path, "mask_bytes")?,
+            score: as_string(&doc, &path, "score")?,
+            fingerprint: as_string(&doc, &path, "fingerprint")?,
+            completed,
+        };
+        if !run.shards.is_power_of_two() || run.shards == 0 {
+            bail!(
+                "{}: manifest shard count {} is not a power of two",
+                path.display(),
+                run.shards
+            );
+        }
+        if let Some(k) = run.completed {
+            if k > run.p {
+                bail!(
+                    "{}: manifest claims level {k} complete but p = {}",
+                    path.display(),
+                    run.p
+                );
+            }
+        }
+        Ok(run)
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let doc = Json::obj()
+            .set("format", MANIFEST_FORMAT)
+            .set("p", self.p)
+            .set("n", self.n)
+            .set("shards", self.shards)
+            .set("mask_bytes", self.mask_bytes)
+            .set("score", self.score.as_str())
+            .set("fingerprint", self.fingerprint.as_str())
+            .set(
+                "levels_complete",
+                self.completed.map(|k| k as i64).unwrap_or(-1),
+            );
+        let path = self.dir.join("manifest.json");
+        let tmp = self.dir.join("manifest.json.tmp");
+        {
+            // write + fsync BEFORE the rename: a rename whose data blocks
+            // never hit disk would survive a crash as a garbage manifest
+            let mut file = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            file.write_all(doc.to_pretty().as_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            file.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing {}", path.display()))?;
+        // best-effort directory fsync so the rename itself is durable
+        if let Ok(dir) = File::open(&self.dir) {
+            let _ = dir.sync_all();
+        }
+        Ok(())
+    }
+
+    /// Durably mark level `k` complete (atomic manifest rewrite). All of
+    /// the level's shard files must be flushed before this is called.
+    pub fn commit_level(&mut self, k: usize) -> Result<()> {
+        debug_assert!(self.completed.map_or(k == 0, |c| k == c + 1));
+        self.completed = Some(k);
+        self.write_manifest()
+    }
+
+    /// Shard partition of level `k`.
+    pub fn spec(&self, binom: &BinomTable, k: usize) -> ShardSpec {
+        ShardSpec::new(binom.c(self.p, k), self.shards)
+    }
+
+    /// Path of one shard file: `level_{k}_shard_{s}.{ext}`.
+    pub fn shard_file(&self, k: usize, s: usize, ext: &str) -> PathBuf {
+        self.dir.join(format!("level_{k:02}_shard_{s:04}.{ext}"))
+    }
+
+    /// Drop the `.bps`/`.qr` files of a level that is no longer needed
+    /// for resume (its successor has committed). `.sink` files stay:
+    /// reconstruction reads one record per level at the very end.
+    pub fn prune_level(&self, k: usize) {
+        for s in 0..self.shards {
+            let _ = std::fs::remove_file(self.shard_file(k, s, "bps"));
+            let _ = std::fs::remove_file(self.shard_file(k, s, "qr"));
+        }
+    }
+}
+
+/// Receives one sink record per subset, in colex order — the level sweep
+/// is generic over whether sinks land in the in-RAM `2^p` tables
+/// (unsharded solver) or a per-shard stream buffer ([`SinkBuf`]).
+pub trait SinkOut<M: VarMask> {
+    fn put(&mut self, mask: M, sink: u8, pmask: M);
+}
+
+/// Buffered sink records for one shard batch (flushed to the `.sink`
+/// file by [`ShardWriterSet::append`]).
+pub struct SinkBuf<M: VarMask> {
+    buf: Vec<u8>,
+    _width: PhantomData<M>,
+}
+
+impl<M: VarMask> Default for SinkBuf<M> {
+    fn default() -> SinkBuf<M> {
+        SinkBuf {
+            buf: Vec::new(),
+            _width: PhantomData,
+        }
+    }
+}
+
+impl<M: VarMask> SinkOut<M> for SinkBuf<M> {
+    #[inline]
+    fn put(&mut self, _mask: M, sink: u8, pmask: M) {
+        self.buf.push(sink);
+        self.buf
+            .extend_from_slice(&pmask.to_u64().to_le_bytes()[..M::BYTES]);
+    }
+}
+
+/// The one-spill-writer-per-shard bundle: `.bps` + `.qr` + `.sink`
+/// streams for one (level, shard) pair, appended batch by batch so a
+/// shard's frontier never materialises in RAM.
+pub struct ShardWriterSet<M: VarMask> {
+    bps: BufWriter<File>,
+    qr: BufWriter<File>,
+    sink: BufWriter<File>,
+    entries: u64,
+    bytes: u64,
+    _width: PhantomData<M>,
+}
+
+impl<M: VarMask> ShardWriterSet<M> {
+    pub fn create(run: &ShardRun, k: usize, s: usize) -> Result<ShardWriterSet<M>> {
+        let open = |ext: &str, kind: u8| -> Result<BufWriter<File>> {
+            let path = run.shard_file(k, s, ext);
+            let file = File::create(&path)
+                .with_context(|| format!("creating shard file {}", path.display()))?;
+            let mut w = BufWriter::new(file);
+            w.write_all(&encode_header(M::BYTES as u8, k as u8, kind))
+                .with_context(|| format!("writing header of {}", path.display()))?;
+            Ok(w)
+        };
+        Ok(ShardWriterSet {
+            bps: open("bps", KIND_BPS)?,
+            qr: open("qr", KIND_QR)?,
+            sink: open("sink", KIND_SINK)?,
+            entries: 0,
+            bytes: 3 * HEADER as u64,
+            _width: PhantomData,
+        })
+    }
+
+    /// Append one computed batch: `take` subsets' `q`/`r`, their
+    /// `take·k` best-parent records, and the batch's buffered sink
+    /// records (cleared after the flush).
+    pub fn append(
+        &mut self,
+        q: &[f64],
+        r: &[f64],
+        bps: &[f64],
+        bpm: &[M],
+        sinks: &mut SinkBuf<M>,
+    ) -> Result<()> {
+        debug_assert_eq!(q.len(), r.len());
+        debug_assert_eq!(bps.len(), bpm.len());
+        for i in 0..q.len() {
+            self.qr.write_all(&q[i].to_le_bytes())?;
+            self.qr.write_all(&r[i].to_le_bytes())?;
+        }
+        for i in 0..bps.len() {
+            self.bps.write_all(&bps[i].to_le_bytes())?;
+            self.bps
+                .write_all(&bpm[i].to_u64().to_le_bytes()[..M::BYTES])?;
+        }
+        self.sink.write_all(&sinks.buf)?;
+        self.bytes += (q.len() * QR_RECORD
+            + bps.len() * record_bytes::<M>()
+            + sinks.buf.len()) as u64;
+        sinks.buf.clear();
+        self.entries += q.len() as u64;
+        Ok(())
+    }
+
+    /// Flush + fsync all three streams; returns (subset entries, bytes
+    /// written). Sync errors propagate: the level must not commit over
+    /// shard data the kernel could not persist.
+    pub fn finish(self) -> Result<(u64, u64)> {
+        for mut w in [self.bps, self.qr, self.sink] {
+            w.flush()?;
+            w.get_ref().sync_data()?;
+        }
+        Ok((self.entries, self.bytes))
+    }
+}
+
+/// A direct-mapped window cache over one fixed-record-size shard file
+/// (the read half of the format; each worker opens its own, so no
+/// cross-thread sharing).
+struct WindowedRecords {
+    file: RefCell<File>,
+    cache: RefCell<WindowCache>,
+    path: String,
+    record: usize,
+    entries: usize,
+    slots: usize,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+struct WindowCache {
+    tags: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl WindowedRecords {
+    /// Open + fully validate one shard file: v1 header fields *and* the
+    /// exact byte length implied by `entries` (a truncated or corrupt
+    /// shard fails here, by path, before any rank is served).
+    fn open(
+        path: &Path,
+        width_bytes: usize,
+        k: usize,
+        kind: u8,
+        record: usize,
+        entries: usize,
+        slots_budget: usize,
+    ) -> Result<WindowedRecords> {
+        let mut file =
+            File::open(path).with_context(|| format!("opening shard file {}", path.display()))?;
+        let mut header = [0u8; HEADER];
+        file.read_exact(&mut header)
+            .with_context(|| format!("reading header of {}", path.display()))?;
+        decode_header(&header, width_bytes, k, kind, &path.display().to_string())?;
+        let expect_len = (HEADER + entries * record) as u64;
+        let actual = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if actual != expect_len {
+            bail!(
+                "{}: shard file is {actual} bytes but {expect_len} were expected \
+                 ({entries} records of {record} bytes + {HEADER}-byte header) — \
+                 the file is truncated or from a different run",
+                path.display()
+            );
+        }
+        let slots = slots_budget.min(entries.div_ceil(WINDOW)).max(1);
+        Ok(WindowedRecords {
+            file: RefCell::new(file),
+            cache: RefCell::new(WindowCache {
+                tags: vec![-1; slots],
+                data: vec![0; slots * WINDOW * record],
+            }),
+            path: path.display().to_string(),
+            record,
+            entries,
+            slots,
+            hits: Cell::new(0),
+            misses: Cell::new(0),
+        })
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.slots * WINDOW * self.record + self.slots * 8
+    }
+
+    /// Copy record `idx` into `out[..record]` through the window cache.
+    #[inline]
+    fn read_into(&self, idx: usize, out: &mut [u8]) {
+        debug_assert!(idx < self.entries, "{}: record {idx} out of range", self.path);
+        let record = self.record;
+        let window = idx / WINDOW;
+        let within = idx % WINDOW;
+        let slot = window % self.slots;
+        let mut cache = self.cache.borrow_mut();
+        if cache.tags[slot] != window as i64 {
+            self.misses.set(self.misses.get() + 1);
+            let start = window * WINDOW;
+            let len = WINDOW.min(self.entries - start);
+            let mut file = self.file.borrow_mut();
+            // I/O failures after open-time validation are unrecoverable
+            // mid-sweep (the hot read path returns values, not Results);
+            // name the file so the abort is actionable.
+            file.seek(SeekFrom::Start((HEADER + start * record) as u64))
+                .unwrap_or_else(|e| panic!("{}: seek to window {window} failed: {e}", self.path));
+            let base = slot * WINDOW * record;
+            file.read_exact(&mut cache.data[base..base + len * record])
+                .unwrap_or_else(|e| panic!("{}: read of window {window} failed: {e}", self.path));
+            cache.tags[slot] = window as i64;
+        } else {
+            self.hits.set(self.hits.get() + 1);
+        }
+        let off = slot * WINDOW * record + within * record;
+        out[..record].copy_from_slice(&cache.data[off..off + record]);
+    }
+}
+
+/// Read access to one *committed* level across all of its shard files.
+///
+/// Every worker opens its own reader (own file handles + caches), so the
+/// shard-parallel sweep needs no cross-thread synchronisation; colex
+/// locality of the drop-one ranks keeps the per-shard window caches hot
+/// exactly as in the unsharded spill path.
+pub struct ShardedLevelReader<M: VarMask> {
+    pub k: usize,
+    spec: ShardSpec,
+    /// `.qr` reader per shard (`None` for empty shards).
+    qr: Vec<Option<WindowedRecords>>,
+    /// `.bps` reader per shard (`None` for empty shards and at level 0,
+    /// which has no best-parent records).
+    bps: Vec<Option<WindowedRecords>>,
+    _width: PhantomData<M>,
+}
+
+impl<M: VarMask> ShardedLevelReader<M> {
+    pub fn open(run: &ShardRun, binom: &BinomTable, k: usize) -> Result<ShardedLevelReader<M>> {
+        debug_assert_eq!(run.mask_bytes, M::BYTES);
+        let spec = run.spec(binom, k);
+        let slots = slot_cap(spec.shards);
+        let mut qr = Vec::with_capacity(spec.shards);
+        let mut bps = Vec::with_capacity(spec.shards);
+        for s in 0..spec.shards {
+            let entries = spec.entries(s) as usize;
+            if entries == 0 {
+                qr.push(None);
+                bps.push(None);
+                continue;
+            }
+            qr.push(Some(WindowedRecords::open(
+                &run.shard_file(k, s, "qr"),
+                M::BYTES,
+                k,
+                KIND_QR,
+                QR_RECORD,
+                entries,
+                slots,
+            )?));
+            bps.push(if k == 0 {
+                None
+            } else {
+                Some(WindowedRecords::open(
+                    &run.shard_file(k, s, "bps"),
+                    M::BYTES,
+                    k,
+                    KIND_BPS,
+                    record_bytes::<M>(),
+                    entries * k,
+                    slots,
+                )?)
+            });
+        }
+        Ok(ShardedLevelReader {
+            k,
+            spec,
+            qr,
+            bps,
+            _width: PhantomData,
+        })
+    }
+
+    /// `(log Q, log R)` of the subset at global rank `t` — one windowed
+    /// record read (the hot transition loop needs both per drop-rank).
+    #[inline]
+    pub fn qr_at(&self, t: usize) -> (f64, f64) {
+        let (s, local) = self.spec.locate(t as u64);
+        let mut buf = [0u8; QR_RECORD];
+        self.qr[s]
+            .as_ref()
+            .expect("rank routed to an empty shard")
+            .read_into(local as usize, &mut buf);
+        (
+            f64::from_le_bytes(buf[..8].try_into().unwrap()),
+            f64::from_le_bytes(buf[8..].try_into().unwrap()),
+        )
+    }
+
+    /// `log Q` of the subset at global rank `t`.
+    #[inline]
+    pub fn q_at(&self, t: usize) -> f64 {
+        self.qr_at(t).0
+    }
+
+    /// `log R` of the subset at global rank `t`.
+    #[inline]
+    pub fn r_at(&self, t: usize) -> f64 {
+        self.qr_at(t).1
+    }
+
+    /// Best family score + argmax parent mask at flat index `t*k + pos`.
+    #[inline]
+    pub fn bps_at(&self, idx: usize) -> (f64, M) {
+        let t = idx / self.k;
+        let pos = idx % self.k;
+        let (s, local) = self.spec.locate(t as u64);
+        let mut buf = [0u8; 16];
+        let record = record_bytes::<M>();
+        self.bps[s]
+            .as_ref()
+            .expect("bps read at level 0 or empty shard")
+            .read_into(local as usize * self.k + pos, &mut buf[..record]);
+        let score = f64::from_le_bytes(buf[..8].try_into().unwrap());
+        let mut raw = [0u8; 8];
+        raw[..M::BYTES].copy_from_slice(&buf[8..8 + M::BYTES]);
+        (score, M::from_u64(u64::from_le_bytes(raw)))
+    }
+
+    /// Resident bytes of this reader's window caches (memory accounting).
+    pub fn resident_bytes(&self) -> usize {
+        let sum = |files: &[Option<WindowedRecords>]| -> usize {
+            files
+                .iter()
+                .flatten()
+                .map(WindowedRecords::resident_bytes)
+                .sum()
+        };
+        sum(&self.qr) + sum(&self.bps)
+    }
+}
+
+/// Read one record of a shard file without a cache (used a handful of
+/// times per run: reconstruction + the final score).
+fn read_one_record(
+    path: &Path,
+    width_bytes: usize,
+    k: usize,
+    kind: u8,
+    record: usize,
+    idx: u64,
+    out: &mut [u8],
+) -> Result<()> {
+    let mut file =
+        File::open(path).with_context(|| format!("opening shard file {}", path.display()))?;
+    let mut header = [0u8; HEADER];
+    file.read_exact(&mut header)
+        .with_context(|| format!("reading header of {}", path.display()))?;
+    decode_header(&header, width_bytes, k, kind, &path.display().to_string())?;
+    file.seek(SeekFrom::Start(HEADER as u64 + idx * record as u64))?;
+    file.read_exact(&mut out[..record])
+        .with_context(|| format!("reading record {idx} of {}", path.display()))?;
+    Ok(())
+}
+
+/// `log R(V)` of a fully committed run: the single `.qr` record of
+/// level `p`.
+pub fn final_score<M: VarMask>(run: &ShardRun) -> Result<f64> {
+    let spec = ShardSpec::new(1, run.shards);
+    let (s, local) = spec.locate(0);
+    let mut buf = [0u8; QR_RECORD];
+    read_one_record(
+        &run.shard_file(run.p, s, "qr"),
+        M::BYTES,
+        run.p,
+        KIND_QR,
+        QR_RECORD,
+        local,
+        &mut buf,
+    )?;
+    Ok(f64::from_le_bytes(buf[8..].try_into().unwrap()))
+}
+
+/// Disk-backed reconstruction (§3 step 4–5): walk the sinks from the
+/// full set down to ∅ reading **one** `.sink` record per level, instead
+/// of indexing `(1+mask)·2^p` bytes of in-RAM tables — this is what
+/// frees the sharded path from the sink-table RAM cap.
+pub fn reconstruct_from_disk<M: VarMask>(
+    run: &ShardRun,
+    binom: &BinomTable,
+) -> Result<(Dag, Vec<usize>)> {
+    let p = run.p;
+    let mut mask = M::low_bits(p);
+    let mut parents = vec![0u64; p];
+    let mut order_rev = Vec::with_capacity(p);
+    let record = sink_record_bytes::<M>();
+    let mut buf = [0u8; 9];
+    for k in (1..=p).rev() {
+        let rank = colex_rank(binom, mask);
+        let (s, local) = run.spec(binom, k).locate(rank);
+        read_one_record(
+            &run.shard_file(k, s, "sink"),
+            M::BYTES,
+            k,
+            KIND_SINK,
+            record,
+            local,
+            &mut buf,
+        )?;
+        let x = buf[0] as usize;
+        let mut raw = [0u8; 8];
+        raw[..M::BYTES].copy_from_slice(&buf[1..1 + M::BYTES]);
+        let pmask = u64::from_le_bytes(raw);
+        // range-check before mask ops: a rotted sink byte must hit the
+        // named corruption error below, not a bit-shift/index panic
+        if x >= p || !mask.contains(x) {
+            bail!(
+                "{}: recorded sink X{x} is not in the rank-{rank} subset — \
+                 the run directory is corrupt or from a different dataset",
+                run.shard_file(k, s, "sink").display()
+            );
+        }
+        if pmask & !mask.without(x).to_u64() != 0 {
+            bail!(
+                "{}: recorded parent set escapes its subset (rank {rank})",
+                run.shard_file(k, s, "sink").display()
+            );
+        }
+        parents[x] = pmask;
+        order_rev.push(x);
+        mask = mask.without(x);
+    }
+    order_rev.reverse();
+    Ok((Dag::from_parents(parents), order_rev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bnsl_shard_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn spec_partitions_every_rank_exactly_once() {
+        for size in [1u64, 2, 5, 16, 100, 184_756] {
+            for shards in [1usize, 2, 4, 8, 64] {
+                let spec = ShardSpec::new(size, shards);
+                let mut covered = 0u64;
+                for s in 0..shards {
+                    let (lo, hi) = spec.bounds(s);
+                    assert_eq!(lo, covered.min(size), "contiguous");
+                    assert!(hi >= lo);
+                    covered = hi;
+                    for rank in lo..hi.min(lo + 50) {
+                        let (s2, local) = spec.locate(rank);
+                        assert_eq!(s2, s, "rank {rank} of {size}/{shards}");
+                        assert_eq!(local, rank - lo);
+                    }
+                }
+                assert_eq!(covered, size, "all ranks covered");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_top_bits_for_power_of_two_sizes() {
+        // size 2^10, 4 shards: shard index == top 2 bits of the rank.
+        let spec = ShardSpec::new(1024, 4);
+        for rank in (0..1024u64).step_by(17) {
+            assert_eq!(spec.locate(rank).0 as u64, rank >> 8);
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_commit() {
+        let dir = tmpdir("manifest");
+        let opts = ShardOptions {
+            shards: 4,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let mut run =
+            ShardRun::open_or_create(&opts, 12, 200, 4, "Jeffreys", "00ff00ff00ff00ff").unwrap();
+        assert_eq!(run.completed, None);
+        run.commit_level(0).unwrap();
+        run.commit_level(1).unwrap();
+        let back = ShardRun::open(&dir).unwrap();
+        assert_eq!(back.completed, Some(1));
+        assert_eq!(back.p, 12);
+        assert_eq!(back.shards, 4);
+        assert_eq!(back.score, "Jeffreys");
+        // resume path: same identity is accepted, shards come from the manifest
+        let resumed = ShardRun::open_or_create(
+            &ShardOptions {
+                shards: 0,
+                dir: dir.clone(),
+                ..Default::default()
+            },
+            12,
+            200,
+            4,
+            "Jeffreys",
+            "00ff00ff00ff00ff",
+        )
+        .unwrap();
+        assert_eq!(resumed.shards, 4);
+        assert_eq!(resumed.completed, Some(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_rejects_identity_mismatches_by_name() {
+        let dir = tmpdir("mismatch");
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "aaaa").unwrap();
+        let err = ShardRun::open_or_create(&opts, 11, 100, 4, "Bic", "aaaa")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("p"), "{err}");
+        let err = ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "bbbb")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        let err = ShardRun::open_or_create(
+            &ShardOptions {
+                shards: 8,
+                dir: dir.clone(),
+                ..Default::default()
+            },
+            10,
+            100,
+            4,
+            "Bic",
+            "aaaa",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("shards"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_non_power_of_two_shards() {
+        let dir = tmpdir("pow2");
+        let err = ShardRun::open_or_create(
+            &ShardOptions {
+                shards: 3,
+                dir: dir.clone(),
+                ..Default::default()
+            },
+            8,
+            50,
+            4,
+            "Jeffreys",
+            "cc",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("power of two"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_across_shards() {
+        let dir = tmpdir("roundtrip");
+        let p = 9;
+        let k = 4;
+        let binom = BinomTable::new(p);
+        let opts = ShardOptions {
+            shards: 4,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let mut run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "ee").unwrap();
+        for lvl in 0..k {
+            run.commit_level(lvl).ok();
+        }
+        let spec = run.spec(&binom, k);
+        let size = spec.size as usize;
+        // synthesise a known level: q = rank, r = -rank, bps = rank*k+j,
+        // bpm = j-th drop mask stand-in (rank+j as mask bits)
+        for s in 0..spec.shards {
+            let (lo, hi) = spec.bounds(s);
+            if lo >= hi {
+                continue;
+            }
+            let mut w = ShardWriterSet::<u32>::create(&run, k, s).unwrap();
+            let mut sinks = SinkBuf::default();
+            for t in lo..hi {
+                let q = [t as f64];
+                let r = [-(t as f64)];
+                let bps: Vec<f64> = (0..k).map(|j| (t as usize * k + j) as f64).collect();
+                let bpm: Vec<u32> = (0..k).map(|j| (t as u32) ^ (j as u32)).collect();
+                sinks.put(0u32, (t % 7) as u8, t as u32);
+                w.append(&q, &r, &bps, &bpm, &mut sinks).unwrap();
+            }
+            let (entries, bytes) = w.finish().unwrap();
+            assert_eq!(entries, hi - lo);
+            assert!(bytes > 0);
+        }
+        run.commit_level(k).unwrap();
+        let reader = ShardedLevelReader::<u32>::open(&run, &binom, k).unwrap();
+        for t in (0..size).step_by(3) {
+            assert_eq!(reader.q_at(t), t as f64);
+            assert_eq!(reader.r_at(t), -(t as f64));
+            for j in 0..k {
+                let (s, m) = reader.bps_at(t * k + j);
+                assert_eq!(s, (t * k + j) as f64);
+                assert_eq!(m, (t as u32) ^ (j as u32));
+            }
+        }
+        assert!(reader.resident_bytes() > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reader_names_corrupt_and_truncated_files() {
+        let dir = tmpdir("corrupt");
+        let p = 8;
+        let k = 3;
+        let binom = BinomTable::new(p);
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "dd").unwrap();
+        let spec = run.spec(&binom, k);
+        for s in 0..spec.shards {
+            let (lo, hi) = spec.bounds(s);
+            let mut w = ShardWriterSet::<u32>::create(&run, k, s).unwrap();
+            let mut sinks = SinkBuf::default();
+            for t in lo..hi {
+                sinks.put(0u32, 0, 0);
+                w.append(
+                    &[0.0],
+                    &[0.0],
+                    &vec![0.0; k],
+                    &vec![0u32; k],
+                    &mut sinks,
+                )
+                .unwrap();
+            }
+            w.finish().unwrap();
+        }
+        // flip a header byte of shard 1's bps file
+        let victim = run.shard_file(k, 1, "bps");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = ShardedLevelReader::<u32>::open(&run, &binom, k)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains(&victim.display().to_string()),
+            "error names the corrupt file: {err}"
+        );
+        assert!(err.contains("magic"), "{err}");
+        // restore the header but truncate the tail: length check fires
+        bytes[0] ^= 0xFF;
+        bytes.truncate(bytes.len() - 1);
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = ShardedLevelReader::<u32>::open(&run, &binom, k)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_data_and_score() {
+        let a = synth::binary(5, 40, 1);
+        let b = synth::binary(5, 40, 2);
+        let fa = run_fingerprint(&a, ScoreKind::Jeffreys);
+        assert_eq!(fa, run_fingerprint(&a, ScoreKind::Jeffreys), "stable");
+        assert_ne!(fa, run_fingerprint(&b, ScoreKind::Jeffreys), "data-sensitive");
+        assert_ne!(
+            fa,
+            run_fingerprint(&a, ScoreKind::Bic),
+            "score-sensitive"
+        );
+        assert_ne!(
+            run_fingerprint(&a, ScoreKind::Bdeu { ess: 1.0 }),
+            run_fingerprint(&a, ScoreKind::Bdeu { ess: 2.0 }),
+            "hyperparameter-sensitive"
+        );
+        assert_eq!(fa.len(), 16, "16 hex chars");
+    }
+
+    #[test]
+    fn reader_cache_is_bounded_by_file_size_and_shard_count() {
+        // tiny shard: one window, not SLOTS of them
+        assert!(reader_cache_bytes(10, 12, 1) <= WINDOW * 12 + 8);
+        // huge shard, one shard: capped at SLOTS windows
+        assert_eq!(
+            reader_cache_bytes(100 * SLOTS * WINDOW, 12, 1),
+            SLOTS * WINDOW * 12 + SLOTS * 8
+        );
+        // the slot budget divides across shards, so aggregate cache is
+        // constant in the shard count
+        let total_4: usize = (0..4).map(|_| reader_cache_bytes(usize::MAX / 256, 12, 4)).sum();
+        assert_eq!(total_4, SLOTS * WINDOW * 12 + SLOTS * 8);
+        // and never collapses to zero
+        assert!(reader_cache_bytes(1, 16, 1024) >= WINDOW * 16);
+    }
+}

@@ -11,12 +11,20 @@
 //! # On-disk format (v1)
 //!
 //! A 16-byte header — magic `b"BNSLSPIL"`, format-version byte, mask-width
-//! byte (4 = `u32`, 8 = `u64`), level `k`, 5 reserved bytes — followed by
-//! fixed-size records: little-endian `f64` best score + the argmax parent
-//! mask at the tagged width. Records are therefore 12 bytes on the narrow
-//! path (unchanged from the untagged seed layout) and 16 bytes on the
-//! wide path; a reader always validates magic/version/width before
-//! trusting offsets, so mixing widths across files is caught immediately.
+//! byte (4 = `u32`, 8 = `u64`), level `k`, record-kind byte, 4 reserved
+//! bytes — followed by fixed-size records: little-endian `f64` best score
+//! + the argmax parent mask at the tagged width. Records are therefore
+//! 12 bytes on the narrow path (unchanged from the untagged seed layout)
+//! and 16 bytes on the wide path; a reader always validates
+//! magic/version/width/kind before trusting offsets, so mixing widths or
+//! record kinds across files is caught immediately.
+//!
+//! The same header (with different kind bytes) fronts the sharded
+//! coordinator's `.bps`/`.qr`/`.sink` files — see
+//! [`crate::coordinator::shard`] — and the full byte-level specification,
+//! including a worked hex example, lives in
+//! [`docs/FORMATS.md`](https://github.com/paper-repo-growth/bnsl/blob/main/docs/FORMATS.md)
+//! (in-tree: `docs/FORMATS.md`).
 //!
 //! Colex locality makes the cache effective: the drop-one ranks of
 //! consecutively enumerated masks are themselves nearly consecutive, so
@@ -31,21 +39,88 @@ use std::marker::PhantomData;
 use std::path::Path;
 
 /// Entries per cache window (48 KiB windows narrow / 64 KiB wide).
-const WINDOW: usize = 4096;
-/// Direct-mapped cache slots (64 windows → 3–4 MiB resident).
-const SLOTS: usize = 64;
+/// Shared with the sharded readers in [`crate::coordinator::shard`].
+pub(crate) const WINDOW: usize = 4096;
+/// Direct-mapped cache slots (64 windows → 3–4 MiB resident; the
+/// sharded readers divide this budget across a level's shards).
+pub(crate) const SLOTS: usize = 64;
 
 /// Spill-file magic.
-const MAGIC: &[u8; 8] = b"BNSLSPIL";
+pub(crate) const MAGIC: &[u8; 8] = b"BNSLSPIL";
 /// Current format version.
-const VERSION: u8 = 1;
-/// Header bytes: magic(8) + version(1) + mask width(1) + k(1) + reserved(5).
-const HEADER: usize = 16;
+pub(crate) const VERSION: u8 = 1;
+/// Header bytes: magic(8) + version(1) + mask width(1) + k(1) + kind(1)
+/// + reserved(4).
+pub(crate) const HEADER: usize = 16;
+
+/// Record kinds stored in header byte 11 (see `docs/FORMATS.md`).
+/// `KIND_BPS` is 0 so pre-shard spill files (which zero-filled the
+/// reserved bytes) remain readable.
+pub(crate) const KIND_BPS: u8 = 0;
+/// `q`/`r` subset scores: two little-endian `f64`s per record.
+pub(crate) const KIND_QR: u8 = 1;
+/// Sink records: sink variable byte + parent mask per record.
+pub(crate) const KIND_SINK: u8 = 2;
 
 /// Bytes per record at width `M`: little-endian f64 score + mask.
 #[inline]
-const fn record_bytes<M: VarMask>() -> usize {
+pub(crate) const fn record_bytes<M: VarMask>() -> usize {
     8 + M::BYTES
+}
+
+/// Build the 16-byte v1 header for a file of `kind` records at level `k`
+/// over masks of `width_bytes`.
+pub(crate) fn encode_header(width_bytes: u8, k: u8, kind: u8) -> [u8; HEADER] {
+    let mut header = [0u8; HEADER];
+    header[..8].copy_from_slice(MAGIC);
+    header[8] = VERSION;
+    header[9] = width_bytes;
+    header[10] = k;
+    header[11] = kind;
+    header
+}
+
+/// Validate a v1 header against the expected width/level/kind. `name` is
+/// the file (path) the error message should blame — resume diagnostics
+/// depend on it.
+pub(crate) fn decode_header(
+    header: &[u8; HEADER],
+    expect_width: usize,
+    expect_k: usize,
+    expect_kind: u8,
+    name: &str,
+) -> Result<()> {
+    if &header[..8] != MAGIC {
+        bail!("{name}: spill file header corrupt (bad magic)");
+    }
+    if header[8] != VERSION {
+        bail!(
+            "{name}: spill file format v{} unsupported (reader is v{VERSION})",
+            header[8]
+        );
+    }
+    if header[9] as usize != expect_width {
+        bail!(
+            "{name}: spill file mask width {} bytes does not match reader width {} bytes",
+            header[9],
+            expect_width
+        );
+    }
+    if header[10] as usize != expect_k {
+        bail!(
+            "{name}: spill file is for level {} but the reader expected level {}",
+            header[10],
+            expect_k
+        );
+    }
+    if header[11] != expect_kind {
+        bail!(
+            "{name}: spill file holds record kind {} but the reader expected kind {}",
+            header[11],
+            expect_kind
+        );
+    }
+    Ok(())
 }
 
 /// A frontier level whose `bps`/`bpm` arrays live on disk (masks of
@@ -100,12 +175,7 @@ impl<M: VarMask> SpilledLevelWriter<M> {
         // unlink immediately: the open handle keeps the data readable and
         // the file vanishes automatically on drop/crash (POSIX).
         let _ = std::fs::remove_file(&path);
-        let mut header = [0u8; HEADER];
-        header[..8].copy_from_slice(MAGIC);
-        header[8] = VERSION;
-        header[9] = M::BYTES as u8;
-        header[10] = k as u8;
-        file.write_all(&header)?;
+        file.write_all(&encode_header(M::BYTES as u8, k as u8, KIND_BPS))?;
         Ok(SpilledLevelWriter {
             k,
             file,
@@ -138,22 +208,13 @@ impl<M: VarMask> SpilledLevelWriter<M> {
         self.file.seek(SeekFrom::Start(0))?;
         let mut header = [0u8; HEADER];
         self.file.read_exact(&mut header)?;
-        if &header[..8] != MAGIC {
-            bail!("spill file header corrupt (bad magic)");
-        }
-        if header[8] != VERSION {
-            bail!(
-                "spill file format v{} unsupported (reader is v{VERSION})",
-                header[8]
-            );
-        }
-        if header[9] as usize != M::BYTES {
-            bail!(
-                "spill file mask width {} bytes does not match reader width {} bytes",
-                header[9],
-                M::BYTES
-            );
-        }
+        decode_header(
+            &header,
+            M::BYTES,
+            self.k,
+            KIND_BPS,
+            &format!("spill level {}", self.k),
+        )?;
         Ok(SpilledLevel {
             k: self.k,
             q,

@@ -177,15 +177,24 @@ impl<'a> JaxScorer<'a> {
 
 impl<'a> SubsetScorer for JaxScorer<'a> {
     fn log_q(&mut self, mask: u32) -> f64 {
-        let mut out = Vec::with_capacity(1);
-        self.log_q_batch(&[mask], &mut out);
+        let mut out = [0.0f64];
+        self.log_q_batch_into(&[mask], &mut out);
         out[0]
     }
 
     fn log_q_batch(&mut self, masks: &[u32], out: &mut Vec<f64>) {
         out.clear();
-        out.reserve(masks.len());
+        out.resize(masks.len(), 0.0);
+        self.log_q_batch_into(masks, out);
+    }
+
+    // The slice form is the primitive here: both batch entry points
+    // stage `B`-row PJRT calls, so per-shard workers driving
+    // `log_q_batch_into` get the same amortisation as the Vec form.
+    fn log_q_batch_into(&mut self, masks: &[u32], out: &mut [f64]) {
+        debug_assert_eq!(masks.len(), out.len());
         let b = self.artifact.shape().b;
+        let mut off = 0usize;
         for chunk in masks.chunks(b) {
             for (row, &mask) in chunk.iter().enumerate() {
                 self.fill_row(row, mask);
@@ -197,8 +206,11 @@ impl<'a> SubsetScorer for JaxScorer<'a> {
                 .artifact
                 .run(&self.idx, &self.sigma, &self.nvalid)
                 .expect("PJRT execution failed");
-            out.extend(scores[..chunk.len()].iter().map(|&v| v as f64));
+            for (slot, &v) in out[off..off + chunk.len()].iter_mut().zip(&scores[..chunk.len()]) {
+                *slot = v as f64;
+            }
             self.evals += chunk.len() as u64;
+            off += chunk.len();
         }
     }
 

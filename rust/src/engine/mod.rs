@@ -48,6 +48,12 @@ pub trait ScoreEngine<M: VarMask = u32> {
 }
 
 /// Mutable per-thread scoring handle over masks of width `M`.
+///
+/// Both solver paths batch through one scorer handle per worker: the
+/// resident solver holds one per level-sweep thread, the sharded
+/// coordinator one per shard job — so engines can keep per-handle
+/// scratch (contingency counters, PJRT staging buffers) without any
+/// cross-thread synchronisation.
 pub trait SubsetScorer<M: VarMask = u32> {
     /// `pot(S)` for one subset mask.
     fn log_q(&mut self, mask: M) -> f64;
@@ -60,6 +66,18 @@ pub trait SubsetScorer<M: VarMask = u32> {
         for &m in masks {
             let v = self.log_q(m);
             out.push(v);
+        }
+    }
+
+    /// Batched evaluation into a caller-sized slice
+    /// (`out.len() == masks.len()`) — the allocation-free form the level
+    /// workers drive their fixed-size shard batches through. Engines
+    /// that override [`SubsetScorer::log_q_batch`] should override this
+    /// too (it is the one the solvers call).
+    fn log_q_batch_into(&mut self, masks: &[M], out: &mut [f64]) {
+        debug_assert_eq!(masks.len(), out.len());
+        for (slot, &m) in out.iter_mut().zip(masks) {
+            *slot = self.log_q(m);
         }
     }
 

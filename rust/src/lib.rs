@@ -41,7 +41,7 @@
 //! | width | role | exact DP cap | search cap |
 //! |-------|------|--------------|------------|
 //! | `u32` | **narrow path** — the seed's original representation; the default type parameter everywhere | [`MAX_VARS`] = 30 | — |
-//! | `u64` | **wide path** — spill-assisted large exact runs and wide approximate searches | [`MAX_VARS_WIDE`] = 34 | [`MAX_NET_VARS`] = 64 |
+//! | `u64` | **wide path** — spill-assisted large exact runs and wide approximate searches | [`MAX_VARS_WIDE`] = 34 (in-RAM), [`MAX_VARS_SHARDED`] = 36 (sharded, `--shards`) | [`MAX_NET_VARS`] = 64 |
 //!
 //! Everything between the CLI and the kernels — [`bitset::LevelIter`],
 //! colex ranking, [`score::counts::Counter`] radix coding,
@@ -59,12 +59,17 @@
 //! * **`MAX_VARS` = 30** — the `u32` format limit with headroom for the
 //!   `2^p`-indexed reconstruction tables (the paper's own analysis tops
 //!   out at p = 28–29 on 32 GB).
-//! * **`MAX_VARS_WIDE` = 34** — the wide exact-DP cap. The binding
-//!   constraints are the `(1 + 8)·2^p`-byte sink tables and the in-RAM
-//!   `q`/`r` frontier (`16·C(p, p/2)` bytes), both of which the §5.3
-//!   disk spill does *not* remove; beyond p ≈ 34 those alone exceed
-//!   commodity RAM, which is exactly the regime future sharding PRs
-//!   target (see ROADMAP.md).
+//! * **`MAX_VARS_WIDE` = 34** — the wide *in-RAM* exact-DP cap. The
+//!   binding constraints are the `(1 + 8)·2^p`-byte sink tables and the
+//!   in-RAM `q`/`r` frontier (`16·C(p, p/2)` bytes), both of which the
+//!   §5.3 disk spill does *not* remove.
+//! * **`MAX_VARS_SHARDED` = 36** — the sharded wide cap
+//!   ([`solver::solve_sharded`]): the frontier *and* the sink tables
+//!   stream through per-shard files ([`coordinator::shard`]), so RAM
+//!   stops binding and disk does — single-digit TB of shard files at
+//!   the cap, priced by [`coordinator::plan::sharded_plan`]. Sharded
+//!   runs checkpoint a `manifest.json` per level and resume with
+//!   `--resume <dir>`.
 //! * **`MAX_NET_VARS` = 64** — one `u64` word of adjacency per node for
 //!   generative networks, hill climbing, PC-Stable and the hybrid
 //!   search (`search::hill_climb` handles p = 48 datasets end-to-end;
@@ -104,8 +109,18 @@ pub const MAX_VARS: usize = 30;
 /// path** — the spill-assisted 31–34 range. The `2^p` sink tables
 /// (9 bytes/subset) and the in-RAM `q`/`r` frontier are the binding
 /// constraints the §5.3 disk spill cannot remove; see the crate-level
-/// "mask widths and limits" section.
+/// "mask widths and limits" section. The sharded coordinator removes
+/// both and extends the wide path to [`MAX_VARS_SHARDED`].
 pub const MAX_VARS_WIDE: usize = 34;
+
+/// Cap on the number of variables for the **sharded wide exact-DP
+/// path** ([`solver::solve_sharded`] with `--shards`): the whole
+/// frontier and the sink tables stream through per-shard files, so RAM
+/// stops binding and the constraint becomes *disk* — single-digit TB of
+/// shard files at the cap (`C(p, p/2)` records per peak level; priced by
+/// [`coordinator::plan::sharded_plan`]), plus `u8`-indexed level tags in
+/// the v1 header format.
+pub const MAX_VARS_SHARDED: usize = 36;
 
 /// Separate, looser cap for *generative* networks, datasets and the
 /// approximate searches (`u64` adjacency): ALARM has 37 nodes, and
@@ -122,5 +137,17 @@ pub fn exact_dp_cap<M: bitset::VarMask>() -> usize {
         MAX_VARS
     } else {
         MAX_VARS_WIDE
+    }
+}
+
+/// The exact-DP variable cap for a mask width when the **sharded**
+/// coordinator drives the run: the narrow format limit is unchanged (the
+/// mask itself binds), but the wide path extends to [`MAX_VARS_SHARDED`]
+/// because the frontier and sink tables live on disk.
+pub fn sharded_dp_cap<M: bitset::VarMask>() -> usize {
+    if M::BITS <= 32 {
+        MAX_VARS
+    } else {
+        MAX_VARS_SHARDED
     }
 }

@@ -47,6 +47,9 @@ pub struct SolveStats {
     /// Number of full passes over the `2^p` subset lattice the algorithm
     /// performed (the paper's headline: proposed = 1, existing ≥ 2).
     pub traversals: u32,
+    /// Levels reused from a previous run's committed shard files
+    /// (`--resume`; 0 for fresh and unsharded runs).
+    pub resumed_levels: u32,
     /// Peak bytes of solver-owned arrays, analytically accounted
     /// (frontier levels + global sink tables). Measured heap peaks come
     /// from [`crate::memtrack`] in the bench harness.
@@ -95,6 +98,7 @@ impl SolveResult {
                     .set("bps_updates", self.stats.bps_updates)
                     .set("sink_updates", self.stats.sink_updates)
                     .set("traversals", self.stats.traversals)
+                    .set("resumed_levels", self.stats.resumed_levels)
                     .set("peak_state_bytes", self.stats.peak_state_bytes)
                     .set("spilled_bytes", self.stats.spilled_bytes)
                     .set("wall_secs", self.stats.wall.as_secs_f64()),

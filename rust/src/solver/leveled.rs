@@ -25,8 +25,15 @@
 use super::common::{reconstruct, SolveOptions, SolveResult, SolveStats};
 use crate::bitset::{colex_unrank, BinomTable, LevelIter, VarMask};
 use crate::coordinator::plan::memory_plan;
+use crate::coordinator::shard::{
+    final_score, reconstruct_from_disk, run_fingerprint, ShardOptions, ShardRun,
+    ShardWriterSet, ShardedLevelReader, SinkBuf, SinkOut,
+};
 use crate::coordinator::spill::{SpilledLevel, SpilledLevelWriter};
 use crate::engine::ScoreEngine;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 /// Engine reference that records whether cross-thread sharing is allowed.
@@ -60,6 +67,13 @@ pub struct LeveledSolver<'e, M: VarMask = u32> {
 trait PrevLevel<M: VarMask> {
     fn q(&self, t: usize) -> f64;
     fn r(&self, t: usize) -> f64;
+    /// `(log Q, log R)` of the subset at rank `t` — the transition loop
+    /// needs both for the same rank, and the disk-backed reader serves
+    /// them from a single 16-byte record, so backings may fuse the read.
+    #[inline]
+    fn qr(&self, t: usize) -> (f64, f64) {
+        (self.q(t), self.r(t))
+    }
     /// best family score + argmax parent mask at flat index `t*k + pos`
     fn bps(&self, idx: usize) -> (f64, M);
 }
@@ -171,6 +185,21 @@ impl<M: VarMask> SinkTables<M> {
     }
 }
 
+/// [`SinkOut`] adapter over the shared in-RAM tables: each worker holds
+/// its own adapter, all pointing at the same disjointly-written arrays.
+struct TableSink<'t, M: VarMask> {
+    tables: &'t SinkTables<M>,
+}
+
+impl<'t, M: VarMask> SinkOut<M> for TableSink<'t, M> {
+    #[inline]
+    fn put(&mut self, mask: M, sink: u8, pmask: M) {
+        // Safety: each mask is processed by exactly one worker (disjoint
+        // colex rank ranges), so no two threads write the same index.
+        unsafe { self.tables.write(mask, sink, pmask) };
+    }
+}
+
 impl<'e> LeveledSolver<'e, u32> {
     /// Narrow-path solver over a thread-safe engine (multithreading
     /// available). For the wide path use [`LeveledSolver::new_generic`]
@@ -246,13 +275,15 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
         let cap = crate::exact_dp_cap::<M>();
         assert!(
             p <= cap,
-            "p={p} exceeds the {}-bit exact-DP cap of {cap} variables \
-             (narrow u32 path: p ≤ {}; wide u64 path: p ≤ {}, pair with \
-             SolveOptions::spill_dir near the top; approximate searches \
-             handle p ≤ {})",
+            "p={p} exceeds the {}-bit exact-DP cap of {cap} variables. \
+             Next-larger configurations that work: narrow u32 path p ≤ {}; \
+             wide u64 path p ≤ {} (pair with SolveOptions::spill_dir near \
+             the top); sharded coordinator (solve_sharded / --shards) \
+             p ≤ {}; approximate searches (hillclimb/hybrid) p ≤ {}",
             M::BITS,
             crate::MAX_VARS,
             crate::MAX_VARS_WIDE,
+            crate::MAX_VARS_SHARDED,
             crate::MAX_NET_VARS,
         );
         let binom = BinomTable::new(p);
@@ -323,23 +354,23 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
                             level,
                             start,
                             take,
-                            iter.clone(),
+                            &mut iter,
                             &mut q1[start..start + take],
                             &mut r1[start..start + take],
                             &mut bps_buf[..take * k1],
                             &mut bpm_buf[..take * k1],
-                            &tables,
+                            &mut TableSink { tables: &tables },
                         ),
                         Frontier::Disk(spilled) => worker.run_range(
                             spilled,
                             start,
                             take,
-                            iter.clone(),
+                            &mut iter,
                             &mut q1[start..start + take],
                             &mut r1[start..start + take],
                             &mut bps_buf[..take * k1],
                             &mut bpm_buf[..take * k1],
-                            &tables,
+                            &mut TableSink { tables: &tables },
                         ),
                     };
                     let _ = evals0; // scorer accumulates; read once below
@@ -348,9 +379,6 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
                     writer
                         .append(&bps_buf[..take * k1], &bpm_buf[..take * k1])
                         .expect("spill append");
-                    for _ in 0..take {
-                        iter.next();
-                    }
                     start += take;
                 }
                 score_evals += worker.scorer.evals();
@@ -374,12 +402,12 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
                         level,
                         0,
                         size1,
-                        LevelIter::new(p, k1),
+                        &mut LevelIter::new(p, k1),
                         &mut cur.q,
                         &mut cur.r,
                         &mut cur.bps,
                         &mut cur.bpm,
-                        &tables,
+                        &mut TableSink { tables: &tables },
                     )
                 }
                 (Frontier::Disk(spilled), _) => {
@@ -389,12 +417,12 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
                         spilled,
                         0,
                         size1,
-                        LevelIter::new(p, k1),
+                        &mut LevelIter::new(p, k1),
                         &mut cur.q,
                         &mut cur.r,
                         &mut cur.bps,
                         &mut cur.bpm,
-                        &tables,
+                        &mut TableSink { tables: &tables },
                     )
                 }
                 (Frontier::Ram(level), threads) => self.run_parallel(
@@ -465,8 +493,11 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
                     scope.spawn(move || {
                         let mut worker = LevelWorker::new(engine, binom, k1, batch);
                         let first = colex_unrank::<M>(binom, p, k1, startr as u64);
-                        let iter = LevelIter::resume(p, first);
-                        worker.run_range(level, startr, len, iter, q_c, r_c, bps_c, bpm_c, tables)
+                        let mut iter = LevelIter::resume(p, first);
+                        let mut sinks = TableSink { tables };
+                        worker.run_range(
+                            level, startr, len, &mut iter, q_c, r_c, bps_c, bpm_c, &mut sinks,
+                        )
                     })
                 })
                 .collect();
@@ -483,6 +514,282 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
         }
         totals
     }
+}
+
+impl<M: VarMask> PrevLevel<M> for ShardedLevelReader<M> {
+    #[inline]
+    fn q(&self, t: usize) -> f64 {
+        self.q_at(t)
+    }
+
+    #[inline]
+    fn r(&self, t: usize) -> f64 {
+        self.r_at(t)
+    }
+
+    #[inline]
+    fn qr(&self, t: usize) -> (f64, f64) {
+        // one windowed record read serves both scores
+        self.qr_at(t)
+    }
+
+    #[inline]
+    fn bps(&self, idx: usize) -> (f64, M) {
+        self.bps_at(idx)
+    }
+}
+
+/// What a sharded solve produced: the finished result, or a durable
+/// checkpoint (requested via [`ShardOptions::stop_after_level`]) that a
+/// later `--resume` completes.
+#[derive(Debug)]
+pub enum ShardOutcome {
+    Complete(SolveResult),
+    Checkpointed {
+        /// Highest committed level.
+        level: usize,
+        /// Run directory to hand to `--resume`.
+        dir: PathBuf,
+    },
+}
+
+/// Per-worker accumulator for the shard-parallel level loop.
+#[derive(Clone, Copy, Default)]
+struct ShardJobStats {
+    evals: u64,
+    bps_updates: u64,
+    sink_updates: u64,
+    bytes: u64,
+}
+
+/// The shard-parallel variant of [`LeveledSolver::solve`] — the sharded
+/// frontier coordinator's driver.
+///
+/// Each level's `C(p,k)` colex ranks are partitioned into
+/// [`ShardOptions::shards`] contiguous ranges; a pool of scoped workers
+/// drains the shard queue, each worker running the **identical**
+/// `LevelWorker` sweep the resident solver uses (same enumeration
+/// order, same accumulation order, same tie-breaks — results are
+/// bit-identical to the unsharded run) while streaming its shard's
+/// `q`/`r`, best-parent and sink records to per-shard files
+/// ([`crate::coordinator::shard`]). A `manifest.json` commits after
+/// every level, so a killed run resumes at the last completed level; a
+/// finished run reconstructs the optimal network from the per-level
+/// `.sink` files without ever holding the `2^p` sink tables in RAM.
+///
+/// Requires a `Sync` engine (the worker pool shares it); the PJRT-backed
+/// [`crate::engine::JaxEngine`] is excluded by construction.
+pub fn solve_sharded<M: VarMask>(
+    engine: &(dyn ScoreEngine<M> + Sync),
+    options: &ShardOptions,
+) -> Result<ShardOutcome> {
+    let start = Instant::now();
+    let p = engine.p();
+    if p < 1 {
+        bail!("need at least one variable");
+    }
+    let cap = crate::sharded_dp_cap::<M>();
+    if p > cap {
+        bail!(
+            "p={p} exceeds the {}-bit sharded exact-DP cap of {cap} \
+             variables. Next-larger configurations that work: sharded wide \
+             path (u64 masks) p ≤ {}; approximate searches \
+             (--solver hillclimb/hybrid) p ≤ {}",
+            M::BITS,
+            crate::MAX_VARS_SHARDED,
+            crate::MAX_NET_VARS,
+        );
+    }
+    let fingerprint = run_fingerprint(engine.data(), engine.kind());
+    let score_name = format!("{:?}", engine.kind());
+    let mut run = ShardRun::open_or_create(
+        options,
+        p,
+        engine.n(),
+        M::BYTES,
+        &score_name,
+        &fingerprint,
+    )?;
+    let binom = BinomTable::new(p);
+    let batch = options.batch.max(1);
+    let workers = if options.workers == 0 {
+        // One worker per shard is pure overhead past the core count, and
+        // every worker holds read handles for all previous-level shards
+        // — so the default caps at the machine's parallelism.
+        std::thread::available_parallelism()
+            .map_or(run.shards, |n| n.get().min(run.shards))
+    } else {
+        options.workers.clamp(1, run.shards)
+    };
+    // Each worker holds .qr + .bps read handles for every shard of the
+    // previous level plus its 3 writer streams; fail up front with the
+    // remedy instead of dying mid-level on EMFILE.
+    let fds_needed = (workers * (2 * run.shards + 3) + 32) as u64;
+    if let Some(limit) = crate::coordinator::shard::fd_soft_limit() {
+        if fds_needed > limit {
+            bail!(
+                "--shards {} with {workers} workers needs ≈{fds_needed} open \
+                 files but the soft limit is {limit}; raise `ulimit -n`, \
+                 lower --shards, or cap workers with --threads",
+                run.shards
+            );
+        }
+    }
+    let mut stats = SolveStats {
+        traversals: 1,
+        resumed_levels: run.completed.map_or(0, |k| k as u32 + 1),
+        peak_state_bytes: crate::coordinator::plan::sharded_plan(p, run.shards, workers, batch)
+            .peak_resident_bytes as usize,
+        ..Default::default()
+    };
+
+    // A resume whose time-box is already satisfied (stop at or below the
+    // committed level) checkpoints immediately — silently running to
+    // completion would break the contract the flag exists for.
+    if let (Some(stop), Some(done)) = (options.stop_after_level, run.completed) {
+        if stop < p && done >= stop {
+            return Ok(ShardOutcome::Checkpointed {
+                level: done,
+                dir: options.dir.clone(),
+            });
+        }
+    }
+
+    // level 0: one subset (∅), one record, committed like any level
+    if run.completed.is_none() {
+        let mut scorer = engine.scorer();
+        let log_q_empty = scorer.log_q(M::ZERO);
+        stats.score_evals += scorer.evals();
+        drop(scorer);
+        let mut writer = ShardWriterSet::<M>::create(&run, 0, 0)?;
+        let mut sinks = SinkBuf::default();
+        writer.append(&[log_q_empty], &[0.0], &[], &[], &mut sinks)?;
+        let (_, bytes) = writer.finish()?;
+        stats.spilled_bytes += bytes;
+        run.commit_level(0)?;
+        if options.stop_after_level == Some(0) {
+            stats.wall = start.elapsed();
+            return Ok(ShardOutcome::Checkpointed {
+                level: 0,
+                dir: options.dir.clone(),
+            });
+        }
+    }
+
+    let first = run.completed.expect("level 0 committed") + 1;
+    for k1 in first..=p {
+        let spec1 = run.spec(&binom, k1);
+        let shards = spec1.shards;
+        let next = AtomicUsize::new(0);
+        let results: Vec<Result<ShardJobStats>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers.min(shards))
+                .map(|_| {
+                    let next = &next;
+                    let run = &run;
+                    let binom = &binom;
+                    scope.spawn(move || -> Result<ShardJobStats> {
+                        let mut agg = ShardJobStats::default();
+                        // Per-worker state hoisted out of the shard loop:
+                        // one previous-level reader (own file handles +
+                        // caches), one scorer-owning LevelWorker, and one
+                        // set of batch buffers serve every shard this
+                        // worker claims.
+                        let mut reader: Option<ShardedLevelReader<M>> = None;
+                        let mut worker = LevelWorker::new(engine, binom, k1, batch);
+                        let mut q_buf = vec![0.0f64; batch];
+                        let mut r_buf = vec![0.0f64; batch];
+                        let mut bps_buf = vec![0.0f64; batch * k1];
+                        let mut bpm_buf = vec![M::ZERO; batch * k1];
+                        let mut sinks = SinkBuf::default();
+                        loop {
+                            let s = next.fetch_add(1, Ordering::Relaxed);
+                            if s >= shards {
+                                break;
+                            }
+                            let (lo, hi) = spec1.bounds(s);
+                            if lo >= hi {
+                                continue;
+                            }
+                            if reader.is_none() {
+                                reader = Some(ShardedLevelReader::open(run, binom, k1 - 1)?);
+                            }
+                            let prev = reader.as_ref().expect("reader just opened");
+                            let len = (hi - lo) as usize;
+                            let mut writer = ShardWriterSet::<M>::create(run, k1, s)?;
+                            let mut iter = LevelIter::<M>::resume(
+                                p,
+                                colex_unrank::<M>(binom, p, k1, lo),
+                            );
+                            let mut done = 0usize;
+                            while done < len {
+                                let take = batch.min(len - done);
+                                let (_evals, bu, su) = worker.run_range(
+                                    prev,
+                                    lo as usize + done,
+                                    take,
+                                    &mut iter,
+                                    &mut q_buf[..take],
+                                    &mut r_buf[..take],
+                                    &mut bps_buf[..take * k1],
+                                    &mut bpm_buf[..take * k1],
+                                    &mut sinks,
+                                );
+                                agg.bps_updates += bu;
+                                agg.sink_updates += su;
+                                writer.append(
+                                    &q_buf[..take],
+                                    &r_buf[..take],
+                                    &bps_buf[..take * k1],
+                                    &bpm_buf[..take * k1],
+                                    &mut sinks,
+                                )?;
+                                done += take;
+                            }
+                            let (entries, bytes) = writer.finish()?;
+                            debug_assert_eq!(entries, hi - lo);
+                            agg.bytes += bytes;
+                        }
+                        // scorer evals are cumulative across this worker's
+                        // shards — read once at the end
+                        agg.evals = worker.scorer.evals();
+                        Ok(agg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        for r in results {
+            let job = r?;
+            stats.score_evals += job.evals;
+            stats.bps_updates += job.bps_updates;
+            stats.sink_updates += job.sink_updates;
+            stats.spilled_bytes += job.bytes;
+        }
+        run.commit_level(k1)?;
+        if !options.keep_levels && k1 >= 1 {
+            run.prune_level(k1 - 1);
+        }
+        if options.stop_after_level == Some(k1) && k1 < p {
+            stats.wall = start.elapsed();
+            return Ok(ShardOutcome::Checkpointed {
+                level: k1,
+                dir: options.dir.clone(),
+            });
+        }
+    }
+
+    let log_score = final_score::<M>(&run)?;
+    let (network, order) = reconstruct_from_disk::<M>(&run, &binom)?;
+    stats.wall = start.elapsed();
+    Ok(ShardOutcome::Complete(SolveResult {
+        network,
+        log_score,
+        order,
+        stats,
+    }))
 }
 
 /// Per-worker state for one level sweep over a contiguous rank range.
@@ -516,7 +823,7 @@ impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
             batch: batch.max(1),
             dropranks: Vec::with_capacity(k1 + 1),
             mask_buf: Vec::with_capacity(batch.max(1)),
-            q_buf: Vec::with_capacity(batch.max(1)),
+            q_buf: vec![0.0; batch.max(1)],
             bits: [0; 64],
             prefix: [0; 65],
             suffix: [0; 65],
@@ -525,19 +832,21 @@ impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
 
     /// Process `len` subsets starting at level rank `start_rank`, reading
     /// the previous level and writing the (chunk-local) output slices.
+    /// Sink records go to `sinks` — the in-RAM tables for the resident
+    /// solver, a per-shard stream buffer for the sharded one.
     /// Returns (score_evals, bps_updates, sink_updates).
     #[allow(clippy::too_many_arguments)]
-    fn run_range<P: PrevLevel<M>>(
+    fn run_range<P: PrevLevel<M>, S: SinkOut<M>>(
         &mut self,
         prev: &P,
         start_rank: usize,
         len: usize,
-        mut iter: LevelIter<M>,
+        iter: &mut LevelIter<M>,
         q_out: &mut [f64],
         r_out: &mut [f64],
         bps_out: &mut [f64],
         bpm_out: &mut [M],
-        tables: &SinkTables<M>,
+        sinks: &mut S,
     ) -> (u64, u64, u64) {
         let k1 = self.k1;
         let kprev = k1 - 1;
@@ -551,7 +860,8 @@ impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
                 self.mask_buf
                     .push(iter.next().expect("level iterator exhausted early"));
             }
-            self.scorer.log_q_batch(&self.mask_buf, &mut self.q_buf);
+            self.scorer
+                .log_q_batch_into(&self.mask_buf, &mut self.q_buf[..take]);
             for i in 0..take {
                 let mask = self.mask_buf[i];
                 let q_s = self.q_buf[i];
@@ -593,8 +903,9 @@ impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
                     let xj = self.bits[j] as usize;
                     let t = self.dropranks[j] as usize;
                     let sub_mask = mask.without(xj);
+                    let (prev_q, prev_r) = prev.qr(t);
                     // Eq. 10, first candidate: the full complement S\X
-                    let mut best = q_s - prev.q(t);
+                    let mut best = q_s - prev_q;
                     let mut best_pm = sub_mask;
                     if kprev > 0 {
                         // Eq. 10, inherited candidates π(X, S\{X,Y})
@@ -618,7 +929,7 @@ impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
                     bps_out[local * k1 + j] = best;
                     bpm_out[local * k1 + j] = best_pm;
                     // Eq. 9 fused in the same pass: sink candidate
-                    let r_cand = prev.r(t) + best;
+                    let r_cand = prev_r + best;
                     if r_cand > r_best {
                         r_best = r_cand;
                         sink_x = xj as u8;
@@ -627,8 +938,7 @@ impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
                     sink_updates += 1;
                 }
                 r_out[local] = r_best;
-                // Safety: each mask is processed by exactly one worker.
-                unsafe { tables.write(mask, sink_x, sink_pm) };
+                sinks.put(mask, sink_x, sink_pm);
             }
             done += take;
         }

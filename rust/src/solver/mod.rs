@@ -4,11 +4,15 @@
 //!   over all `2^p` subsets, level by level, fusing local scores, best
 //!   parent sets (Eq. 10) and sink identification (Eq. 9) into a single
 //!   traversal with a two-level memory frontier.
+//! * [`solve_sharded`] — the same single-traversal sweep driven by the
+//!   sharded frontier coordinator ([`crate::coordinator::shard`]):
+//!   per-level shard files, a worker pool, per-level manifest commits
+//!   and cross-run `--resume`. Bit-identical to [`LeveledSolver`].
 //! * [`SilanderSolver`] — the Silander–Myllymäki (2012) baseline (§3):
 //!   faithful multi-pass pipeline with all-in-RAM full arrays.
 //! * [`brute`] — exhaustive all-DAGs oracle for `p ≤ 5` (test harness).
 //!
-//! Both DP solvers return bit-identical optima for the same engine — an
+//! All DP solvers return bit-identical optima for the same engine — an
 //! integration-tested invariant — and expose the operation counters that
 //! back the Table-1 complexity accounting.
 
@@ -18,5 +22,5 @@ mod leveled;
 mod silander;
 
 pub use common::{SolveOptions, SolveResult, SolveStats};
-pub use leveled::LeveledSolver;
+pub use leveled::{solve_sharded, LeveledSolver, ShardOutcome};
 pub use silander::SilanderSolver;

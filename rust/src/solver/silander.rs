@@ -63,8 +63,15 @@ impl<'e, M: VarMask> SilanderSolver<'e, M> {
         let cap = crate::exact_dp_cap::<M>();
         assert!(
             p <= cap,
-            "p={p} exceeds the {}-bit exact-DP cap of {cap} variables",
-            M::BITS
+            "p={p} exceeds the {}-bit exact-DP cap of {cap} variables. \
+             Next-larger configurations that work: LeveledSolver on wide \
+             u64 masks p ≤ {} (all-in-RAM), the sharded coordinator \
+             (solve_sharded / --shards) p ≤ {}, approximate searches \
+             (hillclimb/hybrid) p ≤ {}",
+            M::BITS,
+            crate::MAX_VARS_WIDE,
+            crate::MAX_VARS_SHARDED,
+            crate::MAX_NET_VARS,
         );
         let full_count = 1usize << p;
         let mut stats = SolveStats::default();

@@ -1,9 +1,11 @@
-//! Minimal JSON document builder (write-only).
+//! Minimal JSON document builder and reader.
 //!
 //! Experiment records, learned networks, and run metadata are emitted as
-//! JSON for downstream tooling. We only ever *write* JSON (configs come in
-//! via CLI flags), so a small escaping-correct builder suffices in place of
-//! serde_json (unavailable offline).
+//! JSON for downstream tooling. The sharded coordinator additionally
+//! *reads* its own `manifest.json` back on `--resume`
+//! ([`crate::coordinator::shard`]), so alongside the escaping-correct
+//! builder there is a small recursive-descent parser ([`Json::parse`]) —
+//! both stand in for serde_json, which is unavailable offline.
 
 use std::fmt::Write as _;
 
@@ -139,6 +141,248 @@ impl Json {
     }
 }
 
+impl Json {
+    /// Parse a JSON document. Numbers without `.`/`e` that fit `i64`
+    /// become [`Json::Int`]; everything else numeric becomes
+    /// [`Json::Num`] (so `f64` values written by [`Json::to_string`]
+    /// round-trip bit-exactly through rust's shortest-repr formatting).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (`None` on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match *self {
+            Json::Int(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match *self {
+            Json::Int(i) if i >= 0 => Some(i as u64),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as `f64` (accepts both [`Json::Int`] and
+    /// [`Json::Num`]).
+    pub fn as_f64(&self) -> Option<f64> {
+        match *self {
+            Json::Num(x) => Some(x),
+            Json::Int(i) => Some(i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    if bytes.get(*pos) == Some(&c) {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!(
+            "expected '{}' at byte {} (found {:?})",
+            c as char,
+            *pos,
+            bytes.get(*pos).map(|&b| b as char)
+        ))
+    }
+}
+
+/// Nesting bound: recursion per bracket must return Err, not blow the
+/// stack, on adversarial/corrupt input (manifests are ~3 levels deep).
+const MAX_DEPTH: usize = 128;
+
+fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    if depth > MAX_DEPTH {
+        return Err(format!("nesting deeper than {MAX_DEPTH} levels"));
+    }
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = match parse_value(bytes, pos, depth + 1)? {
+                    Json::Str(s) => s,
+                    other => return Err(format!("object key must be a string, got {other:?}")),
+                };
+                skip_ws(bytes, pos);
+                expect(bytes, pos, b':')?;
+                let value = parse_value(bytes, pos, depth + 1)?;
+                fields.push((key, value));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    other => return Err(format!("expected ',' or '}}', found {other:?}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos, depth + 1)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    other => return Err(format!("expected ',' or ']', found {other:?}")),
+                }
+            }
+        }
+        Some(b'"') => parse_string(bytes, pos),
+        Some(b't') if bytes[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') if bytes[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        Some(b'n') if bytes[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        Some(_) => parse_number(bytes, pos),
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err("unterminated string".into()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(Json::Str(out));
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or("truncated \\u escape")?;
+                        let hex = std::str::from_utf8(hex).map_err(|e| e.to_string())?;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                        // BMP only — the writer never emits surrogate pairs.
+                        out.push(char::from_u32(code).ok_or("bad \\u escape")?);
+                        *pos += 4;
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Advance over one UTF-8 scalar (input is a &str, so
+                // boundaries are valid).
+                let rest = &bytes[*pos..];
+                let s = unsafe { std::str::from_utf8_unchecked(rest) };
+                let c = s.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    if bytes.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let mut float = false;
+    while let Some(&b) = bytes.get(*pos) {
+        match b {
+            b'0'..=b'9' => *pos += 1,
+            b'.' | b'e' | b'E' | b'+' | b'-' => {
+                float = true;
+                *pos += 1;
+            }
+            _ => break,
+        }
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos]).map_err(|e| e.to_string())?;
+    if text.is_empty() || text == "-" {
+        return Err(format!("bad number at byte {start}"));
+    }
+    // "-0" must stay a float: rust formats f64 -0.0 as "-0", and the
+    // integer path would lose the sign bit.
+    if !float && text != "-0" {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(Json::Int(i));
+        }
+    }
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad number '{text}'"))
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -249,5 +493,69 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::obj().to_string(), "{}");
         assert_eq!(Json::arr().to_string(), "[]");
+    }
+
+    #[test]
+    fn parse_roundtrips_builder_output() {
+        let doc = Json::obj()
+            .set("name", "alarm")
+            .set("p", 28usize)
+            .set("ok", true)
+            .set("none", Json::Null)
+            .set("scores", vec![1.5f64, -2.25])
+            .set("meta", Json::obj().set("seed", 42u64));
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed, doc);
+        // pretty output parses to the same document too
+        assert_eq!(Json::parse(&doc.to_pretty()).unwrap(), doc);
+    }
+
+    #[test]
+    fn parse_accessors() {
+        let doc = Json::parse(r#"{"p": 12, "x": -1.5, "s": "hi", "a": [1, 2]}"#).unwrap();
+        assert_eq!(doc.get("p").and_then(Json::as_u64), Some(12));
+        assert_eq!(doc.get("p").and_then(Json::as_f64), Some(12.0));
+        assert_eq!(doc.get("x").and_then(Json::as_f64), Some(-1.5));
+        assert_eq!(doc.get("s").and_then(Json::as_str), Some("hi"));
+        assert_eq!(doc.get("a").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert!(doc.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_f64_is_bit_exact_through_shortest_repr() {
+        // The resume path depends on this: a score formatted by the
+        // writer must parse back to the identical f64.
+        for x in [-1234.567891011e-7, f64::MIN_POSITIVE, 0.1 + 0.2, -0.0] {
+            let text = Json::arr().push(x).to_string();
+            let back = Json::parse(&text).unwrap();
+            let y = back.as_arr().unwrap()[0].as_f64().unwrap();
+            assert_eq!(x.to_bits(), y.to_bits(), "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn parse_bounds_nesting_depth_instead_of_overflowing() {
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        // ...while reasonable nesting still parses
+        let ok = format!("{}1{}", "[".repeat(50), "]".repeat(50));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        let doc = Json::parse(r#""a\"b\\c\ndAé""#).unwrap();
+        assert_eq!(doc.as_str(), Some("a\"b\\c\ndAé"));
     }
 }

@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Doc link checker: every relative markdown link in README.md and
+docs/*.md must resolve to a real file (anchors are stripped). Keeps the
+documentation site from rotting silently; run by CI next to `cargo doc`.
+
+Usage: python3 tools/check_doc_links.py  (from anywhere in the repo)
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def repo_root() -> Path:
+    here = Path(__file__).resolve().parent
+    for candidate in (here, *here.parents):
+        if (candidate / "Cargo.toml").exists():
+            return candidate
+    sys.exit("cannot find repo root (no Cargo.toml upward of tools/)")
+
+
+def main() -> int:
+    root = repo_root()
+    sources = sorted([root / "README.md", *(root / "docs").glob("*.md")])
+    broken = []
+    checked = 0
+    for source in sources:
+        if not source.exists():
+            broken.append(f"{source}: documentation file missing")
+            continue
+        for lineno, line in enumerate(source.read_text().splitlines(), 1):
+            for target in LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:  # pure in-page anchor
+                    continue
+                resolved = (source.parent / path).resolve()
+                checked += 1
+                if not resolved.exists():
+                    rel = source.relative_to(root)
+                    broken.append(f"{rel}:{lineno}: broken link -> {target}")
+    if broken:
+        print("\n".join(broken))
+        print(f"\n{len(broken)} broken link(s)")
+        return 1
+    print(f"ok: {checked} relative links across {len(sources)} files resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
