@@ -9,11 +9,15 @@
 //! in either hot loop shows up here. Set `BNSL_WIDE_FULL=1` on a
 //! large-memory host to run the true p = 33 spilled solve.
 
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
 use bnsl::coordinator::plan::{memory_plan, MemoryPlan};
 use bnsl::data::synth;
 use bnsl::engine::NativeEngine;
 use bnsl::score::ScoreKind;
 use bnsl::solver::{LeveledSolver, SolveOptions};
+use bnsl::util::json::Json;
 use bnsl::util::{human_bytes, table::Table};
 
 fn spill_options() -> SolveOptions {
@@ -123,13 +127,34 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(64);
     println!("\n=== u32 vs forced-u64 solve, p = {solve_p}, n = {n} (no-regression check) ===");
-    let (narrow_ns, wide_ns, wide_spill_ns) = race_widths(solve_p, n);
+    let ((narrow_ns, wide_ns, wide_spill_ns), heap_peak) =
+        bnsl::memtrack::measure(|| race_widths(solve_p, n));
     println!("u32 path        : {narrow_ns:8.1} ns/subset");
     println!(
         "u64 path        : {wide_ns:8.1} ns/subset  ({:+.1}% vs u32)",
         (wide_ns / narrow_ns - 1.0) * 100.0
     );
     println!("u64 path + spill: {wide_spill_ns:8.1} ns/subset");
+    println!("heap peak       : {}", human_bytes(heap_peak as u64));
+
+    // CI bench-smoke: append a machine-readable record so the perf
+    // trajectory accumulates data points (tools/bench_smoke.sh merges
+    // this with the spill bench's results/spill.json into BENCH_ci.json).
+    if let Ok(path) = std::env::var("BNSL_BENCH_JSON") {
+        let doc = Json::obj()
+            .set("bench", "levels")
+            .set("plan_p", p)
+            .set("solve_p", solve_p)
+            .set("n", n)
+            .set("narrow_ns_per_subset", narrow_ns)
+            .set("wide_ns_per_subset", wide_ns)
+            .set("wide_spill_ns_per_subset", wide_spill_ns)
+            .set("heap_peak_bytes", heap_peak)
+            .set("plan_peak_bytes", plan.peak_bytes)
+            .set("plan_baseline_bytes", plan.baseline_bytes);
+        std::fs::write(&path, doc.to_pretty()).expect("writing BNSL_BENCH_JSON");
+        println!("bench record    : {path}");
+    }
 
     if std::env::var("BNSL_WIDE_FULL").is_ok() {
         // The real thing: 2^33 subsets, ~170 GB of tables. Only on request.

@@ -14,16 +14,19 @@ pub mod exp;
 pub use args::{validate_var_count, Args, MaskWidth};
 
 use crate::bn::repo;
+use crate::coordinator::cluster::ClusterOptions;
 use crate::coordinator::shard::ShardOptions;
 use crate::data::{read_csv, write_csv, Dataset};
 use crate::engine::{JaxEngine, NativeEngine};
 use crate::score::ScoreKind;
 use crate::search::{hill_climb, pc_hill_climb, HillClimbOptions, PcOptions};
 use crate::solver::{
-    solve_sharded, LeveledSolver, ShardOutcome, SilanderSolver, SolveOptions, SolveResult,
+    solve_clustered, solve_sharded, LeveledSolver, ShardOutcome, SilanderSolver, SolveOptions,
+    SolveResult,
 };
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
+use std::time::Duration;
 
 /// Top-level usage text.
 pub const USAGE: &str = "\
@@ -35,11 +38,16 @@ USAGE:
               [--solver leveled|silander|hillclimb|hybrid] [--score jeffreys|bdeu[:e]|bic|aic]
               [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
               [--shards N [--shard-dir DIR] [--stop-after-level K]] [--resume DIR]
+              [--cluster --host-id I [--hosts N] [--heartbeat-secs S]]
               exact solvers: p <= 30 on u32 masks, p <= 34 on the wide u64
               path (auto-dispatched; pair with --spill-dir near the top),
               p <= 36 sharded (--shards, power of two: frontier + sinks on
               disk, manifest committed per level, --resume restarts a
               killed run at the last completed level);
+              --cluster joins N independent bnsl processes (any machines
+              sharing --shard-dir) into one sharded solve: shards are
+              claimed via lock files, a SIGKILLed host's work is re-run
+              after its heartbeat goes stale, results stay bit-identical;
               hillclimb/hybrid: p <= 64
   bnsl sample --network asia|alarm|sachs --n N [--seed S] --out data.csv
   bnsl exp table2     [--pmin 14] [--pmax 18] [--runs 3]  [--n 200] [--threads T]
@@ -60,7 +68,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         return Ok(());
     };
     match command.as_str() {
-        "learn" => cmd_learn(Args::parse(rest.to_vec(), &["dot"])?),
+        "learn" => cmd_learn(Args::parse(rest.to_vec(), &["dot", "cluster"])?),
         "sample" => cmd_sample(Args::parse(rest.to_vec(), &[])?),
         "exp" => cmd_exp(rest),
         "info" => cmd_info(Args::parse(rest.to_vec(), &[])?),
@@ -101,14 +109,26 @@ fn cmd_learn(args: Args) -> Result<()> {
     let exact = matches!(solver.as_str(), "leveled" | "silander");
     let shards_given = args.raw("shards").is_some();
     let resume = args.raw("resume").map(PathBuf::from);
-    let sharded = shards_given || resume.is_some();
+    let cluster = args.switch("cluster");
+    let sharded = shards_given || resume.is_some() || cluster;
     // The sharded flags must never be silently dropped: they drive the
     // leveled coordinator only, whatever solver was asked for.
     if sharded && solver != "leveled" {
         bail!(
-            "--shards/--resume drive the sharded leveled coordinator; \
-             use --solver leveled (got '{solver}')"
+            "--shards/--resume/--cluster drive the sharded leveled \
+             coordinator; use --solver leveled (got '{solver}')"
         );
+    }
+    // The cluster flags must never be silently dropped either: a host
+    // launched without --cluster but pointed at a live shared shard-dir
+    // would bypass the claim ledger entirely (unstaged writes, no
+    // barrier) and race the real cluster.
+    if !cluster {
+        for flag in ["host-id", "hosts", "heartbeat-secs"] {
+            if args.raw(flag).is_some() {
+                bail!("--{flag} only makes sense with --cluster (did you forget it?)");
+            }
+        }
     }
     let width = validate_var_count(data.p(), exact, sharded)?;
     let options = SolveOptions {
@@ -133,8 +153,13 @@ fn cmd_learn(args: Args) -> Result<()> {
             bail!("--stop-after-level expects a level ≥ 0 (got {stop})");
         }
         let shard_opts = ShardOptions {
-            // `0` = "take the shard count from the manifest" on resume
-            shards: if resume.is_some() && !shards_given {
+            // `0` = "take the shard count from the manifest": both a
+            // resume and a cluster join adopt the run's existing
+            // geometry when --shards is not given (the first cluster
+            // host must state it explicitly and gets a clear error
+            // otherwise, rather than silently creating a 1-shard run
+            // on the shared mount)
+            shards: if (resume.is_some() || cluster) && !shards_given {
                 0
             } else {
                 args.get::<usize>("shards", 1)?
@@ -147,9 +172,33 @@ fn cmd_learn(args: Args) -> Result<()> {
                 .unwrap_or_else(|| PathBuf::from("bnsl_shards")),
             stop_after_level: usize::try_from(stop).ok(),
             keep_levels: false,
+            hosts: args.get::<usize>("hosts", 1)?,
         };
         let engine = NativeEngine::new(&data, kind);
         let (outcome, heap) = crate::memtrack::measure(|| -> Result<_> {
+            if cluster {
+                let heartbeat = args.get::<f64>("heartbeat-secs", 30.0)?;
+                // the upper bound keeps Duration::from_secs_f64 (and the
+                // 4x stale window) well away from overflow panics
+                if !heartbeat.is_finite() || heartbeat <= 0.0 || heartbeat > 86_400.0 {
+                    bail!(
+                        "--heartbeat-secs expects a positive number of seconds \
+                         (at most 86400)"
+                    );
+                }
+                let cluster_opts = ClusterOptions {
+                    host_id: args.get::<usize>("host-id", 0)?,
+                    heartbeat: Duration::from_secs_f64(heartbeat),
+                    // poll often enough that barriers feel instant at any
+                    // heartbeat scale, never slower than twice a second
+                    poll: Duration::from_secs_f64((heartbeat / 20.0).min(0.5)),
+                    shard: shard_opts,
+                };
+                return Ok(match width {
+                    MaskWidth::Narrow => solve_clustered::<u32>(&engine, &cluster_opts)?,
+                    MaskWidth::Wide => solve_clustered::<u64>(&engine, &cluster_opts)?,
+                });
+            }
             Ok(match width {
                 MaskWidth::Narrow => solve_sharded::<u32>(&engine, &shard_opts)?,
                 MaskWidth::Wide => solve_sharded::<u64>(&engine, &shard_opts)?,
@@ -450,9 +499,11 @@ fn cmd_info(args: Args) -> Result<()> {
     for (p, shards) in [(29usize, 8usize), (33, 16), (crate::MAX_VARS_SHARDED, 64)] {
         let plan = crate::coordinator::plan::sharded_plan(p, shards, 0, 1024);
         println!(
-            "p={p:2} --shards {shards:2}: resident {}, disk {}",
+            "p={p:2} --shards {shards:2}: resident {}, disk {}, per-host fd budget {} \
+             (check `ulimit -n`)",
             crate::util::human_bytes(plan.peak_resident_bytes),
-            crate::util::human_bytes(plan.disk_bytes)
+            crate::util::human_bytes(plan.disk_bytes),
+            plan.fd_budget
         );
     }
     Ok(())

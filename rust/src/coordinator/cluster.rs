@@ -1,0 +1,1001 @@
+//! Multi-host cluster coordination over shared storage — the claim
+//! ledger behind [`crate::solver::solve_clustered`].
+//!
+//! The sharded coordinator ([`crate::coordinator::shard`]) already made
+//! the frontier host-agnostic: every level is a set of shard files plus
+//! one atomically-committed `manifest.json`. This module adds the piece
+//! that lets **N independent `bnsl` processes — on one machine or many,
+//! sharing only a filesystem** — cooperate on one solve:
+//!
+//! * **Claims.** A host takes a (level, shard) pair by creating
+//!   `claim-<level>-<shard>.json` with `O_CREAT|O_EXCL` — atomic on any
+//!   POSIX filesystem (NFSv3 callers should mount with proper `O_EXCL`
+//!   support or use v4). The claim records host id, pid and the owner's
+//!   heartbeat cadence.
+//! * **Heartbeats.** While computing, the owner rewrites its claim file
+//!   (refreshing the mtime) at least twice per heartbeat interval. A
+//!   claim whose mtime is older than `4 ×` its recorded cadence is
+//!   *stale*: the owner is presumed dead and the work is re-runnable.
+//! * **Reclaim.** Stealing a stale claim is a rename to a
+//!   contender-unique name — exactly one host's rename succeeds — after
+//!   which the winner re-creates the claim as its own. A SIGKILLed
+//!   host's unfinished shards are therefore re-run, not lost; its
+//!   *finished* shards survive via fsynced `done-<level>-<shard>.json`
+//!   markers and are never recomputed.
+//! * **Zombie safety.** A host that lost its claim but keeps computing
+//!   writes only to staged files
+//!   ([`crate::coordinator::shard::ShardWriterSet::create_staged`]) and
+//!   publishes by atomic rename. Because every execution mode of the
+//!   sweep is bit-identical (the repo's core invariant), a zombie's
+//!   publish writes the same bytes the reclaimer produced — a stale
+//!   writer can overwrite, but never corrupt.
+//! * **Barrier + election.** A level commits when every non-empty shard
+//!   has a done marker. Each host that observes this writes
+//!   `finish-<level>-host-<id>.json`; the **lowest host id among the
+//!   finish markers present** performs the existing fsynced
+//!   [`crate::coordinator::shard::ShardRun::commit_level`] rewrite.
+//!   If the elected committer dies first, any host commits after a
+//!   stale-interval fallback; the benign double-commit race writes
+//!   identical manifests through per-writer temp files, and genuinely
+//!   out-of-order commits are rejected by `commit_level` itself.
+//! * **Resume.** The manifest stays the durability boundary: any
+//!   surviving or restarted host re-enters at `levels_complete + 1`
+//!   and the ledger replays only the in-flight level's missing shards —
+//!   `--resume` semantics compose unchanged.
+//!
+//! File-level schemas live in
+//! [`docs/FORMATS.md`](https://github.com/paper-repo-growth/bnsl/blob/main/docs/FORMATS.md)
+//! (in-tree: `docs/FORMATS.md`); the protocol walkthrough is in
+//! [`docs/ARCHITECTURE.md`](https://github.com/paper-repo-growth/bnsl/blob/main/docs/ARCHITECTURE.md)
+//! (in-tree: `docs/ARCHITECTURE.md`).
+
+use super::shard::{ShardOptions, ShardRun, ShardSpec};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Per-process sequence for stage tags: same-process workers (and a
+/// worker re-claiming its stalled sibling's shard) must never share a
+/// staged file name, or one writer's `File::create` would truncate the
+/// other's in-flight stream.
+static STAGE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A claim is stale once its mtime is older than this many heartbeat
+/// intervals — generous enough to ride out scheduler hiccups, small
+/// enough that a SIGKILLed host's shard is re-run promptly.
+pub const STALE_FACTOR: u32 = 4;
+
+/// Tuning for one cluster host (see [`crate::solver::solve_clustered`]).
+#[derive(Clone, Debug)]
+pub struct ClusterOptions {
+    /// The underlying sharded-run options (shard count, worker pool,
+    /// batch size, run directory, checkpointing).
+    pub shard: ShardOptions,
+    /// This host's id — ties are broken and the committer elected by
+    /// *lowest id*, so ids should be distinct across live hosts (a
+    /// restarted host reuses its id safely). The declared pool size
+    /// lives in [`ShardOptions::hosts`] (one source of truth — it is
+    /// what the manifest records).
+    pub host_id: usize,
+    /// Claim heartbeat cadence. Claims older than
+    /// [`STALE_FACTOR`]`× heartbeat` are reclaimable, so this bounds how
+    /// long a dead host's shard stays orphaned. Must exceed the shared
+    /// filesystem's mtime granularity by a comfortable margin.
+    pub heartbeat: Duration,
+    /// Sleep between ledger polls while waiting on other hosts.
+    pub poll: Duration,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> ClusterOptions {
+        ClusterOptions {
+            shard: ShardOptions::default(),
+            host_id: 0,
+            heartbeat: Duration::from_secs(30),
+            poll: Duration::from_millis(500),
+        }
+    }
+}
+
+impl ClusterOptions {
+    /// Age past which a claim (or the init lock, or a silent committer)
+    /// is treated as dead.
+    pub fn stale_after(&self) -> Duration {
+        self.heartbeat * STALE_FACTOR
+    }
+}
+
+/// Outcome of one [`ClaimLedger::try_claim`] attempt.
+#[derive(Debug)]
+pub enum ClaimState {
+    /// This host now owns the shard and must compute + publish it.
+    Claimed(Claim),
+    /// The shard's done marker exists — nothing to do.
+    Done,
+    /// Another host holds a live claim; re-poll later.
+    Busy,
+}
+
+/// A live claim on one (level, shard) pair — the ownership token a
+/// worker heartbeats while computing and redeems with
+/// [`ClaimLedger::mark_done`].
+#[derive(Debug)]
+pub struct Claim {
+    pub level: usize,
+    pub shard: usize,
+    path: PathBuf,
+    last_beat: Instant,
+}
+
+impl Claim {
+    /// Refresh the claim's mtime if half a heartbeat has elapsed (cheap
+    /// no-op otherwise — callers tick this once per batch). The refresh
+    /// is a **pure mtime touch** — `set_modified` on an existing file,
+    /// never a content write and never `create` — so there is no window
+    /// in which a waking zombie could truncate or overwrite a claim a
+    /// reclaimer now owns: at worst it keeps the reclaimer's live claim
+    /// fresh (which the reclaimer's own heartbeat does anyway), and a
+    /// deleted claim is never resurrected.
+    pub fn heartbeat_if_due(&mut self, ledger: &ClaimLedger) {
+        if self.last_beat.elapsed() * 2 < ledger.heartbeat {
+            return;
+        }
+        self.last_beat = Instant::now();
+        if let Ok(file) = File::options().write(true).open(&self.path) {
+            let _ = file.set_modified(std::time::SystemTime::now());
+        }
+    }
+}
+
+/// The per-run claim ledger: one host's handle on the shared-directory
+/// claim / done / finish files of an in-flight level.
+pub struct ClaimLedger {
+    dir: PathBuf,
+    host: usize,
+    heartbeat: Duration,
+    /// Stage-tag prefix for this process's shard writers:
+    /// `host-<id>-<pid>`, unique across live processes even when a host
+    /// id is reused after a restart.
+    stage_prefix: String,
+}
+
+impl ClaimLedger {
+    pub fn new(dir: &Path, host: usize, heartbeat: Duration) -> ClaimLedger {
+        ClaimLedger {
+            dir: dir.to_path_buf(),
+            host,
+            heartbeat,
+            stage_prefix: format!("host-{host:04}-{}", std::process::id()),
+        }
+    }
+
+    pub fn host(&self) -> usize {
+        self.host
+    }
+
+    /// A fresh writer-unique suffix for one claimed shard's staged
+    /// files: `host-<id>-<pid>-<seq>`. The sequence is what keeps a
+    /// *same-process* stale-claim steal safe — without it, a sibling
+    /// worker reclaiming a stalled worker's shard would `File::create`
+    /// (truncate) the very staged file the stalled writer still holds
+    /// open, and the interleaved streams could get published.
+    pub fn fresh_stage_tag(&self) -> String {
+        format!(
+            "{}-{}",
+            self.stage_prefix,
+            STAGE_SEQ.fetch_add(1, Ordering::Relaxed)
+        )
+    }
+
+    fn claim_path(&self, k: usize, s: usize) -> PathBuf {
+        self.dir.join(format!("claim-{k:02}-{s:04}.json"))
+    }
+
+    fn done_path(&self, k: usize, s: usize) -> PathBuf {
+        self.dir.join(format!("done-{k:02}-{s:04}.json"))
+    }
+
+    fn finish_path(&self, k: usize, host: usize) -> PathBuf {
+        self.dir.join(format!("finish-{k:02}-host-{host:04}.json"))
+    }
+
+    /// Attempt to take (level `k`, shard `s`): done markers win, then a
+    /// create-exclusive claim, then a stale-claim steal; anything else is
+    /// [`ClaimState::Busy`].
+    pub fn try_claim(&self, k: usize, s: usize) -> Result<ClaimState> {
+        if self.done_path(k, s).exists() {
+            return Ok(ClaimState::Done);
+        }
+        let path = self.claim_path(k, s);
+        match self.create_claim(&path, k, s) {
+            Ok(claim) => Ok(ClaimState::Claimed(claim)),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                if self.claim_is_stale(&path) {
+                    // rename-steal: of all contenders observing the same
+                    // stale claim, exactly one rename succeeds
+                    let steal = self.dir.join(format!(
+                        "claim-{k:02}-{s:04}.stale-{}-{}",
+                        self.host,
+                        std::process::id()
+                    ));
+                    if std::fs::rename(&path, &steal).is_ok() {
+                        let _ = std::fs::remove_file(&steal);
+                        if let Ok(claim) = self.create_claim(&path, k, s) {
+                            return Ok(ClaimState::Claimed(claim));
+                        }
+                    }
+                }
+                Ok(ClaimState::Busy)
+            }
+            Err(e) => Err(e).with_context(|| format!("creating claim {}", path.display())),
+        }
+    }
+
+    fn create_claim(&self, path: &Path, k: usize, s: usize) -> std::io::Result<Claim> {
+        let mut file = File::options().write(true).create_new(true).open(path)?;
+        let body = Json::obj()
+            .set("format", 1u64)
+            .set("level", k)
+            .set("shard", s)
+            .set("host", self.host)
+            .set("pid", std::process::id())
+            .set("heartbeat_secs", self.heartbeat.as_secs_f64())
+            .to_pretty();
+        file.write_all(body.as_bytes())?;
+        Ok(Claim {
+            level: k,
+            shard: s,
+            path: path.to_path_buf(),
+            last_beat: Instant::now(),
+        })
+    }
+
+    /// A claim is stale when its mtime is older than [`STALE_FACTOR`] ×
+    /// the cadence *the claim itself recorded* (falling back to ours for
+    /// unreadable claims), so hosts with different `--heartbeat-secs`
+    /// judge each other by the owner's contract, not their own.
+    ///
+    /// Clock skew: mtimes are stamped by the filesystem (an NFS server's
+    /// clock), `now` by the observer. A small future-dated mtime is
+    /// tolerated as fresh, but one further in the future than the stale
+    /// window itself is treated as *stale-eligible* — a spurious steal
+    /// merely duplicates deterministic work (zombie-safe), whereas
+    /// "future means fresh forever" would let an absurdly skewed mtime
+    /// orphan a dead host's shard indefinitely.
+    fn claim_is_stale(&self, path: &Path) -> bool {
+        let Ok(meta) = std::fs::metadata(path) else {
+            return false;
+        };
+        let Ok(mtime) = meta.modified() else {
+            return false;
+        };
+        let cadence = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|doc| doc.get("heartbeat_secs").and_then(Json::as_f64))
+            .filter(|h| h.is_finite() && *h > 0.0)
+            // clamp before Duration::from_secs_f64, which panics on
+            // out-of-range values — a foreign/corrupt-but-parsable
+            // cadence must not be able to crash every scanning host
+            .map_or(self.heartbeat, |h| {
+                Duration::from_secs_f64(h.min(86_400.0))
+            });
+        let window = cadence * STALE_FACTOR;
+        match mtime.elapsed() {
+            Ok(age) => age > window,
+            // mtime in the observer's future by `skew`
+            Err(e) => e.duration() > window,
+        }
+    }
+
+    /// Durably record a computed shard: the done marker is written
+    /// tmp-then-rename and fsynced *after* the shard files themselves
+    /// were synced and published, so a marker never vouches for bytes
+    /// the kernel could lose. The claim file is then released.
+    pub fn mark_done(&self, claim: &Claim, entries: u64, bytes: u64) -> Result<()> {
+        let done = self.done_path(claim.level, claim.shard);
+        let tmp = self.dir.join(format!(
+            "done-{:02}-{:04}.tmp-{}-{}",
+            claim.level,
+            claim.shard,
+            self.host,
+            std::process::id()
+        ));
+        let doc = Json::obj()
+            .set("level", claim.level)
+            .set("shard", claim.shard)
+            .set("host", self.host)
+            .set("entries", entries)
+            .set("bytes", bytes);
+        {
+            let mut file = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            file.write_all(doc.to_pretty().as_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            file.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, &done)
+            .with_context(|| format!("publishing {}", done.display()))?;
+        if let Ok(dir) = File::open(&self.dir) {
+            let _ = dir.sync_all();
+        }
+        self.release(claim);
+        Ok(())
+    }
+
+    /// Does the claim file at `path` still record this host and process?
+    /// Checked before unlinking, so a zombie whose claim was stolen
+    /// cannot delete the reclaimer's live claim out from under it.
+    fn owns_claim(&self, path: &Path) -> bool {
+        std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .is_some_and(|doc| {
+                doc.get("host").and_then(Json::as_u64) == Some(self.host as u64)
+                    && doc.get("pid").and_then(Json::as_u64)
+                        == Some(u64::from(std::process::id()))
+            })
+    }
+
+    /// Release an unredeemed claim (abandoning the shard, e.g. when the
+    /// level turned out to be superseded) — but only if it is still
+    /// ours; a stolen claim belongs to its reclaimer now.
+    pub fn release(&self, claim: &Claim) {
+        if self.owns_claim(&claim.path) {
+            let _ = std::fs::remove_file(&claim.path);
+        }
+    }
+
+    /// Every non-empty shard of level `k` has a done marker.
+    pub fn all_done(&self, spec: &ShardSpec, k: usize) -> bool {
+        (0..spec.shards).all(|s| spec.entries(s) == 0 || self.done_path(k, s).exists())
+    }
+
+    /// Announce this host finished its share of level `k` (idempotent).
+    pub fn announce_finished(&self, k: usize) -> Result<()> {
+        let path = self.finish_path(k, self.host);
+        let doc = Json::obj()
+            .set("level", k)
+            .set("host", self.host)
+            .set("pid", std::process::id());
+        std::fs::write(&path, doc.to_pretty())
+            .with_context(|| format!("writing finish marker {}", path.display()))
+    }
+
+    /// Lowest host id among level `k`'s finish markers (`None` before
+    /// any host announced) — the committer election.
+    pub fn lowest_finisher(&self, k: usize) -> Result<Option<usize>> {
+        let prefix = format!("finish-{k:02}-host-");
+        let mut lowest: Option<usize> = None;
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing ledger dir {}", self.dir.display()))?
+        {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else {
+                continue;
+            };
+            let Some(rest) = name.strip_prefix(&prefix) else {
+                continue;
+            };
+            let Some(id) = rest
+                .strip_suffix(".json")
+                .and_then(|digits| digits.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            lowest = Some(lowest.map_or(id, |low| low.min(id)));
+        }
+        Ok(lowest)
+    }
+}
+
+/// Best-effort removal of abandoned `manifest.json.tmp.*` files older
+/// than `older_than` (crashed committers leave one per crash; live
+/// commits hold theirs for milliseconds).
+fn sweep_manifest_temps(dir: &Path, older_than: Duration) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else {
+            continue;
+        };
+        if !name.starts_with("manifest.json.tmp.") {
+            continue;
+        }
+        let old = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|m| m.elapsed().ok())
+            .is_some_and(|age| age > older_than);
+        if old {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+/// `levels_complete` as currently on disk: `Some(-1)` for a manifest
+/// with nothing committed, `None` when the manifest is unreadable
+/// (transient mid-rename reads included).
+pub fn committed_level(dir: &Path) -> Option<i64> {
+    let run = ShardRun::open(dir).ok()?;
+    Some(run.completed.map_or(-1, |c| c as i64))
+}
+
+/// [`committed_level`], but riding out transiently unreadable manifests
+/// (a concurrent commit's rename, an NFS attribute-cache miss) for up to
+/// `grace`. For one-shot decisions — "is this failure survivable because
+/// the level was superseded?" — where a single unlucky read must not
+/// turn a rejoin into a fatal error. Returns `None` only if the manifest
+/// stayed unreadable through the whole window.
+pub fn committed_level_patient(dir: &Path, grace: Duration, poll: Duration) -> Option<i64> {
+    let start = Instant::now();
+    loop {
+        if let Some(c) = committed_level(dir) {
+            return Some(c);
+        }
+        if start.elapsed() > grace {
+            return None;
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+/// Open the shared run, creating it exactly once across the cluster: the
+/// first host to win the create-exclusive `cluster-init.lock` writes the
+/// manifest; everyone else waits for it to appear and then takes the
+/// ordinary validate-and-resume path. A lock whose holder died (stale
+/// mtime) is removed and re-contested.
+pub fn open_or_create_shared(
+    options: &ClusterOptions,
+    p: usize,
+    n: usize,
+    mask_bytes: usize,
+    score: &str,
+    fingerprint: &str,
+) -> Result<ShardRun> {
+    let dir = &options.shard.dir;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating shard dir {}", dir.display()))?;
+    // a committer SIGKILLed between its temp write and its rename leaves
+    // a manifest.json.tmp.<pid>.<seq> stray per crash; sweep old ones on
+    // the way in (never young ones — a live commit's temp exists only
+    // for milliseconds, so the stale window is a generous bound)
+    sweep_manifest_temps(dir, options.stale_after());
+    let lock = dir.join("cluster-init.lock");
+    let started = Instant::now();
+    // ample for "another host is writing a two-kilobyte manifest"
+    let deadline = options.stale_after() * 4 + Duration::from_secs(10);
+    loop {
+        if dir.join("manifest.json").exists() {
+            return ShardRun::open_or_create(&options.shard, p, n, mask_bytes, score, fingerprint);
+        }
+        match File::options().write(true).create_new(true).open(&lock) {
+            Ok(mut file) => {
+                let _ = file.write_all(
+                    Json::obj()
+                        .set("host", options.host_id)
+                        .set("pid", std::process::id())
+                        .to_pretty()
+                        .as_bytes(),
+                );
+                drop(file);
+                let run = ShardRun::open_or_create(
+                    &options.shard,
+                    p,
+                    n,
+                    mask_bytes,
+                    score,
+                    fingerprint,
+                );
+                let _ = std::fs::remove_file(&lock);
+                return run;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                // another host is initialising; steal only a dead lock,
+                // and steal by rename so exactly one contender wins — a
+                // blind remove_file keyed on an earlier stat could delete
+                // a *fresh* lock the winner just re-created, letting two
+                // hosts initialise (and one later regress) the manifest
+                let age = std::fs::metadata(&lock)
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|m| m.elapsed().ok())
+                    .unwrap_or(Duration::ZERO);
+                if age > options.stale_after() {
+                    let steal = dir.join(format!(
+                        "cluster-init.lock.stale-{}-{}",
+                        options.host_id,
+                        std::process::id()
+                    ));
+                    if std::fs::rename(&lock, &steal).is_ok() {
+                        let _ = std::fs::remove_file(&steal);
+                    }
+                    continue;
+                }
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("creating init lock {}", lock.display()))
+            }
+        }
+        if started.elapsed() > deadline {
+            bail!(
+                "{}: another host holds the init lock but never wrote a \
+                 manifest (waited {:.1?}); remove {} if the initialising \
+                 host is gone",
+                dir.display(),
+                started.elapsed(),
+                lock.display()
+            );
+        }
+        std::thread::sleep(options.poll);
+    }
+}
+
+/// The per-level barrier: announce this host finished, wait until the
+/// level is durably committed — by us if elected (or as a fallback when
+/// the elected committer goes silent), by someone else otherwise.
+/// Returns `true` iff *this* host performed the commit (the committer
+/// also prunes and cleans the previous level).
+pub fn barrier_commit(
+    run: &mut ShardRun,
+    ledger: &ClaimLedger,
+    spec: &ShardSpec,
+    k: usize,
+    options: &ClusterOptions,
+) -> Result<bool> {
+    // an already-committed level needs no announcement — and a laggard's
+    // late finish marker would recreate a ledger file that
+    // `cleanup_level` (run when the *successor* committed) has already
+    // swept, leaving a permanent stray on the shared mount
+    if let Ok(disk) = ShardRun::open(run.dir()) {
+        if disk.completed.is_some_and(|c| c >= k) {
+            run.completed = disk.completed;
+            return Ok(false);
+        }
+    }
+    ledger.announce_finished(k)?;
+    let waited = Instant::now();
+    let mut first_err: Option<Instant> = None;
+    let mut commit_err: Option<Instant> = None;
+    loop {
+        // 1. someone (possibly us, on a previous iteration's race loss)
+        //    already committed this level — or raced past it
+        match ShardRun::open(run.dir()) {
+            Ok(disk) => {
+                first_err = None;
+                if disk.completed.is_some_and(|c| c >= k) {
+                    run.completed = disk.completed;
+                    return Ok(false);
+                }
+            }
+            Err(e) => {
+                // transient reads mid-rename are fine; persistent
+                // unreadability is not
+                let since = *first_err.get_or_insert_with(Instant::now);
+                if since.elapsed() > options.stale_after() {
+                    bail!(
+                        "cluster barrier at level {k}: manifest unreadable \
+                         for {:.1?}: {e:#}",
+                        since.elapsed()
+                    );
+                }
+            }
+        }
+        // 2. all shards done → elect the committer (lowest announced id;
+        //    fall back to anyone if the elected host goes silent)
+        if ledger.all_done(spec, k) {
+            let elected = ledger
+                .lowest_finisher(k)?
+                .is_none_or(|low| low == ledger.host());
+            if elected || waited.elapsed() > options.stale_after() {
+                match commit_checked(run, k) {
+                    Ok(did_commit) => return Ok(did_commit),
+                    // the committer's own reload/rewrite can hit the same
+                    // transient mid-rename window as the read loop above
+                    // (another host's benign concurrent commit); retry
+                    // with a bounded grace window of its own
+                    Err(e) => {
+                        let since = *commit_err.get_or_insert_with(Instant::now);
+                        if since.elapsed() > options.stale_after() {
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        }
+        std::thread::sleep(options.poll);
+    }
+}
+
+/// Reload-check-commit: tolerate the benign "someone committed first"
+/// race (returns `false`), reject genuinely out-of-order commits.
+///
+/// Also the rollback repair point: two hosts may commit concurrently by
+/// design, and a committer that stalls between its manifest *read* and
+/// its *rename* can land an old `levels_complete` over a newer one.
+/// Levels this host has itself observed as committed are authoritative
+/// the other way — the manifest is monotonic — so on evidence of a
+/// regression we first restore our known state (atomic rewrite) instead
+/// of adopting the rollback, which would wedge every later barrier on
+/// the ordering check.
+fn commit_checked(run: &mut ShardRun, k: usize) -> Result<bool> {
+    let disk = ShardRun::open(run.dir())?;
+    let effective = match (run.completed, disk.completed) {
+        (Some(local), d) if d.is_none_or(|c| c < local) => {
+            run.rewrite_manifest()?;
+            Some(local)
+        }
+        (_, d) => d,
+    };
+    if effective.is_some_and(|c| c >= k) {
+        run.completed = effective;
+        return Ok(false);
+    }
+    let expect = effective.map_or(0, |c| c + 1);
+    if expect != k {
+        bail!(
+            "cluster barrier out of order: disk shows levels_complete = \
+             {:?} but this host tried to commit level {k}",
+            effective
+        );
+    }
+    run.completed = effective;
+    run.commit_level(k)?;
+    Ok(true)
+}
+
+/// Best-effort removal of a committed level's ledger files — claims
+/// (including `.stale-*` steal remnants), done markers, finish markers —
+/// and any staged shard strays a zombie writer left behind. With
+/// `prune_frontier` the sweep also removes canonical `.bps`/`.qr` files
+/// of the level: a very late zombie publish can *resurrect* frontier
+/// files that [`ShardRun::prune_level`] already deleted, and this second
+/// sweep (which runs one level later, when `k`'s successor commits — by
+/// which point nobody reads `k`'s frontier) reclaims them. Pass `false`
+/// for the final level, whose `.qr` record carries the run's score.
+/// `.sink` files are never touched (reconstruction needs every level's).
+/// Safe to run while laggards are still in the level's barrier: they
+/// exit via the manifest check, which precedes every ledger read.
+pub fn cleanup_level(dir: &Path, k: usize, prune_frontier: bool) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let claim = format!("claim-{k:02}-");
+    let done = format!("done-{k:02}-");
+    let finish = format!("finish-{k:02}-");
+    let level = format!("level_{k:02}_");
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else {
+            continue;
+        };
+        let staged_stray = name.starts_with(&level) && name.contains(".host-");
+        let resurrected = prune_frontier
+            && name.starts_with(&level)
+            && (name.ends_with(".bps") || name.ends_with(".qr"));
+        if name.starts_with(&claim)
+            || name.starts_with(&done)
+            || name.starts_with(&finish)
+            || staged_stray
+            || resurrected
+        {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::SystemTime;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bnsl_cluster_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ledger(dir: &Path, host: usize) -> ClaimLedger {
+        ClaimLedger::new(dir, host, Duration::from_secs(2))
+    }
+
+    fn backdate(path: &Path, secs_ago: u64) {
+        let file = File::options().write(true).open(path).unwrap();
+        file.set_modified(SystemTime::now() - Duration::from_secs(secs_ago))
+            .unwrap();
+    }
+
+    #[test]
+    fn concurrent_claims_have_exactly_one_winner() {
+        let dir = tmpdir("race");
+        let won: Vec<bool> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|host| {
+                    let dir = &dir;
+                    scope.spawn(move || {
+                        let ledger = ledger(dir, host);
+                        matches!(ledger.try_claim(3, 1).unwrap(), ClaimState::Claimed(_))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(
+            won.iter().filter(|&&w| w).count(),
+            1,
+            "exactly one of 8 contenders claims the shard: {won:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_claims_are_busy_stale_claims_are_stolen() {
+        let dir = tmpdir("stale");
+        let a = ledger(&dir, 0);
+        let b = ledger(&dir, 1);
+        let claim = match a.try_claim(5, 2).unwrap() {
+            ClaimState::Claimed(c) => c,
+            other => panic!("expected a claim, got {other:?}"),
+        };
+        // a live claim is not stealable, whatever B's own cadence is
+        assert!(matches!(b.try_claim(5, 2).unwrap(), ClaimState::Busy));
+        // a dead host's claim (mtime an hour old ≫ 4 × 2 s) is stolen…
+        backdate(&claim.path, 3600);
+        let stolen = match b.try_claim(5, 2).unwrap() {
+            ClaimState::Claimed(c) => c,
+            other => panic!("expected the steal to win, got {other:?}"),
+        };
+        // …and the zombie's heartbeat neither re-creates nor overwrites
+        // the stolen claim: it is a pure mtime touch, so B's claim file
+        // keeps recording B
+        let mut zombie = claim;
+        zombie.last_beat = Instant::now() - Duration::from_secs(60);
+        zombie.heartbeat_if_due(&a);
+        let text = std::fs::read_to_string(dir.join("claim-05-0002.json")).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("host").and_then(Json::as_u64), Some(1), "{text}");
+        assert!(matches!(a.try_claim(5, 2).unwrap(), ClaimState::Busy));
+        // the zombie's release is likewise ownership-gated: B's live
+        // claim survives it
+        a.release(&zombie);
+        assert!(matches!(a.try_claim(5, 2).unwrap(), ClaimState::Busy));
+        // done marker retires the shard for everyone
+        b.mark_done(&stolen, 10, 120).unwrap();
+        assert!(matches!(a.try_claim(5, 2).unwrap(), ClaimState::Done));
+        assert!(matches!(b.try_claim(5, 2).unwrap(), ClaimState::Done));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn done_markers_and_release_drive_claim_states() {
+        let dir = tmpdir("done");
+        let a = ledger(&dir, 0);
+        let claim = match a.try_claim(2, 0).unwrap() {
+            ClaimState::Claimed(c) => c,
+            other => panic!("{other:?}"),
+        };
+        // releasing re-opens the shard
+        a.release(&claim);
+        let claim = match a.try_claim(2, 0).unwrap() {
+            ClaimState::Claimed(c) => c,
+            other => panic!("release did not free the shard: {other:?}"),
+        };
+        a.mark_done(&claim, 4, 99).unwrap();
+        assert!(matches!(a.try_claim(2, 0).unwrap(), ClaimState::Done));
+        // the done marker is valid JSON naming the shard
+        let text = std::fs::read_to_string(dir.join("done-02-0000.json")).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("entries").and_then(Json::as_u64), Some(4));
+        assert_eq!(doc.get("host").and_then(Json::as_u64), Some(0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn all_done_ignores_empty_shards() {
+        let dir = tmpdir("alldone");
+        let a = ledger(&dir, 0);
+        // 3 ranks across 4 shards: shard 3 is empty
+        let spec = ShardSpec::new(3, 4);
+        assert!(!a.all_done(&spec, 1));
+        for s in 0..3 {
+            let claim = match a.try_claim(1, s).unwrap() {
+                ClaimState::Claimed(c) => c,
+                other => panic!("{other:?}"),
+            };
+            a.mark_done(&claim, 1, 1).unwrap();
+        }
+        assert!(a.all_done(&spec, 1), "empty shard 3 needs no marker");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn election_picks_the_lowest_announced_host() {
+        let dir = tmpdir("elect");
+        let high = ledger(&dir, 7);
+        assert_eq!(high.lowest_finisher(4).unwrap(), None);
+        high.announce_finished(4).unwrap();
+        assert_eq!(high.lowest_finisher(4).unwrap(), Some(7));
+        ledger(&dir, 3).announce_finished(4).unwrap();
+        ledger(&dir, 12).announce_finished(4).unwrap();
+        assert_eq!(high.lowest_finisher(4).unwrap(), Some(3));
+        // markers are level-scoped
+        assert_eq!(high.lowest_finisher(5).unwrap(), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn double_commit_is_rejected_and_commit_checked_tolerates_races() {
+        let dir = tmpdir("commit");
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let mut a = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "aa").unwrap();
+        // A commits level 0; B (reading the committed state) has its raw
+        // double commit rejected…
+        a.commit_level(0).unwrap();
+        let mut b = ShardRun::open(&dir).unwrap();
+        let err = b.commit_level(0).unwrap_err().to_string();
+        assert!(err.contains("already committed"), "{err}");
+        // …but the barrier's reload-check-commit treats it as the benign
+        // race it is
+        let mut b = ShardRun::open(&dir).unwrap();
+        assert!(!commit_checked(&mut b, 0).unwrap());
+        assert_eq!(b.completed, Some(0));
+        // and a genuinely out-of-order commit is still an error
+        let err = commit_checked(&mut b, 5).unwrap_err().to_string();
+        assert!(err.contains("out of order"), "{err}");
+        // the in-order next level goes through
+        assert!(commit_checked(&mut b, 1).unwrap());
+        assert_eq!(committed_level(&dir), Some(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn commit_checked_repairs_a_regressed_manifest_instead_of_wedging() {
+        let dir = tmpdir("repair");
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let mut run = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "bb").unwrap();
+        run.commit_level(0).unwrap();
+        run.commit_level(1).unwrap();
+        // simulate a stalled committer's late rename landing an OLD
+        // manifest over the new one: levels_complete rolls back 1 → 0
+        let manifest = dir.join("manifest.json");
+        let rolled = std::fs::read_to_string(&manifest)
+            .unwrap()
+            .replace("\"levels_complete\": 1", "\"levels_complete\": 0");
+        std::fs::write(&manifest, rolled).unwrap();
+        assert_eq!(committed_level(&dir), Some(0), "regression in place");
+        // a host that observed level 1 commit repairs forward and
+        // commits level 2 instead of bailing 'out of order'
+        assert!(commit_checked(&mut run, 2).unwrap());
+        assert_eq!(committed_level(&dir), Some(2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cleanup_removes_ledger_files_but_not_shard_data() {
+        let dir = tmpdir("cleanup");
+        let a = ledger(&dir, 0);
+        let claim = match a.try_claim(3, 0).unwrap() {
+            ClaimState::Claimed(c) => c,
+            other => panic!("{other:?}"),
+        };
+        a.mark_done(&claim, 1, 1).unwrap();
+        a.announce_finished(3).unwrap();
+        std::fs::write(dir.join("claim-03-0001.json"), "{}").unwrap();
+        std::fs::write(dir.join("claim-03-0002.json.stale-1-99"), "{}").unwrap();
+        std::fs::write(dir.join("level_03_shard_0000.sink"), "data").unwrap();
+        std::fs::write(dir.join("level_03_shard_0001.qr.host-0009-1-7"), "stray").unwrap();
+        // a zombie's late publish resurrected a pruned frontier file
+        std::fs::write(dir.join("level_03_shard_0001.qr"), "resurrected").unwrap();
+        std::fs::write(dir.join("done-04-0000.json"), "{}").unwrap();
+        cleanup_level(&dir, 3, true);
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(
+            names.contains(&"level_03_shard_0000.sink".to_string()),
+            "sink data survives cleanup: {names:?}"
+        );
+        assert!(
+            names.contains(&"done-04-0000.json".to_string()),
+            "other levels' ledgers survive: {names:?}"
+        );
+        for gone in [
+            "claim-03-0001.json",
+            "claim-03-0002.json.stale-1-99",
+            "done-03-0000.json",
+            "finish-03-host-0000.json",
+            "level_03_shard_0001.qr.host-0009-1-7",
+            "level_03_shard_0001.qr",
+        ] {
+            assert!(!names.contains(&gone.to_string()), "{gone} not cleaned: {names:?}");
+        }
+        // without prune_frontier (the final level), .qr files survive
+        std::fs::write(dir.join("level_05_shard_0000.qr"), "final score").unwrap();
+        std::fs::write(dir.join("done-05-0000.json"), "{}").unwrap();
+        cleanup_level(&dir, 5, false);
+        assert!(dir.join("level_05_shard_0000.qr").exists());
+        assert!(!dir.join("done-05-0000.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_or_create_shared_initialises_exactly_once_across_hosts() {
+        let dir = tmpdir("init");
+        let mk = |host: usize| ClusterOptions {
+            shard: ShardOptions {
+                shards: 2,
+                dir: dir.clone(),
+                hosts: 4,
+                ..Default::default()
+            },
+            host_id: host,
+            heartbeat: Duration::from_millis(200),
+            poll: Duration::from_millis(2),
+        };
+        let runs: Vec<ShardRun> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|host| {
+                    let mk = &mk;
+                    scope.spawn(move || {
+                        open_or_create_shared(&mk(host), 10, 50, 4, "Jeffreys", "f00f").unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for run in &runs {
+            assert_eq!(run.p, 10);
+            assert_eq!(run.shards, 2);
+            assert_eq!(run.completed, None);
+        }
+        assert!(!dir.join("cluster-init.lock").exists(), "lock released");
+        // a stale abandoned lock does not wedge a later initialisation,
+        // and a crashed committer's old manifest temp is swept on entry
+        let dir2 = tmpdir("init_stale");
+        std::fs::write(dir2.join("cluster-init.lock"), "{}").unwrap();
+        backdate(&dir2.join("cluster-init.lock"), 3600);
+        std::fs::write(dir2.join("manifest.json.tmp.99.0"), "{}").unwrap();
+        backdate(&dir2.join("manifest.json.tmp.99.0"), 3600);
+        let opts = ClusterOptions {
+            shard: ShardOptions {
+                shards: 2,
+                dir: dir2.clone(),
+                ..Default::default()
+            },
+            heartbeat: Duration::from_millis(100),
+            poll: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let run = open_or_create_shared(&opts, 6, 20, 4, "Bic", "0ff0").unwrap();
+        assert_eq!(run.p, 6);
+        assert!(
+            !dir2.join("manifest.json.tmp.99.0").exists(),
+            "crashed committer's temp swept"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+}

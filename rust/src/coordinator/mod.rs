@@ -10,9 +10,16 @@
 //!   `manifest.json` committed per level, and disk-backed reconstruction —
 //!   external-memory frontier search (Malone-style) plus cross-run
 //!   `--resume`. Formats in `docs/FORMATS.md`.
+//! * [`cluster`] — the multi-host layer over [`shard`]: N independent
+//!   processes cooperating through one shared directory via a per-level
+//!   claim ledger (create-exclusive lock files, heartbeats, stale-claim
+//!   reclaim) with a lowest-host-id committer election at every level
+//!   barrier. Protocol in `docs/ARCHITECTURE.md`.
 //! * [`plan`] — the analytic level/memory planner behind Fig. 7 and the
-//!   `bnsl exp levels` harness, including the sharded-run pricing.
+//!   `bnsl exp levels` harness, including the sharded-run pricing and
+//!   per-host handle budgets.
 
+pub mod cluster;
 pub mod plan;
 pub mod shard;
 pub mod spill;

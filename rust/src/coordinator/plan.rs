@@ -3,7 +3,7 @@
 //! sharded runs ([`ShardedPlan`]) whose frontier lives entirely on disk.
 
 use crate::bitset::BinomTable;
-use crate::coordinator::shard::{reader_cache_bytes, QR_RECORD};
+use crate::coordinator::shard::{fd_budget, reader_cache_bytes, QR_RECORD};
 use crate::util::json::Json;
 
 /// Per-level accounting of the proposed method's frontier.
@@ -82,6 +82,12 @@ pub fn memory_plan(p: usize, spill_threshold: f64) -> MemoryPlan {
 /// worker buffers + window caches — per-shard frontier, not per-level —
 /// and the former RAM peak (two frontiers + `2^p` sink tables) moves to
 /// disk.
+///
+/// Cluster reading ([`crate::coordinator::cluster`], `--cluster`): every
+/// figure here except `disk_bytes` is **per host** — each host runs its
+/// own worker pool with `workers` threads, so `peak_resident_bytes` and
+/// `fd_budget` price one machine, while the shard files and `.sink`
+/// records land once on the shared mount.
 #[derive(Clone, Debug)]
 pub struct ShardedPlan {
     pub p: usize,
@@ -100,6 +106,17 @@ pub struct ShardedPlan {
     /// files (pre-prune) plus every committed level's `.sink` records
     /// (`(1+mask)·2^p` in total by the end — kept for reconstruction).
     pub disk_bytes: u64,
+    /// Per-host open-file budget at the *planned* worker count: every
+    /// worker's previous-level read handles + writer streams, plus
+    /// process margin and the cluster claim-ledger headroom
+    /// ([`crate::coordinator::shard::fd_budget`]), surfaced here so
+    /// `bnsl info` reports it before a run dies at open time. This is a
+    /// conservative ceiling on what the solvers preflight: `workers = 0`
+    /// is priced as one worker per shard (actual runs additionally cap
+    /// workers at the machine's core count, which the machine-agnostic
+    /// planner cannot know), and single-host `solve_sharded` runs skip
+    /// the ledger headroom.
+    pub fd_budget: u64,
 }
 
 /// Price a sharded run. `workers == 0` means one worker per shard;
@@ -163,6 +180,7 @@ pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> Sh
         peak_resident_bytes,
         peak_level,
         disk_bytes,
+        fd_budget: fd_budget(workers, shards, true),
     }
 }
 
@@ -177,6 +195,7 @@ impl ShardedPlan {
             .set("peak_resident_bytes", self.peak_resident_bytes)
             .set("peak_level", self.peak_level)
             .set("disk_bytes", self.disk_bytes)
+            .set("fd_budget", self.fd_budget)
     }
 }
 
@@ -357,6 +376,21 @@ mod tests {
         assert_eq!(sharded_plan(20, 4, 2, 64).workers, 2);
         let j = cap.to_json().to_string();
         assert!(j.contains("peak_resident_bytes"), "{j}");
+        assert!(j.contains("fd_budget"), "{j}");
+    }
+
+    /// Satellite (ISSUE 3): the per-host handle budget is part of the
+    /// plan. With an explicit worker count it equals the cluster
+    /// preflight figure; with `workers = 0` it is the machine-agnostic
+    /// one-per-shard ceiling (runs additionally clamp to core count).
+    #[test]
+    fn sharded_plan_surfaces_the_per_host_fd_budget() {
+        let plan = sharded_plan(20, 8, 3, 1024);
+        assert_eq!(plan.workers, 3);
+        assert_eq!(plan.fd_budget, fd_budget(3, 8, true));
+        // budget grows with both knobs the error message names
+        assert!(sharded_plan(20, 16, 3, 1024).fd_budget > plan.fd_budget);
+        assert!(sharded_plan(20, 8, 8, 1024).fd_budget > plan.fd_budget);
     }
 
     #[test]

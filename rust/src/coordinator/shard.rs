@@ -51,8 +51,13 @@ use std::path::{Path, PathBuf};
 // direct-mapped window caches cannot drift apart.
 pub(crate) use super::spill::{SLOTS, WINDOW};
 
-/// Manifest format version.
-const MANIFEST_FORMAT: u64 = 1;
+/// Manifest format version written by this binary. Version 2 (ISSUE 3)
+/// added the informational `hosts` field alongside the cluster claim
+/// ledger ([`crate::coordinator::cluster`]); version-1 manifests are
+/// still read (the field defaults to 1).
+const MANIFEST_FORMAT: u64 = 2;
+/// Oldest manifest format this reader still understands.
+const MANIFEST_FORMAT_MIN: u64 = 1;
 
 /// Bytes of one `.qr` record: little-endian `f64` `log Q` + `f64` `log R`.
 pub(crate) const QR_RECORD: usize = 16;
@@ -77,6 +82,28 @@ pub(crate) fn slot_cap(shards: usize) -> usize {
 pub(crate) fn reader_cache_bytes(entries: usize, record: usize, shards: usize) -> usize {
     let slots = slot_cap(shards).min(entries.div_ceil(WINDOW)).max(1);
     slots * WINDOW * record + slots * 8
+}
+
+/// Extra handle headroom a cluster host needs on top of the worker-pool
+/// read/write handles: transient claim / done-marker / finish-marker /
+/// manifest-poll opens ([`crate::coordinator::cluster`]). Small but real
+/// — the ledger is touched from inside the level loop, so budgeting it
+/// up front keeps the preflight honest.
+pub(crate) const CLUSTER_FD_MARGIN: u64 = 16;
+
+/// Per-host open-file budget of a sharded run: every worker holds `.qr` +
+/// `.bps` read handles for all previous-level shards plus its own three
+/// writer streams, plus a fixed process margin; cluster mode adds the
+/// claim-ledger headroom. Shared between the solver preflights and
+/// [`crate::coordinator::plan::sharded_plan`], so `bnsl info` prices
+/// exactly what the drivers check.
+pub fn fd_budget(workers: usize, shards: usize, cluster: bool) -> u64 {
+    let base = workers as u64 * (2 * shards as u64 + 3) + 32;
+    if cluster {
+        base + CLUSTER_FD_MARGIN
+    } else {
+        base
+    }
 }
 
 /// Soft `RLIMIT_NOFILE` via `/proc/self/limits` (`None` off Linux or if
@@ -112,6 +139,10 @@ pub struct ShardOptions {
     /// Keep every level's `.bps`/`.qr` files instead of pruning levels
     /// that are no longer needed for resume (debugging aid).
     pub keep_levels: bool,
+    /// Declared cluster size (informational, recorded in the v2 manifest;
+    /// 1 for single-host runs). The claim ledger is elastic — hosts may
+    /// join or vanish — so this is *not* validated on resume.
+    pub hosts: usize,
 }
 
 impl Default for ShardOptions {
@@ -123,6 +154,7 @@ impl Default for ShardOptions {
             dir: PathBuf::from("bnsl_shards"),
             stop_after_level: None,
             keep_levels: false,
+            hosts: 1,
         }
     }
 }
@@ -208,6 +240,9 @@ pub struct ShardRun {
     pub mask_bytes: usize,
     pub score: String,
     pub fingerprint: String,
+    /// Declared cluster size when the run was created (informational;
+    /// 1 for single-host runs and for v1 manifests).
+    pub hosts: usize,
     /// Highest committed level (`None` before level 0 commits).
     pub completed: Option<usize>,
 }
@@ -287,10 +322,17 @@ impl ShardRun {
             mask_bytes,
             score: score.to_string(),
             fingerprint: fingerprint.to_string(),
+            hosts: options.hosts.max(1),
             completed: None,
         };
         run.write_manifest()?;
         Ok(run)
+    }
+
+    /// The run directory (manifest, shard files, and — in cluster mode —
+    /// the claim ledger).
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     /// Load an existing run's manifest (resume entry point).
@@ -317,9 +359,10 @@ impl ShardRun {
                 .ok_or_else(|| anyhow::anyhow!("{}: field '{key}' not a string", path.display()))
         }
         let format = field(&doc, &path, "format")?.as_u64().unwrap_or(0);
-        if format != MANIFEST_FORMAT {
+        if !(MANIFEST_FORMAT_MIN..=MANIFEST_FORMAT).contains(&format) {
             bail!(
-                "{}: manifest format {format} unsupported (reader is {MANIFEST_FORMAT})",
+                "{}: manifest format {format} unsupported (reader speaks \
+                 {MANIFEST_FORMAT_MIN}..={MANIFEST_FORMAT})",
                 path.display()
             );
         }
@@ -336,6 +379,11 @@ impl ShardRun {
             mask_bytes: as_usize(&doc, &path, "mask_bytes")?,
             score: as_string(&doc, &path, "score")?,
             fingerprint: as_string(&doc, &path, "fingerprint")?,
+            // v2 field; v1 manifests were single-host by construction
+            hosts: doc
+                .get("hosts")
+                .and_then(Json::as_u64)
+                .map_or(1, |h| (h as usize).max(1)),
             completed,
         };
         if !run.shards.is_power_of_two() || run.shards == 0 {
@@ -357,6 +405,14 @@ impl ShardRun {
         Ok(run)
     }
 
+    /// Atomically rewrite the manifest from this handle's in-memory
+    /// state without advancing it — the cluster barrier's repair hook
+    /// for a manifest that regressed when a stalled committer's rename
+    /// landed late (see `coordinator::cluster::commit_checked`).
+    pub(crate) fn rewrite_manifest(&self) -> Result<()> {
+        self.write_manifest()
+    }
+
     fn write_manifest(&self) -> Result<()> {
         let doc = Json::obj()
             .set("format", MANIFEST_FORMAT)
@@ -366,12 +422,24 @@ impl ShardRun {
             .set("mask_bytes", self.mask_bytes)
             .set("score", self.score.as_str())
             .set("fingerprint", self.fingerprint.as_str())
+            .set("hosts", self.hosts)
             .set(
                 "levels_complete",
                 self.completed.map(|k| k as i64).unwrap_or(-1),
             );
         let path = self.dir.join("manifest.json");
-        let tmp = self.dir.join("manifest.json.tmp");
+        // the tmp name is unique per writer AND per write: in cluster
+        // mode two hosts may rewrite the manifest concurrently (a benign
+        // commit race — the contents are identical), and a shared tmp
+        // name would let one writer rename the other's half-written file
+        // into place. The sequence number covers in-process "hosts"
+        // (worker threads in the tests), which share a pid.
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            "manifest.json.tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
         {
             // write + fsync BEFORE the rename: a rename whose data blocks
             // never hit disk would survive a crash as a garbage manifest
@@ -393,8 +461,26 @@ impl ShardRun {
 
     /// Durably mark level `k` complete (atomic manifest rewrite). All of
     /// the level's shard files must be flushed before this is called.
+    /// Levels commit strictly in order: committing a level at or below
+    /// `completed` (a double commit) or skipping ahead is an error, not a
+    /// silent rewrite — the cluster barrier relies on this to reject a
+    /// confused committer.
     pub fn commit_level(&mut self, k: usize) -> Result<()> {
-        debug_assert!(self.completed.map_or(k == 0, |c| k == c + 1));
+        let expect = self.completed.map_or(0, |c| c + 1);
+        if k != expect {
+            match self.completed {
+                Some(c) if k <= c => bail!(
+                    "{}: level {k} is already committed (double commit \
+                     rejected; levels_complete = {c})",
+                    self.dir.join("manifest.json").display()
+                ),
+                _ => bail!(
+                    "{}: cannot commit level {k} out of order — the next \
+                     committable level is {expect}",
+                    self.dir.join("manifest.json").display()
+                ),
+            }
+        }
         self.completed = Some(k);
         self.write_manifest()
     }
@@ -455,30 +541,79 @@ impl<M: VarMask> SinkOut<M> for SinkBuf<M> {
 /// The one-spill-writer-per-shard bundle: `.bps` + `.qr` + `.sink`
 /// streams for one (level, shard) pair, appended batch by batch so a
 /// shard's frontier never materialises in RAM.
+///
+/// Single-host runs write the canonical `level_*_shard_*.{ext}` files
+/// directly ([`ShardWriterSet::create`]). Cluster hosts write *staged*
+/// files (`.{ext}.host-…` — [`ShardWriterSet::create_staged`]) that
+/// [`ShardWriterSet::finish`] renames into place only after the fsync,
+/// so a host whose claim was reclaimed mid-write (a "zombie") can never
+/// leave a truncated canonical file: either its rename never happens, or
+/// it atomically publishes bytes that are bit-identical to the
+/// reclaimer's (the sweep is deterministic).
 pub struct ShardWriterSet<M: VarMask> {
     bps: BufWriter<File>,
     qr: BufWriter<File>,
     sink: BufWriter<File>,
+    /// `(written path, canonical path)` per stream; equal when unstaged.
+    publish: [(PathBuf, PathBuf); 3],
     entries: u64,
     bytes: u64,
     _width: PhantomData<M>,
 }
 
 impl<M: VarMask> ShardWriterSet<M> {
+    /// Write the canonical shard files directly (single-host path).
     pub fn create(run: &ShardRun, k: usize, s: usize) -> Result<ShardWriterSet<M>> {
-        let open = |ext: &str, kind: u8| -> Result<BufWriter<File>> {
-            let path = run.shard_file(k, s, ext);
+        ShardWriterSet::create_inner(run, k, s, None)
+    }
+
+    /// Write host-unique staged files, atomically renamed to the
+    /// canonical names by [`ShardWriterSet::finish`] (cluster path).
+    /// `tag` must be unique per writing process (e.g. `host-0003-71234`).
+    pub fn create_staged(
+        run: &ShardRun,
+        k: usize,
+        s: usize,
+        tag: &str,
+    ) -> Result<ShardWriterSet<M>> {
+        ShardWriterSet::create_inner(run, k, s, Some(tag))
+    }
+
+    fn create_inner(
+        run: &ShardRun,
+        k: usize,
+        s: usize,
+        tag: Option<&str>,
+    ) -> Result<ShardWriterSet<M>> {
+        let mut publish: Vec<(PathBuf, PathBuf)> = Vec::with_capacity(3);
+        let mut open = |ext: &str, kind: u8| -> Result<BufWriter<File>> {
+            let target = run.shard_file(k, s, ext);
+            let path = match tag {
+                Some(tag) => {
+                    let mut name = target.as_os_str().to_os_string();
+                    name.push(format!(".{tag}"));
+                    PathBuf::from(name)
+                }
+                None => target.clone(),
+            };
             let file = File::create(&path)
                 .with_context(|| format!("creating shard file {}", path.display()))?;
             let mut w = BufWriter::new(file);
             w.write_all(&encode_header(M::BYTES as u8, k as u8, kind))
                 .with_context(|| format!("writing header of {}", path.display()))?;
+            publish.push((path, target));
             Ok(w)
         };
+        let bps = open("bps", KIND_BPS)?;
+        let qr = open("qr", KIND_QR)?;
+        let sink = open("sink", KIND_SINK)?;
+        let publish: [(PathBuf, PathBuf); 3] =
+            publish.try_into().expect("three shard streams");
         Ok(ShardWriterSet {
-            bps: open("bps", KIND_BPS)?,
-            qr: open("qr", KIND_QR)?,
-            sink: open("sink", KIND_SINK)?,
+            bps,
+            qr,
+            sink,
+            publish,
             entries: 0,
             bytes: 3 * HEADER as u64,
             _width: PhantomData,
@@ -516,13 +651,22 @@ impl<M: VarMask> ShardWriterSet<M> {
         Ok(())
     }
 
-    /// Flush + fsync all three streams; returns (subset entries, bytes
+    /// Flush + fsync all three streams, then (for staged writers) rename
+    /// them to their canonical names; returns (subset entries, bytes
     /// written). Sync errors propagate: the level must not commit over
-    /// shard data the kernel could not persist.
+    /// shard data the kernel could not persist, and a staged file is
+    /// only published after its bytes are durable.
     pub fn finish(self) -> Result<(u64, u64)> {
         for mut w in [self.bps, self.qr, self.sink] {
             w.flush()?;
             w.get_ref().sync_data()?;
+        }
+        for (written, target) in &self.publish {
+            if written != target {
+                std::fs::rename(written, target).with_context(|| {
+                    format!("publishing shard file {}", target.display())
+                })?;
+            }
         }
         Ok((self.entries, self.bytes))
     }
@@ -927,6 +1071,108 @@ mod tests {
         assert_eq!(resumed.shards, 4);
         assert_eq!(resumed.completed, Some(1));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_v2_records_hosts_and_reads_v1_without_them() {
+        let dir = tmpdir("hosts");
+        let opts = ShardOptions {
+            shards: 2,
+            hosts: 3,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        ShardRun::open_or_create(&opts, 9, 50, 4, "Bic", "abcd").unwrap();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(text.contains("\"format\": 2"), "{text}");
+        assert!(text.contains("\"hosts\": 3"), "{text}");
+        assert_eq!(ShardRun::open(&dir).unwrap().hosts, 3);
+        // a v1 manifest (no hosts field) still opens, defaulting to 1
+        let v1 = text
+            .replace("\"format\": 2", "\"format\": 1")
+            .lines()
+            .filter(|l| !l.contains("\"hosts\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(dir.join("manifest.json"), v1).unwrap();
+        let back = ShardRun::open(&dir).unwrap();
+        assert_eq!(back.hosts, 1);
+        // ...and a future format is rejected by version range
+        let v9 = text.replace("\"format\": 2", "\"format\": 9");
+        std::fs::write(dir.join("manifest.json"), v9).unwrap();
+        let err = ShardRun::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("format 9"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn staged_writer_publishes_only_at_finish() {
+        let dir = tmpdir("staged");
+        let opts = ShardOptions {
+            shards: 1,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let run = ShardRun::open_or_create(&opts, 8, 10, 4, "Jeffreys", "ff").unwrap();
+        let k = 2;
+        let mut w = ShardWriterSet::<u32>::create_staged(&run, k, 0, "host-0001-42").unwrap();
+        let mut sinks = SinkBuf::default();
+        sinks.put(0u32, 1, 0);
+        w.append(&[1.0], &[2.0], &[0.5, 0.25], &[3u32, 5], &mut sinks)
+            .unwrap();
+        // nothing canonical exists while the writer is staging
+        for ext in ["bps", "qr", "sink"] {
+            assert!(!run.shard_file(k, 0, ext).exists(), "{ext} published early");
+        }
+        let (entries, bytes) = w.finish().unwrap();
+        assert_eq!(entries, 1);
+        assert!(bytes > 0);
+        // finish renamed every stream into place and left no staged strays
+        for ext in ["bps", "qr", "sink"] {
+            let canon = run.shard_file(k, 0, ext);
+            assert!(canon.exists(), "{ext} missing after publish");
+            let mut staged = canon.as_os_str().to_os_string();
+            staged.push(".host-0001-42");
+            assert!(!PathBuf::from(staged).exists(), "{ext} stray remains");
+        }
+        // and the published .qr stream reads back like a direct write
+        let bytes = std::fs::read(run.shard_file(k, 0, "qr")).unwrap();
+        assert_eq!(bytes.len(), HEADER + QR_RECORD);
+        assert_eq!(
+            f64::from_le_bytes(bytes[HEADER..HEADER + 8].try_into().unwrap()),
+            1.0
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn commit_level_rejects_double_and_out_of_order_commits() {
+        let dir = tmpdir("commit_order");
+        let opts = ShardOptions {
+            shards: 1,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let mut run = ShardRun::open_or_create(&opts, 6, 10, 4, "Bic", "11").unwrap();
+        // skipping ahead is rejected
+        let err = run.commit_level(1).unwrap_err().to_string();
+        assert!(err.contains("out of order"), "{err}");
+        run.commit_level(0).unwrap();
+        run.commit_level(1).unwrap();
+        // double commit is rejected by name
+        let err = run.commit_level(1).unwrap_err().to_string();
+        assert!(err.contains("already committed"), "{err}");
+        assert_eq!(run.completed, Some(1), "failed commit left state intact");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fd_budget_prices_cluster_margin() {
+        assert_eq!(fd_budget(2, 4, false), 2 * 11 + 32);
+        assert_eq!(
+            fd_budget(2, 4, true),
+            fd_budget(2, 4, false) + CLUSTER_FD_MARGIN
+        );
     }
 
     #[test]

@@ -69,7 +69,10 @@
 //!   stops binding and disk does — single-digit TB of shard files at
 //!   the cap, priced by [`coordinator::plan::sharded_plan`]. Sharded
 //!   runs checkpoint a `manifest.json` per level and resume with
-//!   `--resume <dir>`.
+//!   `--resume <dir>`; the same format scales across machines via the
+//!   cluster claim ledger ([`coordinator::cluster`],
+//!   [`solver::solve_clustered`], `--cluster`): N processes over one
+//!   shared directory, crash-reclaim included, bit-identical results.
 //! * **`MAX_NET_VARS` = 64** — one `u64` word of adjacency per node for
 //!   generative networks, hill climbing, PC-Stable and the hybrid
 //!   search (`search::hill_climb` handles p = 48 datasets end-to-end;

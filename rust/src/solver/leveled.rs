@@ -24,9 +24,13 @@
 
 use super::common::{reconstruct, SolveOptions, SolveResult, SolveStats};
 use crate::bitset::{colex_unrank, BinomTable, LevelIter, VarMask};
+use crate::coordinator::cluster::{
+    barrier_commit, cleanup_level, committed_level, committed_level_patient,
+    open_or_create_shared, ClaimLedger, ClaimState, ClusterOptions,
+};
 use crate::coordinator::plan::memory_plan;
 use crate::coordinator::shard::{
-    final_score, reconstruct_from_disk, run_fingerprint, ShardOptions, ShardRun,
+    final_score, reconstruct_from_disk, run_fingerprint, ShardOptions, ShardRun, ShardSpec,
     ShardWriterSet, ShardedLevelReader, SinkBuf, SinkOut,
 };
 use crate::coordinator::spill::{SpilledLevel, SpilledLevelWriter};
@@ -623,8 +627,9 @@ pub fn solve_sharded<M: VarMask>(
     };
     // Each worker holds .qr + .bps read handles for every shard of the
     // previous level plus its 3 writer streams; fail up front with the
-    // remedy instead of dying mid-level on EMFILE.
-    let fds_needed = (workers * (2 * run.shards + 3) + 32) as u64;
+    // remedy instead of dying mid-level on EMFILE. The same budget is
+    // surfaced ahead of time by `plan::sharded_plan` / `bnsl info`.
+    let fds_needed = crate::coordinator::shard::fd_budget(workers, run.shards, false);
     if let Some(limit) = crate::coordinator::shard::fd_soft_limit() {
         if fds_needed > limit {
             bail!(
@@ -714,37 +719,28 @@ pub fn solve_sharded<M: VarMask>(
                                 reader = Some(ShardedLevelReader::open(run, binom, k1 - 1)?);
                             }
                             let prev = reader.as_ref().expect("reader just opened");
-                            let len = (hi - lo) as usize;
                             let mut writer = ShardWriterSet::<M>::create(run, k1, s)?;
-                            let mut iter = LevelIter::<M>::resume(
+                            let (bu, su) = sweep_shard_range(
+                                &mut worker,
+                                prev,
+                                binom,
                                 p,
-                                colex_unrank::<M>(binom, p, k1, lo),
-                            );
-                            let mut done = 0usize;
-                            while done < len {
-                                let take = batch.min(len - done);
-                                let (_evals, bu, su) = worker.run_range(
-                                    prev,
-                                    lo as usize + done,
-                                    take,
-                                    &mut iter,
-                                    &mut q_buf[..take],
-                                    &mut r_buf[..take],
-                                    &mut bps_buf[..take * k1],
-                                    &mut bpm_buf[..take * k1],
-                                    &mut sinks,
-                                );
-                                agg.bps_updates += bu;
-                                agg.sink_updates += su;
-                                writer.append(
-                                    &q_buf[..take],
-                                    &r_buf[..take],
-                                    &bps_buf[..take * k1],
-                                    &bpm_buf[..take * k1],
-                                    &mut sinks,
-                                )?;
-                                done += take;
-                            }
+                                k1,
+                                lo,
+                                hi,
+                                batch,
+                                &mut writer,
+                                (
+                                    q_buf.as_mut_slice(),
+                                    r_buf.as_mut_slice(),
+                                    bps_buf.as_mut_slice(),
+                                    bpm_buf.as_mut_slice(),
+                                ),
+                                &mut sinks,
+                                &mut || {},
+                            )?;
+                            agg.bps_updates += bu;
+                            agg.sink_updates += su;
                             let (entries, bytes) = writer.finish()?;
                             debug_assert_eq!(entries, hi - lo);
                             agg.bytes += bytes;
@@ -790,6 +786,436 @@ pub fn solve_sharded<M: VarMask>(
         order,
         stats,
     }))
+}
+
+/// The multi-host variant of [`solve_sharded`]: N independent processes
+/// — one per machine, or several on one — cooperate on a single sharded
+/// run through a shared `--shard-dir`, coordinating exclusively via the
+/// filesystem claim ledger ([`crate::coordinator::cluster`]); there is
+/// no server and no network protocol. Each host's worker pool claims
+/// (level, shard) pairs with create-exclusive lock files, runs the
+/// **identical** deterministic [`LevelWorker`] sweep over them, and
+/// publishes staged shard files by atomic rename; a per-level barrier
+/// with a lowest-host-id committer election performs the same fsynced
+/// manifest commit [`solve_sharded`] uses. Results are therefore
+/// bit-identical to [`solve_sharded`] and to the resident
+/// [`LeveledSolver`] regardless of which host computes which shard.
+///
+/// Crash behaviour: a SIGKILLed host costs at most its in-flight shards
+/// — their stale claims are reclaimed after
+/// [`crate::coordinator::cluster::STALE_FACTOR`]`× heartbeat` and the
+/// shards re-run — while its *finished* shards survive through fsynced
+/// done markers. `--resume` semantics compose unchanged: any surviving
+/// or restarted host re-enters the run at the last committed level.
+pub fn solve_clustered<M: VarMask>(
+    engine: &(dyn ScoreEngine<M> + Sync),
+    options: &ClusterOptions,
+) -> Result<ShardOutcome> {
+    let start = Instant::now();
+    let p = engine.p();
+    if p < 1 {
+        bail!("need at least one variable");
+    }
+    let cap = crate::sharded_dp_cap::<M>();
+    if p > cap {
+        bail!(
+            "p={p} exceeds the {}-bit sharded exact-DP cap of {cap} \
+             variables. Next-larger configurations that work: sharded wide \
+             path (u64 masks) p ≤ {}; approximate searches \
+             (--solver hillclimb/hybrid) p ≤ {}",
+            M::BITS,
+            crate::MAX_VARS_SHARDED,
+            crate::MAX_NET_VARS,
+        );
+    }
+    if options.shard.hosts < 1 {
+        bail!("--hosts must be at least 1");
+    }
+    if options.heartbeat.is_zero() {
+        bail!("the cluster heartbeat must be positive");
+    }
+    let fingerprint = run_fingerprint(engine.data(), engine.kind());
+    let score_name = format!("{:?}", engine.kind());
+    let mut run =
+        open_or_create_shared(options, p, engine.n(), M::BYTES, &score_name, &fingerprint)?;
+    let binom = BinomTable::new(p);
+    let batch = options.shard.batch.max(1);
+    let workers = if options.shard.workers == 0 {
+        std::thread::available_parallelism().map_or(run.shards, |n| n.get().min(run.shards))
+    } else {
+        options.shard.workers.clamp(1, run.shards)
+    };
+    // Cluster hosts additionally open claim/done/finish/manifest files
+    // from inside the level loop; the budget prices that headroom too.
+    let fds_needed = crate::coordinator::shard::fd_budget(workers, run.shards, true);
+    if let Some(limit) = crate::coordinator::shard::fd_soft_limit() {
+        if fds_needed > limit {
+            bail!(
+                "--cluster --shards {} with {workers} workers needs \
+                 ≈{fds_needed} open files (incl. claim-ledger headroom) \
+                 but the soft limit is {limit}; raise `ulimit -n`, lower \
+                 --shards, or cap workers with --threads",
+                run.shards
+            );
+        }
+    }
+    let ledger = ClaimLedger::new(run.dir(), options.host_id, options.heartbeat);
+    let mut stats = SolveStats {
+        traversals: 1,
+        resumed_levels: run.completed.map_or(0, |k| k as u32 + 1),
+        peak_state_bytes: crate::coordinator::plan::sharded_plan(p, run.shards, workers, batch)
+            .peak_resident_bytes as usize,
+        ..Default::default()
+    };
+
+    // A join whose time-box is already satisfied checkpoints immediately,
+    // exactly like a sharded resume.
+    if let (Some(stop), Some(done)) = (options.shard.stop_after_level, run.completed) {
+        if stop < p && done >= stop {
+            return Ok(ShardOutcome::Checkpointed {
+                level: done,
+                dir: options.shard.dir.clone(),
+            });
+        }
+    }
+
+    let first = run.completed.map_or(0, |c| c + 1);
+    for k1 in first..=p {
+        // a faster host may already have carried the run past this level
+        // while we were joining or lagging — skip straight ahead (but
+        // still honour this host's own time-box on the way through)
+        if committed_level(run.dir()).is_some_and(|c| c >= k1 as i64) {
+            run.completed = Some(k1);
+            if options.shard.stop_after_level == Some(k1) && k1 < p {
+                stats.wall = start.elapsed();
+                return Ok(ShardOutcome::Checkpointed {
+                    level: k1,
+                    dir: options.shard.dir.clone(),
+                });
+            }
+            continue;
+        }
+        let spec1 = run.spec(&binom, k1);
+        let results: Vec<Result<ShardJobStats>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers.min(spec1.shards))
+                .map(|w| {
+                    let ledger = &ledger;
+                    let run = &run;
+                    let binom = &binom;
+                    let spec1 = &spec1;
+                    scope.spawn(move || {
+                        cluster_level_worker(
+                            engine, run, binom, k1, spec1, ledger, batch, w, options,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("cluster worker panicked"))
+                .collect()
+        });
+        for r in results {
+            let job = r?;
+            stats.score_evals += job.evals;
+            stats.bps_updates += job.bps_updates;
+            stats.sink_updates += job.sink_updates;
+            stats.spilled_bytes += job.bytes;
+        }
+        let committed_here = barrier_commit(&mut run, &ledger, &spec1, k1, options)?;
+        if committed_here && k1 >= 1 && !options.shard.keep_levels {
+            run.prune_level(k1 - 1);
+            cleanup_level(run.dir(), k1 - 1, true);
+        }
+        if options.shard.stop_after_level == Some(k1) && k1 < p {
+            stats.wall = start.elapsed();
+            return Ok(ShardOutcome::Checkpointed {
+                level: k1,
+                dir: options.shard.dir.clone(),
+            });
+        }
+    }
+
+    // level p has no successor commit to sweep its ledger away — do it
+    // here (best-effort, idempotent across hosts; laggards exit via the
+    // manifest check that precedes every ledger read). No frontier
+    // prune: level p's .qr record is the run's final score.
+    if !options.shard.keep_levels {
+        cleanup_level(run.dir(), p, false);
+    }
+    let log_score = final_score::<M>(&run)?;
+    let (network, order) = reconstruct_from_disk::<M>(&run, &binom)?;
+    stats.wall = start.elapsed();
+    Ok(ShardOutcome::Complete(SolveResult {
+        network,
+        log_score,
+        order,
+        stats,
+    }))
+}
+
+/// One host-local worker draining the cluster claim ledger for level
+/// `k1`: claim → sweep → publish staged files → done marker, until every
+/// non-empty shard of the level is done (or the level turns out to be
+/// superseded — committed by faster hosts — in which case the worker
+/// just stops). Identical inner sweep to the [`solve_sharded`] workers;
+/// only the shard-selection discipline differs.
+#[allow(clippy::too_many_arguments)]
+fn cluster_level_worker<M: VarMask>(
+    engine: &(dyn ScoreEngine<M> + Sync),
+    run: &ShardRun,
+    binom: &BinomTable,
+    k1: usize,
+    spec1: &ShardSpec,
+    ledger: &ClaimLedger,
+    batch: usize,
+    worker_ix: usize,
+    options: &ClusterOptions,
+) -> Result<ShardJobStats> {
+    let p = run.p;
+    let shards = spec1.shards;
+    let mut agg = ShardJobStats::default();
+    // Per-worker state hoisted exactly like the sharded worker pool.
+    // The reader (file handles + window caches) and the scorer-owning
+    // LevelWorker are created lazily on the first claim, so workers
+    // that claim nothing skip the expensive parts; the flat batch
+    // buffers below are allocated eagerly per level (cheap relative to
+    // reader caches, and sized exactly as plan.rs prices them).
+    let mut reader: Option<ShardedLevelReader<M>> = None;
+    let mut worker: Option<LevelWorker<M>> = None;
+    let mut q_buf = vec![0.0f64; batch];
+    let mut r_buf = vec![0.0f64; batch];
+    let mut bps_buf = vec![0.0f64; batch * k1];
+    let mut bpm_buf = vec![M::ZERO; batch * k1];
+    let mut sinks = SinkBuf::default();
+    // stagger each worker's scan start so the cluster's workers do not
+    // all contend on shard 0 (any order is fine — shard results are
+    // position-independent)
+    let offset = options
+        .host_id
+        .wrapping_mul(13)
+        .wrapping_add(worker_ix.wrapping_mul(5))
+        % shards;
+    'level: loop {
+        let mut all_done = true;
+        let mut claimed_any = false;
+        for i in 0..shards {
+            let s = (i + offset) % shards;
+            if spec1.entries(s) == 0 {
+                continue;
+            }
+            match ledger.try_claim(k1, s)? {
+                ClaimState::Done => {}
+                ClaimState::Busy => all_done = false,
+                ClaimState::Claimed(mut claim) => {
+                    all_done = false;
+                    claimed_any = true;
+                    if k1 > 0 && reader.is_none() {
+                        match ShardedLevelReader::open(run, binom, k1 - 1) {
+                            Ok(r) => reader = Some(r),
+                            Err(e) => {
+                                // a much faster host may have committed
+                                // this level and pruned its inputs while
+                                // we idled — that is not our error (the
+                                // patient read rides out a concurrent
+                                // commit's mid-rename window)
+                                ledger.release(&claim);
+                                if committed_level_patient(
+                                    run.dir(),
+                                    options.stale_after(),
+                                    options.poll,
+                                )
+                                .is_some_and(|c| c >= k1 as i64)
+                                {
+                                    break 'level;
+                                }
+                                return Err(e);
+                            }
+                        }
+                    }
+                    let computed: Result<(u64, u64, u64, u64)> = if k1 == 0 {
+                        // level 0: the empty set's single record
+                        (|| {
+                            let mut scorer = engine.scorer();
+                            let log_q_empty = scorer.log_q(M::ZERO);
+                            agg.evals += scorer.evals();
+                            let mut writer = ShardWriterSet::<M>::create_staged(
+                                run,
+                                0,
+                                s,
+                                &ledger.fresh_stage_tag(),
+                            )?;
+                            writer.append(&[log_q_empty], &[0.0], &[], &[], &mut sinks)?;
+                            let (entries, bytes) = writer.finish()?;
+                            Ok((entries, bytes, 0, 0))
+                        })()
+                    } else {
+                        let prev = reader.as_ref().expect("reader just opened");
+                        let w = worker
+                            .get_or_insert_with(|| LevelWorker::new(engine, binom, k1, batch));
+                        let (lo, hi) = spec1.bounds(s);
+                        // catch_unwind: the windowed readers *panic* on
+                        // mid-sweep I/O failure (their hot path returns
+                        // values, not Results) — which on a cluster is a
+                        // survivable event: a stalled host's inputs may
+                        // be pruned once faster hosts commit the level.
+                        // Contain the panic so the superseded check in
+                        // the Err arm below can turn it into a rejoin.
+                        let swept = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || {
+                                let mut writer = ShardWriterSet::<M>::create_staged(
+                                    run,
+                                    k1,
+                                    s,
+                                    &ledger.fresh_stage_tag(),
+                                )?;
+                                let mut tick = || claim.heartbeat_if_due(ledger);
+                                let (bu, su) = sweep_shard_range(
+                                    w,
+                                    prev,
+                                    binom,
+                                    p,
+                                    k1,
+                                    lo,
+                                    hi,
+                                    batch,
+                                    &mut writer,
+                                    (
+                                        q_buf.as_mut_slice(),
+                                        r_buf.as_mut_slice(),
+                                        bps_buf.as_mut_slice(),
+                                        bpm_buf.as_mut_slice(),
+                                    ),
+                                    &mut sinks,
+                                    &mut tick,
+                                )?;
+                                let (entries, bytes) = writer.finish()?;
+                                debug_assert_eq!(entries, hi - lo);
+                                Ok((entries, bytes, bu, su))
+                            },
+                        ));
+                        match swept {
+                            Ok(result) => result,
+                            Err(panic) => {
+                                let msg = panic
+                                    .downcast_ref::<String>()
+                                    .cloned()
+                                    .or_else(|| {
+                                        panic.downcast_ref::<&str>().map(|s| s.to_string())
+                                    })
+                                    .unwrap_or_else(|| "shard sweep panicked".to_string());
+                                Err(anyhow::anyhow!(
+                                    "sweep of level {k1} shard {s} failed: {msg}"
+                                ))
+                            }
+                        }
+                    };
+                    match computed {
+                        Ok((entries, bytes, bu, su)) => {
+                            agg.bytes += bytes;
+                            agg.bps_updates += bu;
+                            agg.sink_updates += su;
+                            ledger.mark_done(&claim, entries, bytes)?;
+                        }
+                        Err(e) => {
+                            ledger.release(&claim);
+                            // A compute/publish failure on a *superseded*
+                            // level is expected, not fatal: a host stalled
+                            // past the stale window may find its staged
+                            // files or inputs cleaned once faster hosts
+                            // committed this level — the work is moot.
+                            // (Patient read: a single mid-rename manifest
+                            // miss must not turn this rejoin into a crash.)
+                            if committed_level_patient(
+                                run.dir(),
+                                options.stale_after(),
+                                options.poll,
+                            )
+                            .is_some_and(|c| c >= k1 as i64)
+                            {
+                                break 'level;
+                            }
+                            // otherwise release lets another worker/host
+                            // retry without waiting out the stale window
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        }
+        if all_done {
+            break;
+        }
+        if !claimed_any {
+            // idle pass: every remaining shard is someone else's — watch
+            // for the whole level being superseded (committed and its
+            // ledger cleaned) so a laggard cannot wedge here
+            if committed_level(run.dir()).is_some_and(|c| c >= k1 as i64) {
+                break 'level;
+            }
+            std::thread::sleep(options.poll);
+        }
+    }
+    if let Some(w) = &worker {
+        // scorer evals are cumulative across this worker's shards
+        agg.evals += w.scorer.evals();
+    }
+    Ok(agg)
+}
+
+/// Sweep the contiguous rank range `[lo, hi)` of level `k1` into an
+/// already-created shard writer, invoking `tick` once per batch (the
+/// cluster path heartbeats its claim there; the single-host path passes
+/// a no-op). This is **the** shared inner loop of [`solve_sharded`] and
+/// [`solve_clustered`] — one body, so the bit-identity contract between
+/// the two cannot drift. Returns `(bps_updates, sink_updates)`.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn sweep_shard_range<M: VarMask, P: PrevLevel<M>>(
+    worker: &mut LevelWorker<M>,
+    prev: &P,
+    binom: &BinomTable,
+    p: usize,
+    k1: usize,
+    lo: u64,
+    hi: u64,
+    batch: usize,
+    writer: &mut ShardWriterSet<M>,
+    bufs: (&mut [f64], &mut [f64], &mut [f64], &mut [M]),
+    sinks: &mut SinkBuf<M>,
+    tick: &mut dyn FnMut(),
+) -> Result<(u64, u64)> {
+    let (q_buf, r_buf, bps_buf, bpm_buf) = bufs;
+    let len = (hi - lo) as usize;
+    let mut bps_updates = 0u64;
+    let mut sink_updates = 0u64;
+    let mut iter = LevelIter::<M>::resume(p, colex_unrank::<M>(binom, p, k1, lo));
+    let mut done = 0usize;
+    while done < len {
+        let take = batch.min(len - done);
+        let (_evals, bu, su) = worker.run_range(
+            prev,
+            lo as usize + done,
+            take,
+            &mut iter,
+            &mut q_buf[..take],
+            &mut r_buf[..take],
+            &mut bps_buf[..take * k1],
+            &mut bpm_buf[..take * k1],
+            sinks,
+        );
+        bps_updates += bu;
+        sink_updates += su;
+        writer.append(
+            &q_buf[..take],
+            &r_buf[..take],
+            &bps_buf[..take * k1],
+            &bpm_buf[..take * k1],
+            sinks,
+        )?;
+        tick();
+        done += take;
+    }
+    Ok((bps_updates, sink_updates))
 }
 
 /// Per-worker state for one level sweep over a contiguous rank range.

@@ -8,6 +8,10 @@
 //!   sharded frontier coordinator ([`crate::coordinator::shard`]):
 //!   per-level shard files, a worker pool, per-level manifest commits
 //!   and cross-run `--resume`. Bit-identical to [`LeveledSolver`].
+//! * [`solve_clustered`] — the multi-host variant of [`solve_sharded`]:
+//!   N independent processes over one shared directory, coordinated by
+//!   the claim ledger ([`crate::coordinator::cluster`]) with per-level
+//!   barrier commits and crash-reclaim. Still bit-identical.
 //! * [`SilanderSolver`] — the Silander–Myllymäki (2012) baseline (§3):
 //!   faithful multi-pass pipeline with all-in-RAM full arrays.
 //! * [`brute`] — exhaustive all-DAGs oracle for `p ≤ 5` (test harness).
@@ -22,5 +26,5 @@ mod leveled;
 mod silander;
 
 pub use common::{SolveOptions, SolveResult, SolveStats};
-pub use leveled::{solve_sharded, LeveledSolver, ShardOutcome};
+pub use leveled::{solve_clustered, solve_sharded, LeveledSolver, ShardOutcome};
 pub use silander::SilanderSolver;

@@ -3,7 +3,9 @@
 //! Experiment records, learned networks, and run metadata are emitted as
 //! JSON for downstream tooling. The sharded coordinator additionally
 //! *reads* its own `manifest.json` back on `--resume`
-//! ([`crate::coordinator::shard`]), so alongside the escaping-correct
+//! ([`crate::coordinator::shard`]), and the cluster claim ledger both
+//! writes and re-parses its claim/done/finish records
+//! ([`crate::coordinator::cluster`]), so alongside the escaping-correct
 //! builder there is a small recursive-descent parser ([`Json::parse`]) —
 //! both stand in for serde_json, which is unavailable offline.
 

@@ -1,0 +1,328 @@
+//! Cluster coordinator integration (ISSUE 3): two in-process "hosts"
+//! cooperating through one shared directory must reproduce the
+//! single-process result bit for bit — across every level boundary, with
+//! exactly-once work, after stale-claim reclaim of a "killed" host's
+//! shard, and through the CLI. (The true multi-*process* SIGKILL path is
+//! exercised end-to-end by `tools/cluster_smoke.sh` in the CI `cluster`
+//! job.)
+
+use bnsl::coordinator::cluster::ClusterOptions;
+use bnsl::coordinator::shard::ShardOptions;
+use bnsl::data::synth;
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::solver::{solve_clustered, solve_sharded, LeveledSolver, ShardOutcome, SolveResult};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bnsl_cluster_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Host options for the tests: a long heartbeat (sub-second shards never
+/// go stale under CI scheduling jitter) and a tight poll (barriers are
+/// instant).
+fn copts(dir: &Path, shards: usize, host_id: usize, stop: Option<usize>) -> ClusterOptions {
+    ClusterOptions {
+        shard: ShardOptions {
+            shards,
+            dir: dir.to_path_buf(),
+            stop_after_level: stop,
+            hosts: 2,
+            ..Default::default()
+        },
+        host_id,
+        heartbeat: Duration::from_secs(2),
+        poll: Duration::from_millis(2),
+    }
+}
+
+fn complete(outcome: ShardOutcome) -> SolveResult {
+    match outcome {
+        ShardOutcome::Complete(r) => r,
+        ShardOutcome::Checkpointed { level, .. } => {
+            panic!("expected a finished solve, got a checkpoint at level {level}")
+        }
+    }
+}
+
+/// Run `hosts` in-process cluster hosts to completion (threads standing
+/// in for machines — the coordination surface is the filesystem either
+/// way) and return their results in host order.
+fn run_hosts(
+    engine: &NativeEngine,
+    dir: &Path,
+    shards: usize,
+    hosts: usize,
+    stop: Option<usize>,
+) -> Vec<ShardOutcome> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..hosts)
+            .map(|host| {
+                let opts = copts(dir, shards, host, stop);
+                scope.spawn(move || solve_clustered::<u32>(engine, &opts).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Acceptance criterion: a two-host cluster solve over a shared
+/// directory is bit-identical to the single-process solver, and the
+/// claim ledger hands out every shard exactly once (work conservation:
+/// the hosts' score-eval counts sum to exactly `2^p`).
+#[test]
+fn two_hosts_are_bit_identical_to_single_process_with_exactly_once_work() {
+    let p = 11;
+    let d = synth::random(p, 90, 3, &mut bnsl::util::rng::Rng::new(77));
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let baseline = LeveledSolver::new(&e).solve();
+    let dir = tmpdir("two_hosts");
+    let outcomes = run_hosts(&e, &dir, 4, 2, None);
+    let results: Vec<SolveResult> = outcomes.into_iter().map(complete).collect();
+    for (host, r) in results.iter().enumerate() {
+        assert_eq!(
+            baseline.log_score.to_bits(),
+            r.log_score.to_bits(),
+            "host {host}: bit-identical optimum"
+        );
+        assert_eq!(baseline.network, r.network, "host {host}");
+        assert_eq!(baseline.order, r.order, "host {host}");
+    }
+    let total_evals: u64 = results.iter().map(|r| r.stats.score_evals).sum();
+    assert_eq!(
+        total_evals,
+        1u64 << p,
+        "every subset scored exactly once across the cluster"
+    );
+    let total_bps: u64 = results.iter().map(|r| r.stats.bps_updates).sum();
+    assert_eq!(total_bps, baseline.stats.bps_updates, "no shard re-run");
+    assert!(
+        results.iter().map(|r| r.stats.spilled_bytes).sum::<u64>() > 0,
+        "the frontier actually streamed through shard files"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The boundary acceptance criterion: drive two in-process hosts through
+/// **every** p = 12 level boundary — checkpoint the cluster at level K,
+/// then bring two hosts back up to finish — and require the final result
+/// to be bit-identical to the uninterrupted single-process run with no
+/// committed level recomputed (work conservation per phase).
+#[test]
+fn two_hosts_resume_at_every_level_boundary_bit_identical() {
+    let p = 12;
+    let d = synth::random(p, 80, 3, &mut bnsl::util::rng::Rng::new(2024));
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let baseline = LeveledSolver::new(&e).solve();
+    let binom = |k: usize| -> u64 {
+        let mut c = 1u64;
+        for i in 0..k {
+            c = c * (p as u64 - i as u64) / (i as u64 + 1);
+        }
+        c
+    };
+    for stop in 0..p {
+        let dir = tmpdir(&format!("boundary{stop}"));
+        // phase 1: both hosts stop at the boundary, durably committed
+        for outcome in run_hosts(&e, &dir, 4, 2, Some(stop)) {
+            match outcome {
+                ShardOutcome::Checkpointed { level, .. } => assert_eq!(level, stop),
+                ShardOutcome::Complete(_) => panic!("stop={stop}: expected a checkpoint"),
+            }
+        }
+        // phase 2: a fresh pair of hosts joins the same directory
+        let outcomes = run_hosts(&e, &dir, 4, 2, None);
+        let results: Vec<SolveResult> = outcomes.into_iter().map(complete).collect();
+        for r in &results {
+            assert_eq!(
+                baseline.log_score.to_bits(),
+                r.log_score.to_bits(),
+                "stop={stop}: bit-identical after cluster resume"
+            );
+            assert_eq!(baseline.network, r.network, "stop={stop}");
+            assert_eq!(baseline.order, r.order, "stop={stop}");
+            // ≥, not ==: a host that starts late may find levels beyond
+            // the checkpoint already committed by its partner
+            assert!(
+                r.stats.resumed_levels >= stop as u32 + 1,
+                "stop={stop}: committed levels reused, not recomputed (got {})",
+                r.stats.resumed_levels
+            );
+        }
+        let total: u64 = results.iter().map(|r| r.stats.score_evals).sum();
+        let expected: u64 = (stop + 1..=p).map(binom).sum();
+        assert_eq!(
+            total, expected,
+            "stop={stop}: the resumed cluster scored only the uncommitted levels"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A SIGKILLed host's leavings — a stale claim (dead heartbeat) and a
+/// garbage staged shard file — must be reclaimed and overwritten: the
+/// surviving host re-runs the orphaned shard and the result stays
+/// bit-identical, with the ledger cleaned behind the commits.
+#[test]
+fn stale_claim_of_dead_host_is_reclaimed_and_rerun() {
+    let p = 10;
+    let d = synth::random(p, 70, 3, &mut bnsl::util::rng::Rng::new(9));
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let baseline = LeveledSolver::new(&e).solve();
+    let dir = tmpdir("reclaim");
+    // a real cluster checkpoint at level 3…
+    match solve_clustered::<u32>(&e, &copts(&dir, 2, 0, Some(3))).unwrap() {
+        ShardOutcome::Checkpointed { level, .. } => assert_eq!(level, 3),
+        ShardOutcome::Complete(_) => panic!("expected a checkpoint"),
+    }
+    // …then forge what a SIGKILLed host 9 would leave mid-level-4: a
+    // claim whose heartbeat died an hour ago and a partial staged file
+    let claim = dir.join("claim-04-0001.json");
+    std::fs::write(
+        &claim,
+        "{\"format\": 1, \"level\": 4, \"shard\": 1, \"host\": 9, \
+         \"pid\": 1, \"heartbeat_secs\": 2}",
+    )
+    .unwrap();
+    let file = std::fs::File::options().write(true).open(&claim).unwrap();
+    file.set_modified(std::time::SystemTime::now() - Duration::from_secs(3600))
+        .unwrap();
+    drop(file);
+    let stray = dir.join("level_04_shard_0001.qr.host-0009-1");
+    std::fs::write(&stray, b"partial garbage from a dead writer").unwrap();
+    // the surviving host steals the stale claim, re-runs the shard, and
+    // finishes bit-identically
+    let r = complete(solve_clustered::<u32>(&e, &copts(&dir, 2, 0, None)).unwrap());
+    assert_eq!(baseline.log_score.to_bits(), r.log_score.to_bits());
+    assert_eq!(baseline.network, r.network);
+    let expected: u64 = (4..=p as u64)
+        .map(|k| {
+            let mut c = 1u64;
+            for i in 0..k {
+                c = c * (p as u64 - i) / (i + 1);
+            }
+            c
+        })
+        .sum();
+    assert_eq!(
+        r.stats.score_evals, expected,
+        "exactly the uncommitted levels were scored, orphaned shard included once"
+    );
+    // the steal remnant, forged claim and staged stray are all gone
+    // (cleaned when their level's successor committed)
+    assert!(!claim.exists(), "forged claim reclaimed");
+    assert!(!stray.exists(), "staged stray cleaned");
+    let leftovers: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("claim-") || n.contains(".stale-"))
+        .collect();
+    assert!(leftovers.is_empty(), "no claims survive the run: {leftovers:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The cluster writes ordinary sharded-run state: a single-host
+/// `--resume` (no cluster) finishes a cluster checkpoint, and vice
+/// versa a cluster host finishes a plain sharded checkpoint.
+#[test]
+fn cluster_and_plain_sharded_checkpoints_are_interchangeable() {
+    let d = synth::random(9, 60, 3, &mut bnsl::util::rng::Rng::new(5));
+    let e = NativeEngine::new(&d, ScoreKind::Bic);
+    let baseline = LeveledSolver::new(&e).solve();
+    // cluster checkpoint → plain sharded resume
+    let dir_a = tmpdir("interop_a");
+    match solve_clustered::<u32>(&e, &copts(&dir_a, 2, 0, Some(4))).unwrap() {
+        ShardOutcome::Checkpointed { level, .. } => assert_eq!(level, 4),
+        ShardOutcome::Complete(_) => panic!("expected a checkpoint"),
+    }
+    let resumed = match solve_sharded::<u32>(
+        &e,
+        &ShardOptions {
+            shards: 0, // from the (v2) manifest
+            dir: dir_a.clone(),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    {
+        ShardOutcome::Complete(r) => r,
+        ShardOutcome::Checkpointed { level, .. } => panic!("checkpoint at {level}"),
+    };
+    assert_eq!(baseline.log_score.to_bits(), resumed.log_score.to_bits());
+    // plain sharded checkpoint → cluster resume
+    let dir_b = tmpdir("interop_b");
+    let outcome = solve_sharded::<u32>(
+        &e,
+        &ShardOptions {
+            shards: 2,
+            dir: dir_b.clone(),
+            stop_after_level: Some(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(matches!(outcome, ShardOutcome::Checkpointed { level: 2, .. }));
+    let r = complete(solve_clustered::<u32>(&e, &copts(&dir_b, 2, 0, None)).unwrap());
+    assert_eq!(baseline.log_score.to_bits(), r.log_score.to_bits());
+    assert_eq!(baseline.network, r.network);
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+/// CLI wiring: `learn --cluster` drives the cluster coordinator end to
+/// end (single host standing in for the pool) and emits the usual
+/// result record.
+#[test]
+fn cli_cluster_roundtrip() {
+    let base = tmpdir("cli");
+    std::fs::create_dir_all(&base).unwrap();
+    let shard_dir = base.join("run");
+    let out = base.join("net.json");
+    bnsl::cli::run(vec![
+        "learn".into(),
+        "--network".into(),
+        "asia".into(),
+        "--n".into(),
+        "120".into(),
+        "--cluster".into(),
+        "--host-id".into(),
+        "0".into(),
+        "--hosts".into(),
+        "1".into(),
+        "--heartbeat-secs".into(),
+        "2".into(),
+        "--shards".into(),
+        "2".into(),
+        "--shard-dir".into(),
+        shard_dir.to_string_lossy().into_owned(),
+        "--out".into(),
+        out.to_string_lossy().into_owned(),
+    ])
+    .unwrap();
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(text.contains("\"log_score\""));
+    let manifest = std::fs::read_to_string(shard_dir.join("manifest.json")).unwrap();
+    assert!(manifest.contains("\"format\": 2"), "{manifest}");
+    assert!(manifest.contains("\"hosts\": 1"), "{manifest}");
+    // a conflicting --heartbeat-secs is rejected up front
+    let err = bnsl::cli::run(vec![
+        "learn".into(),
+        "--network".into(),
+        "asia".into(),
+        "--n".into(),
+        "40".into(),
+        "--cluster".into(),
+        "--heartbeat-secs".into(),
+        "0".into(),
+        "--shard-dir".into(),
+        base.join("bad").to_string_lossy().into_owned(),
+    ])
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("heartbeat"), "{err}");
+    let _ = std::fs::remove_dir_all(&base);
+}

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Quick-mode perf smoke (CI `bench-smoke` job; runnable locally): run the
+# `levels` and `spill` benches at CI-sized configurations and assemble
+# BENCH_ci.json — wall time + memtrack heap peak per configuration — so
+# the repo's perf trajectory finally accumulates data points as an
+# uploaded artifact per commit.
+#
+# Usage: tools/bench_smoke.sh [out.json]   (default BENCH_ci.json)
+set -euo pipefail
+
+OUT="${1:-BENCH_ci.json}"
+
+# levels: full analytic plan at p = 20 + a quick timed u32-vs-u64 race
+export BNSL_P=20 BNSL_SOLVE_P=14 BNSL_N=64
+export BNSL_BENCH_JSON="bench_levels.json"
+# spill: two small configurations through the §5.3 disk path
+export BNSL_PMIN=14 BNSL_PMAX=15 BNSL_THRESHOLD=0.5
+
+cargo bench --bench levels
+cargo bench --bench spill
+
+python3 - "$OUT" <<'EOF'
+import json, sys, pathlib
+
+doc = {
+    "schema": "bnsl-bench-smoke/1",
+    "levels": json.load(open("bench_levels.json")),
+    "spill": json.load(open("results/spill.json")),
+}
+pathlib.Path(sys.argv[1]).write_text(json.dumps(doc, indent=2) + "\n")
+print(f"wrote {sys.argv[1]}")
+EOF

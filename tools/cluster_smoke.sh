@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# Two-process cluster smoke test (CI `cluster` job; runnable locally):
+#
+#   1. single-process sharded reference run on a p = 14 synthetic dataset
+#   2. two `bnsl --cluster` processes against ONE shared shard-dir
+#   3. one of them is SIGKILLed mid-run, then restarted — the survivor
+#      reclaims the dead host's stale claims, the restart rejoins at the
+#      last committed level
+#   4. all three emitted scores must be BIT-identical (compared as the
+#      f64's little-endian bytes, not as decimal text)
+#
+# Usage: tools/cluster_smoke.sh [path/to/bnsl]   (default target/release/bnsl)
+set -euo pipefail
+
+BNSL="${1:-target/release/bnsl}"
+WORK="$(mktemp -d)"
+trap 'rm -rf "$WORK"' EXIT
+
+# p = 14 synthetic dataset: the first 14 ALARM variables, deterministic
+# sample — big enough (n = 2000) that the solve takes a few seconds and
+# the SIGKILL lands mid-level.
+DATA=(--network alarm --p 14 --n 2000 --seed 7)
+CLUSTER=(--cluster --hosts 2 --shards 4 --heartbeat-secs 1
+         --shard-dir "$WORK/run")
+
+echo "== reference: single-process sharded run =="
+"$BNSL" learn "${DATA[@]}" --shards 4 --shard-dir "$WORK/ref" \
+    --out "$WORK/ref.json"
+
+echo "== cluster: two hosts, host 1 SIGKILLed mid-run =="
+"$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 0 \
+    --out "$WORK/host0.json" &
+H0=$!
+"$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 1 \
+    --out "$WORK/host1.json" &
+H1=$!
+
+# let host 1 claim real work, then kill it without ceremony
+sleep 1
+kill -9 "$H1" 2>/dev/null || echo "host 1 already finished before the kill"
+wait "$H1" 2>/dev/null || true
+
+echo "== restart the killed host; survivor + restart must both finish =="
+"$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 1 \
+    --out "$WORK/host1.json"
+wait "$H0"
+
+score_bits() {
+    python3 - "$1" <<'EOF'
+import json, struct, sys
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+print(struct.pack("<d", doc["log_score"]).hex())
+EOF
+}
+
+REF="$(score_bits "$WORK/ref.json")"
+A="$(score_bits "$WORK/host0.json")"
+B="$(score_bits "$WORK/host1.json")"
+echo "ref    = $REF"
+echo "host 0 = $A"
+echo "host 1 = $B"
+if [ "$REF" != "$A" ] || [ "$REF" != "$B" ]; then
+    echo "FAIL: cluster scores diverge from the single-process reference" >&2
+    exit 1
+fi
+echo "OK: survivor, restarted host and single-process reference are bit-identical"
