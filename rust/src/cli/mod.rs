@@ -16,6 +16,7 @@ pub use args::{validate_var_count, Args, MaskWidth};
 use crate::bn::repo;
 use crate::coordinator::cluster::ClusterOptions;
 use crate::coordinator::shard::ShardOptions;
+use crate::coordinator::storage::BackendKind;
 use crate::data::{read_csv, write_csv, Dataset};
 use crate::engine::{JaxEngine, NativeEngine};
 use crate::score::ScoreKind;
@@ -38,6 +39,7 @@ USAGE:
               [--solver leveled|silander|hillclimb|hybrid] [--score jeffreys|bdeu[:e]|bic|aic]
               [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
               [--shards N [--shard-dir DIR] [--stop-after-level K]] [--resume DIR]
+              [--backend posix|object]
               [--cluster --host-id I [--hosts N] [--heartbeat-secs S]]
               exact solvers: p <= 30 on u32 masks, p <= 34 on the wide u64
               path (auto-dispatched; pair with --spill-dir near the top),
@@ -48,6 +50,11 @@ USAGE:
               sharing --shard-dir) into one sharded solve: shards are
               claimed via lock files, a SIGKILLed host's work is re-run
               after its heartbeat goes stale, results stay bit-identical;
+              --backend picks the coordination storage: posix (default;
+              local disk / NFSv4) or object (S3-semantics store —
+              conditional-PUT claims, heartbeat metadata keys; fault
+              injection via BNSL_OBJECT_FAULTS); all hosts of one run
+              must agree, results stay bit-identical across backends;
               hillclimb/hybrid: p <= 64
   bnsl sample --network asia|alarm|sachs --n N [--seed S] --out data.csv
   bnsl exp table2     [--pmin 14] [--pmax 18] [--runs 3]  [--n 200] [--threads T]
@@ -130,6 +137,21 @@ fn cmd_learn(args: Args) -> Result<()> {
             }
         }
     }
+    // --backend configures the sharded/cluster coordinator's storage;
+    // silently ignoring it on a resident solve would let users believe
+    // they exercised the object path.
+    let backend = match args.raw("backend") {
+        None => BackendKind::Posix,
+        Some(name) => BackendKind::parse(name).ok_or_else(|| {
+            anyhow!("--backend expects 'posix' or 'object' (got '{name}')")
+        })?,
+    };
+    if args.raw("backend").is_some() && !sharded {
+        bail!(
+            "--backend configures the sharded coordinator's storage; pair \
+             it with --shards/--resume/--cluster"
+        );
+    }
     let width = validate_var_count(data.p(), exact, sharded)?;
     let options = SolveOptions {
         threads: args.get::<usize>("threads", 1)?,
@@ -173,6 +195,7 @@ fn cmd_learn(args: Args) -> Result<()> {
             stop_after_level: usize::try_from(stop).ok(),
             keep_levels: false,
             hosts: args.get::<usize>("hosts", 1)?,
+            backend,
         };
         let engine = NativeEngine::new(&data, kind);
         let (outcome, heap) = crate::memtrack::measure(|| -> Result<_> {
@@ -500,10 +523,12 @@ fn cmd_info(args: Args) -> Result<()> {
         let plan = crate::coordinator::plan::sharded_plan(p, shards, 0, 1024);
         println!(
             "p={p:2} --shards {shards:2}: resident {}, disk {}, per-host fd budget {} \
-             (check `ulimit -n`)",
+             (check `ulimit -n`), ~{}k object requests \
+             (--backend object)",
             crate::util::human_bytes(plan.peak_resident_bytes),
             crate::util::human_bytes(plan.disk_bytes),
-            plan.fd_budget
+            plan.fd_budget,
+            plan.object_requests / 1000
         );
     }
     Ok(())

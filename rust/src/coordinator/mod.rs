@@ -15,11 +15,18 @@
 //!   claim ledger (create-exclusive lock files, heartbeats, stale-claim
 //!   reclaim) with a lowest-host-id committer election at every level
 //!   barrier. Protocol in `docs/ARCHITECTURE.md`.
+//! * [`storage`] — the pluggable durable-storage layer under [`shard`]
+//!   and [`cluster`]: one [`storage::StorageBackend`] trait whose
+//!   operations are the protocol steps, with a POSIX implementation
+//!   (today's behavior, byte for byte) and an S3-semantics object-store
+//!   implementation with injectable faults. Semantics table in
+//!   `docs/ARCHITECTURE.md` §6.
 //! * [`plan`] — the analytic level/memory planner behind Fig. 7 and the
-//!   `bnsl exp levels` harness, including the sharded-run pricing and
-//!   per-host handle budgets.
+//!   `bnsl exp levels` harness, including the sharded-run pricing,
+//!   per-host handle budgets (POSIX) and request estimates (object).
 
 pub mod cluster;
 pub mod plan;
 pub mod shard;
 pub mod spill;
+pub mod storage;

@@ -3,7 +3,8 @@
 //! sharded runs ([`ShardedPlan`]) whose frontier lives entirely on disk.
 
 use crate::bitset::BinomTable;
-use crate::coordinator::shard::{fd_budget, reader_cache_bytes, QR_RECORD};
+use crate::coordinator::shard::{fd_budget, reader_cache_bytes, QR_RECORD, WINDOW};
+use crate::coordinator::storage::object::PART_BYTES;
 use crate::util::json::Json;
 
 /// Per-level accounting of the proposed method's frontier.
@@ -115,8 +116,23 @@ pub struct ShardedPlan {
     /// is priced as one worker per shard (actual runs additionally cap
     /// workers at the machine's core count, which the machine-agnostic
     /// planner cannot know), and single-host `solve_sharded` runs skip
-    /// the ledger headroom.
+    /// the ledger headroom. The solvers preflight this on *both*
+    /// backends (the local object simulator still holds one real
+    /// descriptor per open stream/reader); the object backend's own
+    /// bill is additionally priced in requests
+    /// ([`ShardedPlan::object_requests`]).
     pub fd_budget: u64,
+    /// Estimated object-store request count of a full run on the
+    /// `--backend object` path, where the bill is per request, not per
+    /// file descriptor: staged uploads (one part PUT per
+    /// [`PART_BYTES`] plus completion, copy and delete per stream),
+    /// claim/done/finish control-document traffic, per-level manifest
+    /// round-trips, and a **lower bound** of one ranged GET per window
+    /// of the previous level's `.qr`/`.bps` streams (each worker reads
+    /// its own range once when the cache is cold; re-fetches under
+    /// cache pressure and heartbeat PUTs — which scale with wall time,
+    /// not work — are excluded).
+    pub object_requests: u64,
 }
 
 /// Price a sharded run. `workers == 0` means one worker per shard;
@@ -171,6 +187,43 @@ pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> Sh
         sink_cum += binom.c(p, k1) * sink_record;
         disk_bytes = disk_bytes.max(frontier_files(k1 - 1) + frontier_files(k1) + sink_cum);
     }
+    // object-backend request estimate (see the field docs): writes and
+    // control traffic are exact by construction, window GETs are the
+    // cold-cache lower bound
+    let mut object_requests = 0u64;
+    for k in 0..=p {
+        let size = binom.c(p, k);
+        let width = size.div_ceil(shards as u64).max(1);
+        for s in 0..shards as u64 {
+            let entries = width.min(size.saturating_sub(s * width));
+            if entries == 0 {
+                continue;
+            }
+            // three streams per shard: parts + completion + staged
+            // copy + staged delete each
+            let stream_bytes = [
+                entries * QR_RECORD as u64,
+                if k == 0 { 0 } else { entries * k as u64 * bps_record },
+                entries * sink_record,
+            ];
+            for bytes in stream_bytes {
+                object_requests += bytes.div_ceil(PART_BYTES).max(1) + 3;
+            }
+            // claim PUT + done-marker PUT + claim DELETE
+            object_requests += 3;
+        }
+        // cold-cache ranged GETs while level k+1 reads level k
+        if k < p {
+            object_requests += size.div_ceil(WINDOW as u64);
+            if k > 0 {
+                object_requests += (size * k as u64).div_ceil(WINDOW as u64);
+            }
+        }
+        // barrier: finish-marker PUT + manifest GET/PUT round-trip
+        object_requests += 4;
+    }
+    // reconstruction: one sink GET per level
+    object_requests += p as u64;
     ShardedPlan {
         p,
         shards,
@@ -181,6 +234,7 @@ pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> Sh
         peak_level,
         disk_bytes,
         fd_budget: fd_budget(workers, shards, true),
+        object_requests,
     }
 }
 
@@ -196,6 +250,7 @@ impl ShardedPlan {
             .set("peak_level", self.peak_level)
             .set("disk_bytes", self.disk_bytes)
             .set("fd_budget", self.fd_budget)
+            .set("object_requests", self.object_requests)
     }
 }
 
@@ -391,6 +446,34 @@ mod tests {
         // budget grows with both knobs the error message names
         assert!(sharded_plan(20, 16, 3, 1024).fd_budget > plan.fd_budget);
         assert!(sharded_plan(20, 8, 8, 1024).fd_budget > plan.fd_budget);
+    }
+
+    /// Satellite (ISSUE 4): the object backend is priced in requests.
+    /// The estimate is dominated by control traffic and window GETs at
+    /// small p, must grow with both p and the shard count, and lands in
+    /// the JSON record `bnsl info` prints.
+    #[test]
+    fn sharded_plan_prices_object_requests() {
+        let small = sharded_plan(12, 4, 0, 1024);
+        // every non-empty shard costs at least its three stream uploads
+        // (4 requests each) plus 3 control documents
+        assert!(
+            small.object_requests > 12 * 4 * 3,
+            "{}",
+            small.object_requests
+        );
+        // more levels → more requests
+        assert!(sharded_plan(20, 4, 0, 1024).object_requests > small.object_requests);
+        // more shards → more per-shard uploads and control documents
+        assert!(
+            sharded_plan(12, 16, 0, 1024).object_requests > small.object_requests,
+            "request bill grows with the shard count"
+        );
+        // the estimate stays finite and JSON-serialisable at the cap
+        let cap = sharded_plan(crate::MAX_VARS_SHARDED, 64, 0, 1024);
+        assert!(cap.object_requests > 0);
+        let j = cap.to_json().to_string();
+        assert!(j.contains("object_requests"), "{j}");
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //! `--resume <dir>` revalidates the manifest and every surviving shard
 //! header, then continues the sweep without recomputing finished levels.
 //!
+//! Every durable operation — manifest commit, shard-stream writes,
+//! windowed reads — goes through the pluggable
+//! [`crate::coordinator::storage::StorageBackend`]
+//! ([`ShardOptions::backend`]): the POSIX backend reproduces the
+//! pre-trait file behavior byte for byte, and the object backend speaks
+//! S3 semantics against the same key layout.
+//!
 //! All files share the 16-byte v1 header of [`crate::coordinator::spill`]
 //! (magic, version, mask width, level, record kind). The byte-level
 //! specification — header layout, the three record kinds, the manifest
@@ -35,6 +42,10 @@
 use super::spill::{
     decode_header, encode_header, record_bytes, HEADER, KIND_BPS, KIND_QR, KIND_SINK,
 };
+use super::storage::{
+    make_backend, BackendKind, CreateOutcome, PosixBackend, RandomRead, ShardStream,
+    SharedBackend,
+};
 use crate::bitset::{colex_rank, BinomTable, VarMask};
 use crate::bn::Dag;
 use crate::data::Dataset;
@@ -42,10 +53,10 @@ use crate::score::ScoreKind;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::cell::{Cell, RefCell};
-use std::fs::File;
-use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::marker::PhantomData;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 // Cache geometry is shared with the §5.3 spill reader so the two
 // direct-mapped window caches cannot drift apart.
@@ -61,6 +72,23 @@ const MANIFEST_FORMAT_MIN: u64 = 1;
 
 /// Bytes of one `.qr` record: little-endian `f64` `log Q` + `f64` `log R`.
 pub(crate) const QR_RECORD: usize = 16;
+
+/// Bounded patience for manifest reads on the resume/join *entry* path
+/// of backends whose reads may lag writes
+/// ([`crate::coordinator::storage::StorageBackend::reads_may_lag`]):
+/// one unlucky GET inside a read-after-write window must not turn a
+/// valid `--resume` into a fatal "nothing to resume". (Poll loops
+/// elsewhere — the cluster barrier, `committed_level_patient` — carry
+/// their own grace windows.)
+const ENTRY_GRACE: Duration = Duration::from_secs(10);
+const ENTRY_POLL: Duration = Duration::from_millis(50);
+
+/// Marker embedded in [`ShardRun::open_on`]'s missing-manifest error.
+/// `validate_resume` keys its transient-retry decision on it: a lagged
+/// GET can only make the manifest look *absent* — every other failure
+/// (backend-binding mismatch, corrupt JSON, unsupported format) is
+/// deterministic and must surface immediately, not after a grace spin.
+const NO_MANIFEST: &str = "no manifest found";
 
 /// Bytes of one `.sink` record at width `M`: sink-variable byte + mask.
 #[inline]
@@ -143,6 +171,11 @@ pub struct ShardOptions {
     /// 1 for single-host runs). The claim ledger is elastic — hosts may
     /// join or vanish — so this is *not* validated on resume.
     pub hosts: usize,
+    /// Storage backend the run coordinates through (CLI `--backend`):
+    /// POSIX filesystem semantics (the default) or an S3-style object
+    /// store ([`crate::coordinator::storage`]). All hosts of one run
+    /// must pick the same backend.
+    pub backend: BackendKind,
 }
 
 impl Default for ShardOptions {
@@ -155,6 +188,7 @@ impl Default for ShardOptions {
             stop_after_level: None,
             keep_levels: false,
             hosts: 1,
+            backend: BackendKind::Posix,
         }
     }
 }
@@ -233,6 +267,7 @@ pub fn run_fingerprint(data: &Dataset, kind: ScoreKind) -> String {
 /// overwritten) by the next attempt.
 #[derive(Clone, Debug)]
 pub struct ShardRun {
+    store: SharedBackend,
     dir: PathBuf,
     pub p: usize,
     pub n: usize,
@@ -243,16 +278,25 @@ pub struct ShardRun {
     /// Declared cluster size when the run was created (informational;
     /// 1 for single-host runs and for v1 manifests).
     pub hosts: usize,
+    /// Storage backend the run is coordinated through, as recorded in
+    /// the manifest (pre-PR-4 manifests default to POSIX). A run
+    /// directory is **bound** to its backend: liveness semantics differ
+    /// (mtime vs. heartbeat metadata), so a host joining through the
+    /// other backend would mis-judge live claims as stale and
+    /// continually steal them — [`ShardRun::open_on`] rejects the
+    /// mismatch up front instead, for every resume, join and raw open.
+    pub backend: BackendKind,
     /// Highest committed level (`None` before level 0 commits).
     pub completed: Option<usize>,
 }
 
 impl ShardRun {
     /// Start a fresh run, or resume the one already rooted at
-    /// `options.dir`. A fresh run requires `options.shards >= 1`; a
-    /// resume (`options.shards == 0` or a matching explicit count)
-    /// revalidates `p`, mask width, score and dataset fingerprint
-    /// against the manifest and rejects mismatches by name.
+    /// `options.dir`, on the backend `options.backend` selects. A fresh
+    /// run requires `options.shards >= 1`; a resume
+    /// (`options.shards == 0` or a matching explicit count) revalidates
+    /// `p`, mask width, score and dataset fingerprint against the
+    /// manifest and rejects mismatches by name.
     pub fn open_or_create(
         options: &ShardOptions,
         p: usize,
@@ -261,46 +305,48 @@ impl ShardRun {
         score: &str,
         fingerprint: &str,
     ) -> Result<ShardRun> {
-        let manifest = options.dir.join("manifest.json");
-        if manifest.exists() {
-            let run = ShardRun::open(&options.dir)?;
-            let reject = |field: &str, manifest_has: &str, caller_has: &str| -> anyhow::Error {
-                anyhow::anyhow!(
-                    "{}: cannot resume — manifest records {field} = {manifest_has} \
-                     but this invocation has {field} = {caller_has}; use a fresh \
-                     --shard-dir for a different run",
-                    manifest.display()
-                )
-            };
-            if run.p != p {
-                return Err(reject("p", &run.p.to_string(), &p.to_string()));
-            }
-            if run.mask_bytes != mask_bytes {
-                return Err(reject(
-                    "mask_bytes",
-                    &run.mask_bytes.to_string(),
-                    &mask_bytes.to_string(),
-                ));
-            }
-            if run.score != score {
-                return Err(reject("score", &run.score, score));
-            }
-            if run.fingerprint != fingerprint {
-                return Err(reject("data fingerprint", &run.fingerprint, fingerprint));
-            }
-            if options.shards != 0 && options.shards != run.shards {
-                return Err(reject(
-                    "shards",
-                    &run.shards.to_string(),
-                    &options.shards.to_string(),
-                ));
-            }
-            return Ok(run);
+        let store = make_backend(options.backend, &options.dir)?;
+        ShardRun::open_or_create_on(store, options, p, n, mask_bytes, score, fingerprint)
+    }
+
+    /// [`ShardRun::open_or_create`] on an already-constructed backend
+    /// (the cluster init path builds the backend first for its lock).
+    pub fn open_or_create_on(
+        store: SharedBackend,
+        options: &ShardOptions,
+        p: usize,
+        n: usize,
+        mask_bytes: usize,
+        score: &str,
+        fingerprint: &str,
+    ) -> Result<ShardRun> {
+        if store.exists("manifest.json")? {
+            return ShardRun::validate_resume(store, options, p, mask_bytes, score, fingerprint);
         }
         if options.shards == 0 {
+            // explicit resume intent: the caller asserts a run exists
+            // here, so on a lagging backend one false existence probe
+            // must not produce the misleading "nothing to resume" —
+            // re-probe within the entry grace window first
+            if store.reads_may_lag() {
+                let start = Instant::now();
+                while start.elapsed() <= ENTRY_GRACE {
+                    if store.exists("manifest.json")? {
+                        return ShardRun::validate_resume(
+                            store,
+                            options,
+                            p,
+                            mask_bytes,
+                            score,
+                            fingerprint,
+                        );
+                    }
+                    std::thread::sleep(ENTRY_POLL);
+                }
+            }
             bail!(
                 "{}: nothing to resume (no manifest.json); start a run with --shards N",
-                options.dir.display()
+                store.root()
             );
         }
         if !options.shards.is_power_of_two() {
@@ -312,10 +358,10 @@ impl ShardRun {
                 options.shards.next_power_of_two()
             );
         }
-        std::fs::create_dir_all(&options.dir)
-            .with_context(|| format!("creating shard dir {}", options.dir.display()))?;
+        store.ensure_root()?;
         let run = ShardRun {
             dir: options.dir.clone(),
+            store,
             p,
             n,
             shards: options.shards,
@@ -323,9 +369,107 @@ impl ShardRun {
             score: score.to_string(),
             fingerprint: fingerprint.to_string(),
             hosts: options.hosts.max(1),
+            backend: options.backend,
             completed: None,
         };
-        run.write_manifest()?;
+        // conditional create, not an unconditional publish: the
+        // existence probe above may have *lagged* (an object store's
+        // read-after-write window, injectable via stale_reads) or lost
+        // a same-directory race — and a manifest that turns out to
+        // exist is a run whose committed progress must never be
+        // overwritten with a fresh `levels_complete = -1`. On
+        // AlreadyExists we take the ordinary validate-and-resume path
+        // against the manifest that was there all along.
+        let body = run.manifest_doc().to_pretty();
+        match run
+            .store
+            .publish_doc_if_absent("manifest.json", body.as_bytes())?
+        {
+            CreateOutcome::Created => Ok(run),
+            CreateOutcome::AlreadyExists => ShardRun::validate_resume(
+                run.store,
+                options,
+                p,
+                mask_bytes,
+                score,
+                fingerprint,
+            ),
+        }
+    }
+
+    /// The resume half of [`ShardRun::open_or_create_on`]: open the
+    /// existing manifest and reject identity mismatches by name (`n` is
+    /// informational in the manifest and not part of the identity).
+    /// Callers reach this knowing a manifest is (or was just observed)
+    /// there, so on a lagging backend an unreadable manifest is retried
+    /// within the entry grace window before the error is fatal.
+    fn validate_resume(
+        store: SharedBackend,
+        options: &ShardOptions,
+        p: usize,
+        mask_bytes: usize,
+        score: &str,
+        fingerprint: &str,
+    ) -> Result<ShardRun> {
+        // retry only the missing-manifest case: that is the one failure
+        // a lagged GET can fabricate; deterministic errors (binding
+        // mismatch, corrupt JSON, bad format) surface immediately
+        let transient =
+            |e: &anyhow::Error| -> bool { e.to_string().contains(NO_MANIFEST) };
+        let run = match ShardRun::open_on(store.clone()) {
+            Ok(run) => run,
+            Err(first) => {
+                if !store.reads_may_lag() || !transient(&first) {
+                    return Err(first);
+                }
+                let start = Instant::now();
+                loop {
+                    std::thread::sleep(ENTRY_POLL);
+                    match ShardRun::open_on(store.clone()) {
+                        Ok(run) => break run,
+                        Err(e) if !transient(&e) || start.elapsed() > ENTRY_GRACE => {
+                            return Err(e)
+                        }
+                        Err(_) => {}
+                    }
+                }
+            }
+        };
+        let manifest = run.manifest_name();
+        let reject = |field: &str, manifest_has: &str, caller_has: &str| -> anyhow::Error {
+            anyhow::anyhow!(
+                "{manifest}: cannot resume — manifest records {field} = {manifest_has} \
+                 but this invocation has {field} = {caller_has}; use a fresh \
+                 --shard-dir for a different run"
+            )
+        };
+        if run.p != p {
+            return Err(reject("p", &run.p.to_string(), &p.to_string()));
+        }
+        if run.mask_bytes != mask_bytes {
+            return Err(reject(
+                "mask_bytes",
+                &run.mask_bytes.to_string(),
+                &mask_bytes.to_string(),
+            ));
+        }
+        if run.score != score {
+            return Err(reject("score", &run.score, score));
+        }
+        if run.fingerprint != fingerprint {
+            return Err(reject("data fingerprint", &run.fingerprint, fingerprint));
+        }
+        if options.shards != 0 && options.shards != run.shards {
+            return Err(reject(
+                "shards",
+                &run.shards.to_string(),
+                &options.shards.to_string(),
+            ));
+        }
+        // (backend mismatches never get this far: open_on rejects a
+        // store whose kind differs from the manifest's recorded
+        // binding, covering resumes, cluster joins and raw opens
+        // through the one choke point)
         Ok(run)
     }
 
@@ -335,72 +479,120 @@ impl ShardRun {
         &self.dir
     }
 
-    /// Load an existing run's manifest (resume entry point).
+    /// The storage backend every durable operation of this run goes
+    /// through.
+    pub fn store(&self) -> &SharedBackend {
+        &self.store
+    }
+
+    /// `root/manifest.json`, for error messages.
+    fn manifest_name(&self) -> String {
+        format!("{}/manifest.json", self.store.root())
+    }
+
+    /// Load an existing run's manifest through a POSIX handle (resume
+    /// entry point for POSIX-bound runs; backend-explicit callers use
+    /// [`ShardRun::open_on`]). A run bound to another backend is
+    /// rejected with the `--backend` flag to use.
     pub fn open(dir: &Path) -> Result<ShardRun> {
-        let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
+        ShardRun::open_on(Arc::new(PosixBackend::new(dir)))
+    }
+
+    /// Load an existing run's manifest through `store`.
+    pub fn open_on(store: SharedBackend) -> Result<ShardRun> {
+        let name = format!("{}/manifest.json", store.root());
+        let Some(bytes) = store.read_doc("manifest.json")? else {
+            bail!("{name}: {NO_MANIFEST} (nothing to resume)");
+        };
+        let text = String::from_utf8(bytes)
+            .map_err(|_| anyhow::anyhow!("{name}: manifest is not UTF-8"))?;
         let doc = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("{}: invalid JSON: {e}", path.display()))?;
-        fn field<'a>(doc: &'a Json, path: &Path, key: &str) -> Result<&'a Json> {
+            .map_err(|e| anyhow::anyhow!("{name}: invalid JSON: {e}"))?;
+        fn field<'a>(doc: &'a Json, name: &str, key: &str) -> Result<&'a Json> {
             doc.get(key)
-                .ok_or_else(|| anyhow::anyhow!("{}: missing field '{key}'", path.display()))
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing field '{key}'"))
         }
-        fn as_usize(doc: &Json, path: &Path, key: &str) -> Result<usize> {
-            field(doc, path, key)?
+        fn as_usize(doc: &Json, name: &str, key: &str) -> Result<usize> {
+            field(doc, name, key)?
                 .as_u64()
                 .map(|v| v as usize)
-                .ok_or_else(|| anyhow::anyhow!("{}: field '{key}' not a count", path.display()))
+                .ok_or_else(|| anyhow::anyhow!("{name}: field '{key}' not a count"))
         }
-        fn as_string(doc: &Json, path: &Path, key: &str) -> Result<String> {
-            field(doc, path, key)?
+        fn as_string(doc: &Json, name: &str, key: &str) -> Result<String> {
+            field(doc, name, key)?
                 .as_str()
                 .map(str::to_string)
-                .ok_or_else(|| anyhow::anyhow!("{}: field '{key}' not a string", path.display()))
+                .ok_or_else(|| anyhow::anyhow!("{name}: field '{key}' not a string"))
         }
-        let format = field(&doc, &path, "format")?.as_u64().unwrap_or(0);
+        let format = field(&doc, &name, "format")?.as_u64().unwrap_or(0);
         if !(MANIFEST_FORMAT_MIN..=MANIFEST_FORMAT).contains(&format) {
             bail!(
-                "{}: manifest format {format} unsupported (reader speaks \
-                 {MANIFEST_FORMAT_MIN}..={MANIFEST_FORMAT})",
-                path.display()
+                "{name}: manifest format {format} unsupported (reader speaks \
+                 {MANIFEST_FORMAT_MIN}..={MANIFEST_FORMAT})"
             );
         }
-        let completed = match field(&doc, &path, "levels_complete")?.as_i64() {
+        let completed = match field(&doc, &name, "levels_complete")?.as_i64() {
             Some(v) if v >= 0 => Some(v as usize),
             Some(_) => None,
-            None => bail!("{}: field 'levels_complete' not an integer", path.display()),
+            None => bail!("{name}: field 'levels_complete' not an integer"),
         };
         let run = ShardRun {
-            dir: dir.to_path_buf(),
-            p: as_usize(&doc, &path, "p")?,
-            n: as_usize(&doc, &path, "n")?,
-            shards: as_usize(&doc, &path, "shards")?,
-            mask_bytes: as_usize(&doc, &path, "mask_bytes")?,
-            score: as_string(&doc, &path, "score")?,
-            fingerprint: as_string(&doc, &path, "fingerprint")?,
+            dir: PathBuf::from(store.root()),
+            p: as_usize(&doc, &name, "p")?,
+            n: as_usize(&doc, &name, "n")?,
+            shards: as_usize(&doc, &name, "shards")?,
+            mask_bytes: as_usize(&doc, &name, "mask_bytes")?,
+            score: as_string(&doc, &name, "score")?,
+            fingerprint: as_string(&doc, &name, "fingerprint")?,
             // v2 field; v1 manifests were single-host by construction
             hosts: doc
                 .get("hosts")
                 .and_then(Json::as_u64)
                 .map_or(1, |h| (h as usize).max(1)),
+            // optional field (PR 4); runs recorded before it existed
+            // were POSIX by construction
+            backend: match doc.get("backend").and_then(Json::as_str) {
+                None => BackendKind::Posix,
+                Some(recorded) => BackendKind::parse(recorded).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "{name}: manifest records unknown storage backend \
+                         '{recorded}' (this reader speaks posix|object)"
+                    )
+                })?,
+            },
             completed,
+            store,
         };
         if !run.shards.is_power_of_two() || run.shards == 0 {
             bail!(
-                "{}: manifest shard count {} is not a power of two",
-                path.display(),
+                "{name}: manifest shard count {} is not a power of two",
                 run.shards
             );
         }
         if let Some(k) = run.completed {
             if k > run.p {
                 bail!(
-                    "{}: manifest claims level {k} complete but p = {}",
-                    path.display(),
+                    "{name}: manifest claims level {k} complete but p = {}",
                     run.p
                 );
             }
+        }
+        // a run directory is bound to one backend: the two judge claim
+        // liveness by different stamps (mtime vs. heartbeat metadata),
+        // so coordinating an object-bound run through a POSIX handle
+        // (or vice versa) would spuriously steal live claims forever.
+        // Rejecting here — the one choke point every resume, cluster
+        // join and raw open goes through — makes the mix unrepresentable.
+        if run.backend != run.store.kind() {
+            bail!(
+                "{name}: this run is bound to the '{}' storage backend \
+                 but was opened through '{}'; pass --backend {} (a run \
+                 directory is bound to one backend — all hosts and \
+                 resumes must agree)",
+                run.backend.name(),
+                run.store.kind().name(),
+                run.backend.name()
+            );
         }
         Ok(run)
     }
@@ -413,8 +605,10 @@ impl ShardRun {
         self.write_manifest()
     }
 
-    fn write_manifest(&self) -> Result<()> {
-        let doc = Json::obj()
+    /// The manifest document for this handle's current state (shared by
+    /// the unconditional commit rewrite and the conditional creation).
+    fn manifest_doc(&self) -> Json {
+        Json::obj()
             .set("format", MANIFEST_FORMAT)
             .set("p", self.p)
             .set("n", self.n)
@@ -423,40 +617,22 @@ impl ShardRun {
             .set("score", self.score.as_str())
             .set("fingerprint", self.fingerprint.as_str())
             .set("hosts", self.hosts)
+            .set("backend", self.backend.name())
             .set(
                 "levels_complete",
                 self.completed.map(|k| k as i64).unwrap_or(-1),
-            );
-        let path = self.dir.join("manifest.json");
-        // the tmp name is unique per writer AND per write: in cluster
-        // mode two hosts may rewrite the manifest concurrently (a benign
-        // commit race — the contents are identical), and a shared tmp
-        // name would let one writer rename the other's half-written file
-        // into place. The sequence number covers in-process "hosts"
-        // (worker threads in the tests), which share a pid.
-        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-        let tmp = self.dir.join(format!(
-            "manifest.json.tmp.{}.{}",
-            std::process::id(),
-            TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
-        ));
-        {
-            // write + fsync BEFORE the rename: a rename whose data blocks
-            // never hit disk would survive a crash as a garbage manifest
-            let mut file = File::create(&tmp)
-                .with_context(|| format!("creating {}", tmp.display()))?;
-            file.write_all(doc.to_pretty().as_bytes())
-                .with_context(|| format!("writing {}", tmp.display()))?;
-            file.sync_all()
-                .with_context(|| format!("syncing {}", tmp.display()))?;
-        }
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("committing {}", path.display()))?;
-        // best-effort directory fsync so the rename itself is durable
-        if let Ok(dir) = File::open(&self.dir) {
-            let _ = dir.sync_all();
-        }
-        Ok(())
+            )
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        // publish_doc is the durable atomic replace: readers see the old
+        // or the new manifest, never a mixture, and concurrent writers
+        // (a benign cluster commit race — the contents are identical)
+        // cannot clobber each other's in-flight write. On POSIX that is
+        // write-temp(+pid+seq)-fsync-rename(+dir fsync); on an object
+        // store a whole-object PUT.
+        self.store
+            .publish_doc("manifest.json", self.manifest_doc().to_pretty().as_bytes())
     }
 
     /// Durably mark level `k` complete (atomic manifest rewrite). All of
@@ -472,12 +648,12 @@ impl ShardRun {
                 Some(c) if k <= c => bail!(
                     "{}: level {k} is already committed (double commit \
                      rejected; levels_complete = {c})",
-                    self.dir.join("manifest.json").display()
+                    self.manifest_name()
                 ),
                 _ => bail!(
                     "{}: cannot commit level {k} out of order — the next \
                      committable level is {expect}",
-                    self.dir.join("manifest.json").display()
+                    self.manifest_name()
                 ),
             }
         }
@@ -490,9 +666,17 @@ impl ShardRun {
         ShardSpec::new(binom.c(self.p, k), self.shards)
     }
 
-    /// Path of one shard file: `level_{k}_shard_{s}.{ext}`.
+    /// Key of one shard stream: `level_{k}_shard_{s}.{ext}` (identical
+    /// to the POSIX file name — the object-key layout mirrors the file
+    /// layout, see `docs/FORMATS.md`).
+    pub fn shard_key(&self, k: usize, s: usize, ext: &str) -> String {
+        format!("level_{k:02}_shard_{s:04}.{ext}")
+    }
+
+    /// Path of one shard file under the run root (display / test
+    /// convenience; I/O goes through [`ShardRun::store`] by key).
     pub fn shard_file(&self, k: usize, s: usize, ext: &str) -> PathBuf {
-        self.dir.join(format!("level_{k:02}_shard_{s:04}.{ext}"))
+        self.dir.join(self.shard_key(k, s, ext))
     }
 
     /// Drop the `.bps`/`.qr` files of a level that is no longer needed
@@ -500,8 +684,8 @@ impl ShardRun {
     /// reconstruction reads one record per level at the very end.
     pub fn prune_level(&self, k: usize) {
         for s in 0..self.shards {
-            let _ = std::fs::remove_file(self.shard_file(k, s, "bps"));
-            let _ = std::fs::remove_file(self.shard_file(k, s, "qr"));
+            let _ = self.store.delete(&self.shard_key(k, s, "bps"));
+            let _ = self.store.delete(&self.shard_key(k, s, "qr"));
         }
     }
 }
@@ -542,20 +726,20 @@ impl<M: VarMask> SinkOut<M> for SinkBuf<M> {
 /// streams for one (level, shard) pair, appended batch by batch so a
 /// shard's frontier never materialises in RAM.
 ///
-/// Single-host runs write the canonical `level_*_shard_*.{ext}` files
+/// Single-host runs write the canonical `level_*_shard_*.{ext}` streams
 /// directly ([`ShardWriterSet::create`]). Cluster hosts write *staged*
-/// files (`.{ext}.host-…` — [`ShardWriterSet::create_staged`]) that
-/// [`ShardWriterSet::finish`] renames into place only after the fsync,
-/// so a host whose claim was reclaimed mid-write (a "zombie") can never
-/// leave a truncated canonical file: either its rename never happens, or
-/// it atomically publishes bytes that are bit-identical to the
-/// reclaimer's (the sweep is deterministic).
+/// streams (`.{ext}.host-…` — [`ShardWriterSet::create_staged`]) that
+/// [`ShardWriterSet::finish`] publishes under the canonical keys only
+/// after the bytes are durable (POSIX: fsync + rename; object store:
+/// completed upload + server-side copy), so a host whose claim was
+/// reclaimed mid-write (a "zombie") can never leave a truncated
+/// canonical stream: either its publish never happens, or it atomically
+/// publishes bytes that are bit-identical to the reclaimer's (the sweep
+/// is deterministic).
 pub struct ShardWriterSet<M: VarMask> {
-    bps: BufWriter<File>,
-    qr: BufWriter<File>,
-    sink: BufWriter<File>,
-    /// `(written path, canonical path)` per stream; equal when unstaged.
-    publish: [(PathBuf, PathBuf); 3],
+    bps: Box<dyn ShardStream>,
+    qr: Box<dyn ShardStream>,
+    sink: Box<dyn ShardStream>,
     entries: u64,
     bytes: u64,
     _width: PhantomData<M>,
@@ -567,8 +751,8 @@ impl<M: VarMask> ShardWriterSet<M> {
         ShardWriterSet::create_inner(run, k, s, None)
     }
 
-    /// Write host-unique staged files, atomically renamed to the
-    /// canonical names by [`ShardWriterSet::finish`] (cluster path).
+    /// Write host-unique staged streams, atomically published under the
+    /// canonical keys by [`ShardWriterSet::finish`] (cluster path).
     /// `tag` must be unique per writing process (e.g. `host-0003-71234`).
     pub fn create_staged(
         run: &ShardRun,
@@ -585,35 +769,20 @@ impl<M: VarMask> ShardWriterSet<M> {
         s: usize,
         tag: Option<&str>,
     ) -> Result<ShardWriterSet<M>> {
-        let mut publish: Vec<(PathBuf, PathBuf)> = Vec::with_capacity(3);
-        let mut open = |ext: &str, kind: u8| -> Result<BufWriter<File>> {
-            let target = run.shard_file(k, s, ext);
-            let path = match tag {
-                Some(tag) => {
-                    let mut name = target.as_os_str().to_os_string();
-                    name.push(format!(".{tag}"));
-                    PathBuf::from(name)
-                }
-                None => target.clone(),
-            };
-            let file = File::create(&path)
-                .with_context(|| format!("creating shard file {}", path.display()))?;
-            let mut w = BufWriter::new(file);
+        let mut open = |ext: &str, kind: u8| -> Result<Box<dyn ShardStream>> {
+            let key = run.shard_key(k, s, ext);
+            let mut w = run.store.create_stream(&key, tag)?;
             w.write_all(&encode_header(M::BYTES as u8, k as u8, kind))
-                .with_context(|| format!("writing header of {}", path.display()))?;
-            publish.push((path, target));
+                .with_context(|| format!("writing header of {key}"))?;
             Ok(w)
         };
         let bps = open("bps", KIND_BPS)?;
         let qr = open("qr", KIND_QR)?;
         let sink = open("sink", KIND_SINK)?;
-        let publish: [(PathBuf, PathBuf); 3] =
-            publish.try_into().expect("three shard streams");
         Ok(ShardWriterSet {
             bps,
             qr,
             sink,
-            publish,
             entries: 0,
             bytes: 3 * HEADER as u64,
             _width: PhantomData,
@@ -651,34 +820,32 @@ impl<M: VarMask> ShardWriterSet<M> {
         Ok(())
     }
 
-    /// Flush + fsync all three streams, then (for staged writers) rename
-    /// them to their canonical names; returns (subset entries, bytes
-    /// written). Sync errors propagate: the level must not commit over
-    /// shard data the kernel could not persist, and a staged file is
-    /// only published after its bytes are durable.
+    /// Finish all three streams — flush, make durable, and (for staged
+    /// writers) publish under the canonical keys; returns (subset
+    /// entries, bytes written). Durability errors propagate: the level
+    /// must not commit over shard data the backend could not persist,
+    /// and a staged stream is only published after its bytes are
+    /// durable. (A crash between the three finishes can leave a mix of
+    /// published and unpublished streams — harmless, because the done
+    /// marker that vouches for the shard is only written after all
+    /// three succeed, and the next attempt republishes identical bytes.)
     pub fn finish(self) -> Result<(u64, u64)> {
-        for mut w in [self.bps, self.qr, self.sink] {
-            w.flush()?;
-            w.get_ref().sync_data()?;
-        }
-        for (written, target) in &self.publish {
-            if written != target {
-                std::fs::rename(written, target).with_context(|| {
-                    format!("publishing shard file {}", target.display())
-                })?;
-            }
-        }
+        self.bps.finish()?;
+        self.qr.finish()?;
+        self.sink.finish()?;
         Ok((self.entries, self.bytes))
     }
 }
 
-/// A direct-mapped window cache over one fixed-record-size shard file
+/// A direct-mapped window cache over one fixed-record-size shard stream
 /// (the read half of the format; each worker opens its own, so no
-/// cross-thread sharing).
+/// cross-thread sharing). Each window miss is one positioned read —
+/// a `pread` on POSIX, a ranged GET on an object store.
 struct WindowedRecords {
-    file: RefCell<File>,
+    src: RefCell<Box<dyn RandomRead>>,
     cache: RefCell<WindowCache>,
-    path: String,
+    /// `root/key`, for error messages.
+    name: String,
     record: usize,
     entries: usize,
     slots: usize,
@@ -692,11 +859,13 @@ struct WindowCache {
 }
 
 impl WindowedRecords {
-    /// Open + fully validate one shard file: v1 header fields *and* the
-    /// exact byte length implied by `entries` (a truncated or corrupt
-    /// shard fails here, by path, before any rank is served).
+    /// Open + fully validate one shard stream: v1 header fields *and*
+    /// the exact byte length implied by `entries` (a truncated or
+    /// corrupt shard fails here, by name, before any rank is served).
+    #[allow(clippy::too_many_arguments)]
     fn open(
-        path: &Path,
+        store: &SharedBackend,
+        key: &str,
         width_bytes: usize,
         k: usize,
         kind: u8,
@@ -704,33 +873,29 @@ impl WindowedRecords {
         entries: usize,
         slots_budget: usize,
     ) -> Result<WindowedRecords> {
-        let mut file =
-            File::open(path).with_context(|| format!("opening shard file {}", path.display()))?;
+        let name = format!("{}/{key}", store.root());
+        let mut src = store.open_random(key)?;
         let mut header = [0u8; HEADER];
-        file.read_exact(&mut header)
-            .with_context(|| format!("reading header of {}", path.display()))?;
-        decode_header(&header, width_bytes, k, kind, &path.display().to_string())?;
+        src.read_exact_at(0, &mut header)
+            .with_context(|| format!("reading header of {name}"))?;
+        decode_header(&header, width_bytes, k, kind, &name)?;
         let expect_len = (HEADER + entries * record) as u64;
-        let actual = file
-            .metadata()
-            .with_context(|| format!("stat {}", path.display()))?
-            .len();
+        let actual = src.len();
         if actual != expect_len {
             bail!(
-                "{}: shard file is {actual} bytes but {expect_len} were expected \
+                "{name}: shard file is {actual} bytes but {expect_len} were expected \
                  ({entries} records of {record} bytes + {HEADER}-byte header) — \
-                 the file is truncated or from a different run",
-                path.display()
+                 the file is truncated or from a different run"
             );
         }
         let slots = slots_budget.min(entries.div_ceil(WINDOW)).max(1);
         Ok(WindowedRecords {
-            file: RefCell::new(file),
+            src: RefCell::new(src),
             cache: RefCell::new(WindowCache {
                 tags: vec![-1; slots],
                 data: vec![0; slots * WINDOW * record],
             }),
-            path: path.display().to_string(),
+            name,
             record,
             entries,
             slots,
@@ -746,7 +911,7 @@ impl WindowedRecords {
     /// Copy record `idx` into `out[..record]` through the window cache.
     #[inline]
     fn read_into(&self, idx: usize, out: &mut [u8]) {
-        debug_assert!(idx < self.entries, "{}: record {idx} out of range", self.path);
+        debug_assert!(idx < self.entries, "{}: record {idx} out of range", self.name);
         let record = self.record;
         let window = idx / WINDOW;
         let within = idx % WINDOW;
@@ -756,15 +921,19 @@ impl WindowedRecords {
             self.misses.set(self.misses.get() + 1);
             let start = window * WINDOW;
             let len = WINDOW.min(self.entries - start);
-            let mut file = self.file.borrow_mut();
+            let base = slot * WINDOW * record;
             // I/O failures after open-time validation are unrecoverable
             // mid-sweep (the hot read path returns values, not Results);
             // name the file so the abort is actionable.
-            file.seek(SeekFrom::Start((HEADER + start * record) as u64))
-                .unwrap_or_else(|e| panic!("{}: seek to window {window} failed: {e}", self.path));
-            let base = slot * WINDOW * record;
-            file.read_exact(&mut cache.data[base..base + len * record])
-                .unwrap_or_else(|e| panic!("{}: read of window {window} failed: {e}", self.path));
+            self.src
+                .borrow_mut()
+                .read_exact_at(
+                    (HEADER + start * record) as u64,
+                    &mut cache.data[base..base + len * record],
+                )
+                .unwrap_or_else(|e| {
+                    panic!("{}: read of window {window} failed: {e:#}", self.name)
+                });
             cache.tags[slot] = window as i64;
         } else {
             self.hits.set(self.hits.get() + 1);
@@ -806,7 +975,8 @@ impl<M: VarMask> ShardedLevelReader<M> {
                 continue;
             }
             qr.push(Some(WindowedRecords::open(
-                &run.shard_file(k, s, "qr"),
+                &run.store,
+                &run.shard_key(k, s, "qr"),
                 M::BYTES,
                 k,
                 KIND_QR,
@@ -818,7 +988,8 @@ impl<M: VarMask> ShardedLevelReader<M> {
                 None
             } else {
                 Some(WindowedRecords::open(
-                    &run.shard_file(k, s, "bps"),
+                    &run.store,
+                    &run.shard_key(k, s, "bps"),
                     M::BYTES,
                     k,
                     KIND_BPS,
@@ -896,10 +1067,12 @@ impl<M: VarMask> ShardedLevelReader<M> {
     }
 }
 
-/// Read one record of a shard file without a cache (used a handful of
+/// Read one record of a shard stream without a cache (used a handful of
 /// times per run: reconstruction + the final score).
+#[allow(clippy::too_many_arguments)]
 fn read_one_record(
-    path: &Path,
+    store: &SharedBackend,
+    key: &str,
     width_bytes: usize,
     k: usize,
     kind: u8,
@@ -907,15 +1080,14 @@ fn read_one_record(
     idx: u64,
     out: &mut [u8],
 ) -> Result<()> {
-    let mut file =
-        File::open(path).with_context(|| format!("opening shard file {}", path.display()))?;
+    let name = format!("{}/{key}", store.root());
+    let mut src = store.open_random(key)?;
     let mut header = [0u8; HEADER];
-    file.read_exact(&mut header)
-        .with_context(|| format!("reading header of {}", path.display()))?;
-    decode_header(&header, width_bytes, k, kind, &path.display().to_string())?;
-    file.seek(SeekFrom::Start(HEADER as u64 + idx * record as u64))?;
-    file.read_exact(&mut out[..record])
-        .with_context(|| format!("reading record {idx} of {}", path.display()))?;
+    src.read_exact_at(0, &mut header)
+        .with_context(|| format!("reading header of {name}"))?;
+    decode_header(&header, width_bytes, k, kind, &name)?;
+    src.read_exact_at(HEADER as u64 + idx * record as u64, &mut out[..record])
+        .with_context(|| format!("reading record {idx} of {name}"))?;
     Ok(())
 }
 
@@ -926,7 +1098,8 @@ pub fn final_score<M: VarMask>(run: &ShardRun) -> Result<f64> {
     let (s, local) = spec.locate(0);
     let mut buf = [0u8; QR_RECORD];
     read_one_record(
-        &run.shard_file(run.p, s, "qr"),
+        &run.store,
+        &run.shard_key(run.p, s, "qr"),
         M::BYTES,
         run.p,
         KIND_QR,
@@ -955,7 +1128,8 @@ pub fn reconstruct_from_disk<M: VarMask>(
         let rank = colex_rank(binom, mask);
         let (s, local) = run.spec(binom, k).locate(rank);
         read_one_record(
-            &run.shard_file(k, s, "sink"),
+            &run.store,
+            &run.shard_key(k, s, "sink"),
             M::BYTES,
             k,
             KIND_SINK,
@@ -1335,6 +1509,195 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The object backend speaks the same key layout and byte formats:
+    /// a run written through it is readable file-for-file, the staged
+    /// copy-publish leaves no strays, and a POSIX `ShardRun::open` of
+    /// the same root sees an identical manifest (keys mirror paths).
+    #[test]
+    fn object_backend_runs_mirror_the_posix_layout() {
+        let dir = tmpdir("object_layout");
+        let p = 9;
+        let k = 3;
+        let binom = BinomTable::new(p);
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            backend: BackendKind::Object,
+            ..Default::default()
+        };
+        let mut run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "0b0b").unwrap();
+        assert_eq!(run.store().kind(), BackendKind::Object);
+        for lvl in 0..k {
+            run.commit_level(lvl).ok();
+        }
+        let spec = run.spec(&binom, k);
+        for s in 0..spec.shards {
+            let (lo, hi) = spec.bounds(s);
+            if lo >= hi {
+                continue;
+            }
+            // staged, like a cluster host would write
+            let mut w =
+                ShardWriterSet::<u32>::create_staged(&run, k, s, "host-0000-1-0").unwrap();
+            let mut sinks = SinkBuf::default();
+            for t in lo..hi {
+                sinks.put(0u32, (t % 5) as u8, t as u32);
+                let bps: Vec<f64> = (0..k).map(|j| (t as usize * k + j) as f64).collect();
+                let bpm: Vec<u32> = (0..k).map(|j| (t as u32) ^ (j as u32)).collect();
+                w.append(&[t as f64], &[-(t as f64)], &bps, &bpm, &mut sinks)
+                    .unwrap();
+            }
+            w.finish().unwrap();
+        }
+        run.commit_level(k).unwrap();
+        let reader = ShardedLevelReader::<u32>::open(&run, &binom, k).unwrap();
+        for t in (0..spec.size as usize).step_by(2) {
+            assert_eq!(reader.q_at(t), t as f64);
+            assert_eq!(reader.r_at(t), -(t as f64));
+        }
+        // the canonical files on disk are plain v1-format shard files…
+        let bytes = std::fs::read(run.shard_file(k, 0, "qr")).unwrap();
+        assert_eq!(&bytes[..8], b"BNSLSPIL");
+        // …no staged strays survive the copy-publish…
+        let strays: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".host-") || n.contains(".otmp."))
+            .collect();
+        assert!(strays.is_empty(), "{strays:?}");
+        // …the manifest on disk records the binding in plain JSON…
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(manifest.contains("\"backend\": \"object\""), "{manifest}");
+        // …and a POSIX *open* of the object-bound root is rejected with
+        // the flag to use (mixed backends judge liveness differently)
+        let err = ShardRun::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("bound"), "{err}");
+        assert!(err.contains("--backend object"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Review-round regression: a joining host whose manifest existence
+    /// probe *lags* (the object store's read-after-write window,
+    /// injected via `stale_reads`) must not overwrite a committed run's
+    /// manifest with a fresh `levels_complete = -1` — the initial
+    /// manifest write is a conditional publish, and the lagged creator
+    /// falls back to the ordinary validate-and-resume path.
+    #[test]
+    fn lagged_existence_probe_cannot_overwrite_a_committed_manifest() {
+        use crate::coordinator::storage::{ObjectBackend, ObjectFaults};
+        let dir = tmpdir("lagged_probe");
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            backend: BackendKind::Object,
+            ..Default::default()
+        };
+        let mut run = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "cafe").unwrap();
+        run.commit_level(0).unwrap();
+        // a second host joins through a store whose next TWO GETs lie:
+        // the existence probe (sending it down the create path, where
+        // the conditional publish loses) AND the first validate-resume
+        // read — the entry path must ride out both, not die on either
+        let object = ObjectBackend::with_faults(&dir, ObjectFaults::default());
+        object
+            .faults()
+            .stale_reads
+            .store(2, std::sync::atomic::Ordering::Relaxed);
+        let store: SharedBackend = Arc::new(object);
+        let joined =
+            ShardRun::open_or_create_on(store, &opts, 8, 40, 4, "Jeffreys", "cafe").unwrap();
+        assert_eq!(
+            joined.completed,
+            Some(0),
+            "committed progress survived the lagged probes"
+        );
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(
+            text.contains("\"levels_complete\": 0"),
+            "manifest not regressed: {text}"
+        );
+        // explicit resume intent (shards = 0) with a lagged existence
+        // probe: re-probed within the grace window, not "nothing to
+        // resume"
+        let object = ObjectBackend::with_faults(&dir, ObjectFaults::default());
+        object
+            .faults()
+            .stale_reads
+            .store(1, std::sync::atomic::Ordering::Relaxed);
+        let store: SharedBackend = Arc::new(object);
+        let resumed = ShardRun::open_or_create_on(
+            store,
+            &ShardOptions {
+                shards: 0,
+                dir: dir.clone(),
+                backend: BackendKind::Object,
+                ..Default::default()
+            },
+            8,
+            40,
+            4,
+            "Jeffreys",
+            "cafe",
+        )
+        .unwrap();
+        assert_eq!(resumed.completed, Some(0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn object_backend_resume_validates_identity_like_posix() {
+        let dir = tmpdir("object_resume");
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            backend: BackendKind::Object,
+            ..Default::default()
+        };
+        ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "aaaa").unwrap();
+        // resume with shards = 0 adopts the manifest geometry
+        let resumed = ShardRun::open_or_create(
+            &ShardOptions {
+                shards: 0,
+                dir: dir.clone(),
+                backend: BackendKind::Object,
+                ..Default::default()
+            },
+            10,
+            100,
+            4,
+            "Bic",
+            "aaaa",
+        )
+        .unwrap();
+        assert_eq!(resumed.shards, 2);
+        // identity mismatches are rejected by name, same as POSIX
+        let err = ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "bbbb")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        // …and the backend itself is part of the run's identity: a
+        // mismatched join is rejected with the flag to use (mixed
+        // backends would judge liveness by different stamps)
+        let err = ShardRun::open_or_create(
+            &ShardOptions {
+                shards: 0,
+                dir: dir.clone(),
+                backend: BackendKind::Posix,
+                ..Default::default()
+            },
+            10,
+            100,
+            4,
+            "Bic",
+            "aaaa",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--backend object"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,255 @@
+//! Pluggable durable-storage backends for the shard/cluster coordinator.
+//!
+//! Everything the coordinator persists — the manifest, the per-shard
+//! frontier streams, and the cluster claim ledger — goes through one
+//! [`StorageBackend`] trait whose operations are the **protocol steps**,
+//! not raw filesystem calls:
+//!
+//! | operation | protocol step | POSIX | object store (S3-style) |
+//! |---|---|---|---|
+//! | [`create_exclusive`](StorageBackend::create_exclusive) | claim / init-lock take | `O_CREAT\|O_EXCL` | conditional PUT (`If-None-Match: *`) |
+//! | [`touch`](StorageBackend::touch) | heartbeat | mtime touch | versioned heartbeat metadata key |
+//! | [`liveness_age`](StorageBackend::liveness_age) | staleness check | `stat` mtime | heartbeat stamp, else object `LastModified` |
+//! | [`remove_contended`](StorageBackend::remove_contended) | stale-claim steal | rename-to-unique, then unlink | conditional delete (one remover wins) |
+//! | [`publish_doc`](StorageBackend::publish_doc) | manifest / done-marker commit | write-temp + fsync + rename + dir fsync | atomic whole-object PUT |
+//! | [`create_stream`](StorageBackend::create_stream) | shard frontier write | (staged) file + fsync + rename | staged upload → complete → server-side copy → delete |
+//! | [`open_random`](StorageBackend::open_random) | windowed shard reads | `seek` + `read` | ranged GET per window |
+//! | [`list`](StorageBackend::list) | ledger scan / cleanup | `readdir` | prefix LIST (may lag — deletes are idempotent) |
+//!
+//! Two implementations ship:
+//!
+//! * [`PosixBackend`] — today's behavior, byte for byte: same file
+//!   names, same temp-file naming, same fsync points. The default.
+//! * [`ObjectBackend`] — an object-store **simulator** rooted in a local
+//!   directory. The *protocol layer* sees only S3 semantics (no rename,
+//!   no mtime, conditional PUT, prefix listing), while the simulator
+//!   implements them with local primitives — exactly how a real object
+//!   store implements its API over its own storage. It injects faults
+//!   (lost PUT races, stale reads, listing lag) so the whole cluster
+//!   protocol is adversarially testable without AWS, and it counts
+//!   requests so [`crate::coordinator::plan`]'s request pricing can be
+//!   checked against reality.
+//!
+//! Keys are flat names relative to the run root and mirror the POSIX
+//! file layout one-to-one (`manifest.json`, `level_03_shard_0001.qr`,
+//! `claim-03-0001.json`, …) — see `docs/FORMATS.md`.
+//!
+//! The repo's core invariant makes backend bugs *survivable* rather
+//! than corrupting: every execution mode of the sweep is bit-identical,
+//! so a duplicated shard computation (after a spurious steal, a lost
+//! PUT, a ghost listing entry) republishes the same bytes.
+
+pub mod object;
+pub mod posix;
+
+pub use object::{ObjectBackend, ObjectFaults, RequestTotals};
+pub use posix::PosixBackend;
+
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which backend a run coordinates through (CLI `--backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Shared POSIX filesystem (local disk, NFSv4) — the default.
+    #[default]
+    Posix,
+    /// S3-style object store (simulated locally; see [`ObjectBackend`]).
+    Object,
+}
+
+impl BackendKind {
+    /// Parse a CLI `--backend` value.
+    pub fn parse(name: &str) -> Option<BackendKind> {
+        match name {
+            "posix" => Some(BackendKind::Posix),
+            "object" => Some(BackendKind::Object),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Posix => "posix",
+            BackendKind::Object => "object",
+        }
+    }
+}
+
+/// Outcome of a conditional create ([`StorageBackend::create_exclusive`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CreateOutcome {
+    /// This caller created the key — it owns whatever the key locks.
+    Created,
+    /// The key already exists (or a concurrent writer won the race).
+    AlreadyExists,
+}
+
+/// Observed age of a key's liveness stamp, relative to the observer's
+/// clock. Stamps can sit in the observer's *future* under clock skew;
+/// callers decide how much future-ness still counts as fresh.
+#[derive(Clone, Copy, Debug)]
+pub enum KeyAge {
+    /// Stamp is `d` in the past (the common case).
+    Past(Duration),
+    /// Stamp is `d` in the observer's future (clock skew).
+    Future(Duration),
+}
+
+/// Shared handle on one backend — cloned freely across worker threads.
+pub type SharedBackend = Arc<dyn StorageBackend>;
+
+/// One durable-storage backend for a coordinator run.
+///
+/// Implementations must be safe to share across threads (each `bnsl`
+/// host's worker pool holds one handle) and across *processes* via the
+/// storage itself: all coordination state lives behind the trait, never
+/// in the handle.
+pub trait StorageBackend: Send + Sync + std::fmt::Debug {
+    fn kind(&self) -> BackendKind;
+
+    /// Whether reads (GET / existence probes / LIST) may transiently
+    /// *lag* writes on this backend (read-after-write windows, listing
+    /// lag). `false` promises strong consistency (POSIX); when `true`,
+    /// callers on fatal paths retry within a bounded grace window
+    /// instead of trusting one unlucky read.
+    fn reads_may_lag(&self) -> bool;
+
+    /// Human-readable root (path or bucket prefix) for error messages.
+    fn root(&self) -> String;
+
+    /// Create the root if it does not exist (idempotent).
+    fn ensure_root(&self) -> Result<()>;
+
+    /// Atomic create-if-absent of a small document. Exactly one of any
+    /// set of concurrent callers observes [`CreateOutcome::Created`].
+    fn create_exclusive(&self, key: &str, body: &[u8]) -> Result<CreateOutcome>;
+
+    /// Durably publish a small document: readers see the old bytes or
+    /// the new bytes, never a mixture, and the new bytes survive a
+    /// crash once this returns.
+    fn publish_doc(&self, key: &str, body: &[u8]) -> Result<()>;
+
+    /// Conditional durable publish: the atomicity and durability of
+    /// [`publish_doc`](StorageBackend::publish_doc) but landing only if
+    /// `key` is absent — exactly one of any set of concurrent callers
+    /// creates it, and an existing document is **never replaced**. The
+    /// initial-manifest primitive: a creator whose existence probe
+    /// lagged (read-after-write) must not be able to overwrite a
+    /// committed run's manifest with a fresh one.
+    fn publish_doc_if_absent(&self, key: &str, body: &[u8]) -> Result<CreateOutcome>;
+
+    /// Plain overwrite of a small document (idempotent markers whose
+    /// loss is harmless — they are re-announced).
+    fn put_doc(&self, key: &str, body: &[u8]) -> Result<()>;
+
+    /// Read a whole small document; `None` if the key does not exist.
+    fn read_doc(&self, key: &str) -> Result<Option<Vec<u8>>>;
+
+    fn exists(&self, key: &str) -> Result<bool>;
+
+    /// Idempotent delete (absent keys are not an error).
+    fn delete(&self, key: &str) -> Result<()>;
+
+    /// Refresh the key's liveness stamp without touching its content.
+    /// Best-effort: a failed touch only delays freshness, so errors are
+    /// swallowed (the stale window is generous by design).
+    fn touch(&self, key: &str);
+
+    /// Age of the key's liveness stamp; `None` when the key is gone or
+    /// its metadata is unreadable.
+    fn liveness_age(&self, key: &str) -> Option<KeyAge>;
+
+    /// Remove `key` such that **exactly one** concurrent caller returns
+    /// `true` — the stale-steal primitive. `winner_tag` must be unique
+    /// per contender (host + pid). Note the inherent ABA window shared
+    /// by both backends: a contender acting on an old staleness
+    /// observation can remove a freshly re-created key; the protocol
+    /// tolerates this because duplicated shard work is deterministic.
+    fn remove_contended(&self, key: &str, winner_tag: &str) -> Result<bool>;
+
+    /// Keys starting with `prefix`, sorted. May lag reality on backends
+    /// with eventually-consistent listings — callers must treat entries
+    /// as hints (deletes are idempotent, authoritative state is read
+    /// with [`read_doc`](StorageBackend::read_doc)/[`exists`](StorageBackend::exists)).
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Best-effort sweep of the backend's *internal* leftovers (crashed
+    /// writers' temp files, orphaned metadata) older than `older_than`.
+    fn sweep_internal(&self, older_than: Duration);
+
+    /// Open a sequential bulk writer for a shard stream. With a
+    /// `staged_tag` the data is published under `key` only at
+    /// [`ShardStream::finish`]; until then it is invisible under `key`
+    /// (POSIX: `key.tag` temp file renamed into place; object: staged
+    /// upload completed at `key.tag`, then server-side copied to `key`).
+    fn create_stream(&self, key: &str, staged_tag: Option<&str>) -> Result<Box<dyn ShardStream>>;
+
+    /// Open a committed, immutable bulk object for random-access reads.
+    fn open_random(&self, key: &str) -> Result<Box<dyn RandomRead>>;
+
+    /// Rewind a key's liveness stamp by `age` — the fault-injection /
+    /// ops hook behind the stale-claim tests ("pretend this host died
+    /// `age` ago"). Best-effort, like [`touch`](StorageBackend::touch).
+    fn backdate(&self, key: &str, age: Duration);
+}
+
+/// Sequential writer for one bulk shard stream.
+pub trait ShardStream: Send {
+    fn write_all(&mut self, bytes: &[u8]) -> Result<()>;
+
+    /// Flush, make durable, and (for staged writers) atomically publish
+    /// under the canonical key. Nothing is published if this errors.
+    fn finish(self: Box<Self>) -> Result<()>;
+}
+
+/// Random-access reader over one committed bulk object.
+pub trait RandomRead: Send {
+    /// Total object length in bytes.
+    fn len(&self) -> u64;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fill `out` from `offset` (a ranged GET / positioned read).
+    fn read_exact_at(&mut self, offset: u64, out: &mut [u8]) -> Result<()>;
+}
+
+/// Construct the backend selected by `kind`, rooted at `root`.
+/// [`ObjectBackend`] additionally reads its fault-injection config from
+/// the `BNSL_OBJECT_FAULTS` environment variable (see [`ObjectFaults`]).
+pub fn make_backend(kind: BackendKind, root: &Path) -> Result<SharedBackend> {
+    Ok(match kind {
+        BackendKind::Posix => Arc::new(PosixBackend::new(root)),
+        BackendKind::Object => Arc::new(ObjectBackend::open(root)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_cli_names() {
+        assert_eq!(BackendKind::parse("posix"), Some(BackendKind::Posix));
+        assert_eq!(BackendKind::parse("object"), Some(BackendKind::Object));
+        assert_eq!(BackendKind::parse("s3"), None);
+        assert_eq!(BackendKind::Posix.name(), "posix");
+        assert_eq!(BackendKind::Object.name(), "object");
+        assert_eq!(BackendKind::default(), BackendKind::Posix);
+    }
+
+    #[test]
+    fn make_backend_dispatches_on_kind() {
+        let dir = std::env::temp_dir().join(format!("bnsl_mkbackend_{}", std::process::id()));
+        let posix = make_backend(BackendKind::Posix, &dir).unwrap();
+        assert_eq!(posix.kind(), BackendKind::Posix);
+        let object = make_backend(BackendKind::Object, &dir).unwrap();
+        assert_eq!(object.kind(), BackendKind::Object);
+        assert_eq!(posix.root(), object.root());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

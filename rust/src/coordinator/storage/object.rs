@@ -1,0 +1,864 @@
+//! [`ObjectBackend`] — an S3-style object store for the coordinator,
+//! simulated over a local directory.
+//!
+//! The protocol layer sees **only object-store semantics**:
+//!
+//! * no rename and no mtime — publishing is an atomic whole-object PUT;
+//! * claim-taking is a **conditional PUT** (`If-None-Match: *`): exactly
+//!   one concurrent writer creates the key;
+//! * the heartbeat is a **versioned metadata key** (`<key>.hb` holding
+//!   `{version, millis}`), PUT on every touch; staleness is judged from
+//!   its recorded wall-clock stamp, falling back to the object's
+//!   `LastModified` before the first heartbeat;
+//! * staged shard publication is **upload → complete → server-side copy
+//!   → delete** instead of a rename;
+//! * the ledger is scanned with **prefix LIST**, which may lag reality.
+//!
+//! Like any real object store (MinIO over ext4, S3 over its own
+//! replicated storage), the simulator implements that API with local
+//! primitives underneath; those internals (`.otmp.*` temps, `.hb`
+//! sidecars) are invisible to the protocol — `list` filters them and
+//! `delete` reaps sidecars with their object. Object *data* keys mirror
+//! the POSIX file layout one-to-one (`docs/FORMATS.md`), so the bulk
+//! formats are byte-identical across backends.
+//!
+//! # Fault injection
+//!
+//! [`ObjectFaults`] arms one-shot counters for the classic object-store
+//! failure modes, so the cluster protocol can be tested adversarially
+//! without AWS:
+//!
+//! * `put_races` — the next N conditional PUTs report
+//!   [`CreateOutcome::AlreadyExists`] as if a concurrent writer won;
+//! * `stale_reads` — the next N GETs see nothing (read-after-write lag);
+//! * `list_ghosts` — the next N LISTs still contain recently deleted
+//!   keys (listing lag).
+//!
+//! The CLI arms them from the `BNSL_OBJECT_FAULTS` environment variable
+//! (`"put_races=2,stale_reads=1,list_ghosts=3"`); tests construct
+//! [`ObjectBackend::with_faults`] directly. Every operation is also
+//! counted ([`ObjectBackend::requests`]) — object backends are priced in
+//! requests, not file descriptors ([`crate::coordinator::plan`]).
+
+use super::posix::FileRandom;
+use super::{BackendKind, CreateOutcome, KeyAge, RandomRead, ShardStream, StorageBackend};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeSet;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+/// Simulated multipart-upload part size: a shard stream of `b` bytes
+/// costs `ceil(b / PART_BYTES)` part PUTs plus one completion request.
+/// Shared with the analytic request pricing in
+/// [`crate::coordinator::plan::sharded_plan`].
+pub const PART_BYTES: u64 = 64 << 20;
+
+/// Internal temp-name sequence (uploads, atomic PUTs, copies).
+static OTMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Fresh internal temp path under `root` — the single point that
+/// encodes the `.otmp.<pid>.<seq>` convention `is_internal` filters
+/// and `sweep_internal` reaps. Used by uploads, atomic PUTs and
+/// server-side copies alike.
+fn otmp_path(root: &Path) -> PathBuf {
+    root.join(format!(
+        ".otmp.{}.{}",
+        std::process::id(),
+        OTMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// How many recently deleted keys the ghost ring remembers for the
+/// `list_ghosts` fault.
+const GHOST_RING: usize = 256;
+
+/// One-shot fault counters (see the module docs). Each counter is
+/// decremented as its fault fires; zero means "behave normally".
+#[derive(Debug, Default)]
+pub struct ObjectFaults {
+    /// Conditional PUTs that spuriously lose their race.
+    pub put_races: AtomicU64,
+    /// GETs (reads/existence probes) that see nothing.
+    pub stale_reads: AtomicU64,
+    /// LISTs that still include recently deleted keys.
+    pub list_ghosts: AtomicU64,
+}
+
+impl ObjectFaults {
+    /// Parse the `BNSL_OBJECT_FAULTS` spec: comma-separated `name=count`.
+    pub fn parse(spec: &str) -> Result<ObjectFaults> {
+        let faults = ObjectFaults::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let Some((name, count)) = part.split_once('=') else {
+                bail!("object fault '{part}' is not name=count");
+            };
+            let n: u64 = count
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("object fault '{part}': count is not a number"))?;
+            match name.trim() {
+                "put_races" => faults.put_races.store(n, Ordering::Relaxed),
+                "stale_reads" => faults.stale_reads.store(n, Ordering::Relaxed),
+                "list_ghosts" => faults.list_ghosts.store(n, Ordering::Relaxed),
+                other => bail!(
+                    "unknown object fault '{other}' \
+                     (known: put_races, stale_reads, list_ghosts)"
+                ),
+            }
+        }
+        Ok(faults)
+    }
+
+    /// Consume one shot of `counter`; true iff the fault fires.
+    fn take(counter: &AtomicU64) -> bool {
+        counter
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+            .is_ok()
+    }
+}
+
+/// Request totals since the backend was opened — the object-store bill.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestTotals {
+    pub puts: u64,
+    pub gets: u64,
+    pub lists: u64,
+    pub deletes: u64,
+    pub copies: u64,
+}
+
+/// The object-store backend (see the module docs).
+#[derive(Debug)]
+pub struct ObjectBackend {
+    root: PathBuf,
+    faults: ObjectFaults,
+    puts: Arc<AtomicU64>,
+    gets: Arc<AtomicU64>,
+    lists: Arc<AtomicU64>,
+    deletes: Arc<AtomicU64>,
+    copies: Arc<AtomicU64>,
+    /// Ring of recently deleted keys — fodder for `list_ghosts`.
+    recently_deleted: Mutex<Vec<String>>,
+}
+
+impl ObjectBackend {
+    /// Open the store rooted at `root`, arming faults from the
+    /// `BNSL_OBJECT_FAULTS` environment variable if set.
+    pub fn open(root: &Path) -> Result<ObjectBackend> {
+        let faults = match std::env::var("BNSL_OBJECT_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => ObjectFaults::parse(&spec)
+                .with_context(|| format!("parsing BNSL_OBJECT_FAULTS='{spec}'"))?,
+            _ => ObjectFaults::default(),
+        };
+        Ok(ObjectBackend::with_faults(root, faults))
+    }
+
+    /// Open the store with an explicit fault plan (test entry point).
+    pub fn with_faults(root: &Path, faults: ObjectFaults) -> ObjectBackend {
+        ObjectBackend {
+            root: root.to_path_buf(),
+            faults,
+            puts: Arc::new(AtomicU64::new(0)),
+            gets: Arc::new(AtomicU64::new(0)),
+            lists: Arc::new(AtomicU64::new(0)),
+            deletes: Arc::new(AtomicU64::new(0)),
+            copies: Arc::new(AtomicU64::new(0)),
+            recently_deleted: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The live fault counters — tests arm faults mid-scenario through
+    /// this handle.
+    pub fn faults(&self) -> &ObjectFaults {
+        &self.faults
+    }
+
+    /// Request totals so far.
+    pub fn requests(&self) -> RequestTotals {
+        RequestTotals {
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            lists: self.lists.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
+            copies: self.copies.load(Ordering::Relaxed),
+        }
+    }
+
+    fn data_path(&self, key: &str) -> PathBuf {
+        self.root.join(key)
+    }
+
+    fn hb_path(&self, key: &str) -> PathBuf {
+        self.root.join(format!("{key}.hb"))
+    }
+
+    /// Simulator internals, filtered from listings and existence checks.
+    fn is_internal(name: &str) -> bool {
+        name.ends_with(".hb") || name.contains(".otmp.")
+    }
+
+    fn now_millis() -> u64 {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default()
+            .as_millis() as u64
+    }
+
+    /// Durably write `body` to a fresh internal temp and return its
+    /// path — the write half shared by atomic PUTs (which rename it)
+    /// and conditional PUTs (which hard-link it).
+    fn write_tmp_durable(&self, body: &[u8]) -> Result<PathBuf> {
+        let tmp = otmp_path(&self.root);
+        let mut file =
+            File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        file.write_all(body)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        file.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+        Ok(tmp)
+    }
+
+    /// Atomic whole-file write (the simulator's PUT primitive).
+    fn write_atomic(&self, target: &Path, body: &[u8]) -> Result<()> {
+        let tmp = self.write_tmp_durable(body)?;
+        std::fs::rename(&tmp, target)
+            .with_context(|| format!("storing object {}", target.display()))?;
+        Ok(())
+    }
+
+    /// Current heartbeat version of `key` (0 before the first touch).
+    fn hb_version(&self, key: &str) -> u64 {
+        std::fs::read_to_string(self.hb_path(key))
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|doc| doc.get("version").and_then(Json::as_u64))
+            .unwrap_or(0)
+    }
+
+    fn put_heartbeat(&self, key: &str, version: u64, millis: u64) {
+        let body = Json::obj()
+            .set("version", version)
+            .set("millis", millis)
+            .to_pretty();
+        let _ = self.write_atomic(&self.hb_path(key), body.as_bytes());
+    }
+
+    fn remember_deleted(&self, key: &str) {
+        let mut ghosts = self.recently_deleted.lock().unwrap();
+        ghosts.push(key.to_string());
+        if ghosts.len() > GHOST_RING {
+            let excess = ghosts.len() - GHOST_RING;
+            ghosts.drain(..excess);
+        }
+    }
+}
+
+impl StorageBackend for ObjectBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Object
+    }
+
+    fn reads_may_lag(&self) -> bool {
+        // the read-after-write and listing lag this simulator injects
+        // (`stale_reads`, `list_ghosts`) are real S3-class behaviors
+        true
+    }
+
+    fn root(&self) -> String {
+        self.root.display().to_string()
+    }
+
+    fn ensure_root(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating object root {}", self.root.display()))
+    }
+
+    fn create_exclusive(&self, key: &str, body: &[u8]) -> Result<CreateOutcome> {
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        if ObjectFaults::take(&self.faults.put_races) {
+            // injected lost race: the PUT is rejected as if a concurrent
+            // writer created the key first
+            return Ok(CreateOutcome::AlreadyExists);
+        }
+        let target = self.data_path(key);
+        let tmp = self.write_tmp_durable(body)?;
+        // If-None-Match: * — a hard link lands atomically iff the key is
+        // absent, so exactly one concurrent conditional PUT succeeds and
+        // readers never see a partial body
+        let outcome = match std::fs::hard_link(&tmp, &target) {
+            Ok(()) => Ok(CreateOutcome::Created),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                Ok(CreateOutcome::AlreadyExists)
+            }
+            Err(e) => {
+                Err(e).with_context(|| format!("conditional put {}", target.display()))
+            }
+        };
+        let _ = std::fs::remove_file(&tmp);
+        outcome
+    }
+
+    fn publish_doc(&self, key: &str, body: &[u8]) -> Result<()> {
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.write_atomic(&self.data_path(key), body)
+    }
+
+    fn publish_doc_if_absent(&self, key: &str, body: &[u8]) -> Result<CreateOutcome> {
+        // conditional PUTs are already atomic, durable and never
+        // partial here — same primitive as claim creation
+        self.create_exclusive(key, body)
+    }
+
+    fn put_doc(&self, key: &str, body: &[u8]) -> Result<()> {
+        // objects are always whole-object atomic; there is no cheaper
+        // non-atomic write to offer
+        self.publish_doc(key, body)
+    }
+
+    fn read_doc(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        if ObjectFaults::take(&self.faults.stale_reads) {
+            return Ok(None);
+        }
+        let path = self.data_path(key);
+        match std::fs::read(&path) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("reading object {}", path.display())),
+        }
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        if ObjectFaults::take(&self.faults.stale_reads) {
+            return Ok(false);
+        }
+        Ok(self.data_path(key).exists())
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.deletes.fetch_add(1, Ordering::Relaxed);
+        let path = self.data_path(key);
+        match std::fs::remove_file(&path) {
+            Ok(()) => self.remember_deleted(key),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(e).with_context(|| format!("deleting object {}", path.display()))
+            }
+        }
+        let _ = std::fs::remove_file(self.hb_path(key));
+        Ok(())
+    }
+
+    fn touch(&self, key: &str) {
+        // best-effort, like the POSIX mtime touch: never re-creates a
+        // deleted key (the sidecar of a missing object is ignored by
+        // liveness_age and reaped by sweep_internal)
+        // existence probe (a HEAD on a real store) — billed like every
+        // other read so requests() matches what a real bill would show
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        if !self.data_path(key).exists() {
+            return;
+        }
+        // one GET (reading the current heartbeat version) + one PUT
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        let version = self.hb_version(key) + 1;
+        self.put_heartbeat(key, version, Self::now_millis());
+    }
+
+    fn liveness_age(&self, key: &str) -> Option<KeyAge> {
+        // a HEAD/GET of the heartbeat metadata — billed like any other
+        // read, so `requests()` can be compared against the plan's
+        // estimate without a wall-time-scaled blind spot
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        let meta = std::fs::metadata(self.data_path(key)).ok()?;
+        let stamp = std::fs::read_to_string(self.hb_path(key))
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|doc| doc.get("millis").and_then(Json::as_u64));
+        match stamp {
+            Some(millis) => {
+                let now = Self::now_millis();
+                Some(if now >= millis {
+                    KeyAge::Past(Duration::from_millis(now - millis))
+                } else {
+                    KeyAge::Future(Duration::from_millis(millis - now))
+                })
+            }
+            // no heartbeat yet: the object's LastModified stands in
+            None => {
+                let mtime = meta.modified().ok()?;
+                Some(match mtime.elapsed() {
+                    Ok(age) => KeyAge::Past(age),
+                    Err(e) => KeyAge::Future(e.duration()),
+                })
+            }
+        }
+    }
+
+    fn remove_contended(&self, key: &str, winner_tag: &str) -> Result<bool> {
+        self.deletes.fetch_add(1, Ordering::Relaxed);
+        // conditional delete: the simulator serialises contenders by
+        // moving the object aside under a contender-unique name, so
+        // exactly one delete succeeds
+        let stolen = self.root.join(format!("{key}.{winner_tag}"));
+        if std::fs::rename(self.data_path(key), &stolen).is_ok() {
+            let _ = std::fs::remove_file(&stolen);
+            let _ = std::fs::remove_file(self.hb_path(key));
+            self.remember_deleted(key);
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.lists.fetch_add(1, Ordering::Relaxed);
+        let mut names = BTreeSet::new();
+        for entry in std::fs::read_dir(&self.root)
+            .with_context(|| format!("listing {}", self.root.display()))?
+        {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else {
+                continue;
+            };
+            if Self::is_internal(name) {
+                continue;
+            }
+            if name.starts_with(prefix) {
+                names.insert(name.to_string());
+            }
+        }
+        if ObjectFaults::take(&self.faults.list_ghosts) {
+            // injected listing lag: recently deleted keys still appear
+            for ghost in self.recently_deleted.lock().unwrap().iter() {
+                if ghost.starts_with(prefix) {
+                    names.insert(ghost.clone());
+                }
+            }
+        }
+        Ok(names.into_iter().collect())
+    }
+
+    fn sweep_internal(&self, older_than: Duration) {
+        let Ok(entries) = std::fs::read_dir(&self.root) else {
+            return;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else {
+                continue;
+            };
+            if name.contains(".otmp.") {
+                // crashed uploads / atomic PUTs
+                let old = entry
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|m| m.elapsed().ok())
+                    .is_some_and(|age| age > older_than);
+                if old {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            } else if let Some(data) = name.strip_suffix(".hb") {
+                // heartbeat sidecars orphaned by a crash between an
+                // object delete and its sidecar delete
+                if !self.data_path(data).exists() {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
+
+    fn create_stream(&self, key: &str, staged_tag: Option<&str>) -> Result<Box<dyn ShardStream>> {
+        let upload = otmp_path(&self.root);
+        let file = File::create(&upload)
+            .with_context(|| format!("starting upload {}", upload.display()))?;
+        Ok(Box::new(ObjectStream {
+            w: BufWriter::new(file),
+            upload,
+            staged: staged_tag.map(|tag| self.data_path(&format!("{key}.{tag}"))),
+            target: self.data_path(key),
+            root: self.root.clone(),
+            bytes: 0,
+            puts: self.puts.clone(),
+            copies: self.copies.clone(),
+            deletes: self.deletes.clone(),
+        }))
+    }
+
+    fn open_random(&self, key: &str) -> Result<Box<dyn RandomRead>> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        Ok(Box::new(ObjectRandom {
+            inner: FileRandom::open(self.data_path(key))?,
+            gets: self.gets.clone(),
+        }))
+    }
+
+    fn backdate(&self, key: &str, age: Duration) {
+        let millis = Self::now_millis().saturating_sub(age.as_millis() as u64);
+        self.put_heartbeat(key, self.hb_version(key), millis);
+    }
+}
+
+/// One in-flight shard upload (see [`ObjectBackend`] docs).
+struct ObjectStream {
+    w: BufWriter<File>,
+    /// The upload accumulates here (internal, invisible to LIST).
+    upload: PathBuf,
+    /// Staged object key the completed upload lands at (cluster path);
+    /// `None` publishes the completed upload at `target` directly.
+    staged: Option<PathBuf>,
+    target: PathBuf,
+    root: PathBuf,
+    bytes: u64,
+    puts: Arc<AtomicU64>,
+    copies: Arc<AtomicU64>,
+    deletes: Arc<AtomicU64>,
+}
+
+impl ShardStream for ObjectStream {
+    fn write_all(&mut self, bytes: &[u8]) -> Result<()> {
+        self.bytes += bytes.len() as u64;
+        self.w
+            .write_all(bytes)
+            .with_context(|| format!("uploading to {}", self.upload.display()))
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<()> {
+        self.w
+            .flush()
+            .with_context(|| format!("flushing upload {}", self.upload.display()))?;
+        self.w
+            .get_ref()
+            .sync_data()
+            .with_context(|| format!("syncing upload {}", self.upload.display()))?;
+        // bill the upload: one PUT per part + the completion request
+        let parts = self.bytes.div_ceil(PART_BYTES).max(1);
+        self.puts.fetch_add(parts + 1, Ordering::Relaxed);
+        match &self.staged {
+            None => {
+                // completing the upload IS the atomic publish
+                std::fs::rename(&self.upload, &self.target).with_context(|| {
+                    format!("completing upload of {}", self.target.display())
+                })?;
+            }
+            Some(staged) => {
+                // complete the upload at the staged key…
+                std::fs::rename(&self.upload, staged).with_context(|| {
+                    format!("completing staged upload {}", staged.display())
+                })?;
+                // …server-side copy it over the canonical key (atomic
+                // whole-object replace, like any PUT)…
+                self.copies.fetch_add(1, Ordering::Relaxed);
+                let copy_tmp = otmp_path(&self.root);
+                std::fs::copy(staged, &copy_tmp).with_context(|| {
+                    format!("copying {} to {}", staged.display(), copy_tmp.display())
+                })?;
+                File::open(&copy_tmp)
+                    .and_then(|f| f.sync_all())
+                    .with_context(|| format!("syncing copy {}", copy_tmp.display()))?;
+                std::fs::rename(&copy_tmp, &self.target).with_context(|| {
+                    format!("publishing shard file {}", self.target.display())
+                })?;
+                // …and delete the staged upload
+                self.deletes.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(staged);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The shared [`FileRandom`] positioned reader, plus per-read request
+/// billing (each window fetch is one ranged GET).
+struct ObjectRandom {
+    inner: FileRandom,
+    gets: Arc<AtomicU64>,
+}
+
+impl RandomRead for ObjectRandom {
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn read_exact_at(&mut self, offset: u64, out: &mut [u8]) -> Result<()> {
+        // one ranged GET per window fetch
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.inner.read_exact_at(offset, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(tag: &str, faults: ObjectFaults) -> (ObjectBackend, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "bnsl_object_backend_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let b = ObjectBackend::with_faults(&dir, faults);
+        b.ensure_root().unwrap();
+        (b, dir)
+    }
+
+    #[test]
+    fn conditional_put_has_exactly_one_winner() {
+        let (b, dir) = store("race", ObjectFaults::default());
+        let wins: Vec<bool> = std::thread::scope(|scope| {
+            let b = &b;
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    scope.spawn(move || {
+                        let body = format!("{{\"host\": {i}}}");
+                        matches!(
+                            b.create_exclusive("claim-03-0001.json", body.as_bytes())
+                                .unwrap(),
+                            CreateOutcome::Created
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(
+            wins.iter().filter(|&&w| w).count(),
+            1,
+            "exactly one of 8 conditional PUTs lands: {wins:?}"
+        );
+        // the winner's body is intact (never a mixture)
+        let body = b.read_doc("claim-03-0001.json").unwrap().unwrap();
+        let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(doc.get("host").and_then(Json::as_u64).is_some(), "{doc:?}");
+        // no upload temps leaked
+        let strays: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".otmp."))
+            .collect();
+        assert!(strays.is_empty(), "{strays:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lost_put_race_fault_fires_once_then_clears() {
+        let (b, dir) = store("putrace", ObjectFaults::default());
+        b.faults.put_races.store(1, Ordering::Relaxed);
+        assert_eq!(
+            b.create_exclusive("claim-00-0000.json", b"{}").unwrap(),
+            CreateOutcome::AlreadyExists,
+            "the injected race loss"
+        );
+        assert!(!b.data_path("claim-00-0000.json").exists(), "nothing landed");
+        assert_eq!(
+            b.create_exclusive("claim-00-0000.json", b"{}").unwrap(),
+            CreateOutcome::Created,
+            "the retry wins once the fault is spent"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_read_fault_masks_then_reveals() {
+        let (b, dir) = store("stale", ObjectFaults::default());
+        b.put_doc("done-02-0001.json", b"{\"x\": 1}").unwrap();
+        b.faults.stale_reads.store(2, Ordering::Relaxed);
+        assert_eq!(b.read_doc("done-02-0001.json").unwrap(), None, "lagged GET");
+        assert!(!b.exists("done-02-0001.json").unwrap(), "lagged existence probe");
+        assert_eq!(
+            b.read_doc("done-02-0001.json").unwrap().unwrap(),
+            b"{\"x\": 1}".to_vec(),
+            "consistency restored after the lag window"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ghost_listing_shows_deleted_keys_until_lag_expires() {
+        let (b, dir) = store("ghosts", ObjectFaults::default());
+        b.put_doc("claim-05-0000.json", b"{}").unwrap();
+        b.put_doc("claim-05-0001.json", b"{}").unwrap();
+        b.delete("claim-05-0001.json").unwrap();
+        assert_eq!(
+            b.list("claim-05-").unwrap(),
+            vec!["claim-05-0000.json".to_string()],
+            "a consistent LIST omits the deleted key"
+        );
+        b.faults.list_ghosts.store(1, Ordering::Relaxed);
+        assert_eq!(
+            b.list("claim-05-").unwrap(),
+            vec![
+                "claim-05-0000.json".to_string(),
+                "claim-05-0001.json".to_string()
+            ],
+            "the lagged LIST resurrects the deleted key as a ghost"
+        );
+        // the ghost is a listing artefact only: authoritative reads say gone
+        assert!(!b.exists("claim-05-0001.json").unwrap());
+        assert_eq!(
+            b.list("claim-05-").unwrap(),
+            vec!["claim-05-0000.json".to_string()],
+            "LIST converges after the lag window"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn heartbeat_is_a_versioned_metadata_key() {
+        let (b, dir) = store("hb", ObjectFaults::default());
+        b.put_doc("claim-01-0000.json", b"{}").unwrap();
+        // before the first touch, LastModified stands in
+        match b.liveness_age("claim-01-0000.json") {
+            Some(KeyAge::Past(age)) => assert!(age < Duration::from_secs(60), "{age:?}"),
+            other => panic!("{other:?}"),
+        }
+        b.touch("claim-01-0000.json");
+        assert_eq!(b.hb_version("claim-01-0000.json"), 1);
+        b.touch("claim-01-0000.json");
+        assert_eq!(b.hb_version("claim-01-0000.json"), 2, "version advances per touch");
+        b.backdate("claim-01-0000.json", Duration::from_secs(3600));
+        match b.liveness_age("claim-01-0000.json") {
+            Some(KeyAge::Past(age)) => assert!(age >= Duration::from_secs(3000), "{age:?}"),
+            other => panic!("{other:?}"),
+        }
+        b.touch("claim-01-0000.json");
+        match b.liveness_age("claim-01-0000.json") {
+            Some(KeyAge::Past(age)) => assert!(age < Duration::from_secs(60), "{age:?}"),
+            other => panic!("{other:?}"),
+        }
+        // sidecars are internal: invisible to LIST, reaped with the object
+        assert_eq!(
+            b.list("claim-01-").unwrap(),
+            vec!["claim-01-0000.json".to_string()]
+        );
+        b.delete("claim-01-0000.json").unwrap();
+        assert!(!dir.join("claim-01-0000.json.hb").exists(), "sidecar reaped");
+        // touching the deleted key does not resurrect anything
+        b.touch("claim-01-0000.json");
+        assert!(b.liveness_age("claim-01-0000.json").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn remove_contended_single_winner_reaps_sidecar() {
+        let (b, dir) = store("steal", ObjectFaults::default());
+        b.put_doc("claim-04-0002.json", b"{}").unwrap();
+        b.touch("claim-04-0002.json");
+        let wins: Vec<bool> = std::thread::scope(|scope| {
+            let b = &b;
+            let handles: Vec<_> = (0..6)
+                .map(|i| {
+                    scope.spawn(move || {
+                        b.remove_contended("claim-04-0002.json", &format!("stale-{i}-9"))
+                            .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(wins.iter().filter(|&&w| w).count(), 1, "{wins:?}");
+        assert!(!b.exists("claim-04-0002.json").unwrap());
+        assert!(!dir.join("claim-04-0002.json.hb").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn staged_stream_publishes_by_copy_and_bills_requests() {
+        let (b, dir) = store("copy", ObjectFaults::default());
+        let before = b.requests();
+        let mut w = b
+            .create_stream("level_02_shard_0001.qr", Some("host-0003-77-0"))
+            .unwrap();
+        w.write_all(b"0123456789abcdef").unwrap();
+        assert!(
+            !b.exists("level_02_shard_0001.qr").unwrap(),
+            "nothing canonical during the upload"
+        );
+        w.finish().unwrap();
+        assert!(b.exists("level_02_shard_0001.qr").unwrap());
+        assert!(
+            !dir.join("level_02_shard_0001.qr.host-0003-77-0").exists(),
+            "staged upload deleted after the copy"
+        );
+        let after = b.requests();
+        assert_eq!(after.copies - before.copies, 1, "one server-side copy");
+        assert!(after.deletes > before.deletes, "staged upload deletion billed");
+        assert!(
+            after.puts - before.puts >= 2,
+            "part + completion PUTs billed: {after:?}"
+        );
+        // the published object reads back byte-exact, billing ranged GETs
+        let mut r = b.open_random("level_02_shard_0001.qr").unwrap();
+        assert_eq!(r.len(), 16);
+        let mut buf = [0u8; 6];
+        r.read_exact_at(10, &mut buf).unwrap();
+        assert_eq!(&buf, b"abcdef");
+        assert!(b.requests().gets > after.gets, "ranged GETs billed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unstaged_stream_completion_is_the_publish() {
+        let (b, dir) = store("unstaged", ObjectFaults::default());
+        let mut w = b.create_stream("level_00_shard_0000.qr", None).unwrap();
+        w.write_all(b"xy").unwrap();
+        assert!(!b.exists("level_00_shard_0000.qr").unwrap());
+        w.finish().unwrap();
+        assert_eq!(
+            b.read_doc("level_00_shard_0000.qr").unwrap().unwrap(),
+            b"xy".to_vec()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_reaps_orphan_sidecars_and_aged_temps() {
+        let (b, dir) = store("sweep", ObjectFaults::default());
+        b.put_doc("claim-00-0000.json", b"{}").unwrap();
+        b.touch("claim-00-0000.json");
+        // orphan sidecar: object gone, sidecar left (simulated crash)
+        std::fs::write(dir.join("claim-09-0000.json.hb"), b"{}").unwrap();
+        // aged internal temp vs fresh internal temp
+        std::fs::write(dir.join(".otmp.1.0"), b"x").unwrap();
+        let old = File::options()
+            .write(true)
+            .open(dir.join(".otmp.1.0"))
+            .unwrap();
+        old.set_modified(SystemTime::now() - Duration::from_secs(3600))
+            .unwrap();
+        drop(old);
+        std::fs::write(dir.join(".otmp.1.1"), b"x").unwrap();
+        b.sweep_internal(Duration::from_secs(60));
+        assert!(!dir.join("claim-09-0000.json.hb").exists(), "orphan sidecar reaped");
+        assert!(!dir.join(".otmp.1.0").exists(), "aged temp reaped");
+        assert!(dir.join(".otmp.1.1").exists(), "fresh temp kept (may be live)");
+        assert!(
+            dir.join("claim-00-0000.json.hb").exists(),
+            "live object's sidecar kept"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fault_spec_parses_and_rejects_garbage() {
+        let f = ObjectFaults::parse("put_races=2, stale_reads=1,list_ghosts=3").unwrap();
+        assert_eq!(f.put_races.load(Ordering::Relaxed), 2);
+        assert_eq!(f.stale_reads.load(Ordering::Relaxed), 1);
+        assert_eq!(f.list_ghosts.load(Ordering::Relaxed), 3);
+        let f = ObjectFaults::parse("").unwrap();
+        assert_eq!(f.put_races.load(Ordering::Relaxed), 0);
+        assert!(ObjectFaults::parse("put_races").is_err());
+        assert!(ObjectFaults::parse("put_races=x").is_err());
+        let err = ObjectFaults::parse("drop_tables=1").unwrap_err().to_string();
+        assert!(err.contains("drop_tables"), "{err}");
+    }
+}

@@ -1,0 +1,500 @@
+//! [`PosixBackend`] — the shared-filesystem backend, preserving the
+//! pre-trait coordinator behavior byte for byte: identical file names,
+//! identical temp naming (`<key>.tmp.<pid>.<seq>`), identical fsync
+//! points, identical `O_EXCL` / rename / mtime semantics. Correct on
+//! local disks and NFSv4-class mounts (anywhere `O_EXCL` and rename are
+//! atomic and mtimes have sane granularity).
+
+use super::{BackendKind, CreateOutcome, KeyAge, RandomRead, ShardStream, StorageBackend};
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
+
+/// Per-process sequence making publish temp names unique per write:
+/// concurrent hosts (and in-process "hosts" in tests, which share a
+/// pid) may publish the same document at once, and a shared temp name
+/// would let one writer rename the other's half-written file into place.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Shared-POSIX-filesystem backend rooted at one directory.
+#[derive(Debug)]
+pub struct PosixBackend {
+    root: PathBuf,
+}
+
+impl PosixBackend {
+    pub fn new(root: &Path) -> PosixBackend {
+        PosixBackend {
+            root: root.to_path_buf(),
+        }
+    }
+
+    fn path(&self, key: &str) -> PathBuf {
+        self.root.join(key)
+    }
+
+    /// Best-effort directory fsync so a just-renamed entry is durable.
+    fn sync_root(&self) {
+        if let Ok(dir) = File::open(&self.root) {
+            let _ = dir.sync_all();
+        }
+    }
+
+    /// Durably write `body` to a fresh `<key>.tmp.<pid>.<seq>` sibling
+    /// and return its path — the write half shared by the rename
+    /// publish and the hard-link conditional publish, so the temp-name
+    /// convention and fsync ordering (what `sweep_internal` keys on)
+    /// live in one place.
+    fn write_tmp_durable(&self, key: &str, body: &[u8]) -> Result<PathBuf> {
+        let tmp = self.path(&format!(
+            "{key}.tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut file =
+            File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        file.write_all(body)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        file.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+        Ok(tmp)
+    }
+}
+
+impl StorageBackend for PosixBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Posix
+    }
+
+    fn reads_may_lag(&self) -> bool {
+        false
+    }
+
+    fn root(&self) -> String {
+        self.root.display().to_string()
+    }
+
+    fn ensure_root(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating shard dir {}", self.root.display()))
+    }
+
+    fn create_exclusive(&self, key: &str, body: &[u8]) -> Result<CreateOutcome> {
+        let path = self.path(key);
+        match File::options().write(true).create_new(true).open(&path) {
+            Ok(mut file) => {
+                file.write_all(body)
+                    .with_context(|| format!("writing {}", path.display()))?;
+                Ok(CreateOutcome::Created)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                Ok(CreateOutcome::AlreadyExists)
+            }
+            Err(e) => Err(e).with_context(|| format!("creating {}", path.display())),
+        }
+    }
+
+    fn publish_doc(&self, key: &str, body: &[u8]) -> Result<()> {
+        let target = self.path(key);
+        // write + fsync BEFORE the rename: a rename whose data blocks
+        // never hit disk would survive a crash as a garbage document
+        let tmp = self.write_tmp_durable(key, body)?;
+        std::fs::rename(&tmp, &target)
+            .with_context(|| format!("committing {}", target.display()))?;
+        self.sync_root();
+        Ok(())
+    }
+
+    fn publish_doc_if_absent(&self, key: &str, body: &[u8]) -> Result<CreateOutcome> {
+        let target = self.path(key);
+        // write + fsync a temp, then hard-link it into place: the link
+        // lands atomically iff the target is absent, so this is both
+        // create-exclusive AND never-partial/durable (unlike the plain
+        // O_EXCL create_exclusive used for crash-disposable claims)
+        let tmp = self.write_tmp_durable(key, body)?;
+        let outcome = match std::fs::hard_link(&tmp, &target) {
+            Ok(()) => {
+                self.sync_root();
+                Ok(CreateOutcome::Created)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                Ok(CreateOutcome::AlreadyExists)
+            }
+            // link(2) unsupported on this mount (CIFS/exFAT, some NFS
+            // server configs): fall back to O_EXCL create + write +
+            // fsync — still conditional and durable, at the cost of a
+            // briefly visible partial document, which manifest readers
+            // already ride out via their grace windows. Keeps fresh
+            // runs working everywhere v0.3's rename-based creation did.
+            Err(_) => match File::options().write(true).create_new(true).open(&target) {
+                Ok(mut file) => {
+                    file.write_all(body)
+                        .and_then(|()| file.sync_all())
+                        .with_context(|| format!("writing {}", target.display()))?;
+                    self.sync_root();
+                    Ok(CreateOutcome::Created)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    Ok(CreateOutcome::AlreadyExists)
+                }
+                Err(e) => Err(e).with_context(|| format!("creating {}", target.display())),
+            },
+        };
+        let _ = std::fs::remove_file(&tmp);
+        outcome
+    }
+
+    fn put_doc(&self, key: &str, body: &[u8]) -> Result<()> {
+        let path = self.path(key);
+        std::fs::write(&path, body).with_context(|| format!("writing {}", path.display()))
+    }
+
+    fn read_doc(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let path = self.path(key);
+        match std::fs::read(&path) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("reading {}", path.display())),
+        }
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        Ok(self.path(key).exists())
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let path = self.path(key);
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| format!("deleting {}", path.display())),
+        }
+    }
+
+    fn touch(&self, key: &str) {
+        // a pure mtime touch — never a content write and never `create`,
+        // so a zombie's heartbeat cannot truncate or resurrect a key a
+        // reclaimer now owns
+        if let Ok(file) = File::options().write(true).open(self.path(key)) {
+            let _ = file.set_modified(SystemTime::now());
+        }
+    }
+
+    fn liveness_age(&self, key: &str) -> Option<KeyAge> {
+        let meta = std::fs::metadata(self.path(key)).ok()?;
+        let mtime = meta.modified().ok()?;
+        Some(match mtime.elapsed() {
+            Ok(age) => KeyAge::Past(age),
+            // mtime in the observer's future by `skew`
+            Err(e) => KeyAge::Future(e.duration()),
+        })
+    }
+
+    fn remove_contended(&self, key: &str, winner_tag: &str) -> Result<bool> {
+        // rename-steal: of all contenders targeting the same key,
+        // exactly one rename succeeds
+        let stolen = self.path(&format!("{key}.{winner_tag}"));
+        if std::fs::rename(self.path(key), &stolen).is_ok() {
+            let _ = std::fs::remove_file(&stolen);
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)
+            .with_context(|| format!("listing {}", self.root.display()))?
+        {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else {
+                continue;
+            };
+            if name.starts_with(prefix) {
+                out.push(name.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn sweep_internal(&self, older_than: Duration) {
+        // crashed publishers leave one `<key>.tmp.<pid>.<seq>` per crash;
+        // live publishes hold theirs for milliseconds, so the stale
+        // window is a generous age bound
+        let Ok(entries) = std::fs::read_dir(&self.root) else {
+            return;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else {
+                continue;
+            };
+            if !name.contains(".tmp.") {
+                continue;
+            }
+            let old = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|m| m.elapsed().ok())
+                .is_some_and(|age| age > older_than);
+            if old {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+
+    fn create_stream(&self, key: &str, staged_tag: Option<&str>) -> Result<Box<dyn ShardStream>> {
+        let target = self.path(key);
+        let written = match staged_tag {
+            Some(tag) => self.path(&format!("{key}.{tag}")),
+            None => target.clone(),
+        };
+        let file = File::create(&written)
+            .with_context(|| format!("creating shard file {}", written.display()))?;
+        Ok(Box::new(PosixStream {
+            w: BufWriter::new(file),
+            written,
+            target,
+        }))
+    }
+
+    fn open_random(&self, key: &str) -> Result<Box<dyn RandomRead>> {
+        Ok(Box::new(FileRandom::open(self.path(key))?))
+    }
+
+    fn backdate(&self, key: &str, age: Duration) {
+        if let Ok(file) = File::options().write(true).open(self.path(key)) {
+            let _ = file.set_modified(SystemTime::now() - age);
+        }
+    }
+}
+
+struct PosixStream {
+    w: BufWriter<File>,
+    /// Where bytes land while writing (a `.tag` sibling when staged).
+    written: PathBuf,
+    /// The canonical path published at finish.
+    target: PathBuf,
+}
+
+impl ShardStream for PosixStream {
+    fn write_all(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w
+            .write_all(bytes)
+            .with_context(|| format!("writing {}", self.written.display()))
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<()> {
+        // flush + fsync BEFORE any rename: the level must not commit
+        // over shard data the kernel could not persist, and a staged
+        // file is only published after its bytes are durable
+        self.w
+            .flush()
+            .with_context(|| format!("flushing {}", self.written.display()))?;
+        self.w
+            .get_ref()
+            .sync_data()
+            .with_context(|| format!("syncing {}", self.written.display()))?;
+        if self.written != self.target {
+            std::fs::rename(&self.written, &self.target)
+                .with_context(|| format!("publishing shard file {}", self.target.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Positioned-read wrapper over one local file — the [`RandomRead`] of
+/// both backends (the object backend wraps it to bill ranged GETs), so
+/// the seek/read behavior cannot drift between them.
+pub(super) struct FileRandom {
+    file: File,
+    len: u64,
+    path: PathBuf,
+}
+
+impl FileRandom {
+    pub(super) fn open(path: PathBuf) -> Result<FileRandom> {
+        let file = File::open(&path)
+            .with_context(|| format!("opening shard file {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        Ok(FileRandom { file, len, path })
+    }
+}
+
+impl RandomRead for FileRandom {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn read_exact_at(&mut self, offset: u64, out: &mut [u8]) -> Result<()> {
+        self.file
+            .seek(SeekFrom::Start(offset))
+            .with_context(|| format!("seek to {offset} in {}", self.path.display()))?;
+        self.file
+            .read_exact(out)
+            .with_context(|| format!("read at {offset} in {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(tag: &str) -> (PosixBackend, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "bnsl_posix_backend_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let b = PosixBackend::new(&dir);
+        b.ensure_root().unwrap();
+        (b, dir)
+    }
+
+    #[test]
+    fn create_exclusive_has_one_winner_and_docs_roundtrip() {
+        let (b, dir) = store("excl");
+        assert_eq!(
+            b.create_exclusive("claim-00-0000.json", b"a").unwrap(),
+            CreateOutcome::Created
+        );
+        assert_eq!(
+            b.create_exclusive("claim-00-0000.json", b"b").unwrap(),
+            CreateOutcome::AlreadyExists
+        );
+        assert_eq!(
+            b.read_doc("claim-00-0000.json").unwrap().unwrap(),
+            b"a".to_vec(),
+            "the loser's body never lands"
+        );
+        assert_eq!(b.read_doc("absent").unwrap(), None);
+        assert!(b.exists("claim-00-0000.json").unwrap());
+        b.delete("claim-00-0000.json").unwrap();
+        b.delete("claim-00-0000.json").unwrap(); // idempotent
+        assert!(!b.exists("claim-00-0000.json").unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn publish_doc_is_atomic_and_leaves_no_temps() {
+        let (b, dir) = store("publish");
+        b.publish_doc("manifest.json", b"{\"v\": 1}").unwrap();
+        b.publish_doc("manifest.json", b"{\"v\": 2}").unwrap();
+        assert_eq!(
+            b.read_doc("manifest.json").unwrap().unwrap(),
+            b"{\"v\": 2}".to_vec()
+        );
+        let temps: Vec<String> = b.list("manifest.json.tmp.").unwrap();
+        assert!(temps.is_empty(), "no temp strays: {temps:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn publish_doc_if_absent_never_replaces() {
+        let (b, dir) = store("ifabsent");
+        assert_eq!(
+            b.publish_doc_if_absent("manifest.json", b"{\"v\": 1}").unwrap(),
+            CreateOutcome::Created
+        );
+        assert_eq!(
+            b.publish_doc_if_absent("manifest.json", b"{\"v\": 2}").unwrap(),
+            CreateOutcome::AlreadyExists
+        );
+        assert_eq!(
+            b.read_doc("manifest.json").unwrap().unwrap(),
+            b"{\"v\": 1}".to_vec(),
+            "an existing document is never replaced"
+        );
+        let temps = b.list("manifest.json.tmp.").unwrap();
+        assert!(temps.is_empty(), "no temp strays either way: {temps:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn remove_contended_has_exactly_one_winner() {
+        let (b, dir) = store("steal");
+        b.put_doc("claim-01-0001.json", b"{}").unwrap();
+        let wins: Vec<bool> = std::thread::scope(|scope| {
+            let b = &b;
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    scope.spawn(move || {
+                        b.remove_contended("claim-01-0001.json", &format!("stale-{i}-1"))
+                            .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(wins.iter().filter(|&&w| w).count(), 1, "{wins:?}");
+        assert!(!b.exists("claim-01-0001.json").unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn liveness_age_touch_and_backdate() {
+        let (b, dir) = store("age");
+        assert!(b.liveness_age("absent").is_none());
+        b.put_doc("claim-02-0000.json", b"{}").unwrap();
+        match b.liveness_age("claim-02-0000.json") {
+            Some(KeyAge::Past(age)) => assert!(age < Duration::from_secs(60), "{age:?}"),
+            other => panic!("fresh key should read as recent past: {other:?}"),
+        }
+        b.backdate("claim-02-0000.json", Duration::from_secs(3600));
+        match b.liveness_age("claim-02-0000.json") {
+            Some(KeyAge::Past(age)) => assert!(age >= Duration::from_secs(3000), "{age:?}"),
+            other => panic!("{other:?}"),
+        }
+        b.touch("claim-02-0000.json");
+        match b.liveness_age("claim-02-0000.json") {
+            Some(KeyAge::Past(age)) => assert!(age < Duration::from_secs(60), "{age:?}"),
+            other => panic!("{other:?}"),
+        }
+        // touching a missing key neither errors nor creates it
+        b.touch("absent");
+        assert!(!b.exists("absent").unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_internal_removes_only_aged_temps() {
+        let (b, dir) = store("sweep");
+        b.put_doc("manifest.json.tmp.99.0", b"{}").unwrap();
+        b.backdate("manifest.json.tmp.99.0", Duration::from_secs(3600));
+        b.put_doc("manifest.json.tmp.99.1", b"{}").unwrap(); // fresh
+        b.put_doc("manifest.json", b"{}").unwrap();
+        b.sweep_internal(Duration::from_secs(60));
+        assert!(!b.exists("manifest.json.tmp.99.0").unwrap(), "aged temp swept");
+        assert!(b.exists("manifest.json.tmp.99.1").unwrap(), "fresh temp kept");
+        assert!(b.exists("manifest.json").unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn staged_stream_publishes_only_at_finish() {
+        let (b, dir) = store("stream");
+        let mut w = b
+            .create_stream("level_01_shard_0000.qr", Some("host-0001-7-0"))
+            .unwrap();
+        w.write_all(b"0123456789abcdef").unwrap();
+        assert!(!b.exists("level_01_shard_0000.qr").unwrap(), "not yet published");
+        w.finish().unwrap();
+        assert!(b.exists("level_01_shard_0000.qr").unwrap());
+        let mut r = b.open_random("level_01_shard_0000.qr").unwrap();
+        assert_eq!(r.len(), 16);
+        let mut buf = [0u8; 6];
+        r.read_exact_at(10, &mut buf).unwrap();
+        assert_eq!(&buf, b"abcdef");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -629,6 +629,9 @@ pub fn solve_sharded<M: VarMask>(
     // previous level plus its 3 writer streams; fail up front with the
     // remedy instead of dying mid-level on EMFILE. The same budget is
     // surfaced ahead of time by `plan::sharded_plan` / `bnsl info`.
+    // This applies to BOTH backends: the object backend's *bill* is in
+    // requests (`plan::ShardedPlan::object_requests`), but its local
+    // simulator still holds one real descriptor per open stream/reader.
     let fds_needed = crate::coordinator::shard::fd_budget(workers, run.shards, false);
     if let Some(limit) = crate::coordinator::shard::fd_soft_limit() {
         if fds_needed > limit {
@@ -847,6 +850,7 @@ pub fn solve_clustered<M: VarMask>(
     };
     // Cluster hosts additionally open claim/done/finish/manifest files
     // from inside the level loop; the budget prices that headroom too.
+    // Both backends again: the object simulator is local-fd-backed.
     let fds_needed = crate::coordinator::shard::fd_budget(workers, run.shards, true);
     if let Some(limit) = crate::coordinator::shard::fd_soft_limit() {
         if fds_needed > limit {
@@ -859,7 +863,7 @@ pub fn solve_clustered<M: VarMask>(
             );
         }
     }
-    let ledger = ClaimLedger::new(run.dir(), options.host_id, options.heartbeat);
+    let ledger = ClaimLedger::new(run.store().clone(), options.host_id, options.heartbeat);
     let mut stats = SolveStats {
         traversals: 1,
         resumed_levels: run.completed.map_or(0, |k| k as u32 + 1),
@@ -884,7 +888,7 @@ pub fn solve_clustered<M: VarMask>(
         // a faster host may already have carried the run past this level
         // while we were joining or lagging — skip straight ahead (but
         // still honour this host's own time-box on the way through)
-        if committed_level(run.dir()).is_some_and(|c| c >= k1 as i64) {
+        if committed_level(run.store()).is_some_and(|c| c >= k1 as i64) {
             run.completed = Some(k1);
             if options.shard.stop_after_level == Some(k1) && k1 < p {
                 stats.wall = start.elapsed();
@@ -925,7 +929,7 @@ pub fn solve_clustered<M: VarMask>(
         let committed_here = barrier_commit(&mut run, &ledger, &spec1, k1, options)?;
         if committed_here && k1 >= 1 && !options.shard.keep_levels {
             run.prune_level(k1 - 1);
-            cleanup_level(run.dir(), k1 - 1, true);
+            cleanup_level(run.store(), k1 - 1, true);
         }
         if options.shard.stop_after_level == Some(k1) && k1 < p {
             stats.wall = start.elapsed();
@@ -941,7 +945,7 @@ pub fn solve_clustered<M: VarMask>(
     // manifest check that precedes every ledger read). No frontier
     // prune: level p's .qr record is the run's final score.
     if !options.shard.keep_levels {
-        cleanup_level(run.dir(), p, false);
+        cleanup_level(run.store(), p, false);
     }
     let log_score = final_score::<M>(&run)?;
     let (network, order) = reconstruct_from_disk::<M>(&run, &binom)?;
@@ -1021,7 +1025,7 @@ fn cluster_level_worker<M: VarMask>(
                                 // commit's mid-rename window)
                                 ledger.release(&claim);
                                 if committed_level_patient(
-                                    run.dir(),
+                                    run.store(),
                                     options.stale_after(),
                                     options.poll,
                                 )
@@ -1127,7 +1131,7 @@ fn cluster_level_worker<M: VarMask>(
                             // (Patient read: a single mid-rename manifest
                             // miss must not turn this rejoin into a crash.)
                             if committed_level_patient(
-                                run.dir(),
+                                run.store(),
                                 options.stale_after(),
                                 options.poll,
                             )
@@ -1150,7 +1154,7 @@ fn cluster_level_worker<M: VarMask>(
             // idle pass: every remaining shard is someone else's — watch
             // for the whole level being superseded (committed and its
             // ledger cleaned) so a laggard cannot wedge here
-            if committed_level(run.dir()).is_some_and(|c| c >= k1 as i64) {
+            if committed_level(run.store()).is_some_and(|c| c >= k1 as i64) {
                 break 'level;
             }
             std::thread::sleep(options.poll);

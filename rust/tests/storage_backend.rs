@@ -1,0 +1,389 @@
+//! Storage-backend matrix integration (ISSUE 4): the sharded and
+//! clustered solvers must produce **byte-identical** results whether the
+//! coordinator runs on the POSIX backend or the S3-semantics object
+//! backend — including through a stale-claim reclaim injected into the
+//! object run — and the CLI must wire `--backend` end to end. (The
+//! multi-*process* kill-and-restart path runs in CI for both backends
+//! via `tools/cluster_smoke.sh`.)
+
+use bnsl::coordinator::cluster::ClusterOptions;
+use bnsl::coordinator::shard::ShardOptions;
+use bnsl::coordinator::storage::{
+    BackendKind, ObjectBackend, ObjectFaults, StorageBackend,
+};
+use bnsl::data::synth;
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::solver::{solve_clustered, solve_sharded, LeveledSolver, ShardOutcome, SolveResult};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bnsl_storage_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn copts(
+    dir: &Path,
+    backend: BackendKind,
+    shards: usize,
+    host_id: usize,
+    stop: Option<usize>,
+) -> ClusterOptions {
+    ClusterOptions {
+        shard: ShardOptions {
+            shards,
+            dir: dir.to_path_buf(),
+            stop_after_level: stop,
+            hosts: 2,
+            backend,
+            ..Default::default()
+        },
+        host_id,
+        heartbeat: Duration::from_secs(2),
+        poll: Duration::from_millis(2),
+    }
+}
+
+fn complete(outcome: ShardOutcome) -> SolveResult {
+    match outcome {
+        ShardOutcome::Complete(r) => r,
+        ShardOutcome::Checkpointed { level, .. } => {
+            panic!("expected a finished solve, got a checkpoint at level {level}")
+        }
+    }
+}
+
+fn run_hosts(
+    engine: &NativeEngine,
+    dir: &Path,
+    backend: BackendKind,
+    shards: usize,
+    hosts: usize,
+    stop: Option<usize>,
+) -> Vec<ShardOutcome> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..hosts)
+            .map(|host| {
+                let opts = copts(dir, backend, shards, host, stop);
+                scope.spawn(move || solve_clustered::<u32>(engine, &opts).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+fn binom(p: u64, k: u64) -> u64 {
+    let mut c = 1u64;
+    for i in 0..k {
+        c = c * (p - i) / (i + 1);
+    }
+    c
+}
+
+/// Single-host sharded solves agree bit for bit across backends and with
+/// the resident solver, and an object-backend checkpoint resumes on the
+/// object backend.
+#[test]
+fn sharded_solve_is_bit_identical_across_backends() {
+    let p = 10;
+    let d = synth::random(p, 70, 3, &mut bnsl::util::rng::Rng::new(31));
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let baseline = LeveledSolver::new(&e).solve();
+    let mut results = Vec::new();
+    for backend in [BackendKind::Posix, BackendKind::Object] {
+        let dir = tmpdir(&format!("sharded_{}", backend.name()));
+        let r = complete(
+            solve_sharded::<u32>(
+                &e,
+                &ShardOptions {
+                    shards: 4,
+                    dir: dir.clone(),
+                    backend,
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+        assert_eq!(
+            baseline.log_score.to_bits(),
+            r.log_score.to_bits(),
+            "{}: bit-identical to the resident solver",
+            backend.name()
+        );
+        assert_eq!(baseline.network, r.network, "{}", backend.name());
+        assert_eq!(baseline.order, r.order, "{}", backend.name());
+        results.push(r);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert_eq!(
+        results[0].stats.score_evals, results[1].stats.score_evals,
+        "identical work across backends"
+    );
+
+    // object checkpoint → object resume
+    let dir = tmpdir("object_ckpt");
+    let opts = |stop| ShardOptions {
+        shards: 2,
+        dir: dir.clone(),
+        backend: BackendKind::Object,
+        stop_after_level: stop,
+        ..Default::default()
+    };
+    match solve_sharded::<u32>(&e, &opts(Some(4))).unwrap() {
+        ShardOutcome::Checkpointed { level, .. } => assert_eq!(level, 4),
+        ShardOutcome::Complete(_) => panic!("expected a checkpoint"),
+    }
+    let resumed = complete(
+        solve_sharded::<u32>(
+            &e,
+            &ShardOptions {
+                shards: 0, // geometry from the manifest
+                dir: dir.clone(),
+                backend: BackendKind::Object,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    assert_eq!(baseline.log_score.to_bits(), resumed.log_score.to_bits());
+    assert_eq!(baseline.network, resumed.network);
+    assert!(
+        resumed.stats.resumed_levels >= 5,
+        "committed levels reused: {}",
+        resumed.stats.resumed_levels
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The ISSUE 4 acceptance criterion: a p = 12 clustered solve on the
+/// object backend — two in-process hosts, with one stale-claim reclaim
+/// injected mid-run (a forged dead host's claim plus its garbage staged
+/// upload) — produces scores byte-identical to the POSIX-backend cluster
+/// and to the plain `LeveledSolver`, with every subset scored exactly
+/// once across the cluster.
+#[test]
+fn p12_clustered_object_solve_with_injected_reclaim_is_bit_identical() {
+    let p = 12;
+    let d = synth::random(p, 80, 3, &mut bnsl::util::rng::Rng::new(2024));
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let baseline = LeveledSolver::new(&e).solve();
+
+    // reference: two-host POSIX cluster
+    let posix_dir = tmpdir("accept_posix");
+    let posix_results: Vec<SolveResult> =
+        run_hosts(&e, &posix_dir, BackendKind::Posix, 4, 2, None)
+            .into_iter()
+            .map(complete)
+            .collect();
+    for r in &posix_results {
+        assert_eq!(baseline.log_score.to_bits(), r.log_score.to_bits());
+        assert_eq!(baseline.network, r.network);
+    }
+
+    // object cluster, phase 1: both hosts checkpoint at level 3
+    let dir = tmpdir("accept_object");
+    for outcome in run_hosts(&e, &dir, BackendKind::Object, 4, 2, Some(3)) {
+        match outcome {
+            ShardOutcome::Checkpointed { level, .. } => assert_eq!(level, 3),
+            ShardOutcome::Complete(_) => panic!("expected a checkpoint"),
+        }
+    }
+    // inject the reclaim: a claim whose owner (host 9) died an hour ago,
+    // plus the partial staged upload it left behind
+    let store = ObjectBackend::with_faults(&dir, ObjectFaults::default());
+    store
+        .create_exclusive(
+            "claim-04-0001.json",
+            b"{\"format\": 1, \"level\": 4, \"shard\": 1, \"host\": 9, \
+              \"pid\": 1, \"heartbeat_secs\": 2}",
+        )
+        .unwrap();
+    store.backdate("claim-04-0001.json", Duration::from_secs(3600));
+    store
+        .put_doc(
+            "level_04_shard_0001.qr.host-0009-1-0",
+            b"partial garbage from a dead writer",
+        )
+        .unwrap();
+
+    // phase 2: two hosts finish the run, stealing the forged claim
+    let results: Vec<SolveResult> = run_hosts(&e, &dir, BackendKind::Object, 4, 2, None)
+        .into_iter()
+        .map(complete)
+        .collect();
+    for (host, r) in results.iter().enumerate() {
+        assert_eq!(
+            baseline.log_score.to_bits(),
+            r.log_score.to_bits(),
+            "host {host}: object cluster bit-identical to LeveledSolver"
+        );
+        assert_eq!(
+            posix_results[0].log_score.to_bits(),
+            r.log_score.to_bits(),
+            "host {host}: object cluster bit-identical to the POSIX cluster"
+        );
+        assert_eq!(baseline.network, r.network, "host {host}");
+        assert_eq!(baseline.order, r.order, "host {host}");
+    }
+    // exactly-once work across the cluster: only the uncommitted levels
+    // were scored, the reclaimed shard exactly once
+    let total: u64 = results.iter().map(|r| r.stats.score_evals).sum();
+    let expected: u64 = (4..=p as u64).map(|k| binom(p as u64, k)).sum();
+    assert_eq!(total, expected, "reclaim did not duplicate work");
+    // the forged claim and garbage staged upload are gone
+    assert!(!store.exists("claim-04-0001.json").unwrap(), "claim reclaimed");
+    assert!(
+        !store
+            .exists("level_04_shard_0001.qr.host-0009-1-0")
+            .unwrap(),
+        "staged stray cleaned"
+    );
+    let leftovers: Vec<String> = store
+        .list("claim-")
+        .unwrap()
+        .into_iter()
+        .chain(store.list("finish-").unwrap())
+        .collect();
+    assert!(leftovers.is_empty(), "ledger cleaned: {leftovers:?}");
+    let _ = std::fs::remove_dir_all(&posix_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A run directory is **bound** to the backend that created it: the
+/// manifest records the binding, a mismatched resume/join is rejected
+/// up front with the flag to use (mixed backends judge liveness by
+/// different stamps — mtime vs. heartbeat metadata — so a silent mix
+/// would spuriously steal live claims), and the matching resume
+/// finishes bit-identically.
+#[test]
+fn run_directories_are_bound_to_their_backend() {
+    let d = synth::random(9, 60, 3, &mut bnsl::util::rng::Rng::new(5));
+    let e = NativeEngine::new(&d, ScoreKind::Bic);
+    let baseline = LeveledSolver::new(&e).solve();
+    let dir = tmpdir("bound");
+    let outcome = solve_sharded::<u32>(
+        &e,
+        &ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            backend: BackendKind::Posix,
+            stop_after_level: Some(3),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(matches!(outcome, ShardOutcome::Checkpointed { level: 3, .. }));
+    // resuming the POSIX run through the object backend is refused
+    let err = solve_sharded::<u32>(
+        &e,
+        &ShardOptions {
+            shards: 0,
+            dir: dir.clone(),
+            backend: BackendKind::Object,
+            ..Default::default()
+        },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("--backend posix"), "{err}");
+    assert!(err.contains("bound"), "{err}");
+    // the matching backend resumes and finishes bit-identically
+    let r = complete(
+        solve_sharded::<u32>(
+            &e,
+            &ShardOptions {
+                shards: 0,
+                dir: dir.clone(),
+                backend: BackendKind::Posix,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    assert_eq!(baseline.log_score.to_bits(), r.log_score.to_bits());
+    assert_eq!(baseline.network, r.network);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CLI wiring: `--backend object` drives the object coordinator end to
+/// end and emits a record byte-identical to the POSIX run's; misuse of
+/// the flag is rejected up front.
+#[test]
+fn cli_backend_object_roundtrip_and_validation() {
+    let base = tmpdir("cli");
+    std::fs::create_dir_all(&base).unwrap();
+    let learn = |backend: &str, sub: &str| -> String {
+        let out = base.join(format!("net_{backend}.json"));
+        bnsl::cli::run(vec![
+            "learn".into(),
+            "--network".into(),
+            "asia".into(),
+            "--n".into(),
+            "120".into(),
+            "--shards".into(),
+            "2".into(),
+            "--backend".into(),
+            backend.into(),
+            "--shard-dir".into(),
+            base.join(sub).to_string_lossy().into_owned(),
+            "--out".into(),
+            out.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        std::fs::read_to_string(&out).unwrap()
+    };
+    let posix_out = learn("posix", "run_posix");
+    let object_out = learn("object", "run_object");
+    let score_line = |text: &str| -> String {
+        text.lines()
+            .find(|l| l.contains("\"log_score\""))
+            .expect("log_score line")
+            .trim()
+            .to_string()
+    };
+    assert_eq!(
+        score_line(&posix_out),
+        score_line(&object_out),
+        "identical score record across backends"
+    );
+    assert!(
+        base.join("run_object").join("manifest.json").exists(),
+        "object run mirrors the file layout"
+    );
+
+    // --backend without the sharded coordinator is rejected
+    let err = bnsl::cli::run(vec![
+        "learn".into(),
+        "--network".into(),
+        "asia".into(),
+        "--n".into(),
+        "40".into(),
+        "--backend".into(),
+        "object".into(),
+    ])
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("--backend"), "{err}");
+    assert!(err.contains("--shards"), "{err}");
+    // unknown backends are rejected by name
+    let err = bnsl::cli::run(vec![
+        "learn".into(),
+        "--network".into(),
+        "asia".into(),
+        "--n".into(),
+        "40".into(),
+        "--shards".into(),
+        "2".into(),
+        "--backend".into(),
+        "s3".into(),
+        "--shard-dir".into(),
+        base.join("bad").to_string_lossy().into_owned(),
+    ])
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("posix"), "{err}");
+    assert!(err.contains("s3"), "{err}");
+    let _ = std::fs::remove_dir_all(&base);
+}

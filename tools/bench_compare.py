@@ -1,0 +1,252 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate: diff a fresh BENCH_ci.json against the
+committed BENCH_baseline.json and fail on regressions.
+
+Usage:
+    tools/bench_compare.py [CURRENT] [BASELINE] [options]
+    tools/bench_compare.py --self-test
+
+    CURRENT   fresh bench output   (default BENCH_ci.json)
+    BASELINE  committed reference  (default BENCH_baseline.json)
+
+Options:
+    --tolerance-wall X   relative wall-time tolerance   (default 0.25)
+    --tolerance-heap X   relative heap-peak tolerance   (default 0.25)
+    --update             overwrite BASELINE with CURRENT's values
+                         (preserving the baseline's _tolerances block)
+    --self-test          run the gate against synthetic documents: a
+                         >25% regression must fail, a 10% wobble must
+                         pass, and a missing bench must fail. Run in CI
+                         so the gate itself cannot silently rot.
+
+Exit status: 0 = no regression, 1 = regression / missing bench /
+unreadable input.
+
+Metric classes and where they come from (schema bnsl-bench-smoke/1,
+assembled by tools/bench_smoke.sh):
+
+    levels.<metric>       from the `levels` bench record
+    spill.p<P>.<metric>   one per row of the `spill` experiment record
+
+Wall-clock metrics are compared with --tolerance-wall (shared CI runners
+are noisy); heap peaks come from the deterministic tracking allocator
+and get --tolerance-heap. A baseline value of null means "not yet
+calibrated on the CI fleet": the metric must still EXIST in CURRENT
+(missing benches fail — that is the partial-artifact guard) but its
+value is not compared. Calibrate and arm the gate with one command:
+
+    bash tools/bench_smoke.sh BENCH_ci.json && \
+        python3 tools/bench_compare.py BENCH_ci.json BENCH_baseline.json --update
+
+then commit the updated BENCH_baseline.json.
+"""
+
+import json
+import sys
+
+WALL = "wall"
+HEAP = "heap"
+
+# metric name -> class, per section (explicit allowlists: analytic
+# fields like plan_peak_bytes are identical across runs and not gated)
+LEVELS_METRICS = {
+    "narrow_ns_per_subset": WALL,
+    "wide_ns_per_subset": WALL,
+    "wide_spill_ns_per_subset": WALL,
+    "heap_peak_bytes": HEAP,
+}
+SPILL_METRICS = {
+    "time_plain": WALL,
+    "time_spill": WALL,
+    "mem_plain": HEAP,
+    "mem_spill": HEAP,
+}
+
+
+def flatten(doc):
+    """{metric_name: (value_or_None, class)} for one bench document."""
+    out = {}
+    levels = doc.get("levels") or {}
+    for name, cls in LEVELS_METRICS.items():
+        if name in levels:
+            out[f"levels.{name}"] = (levels[name], cls)
+    spill = doc.get("spill") or {}
+    for row in spill.get("rows", []):
+        p = row.get("p")
+        if p is None:
+            continue
+        for name, cls in SPILL_METRICS.items():
+            if name in row:
+                out[f"spill.p{p}.{name}"] = (row[name], cls)
+    return out
+
+
+def compare(current_doc, baseline_doc, tolerances):
+    """Return (failures, notes). failures non-empty => exit 1."""
+    current = flatten(current_doc)
+    baseline = flatten(baseline_doc)
+    failures, notes = [], []
+    for name, (base_value, cls) in sorted(baseline.items()):
+        if name not in current:
+            failures.append(
+                f"{name}: present in the baseline but missing from the fresh "
+                f"run — a bench failed or produced a partial artifact"
+            )
+            continue
+        cur_value, _ = current[name]
+        if base_value is None:
+            notes.append(f"{name}: baseline uncalibrated (null) — presence checked only")
+            continue
+        if not isinstance(cur_value, (int, float)) or isinstance(cur_value, bool):
+            failures.append(f"{name}: fresh value {cur_value!r} is not a number")
+            continue
+        tol = tolerances[cls]
+        limit = base_value * (1.0 + tol)
+        ratio = (cur_value / base_value - 1.0) if base_value else 0.0
+        if cur_value > limit:
+            failures.append(
+                f"{name}: {cur_value:.6g} vs baseline {base_value:.6g} "
+                f"({ratio:+.1%} > +{tol:.0%} {cls} tolerance)"
+            )
+        elif ratio < -tol:
+            notes.append(
+                f"{name}: improved {ratio:+.1%} — consider re-baselining "
+                f"(tools/bench_compare.py --update)"
+            )
+        else:
+            notes.append(f"{name}: {ratio:+.1%} (ok)")
+    for name in sorted(set(current) - set(baseline)):
+        notes.append(f"{name}: new metric, not in the baseline yet")
+    return failures, notes
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+def update_baseline(current_doc, baseline_path):
+    try:
+        with open(baseline_path) as f:
+            old = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        old = {}
+    new = dict(current_doc)
+    new["_comment"] = (
+        "Perf baseline for tools/bench_compare.py (CI bench-smoke gate). "
+        "Refresh with: bash tools/bench_smoke.sh BENCH_ci.json && "
+        "python3 tools/bench_compare.py BENCH_ci.json BENCH_baseline.json --update"
+    )
+    if "_tolerances" in old:
+        new["_tolerances"] = old["_tolerances"]
+    with open(baseline_path, "w") as f:
+        json.dump(new, f, indent=2)
+        f.write("\n")
+    print(f"baseline updated: {baseline_path}")
+
+
+def self_test():
+    base = {
+        "levels": {
+            "narrow_ns_per_subset": 100.0,
+            "wide_ns_per_subset": 110.0,
+            "heap_peak_bytes": 1_000_000,
+        },
+        "spill": {"rows": [{"p": 14, "time_plain": 1.0, "mem_plain": 500_000}]},
+    }
+    tol = {WALL: 0.25, HEAP: 0.25}
+
+    # a 10% wobble passes
+    ok = json.loads(json.dumps(base))
+    ok["levels"]["narrow_ns_per_subset"] = 110.0
+    failures, _ = compare(ok, base, tol)
+    assert not failures, f"10% wobble must pass: {failures}"
+
+    # a >25% wall regression fails
+    bad = json.loads(json.dumps(base))
+    bad["spill"]["rows"][0]["time_plain"] = 1.30
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a 30% wall regression must fail"
+
+    # a >25% heap regression fails
+    bad = json.loads(json.dumps(base))
+    bad["levels"]["heap_peak_bytes"] = 1_300_000
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a 30% heap regression must fail"
+
+    # a bench that vanished (partial artifact) fails
+    partial = json.loads(json.dumps(base))
+    del partial["spill"]
+    failures, _ = compare(partial, base, tol)
+    assert failures, "a missing bench must fail"
+
+    # an uncalibrated (null) baseline checks presence but not value
+    nulls = json.loads(json.dumps(base))
+    nulls["levels"]["narrow_ns_per_subset"] = None
+    huge = json.loads(json.dumps(base))
+    huge["levels"]["narrow_ns_per_subset"] = 10_000.0
+    failures, _ = compare(huge, nulls, tol)
+    assert not failures, f"null baseline must not gate values: {failures}"
+    failures, _ = compare(partial, nulls, tol)
+    assert failures, "null baseline must still require the bench to exist"
+
+    print("self-test OK: the gate fails >25% regressions and partial artifacts")
+
+
+def main(argv):
+    positional, flags = [], {}
+    it = iter(argv)
+    for arg in it:
+        if arg == "--self-test":
+            flags["self_test"] = True
+        elif arg == "--update":
+            flags["update"] = True
+        elif arg in ("--tolerance-wall", "--tolerance-heap"):
+            flags[arg.lstrip("-").replace("-", "_")] = float(next(it))
+        else:
+            positional.append(arg)
+    if flags.get("self_test"):
+        self_test()
+        return 0
+    current_path = positional[0] if positional else "BENCH_ci.json"
+    baseline_path = positional[1] if len(positional) > 1 else "BENCH_baseline.json"
+    current_doc = load(current_path)
+    if flags.get("update"):
+        update_baseline(current_doc, baseline_path)
+        return 0
+    baseline_doc = load(baseline_path)
+    tolerances = {WALL: 0.25, HEAP: 0.25}
+    for cls, override in (baseline_doc.get("_tolerances") or {}).items():
+        if cls in tolerances:
+            tolerances[cls] = float(override)
+    if "tolerance_wall" in flags:
+        tolerances[WALL] = flags["tolerance_wall"]
+    if "tolerance_heap" in flags:
+        tolerances[HEAP] = flags["tolerance_heap"]
+    failures, notes = compare(current_doc, baseline_doc, tolerances)
+    for note in notes:
+        print(f"  {note}")
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} perf regression(s) beyond tolerance "
+            f"(wall +{tolerances[WALL]:.0%}, heap +{tolerances[HEAP]:.0%}):",
+            file=sys.stderr,
+        )
+        for failure in failures:
+            print(f"  {failure}", file=sys.stderr)
+        print(
+            "\nIf this change intentionally trades speed/memory, re-baseline "
+            "with tools/bench_compare.py --update and commit the result.",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"OK: no regression beyond tolerance across {len(flatten(baseline_doc))} metrics")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -2,31 +2,60 @@
 # Quick-mode perf smoke (CI `bench-smoke` job; runnable locally): run the
 # `levels` and `spill` benches at CI-sized configurations and assemble
 # BENCH_ci.json — wall time + memtrack heap peak per configuration — so
-# the repo's perf trajectory finally accumulates data points as an
-# uploaded artifact per commit.
+# the repo's perf trajectory accumulates data points as an uploaded
+# artifact per commit (and tools/bench_compare.py gates regressions
+# against the committed BENCH_baseline.json).
+#
+# Failure honesty: a bench exiting nonzero must fail the job, and a
+# stale record from an earlier run must never be assembled into the
+# artifact as if it were fresh — so stale outputs are removed up front,
+# every bench's exit code is checked by name, and the JSON-assembly step
+# re-validates that both inputs exist before writing the artifact.
 #
 # Usage: tools/bench_smoke.sh [out.json]   (default BENCH_ci.json)
 set -euo pipefail
 
 OUT="${1:-BENCH_ci.json}"
 
+LEVELS_JSON="bench_levels.json"
+SPILL_JSON="results/spill.json"
+
+# never assemble a stale record into a "fresh" artifact
+rm -f "$OUT" "$LEVELS_JSON" "$SPILL_JSON"
+
 # levels: full analytic plan at p = 20 + a quick timed u32-vs-u64 race
 export BNSL_P=20 BNSL_SOLVE_P=14 BNSL_N=64
-export BNSL_BENCH_JSON="bench_levels.json"
+export BNSL_BENCH_JSON="$LEVELS_JSON"
 # spill: two small configurations through the §5.3 disk path
 export BNSL_PMIN=14 BNSL_PMAX=15 BNSL_THRESHOLD=0.5
 
-cargo bench --bench levels
-cargo bench --bench spill
-
-python3 - "$OUT" <<'EOF'
-import json, sys, pathlib
-
-doc = {
-    "schema": "bnsl-bench-smoke/1",
-    "levels": json.load(open("bench_levels.json")),
-    "spill": json.load(open("results/spill.json")),
+run_bench() {
+    local name="$1" expect="$2"
+    if ! cargo bench --bench "$name"; then
+        echo "FAIL: bench '$name' exited nonzero — no artifact will be assembled" >&2
+        exit 1
+    fi
+    if [ ! -s "$expect" ]; then
+        echo "FAIL: bench '$name' exited 0 but did not write $expect" >&2
+        exit 1
+    fi
 }
-pathlib.Path(sys.argv[1]).write_text(json.dumps(doc, indent=2) + "\n")
-print(f"wrote {sys.argv[1]}")
+
+run_bench levels "$LEVELS_JSON"
+run_bench spill "$SPILL_JSON"
+
+python3 - "$OUT" "$LEVELS_JSON" "$SPILL_JSON" <<'EOF'
+import json, pathlib, sys
+
+out, levels_path, spill_path = sys.argv[1:4]
+doc = {"schema": "bnsl-bench-smoke/1"}
+for key, path in (("levels", levels_path), ("spill", spill_path)):
+    try:
+        with open(path) as f:
+            doc[key] = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: bench record {path} unreadable: {e}", file=sys.stderr)
+        sys.exit(1)
+pathlib.Path(out).write_text(json.dumps(doc, indent=2) + "\n")
+print(f"wrote {out}")
 EOF

@@ -9,10 +9,21 @@
 #   4. all three emitted scores must be BIT-identical (compared as the
 #      f64's little-endian bytes, not as decimal text)
 #
-# Usage: tools/cluster_smoke.sh [path/to/bnsl]   (default target/release/bnsl)
+# The whole scenario runs on either storage backend: `posix` exercises
+# O_EXCL/rename/mtime on the local filesystem, `object` the S3-semantics
+# simulator (conditional-PUT claims, heartbeat metadata keys, staged
+# upload-then-copy publication). CI runs a matrix over both.
+#
+# Usage: tools/cluster_smoke.sh [path/to/bnsl] [posix|object]
+#        (defaults: target/release/bnsl, posix)
 set -euo pipefail
 
 BNSL="${1:-target/release/bnsl}"
+BACKEND="${2:-posix}"
+case "$BACKEND" in
+    posix|object) ;;
+    *) echo "unknown backend '$BACKEND' (expected posix|object)" >&2; exit 2 ;;
+esac
 WORK="$(mktemp -d)"
 trap 'rm -rf "$WORK"' EXIT
 
@@ -21,11 +32,11 @@ trap 'rm -rf "$WORK"' EXIT
 # the SIGKILL lands mid-level.
 DATA=(--network alarm --p 14 --n 2000 --seed 7)
 CLUSTER=(--cluster --hosts 2 --shards 4 --heartbeat-secs 1
-         --shard-dir "$WORK/run")
+         --backend "$BACKEND" --shard-dir "$WORK/run")
 
-echo "== reference: single-process sharded run =="
-"$BNSL" learn "${DATA[@]}" --shards 4 --shard-dir "$WORK/ref" \
-    --out "$WORK/ref.json"
+echo "== reference: single-process sharded run (backend: $BACKEND) =="
+"$BNSL" learn "${DATA[@]}" --shards 4 --backend "$BACKEND" \
+    --shard-dir "$WORK/ref" --out "$WORK/ref.json"
 
 echo "== cluster: two hosts, host 1 SIGKILLed mid-run =="
 "$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 0 \
@@ -61,7 +72,7 @@ echo "ref    = $REF"
 echo "host 0 = $A"
 echo "host 1 = $B"
 if [ "$REF" != "$A" ] || [ "$REF" != "$B" ]; then
-    echo "FAIL: cluster scores diverge from the single-process reference" >&2
+    echo "FAIL ($BACKEND): cluster scores diverge from the single-process reference" >&2
     exit 1
 fi
-echo "OK: survivor, restarted host and single-process reference are bit-identical"
+echo "OK ($BACKEND): survivor, restarted host and single-process reference are bit-identical"
