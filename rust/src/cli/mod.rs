@@ -6,7 +6,10 @@
 //! * `sample`   — forward-sample an embedded network to CSV
 //! * `exp ...`  — the paper's experiment harnesses (table2, stability,
 //!   levels, large, spill, complexity)
-//! * `info`     — environment/runtime diagnostics
+//! * `serve`    — the multi-tenant job service ([`crate::service`])
+//! * `submit`/`status`/`cancel` — the matching HTTP client
+//! * `info`     — environment/runtime diagnostics (`--json` for the
+//!   stable plan schema)
 
 mod args;
 pub mod exp;
@@ -25,6 +28,7 @@ use crate::solver::{
     solve_clustered, solve_sharded, LeveledSolver, ShardOutcome, SilanderSolver, SolveOptions,
     SolveResult,
 };
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 use std::time::Duration;
@@ -57,13 +61,35 @@ USAGE:
               must agree, results stay bit-identical across backends;
               hillclimb/hybrid: p <= 64
   bnsl sample --network asia|alarm|sachs --n N [--seed S] --out data.csv
+  bnsl serve  [--port 7878] [--addr 127.0.0.1] [--jobs-dir bnsl_jobs]
+              [--max-concurrent 2] [--max-queue 64] [--backend posix|object]
+              [--ram-budget-mb MB] [--fd-budget N] [--request-budget N]
+              [--http-threads 4] [--data-root DIR]
+              the job service: POST /v1/jobs (inline CSV, or a server
+              path confined to --data-root — without one, path
+              submissions are rejected),
+              GET /v1/jobs/ID (state machine queued|planning|running|
+              done|failed|cancelled + live level progress), GET
+              /v1/jobs/ID/result (bit-identical to a direct run), DELETE
+              /v1/jobs/ID (cooperative cancel), GET /v1/healthz, GET
+              /v1/stats; identical submissions dedupe onto one solve and
+              finished fingerprints are served from the result cache;
+              over-budget jobs are rejected with the plan verdict;
+              SIGTERM drains — running solves checkpoint at the next
+              level boundary and the next `bnsl serve` resumes them
+  bnsl submit --server HOST:PORT --data file.csv [--p P] [--score S]
+              [--shards N] [--threads T] [--batch B]
+              [--wait [--out result.json] [--poll-ms 200] [--timeout-secs 3600]]
+              prints the job id on stdout; --wait polls to completion
+  bnsl status --server HOST:PORT --job ID
+  bnsl cancel --server HOST:PORT --job ID
   bnsl exp table2     [--pmin 14] [--pmax 18] [--runs 3]  [--n 200] [--threads T]
   bnsl exp stability  [--ps 12,14,16] [--runs 10] [--n 200]
   bnsl exp levels     [--p 29] [--threshold 0.5]
   bnsl exp large      [--p 20] [--n 200]          (paper Fig. 6 uses --p 28)
   bnsl exp spill      [--pmin 14] [--pmax 16] [--threshold 0.5]
   bnsl exp complexity [--pmin 8] [--pmax 12]
-  bnsl info           [--artifacts DIR]
+  bnsl info           [--artifacts DIR] [--json]
 
 All experiment commands write JSON records to --out-dir (default results/).
 ";
@@ -78,7 +104,11 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "learn" => cmd_learn(Args::parse(rest.to_vec(), &["dot", "cluster"])?),
         "sample" => cmd_sample(Args::parse(rest.to_vec(), &[])?),
         "exp" => cmd_exp(rest),
-        "info" => cmd_info(Args::parse(rest.to_vec(), &[])?),
+        "serve" => cmd_serve(Args::parse(rest.to_vec(), &[])?),
+        "submit" => cmd_submit(Args::parse(rest.to_vec(), &["wait"])?),
+        "status" => cmd_status(Args::parse(rest.to_vec(), &[])?),
+        "cancel" => cmd_cancel(Args::parse(rest.to_vec(), &[])?),
+        "info" => cmd_info(Args::parse(rest.to_vec(), &["json"])?),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -158,6 +188,7 @@ fn cmd_learn(args: Args) -> Result<()> {
         spill_dir: args.raw("spill-dir").map(PathBuf::from),
         spill_threshold: args.get::<f64>("spill-threshold", 0.5)?,
         batch: args.get::<usize>("batch", 1024)?,
+        ..Default::default()
     };
 
     if sharded {
@@ -196,6 +227,7 @@ fn cmd_learn(args: Args) -> Result<()> {
             keep_levels: false,
             hosts: args.get::<usize>("hosts", 1)?,
             backend,
+            ..Default::default()
         };
         let engine = NativeEngine::new(&data, kind);
         let (outcome, heap) = crate::memtrack::measure(|| -> Result<_> {
@@ -487,7 +519,42 @@ fn cmd_exp(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The sample configurations `bnsl info` prices.
+const INFO_SHARDED_CONFIGS: [(usize, usize); 3] =
+    [(29, 8), (33, 16), (crate::MAX_VARS_SHARDED, 64)];
+
 fn cmd_info(args: Args) -> Result<()> {
+    let budgets = crate::coordinator::plan::Budgets::detect();
+    if args.switch("json") {
+        // the stable machine-readable schema: every plan record carries
+        // the same key set on both backends (`object_requests` is null —
+        // present, not omitted — on posix plans) plus the budget verdict
+        let mut plans = Json::arr();
+        for (p, shards) in INFO_SHARDED_CONFIGS {
+            let plan = crate::coordinator::plan::sharded_plan(p, shards, 0, 1024);
+            for backend in [BackendKind::Posix, BackendKind::Object] {
+                plans = plans.push(plan.to_json_for(backend, &budgets));
+            }
+        }
+        let doc = Json::obj()
+            .set("version", env!("CARGO_PKG_VERSION"))
+            .set(
+                "budgets",
+                Json::obj()
+                    .set("ram_bytes", budgets.ram_bytes)
+                    .set("fd_limit", budgets.fd_limit)
+                    .set(
+                        "object_requests",
+                        match budgets.object_requests {
+                            Some(cap) => Json::Int(cap as i64),
+                            None => Json::Null,
+                        },
+                    ),
+            )
+            .set("sharded_plans", plans);
+        println!("{}", doc.to_pretty());
+        return Ok(());
+    }
     println!("bnsl {}", env!("CARGO_PKG_VERSION"));
     println!(
         "max exact-solver variables: {} (u32 masks) / {} (wide u64 masks) / {} (sharded, --shards); searches: {}",
@@ -519,18 +586,179 @@ fn cmd_info(args: Args) -> Result<()> {
             crate::util::human_bytes(plan.baseline_bytes)
         );
     }
-    for (p, shards) in [(29usize, 8usize), (33, 16), (crate::MAX_VARS_SHARDED, 64)] {
+    println!(
+        "host budgets: {} RAM, {} fds (service admission prices against these; \
+         override with `bnsl serve --ram-budget-mb/--fd-budget`)",
+        crate::util::human_bytes(budgets.ram_bytes),
+        budgets.fd_limit
+    );
+    for (p, shards) in INFO_SHARDED_CONFIGS {
         let plan = crate::coordinator::plan::sharded_plan(p, shards, 0, 1024);
+        let verdict = plan.fits_budget(BackendKind::Posix, &budgets);
         println!(
             "p={p:2} --shards {shards:2}: resident {}, disk {}, per-host fd budget {} \
              (check `ulimit -n`), ~{}k object requests \
-             (--backend object)",
+             (--backend object); fits this host's budgets: {}",
             crate::util::human_bytes(plan.peak_resident_bytes),
             crate::util::human_bytes(plan.disk_bytes),
             plan.fd_budget,
-            plan.object_requests / 1000
+            plan.object_requests / 1000,
+            if verdict.fits {
+                "yes".to_string()
+            } else {
+                format!("NO — {}", verdict.reasons.join("; "))
+            }
         );
     }
+    Ok(())
+}
+
+/// SIGTERM/SIGINT flag for `bnsl serve` — set from the signal handler,
+/// polled by [`crate::service::Server::run_until`].
+static SERVE_STOP: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Install SIGTERM + SIGINT handlers that flip [`SERVE_STOP`] — the
+/// graceful drain trigger. Hand-rolled over libc's `signal(2)` (which
+/// std already links); async-signal-safe because the handler only
+/// stores to an atomic.
+#[cfg(unix)]
+fn install_drain_signals() {
+    extern "C" fn on_signal(_signum: i32) {
+        SERVE_STOP.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    let handler: extern "C" fn(i32) = on_signal;
+    // SIGTERM = 15, SIGINT = 2 on every unix target we build for
+    unsafe {
+        signal(15, handler as usize);
+        signal(2, handler as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_drain_signals() {}
+
+fn cmd_serve(args: Args) -> Result<()> {
+    let backend = match args.raw("backend") {
+        None => BackendKind::Posix,
+        Some(name) => BackendKind::parse(name)
+            .ok_or_else(|| anyhow!("--backend expects 'posix' or 'object' (got '{name}')"))?,
+    };
+    let detected = crate::coordinator::plan::Budgets::detect();
+    let ram_mb = args.get::<u64>("ram-budget-mb", 0)?;
+    let fd = args.get::<u64>("fd-budget", 0)?;
+    let requests = args.get::<u64>("request-budget", 0)?;
+    let budgets = crate::coordinator::plan::Budgets {
+        ram_bytes: if ram_mb == 0 {
+            detected.ram_bytes
+        } else {
+            ram_mb << 20
+        },
+        fd_limit: if fd == 0 { detected.fd_limit } else { fd },
+        object_requests: if requests == 0 { None } else { Some(requests) },
+    };
+    let options = crate::service::ServeOptions {
+        addr: args.raw("addr").unwrap_or("127.0.0.1").to_string(),
+        port: args.get::<u16>("port", 7878)?,
+        jobs_dir: PathBuf::from(args.raw("jobs-dir").unwrap_or("bnsl_jobs")),
+        backend,
+        budgets,
+        max_concurrent: args.get::<usize>("max-concurrent", 2)?.max(1),
+        max_queue: args.get::<usize>("max-queue", 64)?.max(1),
+        http_threads: args.get::<usize>("http-threads", 4)?.max(1),
+        data_root: args.raw("data-root").map(PathBuf::from),
+    };
+    let jobs_dir = options.jobs_dir.clone();
+    install_drain_signals();
+    let server = crate::service::Server::start(options)?;
+    eprintln!(
+        "bnsl serve: listening on {} (jobs dir {}, backend {}); SIGTERM \
+         drains — running solves checkpoint at the next level boundary",
+        server.addr(),
+        jobs_dir.display(),
+        backend.name()
+    );
+    server.run_until(&SERVE_STOP)?;
+    eprintln!(
+        "bnsl serve: drained; interrupted jobs resume on the next \
+         `bnsl serve --jobs-dir {}`",
+        jobs_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_submit(args: Args) -> Result<()> {
+    let server: String = args.require("server")?;
+    let data: String = args.require("data")?;
+    let csv = std::fs::read_to_string(&data)
+        .map_err(|e| anyhow!("reading {data}: {e}"))?;
+    let p = args.get::<usize>("p", 0)?;
+    let request = crate::service::SubmitRequest {
+        csv: Some(csv),
+        path: None,
+        p: if p == 0 { None } else { Some(p) },
+        score: args.raw("score").unwrap_or("jeffreys").to_string(),
+        shards: args.get::<usize>("shards", 1)?,
+        threads: args.get::<usize>("threads", 0)?,
+        batch: args.get::<usize>("batch", 1024)?,
+    };
+    let response = crate::service::client::submit(&server, &request)?;
+    eprintln!(
+        "submitted: {}{}",
+        response.id,
+        if response.cached {
+            " (result already cached)"
+        } else if response.deduped {
+            " (deduped onto the in-flight job)"
+        } else {
+            ""
+        }
+    );
+    // stdout carries exactly the job id — script-friendly
+    println!("{}", response.id);
+    if args.switch("wait") {
+        let poll = Duration::from_millis(args.get::<u64>("poll-ms", 200)?.max(10));
+        let timeout = Duration::from_secs(args.get::<u64>("timeout-secs", 3600)?.max(1));
+        let status = crate::service::client::wait_terminal(&server, &response.id, poll, timeout)?;
+        let state = status
+            .get("state")
+            .and_then(crate::util::json::Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        if state != "done" {
+            let error = status
+                .get("error")
+                .and_then(crate::util::json::Json::as_str)
+                .unwrap_or("no error recorded");
+            bail!("job {} ended '{state}': {error}", response.id);
+        }
+        let result = crate::service::client::result(&server, &response.id)?;
+        let text = result.to_pretty();
+        if let Some(out) = args.raw("out") {
+            std::fs::write(out, &text)?;
+            eprintln!("wrote {out}");
+        } else {
+            eprint!("{text}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_status(args: Args) -> Result<()> {
+    let server: String = args.require("server")?;
+    let id: String = args.require("job")?;
+    let doc = crate::service::client::status(&server, &id)?;
+    println!("{}", doc.to_pretty());
+    Ok(())
+}
+
+fn cmd_cancel(args: Args) -> Result<()> {
+    let server: String = args.require("server")?;
+    let id: String = args.require("job")?;
+    let doc = crate::service::client::cancel(&server, &id)?;
+    println!("{}", doc.to_pretty());
     Ok(())
 }
 
@@ -540,9 +768,19 @@ mod tests {
 
     #[test]
     fn usage_mentions_every_command() {
-        for cmd in ["learn", "sample", "exp", "info"] {
+        for cmd in [
+            "learn", "sample", "exp", "serve", "submit", "status", "cancel", "info",
+        ] {
             assert!(USAGE.contains(cmd), "{cmd} missing from usage");
         }
+    }
+
+    /// Satellite (ISSUE 5): `bnsl info --json` emits the stable plan
+    /// schema (object_requests null-not-omitted on posix plans, budget
+    /// verdict attached).
+    #[test]
+    fn info_json_runs() {
+        run(vec!["info".into(), "--json".into()]).unwrap();
     }
 
     #[test]

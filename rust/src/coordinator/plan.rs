@@ -5,7 +5,76 @@
 use crate::bitset::BinomTable;
 use crate::coordinator::shard::{fd_budget, reader_cache_bytes, QR_RECORD, WINDOW};
 use crate::coordinator::storage::object::PART_BYTES;
+use crate::coordinator::storage::BackendKind;
 use crate::util::json::Json;
+
+/// Resource budgets a planned run is admitted against — the service
+/// queue's admission contract ([`crate::service::queue`]) and the
+/// `bnsl info` verdict source. Budgets describe what the *host* is
+/// willing to spend, the plans describe what the run *needs*; the
+/// [`BudgetVerdict`] is the comparison.
+#[derive(Clone, Debug)]
+pub struct Budgets {
+    /// Peak resident RAM the run may plan for, in bytes.
+    pub ram_bytes: u64,
+    /// Open-file-descriptor ceiling (compare against
+    /// [`ShardedPlan::fd_budget`]).
+    pub fd_limit: u64,
+    /// Object-store request ceiling per run; `None` = unmetered. Only
+    /// consulted for object-backed plans.
+    pub object_requests: Option<u64>,
+}
+
+impl Budgets {
+    /// Budgets with no effective limits (every plan fits).
+    pub fn unlimited() -> Budgets {
+        Budgets {
+            ram_bytes: u64::MAX,
+            fd_limit: u64::MAX,
+            object_requests: None,
+        }
+    }
+
+    /// Detect this machine's budgets: total RAM from `/proc/meminfo`
+    /// (falling back to 16 GiB off Linux) and the soft `RLIMIT_NOFILE`
+    /// (falling back to 1024), requests unmetered.
+    pub fn detect() -> Budgets {
+        Budgets {
+            ram_bytes: detect_ram_bytes().unwrap_or(16 << 30),
+            fd_limit: crate::coordinator::shard::fd_soft_limit().unwrap_or(1024),
+            object_requests: None,
+        }
+    }
+}
+
+/// `MemTotal` from `/proc/meminfo`, in bytes (`None` off Linux or if
+/// unreadable).
+fn detect_ram_bytes() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/meminfo").ok()?;
+    let line = text.lines().find(|l| l.starts_with("MemTotal"))?;
+    // "MemTotal:       16384256 kB"
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// Whether a plan fits a set of [`Budgets`], and if not, why — each
+/// reason names the figure, the budget it exceeds, and the knob to turn.
+#[derive(Clone, Debug)]
+pub struct BudgetVerdict {
+    pub fits: bool,
+    /// One sentence per exceeded budget; empty iff `fits`.
+    pub reasons: Vec<String>,
+}
+
+impl BudgetVerdict {
+    pub fn to_json(&self) -> Json {
+        let mut reasons = Json::arr();
+        for r in &self.reasons {
+            reasons = reasons.push(r.as_str());
+        }
+        Json::obj().set("fits", self.fits).set("reasons", reasons)
+    }
+}
 
 /// Per-level accounting of the proposed method's frontier.
 #[derive(Clone, Debug)]
@@ -252,6 +321,64 @@ impl ShardedPlan {
             .set("fd_budget", self.fd_budget)
             .set("object_requests", self.object_requests)
     }
+
+    /// Does this plan fit `budgets` when run on `backend`? Admission for
+    /// the service queue and the verdict `bnsl info` prints. The
+    /// request-budget check applies to object-backed runs only (a POSIX
+    /// run sends no object requests); RAM and fd ceilings apply to both
+    /// (the shipped object backend is a local-fd-backed simulator, and a
+    /// real one still holds sockets per stream).
+    pub fn fits_budget(&self, backend: BackendKind, budgets: &Budgets) -> BudgetVerdict {
+        let mut reasons = Vec::new();
+        if self.peak_resident_bytes > budgets.ram_bytes {
+            reasons.push(format!(
+                "planned resident RAM {} exceeds the {} budget (lower \
+                 --shards/--batch or raise the budget)",
+                crate::util::human_bytes(self.peak_resident_bytes),
+                crate::util::human_bytes(budgets.ram_bytes),
+            ));
+        }
+        if self.fd_budget > budgets.fd_limit {
+            reasons.push(format!(
+                "planned open-file budget {} exceeds the {} descriptor \
+                 limit (lower --shards, cap workers, or raise `ulimit -n`)",
+                self.fd_budget, budgets.fd_limit,
+            ));
+        }
+        if backend == BackendKind::Object {
+            if let Some(cap) = budgets.object_requests {
+                if self.object_requests > cap {
+                    reasons.push(format!(
+                        "estimated {} object-store requests exceed the {cap} \
+                         request budget (lower --shards or raise the budget)",
+                        self.object_requests,
+                    ));
+                }
+            }
+        }
+        BudgetVerdict {
+            fits: reasons.is_empty(),
+            reasons,
+        }
+    }
+
+    /// Stable-schema JSON record for one *backend-bound* plan: every key
+    /// of [`ShardedPlan::to_json`] is always present, plus `backend` and
+    /// the [`BudgetVerdict`] under `fits_budget`. `object_requests` is
+    /// `null` (not omitted, not a misleading number) for POSIX-bound
+    /// plans — a POSIX run sends no object requests, and downstream
+    /// consumers (`bench_compare.py`-style) can rely on the key set
+    /// being identical across backends.
+    pub fn to_json_for(&self, backend: BackendKind, budgets: &Budgets) -> Json {
+        let mut doc = self
+            .to_json()
+            .set("backend", backend.name())
+            .set("fits_budget", self.fits_budget(backend, budgets).to_json());
+        if backend == BackendKind::Posix {
+            doc = doc.set("object_requests", Json::Null);
+        }
+        doc
+    }
 }
 
 impl MemoryPlan {
@@ -474,6 +601,81 @@ mod tests {
         assert!(cap.object_requests > 0);
         let j = cap.to_json().to_string();
         assert!(j.contains("object_requests"), "{j}");
+    }
+
+    /// Satellite (ISSUE 5): plans carry a budget verdict the service
+    /// queue admits against, and the backend-bound JSON schema is
+    /// stable — `object_requests` is null (present!) on posix plans.
+    #[test]
+    fn fits_budget_names_each_exceeded_ceiling() {
+        let plan = sharded_plan(20, 8, 2, 1024);
+        let roomy = Budgets::unlimited();
+        let v = plan.fits_budget(BackendKind::Posix, &roomy);
+        assert!(v.fits && v.reasons.is_empty());
+        // RAM ceiling below the plan's resident peak
+        let tight_ram = Budgets {
+            ram_bytes: plan.peak_resident_bytes - 1,
+            ..Budgets::unlimited()
+        };
+        let v = plan.fits_budget(BackendKind::Posix, &tight_ram);
+        assert!(!v.fits);
+        assert!(v.reasons.iter().any(|r| r.contains("resident RAM")), "{v:?}");
+        // fd ceiling below the plan's handle budget
+        let tight_fd = Budgets {
+            fd_limit: plan.fd_budget - 1,
+            ..Budgets::unlimited()
+        };
+        let v = plan.fits_budget(BackendKind::Posix, &tight_fd);
+        assert!(!v.fits);
+        assert!(v.reasons.iter().any(|r| r.contains("open-file")), "{v:?}");
+        // the request budget binds object-backed plans only
+        let tight_req = Budgets {
+            object_requests: Some(1),
+            ..Budgets::unlimited()
+        };
+        assert!(plan.fits_budget(BackendKind::Posix, &tight_req).fits);
+        let v = plan.fits_budget(BackendKind::Object, &tight_req);
+        assert!(!v.fits);
+        assert!(v.reasons.iter().any(|r| r.contains("request")), "{v:?}");
+        // two ceilings exceeded -> two reasons
+        let both = Budgets {
+            ram_bytes: 1,
+            fd_limit: 1,
+            object_requests: None,
+        };
+        assert_eq!(plan.fits_budget(BackendKind::Posix, &both).reasons.len(), 2);
+    }
+
+    #[test]
+    fn backend_bound_plan_json_schema_is_stable() {
+        let plan = sharded_plan(16, 4, 0, 1024);
+        let budgets = Budgets::unlimited();
+        let posix = plan.to_json_for(BackendKind::Posix, &budgets);
+        let object = plan.to_json_for(BackendKind::Object, &budgets);
+        // identical key sets — consumers never branch on presence
+        let keys = |j: &Json| -> Vec<String> {
+            match j {
+                Json::Obj(fields) => fields.iter().map(|(k, _)| k.clone()).collect(),
+                _ => panic!("plan record must be an object"),
+            }
+        };
+        assert_eq!(keys(&posix), keys(&object));
+        // posix: object_requests present but null; object: a number
+        assert_eq!(posix.get("object_requests"), Some(&Json::Null));
+        assert!(object.get("object_requests").and_then(Json::as_u64).unwrap() > 0);
+        assert_eq!(posix.get("backend").and_then(Json::as_str), Some("posix"));
+        // the verdict rides along with a fits flag and a reasons array
+        let verdict = posix.get("fits_budget").expect("fits_budget present");
+        assert_eq!(verdict.get("fits"), Some(&Json::Bool(true)));
+        assert!(verdict.get("reasons").and_then(Json::as_arr).is_some());
+    }
+
+    #[test]
+    fn detected_budgets_are_sane() {
+        let b = Budgets::detect();
+        assert!(b.ram_bytes >= 1 << 20, "at least a megabyte of RAM");
+        assert!(b.fd_limit >= 16, "some descriptors available");
+        assert!(b.object_requests.is_none(), "requests unmetered by default");
     }
 
     #[test]

@@ -176,6 +176,13 @@ pub struct ShardOptions {
     /// store ([`crate::coordinator::storage`]). All hosts of one run
     /// must pick the same backend.
     pub backend: BackendKind,
+    /// Cooperative stop flag ([`crate::solver::CancelToken`]): when it
+    /// fires, the run commits the level it is on and returns
+    /// [`crate::solver::ShardOutcome::Checkpointed`] — exactly like
+    /// [`ShardOptions::stop_after_level`], but triggered asynchronously
+    /// (job cancellation, SIGTERM drain) instead of at a pre-declared
+    /// level. The default token never fires.
+    pub cancel: crate::solver::CancelToken,
 }
 
 impl Default for ShardOptions {
@@ -189,6 +196,7 @@ impl Default for ShardOptions {
             keep_levels: false,
             hosts: 1,
             backend: BackendKind::Posix,
+            cancel: crate::solver::CancelToken::new(),
         }
     }
 }

@@ -8,7 +8,7 @@
 mod csv;
 pub mod synth;
 
-pub use csv::{read_csv, write_csv};
+pub use csv::{parse_csv, read_csv, write_csv};
 
 /// A complete discrete dataset: `n` rows over `p` categorical variables.
 #[derive(Clone, Debug, PartialEq)]

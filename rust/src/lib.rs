@@ -89,6 +89,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod score;
 pub mod search;
+pub mod service;
 pub mod solver;
 pub mod util;
 

@@ -1,0 +1,301 @@
+//! Request/response JSON types of the `bnsl serve` HTTP API.
+//!
+//! Everything on the wire is the crate's own [`Json`] — built and parsed
+//! by [`crate::util::json`], no serde. The schemas are documented for
+//! external clients in `docs/FORMATS.md` ("The job-service API"); the
+//! shipped client ([`crate::service::client`], `bnsl submit`/`status`)
+//! and the server agree on them through these shared types.
+
+use crate::score::ScoreKind;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Ledger / API format tag, bumped on incompatible schema changes.
+pub const API_FORMAT: u64 = 1;
+
+/// Ceiling on the `shards` knob: far above any sane geometry (the
+/// sharded cap is p ≤ 36), and small enough that the analytic planner's
+/// per-shard loops stay sub-millisecond — an unbounded value would let
+/// one submission hard-spin an HTTP handler inside `sharded_plan`.
+pub const MAX_SHARDS: usize = 1 << 16;
+
+/// Ceiling on the `batch` knob: keeps the planner's `batch × record`
+/// arithmetic far from u64 wrap (which would fake a tiny plan past
+/// admission) while allowing batches ~16000× the default.
+pub const MAX_BATCH: usize = 1 << 24;
+
+/// One job submission (`POST /v1/jobs`).
+///
+/// Exactly one of `csv` (the dataset inline, as CSV text) or `path`
+/// (a server-local CSV path, for datasets already on the server's
+/// storage) must be present. All other fields default.
+#[derive(Clone, Debug)]
+pub struct SubmitRequest {
+    /// Inline dataset: the CSV file's full text.
+    pub csv: Option<String>,
+    /// Server-local dataset path (alternative to `csv`).
+    pub path: Option<String>,
+    /// Restrict to the first `p` variables (like `bnsl learn --p`).
+    pub p: Option<usize>,
+    /// Score name, as `bnsl learn --score` accepts it.
+    pub score: String,
+    /// Frontier shards for the solver run (power of two).
+    pub shards: usize,
+    /// Worker threads (0 = one per shard, capped at the core count).
+    pub threads: usize,
+    /// Subsets per engine batch.
+    pub batch: usize,
+}
+
+impl Default for SubmitRequest {
+    fn default() -> SubmitRequest {
+        SubmitRequest {
+            csv: None,
+            path: None,
+            p: None,
+            score: "jeffreys".to_string(),
+            shards: 1,
+            threads: 0,
+            batch: 1024,
+        }
+    }
+}
+
+impl SubmitRequest {
+    /// Parse a submission body. Takes the document by value so the
+    /// (potentially hundreds-of-MB) inline CSV is *moved* out of it,
+    /// not cloned. Structural validation only — dataset parsing, score
+    /// resolution and budget admission happen in
+    /// [`crate::service::jobs`], where the errors can carry context.
+    pub fn from_json(doc: Json) -> Result<SubmitRequest> {
+        let Json::Obj(fields) = doc else {
+            bail!("submit body must be a JSON object");
+        };
+        fn expect_string(value: Json, key: &str) -> Result<String> {
+            match value {
+                Json::Str(s) => Ok(s),
+                other => bail!("field '{key}' must be a string, got {other:?}"),
+            }
+        }
+        fn expect_count(value: &Json, key: &str) -> Result<usize> {
+            value.as_u64().map(|v| v as usize).ok_or_else(|| {
+                anyhow::anyhow!("field '{key}' must be a non-negative integer")
+            })
+        }
+        let mut req = SubmitRequest::default();
+        for (key, value) in fields {
+            if matches!(value, Json::Null) {
+                continue; // explicit null = absent
+            }
+            match key.as_str() {
+                "csv" => req.csv = Some(expect_string(value, "csv")?),
+                "path" => req.path = Some(expect_string(value, "path")?),
+                "score" => req.score = expect_string(value, "score")?,
+                "p" => {
+                    let p = expect_count(&value, "p")?;
+                    if p == 0 {
+                        bail!("field 'p' must be a positive integer");
+                    }
+                    req.p = Some(p);
+                }
+                "shards" => req.shards = expect_count(&value, "shards")?,
+                "threads" => req.threads = expect_count(&value, "threads")?,
+                "batch" => req.batch = expect_count(&value, "batch")?,
+                _ => {} // unknown fields ignored (forward compatibility)
+            }
+        }
+        match (&req.csv, &req.path) {
+            (Some(_), Some(_)) => bail!("submit needs exactly one of 'csv' or 'path', got both"),
+            (None, None) => bail!("submit needs exactly one of 'csv' or 'path'"),
+            _ => {}
+        }
+        if req.shards == 0 || !req.shards.is_power_of_two() || req.shards > MAX_SHARDS {
+            bail!(
+                "field 'shards' must be a power of two at most {MAX_SHARDS} (got {})",
+                req.shards
+            );
+        }
+        if req.batch > MAX_BATCH {
+            bail!("field 'batch' must be at most {MAX_BATCH} (got {})", req.batch);
+        }
+        Ok(req)
+    }
+
+    /// Serialise for the wire (client side).
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        if let Some(csv) = &self.csv {
+            doc = doc.set("csv", csv.as_str());
+        }
+        if let Some(path) = &self.path {
+            doc = doc.set("path", path.as_str());
+        }
+        if let Some(p) = self.p {
+            doc = doc.set("p", p);
+        }
+        doc.set("score", self.score.as_str())
+            .set("shards", self.shards)
+            .set("threads", self.threads)
+            .set("batch", self.batch)
+    }
+
+    /// Resolve the score name (`bnsl learn --score` grammar).
+    pub fn score_kind(&self) -> Result<ScoreKind> {
+        ScoreKind::parse(&self.score)
+            .ok_or_else(|| anyhow::anyhow!("unknown score '{}'", self.score))
+    }
+}
+
+/// What `POST /v1/jobs` returns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubmitResponse {
+    /// The job handling this submission — an existing one when deduped.
+    pub id: String,
+    /// An identical submission was already known (in flight or done);
+    /// no new job was created.
+    pub deduped: bool,
+    /// The result was already computed — `GET /v1/jobs/{id}/result`
+    /// returns instantly.
+    pub cached: bool,
+}
+
+impl SubmitResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("id", self.id.as_str())
+            .set("deduped", self.deduped)
+            .set("cached", self.cached)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<SubmitResponse> {
+        let id = doc
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("submit response missing 'id'"))?;
+        let flag = |key: &str| matches!(doc.get(key), Some(Json::Bool(true)));
+        Ok(SubmitResponse {
+            id: id.to_string(),
+            deduped: flag("deduped"),
+            cached: flag("cached"),
+        })
+    }
+}
+
+/// The job state machine. Transitions:
+/// `queued → planning → running → done | failed | cancelled`; `queued`
+/// jobs may go straight to `cancelled`, and a server restart rewinds
+/// `planning`/`running` (whose progress survives in the run manifest)
+/// back to `queued`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Planning,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Planning => "planning",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<JobState> {
+        Some(match name {
+            "queued" => JobState::Queued,
+            "planning" => JobState::Planning,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            _ => return None,
+        })
+    }
+
+    /// Terminal states never transition again (a cancelled job is
+    /// resubmitted as a *new* job, which resumes the old checkpoint).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// Uniform error body: `{"error": …}` plus optional structured detail
+/// (the admission verdict rides in `verdict`).
+pub fn error_body(message: &str) -> Json {
+    Json::obj().set("error", message)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_request_roundtrips_and_defaults() {
+        let doc = Json::parse(r#"{"csv": "a,b\n0,1\n", "shards": 4}"#).unwrap();
+        let req = SubmitRequest::from_json(doc).unwrap();
+        assert_eq!(req.csv.as_deref(), Some("a,b\n0,1\n"));
+        assert_eq!(req.score, "jeffreys");
+        assert_eq!(req.shards, 4);
+        assert_eq!(req.threads, 0);
+        assert_eq!(req.batch, 1024);
+        assert!(req.p.is_none());
+        let back = SubmitRequest::from_json(req.to_json()).unwrap();
+        assert_eq!(back.shards, 4);
+        assert_eq!(back.csv, req.csv);
+    }
+
+    #[test]
+    fn submit_request_rejects_structural_garbage() {
+        let bad = [
+            r#"{}"#,                                    // no dataset
+            r#"{"csv": "x", "path": "y"}"#,             // both datasets
+            r#"{"csv": "x", "shards": 3}"#,             // non-power-of-two
+            r#"{"csv": "x", "shards": 131072}"#,        // power of two past the cap
+            r#"{"csv": "x", "batch": 999999999}"#,      // batch past the cap
+            r#"{"csv": "x", "p": 0}"#,                  // zero variables
+            r#"{"csv": 5}"#,                            // wrong type
+            r#"[1,2]"#,                                 // not an object
+        ];
+        for text in bad {
+            let doc = Json::parse(text).unwrap();
+            assert!(SubmitRequest::from_json(doc).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn job_states_roundtrip_and_classify() {
+        for s in [
+            JobState::Queued,
+            JobState::Planning,
+            JobState::Running,
+            JobState::Done,
+            JobState::Failed,
+            JobState::Cancelled,
+        ] {
+            assert_eq!(JobState::parse(s.name()), Some(s));
+        }
+        assert!(JobState::Done.is_terminal());
+        assert!(JobState::Failed.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::parse("zombie").is_none());
+    }
+
+    #[test]
+    fn submit_response_roundtrips() {
+        let r = SubmitResponse {
+            id: "job-000042".into(),
+            deduped: true,
+            cached: false,
+        };
+        assert_eq!(SubmitResponse::from_json(&r.to_json()).unwrap(), r);
+    }
+}

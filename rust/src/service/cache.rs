@@ -1,0 +1,82 @@
+//! Durable result cache, keyed by the run fingerprint.
+//!
+//! The expensive artifact of a solve is deterministic in the
+//! (dataset, score) identity — sharding, threading, backend and host
+//! never change a bit of the answer (the repo's core invariant). So the
+//! cache key is exactly the coordinator's FNV-1a
+//! [`crate::coordinator::shard::run_fingerprint`], and a cached record
+//! can be served for *any* resubmission of the same dataset and score,
+//! whatever solver knobs the new submission carries.
+//!
+//! Records live under `results/<fingerprint>.json` in the jobs
+//! directory, published atomically through the storage backend's
+//! [`crate::coordinator::storage::StorageBackend::publish_doc`] — a
+//! crashed server never leaves a torn record, so restart recovery can
+//! trust every record it finds.
+
+use crate::coordinator::storage::SharedBackend;
+use anyhow::Result;
+
+/// Cache handle over the service's ledger backend (rooted at the jobs
+/// directory).
+pub struct ResultCache {
+    store: SharedBackend,
+}
+
+impl ResultCache {
+    pub fn new(store: SharedBackend) -> ResultCache {
+        ResultCache { store }
+    }
+
+    fn key(fingerprint: &str) -> String {
+        format!("results/{fingerprint}.json")
+    }
+
+    /// The cached result record (the solver's JSON document), if any.
+    pub fn lookup(&self, fingerprint: &str) -> Result<Option<String>> {
+        match self.store.read_doc(&Self::key(fingerprint))? {
+            None => Ok(None),
+            Some(bytes) => Ok(Some(String::from_utf8(bytes).map_err(|_| {
+                anyhow::anyhow!(
+                    "cached result for {fingerprint} is not UTF-8 (corrupt cache entry)"
+                )
+            })?)),
+        }
+    }
+
+    /// Atomically publish a result record. Idempotent: identical
+    /// submissions republish identical bytes (determinism as fencing,
+    /// same as the shard files).
+    pub fn publish(&self, fingerprint: &str, record: &str) -> Result<()> {
+        self.store.publish_doc(&Self::key(fingerprint), record.as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::storage::{BackendKind, make_backend};
+
+    fn cache_in_temp(tag: &str) -> (ResultCache, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("bnsl_rescache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("results")).unwrap();
+        let store = make_backend(BackendKind::Posix, &dir).unwrap();
+        (ResultCache::new(store), dir)
+    }
+
+    #[test]
+    fn roundtrips_and_misses() {
+        let (cache, dir) = cache_in_temp("rt");
+        assert_eq!(cache.lookup("deadbeef").unwrap(), None);
+        cache.publish("deadbeef", "{\"log_score\":-1.5}").unwrap();
+        assert_eq!(
+            cache.lookup("deadbeef").unwrap().as_deref(),
+            Some("{\"log_score\":-1.5}")
+        );
+        // republish is idempotent
+        cache.publish("deadbeef", "{\"log_score\":-1.5}").unwrap();
+        assert!(cache.lookup("cafebabe").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal HTTP/1.1 client for the job service — the engine behind
+//! `bnsl submit` / `bnsl status` / `bnsl cancel` and the integration
+//! tests. Like the server it is hand-rolled on `std::net`: one
+//! request per connection (`Connection: close`), JSON bodies only.
+
+use super::api::{SubmitRequest, SubmitResponse};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// One HTTP exchange. Returns `(status, body)`; transport failures are
+/// `Err`, HTTP-level errors are returned to the caller to interpret.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to the job server at {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(60)))?;
+    let payload = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    let mut response = Vec::new();
+    stream
+        .read_to_end(&mut response)
+        .with_context(|| format!("reading the response from {addr}"))?;
+    let text = String::from_utf8(response).context("response is not UTF-8")?;
+    let Some((head, body)) = text.split_once("\r\n\r\n") else {
+        bail!("malformed HTTP response from {addr} (no header terminator)");
+    };
+    let status_line = head.lines().next().unwrap_or_default();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line '{status_line}'"))?;
+    Ok((status, body.to_string()))
+}
+
+/// `POST /v1/jobs`. Non-200 responses become errors carrying the status
+/// and the server's error body (including the admission verdict).
+pub fn submit(addr: &str, req: &SubmitRequest) -> Result<SubmitResponse> {
+    let (status, body) = request(addr, "POST", "/v1/jobs", Some(&req.to_json().to_string()))?;
+    if status != 200 {
+        bail!("submit failed with HTTP {status}: {body}");
+    }
+    let doc = Json::parse(&body).map_err(|e| anyhow::anyhow!("bad submit response: {e}"))?;
+    SubmitResponse::from_json(&doc)
+}
+
+/// `GET /v1/jobs/{id}` → the status record.
+pub fn status(addr: &str, id: &str) -> Result<Json> {
+    let (code, body) = request(addr, "GET", &format!("/v1/jobs/{id}"), None)?;
+    if code != 200 {
+        bail!("status of '{id}' failed with HTTP {code}: {body}");
+    }
+    Json::parse(&body).map_err(|e| anyhow::anyhow!("bad status response: {e}"))
+}
+
+/// `GET /v1/jobs/{id}/result` → the solved-network record.
+pub fn result(addr: &str, id: &str) -> Result<Json> {
+    let (code, body) = request(addr, "GET", &format!("/v1/jobs/{id}/result"), None)?;
+    if code != 200 {
+        bail!("result of '{id}' failed with HTTP {code}: {body}");
+    }
+    Json::parse(&body).map_err(|e| anyhow::anyhow!("bad result response: {e}"))
+}
+
+/// `DELETE /v1/jobs/{id}`.
+pub fn cancel(addr: &str, id: &str) -> Result<Json> {
+    let (code, body) = request(addr, "DELETE", &format!("/v1/jobs/{id}"), None)?;
+    if code != 200 {
+        bail!("cancel of '{id}' failed with HTTP {code}: {body}");
+    }
+    Json::parse(&body).map_err(|e| anyhow::anyhow!("bad cancel response: {e}"))
+}
+
+/// Is a server answering `/v1/healthz` at `addr`?
+pub fn healthy(addr: &str) -> bool {
+    matches!(request(addr, "GET", "/v1/healthz", None), Ok((200, _)))
+}
+
+/// Poll a job until it reaches a terminal state; returns the final
+/// status record. Errors if `timeout` elapses first (the job keeps
+/// running server-side — waiting is purely client-side).
+pub fn wait_terminal(addr: &str, id: &str, poll: Duration, timeout: Duration) -> Result<Json> {
+    let start = Instant::now();
+    loop {
+        let doc = status(addr, id)?;
+        let state = doc
+            .get("state")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        if matches!(state.as_str(), "done" | "failed" | "cancelled") {
+            return Ok(doc);
+        }
+        if start.elapsed() > timeout {
+            bail!("job '{id}' still '{state}' after {:?}", timeout);
+        }
+        std::thread::sleep(poll);
+    }
+}

@@ -1,0 +1,1266 @@
+//! The job manager: a persistent, crash-safe queue of structure-learning
+//! jobs over the solver stack.
+//!
+//! # Ledger
+//!
+//! Every job is one directory under the jobs root:
+//!
+//! ```text
+//! <jobs-dir>/
+//!   jobs/job-000001/job.json    one ledger record per job (atomic publish)
+//!   jobs/job-000001/data.csv    the submitted dataset, byte for byte
+//!   runs/<fingerprint>/         the solver's sharded run (manifest.json …)
+//!   results/<fingerprint>.json  the result cache (crate::service::cache)
+//! ```
+//!
+//! The ledger record is the durability boundary of the state machine
+//! (`queued → planning → running → done | failed | cancelled`): every
+//! transition is an atomic
+//! [`crate::coordinator::storage::StorageBackend::publish_doc`]
+//! rewrite, so a
+//! SIGKILLed server leaves either the old state or the new one, never a
+//! torn record. On restart, non-terminal jobs are rewound to `queued`
+//! and re-executed; their *solver* progress survives independently in
+//! `runs/<fingerprint>/manifest.json`, so re-execution resumes at the
+//! last committed level instead of starting over.
+//!
+//! # Dedup
+//!
+//! Runs and results are keyed by the dataset/score fingerprint
+//! ([`run_fingerprint`]) — the identity under which results are
+//! bit-identical whatever solver knobs a submission carries. An
+//! identical submission therefore coalesces onto the in-flight job
+//! (same id back, no new work), and a finished one is served from the
+//! result cache without touching a solver.
+
+use super::api::{JobState, SubmitRequest, SubmitResponse};
+use super::cache::ResultCache;
+use super::queue::{Admission, Rejection};
+use crate::cli::MaskWidth;
+use crate::coordinator::plan::{sharded_plan, Budgets};
+use crate::coordinator::shard::{run_fingerprint, ShardOptions};
+use crate::coordinator::storage::{make_backend, BackendKind, SharedBackend};
+use crate::data::{parse_csv, Dataset};
+use crate::engine::NativeEngine;
+use crate::score::ScoreKind;
+use crate::solver::{solve_sharded, CancelToken, ShardOutcome};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// How a submission failed (maps to the HTTP status in `server.rs`).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Malformed request: bad dataset, unknown score, cap violation (400).
+    Invalid(String),
+    /// Admission control said no — the verdict rides along (422).
+    Rejected(Rejection),
+    /// An identical job is mid-cancellation — retry shortly (409).
+    Busy(String),
+    /// The server is draining and accepts no new work (503).
+    Draining,
+    /// Ledger I/O failed server-side (500).
+    Internal(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Invalid(m) => write!(f, "invalid submission: {m}"),
+            SubmitError::Rejected(r) => write!(f, "rejected: {}", r.reason),
+            SubmitError::Busy(m) => write!(f, "busy: {m}"),
+            SubmitError::Draining => write!(f, "server is draining; no new jobs accepted"),
+            SubmitError::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+/// Outcome of a cancellation request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// No such job.
+    Unknown,
+    /// Already in a terminal state; nothing to cancel.
+    Terminal(JobState),
+    /// Was queued — cancelled immediately.
+    Cancelled,
+    /// Is executing — the stop flag fired; the job checkpoints at the
+    /// next level boundary and then reports `cancelled`.
+    Requested,
+}
+
+/// One job's in-memory record (mirrors the persisted ledger doc).
+struct Job {
+    id: String,
+    state: JobState,
+    fingerprint: String,
+    score: String,
+    /// Effective variable count (after the submission's `--p` cut).
+    p: usize,
+    n: usize,
+    shards: usize,
+    threads: usize,
+    batch: usize,
+    error: Option<String>,
+    cancel: CancelToken,
+    /// True only for user cancellation (`DELETE`) — a drain also fires
+    /// the token but must leave the job resumable, not cancelled.
+    cancel_requested: bool,
+}
+
+struct State {
+    jobs: BTreeMap<String, Job>,
+    queue: VecDeque<String>,
+    /// fingerprint → job id for every non-terminal job (dedup target).
+    inflight: HashMap<String, String>,
+    /// fingerprint → job id for done jobs (cache-hit target).
+    done_by_fp: HashMap<String, String>,
+    /// Submissions reserved in phase 1 but not yet enqueued (staging
+    /// off-lock) — counted by admission so concurrent submissions
+    /// cannot overshoot `max_queue`.
+    reserved: usize,
+    next_seq: u64,
+    draining: bool,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    dedup_hits: AtomicU64,
+    cache_hits: AtomicU64,
+    rejected: AtomicU64,
+    solver_runs: AtomicU64,
+    done: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+}
+
+impl Counters {
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Configuration for [`JobManager::open`].
+#[derive(Clone, Debug)]
+pub struct JobManagerOptions {
+    /// The jobs directory (ledger + runs + results).
+    pub root: PathBuf,
+    /// Storage backend solver runs coordinate through (the ledger and
+    /// result cache are always local-POSIX — they live with the server).
+    pub backend: BackendKind,
+    /// Admission budgets (`queue.rs`).
+    pub budgets: Budgets,
+    /// Maximum queued jobs.
+    pub max_queue: usize,
+    /// Directory `path` submissions may read datasets from. `None`
+    /// (the default) rejects every `path` submission — a network-exposed
+    /// server must not be an arbitrary-file-read oracle; the operator
+    /// opts in with `bnsl serve --data-root DIR`.
+    pub data_root: Option<PathBuf>,
+}
+
+/// The job manager. One per server; shared across the HTTP handler pool
+/// and the executor pool behind an `Arc`.
+pub struct JobManager {
+    root: PathBuf,
+    store: SharedBackend,
+    run_backend: BackendKind,
+    admission: Admission,
+    cache: ResultCache,
+    data_root: Option<PathBuf>,
+    state: Mutex<State>,
+    work: Condvar,
+    counters: Counters,
+}
+
+/// What the executor needs off-lock for one job.
+struct Claim {
+    id: String,
+    fingerprint: String,
+    score: String,
+    p: usize,
+    shards: usize,
+    threads: usize,
+    batch: usize,
+    cancel: CancelToken,
+}
+
+/// Output of the planning phase: everything the solve needs.
+struct Prepared {
+    data: Dataset,
+    kind: ScoreKind,
+    options: ShardOptions,
+    width: MaskWidth,
+}
+
+/// What executing one job produced.
+enum Exec {
+    /// Solver completed (or the cache already had the record).
+    Done { via_cache: bool },
+    /// Cancel token fired — the run checkpointed durably.
+    Checkpointed,
+    Failed(String),
+}
+
+impl JobManager {
+    /// Open (or create) the ledger at `options.root`, recovering from a
+    /// previous server's state: terminal jobs are kept as they were,
+    /// everything else is rewound to `queued` and re-executed (resuming
+    /// the run manifest where one exists).
+    pub fn open(options: JobManagerOptions) -> Result<Arc<JobManager>> {
+        let root = options.root.clone();
+        std::fs::create_dir_all(root.join("jobs"))
+            .with_context(|| format!("creating {}", root.join("jobs").display()))?;
+        std::fs::create_dir_all(root.join("runs"))?;
+        std::fs::create_dir_all(root.join("results"))?;
+        let store = make_backend(BackendKind::Posix, &root)?;
+        let manager = JobManager {
+            root: root.clone(),
+            cache: ResultCache::new(store.clone()),
+            store,
+            run_backend: options.backend,
+            admission: Admission {
+                budgets: options.budgets,
+                max_queue: options.max_queue,
+            },
+            data_root: options.data_root,
+            state: Mutex::new(State {
+                jobs: BTreeMap::new(),
+                queue: VecDeque::new(),
+                inflight: HashMap::new(),
+                done_by_fp: HashMap::new(),
+                reserved: 0,
+                next_seq: 1,
+                draining: false,
+            }),
+            work: Condvar::new(),
+            counters: Counters::default(),
+        };
+        manager.recover()?;
+        Ok(Arc::new(manager))
+    }
+
+    /// Scan `jobs/*/job.json` and rebuild the in-memory state.
+    fn recover(&self) -> Result<()> {
+        let jobs_root = self.root.join("jobs");
+        let mut recovered: Vec<Job> = Vec::new();
+        for entry in std::fs::read_dir(&jobs_root)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if !name.starts_with("job-") {
+                continue;
+            }
+            let ledger = entry.path().join("job.json");
+            let text = match std::fs::read_to_string(&ledger) {
+                Ok(text) => text,
+                // a job dir without a ledger record is a submit that
+                // crashed before its atomic publish — ignore the orphan
+                Err(_) => continue,
+            };
+            let doc = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{}: corrupt job ledger: {e}", ledger.display()))?;
+            recovered.push(job_from_doc(&doc, &name, &ledger)?);
+        }
+        recovered.sort_by(|a, b| a.id.cmp(&b.id));
+        let mut st = self.state.lock().expect("job-manager lock");
+        for mut job in recovered {
+            let recorded_state = job.state;
+            if let Some(seq) = job.id.strip_prefix("job-").and_then(|s| s.parse::<u64>().ok()) {
+                st.next_seq = st.next_seq.max(seq + 1);
+            }
+            match job.state {
+                JobState::Done => {
+                    // a done job whose result record vanished is re-run
+                    let have_result =
+                        matches!(self.cache.lookup(&job.fingerprint), Ok(Some(_)));
+                    if have_result {
+                        st.done_by_fp
+                            .insert(job.fingerprint.clone(), job.id.clone());
+                    } else {
+                        job.state = JobState::Queued;
+                    }
+                }
+                JobState::Failed | JobState::Cancelled => {}
+                // queued stays queued; planning/running rewind — their
+                // solver progress survives in the run manifest
+                JobState::Queued | JobState::Planning | JobState::Running => {
+                    job.state = JobState::Queued;
+                }
+            }
+            if job.state == JobState::Queued {
+                // only one job per fingerprint can be in flight; later
+                // duplicates (possible if a crash raced a dedup) fold in
+                if st.inflight.contains_key(&job.fingerprint) {
+                    job.state = JobState::Cancelled;
+                    job.error = Some("superseded by an identical queued job".to_string());
+                } else {
+                    st.inflight
+                        .insert(job.fingerprint.clone(), job.id.clone());
+                    st.queue.push_back(job.id.clone());
+                }
+            }
+            // re-publish only records recovery actually changed: a
+            // long-lived ledger full of terminal jobs must not cost
+            // O(history) fsyncs — or refuse to start on one bad rewrite
+            // of an already-correct record
+            if job.state != recorded_state {
+                self.persist_locked(&job)?;
+            }
+            st.jobs.insert(job.id.clone(), job);
+        }
+        Ok(())
+    }
+
+    /// The ledger key of one job.
+    fn job_key(id: &str) -> String {
+        format!("jobs/{id}/job.json")
+    }
+
+    fn data_path(&self, id: &str) -> PathBuf {
+        self.root.join("jobs").join(id).join("data.csv")
+    }
+
+    fn run_dir(&self, fingerprint: &str) -> PathBuf {
+        self.root.join("runs").join(fingerprint)
+    }
+
+    /// Atomically publish one job's ledger record (caller holds or has
+    /// just released the state lock; the record is self-contained).
+    fn persist_locked(&self, job: &Job) -> Result<()> {
+        let doc = self.job_doc(job);
+        self.store
+            .publish_doc(&Self::job_key(&job.id), doc.to_pretty().as_bytes())
+    }
+
+    /// The persisted (and served) form of one job record.
+    fn job_doc(&self, job: &Job) -> Json {
+        Json::obj()
+            .set("format", super::api::API_FORMAT)
+            .set("id", job.id.as_str())
+            .set("state", job.state.name())
+            .set("fingerprint", job.fingerprint.as_str())
+            .set("score", job.score.as_str())
+            .set("p", job.p)
+            .set("n", job.n)
+            .set("shards", job.shards)
+            .set("threads", job.threads)
+            .set("batch", job.batch)
+            .set("backend", self.run_backend.name())
+            .set(
+                "error",
+                match &job.error {
+                    Some(e) => Json::Str(e.clone()),
+                    None => Json::Null,
+                },
+            )
+    }
+
+    /// Resolve a `path` submission inside the configured `--data-root`
+    /// sandbox. Without one, every `path` submission is rejected — a
+    /// network-reachable server must not read (or reveal the existence
+    /// of) arbitrary server files. Canonicalisation confines `..` and
+    /// symlink escapes.
+    fn read_sandboxed(&self, path: &str) -> Result<String, SubmitError> {
+        let Some(root) = &self.data_root else {
+            return Err(SubmitError::Invalid(
+                "'path' submissions are disabled: the server was started \
+                 without --data-root (send the dataset inline via 'csv', \
+                 or have the operator configure a data root)"
+                    .to_string(),
+            ));
+        };
+        let denied = || {
+            SubmitError::Invalid(format!(
+                "'{path}' is not a readable dataset under the server's data root"
+            ))
+        };
+        let base = root.canonicalize().map_err(|_| denied())?;
+        let full = base.join(path).canonicalize().map_err(|_| denied())?;
+        if !full.starts_with(&base) {
+            return Err(denied());
+        }
+        std::fs::read_to_string(&full).map_err(|_| denied())
+    }
+
+    /// Submit one job. Identical in-flight submissions coalesce; results
+    /// already in the cache short-circuit; everything else passes
+    /// admission and lands in the queue.
+    pub fn submit(&self, req: &SubmitRequest) -> Result<SubmitResponse, SubmitError> {
+        let invalid = |e: anyhow::Error| SubmitError::Invalid(format!("{e:#}"));
+        // borrow the inline CSV instead of cloning it: a submission can
+        // be MAX_BODY_BYTES long, and the handler already holds it once
+        let csv_text: std::borrow::Cow<'_, str> = match (&req.csv, &req.path) {
+            (Some(csv), None) => std::borrow::Cow::Borrowed(csv.as_str()),
+            (None, Some(path)) => std::borrow::Cow::Owned(self.read_sandboxed(path)?),
+            _ => {
+                return Err(SubmitError::Invalid(
+                    "submit needs exactly one of 'csv' or 'path'".to_string(),
+                ))
+            }
+        };
+        let kind = req.score_kind().map_err(invalid)?;
+        let mut data = parse_csv(&csv_text).map_err(invalid)?;
+        if let Some(p) = req.p {
+            if p < 1 || p > data.p() {
+                return Err(SubmitError::Invalid(format!(
+                    "p = {p} outside the dataset's 1..={} variables",
+                    data.p()
+                )));
+            }
+            data = data.take_vars(p);
+        }
+        // exact-DP caps (the service always drives the sharded solver)
+        crate::cli::validate_var_count(data.p(), true, true).map_err(invalid)?;
+        // knob ceilings, re-checked here so non-HTTP callers get them
+        // too: an unbounded shard count spins the planner, an unbounded
+        // batch wraps its u64 pricing arithmetic past admission
+        if req.shards == 0
+            || !req.shards.is_power_of_two()
+            || req.shards > super::api::MAX_SHARDS
+        {
+            return Err(SubmitError::Invalid(format!(
+                "shards must be a power of two at most {} (got {})",
+                super::api::MAX_SHARDS,
+                req.shards
+            )));
+        }
+        if req.batch > super::api::MAX_BATCH {
+            return Err(SubmitError::Invalid(format!(
+                "batch must be at most {} (got {})",
+                super::api::MAX_BATCH,
+                req.batch
+            )));
+        }
+        let fingerprint = run_fingerprint(&data, kind);
+        let plan = sharded_plan(data.p(), req.shards, req.threads, req.batch);
+
+        // Phase 1, under the lock: dedup/cache/admission checks and the
+        // id + fingerprint reservation. The job is inserted into the
+        // map (visible to status/dedup) but NOT the queue yet, so no
+        // executor can pick it up before its dataset is staged.
+        let reserved = {
+            let mut st = self.state.lock().expect("job-manager lock");
+            if st.draining {
+                return Err(SubmitError::Draining);
+            }
+            if let Some(id) = st.inflight.get(&fingerprint).cloned() {
+                // never coalesce onto a job whose cancellation is in
+                // flight: it will end `cancelled` and the new submission
+                // would be silently lost with it
+                let cancelling = st
+                    .jobs
+                    .get(&id)
+                    .is_some_and(|job| job.cancel_requested);
+                if cancelling {
+                    return Err(SubmitError::Busy(format!(
+                        "an identical job ('{id}') is being cancelled; \
+                         resubmit once it reports 'cancelled'"
+                    )));
+                }
+                Counters::bump(&self.counters.dedup_hits);
+                return Ok(SubmitResponse {
+                    id,
+                    deduped: true,
+                    cached: false,
+                });
+            }
+            if let Some(id) = st.done_by_fp.get(&fingerprint) {
+                Counters::bump(&self.counters.cache_hits);
+                return Ok(SubmitResponse {
+                    id: id.clone(),
+                    deduped: true,
+                    cached: true,
+                });
+            }
+            // admission counts phase-1 reservations still staging, so
+            // concurrent submissions cannot overshoot max_queue
+            if let Err(rejection) = self.admission.admit(
+                &plan,
+                self.run_backend,
+                st.queue.len() + st.reserved,
+            ) {
+                Counters::bump(&self.counters.rejected);
+                return Err(SubmitError::Rejected(rejection));
+            }
+            let id = format!("job-{:06}", st.next_seq);
+            st.next_seq += 1;
+            st.reserved += 1;
+            let job = Job {
+                id: id.clone(),
+                state: JobState::Queued,
+                fingerprint: fingerprint.clone(),
+                score: req.score.clone(),
+                p: data.p(),
+                n: data.n(),
+                shards: req.shards,
+                threads: req.threads,
+                batch: req.batch,
+                error: None,
+                cancel: CancelToken::new(),
+                cancel_requested: false,
+            };
+            let ledger_doc = self.job_doc(&job);
+            st.inflight.insert(fingerprint.clone(), id.clone());
+            st.jobs.insert(id.clone(), job);
+            (id, ledger_doc)
+        };
+        let (id, ledger_doc) = reserved;
+
+        // Phase 2, off the lock: dataset staging + the ledger publish —
+        // a multi-hundred-MB CSV write must not stall status/cancel/
+        // stats readers or the executors' state transitions.
+        let job_dir = self.root.join("jobs").join(&id);
+        let staged = (|| -> Result<()> {
+            std::fs::create_dir_all(&job_dir)?;
+            std::fs::write(job_dir.join("data.csv"), csv_text.as_bytes())?;
+            self.store
+                .publish_doc(&Self::job_key(&id), ledger_doc.to_pretty().as_bytes())
+        })();
+
+        // Phase 3, under the lock: enqueue on success, roll back on
+        // failure. Two races with a concurrent DELETE are closed here:
+        // a cancel that landed mid-staging must not be resurrected into
+        // the queue, and its locked 'cancelled' ledger publish may have
+        // been overwritten by our off-lock 'queued' publish — so any
+        // job that is no longer Queued gets its *current* record
+        // re-published under the lock (locked publishes serialise, so
+        // the last write reflects the in-memory truth).
+        let mut st = self.state.lock().expect("job-manager lock");
+        st.reserved = st.reserved.saturating_sub(1);
+        if let Err(e) = staged {
+            // the id was already handed to deduped clients — keep the
+            // record (as Failed) instead of vanishing it, and only drop
+            // the dedup reservation if it still points at this job
+            if st.inflight.get(&fingerprint).is_some_and(|v| v == &id) {
+                st.inflight.remove(&fingerprint);
+            }
+            if let Some(job) = st.jobs.get_mut(&id) {
+                if !job.state.is_terminal() {
+                    job.state = JobState::Failed;
+                    job.error = Some(format!("staging the submission failed: {e:#}"));
+                    let _ = self.persist_locked(job);
+                }
+            }
+            Counters::bump(&self.counters.failed);
+            return Err(SubmitError::Internal(format!("{e:#}")));
+        }
+        match st.jobs.get(&id).map(|job| job.state) {
+            Some(JobState::Queued) => st.queue.push_back(id.clone()),
+            Some(_) => {
+                // cancelled (or otherwise finalised) while staging:
+                // restore the authoritative ledger record
+                if let Some(job) = st.jobs.get(&id) {
+                    let _ = self.persist_locked(job);
+                }
+            }
+            None => {}
+        }
+        Counters::bump(&self.counters.submitted);
+        self.work.notify_one();
+        Ok(SubmitResponse {
+            id,
+            deduped: false,
+            cached: false,
+        })
+    }
+
+    /// Pop and fully execute one queued job. Returns `false` when the
+    /// queue was empty. This is the executor's unit of work — the
+    /// worker pool calls it in a loop, tests call it directly for
+    /// deterministic single-step execution.
+    pub fn run_one(&self) -> bool {
+        let claim = {
+            let mut st = self.state.lock().expect("job-manager lock");
+            let Some(id) = st.queue.pop_front() else {
+                return false;
+            };
+            let job = st.jobs.get_mut(&id).expect("queued job exists in the map");
+            job.state = JobState::Planning;
+            let claim = Claim {
+                id: id.clone(),
+                fingerprint: job.fingerprint.clone(),
+                score: job.score.clone(),
+                p: job.p,
+                shards: job.shards,
+                threads: job.threads,
+                batch: job.batch,
+                cancel: job.cancel.clone(),
+            };
+            let _ = self.persist_locked(job);
+            claim
+        };
+
+        // `planning` covers the real preparation work (cache probe,
+        // dataset reload + fingerprint revalidation, run-options
+        // assembly); only when a solve is actually about to start does
+        // the job transition to `running`. Cache hits and preparation
+        // failures finalise straight from `planning`.
+        let outcome = match self.prepare(&claim) {
+            Err(short_circuit) => short_circuit,
+            Ok(prepared) => {
+                {
+                    let mut st = self.state.lock().expect("job-manager lock");
+                    let job = st.jobs.get_mut(&claim.id).expect("claimed job exists");
+                    job.state = JobState::Running;
+                    let _ = self.persist_locked(job);
+                }
+                self.run_prepared(&prepared, &claim)
+            }
+        };
+
+        let mut st = self.state.lock().expect("job-manager lock");
+        let job = st.jobs.get_mut(&claim.id).expect("claimed job exists");
+        match outcome {
+            Exec::Done { via_cache } => {
+                job.state = JobState::Done;
+                job.error = None;
+                let _ = self.persist_locked(job);
+                st.inflight.remove(&claim.fingerprint);
+                st.done_by_fp
+                    .insert(claim.fingerprint.clone(), claim.id.clone());
+                Counters::bump(&self.counters.done);
+                if via_cache {
+                    Counters::bump(&self.counters.cache_hits);
+                }
+            }
+            Exec::Checkpointed => {
+                if job.cancel_requested {
+                    job.state = JobState::Cancelled;
+                    let _ = self.persist_locked(job);
+                    st.inflight.remove(&claim.fingerprint);
+                    Counters::bump(&self.counters.cancelled);
+                } else {
+                    // drain: the ledger keeps `running`; the next server
+                    // rewinds it to `queued` and resumes the manifest
+                }
+            }
+            Exec::Failed(message) => {
+                job.state = JobState::Failed;
+                job.error = Some(message);
+                let _ = self.persist_locked(job);
+                st.inflight.remove(&claim.fingerprint);
+                Counters::bump(&self.counters.failed);
+            }
+        }
+        true
+    }
+
+    /// The planning phase of one job, entirely off-lock: probe the
+    /// cache, reload and revalidate the staged dataset, assemble the
+    /// run options. `Err` is a short-circuit outcome (cache hit or
+    /// failure) that finalises without a solve.
+    fn prepare(&self, claim: &Claim) -> Result<Prepared, Exec> {
+        // cache first: an identical dataset may have finished while this
+        // submission sat in the queue (or before a restart)
+        match self.cache.lookup(&claim.fingerprint) {
+            Ok(Some(_)) => return Err(Exec::Done { via_cache: true }),
+            Ok(None) => {}
+            Err(e) => return Err(Exec::Failed(format!("result cache: {e:#}"))),
+        }
+        let staged = std::fs::read_to_string(self.data_path(&claim.id))
+            .map_err(|e| Exec::Failed(format!("reading staged dataset: {e}")))?;
+        let Some(kind) = ScoreKind::parse(&claim.score) else {
+            return Err(Exec::Failed(format!(
+                "ledger records unknown score '{}'",
+                claim.score
+            )));
+        };
+        let parsed = parse_csv(&staged)
+            .map_err(|e| Exec::Failed(format!("parsing staged dataset: {e:#}")))?;
+        if claim.p > parsed.p() {
+            return Err(Exec::Failed(format!(
+                "staged dataset has {} variables but the ledger records p = {}",
+                parsed.p(),
+                claim.p
+            )));
+        }
+        let data = parsed.take_vars(claim.p);
+        if run_fingerprint(&data, kind) != claim.fingerprint {
+            return Err(Exec::Failed(
+                "staged dataset no longer matches the ledger fingerprint".to_string(),
+            ));
+        }
+        let width = crate::cli::validate_var_count(data.p(), true, true)
+            .map_err(|e| Exec::Failed(format!("{e:#}")))?;
+        let run_dir = self.run_dir(&claim.fingerprint);
+        // resume an existing run (cancel-then-resubmit, server restart):
+        // shards = 0 adopts the manifest's geometry
+        let resuming = make_backend(self.run_backend, &run_dir)
+            .ok()
+            .and_then(|store| store.exists("manifest.json").ok())
+            .unwrap_or(false);
+        let options = ShardOptions {
+            shards: if resuming { 0 } else { claim.shards },
+            workers: claim.threads,
+            batch: claim.batch,
+            dir: run_dir,
+            stop_after_level: None,
+            keep_levels: false,
+            hosts: 1,
+            backend: self.run_backend,
+            cancel: claim.cancel.clone(),
+        };
+        Ok(Prepared {
+            data,
+            kind,
+            options,
+            width,
+        })
+    }
+
+    /// The running phase: drive the sharded solver and publish the
+    /// result record.
+    fn run_prepared(&self, prepared: &Prepared, claim: &Claim) -> Exec {
+        let engine = NativeEngine::new(&prepared.data, prepared.kind);
+        let solved = match prepared.width {
+            MaskWidth::Narrow => solve_sharded::<u32>(&engine, &prepared.options),
+            MaskWidth::Wide => solve_sharded::<u64>(&engine, &prepared.options),
+        };
+        match solved {
+            Ok(ShardOutcome::Complete(result)) => {
+                Counters::bump(&self.counters.solver_runs);
+                let record = result.to_json(prepared.data.names()).to_pretty();
+                match self.cache.publish(&claim.fingerprint, &record) {
+                    Ok(()) => Exec::Done { via_cache: false },
+                    Err(e) => Exec::Failed(format!("publishing result: {e:#}")),
+                }
+            }
+            Ok(ShardOutcome::Checkpointed { .. }) => Exec::Checkpointed,
+            Err(e) => Exec::Failed(format!("{e:#}")),
+        }
+    }
+
+    /// Executor thread body: run jobs until drained.
+    pub fn worker_loop(&self) {
+        loop {
+            {
+                let mut st = self.state.lock().expect("job-manager lock");
+                loop {
+                    if st.draining {
+                        return;
+                    }
+                    if !st.queue.is_empty() {
+                        break;
+                    }
+                    st = self.work.wait(st).expect("job-manager lock");
+                }
+            }
+            self.run_one();
+        }
+    }
+
+    /// Cancel a job (HTTP `DELETE`).
+    pub fn cancel(&self, id: &str) -> CancelOutcome {
+        let mut st = self.state.lock().expect("job-manager lock");
+        let Some(job) = st.jobs.get_mut(id) else {
+            return CancelOutcome::Unknown;
+        };
+        if job.state.is_terminal() {
+            return CancelOutcome::Terminal(job.state);
+        }
+        job.cancel.cancel();
+        job.cancel_requested = true;
+        if job.state == JobState::Queued {
+            job.state = JobState::Cancelled;
+            let fingerprint = job.fingerprint.clone();
+            let _ = self.persist_locked(job);
+            st.queue.retain(|q| q != id);
+            st.inflight.remove(&fingerprint);
+            Counters::bump(&self.counters.cancelled);
+            CancelOutcome::Cancelled
+        } else {
+            CancelOutcome::Requested
+        }
+    }
+
+    /// Begin a graceful drain: no new submissions, no new executions,
+    /// running solves checkpoint at their next level boundary. The
+    /// ledger keeps interrupted jobs in `running`, which the next
+    /// server's recovery rewinds and resumes.
+    pub fn drain(&self) {
+        let mut st = self.state.lock().expect("job-manager lock");
+        st.draining = true;
+        for job in st.jobs.values() {
+            if !job.state.is_terminal() {
+                job.cancel.cancel();
+            }
+        }
+        self.work.notify_all();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.state.lock().expect("job-manager lock").draining
+    }
+
+    /// The served status record for one job (`GET /v1/jobs/{id}`): the
+    /// ledger doc plus live `progress` read from the run manifest.
+    pub fn status_json(&self, id: &str) -> Option<Json> {
+        let (doc, live_fp) = {
+            let st = self.state.lock().expect("job-manager lock");
+            let job = st.jobs.get(id)?;
+            let live = matches!(job.state, JobState::Planning | JobState::Running)
+                .then(|| job.fingerprint.clone());
+            (self.job_doc(job), live)
+        };
+        let progress = live_fp
+            .and_then(|fp| self.read_progress(&fp))
+            .unwrap_or(Json::Null);
+        Some(doc.set("progress", progress))
+    }
+
+    /// Live progress from the run's manifest, if one exists. The
+    /// manifest records the 0-based *last committed level index* (−1
+    /// before level 0 commits) over levels `0..=p`; the served record
+    /// normalises that to a count: `levels_complete` committed levels
+    /// out of `levels_total = p + 1`.
+    fn read_progress(&self, fingerprint: &str) -> Option<Json> {
+        let store = make_backend(self.run_backend, &self.run_dir(fingerprint)).ok()?;
+        let bytes = store.read_doc("manifest.json").ok()??;
+        let doc = Json::parse(std::str::from_utf8(&bytes).ok()?).ok()?;
+        let last_committed = doc.get("levels_complete")?.as_i64()?;
+        let done_count = (last_committed + 1).max(0) as u64;
+        let total = doc.get("p")?.as_u64()? + 1;
+        Some(
+            Json::obj()
+                .set("levels_complete", done_count)
+                .set("levels_total", total),
+        )
+    }
+
+    /// The result record for a done job (`GET /v1/jobs/{id}/result`).
+    /// `Ok(None)` = job exists but is not done; `Err` = unknown job or
+    /// cache failure.
+    pub fn result_text(&self, id: &str) -> Result<Option<String>> {
+        let (state, fingerprint) = {
+            let st = self.state.lock().expect("job-manager lock");
+            let job = st
+                .jobs
+                .get(id)
+                .ok_or_else(|| anyhow::anyhow!("unknown job '{id}'"))?;
+            (job.state, job.fingerprint.clone())
+        };
+        if state != JobState::Done {
+            return Ok(None);
+        }
+        let record = self
+            .cache
+            .lookup(&fingerprint)?
+            .ok_or_else(|| anyhow::anyhow!("done job '{id}' has no cached result"))?;
+        Ok(Some(record))
+    }
+
+    /// The job state, for callers that only route on it.
+    pub fn job_state(&self, id: &str) -> Option<JobState> {
+        let st = self.state.lock().expect("job-manager lock");
+        st.jobs.get(id).map(|j| j.state)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.state.lock().expect("job-manager lock").queue.len()
+    }
+
+    /// Times the solver actually ran (dedup/cache hits excluded) — the
+    /// exactly-once accounting the integration tests assert.
+    pub fn solver_runs(&self) -> u64 {
+        self.counters.solver_runs.load(Ordering::Relaxed)
+    }
+
+    /// The `GET /v1/stats` record (the server adds its HTTP counters).
+    pub fn stats_json(&self) -> Json {
+        let st = self.state.lock().expect("job-manager lock");
+        let mut by_state = [0u64; 6];
+        for job in st.jobs.values() {
+            let ix = match job.state {
+                JobState::Queued => 0,
+                JobState::Planning => 1,
+                JobState::Running => 2,
+                JobState::Done => 3,
+                JobState::Failed => 4,
+                JobState::Cancelled => 5,
+            };
+            by_state[ix] += 1;
+        }
+        let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        Json::obj()
+            .set("backend", self.run_backend.name())
+            .set("draining", st.draining)
+            .set("queue_depth", st.queue.len() as u64)
+            .set(
+                "jobs",
+                Json::obj()
+                    .set("queued", by_state[0])
+                    .set("planning", by_state[1])
+                    .set("running", by_state[2])
+                    .set("done", by_state[3])
+                    .set("failed", by_state[4])
+                    .set("cancelled", by_state[5]),
+            )
+            .set(
+                "counters",
+                Json::obj()
+                    .set("submitted", get(&self.counters.submitted))
+                    .set("dedup_hits", get(&self.counters.dedup_hits))
+                    .set("cache_hits", get(&self.counters.cache_hits))
+                    .set("rejected", get(&self.counters.rejected))
+                    .set("solver_runs", get(&self.counters.solver_runs))
+                    .set("done", get(&self.counters.done))
+                    .set("failed", get(&self.counters.failed))
+                    .set("cancelled", get(&self.counters.cancelled)),
+            )
+    }
+}
+
+/// Rebuild one job from its ledger record.
+fn job_from_doc(doc: &Json, dir_name: &str, ledger: &std::path::Path) -> Result<Job> {
+    let bad = |what: &str| anyhow::anyhow!("{}: {what}", ledger.display());
+    let str_field = |key: &str| -> Result<String> {
+        doc.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| bad(&format!("missing string field '{key}'")))
+    };
+    let count_field = |key: &str| -> Result<usize> {
+        doc.get(key)
+            .and_then(Json::as_u64)
+            .map(|v| v as usize)
+            .ok_or_else(|| bad(&format!("missing count field '{key}'")))
+    };
+    let id = str_field("id")?;
+    if id != dir_name {
+        return Err(bad(&format!("ledger id '{id}' does not match its directory")));
+    }
+    let state_name = str_field("state")?;
+    let state = JobState::parse(&state_name)
+        .ok_or_else(|| bad(&format!("unknown state '{state_name}'")))?;
+    Ok(Job {
+        id,
+        state,
+        fingerprint: str_field("fingerprint")?,
+        score: str_field("score")?,
+        p: count_field("p")?,
+        n: count_field("n")?,
+        shards: count_field("shards")?,
+        threads: count_field("threads")?,
+        batch: count_field("batch")?,
+        error: doc
+            .get("error")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+        cancel: CancelToken::new(),
+        cancel_requested: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Dataset};
+    use crate::solver::LeveledSolver;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bnsl_jobs_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn csv_text(data: &Dataset) -> String {
+        let mut out = data.names().join(",");
+        out.push('\n');
+        for i in 0..data.n() {
+            let row: Vec<String> = (0..data.p())
+                .map(|v| data.value(i, v).to_string())
+                .collect();
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    fn manager(root: &PathBuf, budgets: Budgets) -> Arc<JobManager> {
+        JobManager::open(JobManagerOptions {
+            root: root.clone(),
+            backend: BackendKind::Posix,
+            budgets,
+            max_queue: 8,
+            data_root: None,
+        })
+        .unwrap()
+    }
+
+    fn inline_request(text: &str, shards: usize) -> SubmitRequest {
+        SubmitRequest {
+            csv: Some(text.to_string()),
+            shards,
+            ..Default::default()
+        }
+    }
+
+    /// Satellite (ISSUE 5): an over-budget job is rejected up front —
+    /// no ledger state, no queue slot — and the plan verdict travels in
+    /// the error body.
+    #[test]
+    fn over_budget_submission_rejected_with_verdict() {
+        let root = temp_root("budget");
+        let tight = Budgets {
+            ram_bytes: 1,
+            ..Budgets::unlimited()
+        };
+        let mgr = manager(&root, tight);
+        let d = synth::random(10, 60, 3, &mut crate::util::rng::Rng::new(3));
+        let req = inline_request(&csv_text(&d), 4);
+        match mgr.submit(&req) {
+            Err(SubmitError::Rejected(rejection)) => {
+                let verdict = rejection.verdict.expect("verdict attached");
+                assert!(!verdict.fits);
+                assert!(
+                    verdict.reasons.iter().any(|r| r.contains("resident RAM")),
+                    "{:?}",
+                    verdict.reasons
+                );
+            }
+            other => panic!("expected a budget rejection, got {other:?}"),
+        }
+        assert_eq!(mgr.queue_depth(), 0);
+        assert!(mgr.status_json("job-000001").is_none(), "no job was created");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Satellite (ISSUE 5): duplicate submissions coalesce, a finished
+    /// fingerprint is served from the cache, and the solver runs once.
+    #[test]
+    fn dedup_and_cache_paths_run_the_solver_exactly_once() {
+        let root = temp_root("dedup");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::random(8, 80, 3, &mut crate::util::rng::Rng::new(5));
+        let text = csv_text(&d);
+        let req = inline_request(&text, 2);
+        let a = mgr.submit(&req).unwrap();
+        assert!(!a.deduped && !a.cached);
+        // identical submission while queued: coalesces onto job A
+        let b = mgr.submit(&req).unwrap();
+        assert!(b.deduped && !b.cached);
+        assert_eq!(b.id, a.id);
+        assert!(mgr.run_one(), "one queued job to run");
+        assert!(!mgr.run_one(), "queue drained");
+        // identical submission after completion: served from the cache
+        let c = mgr.submit(&req).unwrap();
+        assert!(c.deduped && c.cached);
+        assert_eq!(c.id, a.id);
+        assert_eq!(mgr.solver_runs(), 1, "the solver ran exactly once");
+        // the served record is bit-identical to a direct resident solve
+        let parsed = parse_csv(&text).unwrap();
+        let engine = NativeEngine::new(&parsed, ScoreKind::Jeffreys);
+        let direct = LeveledSolver::new(&engine).solve();
+        let record = mgr.result_text(&a.id).unwrap().expect("result ready");
+        let doc = Json::parse(&record).unwrap();
+        let served = doc.get("log_score").unwrap().as_f64().unwrap();
+        assert_eq!(served.to_bits(), direct.log_score.to_bits());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Satellite (ISSUE 5): the ledger survives a crash — a job found
+    /// in `running` is rewound to `queued`, and its half-finished run
+    /// manifest is RESUMED, not recomputed.
+    #[test]
+    fn crashed_server_restart_resumes_the_run_manifest() {
+        let root = temp_root("crash");
+        let d = synth::random(10, 90, 3, &mut crate::util::rng::Rng::new(9));
+        let text = csv_text(&d);
+        let req = inline_request(&text, 2);
+        let (id, fingerprint) = {
+            let mgr = manager(&root, Budgets::unlimited());
+            let sub = mgr.submit(&req).unwrap();
+            let status = mgr.status_json(&sub.id).unwrap();
+            let fp = status
+                .get("fingerprint")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string();
+            (sub.id, fp)
+            // manager dropped = server gone; the job never executed
+        };
+        // simulate the crash landing mid-solve: the run directory holds
+        // a committed checkpoint at level 4, and the ledger says running
+        let parsed = parse_csv(&text).unwrap();
+        let engine = NativeEngine::new(&parsed, ScoreKind::Jeffreys);
+        let outcome = solve_sharded::<u32>(
+            &engine,
+            &ShardOptions {
+                shards: 2,
+                dir: root.join("runs").join(&fingerprint),
+                stop_after_level: Some(4),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(matches!(outcome, ShardOutcome::Checkpointed { level: 4, .. }));
+        let ledger = root.join("jobs").join(&id).join("job.json");
+        let record = std::fs::read_to_string(&ledger).unwrap();
+        assert!(record.contains("\"queued\""));
+        std::fs::write(&ledger, record.replace("\"queued\"", "\"running\"")).unwrap();
+
+        // restart: recovery rewinds running -> queued and re-executes
+        let mgr = manager(&root, Budgets::unlimited());
+        let status = mgr.status_json(&id).unwrap();
+        assert_eq!(
+            status.get("state").unwrap().as_str(),
+            Some("queued"),
+            "running rewound to queued on recovery"
+        );
+        assert!(mgr.run_one());
+        let record = mgr.result_text(&id).unwrap().expect("resumed to done");
+        let doc = Json::parse(&record).unwrap();
+        let direct = LeveledSolver::new(&engine).solve();
+        let served = doc.get("log_score").unwrap().as_f64().unwrap();
+        assert_eq!(served.to_bits(), direct.log_score.to_bits());
+        let resumed = doc
+            .get("stats")
+            .unwrap()
+            .get("resumed_levels")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        assert_eq!(resumed, 5, "levels 0..=4 came from the crashed run's manifest");
+        assert_eq!(mgr.solver_runs(), 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Satellite (ISSUE 5): cancel-then-resubmit — the cancelled job is
+    /// terminal, the resubmission is a fresh job and completes.
+    #[test]
+    fn cancel_queued_then_resubmit_runs_fresh() {
+        let root = temp_root("cancel");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::random(7, 60, 3, &mut crate::util::rng::Rng::new(13));
+        let req = inline_request(&csv_text(&d), 1);
+        let a = mgr.submit(&req).unwrap();
+        assert_eq!(mgr.cancel(&a.id), CancelOutcome::Cancelled);
+        assert_eq!(mgr.job_state(&a.id), Some(JobState::Cancelled));
+        assert!(!mgr.run_one(), "cancelled job left no queued work");
+        // resubmit: NOT deduped onto the cancelled job
+        let b = mgr.submit(&req).unwrap();
+        assert!(!b.deduped);
+        assert_ne!(b.id, a.id);
+        assert!(mgr.run_one());
+        assert_eq!(mgr.job_state(&b.id), Some(JobState::Done));
+        // terminal jobs reject further cancellation; unknown ids are unknown
+        assert_eq!(
+            mgr.cancel(&b.id),
+            CancelOutcome::Terminal(JobState::Done)
+        );
+        assert_eq!(mgr.cancel("job-999999"), CancelOutcome::Unknown);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Review hardening: `path` submissions are a sandboxed opt-in —
+    /// rejected without `--data-root`, confined inside it with one, and
+    /// never an existence oracle for files elsewhere.
+    #[test]
+    fn path_submissions_are_confined_to_the_data_root() {
+        let root = temp_root("sandbox");
+        let d = synth::random(6, 40, 3, &mut crate::util::rng::Rng::new(8));
+        let text = csv_text(&d);
+        // no data root configured: every path submission is rejected
+        let closed = manager(&root, Budgets::unlimited());
+        let req_for = |path: &str| SubmitRequest {
+            path: Some(path.to_string()),
+            ..Default::default()
+        };
+        match closed.submit(&req_for("anything.csv")) {
+            Err(SubmitError::Invalid(m)) => assert!(m.contains("--data-root"), "{m}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        drop(closed);
+
+        // with a data root: inside resolves, escapes and absolute
+        // outside paths get one uniform denial
+        let data_dir = std::env::temp_dir()
+            .join(format!("bnsl_dataroot_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&data_dir);
+        std::fs::create_dir_all(&data_dir).unwrap();
+        std::fs::write(data_dir.join("ok.csv"), &text).unwrap();
+        let outside = std::env::temp_dir()
+            .join(format!("bnsl_outside_{}.csv", std::process::id()));
+        std::fs::write(&outside, &text).unwrap();
+        let root2 = temp_root("sandbox2");
+        let open = JobManager::open(JobManagerOptions {
+            root: root2.clone(),
+            backend: BackendKind::Posix,
+            budgets: Budgets::unlimited(),
+            max_queue: 8,
+            data_root: Some(data_dir.clone()),
+        })
+        .unwrap();
+        assert!(open.submit(&req_for("ok.csv")).is_ok());
+        for escape in [
+            "../escape.csv",
+            outside.to_str().unwrap(),
+            "/etc/hostname",
+            "missing.csv",
+        ] {
+            match open.submit(&req_for(escape)) {
+                Err(SubmitError::Invalid(m)) => {
+                    assert!(
+                        m.contains("not a readable dataset under"),
+                        "uniform denial for '{escape}': {m}"
+                    );
+                }
+                other => panic!("'{escape}' must be denied, got {other:?}"),
+            }
+        }
+        let _ = std::fs::remove_dir_all(&root);
+        let _ = std::fs::remove_dir_all(&root2);
+        let _ = std::fs::remove_dir_all(&data_dir);
+        let _ = std::fs::remove_file(&outside);
+    }
+
+    #[test]
+    fn draining_manager_accepts_no_new_work() {
+        let root = temp_root("drain");
+        let mgr = manager(&root, Budgets::unlimited());
+        mgr.drain();
+        assert!(mgr.is_draining());
+        let d = synth::random(5, 30, 3, &mut crate::util::rng::Rng::new(1));
+        match mgr.submit(&inline_request(&csv_text(&d), 1)) {
+            Err(SubmitError::Draining) => {}
+            other => panic!("expected Draining, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn stats_record_counts_queue_and_outcomes() {
+        let root = temp_root("stats");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::random(6, 40, 3, &mut crate::util::rng::Rng::new(21));
+        let req = inline_request(&csv_text(&d), 1);
+        mgr.submit(&req).unwrap();
+        mgr.submit(&req).unwrap(); // dedup
+        let stats = mgr.stats_json();
+        assert_eq!(stats.get("queue_depth").unwrap().as_u64(), Some(1));
+        let counters = stats.get("counters").unwrap();
+        assert_eq!(counters.get("submitted").unwrap().as_u64(), Some(1));
+        assert_eq!(counters.get("dedup_hits").unwrap().as_u64(), Some(1));
+        mgr.run_one();
+        let stats = mgr.stats_json();
+        assert_eq!(
+            stats.get("jobs").unwrap().get("done").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(
+            stats
+                .get("counters")
+                .unwrap()
+                .get("solver_runs")
+                .unwrap()
+                .as_u64(),
+            Some(1)
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

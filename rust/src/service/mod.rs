@@ -1,0 +1,41 @@
+//! The job service: `bnsl serve` turns the solver stack into a
+//! multi-tenant structure-learning server.
+//!
+//! The expensive artifact of this repo is the *solved level frontier* —
+//! durably persisted per level by the sharded coordinator
+//! ([`crate::coordinator::shard`]) and bit-identical however it is
+//! computed. The service layer is what makes that artifact reachable by
+//! traffic: it **queues** submissions (bounded, with
+//! [`crate::coordinator::plan`]-priced admission), **dedupes** them by
+//! the dataset/score fingerprint (identical concurrent submissions run
+//! the solver exactly once; repeats of a finished solve return the
+//! cached DAG instantly), **cancels** cooperatively (the solver's
+//! [`crate::solver::CancelToken`] checkpoints at the next level
+//! boundary), and **resumes** interrupted jobs across server restarts
+//! through the existing `--resume` manifest machinery.
+//!
+//! Module map — one module per concern:
+//!
+//! * [`api`] — the wire/ledger JSON types (schemas in `docs/FORMATS.md`)
+//! * [`queue`] — budget-priced admission control
+//! * [`cache`] — the fingerprint-keyed durable result cache
+//! * [`jobs`] — the job manager: ledger, state machine, executor
+//! * [`server`] — HTTP/1.1 front on `std::net` + the thread pools
+//! * [`client`] — the matching minimal client (`bnsl submit`/`status`)
+//!
+//! No new dependencies anywhere — hand-rolled HTTP over
+//! `std::net::TcpListener`, the crate's own JSON, and the coordinator's
+//! storage primitives for every durable write (the vendored-`anyhow`
+//! precedent).
+
+pub mod api;
+pub mod cache;
+pub mod client;
+pub mod jobs;
+pub mod queue;
+pub mod server;
+
+pub use api::{JobState, SubmitRequest, SubmitResponse};
+pub use jobs::{CancelOutcome, JobManager, JobManagerOptions, SubmitError};
+pub use queue::{Admission, Rejection};
+pub use server::{ServeOptions, Server};

@@ -1,0 +1,135 @@
+//! Admission control for the job queue: a submission is accepted only
+//! if (a) the queue has room and (b) the run's *plan* fits the server's
+//! configured budgets.
+//!
+//! Pricing is entirely [`crate::coordinator::plan`]'s: the service never
+//! invents its own cost model, it compares
+//! [`crate::coordinator::plan::sharded_plan`] output
+//! against the [`Budgets`] the operator configured (`bnsl serve
+//! --ram-budget-mb/--fd-budget/--request-budget`). A rejected job never
+//! creates ledger state — the rejection (with the full
+//! [`BudgetVerdict`]) goes back in the HTTP error body, so the client
+//! learns *which* ceiling it hit and which knob to turn.
+
+use crate::coordinator::plan::{BudgetVerdict, Budgets, ShardedPlan};
+use crate::coordinator::storage::BackendKind;
+use crate::util::json::Json;
+
+/// Why a submission was not admitted.
+#[derive(Clone, Debug)]
+pub struct Rejection {
+    /// One-line summary for the error body.
+    pub reason: String,
+    /// The plan verdict, when the rejection came from budget pricing
+    /// (absent for queue-full rejections).
+    pub verdict: Option<BudgetVerdict>,
+}
+
+impl Rejection {
+    /// Error body for the HTTP 422 response: `{"error", "verdict"?}`.
+    pub fn to_json(&self) -> Json {
+        let mut doc = super::api::error_body(&self.reason);
+        if let Some(v) = &self.verdict {
+            doc = doc.set("verdict", v.to_json());
+        }
+        doc
+    }
+}
+
+/// The admission policy: budgets + queue bound.
+#[derive(Clone, Debug)]
+pub struct Admission {
+    pub budgets: Budgets,
+    /// Maximum queued (not yet running) jobs.
+    pub max_queue: usize,
+}
+
+impl Admission {
+    /// Admit or reject one planned submission given the current queue
+    /// depth. Pure — no state is taken here; the caller enqueues on
+    /// `Ok`.
+    pub fn admit(
+        &self,
+        plan: &ShardedPlan,
+        backend: BackendKind,
+        queue_depth: usize,
+    ) -> Result<(), Rejection> {
+        if queue_depth >= self.max_queue {
+            return Err(Rejection {
+                reason: format!(
+                    "queue is full ({queue_depth}/{} jobs queued); retry later",
+                    self.max_queue
+                ),
+                verdict: None,
+            });
+        }
+        let verdict = plan.fits_budget(backend, &self.budgets);
+        if !verdict.fits {
+            return Err(Rejection {
+                reason: format!(
+                    "job plan exceeds the server's budgets: {}",
+                    verdict.reasons.join("; ")
+                ),
+                verdict: Some(verdict),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::sharded_plan;
+
+    fn policy(budgets: Budgets) -> Admission {
+        Admission {
+            budgets,
+            max_queue: 4,
+        }
+    }
+
+    /// Satellite (ISSUE 5): an over-budget job is rejected and the plan
+    /// verdict travels in the error body.
+    #[test]
+    fn over_budget_plan_is_rejected_with_the_verdict() {
+        let plan = sharded_plan(20, 8, 2, 1024);
+        let tight = Budgets {
+            ram_bytes: 1,
+            ..Budgets::unlimited()
+        };
+        let rejection = policy(tight)
+            .admit(&plan, BackendKind::Posix, 0)
+            .unwrap_err();
+        let verdict = rejection.verdict.as_ref().expect("verdict attached");
+        assert!(!verdict.fits);
+        assert!(rejection.reason.contains("resident RAM"), "{rejection:?}");
+        let body = rejection.to_json().to_string();
+        assert!(body.contains("\"fits\":false"), "{body}");
+        assert!(body.contains("\"error\""), "{body}");
+    }
+
+    #[test]
+    fn fitting_plan_is_admitted_until_the_queue_fills() {
+        let plan = sharded_plan(12, 2, 1, 64);
+        let policy = policy(Budgets::unlimited());
+        assert!(policy.admit(&plan, BackendKind::Posix, 0).is_ok());
+        assert!(policy.admit(&plan, BackendKind::Posix, 3).is_ok());
+        let full = policy
+            .admit(&plan, BackendKind::Posix, 4)
+            .unwrap_err();
+        assert!(full.verdict.is_none(), "queue-full carries no verdict");
+        assert!(full.reason.contains("queue is full"), "{}", full.reason);
+    }
+
+    #[test]
+    fn request_budget_binds_object_backed_jobs_only() {
+        let plan = sharded_plan(16, 4, 1, 1024);
+        let metered = policy(Budgets {
+            object_requests: Some(1),
+            ..Budgets::unlimited()
+        });
+        assert!(metered.admit(&plan, BackendKind::Posix, 0).is_ok());
+        assert!(metered.admit(&plan, BackendKind::Object, 0).is_err());
+    }
+}

@@ -1,0 +1,533 @@
+//! The HTTP/1.1 front of `bnsl serve` — hand-rolled on
+//! `std::net::TcpListener` (the vendored-`anyhow`/own-JSON precedent:
+//! no framework, no new dependencies) with a bounded handler pool.
+//!
+//! # Endpoints
+//!
+//! | method + path | purpose |
+//! |---|---|
+//! | `POST /v1/jobs` | submit a job ([`crate::service::api::SubmitRequest`]) |
+//! | `GET /v1/jobs/{id}` | job status + live level progress |
+//! | `GET /v1/jobs/{id}/result` | the solved network (bit-identical to a direct run) |
+//! | `DELETE /v1/jobs/{id}` | cooperative cancel (checkpoints, then `cancelled`) |
+//! | `GET /v1/healthz` | liveness + drain flag |
+//! | `GET /v1/stats` | queue depth, cache/dedup counters, per-endpoint request totals |
+//!
+//! # Threads
+//!
+//! One accept thread (non-blocking + poll so shutdown is prompt), a
+//! bounded pool of HTTP handler threads fed over a `sync_channel` (TCP
+//! backpressure once it fills), and `max_concurrent` executor threads
+//! running [`crate::service::jobs::JobManager::worker_loop`]. A drain
+//! (SIGTERM, or [`Server::drain`]) stops accepting, fires every
+//! running job's [`crate::solver::CancelToken`], lets solves checkpoint
+//! at their next level boundary, and joins everything; a subsequent
+//! [`Server::start`] on the same jobs directory resumes the interrupted
+//! work from the run manifests.
+
+use super::api::{error_body, SubmitRequest};
+use super::jobs::{CancelOutcome, JobManager, JobManagerOptions, SubmitError};
+use crate::coordinator::plan::Budgets;
+use crate::coordinator::storage::BackendKind;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Hard limits on one request. The size caps bound what a client can
+/// make a handler *allocate*; the deadline bounds how long one
+/// connection can *occupy* a handler (a trickling client is cut off at
+/// the deadline, not just between bytes) — a slow or silent client
+/// stalls one handler for at most this long, not forever. For a truly
+/// adversarial network, front the server with a real proxy.
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 256 << 20;
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+const REQUEST_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Configuration for [`Server::start`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address (default loopback; set `0.0.0.0` to serve a fleet).
+    pub addr: String,
+    /// TCP port; `0` binds an ephemeral port (see [`Server::addr`]).
+    pub port: u16,
+    /// The jobs directory (ledger, runs, result cache).
+    pub jobs_dir: PathBuf,
+    /// Storage backend for the solver runs (`--backend posix|object`).
+    pub backend: BackendKind,
+    /// Admission budgets (RAM / fd / object-request ceilings).
+    pub budgets: Budgets,
+    /// Executor threads = concurrently running solves. `0` is accepted
+    /// (a queue-only server) but only useful in tests.
+    pub max_concurrent: usize,
+    /// Maximum queued jobs before admission rejects with queue-full.
+    pub max_queue: usize,
+    /// HTTP handler threads.
+    pub http_threads: usize,
+    /// Sandbox for `path` submissions (`--data-root`); `None` rejects
+    /// them — a reachable server must not read arbitrary files.
+    pub data_root: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1".to_string(),
+            port: 7878,
+            jobs_dir: PathBuf::from("bnsl_jobs"),
+            backend: BackendKind::Posix,
+            budgets: Budgets::detect(),
+            max_concurrent: 2,
+            max_queue: 64,
+            http_threads: 4,
+            data_root: None,
+        }
+    }
+}
+
+/// Per-endpoint request totals for `GET /v1/stats`.
+#[derive(Default)]
+struct EndpointStats {
+    submit: AtomicU64,
+    status: AtomicU64,
+    result: AtomicU64,
+    cancel: AtomicU64,
+    healthz: AtomicU64,
+    stats: AtomicU64,
+    other: AtomicU64,
+}
+
+impl EndpointStats {
+    fn to_json(&self) -> Json {
+        let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        Json::obj()
+            .set("submit", get(&self.submit))
+            .set("status", get(&self.status))
+            .set("result", get(&self.result))
+            .set("cancel", get(&self.cancel))
+            .set("healthz", get(&self.healthz))
+            .set("stats", get(&self.stats))
+            .set("other", get(&self.other))
+    }
+}
+
+/// A running `bnsl serve` instance (in-process — the CLI wraps it, the
+/// integration tests drive it directly).
+pub struct Server {
+    manager: Arc<JobManager>,
+    endpoints: Arc<EndpointStats>,
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, recover the ledger, and spawn the accept/handler/executor
+    /// threads. Returns once the socket is listening.
+    pub fn start(options: ServeOptions) -> Result<Server> {
+        let manager = JobManager::open(JobManagerOptions {
+            root: options.jobs_dir.clone(),
+            backend: options.backend,
+            budgets: options.budgets.clone(),
+            max_queue: options.max_queue,
+            data_root: options.data_root.clone(),
+        })?;
+        let listener = TcpListener::bind((options.addr.as_str(), options.port))
+            .with_context(|| format!("binding {}:{}", options.addr, options.port))?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let endpoints = Arc::new(EndpointStats::default());
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(64);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut threads = Vec::new();
+        for _ in 0..options.http_threads.max(1) {
+            let rx = rx.clone();
+            let manager = manager.clone();
+            let endpoints = endpoints.clone();
+            threads.push(std::thread::spawn(move || loop {
+                let conn = {
+                    let guard = rx.lock().expect("handler channel lock");
+                    guard.recv()
+                };
+                match conn {
+                    Ok(stream) => handle_connection(stream, &manager, &endpoints),
+                    Err(_) => return, // accept thread gone: drain complete
+                }
+            }));
+        }
+        for _ in 0..options.max_concurrent {
+            let manager = manager.clone();
+            threads.push(std::thread::spawn(move || manager.worker_loop()));
+        }
+        {
+            let shutdown = shutdown.clone();
+            threads.push(std::thread::spawn(move || {
+                loop {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // a send error means every handler exited —
+                            // only possible during shutdown
+                            if tx.send(stream).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                    }
+                }
+                // dropping the sender ends the handler pool once the
+                // already-accepted connections are served
+                drop(tx);
+            }));
+        }
+        Ok(Server {
+            manager,
+            endpoints,
+            local_addr,
+            shutdown,
+            threads,
+        })
+    }
+
+    /// The bound address (resolves `port: 0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Direct manager access (tests; the CLI goes through HTTP).
+    pub fn manager(&self) -> &Arc<JobManager> {
+        &self.manager
+    }
+
+    /// Begin a graceful drain: stop accepting, reject new submissions,
+    /// checkpoint running solves at their next level boundary.
+    pub fn drain(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.manager.drain();
+    }
+
+    /// Wait for every thread after a drain.
+    pub fn join(mut self) -> Result<()> {
+        for handle in self.threads.drain(..) {
+            if handle.join().is_err() {
+                bail!("a server thread panicked during shutdown");
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve until `stop` turns true (the CLI sets it from SIGTERM /
+    /// SIGINT), then drain and join.
+    pub fn run_until(self, stop: &AtomicBool) -> Result<()> {
+        while !stop.load(Ordering::SeqCst) && !self.shutdown.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        self.drain();
+        self.join()
+    }
+}
+
+/// One parsed HTTP request.
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Read and parse one request off the stream (HTTP/1.1, Content-Length
+/// bodies only — the API never chunks). Per-read timeouts catch silent
+/// peers; the overall deadline catches trickling ones.
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    // byte-at-a-time until CRLFCRLF: requests are small and this keeps
+    // the parser trivially correct about body-boundary bytes
+    while !head.ends_with(b"\r\n\r\n") {
+        if head.len() > MAX_HEAD_BYTES {
+            bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        if std::time::Instant::now() > deadline {
+            bail!("request not completed within {REQUEST_DEADLINE:?}");
+        }
+        let n = stream.read(&mut byte)?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        head.push(byte[0]);
+    }
+    let head = String::from_utf8(head).context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || !path.starts_with('/') {
+        bail!("malformed request line '{request_line}'");
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad Content-Length '{}'", value.trim()))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("request body exceeds {MAX_BODY_BYTES} bytes");
+    }
+    let mut body = vec![0u8; content_length];
+    let mut filled = 0usize;
+    while filled < content_length {
+        if std::time::Instant::now() > deadline {
+            bail!("request not completed within {REQUEST_DEADLINE:?}");
+        }
+        let n = stream.read(&mut body[filled..]).context("reading request body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        filled += n;
+    }
+    Ok(Request {
+        method,
+        path,
+        body: String::from_utf8(body).context("request body is not UTF-8")?,
+    })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &str) {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+fn handle_connection(mut stream: TcpStream, manager: &JobManager, endpoints: &EndpointStats) {
+    match read_request(&mut stream) {
+        Ok(request) => {
+            let (status, body) = route(&request, manager, endpoints);
+            write_response(&mut stream, status, &body.to_string());
+        }
+        Err(e) => {
+            write_response(
+                &mut stream,
+                400,
+                &error_body(&format!("{e:#}")).to_string(),
+            );
+        }
+    }
+}
+
+/// Dispatch one request to the job manager.
+fn route(request: &Request, manager: &JobManager, endpoints: &EndpointStats) -> (u16, Json) {
+    let path = request.path.as_str();
+    let method = request.method.as_str();
+    let segments: Vec<&str> = path.trim_matches('/').split('/').collect();
+    match (method, segments.as_slice()) {
+        ("POST", ["v1", "jobs"]) => {
+            endpoints.submit.fetch_add(1, Ordering::Relaxed);
+            let doc = match Json::parse(&request.body) {
+                Ok(doc) => doc,
+                Err(e) => return (400, error_body(&format!("invalid JSON body: {e}"))),
+            };
+            let req = match SubmitRequest::from_json(doc) {
+                Ok(req) => req,
+                Err(e) => return (400, error_body(&format!("{e:#}"))),
+            };
+            match manager.submit(&req) {
+                Ok(response) => (200, response.to_json()),
+                Err(SubmitError::Invalid(m)) => (400, error_body(&m)),
+                Err(SubmitError::Rejected(rejection)) => (422, rejection.to_json()),
+                Err(SubmitError::Busy(m)) => (409, error_body(&m)),
+                Err(SubmitError::Draining) => {
+                    (503, error_body("server is draining; no new jobs accepted"))
+                }
+                Err(SubmitError::Internal(m)) => (500, error_body(&m)),
+            }
+        }
+        ("GET", ["v1", "jobs", id]) => {
+            endpoints.status.fetch_add(1, Ordering::Relaxed);
+            match manager.status_json(id) {
+                Some(doc) => (200, doc),
+                None => (404, error_body(&format!("unknown job '{id}'"))),
+            }
+        }
+        ("GET", ["v1", "jobs", id, "result"]) => {
+            endpoints.result.fetch_add(1, Ordering::Relaxed);
+            match manager.job_state(id) {
+                None => (404, error_body(&format!("unknown job '{id}'"))),
+                Some(state) => match manager.result_text(id) {
+                    Ok(Some(record)) => match Json::parse(&record) {
+                        Ok(doc) => (200, doc),
+                        Err(e) => (500, error_body(&format!("corrupt result record: {e}"))),
+                    },
+                    Ok(None) => (
+                        409,
+                        error_body(&format!(
+                            "job '{id}' is {}; the result exists only once it is done",
+                            state.name()
+                        )),
+                    ),
+                    Err(e) => (500, error_body(&format!("{e:#}"))),
+                },
+            }
+        }
+        ("DELETE", ["v1", "jobs", id]) => {
+            endpoints.cancel.fetch_add(1, Ordering::Relaxed);
+            match manager.cancel(id) {
+                CancelOutcome::Unknown => (404, error_body(&format!("unknown job '{id}'"))),
+                CancelOutcome::Terminal(state) => (
+                    409,
+                    error_body(&format!(
+                        "job '{id}' is already {} and cannot be cancelled",
+                        state.name()
+                    )),
+                ),
+                CancelOutcome::Cancelled => (
+                    200,
+                    Json::obj().set("id", *id).set("state", "cancelled"),
+                ),
+                CancelOutcome::Requested => (
+                    200,
+                    Json::obj().set("id", *id).set("state", "cancelling"),
+                ),
+            }
+        }
+        ("GET", ["v1", "healthz"]) => {
+            endpoints.healthz.fetch_add(1, Ordering::Relaxed);
+            (
+                200,
+                Json::obj()
+                    .set("ok", true)
+                    .set("draining", manager.is_draining()),
+            )
+        }
+        ("GET", ["v1", "stats"]) => {
+            endpoints.stats.fetch_add(1, Ordering::Relaxed);
+            (
+                200,
+                manager.stats_json().set("http", endpoints.to_json()),
+            )
+        }
+        ("POST" | "GET" | "DELETE" | "PUT" | "HEAD" | "PATCH", _) => {
+            endpoints.other.fetch_add(1, Ordering::Relaxed);
+            (404, error_body(&format!("no route for {method} {path}")))
+        }
+        _ => {
+            endpoints.other.fetch_add(1, Ordering::Relaxed);
+            (405, error_body(&format!("method '{method}' not supported")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::client;
+
+    fn serve_queue_only(tag: &str) -> (Server, String, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("bnsl_srv_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server = Server::start(ServeOptions {
+            port: 0,
+            jobs_dir: dir.clone(),
+            budgets: Budgets::unlimited(),
+            max_concurrent: 0, // no executors: deterministic queue state
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = server.addr().to_string();
+        (server, addr, dir)
+    }
+
+    #[test]
+    fn healthz_stats_and_unknown_routes() {
+        let (server, addr, dir) = serve_queue_only("routes");
+        let (status, body) = client::request(&addr, "GET", "/v1/healthz", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"ok\":true") || body.contains("\"ok\": true"), "{body}");
+        let (status, _) = client::request(&addr, "GET", "/v1/jobs/job-000001", None).unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = client::request(&addr, "GET", "/v1/nope", None).unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = client::request(&addr, "POST", "/v1/jobs", Some("not json")).unwrap();
+        assert_eq!(status, 400);
+        let (status, body) = client::request(&addr, "GET", "/v1/stats", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("queue_depth"), "{body}");
+        assert!(body.contains("\"http\""), "{body}");
+        server.drain();
+        server.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn submit_queues_and_drain_refuses_new_work() {
+        let (server, addr, dir) = serve_queue_only("drainrefuse");
+        let csv = "a,b,c\n0,1,0\n1,0,1\n0,0,1\n1,1,0\n0,1,1\n1,0,0\n";
+        let req = SubmitRequest {
+            csv: Some(csv.to_string()),
+            ..Default::default()
+        };
+        let response = client::submit(&addr, &req).unwrap();
+        assert!(!response.deduped);
+        let (status, body) =
+            client::request(&addr, "GET", &format!("/v1/jobs/{}", response.id), None).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"queued\""), "{body}");
+        // result before done: 409
+        let (status, _) = client::request(
+            &addr,
+            "GET",
+            &format!("/v1/jobs/{}/result", response.id),
+            None,
+        )
+        .unwrap();
+        assert_eq!(status, 409);
+        server.drain();
+        // a draining server never accepts new work: either the handler
+        // answers 503 (drain flag is set before this call returns) or
+        // the accept loop is already closed and the transport fails —
+        // both are Err, success is impossible
+        match client::submit(&addr, &req) {
+            Err(_) => {}
+            Ok(r) => panic!("draining server accepted a job: {r:?}"),
+        }
+        server.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,8 +1,45 @@
-//! Shared solver types: options, results, statistics.
+//! Shared solver types: options, results, statistics, cancellation.
 
 use crate::bn::Dag;
 use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Cooperative stop flag threaded through the long-running solvers.
+///
+/// Cloning shares the flag; once [`CancelToken::cancel`] fires, every
+/// holder observes it. The solvers check the token **at level
+/// boundaries only**: a cancelled sharded/clustered run commits the
+/// level it is on and returns
+/// [`crate::solver::ShardOutcome::Checkpointed`] — a durable state the
+/// existing `--resume` path completes later — instead of dying mid-write
+/// (the pre-token alternatives were run-to-completion or SIGKILL). The
+/// in-RAM [`crate::solver::LeveledSolver`] has no durable frontier, so
+/// its [`LeveledSolver::try_solve`](crate::solver::LeveledSolver::try_solve)
+/// simply returns `None` at the next boundary and the partial state is
+/// dropped.
+///
+/// The service layer ([`crate::service`]) wires one token per job
+/// (`DELETE /v1/jobs/{id}`) and fires all of them on SIGTERM for a
+/// graceful drain-and-checkpoint.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request a stop. Idempotent; there is no un-cancel.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
 
 /// Tuning knobs shared by the DP solvers.
 #[derive(Clone, Debug)]
@@ -21,6 +58,9 @@ pub struct SolveOptions {
     /// never spill). Paper §5.3: "using the disk only at the peak or
     /// near-peak levels".
     pub spill_threshold: f64,
+    /// Cooperative stop flag, checked at level boundaries. The default
+    /// token is never cancelled, so `solve()` behaves exactly as before.
+    pub cancel: CancelToken,
 }
 
 impl Default for SolveOptions {
@@ -30,6 +70,7 @@ impl Default for SolveOptions {
             threads: 1,
             spill_dir: None,
             spill_threshold: 0.5,
+            cancel: CancelToken::new(),
         }
     }
 }
@@ -162,6 +203,20 @@ mod tests {
         let o = SolveOptions::default();
         assert_eq!(o.threads, 1);
         assert!(o.spill_dir.is_none());
+        assert!(!o.cancel.is_cancelled());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_sticky() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled() && !b.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled(), "clones share one flag");
+        b.cancel(); // idempotent
+        assert!(b.is_cancelled());
+        // a fresh token is independent
+        assert!(!CancelToken::new().is_cancelled());
     }
 
     #[test]

@@ -272,7 +272,25 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
     }
 
     /// Run the single-traversal DP and return the globally optimal network.
+    ///
+    /// Panics if `options.cancel` fires mid-run — callers that hand out
+    /// a live [`crate::solver::CancelToken`] should use
+    /// [`LeveledSolver::try_solve`] instead. The default (never-fired)
+    /// token makes this infallible.
     pub fn solve(&self) -> SolveResult {
+        self.try_solve().expect(
+            "LeveledSolver::solve was cancelled mid-run; cancellable \
+             callers must use try_solve",
+        )
+    }
+
+    /// Cancellable variant of [`LeveledSolver::solve`]: checks
+    /// `options.cancel` at every level boundary and returns `None` once
+    /// it fires. The in-RAM frontier is not durable, so unlike
+    /// [`solve_sharded`] there is nothing to checkpoint — the partial
+    /// state is simply dropped (spill files, if any, are left for the
+    /// caller's directory cleanup exactly as on a completed run).
+    pub fn try_solve(&self) -> Option<SolveResult> {
         let start = Instant::now();
         let p = self.engine.plain().p();
         assert!(p >= 1, "need at least one variable");
@@ -319,6 +337,9 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
         };
 
         for k1 in 1..=p {
+            if self.options.cancel.is_cancelled() {
+                return None;
+            }
             let size1 = binom.c(p, k1) as usize;
             // §5.3 extension: near-peak levels stream their parent-set
             // vectors to disk *as they are computed* — the level's full
@@ -446,12 +467,12 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
             Frontier::Disk(d) => d.r[0],
         };
         stats.wall = start.elapsed();
-        SolveResult {
+        Some(SolveResult {
             network,
             log_score,
             order,
             stats,
-        }
+        })
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -662,6 +683,19 @@ pub fn solve_sharded<M: VarMask>(
             });
         }
     }
+    // Same for a cancel that fired before any new work: the committed
+    // prefix IS the checkpoint (a fully committed run falls through and
+    // just reconstructs — there is nothing left to cancel).
+    if options.cancel.is_cancelled() {
+        if let Some(done) = run.completed {
+            if done < p {
+                return Ok(ShardOutcome::Checkpointed {
+                    level: done,
+                    dir: options.dir.clone(),
+                });
+            }
+        }
+    }
 
     // level 0: one subset (∅), one record, committed like any level
     if run.completed.is_none() {
@@ -675,7 +709,7 @@ pub fn solve_sharded<M: VarMask>(
         let (_, bytes) = writer.finish()?;
         stats.spilled_bytes += bytes;
         run.commit_level(0)?;
-        if options.stop_after_level == Some(0) {
+        if options.stop_after_level == Some(0) || options.cancel.is_cancelled() {
             stats.wall = start.elapsed();
             return Ok(ShardOutcome::Checkpointed {
                 level: 0,
@@ -771,7 +805,10 @@ pub fn solve_sharded<M: VarMask>(
         if !options.keep_levels && k1 >= 1 {
             run.prune_level(k1 - 1);
         }
-        if options.stop_after_level == Some(k1) && k1 < p {
+        // Level boundary: both the declared time-box and the
+        // asynchronous cancel token checkpoint here — the level just
+        // committed is durable, nothing is torn mid-write.
+        if (options.stop_after_level == Some(k1) || options.cancel.is_cancelled()) && k1 < p {
             stats.wall = start.elapsed();
             return Ok(ShardOutcome::Checkpointed {
                 level: k1,
@@ -882,6 +919,18 @@ pub fn solve_clustered<M: VarMask>(
             });
         }
     }
+    // A pre-fired cancel token leaves this host at the committed prefix
+    // (other hosts are unaffected — cancellation is per process).
+    if options.shard.cancel.is_cancelled() {
+        if let Some(done) = run.completed {
+            if done < p {
+                return Ok(ShardOutcome::Checkpointed {
+                    level: done,
+                    dir: options.shard.dir.clone(),
+                });
+            }
+        }
+    }
 
     let first = run.completed.map_or(0, |c| c + 1);
     for k1 in first..=p {
@@ -890,7 +939,10 @@ pub fn solve_clustered<M: VarMask>(
         // still honour this host's own time-box on the way through)
         if committed_level(run.store()).is_some_and(|c| c >= k1 as i64) {
             run.completed = Some(k1);
-            if options.shard.stop_after_level == Some(k1) && k1 < p {
+            if (options.shard.stop_after_level == Some(k1)
+                || options.shard.cancel.is_cancelled())
+                && k1 < p
+            {
                 stats.wall = start.elapsed();
                 return Ok(ShardOutcome::Checkpointed {
                     level: k1,
@@ -931,7 +983,12 @@ pub fn solve_clustered<M: VarMask>(
             run.prune_level(k1 - 1);
             cleanup_level(run.store(), k1 - 1, true);
         }
-        if options.shard.stop_after_level == Some(k1) && k1 < p {
+        // Level boundary: time-box and cancel token both drain here,
+        // after the barrier — this host leaves a fully committed level
+        // behind and the remaining hosts carry the run on.
+        if (options.shard.stop_after_level == Some(k1) || options.shard.cancel.is_cancelled())
+            && k1 < p
+        {
             stats.wall = start.elapsed();
             return Ok(ShardOutcome::Checkpointed {
                 level: k1,
@@ -1534,6 +1591,87 @@ mod tests {
             g.assert_eq(plain.network.clone(), spilled.network.clone(), "same network");
             g.assert(spilled.stats.spilled_bytes > 0, "spill actually engaged");
         });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cancelled_try_solve_returns_none() {
+        let d = synth::binary(4, 20, 3);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let cancel = crate::solver::CancelToken::new();
+        let solver = LeveledSolver::with_options(
+            &e,
+            SolveOptions {
+                cancel: cancel.clone(),
+                ..Default::default()
+            },
+        );
+        assert!(solver.try_solve().is_some(), "inert token completes");
+        cancel.cancel();
+        assert!(
+            solver.try_solve().is_none(),
+            "fired token aborts at the first level boundary"
+        );
+    }
+
+    #[test]
+    fn cancel_token_checkpoints_sharded_run_and_resume_completes() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cancel_shard_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = synth::random(9, 80, 3, &mut crate::util::rng::Rng::new(11));
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let direct = LeveledSolver::new(&e).solve();
+        let cancel = crate::solver::CancelToken::new();
+        cancel.cancel();
+        let out = solve_sharded::<u32>(
+            &e,
+            &ShardOptions {
+                shards: 2,
+                dir: dir.clone(),
+                cancel: cancel.clone(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        match out {
+            ShardOutcome::Checkpointed { level, .. } => assert_eq!(level, 0),
+            ShardOutcome::Complete(_) => panic!("cancelled run must checkpoint"),
+        }
+        // a resume whose token is still fired checkpoints at entry
+        // without recomputing anything
+        let still = solve_sharded::<u32>(
+            &e,
+            &ShardOptions {
+                shards: 0,
+                dir: dir.clone(),
+                cancel,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        match still {
+            ShardOutcome::Checkpointed { level, .. } => assert_eq!(level, 0),
+            ShardOutcome::Complete(_) => panic!("fired token must keep the checkpoint"),
+        }
+        // an inert-token resume completes bit-identically to the
+        // resident solver
+        let resumed = solve_sharded::<u32>(
+            &e,
+            &ShardOptions {
+                shards: 0,
+                dir: dir.clone(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        match resumed {
+            ShardOutcome::Complete(r) => {
+                assert_eq!(r.log_score.to_bits(), direct.log_score.to_bits());
+                assert_eq!(r.network, direct.network);
+                assert!(r.stats.resumed_levels >= 1, "resume reused the checkpoint");
+            }
+            ShardOutcome::Checkpointed { .. } => panic!("expected completion"),
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

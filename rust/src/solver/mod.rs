@@ -25,6 +25,6 @@ mod common;
 mod leveled;
 mod silander;
 
-pub use common::{SolveOptions, SolveResult, SolveStats};
+pub use common::{CancelToken, SolveOptions, SolveResult, SolveStats};
 pub use leveled::{solve_clustered, solve_sharded, LeveledSolver, ShardOutcome};
 pub use silander::SilanderSolver;

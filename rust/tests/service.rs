@@ -1,0 +1,325 @@
+//! End-to-end tests of the job service (`bnsl serve`) — the ISSUE 5
+//! acceptance criteria:
+//!
+//! * a served solve is **bit-identical** to a direct [`LeveledSolver`]
+//!   run of the same dataset;
+//! * two concurrent identical submissions run the solver **exactly
+//!   once** (dedup by dataset/score fingerprint);
+//! * a drained (SIGTERM-equivalent) server's in-flight job **resumes
+//!   via the run manifest** on restart and completes with the identical
+//!   score.
+//!
+//! All tests drive the real HTTP surface through the shipped client
+//! ([`bnsl::service::client`]) against a `Server` on an ephemeral port.
+
+use bnsl::coordinator::plan::Budgets;
+use bnsl::coordinator::shard::ShardOptions;
+use bnsl::data::{parse_csv, synth, Dataset};
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::service::{client, ServeOptions, Server, SubmitRequest};
+use bnsl::solver::{solve_sharded, LeveledSolver, ShardOutcome, SolveResult};
+use bnsl::util::json::Json;
+use bnsl::util::rng::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bnsl_service_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// CSV text of a dataset — submissions are parsed from exactly these
+/// bytes on the server, so the direct reference solves parse them too.
+fn csv_text(data: &Dataset) -> String {
+    let mut out = data.names().join(",");
+    out.push('\n');
+    for i in 0..data.n() {
+        let row: Vec<String> = (0..data.p())
+            .map(|v| data.value(i, v).to_string())
+            .collect();
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn serve(dir: &PathBuf, max_concurrent: usize) -> Server {
+    Server::start(ServeOptions {
+        port: 0, // ephemeral
+        jobs_dir: dir.clone(),
+        budgets: Budgets::unlimited(),
+        max_concurrent,
+        ..Default::default()
+    })
+    .expect("server starts")
+}
+
+fn inline_request(text: &str, shards: usize) -> SubmitRequest {
+    SubmitRequest {
+        csv: Some(text.to_string()),
+        shards,
+        ..Default::default()
+    }
+}
+
+/// Direct reference solve over the same bytes a submission carries.
+fn direct_solve(text: &str) -> SolveResult {
+    let data = parse_csv(text).expect("reference parse");
+    let engine = NativeEngine::new(&data, ScoreKind::Jeffreys);
+    LeveledSolver::new(&engine).solve()
+}
+
+fn wait_done(addr: &str, id: &str) -> Json {
+    let status = client::wait_terminal(
+        addr,
+        id,
+        Duration::from_millis(25),
+        Duration::from_secs(120),
+    )
+    .expect("job reaches a terminal state");
+    assert_eq!(
+        status.get("state").and_then(Json::as_str),
+        Some("done"),
+        "{status:?}"
+    );
+    status
+}
+
+/// Acceptance: a served p = 12 solve is bit-identical to the direct
+/// resident run — log-score bits, network, and variable order.
+#[test]
+fn served_result_is_bit_identical_to_direct_leveled_run() {
+    let dir = temp_dir("bitident");
+    let data = synth::random(12, 150, 3, &mut Rng::new(2024));
+    let text = csv_text(&data);
+    let direct = direct_solve(&text);
+
+    let server = serve(&dir, 1);
+    let addr = server.addr().to_string();
+    let sub = client::submit(&addr, &inline_request(&text, 2)).unwrap();
+    assert!(!sub.deduped && !sub.cached);
+    wait_done(&addr, &sub.id);
+    let served = client::result(&addr, &sub.id).unwrap();
+
+    let direct_doc = direct.to_json(parse_csv(&text).unwrap().names());
+    let served_score = served.get("log_score").unwrap().as_f64().unwrap();
+    assert_eq!(
+        served_score.to_bits(),
+        direct.log_score.to_bits(),
+        "served score must be bit-identical"
+    );
+    assert_eq!(served.get("network"), direct_doc.get("network"));
+    assert_eq!(served.get("order"), direct_doc.get("order"));
+
+    server.drain();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: two concurrent identical submissions coalesce onto one
+/// job and the solver runs exactly once.
+#[test]
+fn concurrent_identical_submissions_run_the_solver_once() {
+    let dir = temp_dir("dedup");
+    let data = synth::random(12, 120, 3, &mut Rng::new(7));
+    let text = csv_text(&data);
+    let server = serve(&dir, 2);
+    let addr = server.addr().to_string();
+
+    let ids: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                let req = inline_request(&text, 2);
+                scope.spawn(move || client::submit(&addr, &req).unwrap().id)
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(ids[0], ids[1], "identical submissions share one job");
+    wait_done(&addr, &ids[0]);
+
+    // exactly-once: both the in-process counter and the stats endpoint
+    assert_eq!(server.manager().solver_runs(), 1);
+    let (code, stats) = client::request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(code, 200);
+    let stats = Json::parse(&stats).unwrap();
+    assert_eq!(
+        stats
+            .get("counters")
+            .unwrap()
+            .get("solver_runs")
+            .unwrap()
+            .as_u64(),
+        Some(1),
+        "{stats:?}"
+    );
+    // and the result matches the direct run bit for bit
+    let direct = direct_solve(&text);
+    let served = client::result(&addr, &ids[0]).unwrap();
+    assert_eq!(
+        served.get("log_score").unwrap().as_f64().unwrap().to_bits(),
+        direct.log_score.to_bits()
+    );
+
+    server.drain();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: server goes down with a job mid-run (manifest holds a
+/// committed level prefix); the next server resumes it via the manifest
+/// — not from scratch — and completes with the identical score.
+#[test]
+fn restart_resumes_the_inflight_job_via_the_manifest() {
+    let dir = temp_dir("resume");
+    let data = synth::random(13, 140, 3, &mut Rng::new(31));
+    let text = csv_text(&data);
+    let direct = direct_solve(&text);
+
+    // server A accepts the job but has no executors — it goes down
+    // before finishing (the deterministic stand-in for a SIGTERM that
+    // landed mid-solve)
+    let fingerprint;
+    let id;
+    {
+        let server = serve(&dir, 0);
+        let addr = server.addr().to_string();
+        let sub = client::submit(&addr, &inline_request(&text, 2)).unwrap();
+        id = sub.id.clone();
+        let status = client::status(&addr, &sub.id).unwrap();
+        fingerprint = status
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .unwrap()
+            .to_string();
+        assert_eq!(status.get("state").and_then(Json::as_str), Some("queued"));
+        server.drain();
+        server.join().unwrap();
+    }
+
+    // the "mid-run" state: levels 0..=5 committed in the job's run dir,
+    // exactly what a drain checkpoint leaves behind
+    let parsed = parse_csv(&text).unwrap();
+    let engine = NativeEngine::new(&parsed, ScoreKind::Jeffreys);
+    let checkpoint = solve_sharded::<u32>(
+        &engine,
+        &ShardOptions {
+            shards: 2,
+            dir: dir.join("runs").join(&fingerprint),
+            stop_after_level: Some(5),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(matches!(
+        checkpoint,
+        ShardOutcome::Checkpointed { level: 5, .. }
+    ));
+
+    // restart: recovery requeues the job; execution adopts the manifest
+    let server = serve(&dir, 1);
+    let addr = server.addr().to_string();
+    wait_done(&addr, &id);
+    let served = client::result(&addr, &id).unwrap();
+    assert_eq!(
+        served.get("log_score").unwrap().as_f64().unwrap().to_bits(),
+        direct.log_score.to_bits(),
+        "resumed solve is bit-identical to the direct run"
+    );
+    assert_eq!(
+        served
+            .get("stats")
+            .unwrap()
+            .get("resumed_levels")
+            .unwrap()
+            .as_u64(),
+        Some(6),
+        "levels 0..=5 were reused from the checkpoint, not recomputed"
+    );
+    // a repeat submission is now a pure cache hit on the same job
+    let again = client::submit(&addr, &inline_request(&text, 2)).unwrap();
+    assert!(again.deduped && again.cached);
+    assert_eq!(again.id, id);
+
+    server.drain();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the admission verdict reaches the HTTP client on a 422.
+#[test]
+fn over_budget_submission_rejected_with_verdict_in_the_error_body() {
+    let dir = temp_dir("reject");
+    let server = Server::start(ServeOptions {
+        port: 0,
+        jobs_dir: dir.clone(),
+        budgets: Budgets {
+            ram_bytes: 1,
+            ..Budgets::unlimited()
+        },
+        max_concurrent: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+    let data = synth::random(10, 60, 3, &mut Rng::new(5));
+    let err = client::submit(&addr, &inline_request(&csv_text(&data), 4)).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("422"), "{text}");
+    assert!(text.contains("\"fits\":false"), "{text}");
+    assert!(text.contains("resident RAM"), "{text}");
+    server.drain();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: cancel-then-resubmit over HTTP — the cancelled job stays
+/// terminal, the resubmission is a fresh job that completes.
+#[test]
+fn cancel_then_resubmit_completes_over_http() {
+    let dir = temp_dir("cancel");
+    let data = synth::random(11, 100, 3, &mut Rng::new(17));
+    let text = csv_text(&data);
+    let (cancelled_id, resub_id);
+    {
+        // queue-only server: the job deterministically sits in `queued`
+        let server = serve(&dir, 0);
+        let addr = server.addr().to_string();
+        let sub = client::submit(&addr, &inline_request(&text, 2)).unwrap();
+        let response = client::cancel(&addr, &sub.id).unwrap();
+        assert_eq!(response.get("state").and_then(Json::as_str), Some("cancelled"));
+        // cancelling again: terminal conflict (409)
+        let err = client::cancel(&addr, &sub.id).unwrap_err();
+        assert!(format!("{err:#}").contains("409"), "{err:#}");
+        // resubmit: a fresh job, not deduped onto the cancelled one
+        let resub = client::submit(&addr, &inline_request(&text, 2)).unwrap();
+        assert!(!resub.deduped);
+        assert_ne!(resub.id, sub.id);
+        cancelled_id = sub.id;
+        resub_id = resub.id;
+        server.drain();
+        server.join().unwrap();
+    }
+    // a real executor picks the resubmission up after restart
+    let server = serve(&dir, 1);
+    let addr = server.addr().to_string();
+    wait_done(&addr, &resub_id);
+    let status = client::status(&addr, &cancelled_id).unwrap();
+    assert_eq!(
+        status.get("state").and_then(Json::as_str),
+        Some("cancelled"),
+        "cancelled job stays terminal across restarts"
+    );
+    let direct = direct_solve(&text);
+    let served = client::result(&addr, &resub_id).unwrap();
+    assert_eq!(
+        served.get("log_score").unwrap().as_f64().unwrap().to_bits(),
+        direct.log_score.to_bits()
+    );
+    server.drain();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -30,10 +30,15 @@ assembled by tools/bench_smoke.sh):
 
 Wall-clock metrics are compared with --tolerance-wall (shared CI runners
 are noisy); heap peaks come from the deterministic tracking allocator
-and get --tolerance-heap. A baseline value of null means "not yet
-calibrated on the CI fleet": the metric must still EXIST in CURRENT
-(missing benches fail — that is the partial-artifact guard) but its
-value is not compared. Calibrate and arm the gate with one command:
+and get --tolerance-heap.
+
+The baseline carries an explicit "status" field: "uncalibrated" (the
+shipped stub — metrics must still EXIST in CURRENT, that is the
+partial-artifact guard, but values are not compared and the gate SAYS SO
+loudly on every run) or "calibrated" (values armed). A baseline without
+the field is classified by its values: any null metric means
+uncalibrated. --update stamps status = "calibrated". Calibrate and arm
+the gate with one command:
 
     bash tools/bench_smoke.sh BENCH_ci.json && \
         python3 tools/bench_compare.py BENCH_ci.json BENCH_baseline.json --update
@@ -79,6 +84,33 @@ def flatten(doc):
             if name in row:
                 out[f"spill.p{p}.{name}"] = (row[name], cls)
     return out
+
+
+def baseline_status(baseline_doc):
+    """The baseline's calibration status: the explicit "status" field,
+    else inferred from the values (any null metric => uncalibrated)."""
+    explicit = baseline_doc.get("status")
+    if explicit in ("uncalibrated", "calibrated"):
+        return explicit
+    values = flatten(baseline_doc)
+    if any(value is None for value, _ in values.values()):
+        return "uncalibrated"
+    return "calibrated"
+
+
+def uncalibrated_banner(baseline_path):
+    lines = [
+        "=" * 72,
+        f"WARNING: {baseline_path} has status = uncalibrated.",
+        "The perf gate is checking ARTIFACT COMPLETENESS ONLY — wall/heap",
+        "value regressions are NOT being compared. Arm the gate with:",
+        "    bash tools/bench_smoke.sh BENCH_ci.json && \\",
+        "        python3 tools/bench_compare.py BENCH_ci.json "
+        "BENCH_baseline.json --update",
+        "then commit the updated BENCH_baseline.json.",
+        "=" * 72,
+    ]
+    return "\n".join(lines)
 
 
 def compare(current_doc, baseline_doc, tolerances):
@@ -141,6 +173,8 @@ def update_baseline(current_doc, baseline_path):
         "Refresh with: bash tools/bench_smoke.sh BENCH_ci.json && "
         "python3 tools/bench_compare.py BENCH_ci.json BENCH_baseline.json --update"
     )
+    # a freshly measured baseline arms the value comparisons
+    new["status"] = "calibrated"
     if "_tolerances" in old:
         new["_tolerances"] = old["_tolerances"]
     with open(baseline_path, "w") as f:
@@ -194,6 +228,15 @@ def self_test():
     failures, _ = compare(partial, nulls, tol)
     assert failures, "null baseline must still require the bench to exist"
 
+    # calibration status: explicit field wins, else inferred from nulls,
+    # and an uncalibrated baseline is reported loudly
+    assert baseline_status(base) == "calibrated"
+    assert baseline_status(nulls) == "uncalibrated"
+    stamped = json.loads(json.dumps(base))
+    stamped["status"] = "uncalibrated"
+    assert baseline_status(stamped) == "uncalibrated", "explicit status wins"
+    assert "ARTIFACT COMPLETENESS ONLY" in uncalibrated_banner("BENCH_baseline.json")
+
     print("self-test OK: the gate fails >25% regressions and partial artifacts")
 
 
@@ -219,6 +262,8 @@ def main(argv):
         update_baseline(current_doc, baseline_path)
         return 0
     baseline_doc = load(baseline_path)
+    if baseline_status(baseline_doc) == "uncalibrated":
+        print(uncalibrated_banner(baseline_path), file=sys.stderr)
     tolerances = {WALL: 0.25, HEAP: 0.25}
     for cls, override in (baseline_doc.get("_tolerances") or {}).items():
         if cls in tolerances:

@@ -1,0 +1,122 @@
+#!/usr/bin/env bash
+# Job-service smoke test (CI `service` job; runnable locally):
+#
+#   1. direct reference runs of two datasets (scores captured bit-exact)
+#   2. `bnsl serve` starts; a first job is submitted with `bnsl submit
+#      --wait` and its score must be BYTE-identical to the direct run
+#   3. a second, larger job is submitted without --wait; once the server
+#      has it (running if we catch it, queued otherwise), the server is
+#      SIGTERMed — the graceful drain checkpoints at the next level
+#      boundary and must exit 0
+#   4. the server is restarted on the same --jobs-dir; the interrupted
+#      job must resume via its run manifest and complete with a score
+#      BYTE-identical to the direct run (an identical resubmission with
+#      --wait rides the dedup/cache path to fetch it)
+#
+# Usage: tools/service_smoke.sh [path/to/bnsl]   (default target/release/bnsl)
+set -euo pipefail
+
+BNSL="${1:-target/release/bnsl}"
+WORK="$(mktemp -d)"
+SRV=""
+cleanup() {
+    [ -n "$SRV" ] && kill -9 "$SRV" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+PORT="${BNSL_SMOKE_PORT:-8797}"
+ADDR="127.0.0.1:$PORT"
+
+echo "== datasets + direct reference runs =="
+"$BNSL" sample --network asia --n 400 --out "$WORK/a.csv"
+"$BNSL" learn --data "$WORK/a.csv" --out "$WORK/direct_a.json"
+"$BNSL" sample --network alarm --n 1500 --out "$WORK/b_full.csv"
+"$BNSL" learn --data "$WORK/b_full.csv" --p 14 --shards 4 \
+    --shard-dir "$WORK/ref_b" --out "$WORK/direct_b.json"
+
+score_bits() {
+    python3 - "$1" <<'EOF'
+import json, struct, sys
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+print(struct.pack("<d", doc["log_score"]).hex())
+EOF
+}
+
+start_server() {
+    "$BNSL" serve --port "$PORT" --jobs-dir "$WORK/jobs" --max-concurrent 1 &
+    SRV=$!
+    # wait for /v1/healthz
+    for _ in $(seq 1 100); do
+        if python3 - "$ADDR" <<'EOF'
+import http.client, sys
+try:
+    conn = http.client.HTTPConnection(sys.argv[1], timeout=1)
+    conn.request("GET", "/v1/healthz")
+    sys.exit(0 if conn.getresponse().status == 200 else 1)
+except Exception:
+    sys.exit(1)
+EOF
+        then return 0; fi
+        sleep 0.1
+    done
+    echo "FAIL: server never became healthy on $ADDR" >&2
+    exit 1
+}
+
+echo "== serve + first job: served score must be byte-identical =="
+start_server
+"$BNSL" submit --server "$ADDR" --data "$WORK/a.csv" \
+    --wait --out "$WORK/served_a.json" >/dev/null
+A_REF="$(score_bits "$WORK/direct_a.json")"
+A_SRV="$(score_bits "$WORK/served_a.json")"
+echo "direct = $A_REF"
+echo "served = $A_SRV"
+if [ "$A_REF" != "$A_SRV" ]; then
+    echo "FAIL: served score differs from the direct run" >&2
+    exit 1
+fi
+
+echo "== second job submitted, then SIGTERM mid-flight =="
+JOB_B="$("$BNSL" submit --server "$ADDR" --data "$WORK/b_full.csv" --p 14 --shards 4)"
+echo "job: $JOB_B"
+# give the executor a chance to pick it up (running is ideal for the
+# drain-checkpoint path; queued still proves ledger-restart recovery)
+for _ in $(seq 1 50); do
+    STATE="$("$BNSL" status --server "$ADDR" --job "$JOB_B" \
+        | python3 -c 'import json,sys; print(json.load(sys.stdin)["state"])')"
+    [ "$STATE" = "running" ] && break
+    [ "$STATE" = "done" ] && break
+    sleep 0.1
+done
+echo "state at SIGTERM: $STATE"
+kill -TERM "$SRV"
+if ! wait "$SRV"; then
+    echo "FAIL: drained server exited non-zero" >&2
+    exit 1
+fi
+SRV=""
+
+echo "== restart: the interrupted job must resume and finish =="
+start_server
+# identical resubmission dedupes onto the same job and waits it out
+JOB_B2="$("$BNSL" submit --server "$ADDR" --data "$WORK/b_full.csv" --p 14 --shards 4 \
+    --wait --out "$WORK/served_b.json" --timeout-secs 300)"
+if [ "$JOB_B2" != "$JOB_B" ]; then
+    echo "FAIL: resubmission created a new job ($JOB_B2) instead of deduping onto $JOB_B" >&2
+    exit 1
+fi
+B_REF="$(score_bits "$WORK/direct_b.json")"
+B_SRV="$(score_bits "$WORK/served_b.json")"
+echo "direct = $B_REF"
+echo "served = $B_SRV"
+if [ "$B_REF" != "$B_SRV" ]; then
+    echo "FAIL: resumed job's score differs from the direct run" >&2
+    exit 1
+fi
+
+kill -TERM "$SRV"
+wait "$SRV" || true
+SRV=""
+echo "OK: served, drained, restarted and resumed — all scores byte-identical"
