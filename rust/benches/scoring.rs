@@ -9,6 +9,7 @@ use bnsl::cli::exp::{alarm_data, engine_bench};
 use bnsl::data::Dataset;
 use bnsl::score::counts::Counter;
 use bnsl::score::{LocalScorer, ScoreKind};
+use bnsl::util::json::Json;
 use bnsl::util::table::Table;
 use std::time::Instant;
 
@@ -59,6 +60,34 @@ fn main() {
         format!("{:.2e}", 1.0 / per),
     ]);
 
+    // batched kernel entry point: the same subsets through
+    // log_q_batch_into in solver-sized chunks (one call per batch, the
+    // cache-blocked encode inside). Must be bit-identical to the
+    // one-at-a-time accumulation above.
+    let mut batch_scorer = LocalScorer::new(&data, ScoreKind::Jeffreys);
+    let mut out = vec![0.0; 1024];
+    let t0 = Instant::now();
+    let mut batch_acc = 0.0;
+    for chunk in masks.chunks(1024) {
+        let slots = &mut out[..chunk.len()];
+        batch_scorer.log_q_batch_into(chunk, slots);
+        for v in slots.iter() {
+            batch_acc += *v;
+        }
+    }
+    std::hint::black_box(batch_acc);
+    let batch_per = t0.elapsed().as_secs_f64() / masks.len() as f64;
+    assert_eq!(
+        acc.to_bits(),
+        batch_acc.to_bits(),
+        "batched kernel drifted from the single-subset path"
+    );
+    table.row(vec![
+        "native log Q (batched kernel)".to_string(),
+        format!("{:.0}", batch_per * 1e9),
+        format!("{:.2e}", 1.0 / batch_per),
+    ]);
+
     // PJRT path on a smaller sample (interpret-mode Pallas is slow)
     let small: Vec<u32> = masks.iter().copied().take(512).collect();
     let (native_per, jax_per) = engine_bench(&data, &small, std::path::Path::new("artifacts"));
@@ -80,4 +109,21 @@ fn main() {
     println!("{}", table.render());
     println!("note: the jax path runs the Pallas kernel under interpret=True —");
     println!("a correctness vehicle; real-TPU throughput is estimated in DESIGN.md.");
+
+    // CI bench-smoke: machine-readable record for the perf trajectory
+    // (tools/bench_smoke.sh merges it into BENCH_ci.json, gated by
+    // tools/bench_compare.py against BENCH_baseline.json).
+    if let Ok(path) = std::env::var("BNSL_BENCH_JSON") {
+        let doc = Json::obj()
+            .set("bench", "scoring")
+            .set("p", p)
+            .set("n", n)
+            .set("masks", masks.len())
+            .set("hash_ns_per_subset", hash * 1e9)
+            .set("sort_ns_per_subset", sort * 1e9)
+            .set("log_q_ns_per_subset", per * 1e9)
+            .set("batch_log_q_ns_per_subset", batch_per * 1e9);
+        std::fs::write(&path, doc.to_pretty()).expect("writing BNSL_BENCH_JSON");
+        println!("bench record: {path}");
+    }
 }

@@ -1,0 +1,121 @@
+//! Bench — the streaming engine's flagship claim (ISSUE 6): the same
+//! bit-identical optimum as the resident `LeveledSolver`, at a heap
+//! peak strictly below it, with the analytic
+//! [`bnsl::coordinator::plan::streaming_plan`] model matching the
+//! solver's own peak accounting byte for byte.
+//!
+//! The heap peaks come from [`bnsl::memtrack::TrackingAlloc`]
+//! (deterministic high-water marks, not RSS), so the win is assertable
+//! in CI. Container-feasible default is `BNSL_SOLVE_P=14`; the ISSUE's
+//! p = 20–24 demonstration is the same binary with `BNSL_SOLVE_P=20`
+//! on a larger host.
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+use bnsl::coordinator::plan::{memory_plan, streaming_plan};
+use bnsl::data::synth;
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::solver::{LeveledSolver, StreamingSolver};
+use bnsl::util::human_bytes;
+use bnsl::util::json::Json;
+
+fn main() {
+    let p: usize = std::env::var("BNSL_SOLVE_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(14);
+    let n: usize = std::env::var("BNSL_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let d = synth::binary(p, n, 4807);
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let subsets = (1u64 << p) as f64;
+
+    println!("=== streaming vs resident leveled solve, p = {p}, n = {n} ===\n");
+    let (leveled, leveled_heap) =
+        bnsl::memtrack::measure(|| LeveledSolver::new(&e).solve());
+    let (streaming, streaming_heap) =
+        bnsl::memtrack::measure(|| StreamingSolver::new(&e).solve());
+
+    // Bit-identity is the contract: both paths share one LevelWorker
+    // inner loop, so the optimum, the network and the counters agree
+    // exactly — not approximately.
+    assert_eq!(
+        leveled.log_score.to_bits(),
+        streaming.log_score.to_bits(),
+        "streaming drifted from the resident solver"
+    );
+    assert_eq!(leveled.network, streaming.network, "networks differ");
+    assert_eq!(leveled.order, streaming.order, "orders differ");
+    assert_eq!(
+        leveled.stats.score_evals, streaming.stats.score_evals,
+        "eval counts differ"
+    );
+
+    // The memory claim, twice over: the solver's own peak accounting
+    // must equal the analytic plan model exactly, and the *measured*
+    // allocator high-water mark must undercut the resident solver's.
+    let plan = streaming_plan(p);
+    let resident_plan = memory_plan(p, 0.0);
+    assert_eq!(
+        streaming.stats.peak_state_bytes as u64, plan.peak_bytes,
+        "solver accounting disagrees with streaming_plan"
+    );
+    assert!(
+        plan.peak_bytes < resident_plan.peak_bytes,
+        "streaming plan ({}) must undercut the resident plan ({})",
+        plan.peak_bytes,
+        resident_plan.peak_bytes
+    );
+    assert!(
+        streaming_heap < leveled_heap,
+        "measured streaming heap ({streaming_heap}) must undercut the \
+         resident solver's ({leveled_heap})"
+    );
+    assert!(
+        plan.peak_bytes <= streaming_heap as u64,
+        "the plan's state model ({}) cannot exceed the measured heap \
+         peak ({streaming_heap})",
+        plan.peak_bytes
+    );
+
+    let leveled_ns = leveled.stats.wall.as_secs_f64() / subsets * 1e9;
+    let streaming_ns = streaming.stats.wall.as_secs_f64() / subsets * 1e9;
+    println!(
+        "resident : {leveled_ns:8.1} ns/subset  heap peak {}",
+        human_bytes(leveled_heap as u64)
+    );
+    println!(
+        "streaming: {streaming_ns:8.1} ns/subset  heap peak {} ({:+.1}% wall vs resident)",
+        human_bytes(streaming_heap as u64),
+        (streaming_ns / leveled_ns - 1.0) * 100.0
+    );
+    println!(
+        "plan     : peak {} at level {} (record streams {} vs {} resident sink tables)",
+        human_bytes(plan.peak_bytes),
+        plan.peak_level,
+        human_bytes(plan.record_stream_bytes),
+        human_bytes(plan.resident_sink_bytes)
+    );
+
+    // CI bench-smoke: machine-readable record for the perf trajectory
+    // (tools/bench_smoke.sh merges it into BENCH_ci.json, gated by
+    // tools/bench_compare.py against BENCH_baseline.json).
+    if let Ok(path) = std::env::var("BNSL_BENCH_JSON") {
+        let doc = Json::obj()
+            .set("bench", "streaming")
+            .set("solve_p", p)
+            .set("n", n)
+            .set("streaming_ns_per_subset", streaming_ns)
+            .set("leveled_ns_per_subset", leveled_ns)
+            .set("streaming_heap_peak_bytes", streaming_heap)
+            .set("leveled_heap_peak_bytes", leveled_heap)
+            .set("plan_peak_bytes", plan.peak_bytes)
+            .set("plan_record_stream_bytes", plan.record_stream_bytes);
+        std::fs::write(&path, doc.to_pretty()).expect("writing BNSL_BENCH_JSON");
+        println!("bench record: {path}");
+    }
+}

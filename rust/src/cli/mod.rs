@@ -26,7 +26,7 @@ use crate::score::ScoreKind;
 use crate::search::{hill_climb, pc_hill_climb, HillClimbOptions, PcOptions};
 use crate::solver::{
     solve_clustered, solve_sharded, LeveledSolver, ShardOutcome, SilanderSolver, SolveOptions,
-    SolveResult,
+    SolveResult, StreamingSolver,
 };
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
@@ -42,6 +42,7 @@ USAGE:
   bnsl learn  (--data file.csv | --network asia|alarm|sachs [--p P] [--n N])
               [--solver leveled|silander|hillclimb|hybrid] [--score jeffreys|bdeu[:e]|bic|aic]
               [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
+              [--streaming]
               [--shards N [--shard-dir DIR] [--stop-after-level K]] [--resume DIR]
               [--backend posix|object]
               [--cluster --host-id I [--hosts N] [--heartbeat-secs S]]
@@ -50,6 +51,12 @@ USAGE:
               p <= 36 sharded (--shards, power of two: frontier + sinks on
               disk, manifest committed per level, --resume restarts a
               killed run at the last completed level);
+              --streaming runs the memory-only single-pass engine: no 2^p
+              sink tables (compact per-level record streams instead), no
+              on-disk artifacts, bit-identical results at a strictly
+              lower RAM peak; p <= 30 narrow / 32 wide, incompatible with
+              --spill-dir/--shards/--resume/--cluster (cancel re-runs
+              from scratch — there is no checkpoint to resume);
               --cluster joins N independent bnsl processes (any machines
               sharing --shard-dir) into one sharded solve: shards are
               claimed via lock files, a SIGKILLed host's work is re-run
@@ -78,7 +85,7 @@ USAGE:
               SIGTERM drains — running solves checkpoint at the next
               level boundary and the next `bnsl serve` resumes them
   bnsl submit --server HOST:PORT --data file.csv [--p P] [--score S]
-              [--shards N] [--threads T] [--batch B]
+              [--shards N] [--threads T] [--batch B] [--streaming]
               [--wait [--out result.json] [--poll-ms 200] [--timeout-secs 3600]]
               prints the job id on stdout; --wait polls to completion
   bnsl status --server HOST:PORT --job ID
@@ -101,11 +108,11 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         return Ok(());
     };
     match command.as_str() {
-        "learn" => cmd_learn(Args::parse(rest.to_vec(), &["dot", "cluster"])?),
+        "learn" => cmd_learn(Args::parse(rest.to_vec(), &["dot", "cluster", "streaming"])?),
         "sample" => cmd_sample(Args::parse(rest.to_vec(), &[])?),
         "exp" => cmd_exp(rest),
         "serve" => cmd_serve(Args::parse(rest.to_vec(), &[])?),
-        "submit" => cmd_submit(Args::parse(rest.to_vec(), &["wait"])?),
+        "submit" => cmd_submit(Args::parse(rest.to_vec(), &["wait", "streaming"])?),
         "status" => cmd_status(Args::parse(rest.to_vec(), &[])?),
         "cancel" => cmd_cancel(Args::parse(rest.to_vec(), &[])?),
         "info" => cmd_info(Args::parse(rest.to_vec(), &["json"])?),
@@ -148,6 +155,7 @@ fn cmd_learn(args: Args) -> Result<()> {
     let resume = args.raw("resume").map(PathBuf::from);
     let cluster = args.switch("cluster");
     let sharded = shards_given || resume.is_some() || cluster;
+    let streaming = args.switch("streaming");
     // The sharded flags must never be silently dropped: they drive the
     // leveled coordinator only, whatever solver was asked for.
     if sharded && solver != "leveled" {
@@ -155,6 +163,44 @@ fn cmd_learn(args: Args) -> Result<()> {
             "--shards/--resume/--cluster drive the sharded leveled \
              coordinator; use --solver leveled (got '{solver}')"
         );
+    }
+    // The streaming engine is the leveled DP with a different memory
+    // model — it cannot combine with the disk-assisted modes (it keeps
+    // nothing on disk to spill, shard or resume from).
+    if streaming {
+        if solver != "leveled" {
+            bail!(
+                "--streaming is a memory layout of the leveled DP; use \
+                 --solver leveled (got '{solver}')"
+            );
+        }
+        if sharded {
+            bail!(
+                "--streaming is memory-only and cannot combine with \
+                 --shards/--resume/--cluster; drop one of them"
+            );
+        }
+        if args.raw("spill-dir").is_some() {
+            bail!(
+                "--streaming never materialises the sink tables the spill \
+                 path writes; drop --spill-dir (streaming's peak is \
+                 already below the resident solver's)"
+            );
+        }
+        if data.p() > crate::MAX_VARS_STREAMING {
+            bail!(
+                "--streaming supports p ≤ {} (the best-parent frontier \
+                 must fit in RAM with no spill/shard assist; got p = {}). \
+                 Larger configurations that work: --solver leveled \
+                 --spill-dir DIR up to {}, --shards N up to {}, or \
+                 --solver hillclimb/hybrid up to {}",
+                crate::MAX_VARS_STREAMING,
+                data.p(),
+                crate::MAX_VARS_WIDE,
+                crate::MAX_VARS_SHARDED,
+                crate::MAX_NET_VARS
+            );
+        }
     }
     // The cluster flags must never be silently dropped either: a host
     // launched without --cluster but pointed at a live shared shard-dir
@@ -302,7 +348,7 @@ fn cmd_learn(args: Args) -> Result<()> {
             "wide-mask path: p={} > MAX_VARS={}; using u64 masks{}",
             data.p(),
             crate::MAX_VARS,
-            if options.spill_dir.is_none() {
+            if options.spill_dir.is_none() && !streaming {
                 " (tip: --spill-dir DIR keeps the near-peak levels on disk)"
             } else {
                 ""
@@ -374,10 +420,25 @@ fn cmd_learn(args: Args) -> Result<()> {
                 }
                 let dir = PathBuf::from(args.raw("artifacts").unwrap_or("artifacts"));
                 let engine = JaxEngine::new(&data, kind, &dir)?;
-                match solver.as_str() {
-                    "leveled" => LeveledSolver::with_options_local(&engine, options).solve(),
-                    "silander" => SilanderSolver::with_options(&engine, options).solve(),
-                    other => bail!("unknown solver '{other}'"),
+                if streaming {
+                    StreamingSolver::with_options_local(&engine, options).solve()
+                } else {
+                    match solver.as_str() {
+                        "leveled" => LeveledSolver::with_options_local(&engine, options).solve(),
+                        "silander" => SilanderSolver::with_options(&engine, options).solve(),
+                        other => bail!("unknown solver '{other}'"),
+                    }
+                }
+            }
+            (_, "native") if streaming => {
+                let engine = NativeEngine::new(&data, kind);
+                match width {
+                    MaskWidth::Narrow => {
+                        StreamingSolver::with_options(&engine, options).solve()
+                    }
+                    MaskWidth::Wide => {
+                        StreamingSolver::<u64>::with_options_generic(&engine, options).solve()
+                    }
                 }
             }
             (_, "native") => {
@@ -402,7 +463,8 @@ fn cmd_learn(args: Args) -> Result<()> {
         })
     });
     let result = result?;
-    emit_result(&args, &data, kind, &solver, &engine_name, result, heap)
+    let solver_label = if streaming { "streaming" } else { solver.as_str() };
+    emit_result(&args, &data, kind, solver_label, &engine_name, result, heap)
 }
 
 /// Shared `learn` epilogue: human-readable summary to stderr, the JSON
@@ -523,6 +585,9 @@ fn cmd_exp(rest: &[String]) -> Result<()> {
 const INFO_SHARDED_CONFIGS: [(usize, usize); 3] =
     [(29, 8), (33, 16), (crate::MAX_VARS_SHARDED, 64)];
 
+/// The streaming-engine sizes `bnsl info` prices (up to the wide cap).
+const INFO_STREAMING_PS: [usize; 4] = [20, 24, 28, crate::MAX_VARS_STREAMING];
+
 fn cmd_info(args: Args) -> Result<()> {
     let budgets = crate::coordinator::plan::Budgets::detect();
     if args.switch("json") {
@@ -551,16 +616,25 @@ fn cmd_info(args: Args) -> Result<()> {
                         },
                     ),
             )
-            .set("sharded_plans", plans);
+            .set("sharded_plans", plans)
+            .set("streaming_plans", {
+                let mut splans = Json::arr();
+                for p in INFO_STREAMING_PS {
+                    let plan = crate::coordinator::plan::streaming_plan(p);
+                    splans = splans.push(plan.to_json_for(&budgets));
+                }
+                splans
+            });
         println!("{}", doc.to_pretty());
         return Ok(());
     }
     println!("bnsl {}", env!("CARGO_PKG_VERSION"));
     println!(
-        "max exact-solver variables: {} (u32 masks) / {} (wide u64 masks) / {} (sharded, --shards); searches: {}",
+        "max exact-solver variables: {} (u32 masks) / {} (wide u64 masks) / {} (sharded, --shards) / {} (memory-only, --streaming); searches: {}",
         crate::MAX_VARS,
         crate::MAX_VARS_WIDE,
         crate::MAX_VARS_SHARDED,
+        crate::MAX_VARS_STREAMING,
         crate::MAX_NET_VARS
     );
     let dir = PathBuf::from(args.raw("artifacts").unwrap_or("artifacts"));
@@ -603,6 +677,25 @@ fn cmd_info(args: Args) -> Result<()> {
             crate::util::human_bytes(plan.disk_bytes),
             plan.fd_budget,
             plan.object_requests / 1000,
+            if verdict.fits {
+                "yes".to_string()
+            } else {
+                format!("NO — {}", verdict.reasons.join("; "))
+            }
+        );
+    }
+    for p in INFO_STREAMING_PS {
+        let plan = crate::coordinator::plan::streaming_plan(p);
+        let resident = crate::coordinator::plan::memory_plan(p, 0.0);
+        let verdict = plan.fits_budget(&budgets);
+        println!(
+            "p={p:2} --streaming: peak {} (record streams {} vs {} resident \
+             sink tables; resident solver peaks at {}); fits this host's \
+             RAM: {}",
+            crate::util::human_bytes(plan.peak_bytes),
+            crate::util::human_bytes(plan.record_stream_bytes),
+            crate::util::human_bytes(plan.resident_sink_bytes),
+            crate::util::human_bytes(resident.peak_bytes),
             if verdict.fits {
                 "yes".to_string()
             } else {
@@ -703,6 +796,7 @@ fn cmd_submit(args: Args) -> Result<()> {
         shards: args.get::<usize>("shards", 1)?,
         threads: args.get::<usize>("threads", 0)?,
         batch: args.get::<usize>("batch", 1024)?,
+        streaming: args.switch("streaming"),
     };
     let response = crate::service::client::submit(&server, &request)?;
     eprintln!(
@@ -820,6 +914,52 @@ mod tests {
     #[test]
     fn learn_requires_a_source() {
         assert!(run(vec!["learn".into()]).is_err());
+    }
+
+    /// Tentpole (ISSUE 6): `--streaming` runs end to end and produces
+    /// the same record shape as the resident solver.
+    #[test]
+    fn learn_streaming_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cli_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("stream.json").to_string_lossy().to_string();
+        run(vec![
+            "learn".into(),
+            "--network".into(),
+            "asia".into(),
+            "--n".into(),
+            "80".into(),
+            "--streaming".into(),
+            "--out".into(),
+            out.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("\"log_score\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `--streaming` must reject every disk-assisted mode loudly rather
+    /// than silently dropping a flag.
+    #[test]
+    fn streaming_rejects_disk_assisted_flags() {
+        for extra in [
+            vec!["--shards".to_string(), "2".to_string()],
+            vec!["--resume".to_string(), "some_dir".to_string()],
+            vec!["--spill-dir".to_string(), "some_dir".to_string()],
+            vec!["--solver".to_string(), "silander".to_string()],
+        ] {
+            let mut argv = vec![
+                "learn".to_string(),
+                "--network".to_string(),
+                "asia".to_string(),
+                "--n".to_string(),
+                "40".to_string(),
+                "--streaming".to_string(),
+            ];
+            argv.extend(extra.clone());
+            assert!(run(argv).is_err(), "should reject --streaming with {extra:?}");
+        }
     }
 
     #[test]

@@ -381,6 +381,122 @@ impl ShardedPlan {
     }
 }
 
+/// Bytes per sink record at level `k` of the **streaming** engine: 6
+/// bits of sink position plus `k−1` bits of relative parent mask,
+/// rounded up to whole bytes. Single source of truth shared with
+/// [`crate::solver::StreamingSolver`]'s writer, so the pricing model
+/// and the solver's actual allocations cannot drift.
+pub fn streaming_record_bytes(k: usize) -> u64 {
+    ((k + 5).div_ceil(8)) as u64
+}
+
+/// Analytic accounting of a memory-only streaming run
+/// ([`crate::solver::StreamingSolver`], `--streaming`): the frontier is
+/// identical to the resident path's ([`MemoryPlan`]), but the
+/// `(1+mask)·2^p` sink tables are replaced by per-level compact record
+/// streams — `C(p,k)·⌈(k+5)/8⌉` bytes at level `k`, retained through
+/// reconstruction — so the working set at level `k` only carries the
+/// streams accumulated *so far*, not the full-lattice tables.
+#[derive(Clone, Debug)]
+pub struct StreamingPlan {
+    pub p: usize,
+    /// Bytes per stored parent mask (4 narrow, 8 wide), like
+    /// [`MemoryPlan::mask_bytes`].
+    pub mask_bytes: u64,
+    /// Peak resident bytes: max over levels of two adjacent frontiers
+    /// plus the record streams accumulated through that level. Equals
+    /// the solver's own `peak_state_bytes` accounting exactly
+    /// (test-asserted in `solver/streaming.rs`).
+    pub peak_bytes: u64,
+    /// The level index at the peak.
+    pub peak_level: usize,
+    /// Total retained record-stream bytes, `Σ_k C(p,k)·⌈(k+5)/8⌉` —
+    /// what reconstruction reads at the end.
+    pub record_stream_bytes: u64,
+    /// The resident path's `(1+mask)·2^p` sink tables for the same
+    /// width — the figure the streams replace (strictly larger for all
+    /// exact-DP-range `p`; test-asserted at `p ≥ 20`).
+    pub resident_sink_bytes: u64,
+}
+
+/// Price a streaming run. Pure arithmetic, `p ≤ 62` like
+/// [`memory_plan`]; record width follows the dispatch width (`u32`
+/// masks up to [`crate::MAX_VARS`], `u64` above).
+pub fn streaming_plan(p: usize) -> StreamingPlan {
+    let mask_bytes: u64 = if p <= crate::MAX_VARS { 4 } else { 8 };
+    streaming_plan_for_mask_bytes(p, mask_bytes)
+}
+
+/// [`streaming_plan`] with an explicit mask width — for pricing a
+/// forced-wide run (`StreamingSolver::<u64>` on a narrow-range `p`).
+pub fn streaming_plan_for_mask_bytes(p: usize, mask_bytes: u64) -> StreamingPlan {
+    assert!((1..=62).contains(&p), "analytic planner supports p ≤ 62");
+    let binom = BinomTable::new(p);
+    let frontier =
+        |k: usize| -> u64 { binom.c(p, k) * (16 + (8 + mask_bytes) * k as u64) };
+    let mut stream_cum = 0u64;
+    let mut peak_bytes = 0u64;
+    let mut peak_level = 0usize;
+    for k1 in 1..=p {
+        stream_cum += binom.c(p, k1) * streaming_record_bytes(k1);
+        let bytes = frontier(k1 - 1) + frontier(k1) + stream_cum;
+        if bytes > peak_bytes {
+            peak_bytes = bytes;
+            peak_level = k1;
+        }
+    }
+    StreamingPlan {
+        p,
+        mask_bytes,
+        peak_bytes,
+        peak_level,
+        record_stream_bytes: stream_cum,
+        resident_sink_bytes: (1 + mask_bytes) << p,
+    }
+}
+
+impl StreamingPlan {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("p", self.p)
+            .set("mask_bytes", self.mask_bytes)
+            .set("peak_bytes", self.peak_bytes)
+            .set("peak_level", self.peak_level)
+            .set("record_stream_bytes", self.record_stream_bytes)
+            .set("resident_sink_bytes", self.resident_sink_bytes)
+    }
+
+    /// Does this plan fit `budgets`? Streaming is memory-only: the only
+    /// ceiling that can bind is resident RAM — it opens no per-shard
+    /// files and sends no object requests, so those budgets are
+    /// irrelevant by construction.
+    pub fn fits_budget(&self, budgets: &Budgets) -> BudgetVerdict {
+        let mut reasons = Vec::new();
+        if self.peak_bytes > budgets.ram_bytes {
+            reasons.push(format!(
+                "planned resident RAM {} exceeds the {} budget (the \
+                 streaming engine is memory-only — use --spill-dir or \
+                 --shards past it, or raise the budget)",
+                crate::util::human_bytes(self.peak_bytes),
+                crate::util::human_bytes(budgets.ram_bytes),
+            ));
+        }
+        BudgetVerdict {
+            fits: reasons.is_empty(),
+            reasons,
+        }
+    }
+
+    /// Stable-schema JSON record: every key of
+    /// [`StreamingPlan::to_json`] plus the [`BudgetVerdict`] under
+    /// `fits_budget` — the record `bnsl info --json` ships under
+    /// `streaming_plans`.
+    pub fn to_json_for(&self, budgets: &Budgets) -> Json {
+        self.to_json()
+            .set("fits_budget", self.fits_budget(budgets).to_json())
+    }
+}
+
 impl MemoryPlan {
     /// Largest `p` whose planned peak fits a byte budget (paper §5.1:
     /// 16 GB ⇒ 26 for the baseline vs 28 for the proposed method). The
@@ -666,6 +782,98 @@ mod tests {
         assert_eq!(posix.get("backend").and_then(Json::as_str), Some("posix"));
         // the verdict rides along with a fits flag and a reasons array
         let verdict = posix.get("fits_budget").expect("fits_budget present");
+        assert_eq!(verdict.get("fits"), Some(&Json::Bool(true)));
+        assert!(verdict.get("reasons").and_then(Json::as_arr).is_some());
+    }
+
+    /// Acceptance criterion (ISSUE 6): the streaming model's retained
+    /// reconstruction state — and its whole resident peak — sit strictly
+    /// below the resident path's `2^p` sink-table footprint at `p ≥ 20`,
+    /// on both mask widths.
+    #[test]
+    fn streaming_records_strictly_undercut_resident_sink_tables() {
+        for p in 20..=30 {
+            let s = streaming_plan(p);
+            let resident = memory_plan(p, 0.0);
+            assert_eq!(s.mask_bytes, resident.mask_bytes);
+            assert!(
+                s.record_stream_bytes < s.resident_sink_bytes,
+                "p={p}: streams {} vs sink tables {}",
+                s.record_stream_bytes,
+                s.resident_sink_bytes
+            );
+            assert!(
+                s.peak_bytes < resident.peak_bytes,
+                "p={p}: streaming peak {} vs resident peak {}",
+                s.peak_bytes,
+                resident.peak_bytes
+            );
+        }
+        // wide records (9-byte sink entries) are undercut even harder
+        for p in 20..=crate::MAX_VARS_STREAMING {
+            let s = streaming_plan_for_mask_bytes(p, 8);
+            assert!(s.record_stream_bytes < (9u64 << p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn streaming_record_width_grows_with_the_level() {
+        // 6 bits of position + k−1 relative bits, whole bytes
+        assert_eq!(streaming_record_bytes(1), 1);
+        assert_eq!(streaming_record_bytes(3), 1);
+        assert_eq!(streaming_record_bytes(4), 2);
+        assert_eq!(streaming_record_bytes(11), 2);
+        assert_eq!(streaming_record_bytes(12), 3);
+        assert_eq!(streaming_record_bytes(27), 4);
+        // the widest level any streaming run can reach still fits a u64
+        assert_eq!(streaming_record_bytes(crate::MAX_VARS_STREAMING), 5);
+    }
+
+    /// Satellite (ISSUE 6): streaming admission is RAM-only — fd and
+    /// object-request ceilings never bind a plan that opens no files.
+    #[test]
+    fn streaming_fits_budget_prices_ram_only() {
+        let plan = streaming_plan(20);
+        assert!(plan.fits_budget(&Budgets::unlimited()).fits);
+        let tight_ram = Budgets {
+            ram_bytes: plan.peak_bytes - 1,
+            ..Budgets::unlimited()
+        };
+        let v = plan.fits_budget(&tight_ram);
+        assert!(!v.fits);
+        assert!(v.reasons.iter().any(|r| r.contains("resident RAM")), "{v:?}");
+        let tight_everything_else = Budgets {
+            ram_bytes: u64::MAX,
+            fd_limit: 0,
+            object_requests: Some(0),
+        };
+        assert!(plan.fits_budget(&tight_everything_else).fits);
+    }
+
+    /// Satellite (ISSUE 6): the `bnsl info --json` streaming record has
+    /// a stable key set with the verdict attached.
+    #[test]
+    fn streaming_plan_json_schema_is_stable() {
+        let doc = streaming_plan(16).to_json_for(&Budgets::unlimited());
+        let keys = |j: &Json| -> Vec<String> {
+            match j {
+                Json::Obj(fields) => fields.iter().map(|(k, _)| k.clone()).collect(),
+                _ => panic!("plan record must be an object"),
+            }
+        };
+        assert_eq!(
+            keys(&doc),
+            vec![
+                "p",
+                "mask_bytes",
+                "peak_bytes",
+                "peak_level",
+                "record_stream_bytes",
+                "resident_sink_bytes",
+                "fits_budget",
+            ]
+        );
+        let verdict = doc.get("fits_budget").expect("fits_budget present");
         assert_eq!(verdict.get("fits"), Some(&Json::Bool(true)));
         assert!(verdict.get("reasons").and_then(Json::as_arr).is_some());
     }

@@ -86,6 +86,19 @@ impl<'a, M: VarMask> SubsetScorer<M> for NativeScorer<'a> {
         self.inner.log_q(mask)
     }
 
+    /// One virtual dispatch per batch instead of per subset: the whole
+    /// batch runs inside [`LocalScorer::log_q_batch_into`]'s monomorphic
+    /// loop over the cache-blocked counting kernel.
+    fn log_q_batch_into(&mut self, masks: &[M], out: &mut [f64]) {
+        self.inner.log_q_batch_into(masks, out);
+    }
+
+    fn log_q_batch(&mut self, masks: &[M], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(masks.len(), 0.0);
+        self.inner.log_q_batch_into(masks, out);
+    }
+
     fn evals(&self) -> u64 {
         self.inner.evals()
     }
@@ -115,6 +128,25 @@ mod tests {
         for mask in 0u32..32 {
             assert_eq!(a.log_q(mask), b.log_q(mask));
         }
+    }
+
+    #[test]
+    fn batch_overrides_match_singles_bit_exactly() {
+        let d = synth::uniform(5, 70, &[2, 3, 2, 2, 4], 5);
+        let e = NativeEngine::new(&d, ScoreKind::Bdeu { ess: 1.0 });
+        let mut single = ScoreEngine::<u32>::scorer(&e);
+        let mut batched = ScoreEngine::<u32>::scorer(&e);
+        let masks: Vec<u32> = (0u32..(1 << 5)).collect();
+        let mut into = vec![0.0; masks.len()];
+        batched.log_q_batch_into(&masks, &mut into);
+        let mut grown = Vec::new();
+        batched.log_q_batch(&masks, &mut grown);
+        for (i, &m) in masks.iter().enumerate() {
+            let want = single.log_q(m).to_bits();
+            assert_eq!(into[i].to_bits(), want, "batch_into mask={m:#b}");
+            assert_eq!(grown[i].to_bits(), want, "batch mask={m:#b}");
+        }
+        assert_eq!(batched.evals(), 2 * masks.len() as u64);
     }
 
     #[test]

@@ -41,7 +41,7 @@
 //! | width | role | exact DP cap | search cap |
 //! |-------|------|--------------|------------|
 //! | `u32` | **narrow path** — the seed's original representation; the default type parameter everywhere | [`MAX_VARS`] = 30 | — |
-//! | `u64` | **wide path** — spill-assisted large exact runs and wide approximate searches | [`MAX_VARS_WIDE`] = 34 (in-RAM), [`MAX_VARS_SHARDED`] = 36 (sharded, `--shards`) | [`MAX_NET_VARS`] = 64 |
+//! | `u64` | **wide path** — spill-assisted large exact runs and wide approximate searches | [`MAX_VARS_WIDE`] = 34 (in-RAM), [`MAX_VARS_SHARDED`] = 36 (sharded, `--shards`), [`MAX_VARS_STREAMING`] = 32 (memory-only `--streaming`) | [`MAX_NET_VARS`] = 64 |
 //!
 //! Everything between the CLI and the kernels — [`bitset::LevelIter`],
 //! colex ranking, [`score::counts::Counter`] radix coding,
@@ -73,6 +73,13 @@
 //!   cluster claim ledger ([`coordinator::cluster`],
 //!   [`solver::solve_clustered`], `--cluster`): N processes over one
 //!   shared directory, crash-reclaim included, bit-identical results.
+//! * **`MAX_VARS_STREAMING` = 32** — the memory-only streaming engine
+//!   ([`solver::StreamingSolver`], `--streaming`): no sink tables at
+//!   all (per-level compact record streams instead), so it undercuts
+//!   the resident path's peak RAM everywhere, but it also has no spill
+//!   or shard assist — the in-RAM best-parent frontier binds, two
+//!   variables short of the spill-assisted [`MAX_VARS_WIDE`]. Priced by
+//!   [`coordinator::plan::streaming_plan`].
 //! * **`MAX_NET_VARS` = 64** — one `u64` word of adjacency per node for
 //!   generative networks, hill climbing, PC-Stable and the hybrid
 //!   search (`search::hill_climb` handles p = 48 datasets end-to-end;
@@ -99,7 +106,7 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::engine::{JaxEngine, NativeEngine, ScoreEngine};
     pub use crate::score::ScoreKind;
-    pub use crate::solver::{LeveledSolver, SilanderSolver, SolveResult};
+    pub use crate::solver::{LeveledSolver, SilanderSolver, SolveResult, StreamingSolver};
 }
 
 /// Cap on the number of variables for the **narrow (`u32`) exact-DP
@@ -125,6 +132,15 @@ pub const MAX_VARS_WIDE: usize = 34;
 /// [`coordinator::plan::sharded_plan`]), plus `u8`-indexed level tags in
 /// the v1 header format.
 pub const MAX_VARS_SHARDED: usize = 36;
+
+/// Cap on the number of variables for the **memory-only streaming
+/// path** ([`solver::StreamingSolver`] with `--streaming`): the `2^p`
+/// sink tables are replaced by per-level compact record streams, but
+/// the two-level best-parent frontier must still fit in RAM with no
+/// spill or shard assist — so the wide streaming cap sits at 32, two
+/// below the spill-assisted [`MAX_VARS_WIDE`]. (The narrow path is
+/// bounded by the `u32` format at [`MAX_VARS`] as usual.)
+pub const MAX_VARS_STREAMING: usize = 32;
 
 /// Separate, looser cap for *generative* networks, datasets and the
 /// approximate searches (`u64` adjacency): ALARM has 37 nodes, and
@@ -153,5 +169,17 @@ pub fn sharded_dp_cap<M: bitset::VarMask>() -> usize {
         MAX_VARS
     } else {
         MAX_VARS_SHARDED
+    }
+}
+
+/// The exact-DP variable cap for a mask width when the **memory-only
+/// streaming** engine drives the run: narrow is format-bound at
+/// [`MAX_VARS`]; wide stops at [`MAX_VARS_STREAMING`] because the
+/// frontier has no spill/shard assist.
+pub fn streaming_dp_cap<M: bitset::VarMask>() -> usize {
+    if M::BITS <= 32 {
+        MAX_VARS
+    } else {
+        MAX_VARS_STREAMING
     }
 }

@@ -23,6 +23,10 @@ use crate::data::Dataset;
 /// 4·DIRECT_MAX; 64 KiB stays L1/L2-resident).
 const DIRECT_MAX: u64 = 16_384;
 
+/// Rows per encode tile: 4096 `u64` codes = 32 KiB, small enough to
+/// stay cache-resident while every column of the subset is folded in.
+const ROW_BLOCK: usize = 4096;
+
 /// Reusable scratch for contingency counting.
 #[derive(Clone, Debug)]
 pub struct Counter {
@@ -109,26 +113,45 @@ impl Counter {
 
     /// Radix-encode each row's restriction to `mask` into `self.codes`;
     /// returns σ(S) (saturating, only used for the strategy cut-off).
+    ///
+    /// Cache-blocked: rows are processed in [`ROW_BLOCK`] tiles, with
+    /// every column of the subset folded into a tile before moving to
+    /// the next — each tile of `codes` is touched `k` times while hot
+    /// instead of the whole `n·8`-byte array streaming through cache
+    /// once per column. The folds are exact integer adds in the same
+    /// per-row order, so the resulting `codes` array — and therefore
+    /// the first-occurrence count order every score accumulates in —
+    /// is identical to the unblocked layout, bit for bit.
     fn encode<M: VarMask>(&mut self, data: &Dataset, mask: M) -> u64 {
         let n = data.n();
         self.codes.clear();
         self.codes.resize(n, 0);
-        let mut stride: u64 = 1;
-        for v in bits_of(mask) {
-            let col = data.column(v);
-            let arity = data.arities()[v] as u64;
-            if stride == 1 {
-                for (code, &x) in self.codes.iter_mut().zip(col) {
-                    *code = x as u64;
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + ROW_BLOCK).min(n);
+            let tile = &mut self.codes[lo..hi];
+            let mut stride: u64 = 1;
+            for v in bits_of(mask) {
+                let col = &data.column(v)[lo..hi];
+                if stride == 1 {
+                    for (code, &x) in tile.iter_mut().zip(col) {
+                        *code = x as u64;
+                    }
+                } else {
+                    for (code, &x) in tile.iter_mut().zip(col) {
+                        *code += stride * x as u64;
+                    }
                 }
-            } else {
-                for (code, &x) in self.codes.iter_mut().zip(col) {
-                    *code += stride * x as u64;
-                }
+                stride = stride.saturating_mul(data.arities()[v] as u64);
             }
-            stride = stride.saturating_mul(arity);
+            lo = hi;
         }
-        stride
+        // σ(S): the same saturating stride product the fold walked
+        let mut sigma: u64 = 1;
+        for v in bits_of(mask) {
+            sigma = sigma.saturating_mul(data.arities()[v] as u64);
+        }
+        sigma
     }
 
     fn count_direct(&mut self, sigma: usize) {
@@ -323,6 +346,32 @@ mod tests {
         first.sort_unstable();
         again.sort_unstable();
         assert_eq!(first, again);
+    }
+
+    #[test]
+    fn blocked_encode_is_exact_across_tile_boundaries() {
+        // n > ROW_BLOCK forces multiple tiles; counts must match a
+        // naive per-row recount exactly
+        let n = ROW_BLOCK + 357;
+        let d = synth::uniform(3, n, &[3, 2, 4], 21);
+        let mut c = Counter::new(d.n());
+        for mask in 1u32..8 {
+            let mut naive: std::collections::HashMap<u64, u32> = Default::default();
+            for i in 0..d.n() {
+                let mut code = 0u64;
+                let mut stride = 1u64;
+                for v in bits_of(mask) {
+                    code += stride * d.value(i, v) as u64;
+                    stride *= d.arities()[v] as u64;
+                }
+                *naive.entry(code).or_default() += 1;
+            }
+            let mut got = c.count(&d, mask).to_vec();
+            got.sort_unstable();
+            let mut want: Vec<u32> = naive.values().copied().collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "mask={mask:#b}");
+        }
     }
 
     #[test]

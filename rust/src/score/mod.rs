@@ -129,6 +129,26 @@ impl<'a> LocalScorer<'a> {
     /// instantiation is the seed's exact hot path.
     pub fn log_q<M: VarMask>(&mut self, mask: M) -> f64 {
         self.evals += 1;
+        self.log_q_inner(mask)
+    }
+
+    /// Batched subset potentials into a caller-sized slice — the kernel
+    /// entry point [`crate::engine::SubsetScorer::log_q_batch_into`]
+    /// forwards to. One monomorphic call per *batch* (the solvers'
+    /// level workers hand over `SolveOptions::batch` masks at a time)
+    /// instead of one virtual `log_q` per subset, with each subset's
+    /// contingency pass running the cache-blocked encode in [`counts`].
+    /// Per-subset accumulation order is exactly [`LocalScorer::log_q`]'s,
+    /// so results are bit-identical to the one-at-a-time path.
+    pub fn log_q_batch_into<M: VarMask>(&mut self, masks: &[M], out: &mut [f64]) {
+        debug_assert_eq!(masks.len(), out.len());
+        for (slot, &mask) in out.iter_mut().zip(masks) {
+            self.evals += 1;
+            *slot = self.log_q_inner(mask);
+        }
+    }
+
+    fn log_q_inner<M: VarMask>(&mut self, mask: M) -> f64 {
         let n = self.data.n();
         match self.kind {
             ScoreKind::Jeffreys | ScoreKind::JeffreysObserved => {
@@ -432,6 +452,32 @@ mod tests {
         assert_eq!(ScoreKind::parse("bdeu:nan"), None);
         assert_eq!(ScoreKind::parse("bdeu:NaN"), None);
         assert_eq!(ScoreKind::parse("bdeu:0"), None);
+    }
+
+    #[test]
+    fn batched_log_q_is_bit_identical_to_singles() {
+        let d = synth::uniform(6, 157, &[2, 3, 4, 2, 3, 2], 8);
+        for kind in [
+            ScoreKind::Jeffreys,
+            ScoreKind::JeffreysObserved,
+            ScoreKind::Bdeu { ess: 1.0 },
+            ScoreKind::Bic,
+            ScoreKind::Aic,
+        ] {
+            let mut single = LocalScorer::new(&d, kind);
+            let mut batched = LocalScorer::new(&d, kind);
+            let masks: Vec<u32> = (0u32..(1 << 6)).collect();
+            let mut out = vec![0.0; masks.len()];
+            batched.log_q_batch_into(&masks, &mut out);
+            for (&mask, &got) in masks.iter().zip(&out) {
+                assert_eq!(
+                    single.log_q(mask).to_bits(),
+                    got.to_bits(),
+                    "mask={mask:#b} {kind:?}"
+                );
+            }
+            assert_eq!(single.evals(), batched.evals(), "{kind:?} eval accounting");
+        }
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct SubmitRequest {
     pub threads: usize,
     /// Subsets per engine batch.
     pub batch: usize,
+    /// Run the memory-only streaming engine instead of the sharded
+    /// coordinator (no on-disk run artifacts; cancel re-runs from
+    /// scratch). Mutually exclusive with `shards > 1`.
+    pub streaming: bool,
 }
 
 impl Default for SubmitRequest {
@@ -57,6 +61,7 @@ impl Default for SubmitRequest {
             shards: 1,
             threads: 0,
             batch: 1024,
+            streaming: false,
         }
     }
 }
@@ -101,6 +106,10 @@ impl SubmitRequest {
                 "shards" => req.shards = expect_count(&value, "shards")?,
                 "threads" => req.threads = expect_count(&value, "threads")?,
                 "batch" => req.batch = expect_count(&value, "batch")?,
+                "streaming" => match value {
+                    Json::Bool(flag) => req.streaming = flag,
+                    other => bail!("field 'streaming' must be a boolean, got {other:?}"),
+                },
                 _ => {} // unknown fields ignored (forward compatibility)
             }
         }
@@ -117,6 +126,13 @@ impl SubmitRequest {
         }
         if req.batch > MAX_BATCH {
             bail!("field 'batch' must be at most {MAX_BATCH} (got {})", req.batch);
+        }
+        if req.streaming && req.shards > 1 {
+            bail!(
+                "'streaming' is memory-only and cannot combine with \
+                 'shards' > 1 (got {})",
+                req.shards
+            );
         }
         Ok(req)
     }
@@ -137,6 +153,7 @@ impl SubmitRequest {
             .set("shards", self.shards)
             .set("threads", self.threads)
             .set("batch", self.batch)
+            .set("streaming", self.streaming)
     }
 
     /// Resolve the score name (`bnsl learn --score` grammar).
@@ -247,9 +264,27 @@ mod tests {
         assert_eq!(req.threads, 0);
         assert_eq!(req.batch, 1024);
         assert!(req.p.is_none());
+        assert!(!req.streaming);
         let back = SubmitRequest::from_json(req.to_json()).unwrap();
         assert_eq!(back.shards, 4);
         assert_eq!(back.csv, req.csv);
+        assert!(!back.streaming);
+    }
+
+    #[test]
+    fn streaming_flag_roundtrips_and_excludes_shards() {
+        let doc = Json::parse(r#"{"csv": "a,b\n0,1\n", "streaming": true}"#).unwrap();
+        let req = SubmitRequest::from_json(doc).unwrap();
+        assert!(req.streaming);
+        let back = SubmitRequest::from_json(req.to_json()).unwrap();
+        assert!(back.streaming);
+        for text in [
+            r#"{"csv": "x", "streaming": true, "shards": 2}"#,
+            r#"{"csv": "x", "streaming": 1}"#,
+        ] {
+            let doc = Json::parse(text).unwrap();
+            assert!(SubmitRequest::from_json(doc).is_err(), "{text}");
+        }
     }
 
     #[test]

@@ -37,13 +37,15 @@ use super::api::{JobState, SubmitRequest, SubmitResponse};
 use super::cache::ResultCache;
 use super::queue::{Admission, Rejection};
 use crate::cli::MaskWidth;
-use crate::coordinator::plan::{sharded_plan, Budgets};
+use crate::coordinator::plan::{sharded_plan, streaming_plan, Budgets};
 use crate::coordinator::shard::{run_fingerprint, ShardOptions};
 use crate::coordinator::storage::{make_backend, BackendKind, SharedBackend};
 use crate::data::{parse_csv, Dataset};
 use crate::engine::NativeEngine;
 use crate::score::ScoreKind;
-use crate::solver::{solve_sharded, CancelToken, ShardOutcome};
+use crate::solver::{
+    solve_sharded, CancelToken, ShardOutcome, SolveOptions, StreamingSolver,
+};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -104,6 +106,9 @@ struct Job {
     shards: usize,
     threads: usize,
     batch: usize,
+    /// Memory-only streaming run: no run dir, no manifest; a cancel or
+    /// restart re-runs from scratch.
+    streaming: bool,
     error: Option<String>,
     cancel: CancelToken,
     /// True only for user cancellation (`DELETE`) — a drain also fires
@@ -186,14 +191,28 @@ struct Claim {
     shards: usize,
     threads: usize,
     batch: usize,
+    streaming: bool,
     cancel: CancelToken,
+}
+
+/// How the prepared job executes: through the sharded coordinator
+/// (durable run dir, resumable manifest) or the memory-only streaming
+/// engine (no artifacts; a fired cancel token drops everything and the
+/// job re-runs from scratch if resubmitted).
+enum PreparedMode {
+    Sharded(ShardOptions),
+    Streaming {
+        threads: usize,
+        batch: usize,
+        cancel: CancelToken,
+    },
 }
 
 /// Output of the planning phase: everything the solve needs.
 struct Prepared {
     data: Dataset,
     kind: ScoreKind,
-    options: ShardOptions,
+    mode: PreparedMode,
     width: MaskWidth,
 }
 
@@ -349,6 +368,7 @@ impl JobManager {
             .set("shards", job.shards)
             .set("threads", job.threads)
             .set("batch", job.batch)
+            .set("streaming", job.streaming)
             .set("backend", self.run_backend.name())
             .set(
                 "error",
@@ -413,8 +433,21 @@ impl JobManager {
             }
             data = data.take_vars(p);
         }
-        // exact-DP caps (the service always drives the sharded solver)
-        crate::cli::validate_var_count(data.p(), true, true).map_err(invalid)?;
+        // exact-DP caps: streaming jobs run the memory-only engine (its
+        // own, tighter wide cap), everything else the sharded solver
+        if req.streaming {
+            crate::cli::validate_var_count(data.p(), true, false).map_err(invalid)?;
+            if data.p() > crate::MAX_VARS_STREAMING {
+                return Err(SubmitError::Invalid(format!(
+                    "streaming supports p <= {} (got {}); submit without \
+                     'streaming' for the sharded solver",
+                    crate::MAX_VARS_STREAMING,
+                    data.p()
+                )));
+            }
+        } else {
+            crate::cli::validate_var_count(data.p(), true, true).map_err(invalid)?;
+        }
         // knob ceilings, re-checked here so non-HTTP callers get them
         // too: an unbounded shard count spins the planner, an unbounded
         // batch wraps its u64 pricing arithmetic past admission
@@ -435,8 +468,18 @@ impl JobManager {
                 req.batch
             )));
         }
+        if req.streaming && req.shards > 1 {
+            return Err(SubmitError::Invalid(format!(
+                "'streaming' is memory-only and cannot combine with \
+                 'shards' > 1 (got {})",
+                req.shards
+            )));
+        }
         let fingerprint = run_fingerprint(&data, kind);
-        let plan = sharded_plan(data.p(), req.shards, req.threads, req.batch);
+        // price exactly the mode that will run (both off the lock)
+        let stream_plan = req.streaming.then(|| streaming_plan(data.p()));
+        let plan = (!req.streaming)
+            .then(|| sharded_plan(data.p(), req.shards, req.threads, req.batch));
 
         // Phase 1, under the lock: dedup/cache/admission checks and the
         // id + fingerprint reservation. The job is inserted into the
@@ -478,11 +521,18 @@ impl JobManager {
             }
             // admission counts phase-1 reservations still staging, so
             // concurrent submissions cannot overshoot max_queue
-            if let Err(rejection) = self.admission.admit(
-                &plan,
-                self.run_backend,
-                st.queue.len() + st.reserved,
-            ) {
+            let admitted = match (&stream_plan, &plan) {
+                (Some(splan), _) => self
+                    .admission
+                    .admit_streaming(splan, st.queue.len() + st.reserved),
+                (None, Some(plan)) => self.admission.admit(
+                    plan,
+                    self.run_backend,
+                    st.queue.len() + st.reserved,
+                ),
+                (None, None) => unreachable!("exactly one plan is priced"),
+            };
+            if let Err(rejection) = admitted {
                 Counters::bump(&self.counters.rejected);
                 return Err(SubmitError::Rejected(rejection));
             }
@@ -499,6 +549,7 @@ impl JobManager {
                 shards: req.shards,
                 threads: req.threads,
                 batch: req.batch,
+                streaming: req.streaming,
                 error: None,
                 cancel: CancelToken::new(),
                 cancel_requested: false,
@@ -588,6 +639,7 @@ impl JobManager {
                 shards: job.shards,
                 threads: job.threads,
                 batch: job.batch,
+                streaming: job.streaming,
                 cancel: job.cancel.clone(),
             };
             let _ = self.persist_locked(job);
@@ -684,6 +736,29 @@ impl JobManager {
                 "staged dataset no longer matches the ledger fingerprint".to_string(),
             ));
         }
+        if claim.streaming {
+            // memory-only: no run dir, no manifest, nothing to resume —
+            // the width check is the streaming engine's own cap
+            let width = crate::cli::validate_var_count(data.p(), true, false)
+                .map_err(|e| Exec::Failed(format!("{e:#}")))?;
+            if data.p() > crate::MAX_VARS_STREAMING {
+                return Err(Exec::Failed(format!(
+                    "streaming supports p <= {} (ledger records p = {})",
+                    crate::MAX_VARS_STREAMING,
+                    data.p()
+                )));
+            }
+            return Ok(Prepared {
+                data,
+                kind,
+                mode: PreparedMode::Streaming {
+                    threads: claim.threads,
+                    batch: claim.batch,
+                    cancel: claim.cancel.clone(),
+                },
+                width,
+            });
+        }
         let width = crate::cli::validate_var_count(data.p(), true, true)
             .map_err(|e| Exec::Failed(format!("{e:#}")))?;
         let run_dir = self.run_dir(&claim.fingerprint);
@@ -707,30 +782,72 @@ impl JobManager {
         Ok(Prepared {
             data,
             kind,
-            options,
+            mode: PreparedMode::Sharded(options),
             width,
         })
     }
 
-    /// The running phase: drive the sharded solver and publish the
-    /// result record.
+    /// The running phase: drive the solver (sharded coordinator or the
+    /// memory-only streaming engine) and publish the result record.
+    /// Either mode's record is bit-identical, so the fingerprint-keyed
+    /// cache (and dedup) is correct across modes.
     fn run_prepared(&self, prepared: &Prepared, claim: &Claim) -> Exec {
         let engine = NativeEngine::new(&prepared.data, prepared.kind);
-        let solved = match prepared.width {
-            MaskWidth::Narrow => solve_sharded::<u32>(&engine, &prepared.options),
-            MaskWidth::Wide => solve_sharded::<u64>(&engine, &prepared.options),
+        let publish = |result: crate::solver::SolveResult| {
+            Counters::bump(&self.counters.solver_runs);
+            let record = result.to_json(prepared.data.names()).to_pretty();
+            match self.cache.publish(&claim.fingerprint, &record) {
+                Ok(()) => Exec::Done { via_cache: false },
+                Err(e) => Exec::Failed(format!("publishing result: {e:#}")),
+            }
         };
-        match solved {
-            Ok(ShardOutcome::Complete(result)) => {
-                Counters::bump(&self.counters.solver_runs);
-                let record = result.to_json(prepared.data.names()).to_pretty();
-                match self.cache.publish(&claim.fingerprint, &record) {
-                    Ok(()) => Exec::Done { via_cache: false },
-                    Err(e) => Exec::Failed(format!("publishing result: {e:#}")),
+        match &prepared.mode {
+            PreparedMode::Streaming {
+                threads,
+                batch,
+                cancel,
+            } => {
+                // SolveOptions has no 0 = auto convention (1 = the
+                // paper's sequential run), so honor the submit API's
+                // documented `threads: 0` here, like the sharded path
+                // does inside solve_sharded.
+                let threads = match *threads {
+                    0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+                    t => t,
+                };
+                let options = SolveOptions {
+                    threads,
+                    batch: (*batch).max(1),
+                    cancel: cancel.clone(),
+                    ..Default::default()
+                };
+                let solved = match prepared.width {
+                    MaskWidth::Narrow => {
+                        StreamingSolver::with_options(&engine, options).try_solve()
+                    }
+                    MaskWidth::Wide => {
+                        StreamingSolver::<u64>::with_options_generic(&engine, options)
+                            .try_solve()
+                    }
+                };
+                match solved {
+                    Some(result) => publish(result),
+                    // cancel fired at a level boundary: nothing durable
+                    // exists — a resubmission re-runs from scratch
+                    None => Exec::Checkpointed,
                 }
             }
-            Ok(ShardOutcome::Checkpointed { .. }) => Exec::Checkpointed,
-            Err(e) => Exec::Failed(format!("{e:#}")),
+            PreparedMode::Sharded(options) => {
+                let solved = match prepared.width {
+                    MaskWidth::Narrow => solve_sharded::<u32>(&engine, options),
+                    MaskWidth::Wide => solve_sharded::<u64>(&engine, options),
+                };
+                match solved {
+                    Ok(ShardOutcome::Complete(result)) => publish(result),
+                    Ok(ShardOutcome::Checkpointed { .. }) => Exec::Checkpointed,
+                    Err(e) => Exec::Failed(format!("{e:#}")),
+                }
+            }
         }
     }
 
@@ -946,6 +1063,8 @@ fn job_from_doc(doc: &Json, dir_name: &str, ledger: &std::path::Path) -> Result<
         shards: count_field("shards")?,
         threads: count_field("threads")?,
         batch: count_field("batch")?,
+        // absent in pre-streaming ledgers: default to the sharded mode
+        streaming: matches!(doc.get("streaming"), Some(Json::Bool(true))),
         error: doc
             .get("error")
             .and_then(Json::as_str)
@@ -1217,6 +1336,78 @@ mod tests {
         let _ = std::fs::remove_dir_all(&root2);
         let _ = std::fs::remove_dir_all(&data_dir);
         let _ = std::fs::remove_file(&outside);
+    }
+
+    /// Tentpole (ISSUE 6): a `streaming: true` submission runs the
+    /// memory-only engine, leaves no run directory behind, publishes a
+    /// record bit-identical to the resident solver's — and because it
+    /// is bit-identical, a later *sharded* submission of the same
+    /// dataset is served straight from the cache.
+    #[test]
+    fn streaming_job_runs_memory_only_and_shares_the_result_cache() {
+        let root = temp_root("streamjob");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::random(8, 70, 3, &mut crate::util::rng::Rng::new(17));
+        let text = csv_text(&d);
+        let req = SubmitRequest {
+            csv: Some(text.clone()),
+            streaming: true,
+            ..Default::default()
+        };
+        let a = mgr.submit(&req).unwrap();
+        assert!(!a.deduped && !a.cached);
+        assert!(mgr.run_one());
+        assert_eq!(mgr.job_state(&a.id), Some(JobState::Done));
+        let status = mgr.status_json(&a.id).unwrap();
+        assert_eq!(status.get("streaming"), Some(&Json::Bool(true)));
+        let fp = status
+            .get("fingerprint")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert!(
+            !root.join("runs").join(&fp).exists(),
+            "streaming left a run directory behind"
+        );
+        let parsed = parse_csv(&text).unwrap();
+        let engine = NativeEngine::new(&parsed, ScoreKind::Jeffreys);
+        let direct = LeveledSolver::new(&engine).solve();
+        let record = mgr.result_text(&a.id).unwrap().expect("result ready");
+        let doc = Json::parse(&record).unwrap();
+        let served = doc.get("log_score").unwrap().as_f64().unwrap();
+        assert_eq!(served.to_bits(), direct.log_score.to_bits());
+        // the same dataset submitted for the sharded solver: cache hit
+        let b = mgr.submit(&inline_request(&text, 2)).unwrap();
+        assert!(b.deduped && b.cached);
+        assert_eq!(b.id, a.id);
+        assert_eq!(mgr.solver_runs(), 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// A cancelled streaming job is terminal with nothing durable; the
+    /// resubmission is a fresh job that re-runs from scratch.
+    #[test]
+    fn cancelled_streaming_job_resubmits_from_scratch() {
+        let root = temp_root("streamcancel");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::random(7, 50, 3, &mut crate::util::rng::Rng::new(23));
+        let text = csv_text(&d);
+        let req = SubmitRequest {
+            csv: Some(text.clone()),
+            streaming: true,
+            ..Default::default()
+        };
+        let a = mgr.submit(&req).unwrap();
+        assert_eq!(mgr.cancel(&a.id), CancelOutcome::Cancelled);
+        assert!(!mgr.run_one(), "cancelled job left no queued work");
+        let b = mgr.submit(&req).unwrap();
+        assert!(!b.deduped);
+        assert_ne!(b.id, a.id);
+        assert!(mgr.run_one());
+        assert_eq!(mgr.job_state(&b.id), Some(JobState::Done));
+        assert_eq!(mgr.solver_runs(), 1, "the re-run computed from scratch, once");
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

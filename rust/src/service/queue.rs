@@ -11,7 +11,7 @@
 //! [`BudgetVerdict`]) goes back in the HTTP error body, so the client
 //! learns *which* ceiling it hit and which knob to turn.
 
-use crate::coordinator::plan::{BudgetVerdict, Budgets, ShardedPlan};
+use crate::coordinator::plan::{BudgetVerdict, Budgets, ShardedPlan, StreamingPlan};
 use crate::coordinator::storage::BackendKind;
 use crate::util::json::Json;
 
@@ -54,6 +54,23 @@ impl Admission {
         backend: BackendKind,
         queue_depth: usize,
     ) -> Result<(), Rejection> {
+        self.check_queue(queue_depth)?;
+        self.check_budget(plan.fits_budget(backend, &self.budgets))
+    }
+
+    /// Admit or reject one *streaming* submission. Same queue bound;
+    /// the pricing is [`StreamingPlan::fits_budget`]'s RAM-only model
+    /// (a streaming run touches no files and issues no object requests).
+    pub fn admit_streaming(
+        &self,
+        plan: &StreamingPlan,
+        queue_depth: usize,
+    ) -> Result<(), Rejection> {
+        self.check_queue(queue_depth)?;
+        self.check_budget(plan.fits_budget(&self.budgets))
+    }
+
+    fn check_queue(&self, queue_depth: usize) -> Result<(), Rejection> {
         if queue_depth >= self.max_queue {
             return Err(Rejection {
                 reason: format!(
@@ -63,7 +80,10 @@ impl Admission {
                 verdict: None,
             });
         }
-        let verdict = plan.fits_budget(backend, &self.budgets);
+        Ok(())
+    }
+
+    fn check_budget(&self, verdict: BudgetVerdict) -> Result<(), Rejection> {
         if !verdict.fits {
             return Err(Rejection {
                 reason: format!(
@@ -119,6 +139,30 @@ mod tests {
             .admit(&plan, BackendKind::Posix, 4)
             .unwrap_err();
         assert!(full.verdict.is_none(), "queue-full carries no verdict");
+        assert!(full.reason.contains("queue is full"), "{}", full.reason);
+    }
+
+    #[test]
+    fn streaming_admission_prices_ram_only() {
+        let plan = crate::coordinator::plan::streaming_plan(20);
+        // RAM binds…
+        let tight = policy(Budgets {
+            ram_bytes: 1,
+            ..Budgets::unlimited()
+        });
+        let rejection = tight.admit_streaming(&plan, 0).unwrap_err();
+        assert!(rejection.verdict.is_some());
+        assert!(rejection.reason.contains("resident RAM"), "{rejection:?}");
+        // …but file/request budgets never do (streaming touches neither),
+        // and the queue bound still applies.
+        let metered = policy(Budgets {
+            fd_limit: 0,
+            object_requests: Some(0),
+            ..Budgets::unlimited()
+        });
+        assert!(metered.admit_streaming(&plan, 0).is_ok());
+        let full = metered.admit_streaming(&plan, 4).unwrap_err();
+        assert!(full.verdict.is_none());
         assert!(full.reason.contains("queue is full"), "{}", full.reason);
     }
 

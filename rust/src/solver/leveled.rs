@@ -41,7 +41,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 /// Engine reference that records whether cross-thread sharing is allowed.
-enum EngineRef<'e, M: VarMask> {
+/// Shared (`pub(super)`) with the streaming fast path, which makes the
+/// same Shared-vs-Local threading decision.
+pub(super) enum EngineRef<'e, M: VarMask> {
     /// Thread-safe engine: the level sweep may be parallelised.
     Shared(&'e (dyn ScoreEngine<M> + Sync)),
     /// Single-thread-only engine (e.g. [`crate::engine::JaxEngine`], whose
@@ -50,7 +52,7 @@ enum EngineRef<'e, M: VarMask> {
 }
 
 impl<'e, M: VarMask> EngineRef<'e, M> {
-    fn plain(&self) -> &'e dyn ScoreEngine<M> {
+    pub(super) fn plain(&self) -> &'e dyn ScoreEngine<M> {
         match *self {
             EngineRef::Shared(e) => e,
             EngineRef::Local(e) => e,
@@ -68,7 +70,7 @@ pub struct LeveledSolver<'e, M: VarMask = u32> {
 /// Read access to the previous level's frontier, abstracted so the hot
 /// transition loop monomorphises over RAM ([`Level`]) and disk
 /// ([`SpilledLevel`]) backings.
-trait PrevLevel<M: VarMask> {
+pub(super) trait PrevLevel<M: VarMask> {
     fn q(&self, t: usize) -> f64;
     fn r(&self, t: usize) -> f64;
     /// `(log Q, log R)` of the subset at rank `t` — the transition loop
@@ -83,20 +85,21 @@ trait PrevLevel<M: VarMask> {
 }
 
 /// One in-RAM frontier level: scores and best-parent tables for all
-/// `C(p,k)` subsets of size `k`.
-struct Level<M: VarMask> {
+/// `C(p,k)` subsets of size `k`. Shared with the streaming fast path,
+/// whose frontiers are identical — only the sink recording differs.
+pub(super) struct Level<M: VarMask> {
     /// `log Q(T)` per subset rank
-    q: Vec<f64>,
+    pub(super) q: Vec<f64>,
     /// `log R(T)` per subset rank
-    r: Vec<f64>,
+    pub(super) r: Vec<f64>,
     /// best family score `bps[t*k + j]` for the j-th set bit of subset t
-    bps: Vec<f64>,
+    pub(super) bps: Vec<f64>,
     /// argmax parent mask, same indexing
-    bpm: Vec<M>,
+    pub(super) bpm: Vec<M>,
 }
 
 impl<M: VarMask> Level<M> {
-    fn empty_set(log_q_empty: f64) -> Level<M> {
+    pub(super) fn empty_set(log_q_empty: f64) -> Level<M> {
         Level {
             q: vec![log_q_empty],
             r: vec![0.0], // log R(∅) = 0  (Eq. 9 base case)
@@ -105,7 +108,7 @@ impl<M: VarMask> Level<M> {
         }
     }
 
-    fn allocate(k: usize, size: usize) -> Level<M> {
+    pub(super) fn allocate(k: usize, size: usize) -> Level<M> {
         Level {
             q: vec![0.0; size],
             r: vec![0.0; size],
@@ -114,7 +117,7 @@ impl<M: VarMask> Level<M> {
         }
     }
 
-    fn bytes(&self) -> usize {
+    pub(super) fn bytes(&self) -> usize {
         self.q.len() * 8 + self.r.len() * 8 + self.bps.len() * 8 + self.bpm.len() * M::BYTES
     }
 }
@@ -450,9 +453,26 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
                         &mut TableSink { tables: &tables },
                     )
                 }
-                (Frontier::Ram(level), threads) => self.run_parallel(
-                    level, &binom, p, k1, size1, threads, &mut cur, &tables,
-                ),
+                (Frontier::Ram(level), threads) => {
+                    let engine = match self.engine {
+                        EngineRef::Shared(e) => e,
+                        EngineRef::Local(_) => {
+                            unreachable!("threads forced to 1 for local engines")
+                        }
+                    };
+                    run_level_parallel(
+                        engine,
+                        level,
+                        &binom,
+                        p,
+                        k1,
+                        size1,
+                        threads,
+                        self.options.batch,
+                        &mut cur,
+                        |_, _| TableSink { tables: &tables },
+                    )
+                }
             };
             score_evals += evals;
             stats.bps_updates += bu;
@@ -475,70 +495,82 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
         })
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn run_parallel(
-        &self,
-        level: &Level<M>,
-        binom: &BinomTable,
-        p: usize,
-        k1: usize,
-        size1: usize,
-        threads: usize,
-        cur: &mut Level<M>,
-        tables: &SinkTables<M>,
-    ) -> (u64, u64, u64) {
-        let engine = match self.engine {
-            EngineRef::Shared(e) => e,
-            EngineRef::Local(_) => unreachable!("threads forced to 1 for local engines"),
-        };
-        let chunk = size1.div_ceil(threads);
-        let (mut q_rest, mut r_rest): (&mut [f64], &mut [f64]) = (&mut cur.q, &mut cur.r);
-        let (mut bps_rest, mut bpm_rest): (&mut [f64], &mut [M]) =
-            (&mut cur.bps, &mut cur.bpm);
-        let mut jobs = Vec::new();
-        let mut startr = 0usize;
-        while startr < size1 {
-            let len = chunk.min(size1 - startr);
-            let (q_c, q_n) = q_rest.split_at_mut(len);
-            let (r_c, r_n) = r_rest.split_at_mut(len);
-            let (bps_c, bps_n) = bps_rest.split_at_mut(len * k1);
-            let (bpm_c, bpm_n) = bpm_rest.split_at_mut(len * k1);
-            q_rest = q_n;
-            r_rest = r_n;
-            bps_rest = bps_n;
-            bpm_rest = bpm_n;
-            jobs.push((startr, len, q_c, r_c, bps_c, bpm_c));
-            startr += len;
-        }
-        let batch = self.options.batch;
-        let results = std::thread::scope(|scope| {
-            let handles: Vec<_> = jobs
-                .into_iter()
-                .map(|(startr, len, q_c, r_c, bps_c, bpm_c)| {
-                    scope.spawn(move || {
-                        let mut worker = LevelWorker::new(engine, binom, k1, batch);
-                        let first = colex_unrank::<M>(binom, p, k1, startr as u64);
-                        let mut iter = LevelIter::resume(p, first);
-                        let mut sinks = TableSink { tables };
-                        worker.run_range(
-                            level, startr, len, &mut iter, q_c, r_c, bps_c, bpm_c, &mut sinks,
-                        )
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("level worker panicked"))
-                .collect::<Vec<_>>()
-        });
-        let mut totals = (0, 0, 0);
-        for (e, b, s) in results {
-            totals.0 += e;
-            totals.1 += b;
-            totals.2 += s;
-        }
-        totals
+}
+
+/// Shared parallel level sweep for the in-RAM execution modes: `size1`
+/// colex ranks split into `threads` contiguous chunks mapped onto
+/// disjoint `split_at_mut` regions of the output arrays, one scoped
+/// worker per chunk driving the identical [`LevelWorker::run_range`]
+/// loop (same enumeration order, same tie-breaks — bit-identity across
+/// callers cannot drift). `make_sink(start_rank, len)` hands each chunk
+/// its own [`SinkOut`] — the one thing that differs between the
+/// resident solver (a [`TableSink`] view of the shared `2^p` tables)
+/// and the streaming solver (a disjoint `len·rec`-byte slice of the
+/// level's record stream).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn run_level_parallel<M, S, F>(
+    engine: &(dyn ScoreEngine<M> + Sync),
+    level: &Level<M>,
+    binom: &BinomTable,
+    p: usize,
+    k1: usize,
+    size1: usize,
+    threads: usize,
+    batch: usize,
+    cur: &mut Level<M>,
+    mut make_sink: F,
+) -> (u64, u64, u64)
+where
+    M: VarMask,
+    S: SinkOut<M> + Send,
+    F: FnMut(usize, usize) -> S,
+{
+    let chunk = size1.div_ceil(threads);
+    let (mut q_rest, mut r_rest): (&mut [f64], &mut [f64]) = (&mut cur.q, &mut cur.r);
+    let (mut bps_rest, mut bpm_rest): (&mut [f64], &mut [M]) =
+        (&mut cur.bps, &mut cur.bpm);
+    let mut jobs = Vec::new();
+    let mut startr = 0usize;
+    while startr < size1 {
+        let len = chunk.min(size1 - startr);
+        let (q_c, q_n) = q_rest.split_at_mut(len);
+        let (r_c, r_n) = r_rest.split_at_mut(len);
+        let (bps_c, bps_n) = bps_rest.split_at_mut(len * k1);
+        let (bpm_c, bpm_n) = bpm_rest.split_at_mut(len * k1);
+        q_rest = q_n;
+        r_rest = r_n;
+        bps_rest = bps_n;
+        bpm_rest = bpm_n;
+        jobs.push((startr, len, q_c, r_c, bps_c, bpm_c, make_sink(startr, len)));
+        startr += len;
     }
+    let results = std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .map(|(startr, len, q_c, r_c, bps_c, bpm_c, sink)| {
+                scope.spawn(move || {
+                    let mut worker = LevelWorker::new(engine, binom, k1, batch);
+                    let first = colex_unrank::<M>(binom, p, k1, startr as u64);
+                    let mut iter = LevelIter::resume(p, first);
+                    let mut sinks = sink;
+                    worker.run_range(
+                        level, startr, len, &mut iter, q_c, r_c, bps_c, bpm_c, &mut sinks,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("level worker panicked"))
+            .collect::<Vec<_>>()
+    });
+    let mut totals = (0, 0, 0);
+    for (e, b, s) in results {
+        totals.0 += e;
+        totals.1 += b;
+        totals.2 += s;
+    }
+    totals
 }
 
 impl<M: VarMask> PrevLevel<M> for ShardedLevelReader<M> {
@@ -1280,7 +1312,10 @@ fn sweep_shard_range<M: VarMask, P: PrevLevel<M>>(
 }
 
 /// Per-worker state for one level sweep over a contiguous rank range.
-struct LevelWorker<'e, 'b, M: VarMask> {
+/// `pub(super)` so the streaming fast path drives the *same* inner loop
+/// (scoring, Eq. 10 transition, Eq. 9 sink selection) through a
+/// different [`SinkOut`] — bit-identity across paths cannot drift.
+pub(super) struct LevelWorker<'e, 'b, M: VarMask> {
     scorer: Box<dyn crate::engine::SubsetScorer<M> + 'e>,
     binom: &'b BinomTable,
     k1: usize,
@@ -1297,7 +1332,7 @@ struct LevelWorker<'e, 'b, M: VarMask> {
 }
 
 impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
-    fn new(
+    pub(super) fn new(
         engine: &'e dyn ScoreEngine<M>,
         binom: &'b BinomTable,
         k1: usize,
@@ -1323,7 +1358,7 @@ impl<'e, 'b, M: VarMask> LevelWorker<'e, 'b, M> {
     /// solver, a per-shard stream buffer for the sharded one.
     /// Returns (score_evals, bps_updates, sink_updates).
     #[allow(clippy::too_many_arguments)]
-    fn run_range<P: PrevLevel<M>, S: SinkOut<M>>(
+    pub(super) fn run_range<P: PrevLevel<M>, S: SinkOut<M>>(
         &mut self,
         prev: &P,
         start_rank: usize,

@@ -4,6 +4,11 @@
 //!   over all `2^p` subsets, level by level, fusing local scores, best
 //!   parent sets (Eq. 10) and sink identification (Eq. 9) into a single
 //!   traversal with a two-level memory frontier.
+//! * [`StreamingSolver`] — the memory-only fast path: the same single
+//!   traversal and inner loop, but reconstruction state is a per-level
+//!   compact sink-record stream instead of the `2^p` mask-indexed sink
+//!   tables. Strictly lower peak RAM, no on-disk artifacts, no resume
+//!   checkpoint. Bit-identical to [`LeveledSolver`].
 //! * [`solve_sharded`] — the same single-traversal sweep driven by the
 //!   sharded frontier coordinator ([`crate::coordinator::shard`]):
 //!   per-level shard files, a worker pool, per-level manifest commits
@@ -24,7 +29,9 @@ pub mod brute;
 mod common;
 mod leveled;
 mod silander;
+mod streaming;
 
 pub use common::{CancelToken, SolveOptions, SolveResult, SolveStats};
 pub use leveled::{solve_clustered, solve_sharded, LeveledSolver, ShardOutcome};
 pub use silander::SilanderSolver;
+pub use streaming::StreamingSolver;

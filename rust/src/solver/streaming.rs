@@ -1,0 +1,607 @@
+//! Memory-only single-pass streaming engine: frontier-only DP with
+//! per-level compact sink-record streams.
+//!
+//! [`StreamingSolver`] walks the levels `k = 0..p` exactly once — the
+//! same single traversal as [`LeveledSolver`](super::LeveledSolver),
+//! through the *same* [`LevelWorker`] inner loop, so scores, tie-breaks
+//! and operation counters are bit-identical by construction. What it
+//! does **not** keep is the resident path's pair of mask-indexed sink
+//! tables (`(1 + mask_bytes)·2^p` bytes, allocated up front and alive
+//! for the whole run). Instead, each level `k` appends one *compact
+//! record* per subset to a level-local byte stream:
+//!
+//! ```text
+//! record(S, x, P) = pos | (rel << 6)          stored in ⌈(k+5)/8⌉ bytes
+//!   pos = index of the sink x among the ascending set bits of S  (6 bits)
+//!   rel = parent mask P re-coded onto the k−1 ascending bits of S\{x}
+//! ```
+//!
+//! Records are written in colex order by rank (the level sweep already
+//! enumerates subsets that way), so reconstruction addresses them by
+//! `colex_rank` — no mask-indexed table is ever materialised. Summed
+//! over all levels the streams cost `Σ_k C(p,k)·⌈(k+5)/8⌉` bytes —
+//! ~2.3 bytes/subset at p = 20 versus the resident path's 5 (narrow) or
+//! 9 (wide) — and, unlike the sink tables, the peak-level working set
+//! only carries the streams accumulated *so far*. The model is priced
+//! by [`crate::coordinator::plan::streaming_plan`] and asserted against
+//! the solver's own accounting in the tests below.
+//!
+//! Trade-offs, stated explicitly:
+//!
+//! * **Memory-only.** There is no spill or shard assist: the frontier
+//!   must fit in RAM, which is why the wide cap is
+//!   [`crate::MAX_VARS_STREAMING`] = 32, below the spill-assisted 34.
+//! * **No resume checkpoint.** Cancellation is honoured cleanly at
+//!   level boundaries ([`StreamingSolver::try_solve`] returns `None`),
+//!   but nothing durable survives — a restart recomputes from level 0.
+//!   Runs that need `--resume` belong on the sharded path.
+
+use super::common::{SolveOptions, SolveResult, SolveStats};
+use super::leveled::{run_level_parallel, EngineRef, Level, LevelWorker};
+use crate::bitset::{colex_rank, BinomTable, LevelIter, VarMask};
+use crate::bn::Dag;
+use crate::coordinator::shard::SinkOut;
+use crate::engine::ScoreEngine;
+use std::time::Instant;
+
+/// Bytes per sink record at level `k` — delegated to the
+/// [`crate::coordinator::plan`] pricing model so the planner and the
+/// solver's actual allocations share one formula.
+fn record_bytes(k: usize) -> usize {
+    crate::coordinator::plan::streaming_record_bytes(k) as usize
+}
+
+/// Pack one sink decision into its compact record value.
+///
+/// The value needs `6 + (k−1)` bits — at the hard cap
+/// [`crate::MAX_VARS_SHARDED`] that is 41 bits, so a `u64` always holds
+/// it and `record_bytes` bytes always suffice.
+#[inline]
+fn encode_record<M: VarMask>(mask: M, sink: u8, pmask: M) -> u64 {
+    let x = sink as usize;
+    debug_assert!(mask.contains(x), "sink not in subset");
+    let pos = crate::bitset::bit_index(mask, x) as u64;
+    let rest = mask.without(x);
+    debug_assert_eq!(
+        pmask.to_u64() & !rest.to_u64(),
+        0,
+        "parent set escapes S\\{{x}}"
+    );
+    let mut rel = 0u64;
+    let mut m = rest;
+    let mut i = 0;
+    while !m.is_zero() {
+        let b = m.trailing_zeros() as usize;
+        if pmask.contains(b) {
+            rel |= 1u64 << i;
+        }
+        m = m.drop_lowest();
+        i += 1;
+    }
+    pos | (rel << 6)
+}
+
+/// Unpack a record value back into `(sink, parent_mask)` for subset
+/// `mask`. Exact inverse of [`encode_record`] — pure integer ops, so
+/// reconstruction is trivially bit-faithful to what the sweep decided.
+#[inline]
+fn decode_record<M: VarMask>(mask: M, val: u64) -> (usize, M) {
+    let pos = (val & 63) as usize;
+    let mut m = mask;
+    for _ in 0..pos {
+        m = m.drop_lowest();
+    }
+    let x = m.trailing_zeros() as usize;
+    let rel = val >> 6;
+    let mut pm = M::ZERO;
+    let mut rest = mask.without(x);
+    let mut i = 0;
+    while !rest.is_zero() {
+        let b = rest.trailing_zeros() as usize;
+        if (rel >> i) & 1 == 1 {
+            pm = pm.with(b);
+        }
+        rest = rest.drop_lowest();
+        i += 1;
+    }
+    (x, pm)
+}
+
+/// [`SinkOut`] adapter over one worker's chunk of a level stream.
+///
+/// [`LevelWorker::run_range`] calls `put` exactly once per subset, in
+/// colex order, so a simple cursor keeps byte offset = rank offset —
+/// and because parallel workers receive *disjoint* `split_at_mut`
+/// chunks, no synchronisation (and no raw pointers) is needed.
+struct StreamSink<'s> {
+    out: &'s mut [u8],
+    rec: usize,
+    cursor: usize,
+}
+
+impl<M: VarMask> SinkOut<M> for StreamSink<'_> {
+    #[inline]
+    fn put(&mut self, mask: M, sink: u8, pmask: M) {
+        let val = encode_record(mask, sink, pmask);
+        let at = self.cursor * self.rec;
+        let bytes = val.to_le_bytes();
+        self.out[at..at + self.rec].copy_from_slice(&bytes[..self.rec]);
+        self.cursor += 1;
+    }
+}
+
+/// Walk the retained level streams from the full set down to ∅, exactly
+/// like [`super::common::reconstruct`] walks the sink tables — but
+/// addressed by colex rank instead of by mask value.
+fn reconstruct_streams<M: VarMask>(
+    p: usize,
+    binom: &BinomTable,
+    streams: &[Vec<u8>],
+) -> (Dag, Vec<usize>) {
+    let mut mask = M::low_bits(p);
+    let mut parents = vec![0u64; p];
+    let mut order_rev = Vec::with_capacity(p);
+    while !mask.is_zero() {
+        let k = mask.count_ones() as usize;
+        let rec = record_bytes(k);
+        let t = colex_rank(binom, mask) as usize;
+        let slot = &streams[k][t * rec..(t + 1) * rec];
+        let mut val = 0u64;
+        for (i, &b) in slot.iter().enumerate() {
+            val |= (b as u64) << (8 * i);
+        }
+        let (x, pm) = decode_record(mask, val);
+        debug_assert!(mask.contains(x), "recorded sink not in subset");
+        parents[x] = pm.to_u64();
+        order_rev.push(x);
+        mask = mask.without(x);
+    }
+    order_rev.reverse();
+    (Dag::from_parents(parents), order_rev)
+}
+
+/// The memory-only streaming fast path (width-generic; defaults to the
+/// narrow `u32` path). See the module docs for the memory model.
+pub struct StreamingSolver<'e, M: VarMask = u32> {
+    engine: EngineRef<'e, M>,
+    options: SolveOptions,
+}
+
+impl<'e> StreamingSolver<'e, u32> {
+    /// Narrow-path solver over a thread-safe engine (multithreading
+    /// available). For the wide path use
+    /// [`StreamingSolver::new_generic`] with an explicit `::<u64>`
+    /// width.
+    pub fn new(engine: &'e (dyn ScoreEngine + Sync)) -> StreamingSolver<'e> {
+        StreamingSolver::new_generic(engine)
+    }
+
+    /// Narrow-path solver over a single-thread engine (`threads` forced
+    /// to 1).
+    pub fn new_local(engine: &'e dyn ScoreEngine) -> StreamingSolver<'e> {
+        StreamingSolver::new_generic_local(engine)
+    }
+
+    pub fn with_options(
+        engine: &'e (dyn ScoreEngine + Sync),
+        options: SolveOptions,
+    ) -> StreamingSolver<'e> {
+        StreamingSolver::with_options_generic(engine, options)
+    }
+
+    pub fn with_options_local(
+        engine: &'e dyn ScoreEngine,
+        options: SolveOptions,
+    ) -> StreamingSolver<'e> {
+        StreamingSolver::with_options_generic_local(engine, options)
+    }
+}
+
+impl<'e, M: VarMask> StreamingSolver<'e, M> {
+    /// Width-explicit solver over a thread-safe engine:
+    /// `StreamingSolver::<u64>::new_generic(&engine)` is the wide path.
+    pub fn new_generic(engine: &'e (dyn ScoreEngine<M> + Sync)) -> StreamingSolver<'e, M> {
+        StreamingSolver {
+            engine: EngineRef::Shared(engine),
+            options: SolveOptions::default(),
+        }
+    }
+
+    /// Width-explicit solver over a single-thread engine.
+    pub fn new_generic_local(engine: &'e dyn ScoreEngine<M>) -> StreamingSolver<'e, M> {
+        StreamingSolver {
+            engine: EngineRef::Local(engine),
+            options: SolveOptions::default(),
+        }
+    }
+
+    pub fn with_options_generic(
+        engine: &'e (dyn ScoreEngine<M> + Sync),
+        options: SolveOptions,
+    ) -> StreamingSolver<'e, M> {
+        StreamingSolver {
+            engine: EngineRef::Shared(engine),
+            options,
+        }
+    }
+
+    pub fn with_options_generic_local(
+        engine: &'e dyn ScoreEngine<M>,
+        options: SolveOptions,
+    ) -> StreamingSolver<'e, M> {
+        StreamingSolver {
+            engine: EngineRef::Local(engine),
+            options,
+        }
+    }
+
+    /// Run the single-traversal DP and return the globally optimal
+    /// network. Panics if `options.cancel` fires mid-run — cancellable
+    /// callers should use [`StreamingSolver::try_solve`].
+    pub fn solve(&self) -> SolveResult {
+        self.try_solve().expect(
+            "StreamingSolver::solve was cancelled mid-run; cancellable \
+             callers must use try_solve",
+        )
+    }
+
+    /// Cancellable variant of [`StreamingSolver::solve`]: checks
+    /// `options.cancel` at every level boundary and returns `None` once
+    /// it fires. Streaming state is in-RAM only and **nothing is
+    /// checkpointed** — unlike [`super::solve_sharded`], a cancelled
+    /// streaming run cannot be resumed; it re-runs from scratch.
+    pub fn try_solve(&self) -> Option<SolveResult> {
+        let start = Instant::now();
+        let p = self.engine.plain().p();
+        assert!(p >= 1, "need at least one variable");
+        let cap = crate::streaming_dp_cap::<M>();
+        assert!(
+            p <= cap,
+            "p={p} exceeds the {}-bit streaming cap of {cap} variables \
+             (the streaming engine is memory-only: no spill, no shards). \
+             Next-larger configurations that work: the resident leveled \
+             solver with SolveOptions::spill_dir (p ≤ {}), the sharded \
+             coordinator (solve_sharded / --shards, p ≤ {}), or the \
+             approximate searches (p ≤ {})",
+            M::BITS,
+            crate::MAX_VARS_WIDE,
+            crate::MAX_VARS_SHARDED,
+            crate::MAX_NET_VARS,
+        );
+        let binom = BinomTable::new(p);
+        let mut stats = SolveStats {
+            traversals: 1,
+            ..Default::default()
+        };
+
+        // Per-level compact sink-record streams. Each is written once
+        // during its level sweep and then only *read* — at the very end,
+        // by reconstruction. All of them together stay well under the
+        // resident path's sink tables (see the module docs).
+        let mut streams: Vec<Vec<u8>> = vec![Vec::new(); p + 1];
+        let mut stream_bytes = 0usize;
+
+        let mut scorer0 = self.engine.plain().scorer();
+        let mut prev = Level::empty_set(scorer0.log_q(M::ZERO));
+        let mut score_evals = scorer0.evals();
+        drop(scorer0);
+
+        let max_threads = match &self.engine {
+            EngineRef::Shared(_) => self.options.threads.max(1),
+            EngineRef::Local(_) => 1,
+        };
+
+        for k1 in 1..=p {
+            if self.options.cancel.is_cancelled() {
+                return None;
+            }
+            let size1 = binom.c(p, k1) as usize;
+            let rec = record_bytes(k1);
+            let mut cur = Level::allocate(k1, size1);
+            let mut stream = vec![0u8; size1 * rec];
+            stream_bytes += stream.len();
+            stats.peak_state_bytes = stats
+                .peak_state_bytes
+                .max(prev.bytes() + cur.bytes() + stream_bytes);
+            let threads = max_threads.min(size1.max(1));
+            let (evals, bu, su) = if threads == 1 {
+                let mut worker =
+                    LevelWorker::new(self.engine.plain(), &binom, k1, self.options.batch);
+                let mut sinks = StreamSink {
+                    out: &mut stream,
+                    rec,
+                    cursor: 0,
+                };
+                worker.run_range(
+                    &prev,
+                    0,
+                    size1,
+                    &mut LevelIter::new(p, k1),
+                    &mut cur.q,
+                    &mut cur.r,
+                    &mut cur.bps,
+                    &mut cur.bpm,
+                    &mut sinks,
+                )
+            } else {
+                let engine = match self.engine {
+                    EngineRef::Shared(e) => e,
+                    EngineRef::Local(_) => {
+                        unreachable!("threads forced to 1 for local engines")
+                    }
+                };
+                // lend each chunk its disjoint `len·rec`-byte slice of
+                // the level stream (same split discipline as the
+                // q/r/bps/bpm arrays inside run_level_parallel)
+                let mut stream_rest: &mut [u8] = &mut stream;
+                run_level_parallel(
+                    engine,
+                    &prev,
+                    &binom,
+                    p,
+                    k1,
+                    size1,
+                    threads,
+                    self.options.batch,
+                    &mut cur,
+                    |_, len| {
+                        let taken = std::mem::take(&mut stream_rest);
+                        let (chunk, rest) = taken.split_at_mut(len * rec);
+                        stream_rest = rest;
+                        StreamSink {
+                            out: chunk,
+                            rec,
+                            cursor: 0,
+                        }
+                    },
+                )
+            };
+            score_evals += evals;
+            stats.bps_updates += bu;
+            stats.sink_updates += su;
+            streams[k1] = stream;
+            prev = cur;
+        }
+
+        stats.score_evals = score_evals;
+        let log_score = prev.r[0];
+        let (network, order) = reconstruct_streams::<M>(p, &binom, &streams);
+        stats.wall = start.elapsed();
+        Some(SolveResult {
+            network,
+            log_score,
+            order,
+            stats,
+        })
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::engine::NativeEngine;
+    use crate::score::ScoreKind;
+    use crate::solver::{brute, LeveledSolver};
+    use crate::util::check::Check;
+
+    #[test]
+    fn record_roundtrips_every_sink_and_parent_choice() {
+        Check::new("record encode/decode roundtrip").cases(50).run(|g| {
+            let p = 1 + g.rng.below_usize(20); // 1..=20
+            // a random non-empty subset of 0..p
+            let mut mask: u64 = 0;
+            while mask == 0 {
+                for v in 0..p {
+                    if g.rng.below_usize(2) == 1 {
+                        mask |= 1 << v;
+                    }
+                }
+            }
+            // a random sink in S and a random parent set within S\{x}
+            let k = mask.count_ones() as usize;
+            let mut m = mask;
+            for _ in 0..g.rng.below_usize(k) {
+                m = m.drop_lowest();
+            }
+            let x = m.trailing_zeros() as usize;
+            let mut pm: u64 = 0;
+            let mut rest = mask & !(1u64 << x);
+            while rest != 0 {
+                let b = rest.trailing_zeros();
+                if g.rng.below_usize(2) == 1 {
+                    pm |= 1 << b;
+                }
+                rest &= rest - 1;
+            }
+            let val = encode_record(mask, x as u8, pm);
+            assert!(val < 1u64 << (k + 5), "value fits record_bytes(k) bytes");
+            let (dx, dpm) = decode_record(mask, val);
+            g.assert_eq(dx, x, "sink survives the roundtrip");
+            g.assert_eq(dpm, pm, "parent mask survives the roundtrip");
+        });
+    }
+
+    #[test]
+    fn prop_streaming_is_bit_identical_to_leveled() {
+        // The tentpole invariant: the streaming path drives the same
+        // LevelWorker inner loop, so optimum, network, order and every
+        // operation counter match the resident solver bit for bit.
+        Check::new("streaming == leveled").cases(10).run(|g| {
+            let p = 2 + g.rng.below_usize(7); // 2..=8
+            let n = 20 + g.rng.below_usize(80);
+            let d = synth::random(p, n, 3, &mut g.rng);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let resident = LeveledSolver::new(&e).solve();
+            let streaming = StreamingSolver::new(&e).solve();
+            g.assert_eq(
+                resident.log_score.to_bits(),
+                streaming.log_score.to_bits(),
+                "bit-identical optimum",
+            );
+            g.assert_eq(resident.network.clone(), streaming.network.clone(), "same network");
+            g.assert_eq(resident.order.clone(), streaming.order.clone(), "same order");
+            g.assert_eq(
+                resident.stats.score_evals,
+                streaming.stats.score_evals,
+                "same scoring work",
+            );
+            g.assert_eq(
+                resident.stats.bps_updates,
+                streaming.stats.bps_updates,
+                "same Eq. 10 work",
+            );
+            g.assert_eq(
+                resident.stats.sink_updates,
+                streaming.stats.sink_updates,
+                "same Eq. 9 work",
+            );
+        });
+    }
+
+    #[test]
+    fn prop_wide_streaming_is_bit_identical_to_narrow() {
+        Check::new("u64 streaming == u32 streaming").cases(10).run(|g| {
+            let p = 2 + g.rng.below_usize(7); // 2..=8
+            let n = 20 + g.rng.below_usize(80);
+            let d = synth::random(p, n, 3, &mut g.rng);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let narrow = StreamingSolver::new(&e).solve();
+            let wide = StreamingSolver::<u64>::new_generic(&e).solve();
+            g.assert_eq(
+                narrow.log_score.to_bits(),
+                wide.log_score.to_bits(),
+                "bit-identical optimum across widths",
+            );
+            g.assert_eq(narrow.network.clone(), wide.network.clone(), "same network");
+            g.assert_eq(narrow.order.clone(), wide.order.clone(), "same order");
+        });
+    }
+
+    #[test]
+    fn prop_multithreaded_equals_sequential() {
+        Check::new("streaming threads=4 == threads=1").cases(10).run(|g| {
+            let p = 2 + g.rng.below_usize(6); // 2..=7
+            let n = 20 + g.rng.below_usize(80);
+            let d = synth::random(p, n, 3, &mut g.rng);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let seq = StreamingSolver::new(&e).solve();
+            let par = StreamingSolver::with_options(
+                &e,
+                SolveOptions {
+                    threads: 4,
+                    batch: 7, // stress odd batch boundaries too
+                    ..Default::default()
+                },
+            )
+            .solve();
+            g.assert_eq(
+                seq.log_score.to_bits(),
+                par.log_score.to_bits(),
+                "bit-identical optimum",
+            );
+            g.assert_eq(seq.network.clone(), par.network.clone(), "same network");
+            g.assert_eq(seq.order.clone(), par.order.clone(), "same order");
+        });
+    }
+
+    #[test]
+    fn prop_matches_brute_force_global_optimum() {
+        Check::new("streaming == brute force").cases(25).run(|g| {
+            let p = 2 + g.rng.below_usize(3); // 2..=4
+            let n = 10 + g.rng.below_usize(60);
+            let d = synth::random(p, n, 3, &mut g.rng);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let r = StreamingSolver::new(&e).solve();
+            let best = brute::best_dag_score(&d, ScoreKind::Jeffreys);
+            g.assert_close(r.log_score, best, 1e-9, "global optimum");
+        });
+    }
+
+    #[test]
+    fn cancelled_try_solve_returns_none_with_nothing_durable() {
+        let d = synth::binary(4, 20, 3);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let cancel = crate::solver::CancelToken::new();
+        let solver = StreamingSolver::with_options(
+            &e,
+            SolveOptions {
+                cancel: cancel.clone(),
+                ..Default::default()
+            },
+        );
+        assert!(solver.try_solve().is_some(), "inert token completes");
+        cancel.cancel();
+        // the documented trade: clean abort at the level boundary, no
+        // checkpoint — a later solve starts over from level 0
+        assert!(
+            solver.try_solve().is_none(),
+            "fired token aborts at the first level boundary"
+        );
+    }
+
+    #[test]
+    fn counters_match_appendix_a_closed_forms() {
+        let p = 7;
+        let d = synth::binary(p, 40, 5);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = StreamingSolver::new(&e).solve();
+        assert_eq!(r.stats.score_evals, 1u64 << p);
+        assert_eq!(
+            r.stats.bps_updates,
+            (p as u64) * (p as u64 - 1) * (1u64 << (p - 2))
+        );
+        assert_eq!(r.stats.sink_updates, (p as u64) * (1u64 << (p - 1)));
+        assert_eq!(r.stats.traversals, 1);
+    }
+
+    #[test]
+    fn peak_accounting_matches_streaming_plan_model() {
+        // The solver's own accounting and the planner's pricing formula
+        // are the same function of p — asserted here so neither can
+        // drift from the other.
+        for p in [6usize, 10] {
+            let d = synth::binary(p, 30, 9);
+            let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+            let narrow = StreamingSolver::new(&e).solve();
+            assert_eq!(
+                narrow.stats.peak_state_bytes as u64,
+                crate::coordinator::plan::streaming_plan(p).peak_bytes,
+                "narrow accounting == plan model at p={p}"
+            );
+            let wide = StreamingSolver::<u64>::new_generic(&e).solve();
+            let wide_expected = crate::coordinator::plan::streaming_plan_for_mask_bytes(p, 8);
+            assert_eq!(
+                wide.stats.peak_state_bytes as u64,
+                wide_expected.peak_bytes,
+                "wide accounting == plan model at p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn peak_is_strictly_below_the_resident_solver() {
+        let p = 10;
+        let d = synth::binary(p, 30, 9);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let resident = LeveledSolver::new(&e).solve();
+        let streaming = StreamingSolver::new(&e).solve();
+        assert!(
+            streaming.stats.peak_state_bytes < resident.stats.peak_state_bytes,
+            "streaming {} must undercut resident {}",
+            streaming.stats.peak_state_bytes,
+            resident.stats.peak_state_bytes,
+        );
+    }
+
+    #[test]
+    fn single_variable_network() {
+        let d = synth::binary(1, 30, 1);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let r = StreamingSolver::new(&e).solve();
+        assert_eq!(r.network.p(), 1);
+        assert_eq!(r.network.parents(0), 0);
+        assert_eq!(r.order, vec![0]);
+    }
+}

@@ -5,7 +5,9 @@ use bnsl::data::synth;
 use bnsl::engine::NativeEngine;
 use bnsl::score::{LocalScorer, ScoreKind};
 use bnsl::search::{hill_climb, HillClimbOptions};
-use bnsl::solver::{brute, LeveledSolver, SilanderSolver, SolveOptions};
+use bnsl::solver::{
+    brute, CancelToken, LeveledSolver, SilanderSolver, SolveOptions, StreamingSolver,
+};
 use bnsl::util::check::Check;
 use bnsl::util::rng::Rng;
 
@@ -204,6 +206,89 @@ fn high_arity_variables() {
     let a = LeveledSolver::new(&e).solve();
     let b = SilanderSolver::new(&e).solve();
     assert_eq!(a.log_score.to_bits(), b.log_score.to_bits());
+}
+
+/// The streaming engine's acceptance check (ISSUE 6) at non-trivial
+/// sizes: the frontier-only single-pass solver must reproduce the
+/// resident `LeveledSolver` bit for bit — optimum, DAG, order and eval
+/// counters — at p = 12..14 on both mask widths, while its own peak
+/// accounting stays strictly below the resident solver's.
+#[test]
+fn streaming_is_bit_identical_to_leveled_at_p12_to_14_both_widths() {
+    for (p, seed) in [(12usize, 121u64), (13, 131), (14, 141)] {
+        let d = synth::binary(p, 90, seed);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+        let resident = LeveledSolver::new(&e).solve();
+        let narrow = StreamingSolver::new(&e).solve();
+        let wide = StreamingSolver::<u64>::new_generic(&e).solve();
+        for (label, r) in [("narrow", &narrow), ("wide", &wide)] {
+            assert_eq!(
+                resident.log_score.to_bits(),
+                r.log_score.to_bits(),
+                "p={p}: {label} streaming optimum drifted from leveled"
+            );
+            assert_eq!(resident.network, r.network, "p={p}: {label} DAG differs");
+            assert_eq!(resident.order, r.order, "p={p}: {label} order differs");
+            assert_eq!(
+                resident.stats.score_evals, r.stats.score_evals,
+                "p={p}: {label} eval count differs"
+            );
+        }
+        assert!(
+            narrow.stats.peak_state_bytes < resident.stats.peak_state_bytes,
+            "p={p}: streaming peak ({}) must undercut resident ({})",
+            narrow.stats.peak_state_bytes,
+            resident.stats.peak_state_bytes
+        );
+    }
+}
+
+/// Multithreaded streaming at p = 13 reproduces the single-thread
+/// result exactly (the range splits are deterministic and the reduction
+/// order is fixed, so bit-identity holds with threads on).
+#[test]
+fn streaming_multithreaded_matches_sequential_at_p13() {
+    let d = synth::binary(13, 70, 2026);
+    let e = NativeEngine::new(&d, ScoreKind::Bdeu { ess: 1.0 });
+    let seq = StreamingSolver::new(&e).solve();
+    let par = StreamingSolver::with_options(
+        &e,
+        SolveOptions {
+            threads: 3,
+            ..Default::default()
+        },
+    )
+    .solve();
+    assert_eq!(seq.log_score.to_bits(), par.log_score.to_bits());
+    assert_eq!(seq.network, par.network);
+}
+
+/// Cancellation trade at integration scale: a pre-fired token makes
+/// `try_solve` return `None` at the first level boundary with nothing
+/// durable behind it — streaming has no checkpoint, so the *same*
+/// solver re-runs from scratch and still lands on the exact optimum.
+#[test]
+fn cancelled_streaming_rerun_from_scratch_is_exact() {
+    let d = synth::binary(12, 60, 909);
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let cancel = CancelToken::new();
+    cancel.cancel();
+    let solver = StreamingSolver::with_options(
+        &e,
+        SolveOptions {
+            cancel: cancel.clone(),
+            ..Default::default()
+        },
+    );
+    assert!(solver.try_solve().is_none(), "fired token must abort");
+
+    // no resume artifact exists by construction; re-running means a
+    // fresh solver with a fresh token, from level 0
+    let rerun = StreamingSolver::new(&e)
+        .try_solve()
+        .expect("un-cancelled run must complete");
+    let resident = LeveledSolver::new(&e).solve();
+    assert_eq!(resident.log_score.to_bits(), rerun.log_score.to_bits());
 }
 
 #[test]

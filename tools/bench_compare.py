@@ -27,6 +27,9 @@ assembled by tools/bench_smoke.sh):
 
     levels.<metric>       from the `levels` bench record
     spill.p<P>.<metric>   one per row of the `spill` experiment record
+    scoring.<metric>      from the `scoring` bench record
+    streaming.<metric>    from the `streaming` bench record (the
+                          streaming-vs-resident wall + heap undercut)
 
 Wall-clock metrics are compared with --tolerance-wall (shared CI runners
 are noisy); heap peaks come from the deterministic tracking allocator
@@ -66,6 +69,18 @@ SPILL_METRICS = {
     "mem_plain": HEAP,
     "mem_spill": HEAP,
 }
+SCORING_METRICS = {
+    "hash_ns_per_subset": WALL,
+    "sort_ns_per_subset": WALL,
+    "log_q_ns_per_subset": WALL,
+    "batch_log_q_ns_per_subset": WALL,
+}
+STREAMING_METRICS = {
+    "streaming_ns_per_subset": WALL,
+    "leveled_ns_per_subset": WALL,
+    "streaming_heap_peak_bytes": HEAP,
+    "leveled_heap_peak_bytes": HEAP,
+}
 
 
 def flatten(doc):
@@ -83,6 +98,14 @@ def flatten(doc):
         for name, cls in SPILL_METRICS.items():
             if name in row:
                 out[f"spill.p{p}.{name}"] = (row[name], cls)
+    for section, metrics in (
+        ("scoring", SCORING_METRICS),
+        ("streaming", STREAMING_METRICS),
+    ):
+        record = doc.get(section) or {}
+        for name, cls in metrics.items():
+            if name in record:
+                out[f"{section}.{name}"] = (record[name], cls)
     return out
 
 
@@ -191,6 +214,11 @@ def self_test():
             "heap_peak_bytes": 1_000_000,
         },
         "spill": {"rows": [{"p": 14, "time_plain": 1.0, "mem_plain": 500_000}]},
+        "scoring": {"log_q_ns_per_subset": 900.0, "batch_log_q_ns_per_subset": 800.0},
+        "streaming": {
+            "streaming_ns_per_subset": 120.0,
+            "streaming_heap_peak_bytes": 700_000,
+        },
     }
     tol = {WALL: 0.25, HEAP: 0.25}
 
@@ -217,6 +245,21 @@ def self_test():
     del partial["spill"]
     failures, _ = compare(partial, base, tol)
     assert failures, "a missing bench must fail"
+
+    # the scoring / streaming sections gate like the others: a >25%
+    # regression fails, a vanished section fails
+    bad = json.loads(json.dumps(base))
+    bad["streaming"]["streaming_heap_peak_bytes"] = 1_000_000
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a streaming heap regression must fail"
+    bad = json.loads(json.dumps(base))
+    bad["scoring"]["batch_log_q_ns_per_subset"] = 1_100.0
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a batched-kernel wall regression must fail"
+    partial = json.loads(json.dumps(base))
+    del partial["streaming"]
+    failures, _ = compare(partial, base, tol)
+    assert failures, "a missing streaming bench must fail"
 
     # an uncalibrated (null) baseline checks presence but not value
     nulls = json.loads(json.dumps(base))

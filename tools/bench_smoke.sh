@@ -1,16 +1,17 @@
 #!/usr/bin/env bash
 # Quick-mode perf smoke (CI `bench-smoke` job; runnable locally): run the
-# `levels` and `spill` benches at CI-sized configurations and assemble
-# BENCH_ci.json — wall time + memtrack heap peak per configuration — so
-# the repo's perf trajectory accumulates data points as an uploaded
-# artifact per commit (and tools/bench_compare.py gates regressions
-# against the committed BENCH_baseline.json).
+# `levels`, `spill`, `scoring` and `streaming` benches at CI-sized
+# configurations and assemble BENCH_ci.json — wall time + memtrack heap
+# peak per configuration — so the repo's perf trajectory accumulates
+# data points as an uploaded artifact per commit (and
+# tools/bench_compare.py gates regressions against the committed
+# BENCH_baseline.json).
 #
 # Failure honesty: a bench exiting nonzero must fail the job, and a
 # stale record from an earlier run must never be assembled into the
 # artifact as if it were fresh — so stale outputs are removed up front,
 # every bench's exit code is checked by name, and the JSON-assembly step
-# re-validates that both inputs exist before writing the artifact.
+# re-validates that all inputs exist before writing the artifact.
 #
 # Usage: tools/bench_smoke.sh [out.json]   (default BENCH_ci.json)
 set -euo pipefail
@@ -19,13 +20,16 @@ OUT="${1:-BENCH_ci.json}"
 
 LEVELS_JSON="bench_levels.json"
 SPILL_JSON="results/spill.json"
+SCORING_JSON="bench_scoring.json"
+STREAMING_JSON="bench_streaming.json"
 
 # never assemble a stale record into a "fresh" artifact
-rm -f "$OUT" "$LEVELS_JSON" "$SPILL_JSON"
+rm -f "$OUT" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" "$STREAMING_JSON"
 
-# levels: full analytic plan at p = 20 + a quick timed u32-vs-u64 race
+# levels + streaming: full analytic plan at p = 20 + quick timed solves
+# at a container-feasible size (the streaming bench *asserts* the heap
+# undercut and the plan-model identity, not just times them)
 export BNSL_P=20 BNSL_SOLVE_P=14 BNSL_N=64
-export BNSL_BENCH_JSON="$LEVELS_JSON"
 # spill: two small configurations through the §5.3 disk path
 export BNSL_PMIN=14 BNSL_PMAX=15 BNSL_THRESHOLD=0.5
 
@@ -41,15 +45,27 @@ run_bench() {
     fi
 }
 
+# each BNSL_BENCH_JSON writer gets its own output file (the spill bench
+# writes results/spill.json through the experiment harness instead)
+export BNSL_BENCH_JSON="$LEVELS_JSON"
 run_bench levels "$LEVELS_JSON"
 run_bench spill "$SPILL_JSON"
+export BNSL_BENCH_JSON="$SCORING_JSON"
+run_bench scoring "$SCORING_JSON"
+export BNSL_BENCH_JSON="$STREAMING_JSON"
+run_bench streaming "$STREAMING_JSON"
 
-python3 - "$OUT" "$LEVELS_JSON" "$SPILL_JSON" <<'EOF'
+python3 - "$OUT" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" "$STREAMING_JSON" <<'EOF'
 import json, pathlib, sys
 
-out, levels_path, spill_path = sys.argv[1:4]
+out, levels_path, spill_path, scoring_path, streaming_path = sys.argv[1:6]
 doc = {"schema": "bnsl-bench-smoke/1"}
-for key, path in (("levels", levels_path), ("spill", spill_path)):
+for key, path in (
+    ("levels", levels_path),
+    ("spill", spill_path),
+    ("scoring", scoring_path),
+    ("streaming", streaming_path),
+):
     try:
         with open(path) as f:
             doc[key] = json.load(f)
