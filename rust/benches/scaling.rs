@@ -1,0 +1,142 @@
+//! Bench — the scaling curve behind the eval harness (ISSUE 7): wall
+//! time and heap peak versus p for every execution mode (resident,
+//! streaming, spill-assisted, sharded), on one shared synthetic dataset
+//! family. Every mode must land on the same optimum bit for bit — the
+//! curve compares *costs*, never results.
+//!
+//! Defaults are container-sized (`BNSL_SCALING_PS=10,12,14`, n = 64);
+//! the paper-scale curve is the same binary with e.g.
+//! `BNSL_SCALING_PS=18,22,26` on a larger host. `BNSL_BENCH_JSON=path`
+//! writes the machine-readable rows that `tools/bench_smoke.sh` merges
+//! into `BENCH_ci.json` and derives the `BENCH_scaling.csv` artifact
+//! from.
+
+#[global_allocator]
+static ALLOC: bnsl::memtrack::TrackingAlloc = bnsl::memtrack::TrackingAlloc;
+
+use bnsl::coordinator::shard::{ShardOptions, ShardOutcome};
+use bnsl::data::synth;
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::solver::{solve_sharded, LeveledSolver, SolveOptions, StreamingSolver};
+use bnsl::util::human_bytes;
+use bnsl::util::json::Json;
+
+struct Row {
+    p: usize,
+    mode: &'static str,
+    wall_secs: f64,
+    heap_peak_bytes: usize,
+    log_score: f64,
+}
+
+fn main() {
+    let ps: Vec<usize> = std::env::var("BNSL_SCALING_PS")
+        .unwrap_or_else(|_| "10,12,14".into())
+        .split(',')
+        .map(|t| t.trim().parse().expect("BNSL_SCALING_PS: comma-separated p list"))
+        .collect();
+    let n: usize = std::env::var("BNSL_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let scratch = std::env::temp_dir().join(format!("bnsl_scaling_{}", std::process::id()));
+    let mut rows: Vec<Row> = Vec::new();
+
+    println!("=== scaling curve: wall/heap vs p across execution modes (n = {n}) ===\n");
+    for &p in &ps {
+        let d = synth::binary(p, n, 4807);
+        let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+
+        let (resident, resident_heap) =
+            bnsl::memtrack::measure(|| LeveledSolver::new(&e).solve());
+        let (streaming, streaming_heap) =
+            bnsl::memtrack::measure(|| StreamingSolver::new(&e).solve());
+        let spill_dir = scratch.join(format!("spill_p{p}"));
+        let (spilled, spill_heap) = bnsl::memtrack::measure(|| {
+            LeveledSolver::with_options(
+                &e,
+                SolveOptions {
+                    spill_dir: Some(spill_dir.clone()),
+                    ..Default::default()
+                },
+            )
+            .solve()
+        });
+        let shard_dir = scratch.join(format!("shard_p{p}"));
+        let (sharded, sharded_heap) = bnsl::memtrack::measure(|| {
+            match solve_sharded::<u32>(
+                &e,
+                &ShardOptions {
+                    shards: 2,
+                    dir: shard_dir.clone(),
+                    ..Default::default()
+                },
+            )
+            .expect("sharded solve")
+            {
+                ShardOutcome::Complete(result) => result,
+                ShardOutcome::Checkpointed { .. } => {
+                    unreachable!("no cancel token armed")
+                }
+            }
+        });
+
+        // one optimum, four roads: the whole point of the curve
+        for (mode, result) in [
+            ("streaming", &streaming),
+            ("spill", &spilled),
+            ("sharded", &sharded),
+        ] {
+            assert_eq!(
+                resident.log_score.to_bits(),
+                result.log_score.to_bits(),
+                "{mode} drifted from the resident optimum at p = {p}"
+            );
+            assert_eq!(resident.network, result.network, "{mode} network at p = {p}");
+        }
+
+        for (mode, result, heap) in [
+            ("resident", &resident, resident_heap),
+            ("streaming", &streaming, streaming_heap),
+            ("spill", &spilled, spill_heap),
+            ("sharded", &sharded, sharded_heap),
+        ] {
+            let wall = result.stats.wall.as_secs_f64();
+            println!(
+                "p = {p:2}  {mode:9} {:8.1} ms  heap peak {}",
+                wall * 1e3,
+                human_bytes(heap as u64)
+            );
+            rows.push(Row {
+                p,
+                mode,
+                wall_secs: wall,
+                heap_peak_bytes: heap,
+                log_score: result.log_score,
+            });
+        }
+        println!();
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+
+    if let Ok(path) = std::env::var("BNSL_BENCH_JSON") {
+        let mut arr = Json::arr();
+        for row in &rows {
+            arr = arr.push(
+                Json::obj()
+                    .set("p", row.p)
+                    .set("mode", row.mode)
+                    .set("wall_secs", Json::Num(row.wall_secs))
+                    .set("heap_peak_bytes", row.heap_peak_bytes)
+                    .set("log_score", Json::Num(row.log_score)),
+            );
+        }
+        let doc = Json::obj()
+            .set("bench", "scaling")
+            .set("n", n)
+            .set("rows", arr);
+        std::fs::write(&path, doc.to_pretty()).expect("writing BNSL_BENCH_JSON");
+        println!("bench record: {path}");
+    }
+}

@@ -2,8 +2,13 @@
 //!
 //! Commands
 //! --------
-//! * `learn`    — learn a network from a CSV file or an embedded network
+//! * `learn`    — learn a network from a CSV file, an embedded network,
+//!   or a precomputed `.jaa` score table (`--scores`)
 //! * `sample`   — forward-sample an embedded network to CSV
+//! * `scores`   — export a dataset's local scores as `.jaa`
+//!   ([`crate::eval::jaa`]) for interop and dataset-free re-solving
+//! * `eval`     — sample a ground-truth network (embedded or `.bif`),
+//!   learn, and report structure recovery + cost ([`crate::eval`])
 //! * `exp ...`  — the paper's experiment harnesses (table2, stability,
 //!   levels, large, spill, complexity)
 //! * `serve`    — the multi-tenant job service ([`crate::service`])
@@ -16,12 +21,11 @@ pub mod exp;
 
 pub use args::{validate_var_count, Args, MaskWidth};
 
-use crate::bn::repo;
 use crate::coordinator::cluster::ClusterOptions;
 use crate::coordinator::shard::ShardOptions;
 use crate::coordinator::storage::BackendKind;
 use crate::data::{read_csv, write_csv, Dataset};
-use crate::engine::{JaxEngine, NativeEngine};
+use crate::engine::{JaxEngine, NativeEngine, ScoreTable, TableEngine};
 use crate::score::ScoreKind;
 use crate::search::{hill_climb, pc_hill_climb, HillClimbOptions, PcOptions};
 use crate::solver::{
@@ -67,7 +71,27 @@ USAGE:
               injection via BNSL_OBJECT_FAULTS); all hosts of one run
               must agree, results stay bit-identical across backends;
               hillclimb/hybrid: p <= 64
+  bnsl learn  --scores file.jaa [--p P] [--solver leveled|silander]
+              [--streaming] [--threads T] [--out net.json] [--dot]
+              solve from precomputed local scores with no dataset: .jaa
+              files written by `bnsl scores` carry a potentials section,
+              so the solve is bit-identical to the dataset-backed run
+              that exported them; foreign .jaa files (pygobnilp et al.)
+              chain-reconstruct when every family is present
   bnsl sample --network asia|alarm|sachs --n N [--seed S] --out data.csv
+  bnsl scores (--data file.csv | --network name [--n N] [--seed S]) [--p P]
+              [--score jeffreys|bdeu[:e]|bic|aic] [--max-parents K]
+              --out scores.jaa
+              export local scores as .jaa (p <= 30: the table holds all
+              2^p subset potentials; --max-parents only trims the
+              human-readable family section)
+  bnsl eval   --network (asia|alarm|sachs | net.bif) [--n N] [--seed S]
+              [--solver leveled|silander|hillclimb|hybrid] [--streaming]
+              [--score S] [--threads T] [--out report.json]
+              sample the ground-truth network, learn, and report
+              structure recovery (SHD + CPDAG-aware edge F1), log-score,
+              wall time and peak heap as one stable JSON record
+              (schema bnsl-eval/1)
   bnsl serve  [--port 7878] [--addr 127.0.0.1] [--jobs-dir bnsl_jobs]
               [--max-concurrent 2] [--max-queue 64] [--backend posix|object]
               [--ram-budget-mb MB] [--fd-budget N] [--request-budget N]
@@ -84,10 +108,13 @@ USAGE:
               over-budget jobs are rejected with the plan verdict;
               SIGTERM drains — running solves checkpoint at the next
               level boundary and the next `bnsl serve` resumes them
-  bnsl submit --server HOST:PORT --data file.csv [--p P] [--score S]
-              [--shards N] [--threads T] [--batch B] [--streaming]
+  bnsl submit --server HOST:PORT (--data file.csv | --scores file.jaa)
+              [--p P] [--score S] [--shards N] [--threads T] [--batch B]
+              [--streaming]
               [--wait [--out result.json] [--poll-ms 200] [--timeout-secs 3600]]
-              prints the job id on stdout; --wait polls to completion
+              prints the job id on stdout; --wait polls to completion;
+              --scores posts a `bnsl scores` table instead of a dataset
+              (kind comes from the file header; incompatible with --shards)
   bnsl status --server HOST:PORT --job ID
   bnsl cancel --server HOST:PORT --job ID
   bnsl exp table2     [--pmin 14] [--pmax 18] [--runs 3]  [--n 200] [--threads T]
@@ -110,6 +137,8 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     match command.as_str() {
         "learn" => cmd_learn(Args::parse(rest.to_vec(), &["dot", "cluster", "streaming"])?),
         "sample" => cmd_sample(Args::parse(rest.to_vec(), &[])?),
+        "scores" => cmd_scores(Args::parse(rest.to_vec(), &[])?),
+        "eval" => cmd_eval(Args::parse(rest.to_vec(), &["streaming"])?),
         "exp" => cmd_exp(rest),
         "serve" => cmd_serve(Args::parse(rest.to_vec(), &[])?),
         "submit" => cmd_submit(Args::parse(rest.to_vec(), &["wait", "streaming"])?),
@@ -131,7 +160,8 @@ fn load_data(args: &Args) -> Result<Dataset> {
         return Ok(data.take_vars(p.min(data.p())));
     }
     if let Some(name) = args.raw("network") {
-        let net = repo::by_name(name).ok_or_else(|| anyhow!("unknown network '{name}'"))?;
+        // embedded repo name or a .bif file path (the benchmark zoo)
+        let (_, net) = crate::eval::resolve_network(name)?;
         let n = args.get::<usize>("n", 200)?;
         let seed = args.get::<u64>("seed", 2024)?;
         let p = args.get::<usize>("p", net.p())?;
@@ -141,6 +171,9 @@ fn load_data(args: &Args) -> Result<Dataset> {
 }
 
 fn cmd_learn(args: Args) -> Result<()> {
+    if args.raw("scores").is_some() {
+        return cmd_learn_from_scores(&args);
+    }
     let data = load_data(&args)?;
     let kind = ScoreKind::parse(args.raw("score").unwrap_or("jeffreys"))
         .ok_or_else(|| anyhow!("bad --score"))?;
@@ -467,6 +500,175 @@ fn cmd_learn(args: Args) -> Result<()> {
     emit_result(&args, &data, kind, solver_label, &engine_name, result, heap)
 }
 
+/// `bnsl learn --scores file.jaa`: solve from a precomputed score table
+/// with no dataset in sight. The [`TableEngine`] serves the exact subset
+/// potentials the native engine would have computed (the `.jaa`
+/// potentials section carries them bit-for-bit), so the solve — DP
+/// comparisons, tie-breaks, reconstruction — is bit-identical to the
+/// dataset-backed run that exported the file.
+fn cmd_learn_from_scores(args: &Args) -> Result<()> {
+    let path: String = args.require("scores")?;
+    if args.raw("data").is_some() || args.raw("network").is_some() {
+        bail!(
+            "--scores replaces the dataset (the .jaa file holds every \
+             subset potential the solver reads); drop --data/--network"
+        );
+    }
+    if let Some(engine) = args.raw("engine") {
+        bail!(
+            "--scores is served by the table engine; drop --engine \
+             (got '{engine}')"
+        );
+    }
+    if args.raw("score").is_some() {
+        bail!(
+            "a .jaa file records its scoring function in the header \
+             (`score=`); drop --score"
+        );
+    }
+    for flag in ["shards", "resume", "shard-dir", "spill-dir", "backend"] {
+        if args.raw(flag).is_some() {
+            bail!(
+                "--{flag} drives the disk-assisted coordinators over a \
+                 dataset; a .jaa score table is in-RAM only (p ≤ {}, all \
+                 2^p potentials resident)",
+                crate::MAX_VARS
+            );
+        }
+    }
+    if args.switch("cluster") {
+        bail!("--cluster needs a dataset-backed sharded run; a .jaa score table is in-RAM only");
+    }
+    let solver = args.raw("solver").unwrap_or("leveled").to_string();
+    let streaming = args.switch("streaming");
+    if !matches!(solver.as_str(), "leveled" | "silander") {
+        bail!(
+            "a score table already holds exact subset potentials — the \
+             approximate searches need the dataset itself; use --solver \
+             leveled|silander (got '{solver}')"
+        );
+    }
+    if streaming && solver != "leveled" {
+        bail!(
+            "--streaming is a memory layout of the leveled DP; use \
+             --solver leveled (got '{solver}')"
+        );
+    }
+    let table = crate::eval::jaa::read_jaa(std::path::Path::new(&path))
+        .map_err(|e| anyhow!("{e}"))?;
+    let p = args.get::<usize>("p", table.p())?;
+    if p > table.p() {
+        bail!("--p {} exceeds the table's {} variables", p, table.p());
+    }
+    let table = if p < table.p() { table.restrict(p) } else { table };
+    // .jaa tables are capped at MAX_VARS by construction, so the width
+    // dispatch below can stay narrow-only; validate for the error text.
+    let width = validate_var_count(table.p(), true, false)?;
+    debug_assert!(matches!(width, MaskWidth::Narrow));
+    let options = SolveOptions {
+        threads: args.get::<usize>("threads", 1)?,
+        batch: args.get::<usize>("batch", 1024)?,
+        ..Default::default()
+    };
+    let engine = TableEngine::new(&table);
+    eprintln!(
+        "scores: {path} ({} vars, n={}, score={}, fingerprint {})",
+        table.p(),
+        table.n(),
+        table.kind().name(),
+        table.fingerprint()
+    );
+    let (result, heap) = crate::memtrack::measure(|| match (solver.as_str(), streaming) {
+        ("leveled", true) => StreamingSolver::with_options(&engine, options).solve(),
+        ("leveled", false) => LeveledSolver::with_options(&engine, options).solve(),
+        ("silander", _) => SilanderSolver::with_options(&engine, options).solve(),
+        _ => unreachable!("solver validated above"),
+    });
+    // zero-row stand-in so the shared epilogue has names/arities to print
+    let data = Dataset::new(
+        table.names().to_vec(),
+        table.arities().to_vec(),
+        vec![Vec::new(); table.p()],
+    );
+    let solver_label = if streaming { "streaming" } else { solver.as_str() };
+    emit_result(args, &data, table.kind(), solver_label, "table", result, heap)
+}
+
+/// `bnsl scores`: export a dataset's local scores as a `.jaa` file —
+/// standard Jaakkola family sections for interop, plus the potentials
+/// section that makes `bnsl learn --scores` bit-exact.
+fn cmd_scores(args: Args) -> Result<()> {
+    let data = load_data(&args)?;
+    if data.p() > crate::MAX_VARS {
+        bail!(
+            "score tables hold all 2^p subset potentials; p ≤ {} (got {})",
+            crate::MAX_VARS,
+            data.p()
+        );
+    }
+    let kind = ScoreKind::parse(args.raw("score").unwrap_or("jeffreys"))
+        .ok_or_else(|| anyhow!("bad --score"))?;
+    let out: String = args.require("out")?;
+    let mut table = ScoreTable::compute(&data, kind);
+    let max_parents = args.get::<usize>("max-parents", 0)?;
+    if max_parents > 0 {
+        // palim trims only the human-readable family section; the
+        // potentials section stays complete, so re-import stays exact
+        table = ScoreTable::from_parts(
+            table.names().to_vec(),
+            table.arities().to_vec(),
+            table.n(),
+            table.kind(),
+            table.potentials().to_vec(),
+            max_parents,
+        );
+    }
+    let text = crate::eval::jaa::export_jaa(&table);
+    std::fs::write(&out, &text)?;
+    eprintln!(
+        "wrote {} variables × families (|Π| ≤ {}) + {} potentials \
+         (fingerprint {}) to {out}",
+        table.p(),
+        table.palim(),
+        1usize << table.p(),
+        table.fingerprint()
+    );
+    Ok(())
+}
+
+/// `bnsl eval`: the evaluation harness entry point — sample a
+/// ground-truth network, learn it back, report recovery + cost.
+fn cmd_eval(args: Args) -> Result<()> {
+    let spec = crate::eval::EvalSpec {
+        network: args.require("network")?,
+        n: args.get::<usize>("n", 1000)?,
+        seed: args.get::<u64>("seed", 2024)?,
+        solver: args.raw("solver").unwrap_or("leveled").to_string(),
+        streaming: args.switch("streaming"),
+        kind: ScoreKind::parse(args.raw("score").unwrap_or("jeffreys"))
+            .ok_or_else(|| anyhow!("bad --score"))?,
+        threads: args.get::<usize>("threads", 1)?,
+    };
+    let outcome = crate::eval::run_eval(&spec)?;
+    eprintln!(
+        "eval: network={} solver={}{} shd={} shd_cpdag={} f1_cpdag={:.3}",
+        spec.network,
+        spec.solver,
+        if spec.streaming { " (streaming)" } else { "" },
+        outcome.shd.total(),
+        outcome.shd_cpdag.total(),
+        outcome.edges_cpdag.f1()
+    );
+    let text = outcome.report.to_pretty();
+    if let Some(out) = args.raw("out") {
+        std::fs::write(out, &text)?;
+        eprintln!("wrote {out}");
+    } else {
+        println!("{text}");
+    }
+    Ok(())
+}
+
 /// Shared `learn` epilogue: human-readable summary to stderr, the JSON
 /// record to `--out`/stdout, optional DOT.
 fn emit_result(
@@ -506,7 +708,7 @@ fn emit_result(
 
 fn cmd_sample(args: Args) -> Result<()> {
     let name: String = args.require("network")?;
-    let net = repo::by_name(&name).ok_or_else(|| anyhow!("unknown network '{name}'"))?;
+    let (_, net) = crate::eval::resolve_network(&name)?;
     let n: usize = args.require("n")?;
     let seed = args.get::<u64>("seed", 2024)?;
     let out: String = args.require("out")?;
@@ -784,13 +986,25 @@ fn cmd_serve(args: Args) -> Result<()> {
 
 fn cmd_submit(args: Args) -> Result<()> {
     let server: String = args.require("server")?;
-    let data: String = args.require("data")?;
-    let csv = std::fs::read_to_string(&data)
-        .map_err(|e| anyhow!("reading {data}: {e}"))?;
+    // exactly one payload: --data CSV or --scores .jaa (dataset-free)
+    let (csv, scores) = match (args.raw("data"), args.raw("scores")) {
+        (Some(data), None) => {
+            let csv = std::fs::read_to_string(data)
+                .map_err(|e| anyhow!("reading {data}: {e}"))?;
+            (Some(csv), None)
+        }
+        (None, Some(path)) => {
+            let jaa = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("reading {path}: {e}"))?;
+            (None, Some(jaa))
+        }
+        _ => bail!("submit needs exactly one of --data or --scores"),
+    };
     let p = args.get::<usize>("p", 0)?;
     let request = crate::service::SubmitRequest {
-        csv: Some(csv),
+        csv,
         path: None,
+        scores,
         p: if p == 0 { None } else { Some(p) },
         score: args.raw("score").unwrap_or("jeffreys").to_string(),
         shards: args.get::<usize>("shards", 1)?,
@@ -863,7 +1077,8 @@ mod tests {
     #[test]
     fn usage_mentions_every_command() {
         for cmd in [
-            "learn", "sample", "exp", "serve", "submit", "status", "cancel", "info",
+            "learn", "sample", "scores", "eval", "exp", "serve", "submit", "status", "cancel",
+            "info",
         ] {
             assert!(USAGE.contains(cmd), "{cmd} missing from usage");
         }
@@ -959,6 +1174,140 @@ mod tests {
             ];
             argv.extend(extra.clone());
             assert!(run(argv).is_err(), "should reject --streaming with {extra:?}");
+        }
+    }
+
+    /// Tentpole (ISSUE 7): `bnsl eval` emits the stable bnsl-eval/1
+    /// record for an embedded network.
+    #[test]
+    fn eval_embedded_network_emits_stable_report() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cli_eval_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("report.json").to_string_lossy().to_string();
+        run(vec![
+            "eval".into(),
+            "--network".into(),
+            "asia".into(),
+            "--n".into(),
+            "150".into(),
+            "--seed".into(),
+            "1".into(),
+            "--out".into(),
+            out.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        for key in ["bnsl-eval/1", "\"shd_cpdag\"", "\"edges_cpdag\"", "\"peak_heap_bytes\""] {
+            assert!(text.contains(key), "{key} missing:\n{text}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Tentpole (ISSUE 7): `bnsl eval` accepts a `.bif` path as the
+    /// ground truth and labels the report with the file stem.
+    #[test]
+    fn eval_reads_bif_files() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cli_bif_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bif = dir.join("tiny.bif");
+        std::fs::write(
+            &bif,
+            "network tiny { }\n\
+             variable A { type discrete [ 2 ] { no, yes }; }\n\
+             variable B { type discrete [ 2 ] { no, yes }; }\n\
+             probability ( A ) { table 0.3, 0.7; }\n\
+             probability ( B | A ) { (no) 0.8, 0.2; (yes) 0.1, 0.9; }\n",
+        )
+        .unwrap();
+        let out = dir.join("report.json").to_string_lossy().to_string();
+        run(vec![
+            "eval".into(),
+            "--network".into(),
+            bif.to_string_lossy().to_string(),
+            "--n".into(),
+            "200".into(),
+            "--out".into(),
+            out.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("\"tiny\""), "file-stem label missing:\n{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Tentpole (ISSUE 7) acceptance: a solve from an exported `.jaa`
+    /// table is bit-identical to the dataset-backed solve — same
+    /// log-score text (shortest-roundtrip f64 ⇒ equal text = equal
+    /// bits) and same learned network.
+    #[test]
+    fn learn_from_exported_scores_is_bit_identical() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cli_jaa_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let direct = dir.join("direct.json").to_string_lossy().to_string();
+        let jaa = dir.join("asia.jaa").to_string_lossy().to_string();
+        let via = dir.join("via_scores.json").to_string_lossy().to_string();
+        run(vec![
+            "learn".into(),
+            "--network".into(),
+            "asia".into(),
+            "--n".into(),
+            "100".into(),
+            "--seed".into(),
+            "3".into(),
+            "--out".into(),
+            direct.clone(),
+        ])
+        .unwrap();
+        run(vec![
+            "scores".into(),
+            "--network".into(),
+            "asia".into(),
+            "--n".into(),
+            "100".into(),
+            "--seed".into(),
+            "3".into(),
+            "--out".into(),
+            jaa.clone(),
+        ])
+        .unwrap();
+        run(vec![
+            "learn".into(),
+            "--scores".into(),
+            jaa,
+            "--out".into(),
+            via.clone(),
+        ])
+        .unwrap();
+        let a = Json::parse(&std::fs::read_to_string(&direct).unwrap()).unwrap();
+        let b = Json::parse(&std::fs::read_to_string(&via).unwrap()).unwrap();
+        let score_a = a.get("log_score").and_then(Json::as_f64).unwrap();
+        let score_b = b.get("log_score").and_then(Json::as_f64).unwrap();
+        assert_eq!(score_a.to_bits(), score_b.to_bits());
+        assert_eq!(
+            a.get("network").unwrap().to_string(),
+            b.get("network").unwrap().to_string()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `--scores` must reject every dataset-backed flag loudly.
+    #[test]
+    fn learn_scores_rejects_dataset_flags() {
+        for extra in [
+            vec!["--network".to_string(), "asia".to_string()],
+            vec!["--data".to_string(), "some.csv".to_string()],
+            vec!["--shards".to_string(), "2".to_string()],
+            vec!["--engine".to_string(), "jax".to_string()],
+            vec!["--score".to_string(), "bic".to_string()],
+            vec!["--solver".to_string(), "hillclimb".to_string()],
+        ] {
+            let mut argv = vec![
+                "learn".to_string(),
+                "--scores".to_string(),
+                "no_such_file.jaa".to_string(),
+            ];
+            argv.extend(extra.clone());
+            assert!(run(argv).is_err(), "should reject --scores with {extra:?}");
         }
     }
 

@@ -1,18 +1,23 @@
 //! Scoring engines: where `log Q(S)` values come from.
 //!
 //! The DP solvers are engine-agnostic: they ask an engine for subset
-//! potentials in batches and never touch the data directly. Two engines:
+//! potentials in batches and never touch the data directly. Three engines:
 //!
 //! * [`NativeEngine`] — pure-rust f64 hot path ([`crate::score`]); the
 //!   default for paper-scale runs and the perf-pass target.
+//! * [`TableEngine`] — serves precomputed potentials from a
+//!   [`ScoreTable`] (the `.jaa` "bring your own scores" path); solves are
+//!   bit-identical to the dataset-backed run that produced the table.
 //! * [`JaxEngine`] — routes batches through the AOT-compiled JAX/Pallas
 //!   artifact via PJRT ([`crate::runtime`]); the mandated L2/L1 path,
 //!   numerically cross-checked against the native engine in integration
 //!   tests.
 
 mod native;
+mod table;
 
 pub use native::NativeEngine;
+pub use table::{potentials_from_families, ScoreSource, ScoreTable, TableEngine};
 pub mod jax;
 pub use jax::JaxEngine;
 

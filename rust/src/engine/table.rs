@@ -1,0 +1,453 @@
+//! Table-backed scoring engine: solve from precomputed potentials.
+//!
+//! [`ScoreTable`] holds the full `2^p` vector of subset potentials
+//! `log Q(S)` for one (dataset, score) pair — exactly the values
+//! [`crate::score::LocalScorer`] would compute at solve time. Because
+//! every solver consumes *only* potentials (family scores are derived by
+//! f64 subtraction inside the DP), a [`TableEngine`] serving the same
+//! bits yields networks, orders and log-scores **bit-identical** to the
+//! dataset-backed solve — which is what makes the `.jaa` score-interop
+//! path (`bnsl learn --scores`, score-file service jobs) a first-class
+//! workload rather than an approximation.
+//!
+//! [`ScoreSource`] is the seam the CLI and job service dispatch over:
+//! `Data` (score a dataset on the fly, the historical path) or `Table`
+//! (bring your own scores, no dataset at all). File formats live in
+//! [`crate::eval::jaa`]; this module knows nothing about text.
+
+use super::{ScoreEngine, SubsetScorer};
+use crate::bitset::VarMask;
+use crate::data::Dataset;
+use crate::score::{LocalScorer, ScoreKind};
+
+/// Precomputed subset potentials for `p` variables: `pot[S]` = `log Q(S)`
+/// for every mask `S < 2^p`, plus the metadata a solve record needs
+/// (names, arities, the sample count and score the table was built from).
+#[derive(Clone, Debug)]
+pub struct ScoreTable {
+    names: Vec<String>,
+    arities: Vec<u8>,
+    n: usize,
+    kind: ScoreKind,
+    /// `pot[mask]` for all `2^p` masks, indexed numerically.
+    pot: Vec<f64>,
+    /// Parent-set size limit recorded for the `.jaa` family section
+    /// (`p − 1` = unrestricted). Does not affect solving — the DP reads
+    /// potentials, not families.
+    palim: usize,
+    /// Zero-row stand-in so [`ScoreEngine::data`] has something to return
+    /// (solve records only read names/arities/p from it).
+    placeholder: Dataset,
+}
+
+impl ScoreTable {
+    /// Build a table by scoring `data` under `kind` — one
+    /// [`LocalScorer::log_q`] call per subset, in numeric mask order, so
+    /// the stored bits are exactly the solve-time bits.
+    pub fn compute(data: &Dataset, kind: ScoreKind) -> ScoreTable {
+        let p = data.p();
+        assert!(
+            p <= crate::MAX_VARS,
+            "score tables hold 2^p potentials: p={p} exceeds MAX_VARS={}",
+            crate::MAX_VARS
+        );
+        let mut scorer = LocalScorer::new(data, kind);
+        let pot: Vec<f64> = (0..1u64 << p).map(|m| scorer.log_q(m)).collect();
+        ScoreTable::from_parts(
+            data.names().to_vec(),
+            data.arities().to_vec(),
+            data.n(),
+            kind,
+            pot,
+            p.saturating_sub(1),
+        )
+    }
+
+    /// Assemble a table from already-known potentials (the `.jaa` import
+    /// path). `pot.len()` must be a power of two matching `names`.
+    pub fn from_parts(
+        names: Vec<String>,
+        arities: Vec<u8>,
+        n: usize,
+        kind: ScoreKind,
+        pot: Vec<f64>,
+        palim: usize,
+    ) -> ScoreTable {
+        let p = names.len();
+        assert!(p <= crate::MAX_VARS, "p={p} exceeds MAX_VARS");
+        assert_eq!(arities.len(), p, "one arity per variable");
+        assert_eq!(pot.len(), 1usize << p, "potentials cover all 2^p masks");
+        let placeholder = Dataset::new(names.clone(), arities.clone(), vec![Vec::new(); p]);
+        ScoreTable {
+            names,
+            arities,
+            n,
+            kind,
+            pot,
+            palim: palim.min(p.saturating_sub(1)),
+            placeholder,
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Sample count of the dataset the scores were computed from.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn kind(&self) -> ScoreKind {
+        self.kind
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn arities(&self) -> &[u8] {
+        &self.arities
+    }
+
+    /// Family-section parent-set limit (`p − 1` = unrestricted).
+    pub fn palim(&self) -> usize {
+        self.palim
+    }
+
+    /// `log Q(S)` for one subset.
+    pub fn pot(&self, mask: u64) -> f64 {
+        self.pot[mask as usize]
+    }
+
+    /// The full potentials vector, numeric mask order.
+    pub fn potentials(&self) -> &[f64] {
+        &self.pot
+    }
+
+    /// Local family score `score(x | Π)` — the same subtraction the DP
+    /// performs, so exported `.jaa` family lines carry solve-exact bits.
+    pub fn family(&self, x: usize, parents: u64) -> f64 {
+        debug_assert!(parents & (1u64 << x) == 0, "x ∉ Π");
+        self.pot(parents | (1u64 << x)) - self.pot(parents)
+    }
+
+    /// Restrict to the first `p` variables. Subsets of `{0,…,p−1}` are
+    /// exactly the masks below `2^p`, so the new table is a prefix of the
+    /// old potentials vector — no recomputation, bits preserved.
+    pub fn restrict(&self, p: usize) -> ScoreTable {
+        assert!(
+            p <= self.p(),
+            "cannot restrict a {}-variable table to p={p}",
+            self.p()
+        );
+        ScoreTable::from_parts(
+            self.names[..p].to_vec(),
+            self.arities[..p].to_vec(),
+            self.n,
+            self.kind,
+            self.pot[..1usize << p].to_vec(),
+            self.palim.min(p.saturating_sub(1)),
+        )
+    }
+
+    /// FNV-1a fingerprint over shape, metadata and exact potential bits —
+    /// the dedup/cache key for score-file service jobs (the table *is*
+    /// the workload; two identical tables must collide, two tables
+    /// differing in any bit must not).
+    pub fn fingerprint(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |byte: u8| {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        let mut eat_u64 = |h: &mut u64, v: u64| {
+            for b in v.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat_u64(&mut h, self.p() as u64);
+        eat_u64(&mut h, self.n as u64);
+        for name in &self.names {
+            for b in name.as_bytes() {
+                eat(*b);
+            }
+            eat(0);
+        }
+        for &a in &self.arities {
+            eat(a);
+        }
+        for b in self.kind.name().as_bytes() {
+            eat(*b);
+        }
+        for &v in &self.pot {
+            eat_u64(&mut h, v.to_bits());
+        }
+        format!("{h:016x}")
+    }
+}
+
+/// Where a solve's subset potentials come from: a dataset scored on the
+/// fly ([`NativeEngine`](super::NativeEngine)) or a precomputed
+/// [`ScoreTable`] (the "bring your own scores" path).
+pub enum ScoreSource {
+    Data { data: Dataset, kind: ScoreKind },
+    Table(ScoreTable),
+}
+
+impl ScoreSource {
+    pub fn p(&self) -> usize {
+        match self {
+            ScoreSource::Data { data, .. } => data.p(),
+            ScoreSource::Table(t) => t.p(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            ScoreSource::Data { data, .. } => data.n(),
+            ScoreSource::Table(t) => t.n(),
+        }
+    }
+
+    pub fn kind(&self) -> ScoreKind {
+        match self {
+            ScoreSource::Data { kind, .. } => *kind,
+            ScoreSource::Table(t) => t.kind(),
+        }
+    }
+
+    pub fn names(&self) -> &[String] {
+        match self {
+            ScoreSource::Data { data, .. } => data.names(),
+            ScoreSource::Table(t) => t.names(),
+        }
+    }
+}
+
+/// [`ScoreEngine`] over a [`ScoreTable`]: `log_q` is one indexed load.
+/// Implements **both** mask widths (like the native engine) so the
+/// narrow/wide solver paths and the streaming solver all accept it; it is
+/// `Sync` (shared immutable slice), so the multi-threaded `new` solver
+/// constructors work too.
+pub struct TableEngine<'a> {
+    table: &'a ScoreTable,
+}
+
+impl<'a> TableEngine<'a> {
+    pub fn new(table: &'a ScoreTable) -> TableEngine<'a> {
+        TableEngine { table }
+    }
+
+    /// Width-independent inherent accessor (mirrors `NativeEngine`).
+    pub fn p(&self) -> usize {
+        self.table.p()
+    }
+
+    pub fn n(&self) -> usize {
+        self.table.n()
+    }
+
+    pub fn kind(&self) -> ScoreKind {
+        self.table.kind()
+    }
+
+    pub fn name(&self) -> &'static str {
+        "table"
+    }
+}
+
+impl<'a, M: VarMask> ScoreEngine<M> for TableEngine<'a> {
+    fn p(&self) -> usize {
+        self.table.p()
+    }
+
+    fn n(&self) -> usize {
+        self.table.n()
+    }
+
+    fn kind(&self) -> ScoreKind {
+        self.table.kind()
+    }
+
+    fn data(&self) -> &Dataset {
+        &self.table.placeholder
+    }
+
+    fn scorer(&self) -> Box<dyn SubsetScorer<M> + '_> {
+        Box::new(TableScorer {
+            pot: &self.table.pot,
+            evals: 0,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "table"
+    }
+}
+
+struct TableScorer<'a> {
+    pot: &'a [f64],
+    evals: u64,
+}
+
+impl<'a, M: VarMask> SubsetScorer<M> for TableScorer<'a> {
+    #[inline]
+    fn log_q(&mut self, mask: M) -> f64 {
+        self.evals += 1;
+        self.pot[mask.to_usize()]
+    }
+
+    fn log_q_batch_into(&mut self, masks: &[M], out: &mut [f64]) {
+        debug_assert_eq!(masks.len(), out.len());
+        self.evals += masks.len() as u64;
+        for (slot, &m) in out.iter_mut().zip(masks) {
+            *slot = self.pot[m.to_usize()];
+        }
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Chain-reconstruct potentials from a **complete** family-score table
+/// (every variable × every parent set): `pot(∅) = 0`,
+/// `pot(S) = pot(S \ {low}) + family(low, S \ {low})` where `low` is the
+/// lowest variable of `S`. For foreign `.jaa` files that carry no
+/// potentials section — solve-correct (each potential is *a* valid
+/// telescoping sum) but not bit-guaranteed against the producer's own
+/// potentials, since f64 addition does not exactly invert subtraction.
+///
+/// `family(x, parents_mask)` must return the local score; completeness is
+/// the caller's responsibility (checked here via debug assert only).
+pub fn potentials_from_families(p: usize, family: impl Fn(usize, u64) -> f64) -> Vec<f64> {
+    assert!(p <= crate::MAX_VARS, "p={p} exceeds MAX_VARS");
+    let mut pot = vec![0.0f64; 1usize << p];
+    for mask in 1u64..(1u64 << p) {
+        let low = mask.trailing_zeros() as usize;
+        let rest = mask & (mask - 1);
+        pot[mask as usize] = pot[rest as usize] + family(low, rest);
+    }
+    pot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitset::subsets_of;
+    use crate::data::synth;
+    use crate::engine::NativeEngine;
+    use crate::solver::LeveledSolver;
+
+    #[test]
+    fn table_serves_native_bits() {
+        let d = synth::uniform(6, 80, &[2, 3, 2, 2, 4, 2], 9);
+        let kind = ScoreKind::Bdeu { ess: 1.0 };
+        let table = ScoreTable::compute(&d, kind);
+        let native = NativeEngine::new(&d, kind);
+        let engine = TableEngine::new(&table);
+        let mut ns = ScoreEngine::<u32>::scorer(&native);
+        let mut ts = ScoreEngine::<u32>::scorer(&engine);
+        for mask in 0u32..(1 << 6) {
+            assert_eq!(ts.log_q(mask).to_bits(), ns.log_q(mask).to_bits());
+        }
+        // wide width reads the same slots
+        let mut tw = ScoreEngine::<u64>::scorer(&engine);
+        assert_eq!(tw.log_q(5u64).to_bits(), table.pot(5).to_bits());
+        assert_eq!(ts.evals(), 64);
+    }
+
+    #[test]
+    fn table_solve_is_bit_identical_to_dataset_solve() {
+        let d = synth::binary(7, 120, 21);
+        let kind = ScoreKind::Jeffreys;
+        let table = ScoreTable::compute(&d, kind);
+        let native = NativeEngine::new(&d, kind);
+        let engine = TableEngine::new(&table);
+        let a = LeveledSolver::new_local(&native).solve();
+        let b = LeveledSolver::new_local(&engine).solve();
+        assert_eq!(a.network, b.network);
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.log_score.to_bits(), b.log_score.to_bits());
+    }
+
+    #[test]
+    fn restrict_is_a_prefix_and_matches_take_vars() {
+        let d = synth::uniform(6, 70, &[2, 2, 3, 2, 2, 2], 4);
+        let kind = ScoreKind::Jeffreys;
+        let full = ScoreTable::compute(&d, kind);
+        let cut = full.restrict(4);
+        let direct = ScoreTable::compute(&d.take_vars(4), kind);
+        assert_eq!(cut.p(), 4);
+        assert_eq!(cut.names(), direct.names());
+        for m in 0u64..(1 << 4) {
+            assert_eq!(cut.pot(m).to_bits(), direct.pot(m).to_bits(), "mask={m}");
+        }
+        assert_eq!(cut.fingerprint(), direct.fingerprint());
+        assert_ne!(cut.fingerprint(), full.fingerprint());
+    }
+
+    #[test]
+    fn family_matches_scorer_subtraction() {
+        let d = synth::binary(5, 90, 2);
+        let table = ScoreTable::compute(&d, ScoreKind::Bic);
+        let mut s = LocalScorer::new(&d, ScoreKind::Bic);
+        for x in 0..5usize {
+            for parents in subsets_of(0b11111u64 & !(1 << x)) {
+                let want = s.log_q(parents | (1u64 << x)) - s.log_q(parents);
+                assert_eq!(table.family(x, parents).to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_changes_with_any_bit() {
+        let d = synth::binary(5, 50, 7);
+        let a = ScoreTable::compute(&d, ScoreKind::Jeffreys);
+        let b = ScoreTable::compute(&d, ScoreKind::Bic);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut pot = a.potentials().to_vec();
+        pot[3] = f64::from_bits(pot[3].to_bits() ^ 1);
+        let c = ScoreTable::from_parts(
+            a.names().to_vec(),
+            a.arities().to_vec(),
+            a.n(),
+            a.kind(),
+            pot,
+            a.palim(),
+        );
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let again = ScoreTable::compute(&d, ScoreKind::Jeffreys);
+        assert_eq!(a.fingerprint(), again.fingerprint());
+    }
+
+    #[test]
+    fn chain_reconstruction_solves_to_the_same_network() {
+        // Foreign-file path: rebuild potentials from family scores only.
+        // Not bit-guaranteed, but the optimal structure must survive for
+        // well-separated instances, and each potential is a valid
+        // telescoping sum (exact for this construction's own families).
+        let d = synth::binary(6, 150, 33);
+        let kind = ScoreKind::Jeffreys;
+        let table = ScoreTable::compute(&d, kind);
+        let pot = potentials_from_families(6, |x, pa| table.family(x, pa));
+        let rebuilt = ScoreTable::from_parts(
+            table.names().to_vec(),
+            table.arities().to_vec(),
+            table.n(),
+            kind,
+            pot,
+            table.palim(),
+        );
+        for m in 0u64..(1 << 6) {
+            assert!((rebuilt.pot(m) - table.pot(m)).abs() < 1e-9, "mask={m}");
+        }
+        let e1 = TableEngine::new(&table);
+        let e2 = TableEngine::new(&rebuilt);
+        let a = LeveledSolver::new_local(&e1).solve();
+        let b = LeveledSolver::new_local(&e2).solve();
+        assert_eq!(a.network, b.network);
+    }
+}

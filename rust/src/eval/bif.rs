@@ -1,0 +1,675 @@
+//! Parser for the Bayesian Interchange Format (`.bif`) subset used by the
+//! benchmark-network ecosystem (bnlearn repository, pygobnilp examples).
+//!
+//! Accepted grammar (see `docs/FORMATS.md` for the normative description):
+//!
+//! ```text
+//! network NAME { ... }                              // block skipped
+//! variable NAME {
+//!   type discrete [ K ] { s1, s2, ..., sK };
+//!   property ...;                                   // ignored
+//! }
+//! probability ( X ) { table p1, ..., pK; }          // root variables
+//! probability ( X | P1, P2 ) {
+//!   (s_a, s_b) p1, ..., pK;                         // one row per config
+//! }
+//! ```
+//!
+//! `//` line comments and free whitespace are tolerated. State indices
+//! follow declaration order, variable indices follow `variable`-block
+//! order — the sampled [`Dataset`](crate::data::Dataset) columns and
+//! arities therefore match the file exactly. Parent-configuration rows
+//! are re-coded from the file's header order into the repo's CPT layout
+//! (radix over parents in ascending variable order, lowest index
+//! fastest-varying; see [`crate::bn::Network`]).
+//!
+//! CPT rows whose sum is within `1e-9` of 1 are kept bit-exact (so
+//! fixtures round-trip against [`crate::bn::repo`] literals); rows off by
+//! up to `1e-3` (typical published rounding) are renormalised; anything
+//! worse is an error.
+
+use crate::bitset::bits_of64;
+use crate::bn::{Dag, Network};
+use std::collections::HashMap;
+
+/// Parse a `.bif` document into a validated [`Network`].
+pub fn parse_bif(text: &str) -> Result<Network, String> {
+    let tokens = tokenize(text);
+    Parser { tokens, pos: 0 }.parse()
+}
+
+/// Read and parse a `.bif` file.
+pub fn read_bif(path: &std::path::Path) -> Result<Network, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_bif(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Word(String),
+    Punct(char),
+}
+
+impl Tok {
+    fn describe(&self) -> String {
+        match self {
+            Tok::Word(w) => format!("`{w}`"),
+            Tok::Punct(c) => format!("`{c}`"),
+        }
+    }
+}
+
+fn tokenize(text: &str) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut chars = text.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        if c.is_whitespace() {
+            chars.next();
+        } else if c == '/' {
+            // `//` comment to end of line; a lone `/` is not part of the
+            // accepted grammar, surface it as a word so errors point at it
+            chars.next();
+            if chars.peek() == Some(&'/') {
+                for nc in chars.by_ref() {
+                    if nc == '\n' {
+                        break;
+                    }
+                }
+            } else {
+                out.push(Tok::Word("/".into()));
+            }
+        } else if "{}()[],;|=".contains(c) {
+            chars.next();
+            out.push(Tok::Punct(c));
+        } else {
+            let mut word = String::new();
+            while let Some(&wc) = chars.peek() {
+                if wc.is_whitespace() || "{}()[],;|=/".contains(wc) {
+                    break;
+                }
+                word.push(wc);
+                chars.next();
+            }
+            out.push(Tok::Word(word));
+        }
+    }
+    out
+}
+
+struct VarDecl {
+    name: String,
+    states: Vec<String>,
+}
+
+struct Parser {
+    tokens: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn parse(mut self) -> Result<Network, String> {
+        let mut vars: Vec<VarDecl> = Vec::new();
+        let mut index: HashMap<String, usize> = HashMap::new();
+        // (child, parents, rows) gathered first; CPTs are assembled once
+        // all arities are known
+        let mut blocks: Vec<(usize, Vec<usize>, Vec<CptRow>)> = Vec::new();
+
+        while let Some(tok) = self.next_tok() {
+            match tok {
+                Tok::Word(w) if w == "network" => {
+                    self.skip_until(Tok::Punct('{'))?;
+                    self.skip_block()?;
+                }
+                Tok::Word(w) if w == "variable" => {
+                    let decl = self.parse_variable()?;
+                    if index.contains_key(&decl.name) {
+                        return Err(format!("variable `{}` declared twice", decl.name));
+                    }
+                    index.insert(decl.name.clone(), vars.len());
+                    vars.push(decl);
+                }
+                Tok::Word(w) if w == "probability" => {
+                    let block = self.parse_probability(&vars, &index)?;
+                    blocks.push(block);
+                }
+                other => {
+                    return Err(format!(
+                        "expected `network`, `variable` or `probability`, found {}",
+                        other.describe()
+                    ))
+                }
+            }
+        }
+
+        let p = vars.len();
+        if p == 0 {
+            return Err("no `variable` blocks".into());
+        }
+        if p > crate::MAX_NET_VARS {
+            return Err(format!(
+                "{p} variables exceeds MAX_NET_VARS={}",
+                crate::MAX_NET_VARS
+            ));
+        }
+        let names: Vec<String> = vars.iter().map(|v| v.name.clone()).collect();
+        let arities: Vec<u8> = vars.iter().map(|v| v.states.len() as u8).collect();
+
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        let mut seen: Vec<bool> = vec![false; p];
+        for (child, parents, _) in &blocks {
+            if seen[*child] {
+                return Err(format!(
+                    "two probability blocks for `{}`",
+                    names[*child]
+                ));
+            }
+            seen[*child] = true;
+            for &pa in parents {
+                edges.push((pa, *child));
+            }
+        }
+        for (x, ok) in seen.iter().enumerate() {
+            if !ok {
+                return Err(format!("no probability block for `{}`", names[x]));
+            }
+        }
+        // Dag::from_edges asserts acyclicity; check first so a bad file
+        // is an error, not a panic. Kahn's algorithm over parent masks.
+        {
+            let mut parent_masks = vec![0u64; p];
+            for &(u, v) in &edges {
+                parent_masks[v] |= 1 << u;
+            }
+            let mut placed = 0u64;
+            let mut count = 0usize;
+            loop {
+                let before = count;
+                for (x, &pm) in parent_masks.iter().enumerate() {
+                    if placed & (1 << x) == 0 && pm & !placed == 0 {
+                        placed |= 1 << x;
+                        count += 1;
+                    }
+                }
+                if count == p {
+                    break;
+                }
+                if count == before {
+                    return Err("probability blocks form a cycle".into());
+                }
+            }
+        }
+        let dag = Dag::from_edges(p, &edges);
+
+        let mut cpts: Vec<Vec<f64>> = Vec::with_capacity(p);
+        // blocks arrive in file order; re-index to variable order
+        let mut by_child: Vec<Option<(Vec<usize>, Vec<CptRow>)>> =
+            (0..p).map(|_| None).collect();
+        for (child, parents, rows) in blocks {
+            by_child[child] = Some((parents, rows));
+        }
+        for x in 0..p {
+            let (parents, rows) = by_child[x].take().expect("checked above");
+            cpts.push(assemble_cpt(x, &parents, rows, &vars, &names)?);
+        }
+        Ok(Network::new(names, arities, dag, cpts))
+    }
+
+    fn next_tok(&mut self) -> Option<Tok> {
+        let t = self.tokens.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: Tok) -> Result<(), String> {
+        match self.next_tok() {
+            Some(t) if t == want => Ok(()),
+            Some(t) => Err(format!("expected {}, found {}", want.describe(), t.describe())),
+            None => Err(format!("expected {}, found end of file", want.describe())),
+        }
+    }
+
+    fn expect_word(&mut self, what: &str) -> Result<String, String> {
+        match self.next_tok() {
+            Some(Tok::Word(w)) => Ok(w),
+            Some(t) => Err(format!("expected {what}, found {}", t.describe())),
+            None => Err(format!("expected {what}, found end of file")),
+        }
+    }
+
+    fn skip_until(&mut self, want: Tok) -> Result<(), String> {
+        while let Some(t) = self.next_tok() {
+            if t == want {
+                return Ok(());
+            }
+        }
+        Err(format!("expected {} before end of file", want.describe()))
+    }
+
+    /// Skip a balanced `{ ... }` body; the opening brace is already
+    /// consumed.
+    fn skip_block(&mut self) -> Result<(), String> {
+        let mut depth = 1usize;
+        while let Some(t) = self.next_tok() {
+            match t {
+                Tok::Punct('{') => depth += 1,
+                Tok::Punct('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                _ => {}
+            }
+        }
+        Err("unbalanced `{`".into())
+    }
+
+    fn parse_variable(&mut self) -> Result<VarDecl, String> {
+        let name = self.expect_word("variable name")?;
+        self.expect(Tok::Punct('{'))?;
+        let mut states: Option<Vec<String>> = None;
+        loop {
+            match self.next_tok() {
+                Some(Tok::Punct('}')) => break,
+                Some(Tok::Word(w)) if w == "type" => {
+                    let kind = self.expect_word("`discrete`")?;
+                    if kind != "discrete" {
+                        return Err(format!(
+                            "variable `{name}`: only `type discrete` is supported, found `{kind}`"
+                        ));
+                    }
+                    self.expect(Tok::Punct('['))?;
+                    let count_word = self.expect_word("state count")?;
+                    let count: usize = count_word
+                        .parse()
+                        .map_err(|_| format!("bad state count `{count_word}` for `{name}`"))?;
+                    self.expect(Tok::Punct(']'))?;
+                    self.expect(Tok::Punct('{'))?;
+                    let mut list = Vec::new();
+                    loop {
+                        match self.next_tok() {
+                            Some(Tok::Word(s)) => list.push(s),
+                            Some(Tok::Punct(',')) => {}
+                            Some(Tok::Punct('}')) => break,
+                            Some(t) => {
+                                return Err(format!(
+                                    "variable `{name}`: unexpected {} in state list",
+                                    t.describe()
+                                ))
+                            }
+                            None => return Err("end of file in state list".into()),
+                        }
+                    }
+                    self.expect(Tok::Punct(';'))?;
+                    if list.len() != count {
+                        return Err(format!(
+                            "variable `{name}` declares [{count}] states but lists {}",
+                            list.len()
+                        ));
+                    }
+                    if count < 1 || count > u8::MAX as usize {
+                        return Err(format!("variable `{name}`: arity {count} out of range"));
+                    }
+                    states = Some(list);
+                }
+                Some(Tok::Word(_)) => {
+                    // property or other annotation: skip to `;`
+                    self.skip_until(Tok::Punct(';'))?;
+                }
+                Some(t) => {
+                    return Err(format!(
+                        "variable `{name}`: unexpected {}",
+                        t.describe()
+                    ))
+                }
+                None => return Err(format!("end of file inside variable `{name}`")),
+            }
+        }
+        let states =
+            states.ok_or_else(|| format!("variable `{name}` has no `type discrete` clause"))?;
+        Ok(VarDecl { name, states })
+    }
+
+    fn parse_probability(
+        &mut self,
+        vars: &[VarDecl],
+        index: &HashMap<String, usize>,
+    ) -> Result<(usize, Vec<usize>, Vec<CptRow>), String> {
+        let resolve = |name: &str| -> Result<usize, String> {
+            index
+                .get(name)
+                .copied()
+                .ok_or_else(|| format!("probability block names undeclared variable `{name}`"))
+        };
+        self.expect(Tok::Punct('('))?;
+        let child_name = self.expect_word("variable name")?;
+        let child = resolve(&child_name)?;
+        let mut parents: Vec<usize> = Vec::new();
+        match self.next_tok() {
+            Some(Tok::Punct(')')) => {}
+            Some(Tok::Punct('|')) => loop {
+                let pa = resolve(&self.expect_word("parent name")?)?;
+                if pa == child || parents.contains(&pa) {
+                    return Err(format!(
+                        "probability block for `{child_name}` repeats `{}`",
+                        vars[pa].name
+                    ));
+                }
+                parents.push(pa);
+                match self.next_tok() {
+                    Some(Tok::Punct(',')) => {}
+                    Some(Tok::Punct(')')) => break,
+                    Some(t) => {
+                        return Err(format!(
+                            "expected `,` or `)` in parent list, found {}",
+                            t.describe()
+                        ))
+                    }
+                    None => return Err("end of file in parent list".into()),
+                }
+            },
+            Some(t) => {
+                return Err(format!(
+                    "expected `)` or `|` after `{child_name}`, found {}",
+                    t.describe()
+                ))
+            }
+            None => return Err("end of file in probability header".into()),
+        }
+        self.expect(Tok::Punct('{'))?;
+        let mut rows = Vec::new();
+        loop {
+            match self.next_tok() {
+                Some(Tok::Punct('}')) => break,
+                Some(Tok::Word(w)) if w == "table" => {
+                    let values = self.parse_values(&child_name)?;
+                    rows.push(CptRow {
+                        config: Vec::new(),
+                        values,
+                        is_table: true,
+                    });
+                }
+                Some(Tok::Punct('(')) => {
+                    let mut config = Vec::new();
+                    loop {
+                        match self.next_tok() {
+                            Some(Tok::Word(s)) => config.push(s),
+                            Some(Tok::Punct(',')) => {}
+                            Some(Tok::Punct(')')) => break,
+                            Some(t) => {
+                                return Err(format!(
+                                    "unexpected {} in row config for `{child_name}`",
+                                    t.describe()
+                                ))
+                            }
+                            None => return Err("end of file in row config".into()),
+                        }
+                    }
+                    let values = self.parse_values(&child_name)?;
+                    rows.push(CptRow {
+                        config,
+                        values,
+                        is_table: false,
+                    });
+                }
+                Some(Tok::Word(_)) => {
+                    // property annotation inside the block
+                    self.skip_until(Tok::Punct(';'))?;
+                }
+                Some(t) => {
+                    return Err(format!(
+                        "unexpected {} in probability block for `{child_name}`",
+                        t.describe()
+                    ))
+                }
+                None => return Err("end of file in probability block".into()),
+            }
+        }
+        Ok((child, parents, rows))
+    }
+
+    /// Comma-separated probabilities terminated by `;`.
+    fn parse_values(&mut self, child: &str) -> Result<Vec<f64>, String> {
+        let mut values = Vec::new();
+        loop {
+            match self.next_tok() {
+                Some(Tok::Word(w)) => {
+                    let v: f64 = w
+                        .parse()
+                        .map_err(|_| format!("bad probability `{w}` for `{child}`"))?;
+                    if !(0.0..=1.0).contains(&v) {
+                        return Err(format!("probability {v} for `{child}` outside [0, 1]"));
+                    }
+                    values.push(v);
+                }
+                Some(Tok::Punct(',')) => {}
+                Some(Tok::Punct(';')) => break,
+                Some(t) => {
+                    return Err(format!(
+                        "unexpected {} in probability row for `{child}`",
+                        t.describe()
+                    ))
+                }
+                None => return Err("end of file in probability row".into()),
+            }
+        }
+        Ok(values)
+    }
+}
+
+struct CptRow {
+    /// Parent states in header order (empty for `table` rows).
+    config: Vec<String>,
+    values: Vec<f64>,
+    is_table: bool,
+}
+
+/// Re-code rows from the file's parent-header order into the repo radix
+/// layout and validate completeness.
+fn assemble_cpt(
+    x: usize,
+    parents: &[usize],
+    rows: Vec<CptRow>,
+    vars: &[VarDecl],
+    names: &[String],
+) -> Result<Vec<f64>, String> {
+    let r = vars[x].states.len();
+    // strides in the repo layout: ascending variable index, lowest fastest
+    let mut parent_mask = 0u64;
+    for &pa in parents {
+        parent_mask |= 1 << pa;
+    }
+    let mut stride: HashMap<usize, usize> = HashMap::new();
+    let mut acc = 1usize;
+    for v in bits_of64(parent_mask) {
+        stride.insert(v, acc);
+        acc *= vars[v].states.len();
+    }
+    let configs = acc;
+    let mut cpt = vec![0.0f64; configs * r];
+    let mut filled = vec![false; configs];
+
+    for row in rows {
+        if row.values.len() != r {
+            return Err(format!(
+                "`{}` row has {} probabilities, arity is {r}",
+                names[x],
+                row.values.len()
+            ));
+        }
+        let code = if row.is_table {
+            if !parents.is_empty() {
+                return Err(format!(
+                    "`{}` has parents; use per-configuration `( ... )` rows, not `table`",
+                    names[x]
+                ));
+            }
+            0
+        } else {
+            if row.config.len() != parents.len() {
+                return Err(format!(
+                    "`{}` row names {} parent states, block declares {} parents",
+                    names[x],
+                    row.config.len(),
+                    parents.len()
+                ));
+            }
+            let mut code = 0usize;
+            for (pa, state) in parents.iter().zip(&row.config) {
+                let si = vars[*pa]
+                    .states
+                    .iter()
+                    .position(|s| s == state)
+                    .ok_or_else(|| {
+                        format!(
+                            "`{}` is not a state of `{}` (row in `{}`)",
+                            state, names[*pa], names[x]
+                        )
+                    })?;
+                code += stride[pa] * si;
+            }
+            code
+        };
+        if filled[code] {
+            return Err(format!("duplicate CPT row for `{}`", names[x]));
+        }
+        filled[code] = true;
+        let sum: f64 = row.values.iter().sum();
+        let slot = &mut cpt[code * r..(code + 1) * r];
+        if (sum - 1.0).abs() <= 1e-9 {
+            slot.copy_from_slice(&row.values); // bit-exact literals
+        } else if (sum - 1.0).abs() <= 1e-3 {
+            for (s, v) in slot.iter_mut().zip(&row.values) {
+                *s = v / sum; // published rounding: renormalise
+            }
+        } else {
+            return Err(format!("CPT row of `{}` sums to {sum}", names[x]));
+        }
+    }
+    if let Some(missing) = filled.iter().position(|&f| !f) {
+        return Err(format!(
+            "`{}` is missing the CPT row for parent configuration {missing}",
+            names[x]
+        ));
+    }
+    Ok(cpt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "
+// two-node toy network
+network tiny {
+}
+variable A {
+  type discrete [ 2 ] { no, yes };
+}
+variable B {
+  type discrete [ 3 ] { low, mid, high };
+}
+probability ( A ) {
+  table 0.2, 0.8;
+}
+probability ( B | A ) {
+  (no) 0.7, 0.2, 0.1;
+  (yes) 0.1, 0.3, 0.6;
+}
+";
+
+    #[test]
+    fn parses_structure_states_and_rows() {
+        let net = parse_bif(TINY).unwrap();
+        assert_eq!(net.p(), 2);
+        assert_eq!(net.names(), &["A".to_string(), "B".to_string()]);
+        assert_eq!(net.arities(), &[2, 3]);
+        assert_eq!(net.dag().edges(), vec![(0, 1)]);
+        // P(B=high | A=yes) = 0.6 → log_prob of (A=yes, B=high)
+        let lp = net.log_prob(&[1, 2]);
+        assert!((lp - (0.8f64 * 0.6).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parent_configs_recode_to_ascending_radix() {
+        // parents declared in reverse order in the header: the parser must
+        // land each row on the (low index fastest) radix code regardless.
+        let text = "
+variable A { type discrete [ 2 ] { a0, a1 }; }
+variable B { type discrete [ 2 ] { b0, b1 }; }
+variable C { type discrete [ 2 ] { c0, c1 }; }
+probability ( A ) { table 0.5, 0.5; }
+probability ( B ) { table 0.5, 0.5; }
+probability ( C | B, A ) {
+  (b0, a0) 0.9, 0.1;
+  (b0, a1) 0.8, 0.2;
+  (b1, a0) 0.7, 0.3;
+  (b1, a1) 0.6, 0.4;
+}
+";
+        let net = parse_bif(text).unwrap();
+        // P(C=c0 | A=a1, B=b0) = 0.8
+        let lp = net.log_prob(&[1, 0, 0]);
+        assert!((lp - (0.5f64 * 0.5 * 0.8).ln()).abs() < 1e-12);
+        // P(C=c0 | A=a0, B=b1) = 0.7
+        let lp = net.log_prob(&[0, 1, 0]);
+        assert!((lp - (0.5f64 * 0.5 * 0.7).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn renormalises_published_rounding_but_keeps_exact_rows() {
+        let text = "
+variable A { type discrete [ 3 ] { x, y, z }; }
+probability ( A ) { table 0.333333, 0.333333, 0.333333; }
+";
+        let net = parse_bif(text).unwrap();
+        // renormalised to exactly 1/3 each
+        let lp = net.log_prob(&[0]);
+        assert!((lp - (1.0f64 / 3.0).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_incomplete_and_malformed_blocks() {
+        let missing_row = "
+variable A { type discrete [ 2 ] { no, yes }; }
+variable B { type discrete [ 2 ] { no, yes }; }
+probability ( A ) { table 0.5, 0.5; }
+probability ( B | A ) { (no) 0.5, 0.5; }
+";
+        assert!(parse_bif(missing_row).unwrap_err().contains("missing"));
+        let no_block = "variable A { type discrete [ 2 ] { no, yes }; }";
+        assert!(parse_bif(no_block).unwrap_err().contains("no probability"));
+        let bad_sum = "
+variable A { type discrete [ 2 ] { no, yes }; }
+probability ( A ) { table 0.5, 0.2; }
+";
+        assert!(parse_bif(bad_sum).unwrap_err().contains("sums to"));
+        let undeclared = "
+variable A { type discrete [ 2 ] { no, yes }; }
+probability ( A | Ghost ) { (no) 0.5, 0.5; }
+";
+        assert!(parse_bif(undeclared).unwrap_err().contains("undeclared"));
+        let cycle = "
+variable A { type discrete [ 2 ] { no, yes }; }
+variable B { type discrete [ 2 ] { no, yes }; }
+probability ( A | B ) { (no) 0.5, 0.5; (yes) 0.5, 0.5; }
+probability ( B | A ) { (no) 0.5, 0.5; (yes) 0.5, 0.5; }
+";
+        assert!(parse_bif(cycle).unwrap_err().contains("cycle"));
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic_and_shaped_by_the_file() {
+        let net = parse_bif(TINY).unwrap();
+        let d = net.sample(500, 42);
+        assert_eq!(d.p(), 2);
+        assert_eq!(d.n(), 500);
+        assert_eq!(d.names(), &["A".to_string(), "B".to_string()]);
+        assert_eq!(d.arities(), &[2, 3]);
+        assert_eq!(net.sample(500, 42), d);
+        assert_ne!(net.sample(500, 43), d);
+    }
+}

@@ -1,0 +1,482 @@
+//! `.jaa` local-score files: interop with the Jaakkola/GOBNILP ecosystem
+//! plus a bit-exact potentials extension.
+//!
+//! The interchange body is the format pygobnilp and GOBNILP read/write:
+//!
+//! ```text
+//! 8                       // variable count
+//! asia 2                  // variable name, family-line count
+//! -437.28 0               // local score, |Π|, parent names...
+//! -435.12 1 tub
+//! ...
+//! ```
+//!
+//! Foreign consumers see exactly that. Around it, `bnsl` adds `#`-comment
+//! lines (ignored by ecosystem parsers, round-tripped by ours):
+//!
+//! ```text
+//! # bnsl-jaa/1 score=jeffreys n=5000 palim=7
+//! # var asia 2              // arity per variable (else assumed binary)
+//! ...body...
+//! # begin-potentials 256
+//! # pot 0 0                 // log Q(S) per subset mask (decimal), all 2^p
+//! # pot 1 -3.4657359027997265
+//! # end-potentials
+//! ```
+//!
+//! Why the extension: solvers consume subset potentials `log Q(S)`, and a
+//! family score is the f64 *difference* of two potentials. Differences do
+//! not reconstruct the potentials bit-exactly (floating-point addition is
+//! not the exact inverse), so a file carrying only family scores cannot
+//! guarantee bit-identical solves. With the potentials section present,
+//! import is exact: the solve from a [`ScoreTable`] equals the
+//! dataset-backed solve bit for bit, and the family lines are
+//! cross-checked against potential differences as a corruption guard.
+//! Without it (a foreign file), potentials are chain-reconstructed from a
+//! **complete** family table — solve-correct, documented as not
+//! bit-guaranteed.
+
+use crate::engine::{potentials_from_families, ScoreTable};
+use crate::score::ScoreKind;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Serialise a [`ScoreTable`] as `.jaa` text. Deterministic: a given
+/// table always produces identical bytes, and `parse_jaa ∘ export_jaa`
+/// is the identity on tables (hence export → import → export is
+/// byte-stable).
+pub fn export_jaa(table: &ScoreTable) -> String {
+    let p = table.p();
+    let palim = table.palim();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# bnsl-jaa/1 score={} n={} palim={palim}",
+        table.kind().name(),
+        table.n()
+    );
+    for (name, arity) in table.names().iter().zip(table.arities()) {
+        let _ = writeln!(out, "# var {name} {arity}");
+    }
+    let _ = writeln!(out, "{p}");
+    let full = (1u64 << p) - 1;
+    for x in 0..p {
+        let others = full & !(1u64 << x);
+        // parent sets in increasing numeric (mask) order, |Π| ≤ palim
+        let sets: Vec<u64> = crate::bitset::subsets_of(others)
+            .filter(|s| s.count_ones() as usize <= palim)
+            .collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+            .collect();
+        let _ = writeln!(out, "{} {}", table.names()[x], sets.len());
+        for parents in sets {
+            let _ = write!(out, "{} {}", table.family(x, parents), parents.count_ones());
+            for v in crate::bitset::bits_of64(parents) {
+                let _ = write!(out, " {}", table.names()[v]);
+            }
+            out.push('\n');
+        }
+    }
+    let _ = writeln!(out, "# begin-potentials {}", 1u64 << p);
+    for (mask, value) in table.potentials().iter().enumerate() {
+        let _ = writeln!(out, "# pot {mask} {value}");
+    }
+    let _ = writeln!(out, "# end-potentials");
+    out
+}
+
+/// Parse `.jaa` text into a [`ScoreTable`].
+///
+/// With a potentials section the table is exact (family lines verified
+/// against potential differences bit-for-bit). Without one, every
+/// variable must carry its complete family table (all `2^(p−1)` parent
+/// sets) so potentials can be chain-reconstructed; pruned foreign files
+/// are rejected with an error naming the limitation.
+pub fn parse_jaa(text: &str) -> Result<ScoreTable, String> {
+    let mut header_kind: Option<ScoreKind> = None;
+    let mut header_n: Option<usize> = None;
+    let mut header_palim: Option<usize> = None;
+    let mut declared_arities: HashMap<String, u8> = HashMap::new();
+    let mut pot_lines: Vec<(u64, f64)> = Vec::new();
+    let mut pot_declared: Option<u64> = None;
+    let mut body: Vec<&str> = Vec::new();
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let toks: Vec<&str> = comment.split_whitespace().collect();
+            match toks.first().copied() {
+                Some("bnsl-jaa/1") => {
+                    for t in &toks[1..] {
+                        if let Some(v) = t.strip_prefix("score=") {
+                            header_kind = Some(
+                                ScoreKind::parse(v)
+                                    .ok_or_else(|| format!("unknown score `{v}` in header"))?,
+                            );
+                        } else if let Some(v) = t.strip_prefix("n=") {
+                            header_n =
+                                Some(v.parse().map_err(|_| format!("bad n `{v}` in header"))?);
+                        } else if let Some(v) = t.strip_prefix("palim=") {
+                            header_palim =
+                                Some(v.parse().map_err(|_| format!("bad palim `{v}`"))?);
+                        }
+                    }
+                }
+                Some("var") => {
+                    if toks.len() != 3 {
+                        return Err(format!("malformed `# var` line: `{line}`"));
+                    }
+                    let arity: u8 = toks[2]
+                        .parse()
+                        .map_err(|_| format!("bad arity in `{line}`"))?;
+                    declared_arities.insert(toks[1].to_string(), arity);
+                }
+                Some("begin-potentials") => {
+                    let count = toks
+                        .get(1)
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .ok_or_else(|| format!("malformed `{line}`"))?;
+                    pot_declared = Some(count);
+                }
+                Some("pot") => {
+                    if toks.len() != 3 {
+                        return Err(format!("malformed `# pot` line: `{line}`"));
+                    }
+                    let mask: u64 = toks[1]
+                        .parse()
+                        .map_err(|_| format!("bad mask in `{line}`"))?;
+                    let value: f64 = toks[2]
+                        .parse()
+                        .map_err(|_| format!("bad value in `{line}`"))?;
+                    pot_lines.push((mask, value));
+                }
+                Some("end-potentials") => {}
+                _ => {} // ordinary comment
+            }
+        } else {
+            body.push(line);
+        }
+    }
+
+    // ---- body: var count, then per-variable family sections ----
+    if body.is_empty() {
+        return Err("empty .jaa file (no variable-count line)".into());
+    }
+    let p: usize = body[0]
+        .parse()
+        .map_err(|_| format!("first line must be the variable count, found `{}`", body[0]))?;
+    if p == 0 || p > crate::MAX_VARS {
+        return Err(format!(
+            "variable count {p} outside 1..={} (MAX_VARS)",
+            crate::MAX_VARS
+        ));
+    }
+    let mut names: Vec<String> = Vec::with_capacity(p);
+    let mut index: HashMap<String, usize> = HashMap::new();
+    // families[x] = (parent mask, score) in file order
+    let mut families: Vec<Vec<(u64, f64)>> = Vec::with_capacity(p);
+    let mut sections: Vec<(String, usize, usize)> = Vec::new(); // name, start, count
+
+    // first pass: discover all names (family lines reference any variable)
+    {
+        let mut at = 1usize;
+        for _ in 0..p {
+            let parts: Vec<&str> = body
+                .get(at)
+                .ok_or("truncated file: missing a variable section")?
+                .split_whitespace()
+                .collect();
+            if parts.len() != 2 {
+                return Err(format!(
+                    "expected `NAME count` section header, found `{}`",
+                    body[at]
+                ));
+            }
+            let count: usize = parts[1]
+                .parse()
+                .map_err(|_| format!("bad family count in `{}`", body[at]))?;
+            let name = parts[0].to_string();
+            if index.contains_key(&name) {
+                return Err(format!("variable `{name}` appears twice"));
+            }
+            index.insert(name.clone(), names.len());
+            names.push(name.clone());
+            sections.push((name, at + 1, count));
+            at += 1 + count;
+        }
+        if at != body.len() {
+            return Err(format!(
+                "{} trailing non-comment lines after the last variable section",
+                body.len() - at
+            ));
+        }
+    }
+
+    let mut max_k = 0usize;
+    for (si, (name, start, count)) in sections.iter().enumerate() {
+        let mut fams = Vec::with_capacity(*count);
+        let mut seen: HashMap<u64, ()> = HashMap::new();
+        for line in &body[*start..*start + *count] {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() < 2 {
+                return Err(format!("malformed family line for `{name}`: `{line}`"));
+            }
+            let score: f64 = parts[0]
+                .parse()
+                .map_err(|_| format!("bad score in `{line}`"))?;
+            let k: usize = parts[1]
+                .parse()
+                .map_err(|_| format!("bad parent count in `{line}`"))?;
+            if parts.len() != 2 + k {
+                return Err(format!(
+                    "family line for `{name}` declares {k} parents but lists {}",
+                    parts.len() - 2
+                ));
+            }
+            let mut mask = 0u64;
+            for pname in &parts[2..] {
+                let pi = *index
+                    .get(*pname)
+                    .ok_or_else(|| format!("unknown parent `{pname}` for `{name}`"))?;
+                if pi == si {
+                    return Err(format!("`{name}` lists itself as a parent"));
+                }
+                if mask & (1 << pi) != 0 {
+                    return Err(format!("duplicate parent `{pname}` for `{name}`"));
+                }
+                mask |= 1 << pi;
+            }
+            if seen.insert(mask, ()).is_some() {
+                return Err(format!("duplicate parent set for `{name}`"));
+            }
+            max_k = max_k.max(k);
+            fams.push((mask, score));
+        }
+        families.push(fams);
+    }
+
+    let arities: Vec<u8> = names
+        .iter()
+        .map(|nm| declared_arities.get(nm).copied().unwrap_or(2))
+        .collect();
+    let n = header_n.unwrap_or(0);
+    let kind = header_kind.unwrap_or(ScoreKind::Jeffreys);
+    let palim = header_palim.unwrap_or(max_k).min(p.saturating_sub(1));
+
+    // ---- potentials: exact path or chain reconstruction ----
+    let pot: Vec<f64> = if pot_declared.is_some() || !pot_lines.is_empty() {
+        let want = 1u64 << p;
+        if pot_declared.is_some_and(|c| c != want) {
+            return Err(format!(
+                "potentials section declares {} entries, need 2^{p} = {want}",
+                pot_declared.unwrap()
+            ));
+        }
+        if pot_lines.len() as u64 != want {
+            return Err(format!(
+                "potentials section has {} `# pot` lines, need {want}",
+                pot_lines.len()
+            ));
+        }
+        let mut pot = vec![f64::NAN; want as usize];
+        let mut filled = vec![false; want as usize];
+        for (mask, value) in pot_lines {
+            if mask >= want {
+                return Err(format!("potential mask {mask} out of range for p={p}"));
+            }
+            if filled[mask as usize] {
+                return Err(format!("duplicate potential for mask {mask}"));
+            }
+            filled[mask as usize] = true;
+            pot[mask as usize] = value;
+        }
+        // corruption guard: every family line must equal the exact
+        // difference of its two potentials, bit for bit (that is how the
+        // exporter produced it)
+        for (x, fams) in families.iter().enumerate() {
+            for &(mask, score) in fams {
+                let want_bits = (pot[(mask | (1 << x)) as usize] - pot[mask as usize]).to_bits();
+                if score.to_bits() != want_bits {
+                    return Err(format!(
+                        "family score for `{}` over mask {mask} disagrees with the \
+                         potentials section (corrupt or hand-edited file?)",
+                        names[x]
+                    ));
+                }
+            }
+        }
+        pot
+    } else {
+        // foreign file: chain reconstruction needs the complete family
+        // table of every variable
+        let per_var = 1u64 << (p - 1);
+        let mut tables: Vec<Vec<f64>> = Vec::with_capacity(p);
+        for (x, fams) in families.iter().enumerate() {
+            if fams.len() as u64 != per_var {
+                return Err(format!(
+                    "`{}` has {} parent sets but chain reconstruction needs all \
+                     2^(p-1) = {per_var}; this file was pruned (palim?). Re-export \
+                     with `bnsl scores` to embed the exact potentials section, \
+                     which lifts the completeness requirement.",
+                    names[x],
+                    fams.len()
+                ));
+            }
+            let mut table = vec![f64::NAN; 1usize << p];
+            for &(mask, score) in fams {
+                table[mask as usize] = score;
+            }
+            tables.push(table);
+        }
+        potentials_from_families(p, |x, pa| tables[x][pa as usize])
+    };
+
+    Ok(ScoreTable::from_parts(names, arities, n, kind, pot, palim))
+}
+
+/// Read and parse a `.jaa` file.
+pub fn read_jaa(path: &std::path::Path) -> Result<ScoreTable, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_jaa(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::engine::TableEngine;
+    use crate::solver::LeveledSolver;
+
+    fn sample_table() -> ScoreTable {
+        let d = synth::uniform(5, 60, &[2, 3, 2, 2, 3], 17);
+        ScoreTable::compute(&d, ScoreKind::Bdeu { ess: 1.0 })
+    }
+
+    #[test]
+    fn export_import_export_is_byte_stable() {
+        let table = sample_table();
+        let text = export_jaa(&table);
+        let parsed = parse_jaa(&text).unwrap();
+        assert_eq!(parsed.names(), table.names());
+        assert_eq!(parsed.arities(), table.arities());
+        assert_eq!(parsed.n(), table.n());
+        assert_eq!(parsed.kind(), table.kind());
+        assert_eq!(parsed.palim(), table.palim());
+        for m in 0..(1u64 << 5) {
+            assert_eq!(parsed.pot(m).to_bits(), table.pot(m).to_bits());
+        }
+        assert_eq!(export_jaa(&parsed), text, "roundtrip is byte-stable");
+        assert_eq!(parsed.fingerprint(), table.fingerprint());
+    }
+
+    #[test]
+    fn imported_table_solves_bit_identically() {
+        let d = synth::binary(6, 100, 3);
+        let table = ScoreTable::compute(&d, ScoreKind::Jeffreys);
+        let imported = parse_jaa(&export_jaa(&table)).unwrap();
+        let e1 = TableEngine::new(&table);
+        let e2 = TableEngine::new(&imported);
+        let a = LeveledSolver::new_local(&e1).solve();
+        let b = LeveledSolver::new_local(&e2).solve();
+        assert_eq!(a.network, b.network);
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.log_score.to_bits(), b.log_score.to_bits());
+    }
+
+    #[test]
+    fn foreign_body_without_potentials_chain_reconstructs() {
+        let table = sample_table();
+        // strip every comment line: what a GOBNILP-ecosystem tool would see
+        let foreign: String = export_jaa(&table)
+            .lines()
+            .filter(|l| !l.trim_start().starts_with('#'))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let parsed = parse_jaa(&foreign).unwrap();
+        // metadata defaults apply (no header): binary arities, jeffreys
+        assert_eq!(parsed.kind(), ScoreKind::Jeffreys);
+        for m in 0..(1u64 << 5) {
+            assert!(
+                (parsed.pot(m) - table.pot(m)).abs() < 1e-9,
+                "mask {m}: {} vs {}",
+                parsed.pot(m),
+                table.pot(m)
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_foreign_file_is_rejected_with_guidance() {
+        let d = synth::binary(5, 60, 9);
+        let mut table = ScoreTable::compute(&d, ScoreKind::Jeffreys);
+        table = ScoreTable::from_parts(
+            table.names().to_vec(),
+            table.arities().to_vec(),
+            table.n(),
+            table.kind(),
+            table.potentials().to_vec(),
+            2, // palim prunes the family section
+        );
+        let foreign: String = export_jaa(&table)
+            .lines()
+            .filter(|l| !l.trim_start().starts_with('#'))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let err = parse_jaa(&foreign).unwrap_err();
+        assert!(err.contains("pruned"), "{err}");
+        assert!(err.contains("bnsl scores"), "{err}");
+        // but WITH the potentials section the pruned body is fine
+        let full = parse_jaa(&export_jaa(&table)).unwrap();
+        assert_eq!(full.fingerprint(), table.fingerprint());
+    }
+
+    #[test]
+    fn corrupted_family_line_is_detected() {
+        let table = sample_table();
+        let text = export_jaa(&table);
+        // perturb the first family-score value: the potentials cross-check
+        // must flag the mismatch
+        let mut lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let target = lines
+            .iter()
+            .position(|l| {
+                if l.starts_with('#') {
+                    return false;
+                }
+                let mut it = l.split_whitespace();
+                matches!(
+                    (it.next().map(|t| t.parse::<f64>()), it.next()),
+                    (Some(Ok(_)), Some(_))
+                )
+            })
+            .expect("export contains family lines");
+        let mut parts: Vec<String> = lines[target]
+            .split_whitespace()
+            .map(|s| s.to_string())
+            .collect();
+        let score: f64 = parts[0].parse().unwrap();
+        parts[0] = format!("{}", score + 1.0);
+        lines[target] = parts.join(" ");
+        let corrupted = lines.join("\n");
+        let err = parse_jaa(&corrupted).unwrap_err();
+        assert!(err.contains("disagrees"), "corruption caught: {err}");
+    }
+
+    #[test]
+    fn malformed_inputs_error_cleanly() {
+        assert!(parse_jaa("").is_err());
+        assert!(parse_jaa("not-a-number\n").is_err());
+        // truncated: declares 2 variables, provides 1
+        assert!(parse_jaa("2\nA 1\n-1.5 0\n").is_err());
+        // unknown parent name
+        let err = parse_jaa("1\nA 1\n-1.5 1 Ghost\n").unwrap_err();
+        assert!(err.contains("unknown parent") || err.contains("parents"), "{err}");
+        // p too large for a table
+        assert!(parse_jaa("31\n").unwrap_err().contains("MAX_VARS"));
+    }
+}

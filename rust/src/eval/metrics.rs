@@ -1,0 +1,198 @@
+//! Edge-level precision/recall/F1 between a learned and a ground-truth
+//! graph — directed-exact and CPDAG-aware variants.
+//!
+//! [`crate::bn::shd`] counts *differences*; these metrics count *matches*,
+//! which is what recovery curves plot. The CPDAG variant compares edge
+//! **marks** (compelled `u → v` vs reversible `u — v`) so Markov-equivalent
+//! reorientations are not penalised, matching [`crate::bn::shd_cpdag`].
+
+use crate::bn::{cpdag_of, Dag};
+use crate::util::json::Json;
+
+/// Confusion counts and derived rates for one graph comparison.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EdgeMetrics {
+    /// Learned edges that match a truth edge (same mark).
+    pub tp: usize,
+    /// Learned edges with no matching truth edge.
+    pub fp: usize,
+    /// Truth edges with no matching learned edge.
+    pub fn_: usize,
+}
+
+impl EdgeMetrics {
+    fn from_counts(tp: usize, fp: usize, fn_: usize) -> EdgeMetrics {
+        EdgeMetrics { tp, fp, fn_ }
+    }
+
+    /// `tp / (tp + fp)`; 1.0 when nothing was predicted (no false claims).
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            1.0
+        } else {
+            self.tp as f64 / (self.tp + self.fp) as f64
+        }
+    }
+
+    /// `tp / (tp + fn)`; 1.0 when the truth has no edges.
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            1.0
+        } else {
+            self.tp as f64 / (self.tp + self.fn_) as f64
+        }
+    }
+
+    /// Harmonic mean of precision and recall (0 when both are 0).
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("tp", Json::Int(self.tp as i64))
+            .set("fp", Json::Int(self.fp as i64))
+            .set("fn", Json::Int(self.fn_ as i64))
+            .set("precision", Json::Num(self.precision()))
+            .set("recall", Json::Num(self.recall()))
+            .set("f1", Json::Num(self.f1()))
+    }
+}
+
+/// Directed-exact comparison: a learned edge `u → v` counts as a true
+/// positive only if the truth contains `u → v` with the same orientation.
+pub fn edge_metrics(learned: &Dag, truth: &Dag) -> EdgeMetrics {
+    assert_eq!(learned.p(), truth.p());
+    let mut tp = 0;
+    let mut fp = 0;
+    for (u, v) in learned.edges() {
+        if truth.has_edge(u, v) {
+            tp += 1;
+        } else {
+            fp += 1;
+        }
+    }
+    let fn_ = truth.edge_count() - tp;
+    EdgeMetrics::from_counts(tp, fp, fn_)
+}
+
+/// CPDAG mark comparison: each skeleton edge of either CPDAG carries a
+/// mark (compelled `u → v`, compelled `v → u`, or reversible); a learned
+/// edge is a true positive iff the truth CPDAG has the same pair with the
+/// same mark. Markov-equivalent DAGs therefore score F1 = 1 against each
+/// other.
+pub fn edge_metrics_cpdag(learned: &Dag, truth: &Dag) -> EdgeMetrics {
+    assert_eq!(learned.p(), truth.p());
+    let lc = cpdag_of(learned);
+    let tc = cpdag_of(truth);
+    let p = lc.p();
+    let mut tp = 0;
+    let mut fp = 0;
+    let mut fn_ = 0;
+    for u in 0..p {
+        for v in (u + 1)..p {
+            let l_adj = lc.adjacent(u, v);
+            let t_adj = tc.adjacent(u, v);
+            if !l_adj && !t_adj {
+                continue;
+            }
+            if l_adj && !t_adj {
+                fp += 1;
+            } else if !l_adj && t_adj {
+                fn_ += 1;
+            } else {
+                let l_mark = (lc.has_directed(u, v), lc.has_directed(v, u));
+                let t_mark = (tc.has_directed(u, v), tc.has_directed(v, u));
+                if l_mark == t_mark {
+                    tp += 1;
+                } else {
+                    // present in both skeletons but mis-marked: wrong as a
+                    // prediction AND the truth edge is unrecovered
+                    fp += 1;
+                    fn_ += 1;
+                }
+            }
+        }
+    }
+    EdgeMetrics::from_counts(tp, fp, fn_)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_recovery_is_all_ones() {
+        let d = Dag::from_edges(4, &[(0, 1), (1, 2), (0, 3)]);
+        let m = edge_metrics(&d, &d);
+        assert_eq!((m.tp, m.fp, m.fn_), (3, 0, 0));
+        assert_eq!(m.precision(), 1.0);
+        assert_eq!(m.recall(), 1.0);
+        assert_eq!(m.f1(), 1.0);
+        let mc = edge_metrics_cpdag(&d, &d);
+        assert_eq!(mc.f1(), 1.0);
+    }
+
+    #[test]
+    fn hand_computed_confusion_counts() {
+        // truth: 0→1, 1→2, 2→3. learned: 0→1 (tp), 2→1 (reversed → fp),
+        // 0→3 (absent → fp). missing: 1→2, 2→3 (fn=2, reversed counts).
+        let truth = Dag::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let learned = Dag::from_edges(4, &[(0, 1), (2, 1), (0, 3)]);
+        let m = edge_metrics(&learned, &truth);
+        assert_eq!((m.tp, m.fp, m.fn_), (1, 2, 2));
+        assert!((m.precision() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.recall() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.f1() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn markov_equivalent_pair_scores_perfect_under_cpdag() {
+        // chains X→Y→Z and X←Y←Z: SHD 0 under CPDAG comparison, and the
+        // mark-based F1 must also be exactly 1.
+        let a = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let b = Dag::from_edges(3, &[(2, 1), (1, 0)]);
+        let directed = edge_metrics(&a, &b);
+        assert_eq!(directed.tp, 0, "directed-exact sees no agreement");
+        let m = edge_metrics_cpdag(&a, &b);
+        assert_eq!((m.tp, m.fp, m.fn_), (2, 0, 0));
+        assert_eq!(m.f1(), 1.0);
+        assert_eq!(crate::bn::shd_cpdag(&a, &b).total(), 0);
+    }
+
+    #[test]
+    fn v_structure_mismatch_is_charged_under_cpdag() {
+        let chain = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let collider = Dag::from_edges(3, &[(0, 1), (2, 1)]);
+        let m = edge_metrics_cpdag(&collider, &chain);
+        // both skeleton pairs present, both mis-marked
+        assert_eq!((m.tp, m.fp, m.fn_), (0, 2, 2));
+        assert_eq!(m.f1(), 0.0);
+    }
+
+    #[test]
+    fn empty_graph_conventions() {
+        let empty = Dag::empty(3);
+        let truth = Dag::from_edges(3, &[(0, 1)]);
+        let m = edge_metrics(&empty, &truth);
+        assert_eq!(m.precision(), 1.0, "no predictions, no false claims");
+        assert_eq!(m.recall(), 0.0);
+        assert_eq!(m.f1(), 0.0);
+        let both_empty = edge_metrics(&empty, &Dag::empty(3));
+        assert_eq!(both_empty.f1(), 1.0);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let d = Dag::from_edges(2, &[(0, 1)]);
+        let j = edge_metrics(&d, &d).to_json().to_string();
+        for key in ["tp", "fp", "\"fn\"", "precision", "recall", "f1"] {
+            assert!(j.contains(key), "{key} in {j}");
+        }
+    }
+}

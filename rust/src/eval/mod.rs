@@ -1,0 +1,367 @@
+//! Evaluation harness: the yardstick for structure recovery and speed.
+//!
+//! Everything else in the repo measures *bit-identity* — engine against
+//! engine, mode against mode. This module measures whether learned
+//! structures are **right** and how much they cost:
+//!
+//! * [`bif`] — parser for the benchmark-network interchange format
+//!   (asia, child, … under `examples/networks/`); parsed [`Network`]s
+//!   feed the existing seeded forward sampler, so a `.bif` file plus
+//!   `(n, seed)` is a reproducible dataset.
+//! * [`metrics`] — edge precision/recall/F1 (directed-exact and
+//!   CPDAG-aware), complementing [`crate::bn::shd`]/[`crate::bn::shd_cpdag`].
+//! * [`jaa`] — `.jaa` local-score import/export (pygobnilp/GOBNILP
+//!   interop) with a bit-exact potentials extension; the import side of
+//!   the [`crate::engine::ScoreSource`] seam.
+//! * [`run_eval`] — the `bnsl eval` pipeline: sample the ground-truth
+//!   network, learn with any engine, report SHD/F1/score/wall/heap as a
+//!   stable JSON record (`schema: "bnsl-eval/1"`).
+
+pub mod bif;
+pub mod jaa;
+mod metrics;
+
+pub use metrics::{edge_metrics, edge_metrics_cpdag, EdgeMetrics};
+
+use crate::bn::{repo, shd, shd_cpdag, Network, StructureDiff};
+use crate::cli::{validate_var_count, MaskWidth};
+use crate::engine::NativeEngine;
+use crate::score::ScoreKind;
+use crate::search::{hill_climb, pc_hill_climb, HillClimbOptions, PcOptions};
+use crate::solver::{LeveledSolver, SilanderSolver, SolveOptions, SolveResult, StreamingSolver};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// One evaluation run: ground truth, sample size, and the learner.
+#[derive(Clone, Debug)]
+pub struct EvalSpec {
+    /// Embedded network name (`asia`, `alarm`, `sachs`) or a `.bif` path.
+    pub network: String,
+    /// Rows to forward-sample from the ground truth.
+    pub n: usize,
+    /// Sampler seed (same seed → same dataset → same learned network).
+    pub seed: u64,
+    /// `leveled` | `silander` | `hillclimb` | `hybrid`.
+    pub solver: String,
+    /// Run the leveled DP in its memory-only streaming layout.
+    pub streaming: bool,
+    pub kind: ScoreKind,
+    pub threads: usize,
+}
+
+impl Default for EvalSpec {
+    fn default() -> EvalSpec {
+        EvalSpec {
+            network: "asia".into(),
+            n: 1000,
+            seed: 2024,
+            solver: "leveled".into(),
+            streaming: false,
+            kind: ScoreKind::Jeffreys,
+            threads: 1,
+        }
+    }
+}
+
+/// What [`run_eval`] produced: the stable JSON record plus the headline
+/// numbers for programmatic callers (smoke scripts, tests).
+pub struct EvalOutcome {
+    pub report: Json,
+    pub shd: StructureDiff,
+    pub shd_cpdag: StructureDiff,
+    pub edges_cpdag: EdgeMetrics,
+    pub log_score: f64,
+}
+
+/// Resolve an `EvalSpec::network` string: an embedded [`repo`] name, or
+/// a `.bif` file path. Returns a display label and the network.
+pub fn resolve_network(spec: &str) -> Result<(String, Network)> {
+    if let Some(net) = repo::by_name(spec) {
+        return Ok((spec.to_string(), net));
+    }
+    let path = Path::new(spec);
+    if path.exists() {
+        let net = bif::read_bif(path).map_err(|e| anyhow!("{e}"))?;
+        let label = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| spec.to_string());
+        return Ok((label, net));
+    }
+    bail!(
+        "unknown network '{spec}': not an embedded name (asia, alarm, \
+         sachs) and no such file"
+    );
+}
+
+fn diff_json(d: &StructureDiff) -> Json {
+    Json::obj()
+        .set("extra", Json::Int(d.extra as i64))
+        .set("missing", Json::Int(d.missing as i64))
+        .set("misoriented", Json::Int(d.misoriented as i64))
+        .set("total", Json::Int(d.total() as i64))
+}
+
+/// Sample → learn → compare. The learned-network path is exactly the
+/// CLI's native-engine solve (same width dispatch, same options), so
+/// eval numbers describe the production hot path.
+pub fn run_eval(spec: &EvalSpec) -> Result<EvalOutcome> {
+    if spec.n == 0 {
+        bail!("--n must be at least 1");
+    }
+    let (label, net) = resolve_network(&spec.network)?;
+    let data = net.sample(spec.n, spec.seed);
+    let exact = matches!(spec.solver.as_str(), "leveled" | "silander");
+    if spec.streaming && spec.solver != "leveled" {
+        bail!(
+            "--streaming is a memory layout of the leveled DP; use \
+             --solver leveled (got '{}')",
+            spec.solver
+        );
+    }
+    if !exact && !matches!(spec.solver.as_str(), "hillclimb" | "hybrid") {
+        bail!("unknown solver '{}'", spec.solver);
+    }
+    if spec.streaming && data.p() > crate::MAX_VARS_STREAMING {
+        bail!(
+            "--streaming supports p ≤ {} (got p = {})",
+            crate::MAX_VARS_STREAMING,
+            data.p()
+        );
+    }
+    let width = validate_var_count(data.p(), exact, false)?;
+    let options = SolveOptions {
+        threads: spec.threads,
+        ..Default::default()
+    };
+    let kind = spec.kind;
+    let (result, heap) = crate::memtrack::measure(|| -> Result<SolveResult> {
+        Ok(match spec.solver.as_str() {
+            "hillclimb" => {
+                let hc = hill_climb(&data, kind, &HillClimbOptions::default());
+                SolveResult {
+                    order: hc
+                        .network
+                        .topological_order()
+                        .expect("hc network is a DAG"),
+                    log_score: hc.log_score,
+                    network: hc.network,
+                    stats: Default::default(),
+                }
+            }
+            "hybrid" => {
+                let hy = pc_hill_climb(
+                    &data,
+                    kind,
+                    &PcOptions::default(),
+                    &HillClimbOptions::default(),
+                );
+                SolveResult {
+                    order: hy
+                        .search
+                        .network
+                        .topological_order()
+                        .expect("hybrid network is a DAG"),
+                    log_score: hy.search.log_score,
+                    network: hy.search.network,
+                    stats: Default::default(),
+                }
+            }
+            exact_solver => {
+                let engine = NativeEngine::new(&data, kind);
+                match (exact_solver, spec.streaming, width) {
+                    ("leveled", true, MaskWidth::Narrow) => {
+                        StreamingSolver::with_options(&engine, options).solve()
+                    }
+                    ("leveled", true, MaskWidth::Wide) => {
+                        StreamingSolver::<u64>::with_options_generic(&engine, options).solve()
+                    }
+                    ("leveled", false, MaskWidth::Narrow) => {
+                        LeveledSolver::with_options(&engine, options).solve()
+                    }
+                    ("leveled", false, MaskWidth::Wide) => {
+                        LeveledSolver::<u64>::with_options_generic(&engine, options).solve()
+                    }
+                    ("silander", _, MaskWidth::Narrow) => {
+                        SilanderSolver::with_options(&engine, options).solve()
+                    }
+                    ("silander", _, MaskWidth::Wide) => {
+                        SilanderSolver::<u64>::with_options_generic(&engine, options).solve()
+                    }
+                    _ => unreachable!("solver validated above"),
+                }
+            }
+        })
+    });
+    let result = result?;
+    let truth = net.dag();
+    let learned = &result.network;
+    let shd_plain = shd(learned, truth);
+    let shd_c = shd_cpdag(learned, truth);
+    let edges = edge_metrics(learned, truth);
+    let edges_c = edge_metrics_cpdag(learned, truth);
+    let solver_label = if spec.streaming {
+        "streaming".to_string()
+    } else {
+        spec.solver.clone()
+    };
+
+    let report = Json::obj()
+        .set("schema", "bnsl-eval/1")
+        .set("network", label.as_str())
+        .set("p", net.p())
+        .set("n", spec.n)
+        .set("seed", spec.seed)
+        .set("solver", solver_label.as_str())
+        .set("engine", "native")
+        .set("score", kind.name())
+        .set("truth_edges", truth.edge_count())
+        .set("learned_edges", learned.edge_count())
+        .set("shd", diff_json(&shd_plain))
+        .set("shd_cpdag", diff_json(&shd_c))
+        .set("edges", edges.to_json())
+        .set("edges_cpdag", edges_c.to_json())
+        .set("log_score", Json::Num(result.log_score))
+        .set("wall_secs", Json::Num(result.stats.wall.as_secs_f64()))
+        .set("peak_heap_bytes", Json::Int(heap as i64))
+        .set("score_evals", Json::Int(result.stats.score_evals as i64));
+    Ok(EvalOutcome {
+        report,
+        shd: shd_plain,
+        shd_cpdag: shd_c,
+        edges_cpdag: edges_c,
+        log_score: result.log_score,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_asia_exact_recovers_most_of_the_skeleton() {
+        let out = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 2000,
+            seed: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        // at n=2000 the exact solver finds a high-scoring structure whose
+        // CPDAG is close to the truth; the weak asia→tub edge may be
+        // missed, so allow slack without letting the metric degenerate
+        assert!(
+            out.shd_cpdag.total() <= 4,
+            "cpdag shd {} too high",
+            out.shd_cpdag.total()
+        );
+        assert!(out.edges_cpdag.f1() > 0.6, "f1 {}", out.edges_cpdag.f1());
+        assert!(out.log_score < 0.0);
+    }
+
+    #[test]
+    fn eval_report_schema_is_stable() {
+        let out = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 200,
+            seed: 7,
+            ..Default::default()
+        })
+        .unwrap();
+        let text = out.report.to_pretty();
+        for key in [
+            "\"schema\"",
+            "bnsl-eval/1",
+            "\"network\"",
+            "\"p\"",
+            "\"n\"",
+            "\"seed\"",
+            "\"solver\"",
+            "\"engine\"",
+            "\"score\"",
+            "\"truth_edges\"",
+            "\"learned_edges\"",
+            "\"shd\"",
+            "\"shd_cpdag\"",
+            "\"edges\"",
+            "\"edges_cpdag\"",
+            "\"log_score\"",
+            "\"wall_secs\"",
+            "\"peak_heap_bytes\"",
+            "\"score_evals\"",
+        ] {
+            assert!(text.contains(key), "{key} missing from report:\n{text}");
+        }
+    }
+
+    #[test]
+    fn streaming_eval_matches_resident_eval_bit_for_bit() {
+        let resident = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 300,
+            seed: 5,
+            ..Default::default()
+        })
+        .unwrap();
+        let streaming = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 300,
+            seed: 5,
+            streaming: true,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(
+            resident.log_score.to_bits(),
+            streaming.log_score.to_bits()
+        );
+        assert_eq!(resident.shd.total(), streaming.shd.total());
+    }
+
+    #[test]
+    fn exact_shd_is_no_worse_than_hillclimb_on_asia() {
+        // the eval_smoke.sh invariant, asserted here at unit scale
+        let exact = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 2000,
+            seed: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let hc = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 2000,
+            seed: 1,
+            solver: "hillclimb".into(),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(
+            exact.shd_cpdag.total() <= hc.shd_cpdag.total(),
+            "exact {} vs hillclimb {}",
+            exact.shd_cpdag.total(),
+            hc.shd_cpdag.total()
+        );
+    }
+
+    #[test]
+    fn unknown_networks_and_solvers_error() {
+        assert!(run_eval(&EvalSpec {
+            network: "nonexistent".into(),
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run_eval(&EvalSpec {
+            solver: "magic".into(),
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run_eval(&EvalSpec {
+            solver: "silander".into(),
+            streaming: true,
+            ..Default::default()
+        })
+        .is_err());
+    }
+}

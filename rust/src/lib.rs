@@ -91,6 +91,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod eval;
 pub mod memtrack;
 pub mod metrics;
 pub mod runtime;

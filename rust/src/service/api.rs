@@ -26,15 +26,21 @@ pub const MAX_BATCH: usize = 1 << 24;
 
 /// One job submission (`POST /v1/jobs`).
 ///
-/// Exactly one of `csv` (the dataset inline, as CSV text) or `path`
+/// Exactly one of `csv` (the dataset inline, as CSV text), `path`
 /// (a server-local CSV path, for datasets already on the server's
-/// storage) must be present. All other fields default.
+/// storage) or `scores` (a `.jaa` local-score file inline — no dataset
+/// at all) must be present. All other fields default.
 #[derive(Clone, Debug)]
 pub struct SubmitRequest {
     /// Inline dataset: the CSV file's full text.
     pub csv: Option<String>,
     /// Server-local dataset path (alternative to `csv`).
     pub path: Option<String>,
+    /// Inline `.jaa` score file — the dataset-free submission form; the
+    /// solver reads the table's potentials ([`crate::engine::ScoreTable`])
+    /// and the scoring function comes from the file header, so `score`
+    /// is ignored. Exact solvers only, in-RAM only (`shards` must be 1).
+    pub scores: Option<String>,
     /// Restrict to the first `p` variables (like `bnsl learn --p`).
     pub p: Option<usize>,
     /// Score name, as `bnsl learn --score` accepts it.
@@ -56,6 +62,7 @@ impl Default for SubmitRequest {
         SubmitRequest {
             csv: None,
             path: None,
+            scores: None,
             p: None,
             score: "jeffreys".to_string(),
             shards: 1,
@@ -95,6 +102,7 @@ impl SubmitRequest {
             match key.as_str() {
                 "csv" => req.csv = Some(expect_string(value, "csv")?),
                 "path" => req.path = Some(expect_string(value, "path")?),
+                "scores" => req.scores = Some(expect_string(value, "scores")?),
                 "score" => req.score = expect_string(value, "score")?,
                 "p" => {
                     let p = expect_count(&value, "p")?;
@@ -113,10 +121,23 @@ impl SubmitRequest {
                 _ => {} // unknown fields ignored (forward compatibility)
             }
         }
-        match (&req.csv, &req.path) {
-            (Some(_), Some(_)) => bail!("submit needs exactly one of 'csv' or 'path', got both"),
-            (None, None) => bail!("submit needs exactly one of 'csv' or 'path'"),
-            _ => {}
+        let sources =
+            [req.csv.is_some(), req.path.is_some(), req.scores.is_some()]
+                .iter()
+                .filter(|&&present| present)
+                .count();
+        if sources != 1 {
+            bail!(
+                "submit needs exactly one of 'csv', 'path' or 'scores' \
+                 (got {sources})"
+            );
+        }
+        if req.scores.is_some() && req.shards > 1 {
+            bail!(
+                "'scores' jobs solve from an in-RAM potentials table and \
+                 cannot shard; drop 'shards' (got {})",
+                req.shards
+            );
         }
         if req.shards == 0 || !req.shards.is_power_of_two() || req.shards > MAX_SHARDS {
             bail!(
@@ -145,6 +166,9 @@ impl SubmitRequest {
         }
         if let Some(path) = &self.path {
             doc = doc.set("path", path.as_str());
+        }
+        if let Some(scores) = &self.scores {
+            doc = doc.set("scores", scores.as_str());
         }
         if let Some(p) = self.p {
             doc = doc.set("p", p);
@@ -285,6 +309,30 @@ mod tests {
             let doc = Json::parse(text).unwrap();
             assert!(SubmitRequest::from_json(doc).is_err(), "{text}");
         }
+    }
+
+    /// Satellite (ISSUE 7): the dataset-free `scores` submission form
+    /// roundtrips and enforces its exclusions.
+    #[test]
+    fn scores_submissions_roundtrip_and_exclude_sharding() {
+        let doc = Json::parse(r#"{"scores": "# bnsl-jaa/1\n2\n"}"#).unwrap();
+        let req = SubmitRequest::from_json(doc).unwrap();
+        assert!(req.scores.is_some());
+        assert!(req.csv.is_none() && req.path.is_none());
+        let back = SubmitRequest::from_json(req.to_json()).unwrap();
+        assert_eq!(back.scores, req.scores);
+        for text in [
+            r#"{"scores": "x", "csv": "y"}"#,    // two sources
+            r#"{"scores": "x", "path": "y"}"#,   // two sources
+            r#"{"scores": "x", "shards": 2}"#,   // sharded scores job
+            r#"{"scores": 5}"#,                  // wrong type
+        ] {
+            let doc = Json::parse(text).unwrap();
+            assert!(SubmitRequest::from_json(doc).is_err(), "{text}");
+        }
+        // streaming stays allowed: it is an in-RAM layout, like the table
+        let doc = Json::parse(r#"{"scores": "x", "streaming": true}"#).unwrap();
+        assert!(SubmitRequest::from_json(doc).unwrap().streaming);
     }
 
     #[test]

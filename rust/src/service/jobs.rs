@@ -9,6 +9,7 @@
 //! <jobs-dir>/
 //!   jobs/job-000001/job.json    one ledger record per job (atomic publish)
 //!   jobs/job-000001/data.csv    the submitted dataset, byte for byte
+//!   jobs/job-000001/scores.jaa  …or the submitted score table ('scores' jobs)
 //!   runs/<fingerprint>/         the solver's sharded run (manifest.json …)
 //!   results/<fingerprint>.json  the result cache (crate::service::cache)
 //! ```
@@ -27,7 +28,9 @@
 //! # Dedup
 //!
 //! Runs and results are keyed by the dataset/score fingerprint
-//! ([`run_fingerprint`]) — the identity under which results are
+//! ([`run_fingerprint`]; `scores` jobs use the table's own
+//! [`crate::engine::ScoreTable::fingerprint`]) — the identity under
+//! which results are
 //! bit-identical whatever solver knobs a submission carries. An
 //! identical submission therefore coalesces onto the in-flight job
 //! (same id back, no new work), and a finished one is served from the
@@ -40,8 +43,8 @@ use crate::cli::MaskWidth;
 use crate::coordinator::plan::{sharded_plan, streaming_plan, Budgets};
 use crate::coordinator::shard::{run_fingerprint, ShardOptions};
 use crate::coordinator::storage::{make_backend, BackendKind, SharedBackend};
-use crate::data::{parse_csv, Dataset};
-use crate::engine::NativeEngine;
+use crate::data::parse_csv;
+use crate::engine::{NativeEngine, ScoreEngine, ScoreSource, TableEngine};
 use crate::score::ScoreKind;
 use crate::solver::{
     solve_sharded, CancelToken, ShardOutcome, SolveOptions, StreamingSolver,
@@ -109,6 +112,9 @@ struct Job {
     /// Memory-only streaming run: no run dir, no manifest; a cancel or
     /// restart re-runs from scratch.
     streaming: bool,
+    /// Dataset-free submission: the staged payload is a `.jaa` score
+    /// table ([`crate::engine::ScoreTable`]) served by the table engine.
+    scores: bool,
     error: Option<String>,
     cancel: CancelToken,
     /// True only for user cancellation (`DELETE`) — a drain also fires
@@ -192,6 +198,7 @@ struct Claim {
     threads: usize,
     batch: usize,
     streaming: bool,
+    scores: bool,
     cancel: CancelToken,
 }
 
@@ -208,10 +215,11 @@ enum PreparedMode {
     },
 }
 
-/// Output of the planning phase: everything the solve needs.
+/// Output of the planning phase: everything the solve needs. The
+/// potentials come from a [`ScoreSource`] — a revalidated dataset
+/// (native engine) or a revalidated score table (table engine).
 struct Prepared {
-    data: Dataset,
-    kind: ScoreKind,
+    source: ScoreSource,
     mode: PreparedMode,
     width: MaskWidth,
 }
@@ -343,6 +351,10 @@ impl JobManager {
         self.root.join("jobs").join(id).join("data.csv")
     }
 
+    fn scores_path(&self, id: &str) -> PathBuf {
+        self.root.join("jobs").join(id).join("scores.jaa")
+    }
+
     fn run_dir(&self, fingerprint: &str) -> PathBuf {
         self.root.join("runs").join(fingerprint)
     }
@@ -369,6 +381,7 @@ impl JobManager {
             .set("threads", job.threads)
             .set("batch", job.batch)
             .set("streaming", job.streaming)
+            .set("scores", job.scores)
             .set("backend", self.run_backend.name())
             .set(
                 "error",
@@ -411,43 +424,18 @@ impl JobManager {
     /// admission and lands in the queue.
     pub fn submit(&self, req: &SubmitRequest) -> Result<SubmitResponse, SubmitError> {
         let invalid = |e: anyhow::Error| SubmitError::Invalid(format!("{e:#}"));
-        // borrow the inline CSV instead of cloning it: a submission can
-        // be MAX_BODY_BYTES long, and the handler already holds it once
-        let csv_text: std::borrow::Cow<'_, str> = match (&req.csv, &req.path) {
-            (Some(csv), None) => std::borrow::Cow::Borrowed(csv.as_str()),
-            (None, Some(path)) => std::borrow::Cow::Owned(self.read_sandboxed(path)?),
+        // borrow the inline payload instead of cloning it: a submission
+        // can be MAX_BODY_BYTES long, and the handler already holds it
+        let payload: std::borrow::Cow<'_, str> = match (&req.csv, &req.path, &req.scores) {
+            (Some(csv), None, None) => std::borrow::Cow::Borrowed(csv.as_str()),
+            (None, Some(path), None) => std::borrow::Cow::Owned(self.read_sandboxed(path)?),
+            (None, None, Some(scores)) => std::borrow::Cow::Borrowed(scores.as_str()),
             _ => {
                 return Err(SubmitError::Invalid(
-                    "submit needs exactly one of 'csv' or 'path'".to_string(),
+                    "submit needs exactly one of 'csv', 'path' or 'scores'".to_string(),
                 ))
             }
         };
-        let kind = req.score_kind().map_err(invalid)?;
-        let mut data = parse_csv(&csv_text).map_err(invalid)?;
-        if let Some(p) = req.p {
-            if p < 1 || p > data.p() {
-                return Err(SubmitError::Invalid(format!(
-                    "p = {p} outside the dataset's 1..={} variables",
-                    data.p()
-                )));
-            }
-            data = data.take_vars(p);
-        }
-        // exact-DP caps: streaming jobs run the memory-only engine (its
-        // own, tighter wide cap), everything else the sharded solver
-        if req.streaming {
-            crate::cli::validate_var_count(data.p(), true, false).map_err(invalid)?;
-            if data.p() > crate::MAX_VARS_STREAMING {
-                return Err(SubmitError::Invalid(format!(
-                    "streaming supports p <= {} (got {}); submit without \
-                     'streaming' for the sharded solver",
-                    crate::MAX_VARS_STREAMING,
-                    data.p()
-                )));
-            }
-        } else {
-            crate::cli::validate_var_count(data.p(), true, true).map_err(invalid)?;
-        }
         // knob ceilings, re-checked here so non-HTTP callers get them
         // too: an unbounded shard count spins the planner, an unbounded
         // batch wraps its u64 pricing arithmetic past admission
@@ -475,11 +463,75 @@ impl JobManager {
                 req.shards
             )));
         }
-        let fingerprint = run_fingerprint(&data, kind);
+        let is_scores = req.scores.is_some();
+        let (fingerprint, p, n, score_name) = if is_scores {
+            // dataset-free form: parse + restrict the table now so a bad
+            // file fails the submission, not the job; the fingerprint is
+            // the table's own (covers every potential bit)
+            if req.shards > 1 {
+                return Err(SubmitError::Invalid(format!(
+                    "'scores' jobs solve from an in-RAM potentials table \
+                     and cannot shard; drop 'shards' (got {})",
+                    req.shards
+                )));
+            }
+            let table = crate::eval::jaa::parse_jaa(&payload).map_err(SubmitError::Invalid)?;
+            let table = match req.p {
+                Some(p) if p < 1 || p > table.p() => {
+                    return Err(SubmitError::Invalid(format!(
+                        "p = {p} outside the score table's 1..={} variables",
+                        table.p()
+                    )));
+                }
+                Some(p) if p < table.p() => table.restrict(p),
+                _ => table,
+            };
+            // tables are capped at MAX_VARS by construction — well inside
+            // every solver cap; validate anyway for the uniform error
+            crate::cli::validate_var_count(table.p(), true, false).map_err(invalid)?;
+            (
+                table.fingerprint(),
+                table.p(),
+                table.n(),
+                table.kind().name(),
+            )
+        } else {
+            let kind = req.score_kind().map_err(invalid)?;
+            let mut data = parse_csv(&payload).map_err(invalid)?;
+            if let Some(p) = req.p {
+                if p < 1 || p > data.p() {
+                    return Err(SubmitError::Invalid(format!(
+                        "p = {p} outside the dataset's 1..={} variables",
+                        data.p()
+                    )));
+                }
+                data = data.take_vars(p);
+            }
+            // exact-DP caps: streaming jobs run the memory-only engine
+            // (its own, tighter wide cap), the rest the sharded solver
+            if req.streaming {
+                crate::cli::validate_var_count(data.p(), true, false).map_err(invalid)?;
+                if data.p() > crate::MAX_VARS_STREAMING {
+                    return Err(SubmitError::Invalid(format!(
+                        "streaming supports p <= {} (got {}); submit without \
+                         'streaming' for the sharded solver",
+                        crate::MAX_VARS_STREAMING,
+                        data.p()
+                    )));
+                }
+            } else {
+                crate::cli::validate_var_count(data.p(), true, true).map_err(invalid)?;
+            }
+            (
+                run_fingerprint(&data, kind),
+                data.p(),
+                data.n(),
+                req.score.clone(),
+            )
+        };
         // price exactly the mode that will run (both off the lock)
-        let stream_plan = req.streaming.then(|| streaming_plan(data.p()));
-        let plan = (!req.streaming)
-            .then(|| sharded_plan(data.p(), req.shards, req.threads, req.batch));
+        let stream_plan = req.streaming.then(|| streaming_plan(p));
+        let plan = (!req.streaming).then(|| sharded_plan(p, req.shards, req.threads, req.batch));
 
         // Phase 1, under the lock: dedup/cache/admission checks and the
         // id + fingerprint reservation. The job is inserted into the
@@ -543,13 +595,14 @@ impl JobManager {
                 id: id.clone(),
                 state: JobState::Queued,
                 fingerprint: fingerprint.clone(),
-                score: req.score.clone(),
-                p: data.p(),
-                n: data.n(),
+                score: score_name.clone(),
+                p,
+                n,
                 shards: req.shards,
                 threads: req.threads,
                 batch: req.batch,
                 streaming: req.streaming,
+                scores: is_scores,
                 error: None,
                 cancel: CancelToken::new(),
                 cancel_requested: false,
@@ -565,9 +618,10 @@ impl JobManager {
         // a multi-hundred-MB CSV write must not stall status/cancel/
         // stats readers or the executors' state transitions.
         let job_dir = self.root.join("jobs").join(&id);
+        let staged_name = if is_scores { "scores.jaa" } else { "data.csv" };
         let staged = (|| -> Result<()> {
             std::fs::create_dir_all(&job_dir)?;
-            std::fs::write(job_dir.join("data.csv"), csv_text.as_bytes())?;
+            std::fs::write(job_dir.join(staged_name), payload.as_bytes())?;
             self.store
                 .publish_doc(&Self::job_key(&id), ledger_doc.to_pretty().as_bytes())
         })();
@@ -640,6 +694,7 @@ impl JobManager {
                 threads: job.threads,
                 batch: job.batch,
                 streaming: job.streaming,
+                scores: job.scores,
                 cancel: job.cancel.clone(),
             };
             let _ = self.persist_locked(job);
@@ -713,6 +768,68 @@ impl JobManager {
             Ok(None) => {}
             Err(e) => return Err(Exec::Failed(format!("result cache: {e:#}"))),
         }
+        if claim.scores {
+            // dataset-free job: reload the staged score table and solve
+            // straight off its potentials — no CSV, no count kernels
+            let staged = std::fs::read_to_string(self.scores_path(&claim.id))
+                .map_err(|e| Exec::Failed(format!("reading staged score table: {e}")))?;
+            let table = crate::eval::jaa::parse_jaa(&staged)
+                .map_err(|e| Exec::Failed(format!("parsing staged score table: {e}")))?;
+            if claim.p > table.p() {
+                return Err(Exec::Failed(format!(
+                    "staged score table has {} variables but the ledger records p = {}",
+                    table.p(),
+                    claim.p
+                )));
+            }
+            let table = if claim.p < table.p() {
+                table.restrict(claim.p)
+            } else {
+                table
+            };
+            if table.fingerprint() != claim.fingerprint {
+                return Err(Exec::Failed(
+                    "staged score table no longer matches the ledger fingerprint".to_string(),
+                ));
+            }
+            // .jaa tables are narrow by construction (p <= MAX_VARS);
+            // dispatch through the same width seam anyway
+            let width = crate::cli::validate_var_count(table.p(), true, false)
+                .map_err(|e| Exec::Failed(format!("{e:#}")))?;
+            let mode = if claim.streaming {
+                PreparedMode::Streaming {
+                    threads: claim.threads,
+                    batch: claim.batch,
+                    cancel: claim.cancel.clone(),
+                }
+            } else {
+                // shards is pinned to 1 at submit: the single-shard
+                // coordinator gives the table job a durable manifest,
+                // live progress and restart-resume for free, and its
+                // result is bit-identical to the resident solver's
+                let run_dir = self.run_dir(&claim.fingerprint);
+                let resuming = make_backend(self.run_backend, &run_dir)
+                    .ok()
+                    .and_then(|store| store.exists("manifest.json").ok())
+                    .unwrap_or(false);
+                PreparedMode::Sharded(ShardOptions {
+                    shards: if resuming { 0 } else { 1 },
+                    workers: claim.threads,
+                    batch: claim.batch,
+                    dir: run_dir,
+                    stop_after_level: None,
+                    keep_levels: false,
+                    hosts: 1,
+                    backend: self.run_backend,
+                    cancel: claim.cancel.clone(),
+                })
+            };
+            return Ok(Prepared {
+                source: ScoreSource::Table(table),
+                mode,
+                width,
+            });
+        }
         let staged = std::fs::read_to_string(self.data_path(&claim.id))
             .map_err(|e| Exec::Failed(format!("reading staged dataset: {e}")))?;
         let Some(kind) = ScoreKind::parse(&claim.score) else {
@@ -749,8 +866,7 @@ impl JobManager {
                 )));
             }
             return Ok(Prepared {
-                data,
-                kind,
+                source: ScoreSource::Data { data, kind },
                 mode: PreparedMode::Streaming {
                     threads: claim.threads,
                     batch: claim.batch,
@@ -780,8 +896,7 @@ impl JobManager {
             cancel: claim.cancel.clone(),
         };
         Ok(Prepared {
-            data,
-            kind,
+            source: ScoreSource::Data { data, kind },
             mode: PreparedMode::Sharded(options),
             width,
         })
@@ -792,10 +907,32 @@ impl JobManager {
     /// Either mode's record is bit-identical, so the fingerprint-keyed
     /// cache (and dedup) is correct across modes.
     fn run_prepared(&self, prepared: &Prepared, claim: &Claim) -> Exec {
-        let engine = NativeEngine::new(&prepared.data, prepared.kind);
+        match &prepared.source {
+            ScoreSource::Data { data, kind } => {
+                let engine = NativeEngine::new(data, *kind);
+                self.drive(&engine, &engine, data.names(), prepared, claim)
+            }
+            ScoreSource::Table(table) => {
+                let engine = TableEngine::new(table);
+                self.drive(&engine, &engine, table.names(), prepared, claim)
+            }
+        }
+    }
+
+    /// Width-erased solver loop shared by both score sources: the same
+    /// engine value is passed as its narrow and wide trait objects, and
+    /// `prepared.width` picks which one the solver instantiates over.
+    fn drive(
+        &self,
+        narrow: &(dyn ScoreEngine<u32> + Sync),
+        wide: &(dyn ScoreEngine<u64> + Sync),
+        names: &[String],
+        prepared: &Prepared,
+        claim: &Claim,
+    ) -> Exec {
         let publish = |result: crate::solver::SolveResult| {
             Counters::bump(&self.counters.solver_runs);
-            let record = result.to_json(prepared.data.names()).to_pretty();
+            let record = result.to_json(names).to_pretty();
             match self.cache.publish(&claim.fingerprint, &record) {
                 Ok(()) => Exec::Done { via_cache: false },
                 Err(e) => Exec::Failed(format!("publishing result: {e:#}")),
@@ -823,10 +960,10 @@ impl JobManager {
                 };
                 let solved = match prepared.width {
                     MaskWidth::Narrow => {
-                        StreamingSolver::with_options(&engine, options).try_solve()
+                        StreamingSolver::with_options(narrow, options).try_solve()
                     }
                     MaskWidth::Wide => {
-                        StreamingSolver::<u64>::with_options_generic(&engine, options)
+                        StreamingSolver::<u64>::with_options_generic(wide, options)
                             .try_solve()
                     }
                 };
@@ -839,8 +976,8 @@ impl JobManager {
             }
             PreparedMode::Sharded(options) => {
                 let solved = match prepared.width {
-                    MaskWidth::Narrow => solve_sharded::<u32>(&engine, options),
-                    MaskWidth::Wide => solve_sharded::<u64>(&engine, options),
+                    MaskWidth::Narrow => solve_sharded::<u32>(narrow, options),
+                    MaskWidth::Wide => solve_sharded::<u64>(wide, options),
                 };
                 match solved {
                     Ok(ShardOutcome::Complete(result)) => publish(result),
@@ -1065,6 +1202,8 @@ fn job_from_doc(doc: &Json, dir_name: &str, ledger: &std::path::Path) -> Result<
         batch: count_field("batch")?,
         // absent in pre-streaming ledgers: default to the sharded mode
         streaming: matches!(doc.get("streaming"), Some(Json::Bool(true))),
+        // absent in pre-scores ledgers: default to a dataset job
+        scores: matches!(doc.get("scores"), Some(Json::Bool(true))),
         error: doc
             .get("error")
             .and_then(Json::as_str)
@@ -1178,6 +1317,56 @@ mod tests {
         let doc = Json::parse(&record).unwrap();
         let served = doc.get("log_score").unwrap().as_f64().unwrap();
         assert_eq!(served.to_bits(), direct.log_score.to_bits());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Tentpole (ISSUE 7): a dataset-free `scores` submission solves
+    /// the staged `.jaa` table through the same executor and publishes
+    /// a result bit-identical to the dataset-backed job's.
+    #[test]
+    fn scores_job_solves_identically_to_its_dataset_job() {
+        let root = temp_root("scores");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::random(7, 70, 3, &mut crate::util::rng::Rng::new(11));
+        let text = csv_text(&d);
+        let a = mgr.submit(&inline_request(&text, 1)).unwrap();
+        assert!(mgr.run_one());
+        // export the same dataset's table and submit it dataset-free;
+        // the table fingerprint differs from the run fingerprint, so
+        // this is a fresh job, not a dedup hit
+        let table = crate::engine::ScoreTable::compute(&d, ScoreKind::Jeffreys);
+        let jaa = crate::eval::jaa::export_jaa(&table);
+        let b = mgr
+            .submit(&SubmitRequest {
+                scores: Some(jaa),
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(!b.deduped && !b.cached);
+        assert!(mgr.run_one(), "scores job queued");
+        assert_eq!(mgr.solver_runs(), 2, "both jobs really solved");
+        let status = mgr.status_json(&b.id).unwrap().to_pretty();
+        assert!(status.contains("\"scores\": true"), "{status}");
+        let rec_a = mgr.result_text(&a.id).unwrap().expect("dataset result");
+        let rec_b = mgr.result_text(&b.id).unwrap().expect("scores result");
+        let doc_a = Json::parse(&rec_a).unwrap();
+        let doc_b = Json::parse(&rec_b).unwrap();
+        let score_a = doc_a.get("log_score").unwrap().as_f64().unwrap();
+        let score_b = doc_b.get("log_score").unwrap().as_f64().unwrap();
+        assert_eq!(score_a.to_bits(), score_b.to_bits());
+        assert_eq!(
+            doc_a.get("network").unwrap().to_string(),
+            doc_b.get("network").unwrap().to_string()
+        );
+        // sharding a scores job is refused at submission
+        match mgr.submit(&SubmitRequest {
+            scores: Some(crate::eval::jaa::export_jaa(&table)),
+            shards: 2,
+            ..Default::default()
+        }) {
+            Err(SubmitError::Invalid(msg)) => assert!(msg.contains("shard"), "{msg}"),
+            other => panic!("expected invalid, got {other:?}"),
+        }
         let _ = std::fs::remove_dir_all(&root);
     }
 

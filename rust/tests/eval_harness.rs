@@ -1,0 +1,197 @@
+//! Integration tests for the evaluation harness (ISSUE 7): the committed
+//! `.bif` fixtures against the embedded networks, sampler properties,
+//! `.jaa` interop through real files, and the dataset-vs-score-table
+//! bit-identity guarantee at both mask widths.
+
+use bnsl::bn::{repo, shd_cpdag, Dag};
+use bnsl::data::Dataset;
+use bnsl::engine::{NativeEngine, ScoreTable, TableEngine};
+use bnsl::eval::{bif, edge_metrics, edge_metrics_cpdag, jaa};
+use bnsl::score::ScoreKind;
+use bnsl::solver::LeveledSolver;
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/networks")
+        .join(name)
+}
+
+/// Satellite (ISSUE 7): the committed asia fixture IS the embedded
+/// network — names, arities, structure and every CPT literal, bit for
+/// bit. Equal CPTs imply equal joint log-probabilities; over all 2^8
+/// joint states that is a complete comparison.
+#[test]
+fn asia_bif_golden_matches_embedded_network() {
+    let parsed = bif::read_bif(&fixture("asia.bif")).unwrap();
+    let embedded = repo::asia();
+    assert_eq!(parsed.names(), embedded.names());
+    assert_eq!(parsed.arities(), embedded.arities());
+    assert_eq!(parsed.dag().edges(), embedded.dag().edges());
+    let mut sample = [0u8; 8];
+    for code in 0..(1u16 << 8) {
+        for (x, s) in sample.iter_mut().enumerate() {
+            *s = ((code >> x) & 1) as u8;
+        }
+        assert_eq!(
+            parsed.log_prob(&sample).to_bits(),
+            embedded.log_prob(&sample).to_bits(),
+            "joint state {code:#010b}"
+        );
+    }
+    // and therefore identical seeded samples
+    assert_eq!(parsed.sample(200, 7), embedded.sample(200, 7));
+}
+
+/// Satellite (ISSUE 7): the CHILD fixture carries the published shape —
+/// 20 nodes, 25 arcs, published arities — and is a well-formed DAG.
+#[test]
+fn child_bif_has_the_published_shape() {
+    let net = bif::read_bif(&fixture("child.bif")).unwrap();
+    assert_eq!(net.p(), 20);
+    assert_eq!(net.dag().edge_count(), 25);
+    assert_eq!(
+        net.arities(),
+        &[2, 6, 3, 2, 3, 4, 3, 3, 2, 2, 3, 3, 5, 2, 2, 3, 3, 2, 5, 2]
+    );
+    assert!(net.dag().topological_order().is_some());
+    let idx = |name: &str| {
+        net.names()
+            .iter()
+            .position(|n| n == name)
+            .unwrap_or_else(|| panic!("{name} missing"))
+    };
+    for (a, b) in [
+        ("BirthAsphyxia", "Disease"),
+        ("Disease", "LungParench"),
+        ("LungParench", "ChestXray"),
+        ("ChestXray", "XrayReport"),
+        ("HypoxiaInO2", "LowerBodyO2"),
+    ] {
+        assert!(net.dag().has_edge(idx(a), idx(b)), "{a} -> {b} missing");
+    }
+}
+
+/// Satellite (ISSUE 7, sampler properties): same seed → identical
+/// dataset, different seed → different dataset, and the dataset's
+/// column order / names / arities follow the `.bif` declaration.
+#[test]
+fn sampler_is_deterministic_and_declaration_shaped() {
+    let net = bif::read_bif(&fixture("asia.bif")).unwrap();
+    let d = net.sample(1000, 11);
+    assert_eq!(net.sample(1000, 11), d);
+    assert_ne!(net.sample(1000, 12), d);
+    assert_eq!(d.n(), 1000);
+    assert_eq!(
+        d.names(),
+        &["asia", "tub", "smoke", "lung", "bronc", "either", "xray", "dysp"]
+            .map(String::from)
+    );
+    assert_eq!(d.arities(), net.arities());
+    for i in 0..d.n() {
+        for v in 0..d.p() {
+            assert!(d.value(i, v) < net.arities()[v]);
+        }
+    }
+}
+
+/// Satellite (ISSUE 7, sampler properties): root marginals converge to
+/// the CPT priors at large n (law of large numbers; the tolerances are
+/// ~6 sigma, so a correct sampler virtually never trips them).
+#[test]
+fn root_marginals_converge_to_cpt_priors() {
+    let net = bif::read_bif(&fixture("asia.bif")).unwrap();
+    let n = 20_000;
+    let d = net.sample(n, 9);
+    let frac_yes = |v: usize| -> f64 {
+        (0..n).filter(|&i| d.value(i, v) == 1).count() as f64 / n as f64
+    };
+    // smoke ~ Bernoulli(0.5): sigma = 0.0035
+    assert!((frac_yes(2) - 0.5).abs() < 0.022, "smoke {}", frac_yes(2));
+    // asia ~ Bernoulli(0.01): sigma = 0.0007
+    assert!((frac_yes(0) - 0.01).abs() < 0.0045, "asia {}", frac_yes(0));
+}
+
+/// Tentpole (ISSUE 7): `.jaa` export → file → import → export is
+/// byte-stable, and the imported table solves bit-identically to the
+/// dataset it came from — on the narrow AND the wide mask path.
+#[test]
+fn jaa_file_roundtrip_solves_bit_identically_at_both_widths() {
+    let net = repo::asia();
+    let data = net.sample(600, 3);
+    let table = ScoreTable::compute(&data, ScoreKind::Jeffreys);
+    let text = jaa::export_jaa(&table);
+
+    let dir = std::env::temp_dir().join(format!("bnsl_eval_jaa_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("asia.jaa");
+    std::fs::write(&path, &text).unwrap();
+    let imported = jaa::read_jaa(&path).unwrap();
+    assert_eq!(jaa::export_jaa(&imported), text, "roundtrip byte-stable");
+    assert_eq!(imported.fingerprint(), table.fingerprint());
+
+    let native = NativeEngine::new(&data, ScoreKind::Jeffreys);
+    let from_table = TableEngine::new(&imported);
+    let a32 = LeveledSolver::new(&native).solve();
+    let b32 = LeveledSolver::new(&from_table).solve();
+    assert_eq!(a32.log_score.to_bits(), b32.log_score.to_bits());
+    assert_eq!(a32.network, b32.network);
+    assert_eq!(a32.order, b32.order);
+    let a64 = LeveledSolver::<u64>::new_generic(&native).solve();
+    let b64 = LeveledSolver::<u64>::new_generic(&from_table).solve();
+    assert_eq!(a64.log_score.to_bits(), b64.log_score.to_bits());
+    assert_eq!(a64.network, b64.network);
+    assert_eq!(a32.log_score.to_bits(), a64.log_score.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite (ISSUE 7, metrics): hand-computed confusion counts on a
+/// small fixture, and a Markov-equivalent pair scoring SHD 0 / F1 1
+/// under CPDAG comparison while the directed comparison charges it.
+#[test]
+fn metrics_agree_with_hand_computed_fixtures() {
+    // truth: 0->1, 1->2   learned: 0->1, 2->1, 0->3
+    let truth = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+    let learned = Dag::from_edges(4, &[(0, 1), (2, 1), (0, 3)]);
+    let m = edge_metrics(&learned, &truth);
+    assert_eq!((m.tp, m.fp, m.fn_), (1, 2, 1));
+    assert!((m.precision() - 1.0 / 3.0).abs() < 1e-12);
+    assert!((m.recall() - 0.5).abs() < 1e-12);
+
+    // chain vs reversed chain: same skeleton, no v-structures — Markov
+    // equivalent, so CPDAG comparison is perfect
+    let chain = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+    let reversed = Dag::from_edges(3, &[(2, 1), (1, 0)]);
+    assert_eq!(shd_cpdag(&reversed, &chain).total(), 0);
+    let mc = edge_metrics_cpdag(&reversed, &chain);
+    assert_eq!((mc.tp, mc.fp, mc.fn_), (2, 0, 0));
+    assert!((mc.f1() - 1.0).abs() < 1e-12);
+    // the directed comparison must NOT call them equal
+    assert!(edge_metrics(&reversed, &chain).tp == 0);
+}
+
+/// Tentpole (ISSUE 7): learning CHILD data from an exported score table
+/// matches the dataset-backed solve — the interop path is exercised on
+/// a fixture with non-binary arities, loaded from the committed file.
+#[test]
+fn child_fixture_scores_solve_matches_dataset_solve() {
+    let net = bif::read_bif(&fixture("child.bif")).unwrap();
+    let full = net.sample(400, 21);
+    // restrict to the first 12 variables to keep the exact solve quick
+    let p = 12;
+    let data = Dataset::new(
+        full.names()[..p].to_vec(),
+        full.arities()[..p].to_vec(),
+        (0..p)
+            .map(|v| (0..full.n()).map(|i| full.value(i, v)).collect())
+            .collect(),
+    );
+    let table = ScoreTable::compute(&data, ScoreKind::Bdeu { ess: 1.0 });
+    let imported = jaa::parse_jaa(&jaa::export_jaa(&table)).unwrap();
+    let native = NativeEngine::new(&data, ScoreKind::Bdeu { ess: 1.0 });
+    let engine = TableEngine::new(&imported);
+    let a = LeveledSolver::new(&native).solve();
+    let b = LeveledSolver::new(&engine).solve();
+    assert_eq!(a.log_score.to_bits(), b.log_score.to_bits());
+    assert_eq!(a.network, b.network);
+}

@@ -18,6 +18,12 @@ Options:
                          >25% regression must fail, a 10% wobble must
                          pass, and a missing bench must fail. Run in CI
                          so the gate itself cannot silently rot.
+    --prove-armed        demonstrate on a REAL fresh artifact (CURRENT)
+                         that the gate is armed: derive a calibrated
+                         baseline from it, inject a 30% regression into
+                         one wall and one heap metric, and require the
+                         gate to fail both at 0.25 tolerance (and pass
+                         unperturbed). Exit 1 if any step disagrees.
 
 Exit status: 0 = no regression, 1 = regression / missing bench /
 unreadable input.
@@ -30,6 +36,11 @@ assembled by tools/bench_smoke.sh):
     scoring.<metric>      from the `scoring` bench record
     streaming.<metric>    from the `streaming` bench record (the
                           streaming-vs-resident wall + heap undercut)
+    scaling.p<P>.<mode>.<metric>
+                          one per (p, mode) row of the `scaling` bench
+                          (modes resident/streaming/spill/sharded;
+                          wall_secs gated as wall, heap_peak_bytes as
+                          heap)
 
 Wall-clock metrics are compared with --tolerance-wall (shared CI runners
 are noisy); heap peaks come from the deterministic tracking allocator
@@ -81,6 +92,10 @@ STREAMING_METRICS = {
     "streaming_heap_peak_bytes": HEAP,
     "leveled_heap_peak_bytes": HEAP,
 }
+SCALING_METRICS = {
+    "wall_secs": WALL,
+    "heap_peak_bytes": HEAP,
+}
 
 
 def flatten(doc):
@@ -106,6 +121,14 @@ def flatten(doc):
         for name, cls in metrics.items():
             if name in record:
                 out[f"{section}.{name}"] = (record[name], cls)
+    scaling = doc.get("scaling") or {}
+    for row in scaling.get("rows", []):
+        p, mode = row.get("p"), row.get("mode")
+        if p is None or mode is None:
+            continue
+        for name, cls in SCALING_METRICS.items():
+            if name in row:
+                out[f"scaling.p{p}.{mode}.{name}"] = (row[name], cls)
     return out
 
 
@@ -206,6 +229,78 @@ def update_baseline(current_doc, baseline_path):
     print(f"baseline updated: {baseline_path}")
 
 
+def prove_armed(current_doc, current_path):
+    """Acceptance proof on a REAL artifact: a calibrated baseline derived
+    from the fresh run must pass unperturbed and FAIL once a 30% wall (or
+    heap) regression is injected, at the default 0.25 tolerances. This is
+    the end-to-end demonstration that the gate is armed — the self-test
+    covers the comparator logic, this covers the real artifact's shape."""
+    tol = {WALL: 0.25, HEAP: 0.25}
+    metrics = flatten(current_doc)
+    numeric = {
+        name: (value, cls)
+        for name, (value, cls) in metrics.items()
+        if isinstance(value, (int, float)) and not isinstance(value, bool) and value
+    }
+    picks = {}
+    for cls in (WALL, HEAP):
+        for name, (value, vcls) in sorted(numeric.items()):
+            if vcls == cls:
+                picks[cls] = name
+                break
+    if set(picks) != {WALL, HEAP}:
+        print(
+            f"FAIL: {current_path} has no gateable "
+            f"{'wall' if WALL not in picks else 'heap'} metric — the gate "
+            f"cannot arm on this artifact",
+            file=sys.stderr,
+        )
+        return 1
+    failures, _ = compare(current_doc, current_doc, tol)
+    if failures:
+        print(
+            f"FAIL: {current_path} does not pass against itself: {failures}",
+            file=sys.stderr,
+        )
+        return 1
+
+    def inject(name, factor):
+        """A copy of CURRENT with metric `name` scaled by `factor`."""
+        doc = json.loads(json.dumps(current_doc))
+        parts = name.split(".")
+        if parts[0] == "spill":
+            p = int(parts[1][1:])
+            for row in doc["spill"]["rows"]:
+                if row.get("p") == p:
+                    row[parts[2]] *= factor
+        elif parts[0] == "scaling":
+            p, mode = int(parts[1][1:]), parts[2]
+            for row in doc["scaling"]["rows"]:
+                if row.get("p") == p and row.get("mode") == mode:
+                    row[parts[3]] *= factor
+        else:
+            doc[parts[0]][parts[1]] *= factor
+        return doc
+
+    for cls, name in sorted(picks.items()):
+        regressed = inject(name, 1.30)
+        failures, _ = compare(regressed, current_doc, tol)
+        hit = [f for f in failures if f.startswith(f"{name}:")]
+        if not hit:
+            print(
+                f"FAIL: injected +30% {cls} regression on {name} was NOT "
+                f"caught — the gate is not armed",
+                file=sys.stderr,
+            )
+            return 1
+        print(f"  armed: +30% on {name} caught ({hit[0]})")
+    print(
+        f"prove-armed OK: {current_path} passes clean; injected 30% wall and "
+        f"heap regressions both fail the gate at ±25% tolerance"
+    )
+    return 0
+
+
 def self_test():
     base = {
         "levels": {
@@ -218,6 +313,12 @@ def self_test():
         "streaming": {
             "streaming_ns_per_subset": 120.0,
             "streaming_heap_peak_bytes": 700_000,
+        },
+        "scaling": {
+            "rows": [
+                {"p": 12, "mode": "resident", "wall_secs": 0.8, "heap_peak_bytes": 400_000},
+                {"p": 12, "mode": "sharded", "wall_secs": 1.6, "heap_peak_bytes": 300_000},
+            ]
         },
     }
     tol = {WALL: 0.25, HEAP: 0.25}
@@ -261,6 +362,23 @@ def self_test():
     failures, _ = compare(partial, base, tol)
     assert failures, "a missing streaming bench must fail"
 
+    # scaling rows gate per (p, mode) point, both classes
+    bad = json.loads(json.dumps(base))
+    bad["scaling"]["rows"][0]["wall_secs"] = 1.1
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a scaling wall regression must fail"
+    bad = json.loads(json.dumps(base))
+    bad["scaling"]["rows"][1]["heap_peak_bytes"] = 450_000
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a scaling heap regression must fail"
+    partial = json.loads(json.dumps(base))
+    partial["scaling"]["rows"] = partial["scaling"]["rows"][:1]
+    failures, _ = compare(partial, base, tol)
+    assert failures, "a vanished scaling point must fail"
+
+    # --prove-armed accepts a healthy artifact and catches injections
+    assert prove_armed(json.loads(json.dumps(base)), "<self-test>") == 0
+
     # an uncalibrated (null) baseline checks presence but not value
     nulls = json.loads(json.dumps(base))
     nulls["levels"]["narrow_ns_per_subset"] = None
@@ -289,6 +407,8 @@ def main(argv):
     for arg in it:
         if arg == "--self-test":
             flags["self_test"] = True
+        elif arg == "--prove-armed":
+            flags["prove_armed"] = True
         elif arg == "--update":
             flags["update"] = True
         elif arg in ("--tolerance-wall", "--tolerance-heap"):
@@ -301,6 +421,8 @@ def main(argv):
     current_path = positional[0] if positional else "BENCH_ci.json"
     baseline_path = positional[1] if len(positional) > 1 else "BENCH_baseline.json"
     current_doc = load(current_path)
+    if flags.get("prove_armed"):
+        return prove_armed(current_doc, current_path)
     if flags.get("update"):
         update_baseline(current_doc, baseline_path)
         return 0

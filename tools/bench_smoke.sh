@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Quick-mode perf smoke (CI `bench-smoke` job; runnable locally): run the
-# `levels`, `spill`, `scoring` and `streaming` benches at CI-sized
-# configurations and assemble BENCH_ci.json — wall time + memtrack heap
-# peak per configuration — so the repo's perf trajectory accumulates
-# data points as an uploaded artifact per commit (and
+# `levels`, `spill`, `scoring`, `streaming` and `scaling` benches at
+# CI-sized configurations and assemble BENCH_ci.json — wall time +
+# memtrack heap peak per configuration — so the repo's perf trajectory
+# accumulates data points as an uploaded artifact per commit (and
 # tools/bench_compare.py gates regressions against the committed
-# BENCH_baseline.json).
+# BENCH_baseline.json). The scaling bench's wall/heap-vs-p rows are also
+# flattened into BENCH_scaling.csv next to OUT — the plottable
+# scaling-curve artifact.
 #
 # Failure honesty: a bench exiting nonzero must fail the job, and a
 # stale record from an earlier run must never be assembled into the
@@ -17,14 +19,18 @@
 set -euo pipefail
 
 OUT="${1:-BENCH_ci.json}"
+CSV="${OUT%.json}_scaling.csv"
+[ "$CSV" = "$OUT" ] && CSV="${OUT}.scaling.csv"
 
 LEVELS_JSON="bench_levels.json"
 SPILL_JSON="results/spill.json"
 SCORING_JSON="bench_scoring.json"
 STREAMING_JSON="bench_streaming.json"
+SCALING_JSON="bench_scaling.json"
 
 # never assemble a stale record into a "fresh" artifact
-rm -f "$OUT" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" "$STREAMING_JSON"
+rm -f "$OUT" "$CSV" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" \
+    "$STREAMING_JSON" "$SCALING_JSON"
 
 # levels + streaming: full analytic plan at p = 20 + quick timed solves
 # at a container-feasible size (the streaming bench *asserts* the heap
@@ -32,6 +38,9 @@ rm -f "$OUT" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" "$STREAMING_JSON"
 export BNSL_P=20 BNSL_SOLVE_P=14 BNSL_N=64
 # spill: two small configurations through the §5.3 disk path
 export BNSL_PMIN=14 BNSL_PMAX=15 BNSL_THRESHOLD=0.5
+# scaling: the wall/heap-vs-p curve across all four execution modes
+# (each point asserts bit-identity with the resident optimum)
+export BNSL_SCALING_PS=10,12,14
 
 run_bench() {
     local name="$1" expect="$2"
@@ -54,17 +63,22 @@ export BNSL_BENCH_JSON="$SCORING_JSON"
 run_bench scoring "$SCORING_JSON"
 export BNSL_BENCH_JSON="$STREAMING_JSON"
 run_bench streaming "$STREAMING_JSON"
+export BNSL_BENCH_JSON="$SCALING_JSON"
+run_bench scaling "$SCALING_JSON"
 
-python3 - "$OUT" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" "$STREAMING_JSON" <<'EOF'
+python3 - "$OUT" "$CSV" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" \
+    "$STREAMING_JSON" "$SCALING_JSON" <<'EOF'
 import json, pathlib, sys
 
-out, levels_path, spill_path, scoring_path, streaming_path = sys.argv[1:6]
+out, csv_out, levels_path, spill_path, scoring_path, streaming_path, \
+    scaling_path = sys.argv[1:8]
 doc = {"schema": "bnsl-bench-smoke/1"}
 for key, path in (
     ("levels", levels_path),
     ("spill", spill_path),
     ("scoring", scoring_path),
     ("streaming", streaming_path),
+    ("scaling", scaling_path),
 ):
     try:
         with open(path) as f:
@@ -74,4 +88,17 @@ for key, path in (
         sys.exit(1)
 pathlib.Path(out).write_text(json.dumps(doc, indent=2) + "\n")
 print(f"wrote {out}")
+
+# the plottable scaling-curve artifact: one CSV row per (p, mode) point
+rows = doc["scaling"].get("rows", [])
+if not rows:
+    print("FAIL: scaling bench produced no rows", file=sys.stderr)
+    sys.exit(1)
+lines = ["p,mode,wall_secs,heap_peak_bytes"]
+for row in rows:
+    lines.append(
+        f"{row['p']},{row['mode']},{row['wall_secs']},{row['heap_peak_bytes']}"
+    )
+pathlib.Path(csv_out).write_text("\n".join(lines) + "\n")
+print(f"wrote {csv_out} ({len(rows)} scaling points)")
 EOF

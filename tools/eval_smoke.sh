@@ -1,0 +1,95 @@
+#!/usr/bin/env bash
+# Eval-harness smoke (CI `eval` job; runnable locally): drive the
+# released binary end-to-end through the benchmark zoo —
+#
+#   1. `bnsl eval` on the committed asia.bif fixture with the exact
+#      solver, its streaming layout, and hill climbing;
+#   2. assert the stable report schema (bnsl-eval/1) on every record;
+#   3. assert exact-solver structure recovery is no worse than hill
+#      climbing (SHD over CPDAGs), and streaming == resident bit-for-bit;
+#   4. round-trip `bnsl scores` → `bnsl learn --scores` and assert the
+#      dataset-free solve is bit-identical to the dataset-backed one.
+#
+# Usage: tools/eval_smoke.sh [path/to/bnsl]   (default target/release/bnsl)
+set -euo pipefail
+
+BIN="${1:-target/release/bnsl}"
+if [ ! -x "$BIN" ]; then
+    echo "FAIL: $BIN not found or not executable (build with: cargo build --release)" >&2
+    exit 1
+fi
+
+WORK="$(mktemp -d)"
+trap 'rm -rf "$WORK"' EXIT
+
+NET=examples/networks/asia.bif
+N=5000
+SEED=1
+
+"$BIN" eval --network "$NET" --n "$N" --seed "$SEED" --out "$WORK/eval_exact.json"
+"$BIN" eval --network "$NET" --n "$N" --seed "$SEED" --streaming --out "$WORK/eval_streaming.json"
+"$BIN" eval --network "$NET" --n "$N" --seed "$SEED" --solver hillclimb --out "$WORK/eval_hc.json"
+
+# scores interop on the same fixture-sampled data
+"$BIN" scores --network "$NET" --n 500 --seed 3 --out "$WORK/asia.jaa"
+"$BIN" learn --network "$NET" --n 500 --seed 3 --out "$WORK/direct.json"
+"$BIN" learn --scores "$WORK/asia.jaa" --out "$WORK/via_scores.json"
+
+python3 - "$WORK" <<'EOF'
+import json, sys
+
+work = sys.argv[1]
+
+def load(name):
+    with open(f"{work}/{name}") as f:
+        return json.load(f)
+
+exact = load("eval_exact.json")
+streaming = load("eval_streaming.json")
+hc = load("eval_hc.json")
+
+# 2. stable schema on every eval record
+KEYS = [
+    "schema", "network", "p", "n", "seed", "solver", "engine", "score",
+    "truth_edges", "learned_edges", "shd", "shd_cpdag", "edges",
+    "edges_cpdag", "log_score", "wall_secs", "peak_heap_bytes",
+    "score_evals",
+]
+for tag, doc in (("exact", exact), ("streaming", streaming), ("hillclimb", hc)):
+    missing = [k for k in KEYS if k not in doc]
+    assert not missing, f"{tag}: missing report keys {missing}"
+    assert doc["schema"] == "bnsl-eval/1", f"{tag}: schema {doc['schema']!r}"
+    assert doc["network"] == "asia" and doc["p"] == 8, f"{tag}: wrong network"
+    for diff in (doc["shd"], doc["shd_cpdag"]):
+        assert diff["total"] == diff["extra"] + diff["missing"] + diff["misoriented"]
+
+# 3. the exact solver is globally optimal: its score is >= hill climbing's
+#    and its recovery (CPDAG SHD) must be no worse on this workload
+assert exact["log_score"] >= hc["log_score"], (
+    f"exact {exact['log_score']} < hillclimb {hc['log_score']}: "
+    "the 'globally optimal' solver lost to a local search"
+)
+assert exact["shd_cpdag"]["total"] <= hc["shd_cpdag"]["total"], (
+    f"exact SHD {exact['shd_cpdag']['total']} worse than "
+    f"hillclimb {hc['shd_cpdag']['total']}"
+)
+# streaming is the same DP in another memory layout: identical learning
+# (floats compare exactly: JSON carries shortest-roundtrip decimals)
+assert exact["log_score"] == streaming["log_score"], "streaming drifted"
+assert exact["shd"] == streaming["shd"]
+assert exact["learned_edges"] == streaming["learned_edges"]
+
+# 4. dataset-free solve from the exported .jaa is bit-identical
+direct = load("direct.json")
+via = load("via_scores.json")
+assert direct["log_score"] == via["log_score"], (
+    f"scores path diverged: {direct['log_score']} vs {via['log_score']}"
+)
+assert direct["network"] == via["network"], "scores path learned a different DAG"
+
+print(
+    f"eval smoke OK: exact shd_cpdag={exact['shd_cpdag']['total']} "
+    f"<= hillclimb {hc['shd_cpdag']['total']}; streaming bit-identical; "
+    f".jaa roundtrip bit-identical"
+)
+EOF

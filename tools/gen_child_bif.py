@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""One-off generator for examples/networks/child.bif.
+
+Published CHILD structure (Spiegelhalter et al. 1993): 20 nodes, 25 arcs,
+published arities and state labels (sanitized to the repo's .bif token
+grammar). CPTs are representative seeded draws, not the published tables
+(the repo uses CHILD for structure-recovery and scaling work, where only
+(structure, arities) matter); every row sums to exactly 1 in decimal.
+"""
+import random
+
+rng = random.Random(20260808)
+
+# name -> states (sanitized: no  { } ( ) [ ] , ; | = /  characters)
+VARS = [
+    ("BirthAsphyxia", ["yes", "no"]),
+    ("Disease", ["PFC", "TGA", "Fallot", "PAIVS", "TAPVD", "Lung"]),
+    ("Age", ["age0to3days", "age4to10days", "age11to30days"]),
+    ("LVH", ["yes", "no"]),
+    ("DuctFlow", ["LtToRt", "None", "RtToLt"]),
+    ("CardiacMixing", ["None", "Mild", "Complete", "Transparent"]),
+    ("LungParench", ["Normal", "Congested", "Abnormal"]),
+    ("LungFlow", ["Normal", "Low", "High"]),
+    ("Sick", ["yes", "no"]),
+    ("HypDistrib", ["Equal", "Unequal"]),
+    ("HypoxiaInO2", ["Mild", "Moderate", "Severe"]),
+    ("CO2", ["Normal", "Low", "High"]),
+    ("ChestXray", ["Normal", "Oligaemic", "Plethoric", "GrdGlass", "AsyPatchy"]),
+    ("Grunting", ["yes", "no"]),
+    ("LVHreport", ["yes", "no"]),
+    ("LowerBodyO2", ["lt5", "from5to12", "over12"]),
+    ("RUQO2", ["lt5", "from5to12", "over12"]),
+    ("CO2Report", ["lt7p5", "gte7p5"]),
+    ("XrayReport", ["Normal", "Oligaemic", "Plethoric", "GrdGlass", "AsyPatchy"]),
+    ("GruntingReport", ["yes", "no"]),
+]
+
+ARCS = [
+    ("BirthAsphyxia", "Disease"),
+    ("Disease", "Age"),
+    ("Disease", "LVH"),
+    ("Disease", "DuctFlow"),
+    ("Disease", "CardiacMixing"),
+    ("Disease", "LungParench"),
+    ("Disease", "LungFlow"),
+    ("Disease", "Sick"),
+    ("LVH", "LVHreport"),
+    ("DuctFlow", "HypDistrib"),
+    ("CardiacMixing", "HypDistrib"),
+    ("CardiacMixing", "HypoxiaInO2"),
+    ("LungParench", "HypoxiaInO2"),
+    ("LungParench", "CO2"),
+    ("LungParench", "ChestXray"),
+    ("LungParench", "Grunting"),
+    ("LungFlow", "ChestXray"),
+    ("Sick", "Grunting"),
+    ("Sick", "Age"),
+    ("HypDistrib", "LowerBodyO2"),
+    ("HypoxiaInO2", "LowerBodyO2"),
+    ("HypoxiaInO2", "RUQO2"),
+    ("CO2", "CO2Report"),
+    ("ChestXray", "XrayReport"),
+    ("Grunting", "GruntingReport"),
+]
+assert len(ARCS) == 25
+
+states = dict(VARS)
+order = [n for n, _ in VARS]
+parents = {n: [p for p, c in ARCS if c == n] for n in order}
+
+
+def row(k, peaked_at=None):
+    """k probabilities in thousandths summing to exactly 1.000."""
+    w = [rng.random() + 0.05 for _ in range(k)]
+    if peaked_at is not None:
+        w[peaked_at] += 2.5  # identifiable CPTs: one state dominates
+    total = sum(w)
+    milli = [max(1, round(1000 * x / total)) for x in w]
+    milli[-1] += 1000 - sum(milli)
+    if milli[-1] < 1:  # rebalance from the largest entry
+        big = milli.index(max(milli[:-1]))
+        milli[big] += milli[-1] - 1
+        milli[-1] = 1
+    assert sum(milli) == 1000 and all(m >= 1 for m in milli)
+    return ", ".join(f"{m / 1000:.3f}" for m in milli)
+
+
+def configs(pas):
+    """Parent configurations, last parent fastest (bif convention)."""
+    out = [[]]
+    for pa in pas:
+        out = [c + [s] for c in out for s in states[pa]]
+    return out
+
+
+lines = [
+    "// CHILD network (Spiegelhalter et al. 1993): published 20-node /",
+    "// 25-arc structure and arities; CPTs are representative seeded",
+    "// draws, not the published tables (see tools note in the generator",
+    "// header) -- rows sum to exactly 1. Regenerate: python3 tools/gen_child_bif.py",
+    "network child {",
+    "}",
+]
+for name, sts in VARS:
+    lines.append(f"variable {name} {{")
+    lines.append(f"  type discrete [ {len(sts)} ] {{ {', '.join(sts)} }};")
+    lines.append("}")
+for name in order:
+    k = len(states[name])
+    pas = parents[name]
+    if not pas:
+        lines.append(f"probability ( {name} ) {{")
+        lines.append(f"  table {row(k, peaked_at=rng.randrange(k))};")
+        lines.append("}")
+    else:
+        lines.append(f"probability ( {name} | {', '.join(pas)} ) {{")
+        for cfg in configs(pas):
+            lines.append(
+                f"  ({', '.join(cfg)}) {row(k, peaked_at=rng.randrange(k))};"
+            )
+        lines.append("}")
+
+with open("/root/repo/examples/networks/child.bif", "w") as fh:
+    fh.write("\n".join(lines) + "\n")
+print(f"wrote child.bif: {len(order)} vars, {len(ARCS)} arcs")
