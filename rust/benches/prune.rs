@@ -1,0 +1,169 @@
+//! Bench — the bounds layer (ISSUE 8): the pruned solve must land on
+//! the dense optimum bit for bit while actually skipping record
+//! emission. Runs the resident and the sharded solver with pruning off
+//! and on at the same configuration, asserts bit-identity and a nonzero
+//! measured prune ratio, and reports the ratio plus the on-disk shard
+//! footprint of both sharded runs.
+//!
+//! The prune ratio is data-dependent, so the planted chain (strong
+//! structure, deterministic seed) is the workload: its mid-lattice is
+//! heavily dominated and the hillclimb incumbent sits at or near the
+//! optimum. Container-feasible default is `BNSL_SOLVE_P=14`.
+
+use bnsl::coordinator::shard::{ShardOptions, ShardOutcome};
+use bnsl::data::synth;
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::solver::{solve_sharded, LeveledSolver, PruneMode, SolveOptions, SolveResult};
+use bnsl::util::human_bytes;
+use bnsl::util::json::Json;
+use std::time::Instant;
+
+/// Total bytes of every regular file under `dir`, recursively.
+fn dir_bytes(dir: &std::path::Path) -> u64 {
+    let mut total = 0u64;
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            total += dir_bytes(&path);
+        } else if let Ok(meta) = entry.metadata() {
+            total += meta.len();
+        }
+    }
+    total
+}
+
+fn assert_identical(tag: &str, dense: &SolveResult, pruned: &SolveResult) {
+    assert_eq!(
+        dense.log_score.to_bits(),
+        pruned.log_score.to_bits(),
+        "{tag}: pruning moved the optimum"
+    );
+    assert_eq!(dense.network, pruned.network, "{tag}: networks differ");
+    assert_eq!(dense.order, pruned.order, "{tag}: orders differ");
+}
+
+fn main() {
+    let p: usize = std::env::var("BNSL_SOLVE_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(14);
+    let n: usize = std::env::var("BNSL_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let d = synth::chain(p, n, 0.95, 3);
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+
+    println!("=== bounds-layer pruning, p = {p}, n = {n} (planted chain) ===\n");
+
+    // resident: dense vs pruned
+    let t = Instant::now();
+    let dense = LeveledSolver::new(&e).solve();
+    let resident_dense_wall = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let pruned = LeveledSolver::with_options(
+        &e,
+        SolveOptions {
+            prune: PruneMode::Auto,
+            ..Default::default()
+        },
+    )
+    .solve();
+    let resident_pruned_wall = t.elapsed().as_secs_f64();
+    assert_identical("resident", &dense, &pruned);
+    assert!(
+        pruned.stats.pruned_subsets > 0,
+        "the planted chain must prune at least one subset"
+    );
+    let ratio = pruned.stats.pruned_subsets as f64 / pruned.stats.prune_considered as f64;
+
+    // sharded: dense vs pruned, with the on-disk footprint of each run
+    // (keep_levels so the comparison covers every level's shard files)
+    let scratch = std::env::temp_dir().join(format!("bnsl_bench_prune_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let mut sharded = |mode: PruneMode| -> (SolveResult, f64, u64) {
+        let dir = scratch.join(match mode {
+            PruneMode::Off => "dense",
+            _ => "pruned",
+        });
+        let t = Instant::now();
+        let out = solve_sharded::<u32>(
+            &e,
+            &ShardOptions {
+                shards: 4,
+                dir: dir.clone(),
+                keep_levels: true,
+                prune: mode,
+                ..Default::default()
+            },
+        )
+        .expect("sharded solve");
+        let wall = t.elapsed().as_secs_f64();
+        let ShardOutcome::Complete(result) = out else {
+            panic!("sharded run checkpointed without a stop request");
+        };
+        (result, wall, dir_bytes(&dir))
+    };
+    let (sharded_dense, sharded_dense_wall, dense_bytes) = sharded(PruneMode::Off);
+    let (sharded_pruned, sharded_pruned_wall, pruned_bytes) = sharded(PruneMode::Auto);
+    let _ = std::fs::remove_dir_all(&scratch);
+    assert_identical("sharded dense vs resident", &dense, &sharded_dense);
+    assert_identical("sharded pruned vs resident", &dense, &sharded_pruned);
+    assert!(
+        sharded_pruned.stats.pruned_subsets > 0,
+        "the sharded run must report a nonzero prune count"
+    );
+    // the `.prn` presence maps cost ~0.13 bytes/rank; once the measured
+    // ratio clears 1% the skipped bps/sink records must dominate that
+    if ratio >= 0.01 {
+        assert!(
+            pruned_bytes < dense_bytes,
+            "ratio {ratio:.3} but pruned run bytes ({pruned_bytes}) did not \
+             undercut the dense run's ({dense_bytes})"
+        );
+    }
+
+    println!(
+        "resident : dense {resident_dense_wall:7.3}s  pruned {resident_pruned_wall:7.3}s"
+    );
+    println!(
+        "sharded  : dense {sharded_dense_wall:7.3}s  pruned {sharded_pruned_wall:7.3}s"
+    );
+    println!(
+        "pruned   : {} of {} bound-checked subsets ({:.1}%)",
+        pruned.stats.pruned_subsets,
+        pruned.stats.prune_considered,
+        ratio * 100.0
+    );
+    println!(
+        "disk     : dense {}  pruned {}",
+        human_bytes(dense_bytes),
+        human_bytes(pruned_bytes)
+    );
+
+    // CI bench-smoke: machine-readable record for the perf trajectory
+    // (tools/bench_smoke.sh merges it into BENCH_ci.json; the measured
+    // prune_ratio gates as a floor in tools/bench_compare.py — a bounds
+    // regression that stops pruning fails CI like a wall regression).
+    if let Ok(path) = std::env::var("BNSL_BENCH_JSON") {
+        let doc = Json::obj()
+            .set("bench", "prune")
+            .set("solve_p", p)
+            .set("n", n)
+            .set("prune_ratio", ratio)
+            .set("pruned_subsets", pruned.stats.pruned_subsets)
+            .set("prune_considered", pruned.stats.prune_considered)
+            .set("resident_dense_wall_secs", resident_dense_wall)
+            .set("resident_pruned_wall_secs", resident_pruned_wall)
+            .set("sharded_dense_wall_secs", sharded_dense_wall)
+            .set("sharded_pruned_wall_secs", sharded_pruned_wall)
+            .set("dense_shard_bytes", dense_bytes)
+            .set("pruned_shard_bytes", pruned_bytes);
+        std::fs::write(&path, doc.to_pretty()).expect("writing BNSL_BENCH_JSON");
+        println!("bench record: {path}");
+    }
+}

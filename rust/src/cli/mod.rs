@@ -46,7 +46,7 @@ USAGE:
   bnsl learn  (--data file.csv | --network asia|alarm|sachs [--p P] [--n N])
               [--solver leveled|silander|hillclimb|hybrid] [--score jeffreys|bdeu[:e]|bic|aic]
               [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
-              [--streaming]
+              [--streaming] [--prune | --no-prune]
               [--shards N [--shard-dir DIR] [--stop-after-level K]] [--resume DIR]
               [--backend posix|object]
               [--cluster --host-id I [--hosts N] [--heartbeat-secs S]]
@@ -70,6 +70,13 @@ USAGE:
               conditional-PUT claims, heartbeat metadata keys; fault
               injection via BNSL_OBJECT_FAULTS); all hosts of one run
               must agree, results stay bit-identical across backends;
+              --prune (ON by default for dataset-backed native-engine
+              leveled solves, incl. --streaming/--shards/--cluster)
+              skips emitting records for provably-dominated subsets via
+              admissible per-variable bounds + a hillclimb incumbent —
+              same optimum, bit for bit, smaller record streams;
+              --no-prune restores the paper's full emission (required
+              when resuming a run that was started without pruning);
               hillclimb/hybrid: p <= 64
   bnsl learn  --scores file.jaa [--p P] [--solver leveled|silander]
               [--streaming] [--threads T] [--out net.json] [--dot]
@@ -110,7 +117,7 @@ USAGE:
               level boundary and the next `bnsl serve` resumes them
   bnsl submit --server HOST:PORT (--data file.csv | --scores file.jaa)
               [--p P] [--score S] [--shards N] [--threads T] [--batch B]
-              [--streaming]
+              [--streaming] [--prune]
               [--wait [--out result.json] [--poll-ms 200] [--timeout-secs 3600]]
               prints the job id on stdout; --wait polls to completion;
               --scores posts a `bnsl scores` table instead of a dataset
@@ -135,13 +142,16 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         return Ok(());
     };
     match command.as_str() {
-        "learn" => cmd_learn(Args::parse(rest.to_vec(), &["dot", "cluster", "streaming"])?),
+        "learn" => cmd_learn(Args::parse(
+            rest.to_vec(),
+            &["dot", "cluster", "streaming", "prune", "no-prune"],
+        )?),
         "sample" => cmd_sample(Args::parse(rest.to_vec(), &[])?),
         "scores" => cmd_scores(Args::parse(rest.to_vec(), &[])?),
         "eval" => cmd_eval(Args::parse(rest.to_vec(), &["streaming"])?),
         "exp" => cmd_exp(rest),
         "serve" => cmd_serve(Args::parse(rest.to_vec(), &[])?),
-        "submit" => cmd_submit(Args::parse(rest.to_vec(), &["wait", "streaming"])?),
+        "submit" => cmd_submit(Args::parse(rest.to_vec(), &["wait", "streaming", "prune"])?),
         "status" => cmd_status(Args::parse(rest.to_vec(), &[])?),
         "cancel" => cmd_cancel(Args::parse(rest.to_vec(), &[])?),
         "info" => cmd_info(Args::parse(rest.to_vec(), &["json"])?),
@@ -262,11 +272,45 @@ fn cmd_learn(args: Args) -> Result<()> {
         );
     }
     let width = validate_var_count(data.p(), exact, sharded)?;
+    // Order-graph pruning (the bounds layer, [`crate::solver::bounds`]):
+    // ON by default for exact dataset-backed leveled solves on the
+    // native engine — the only path where the admissible-bound
+    // construction and the deterministic hillclimb incumbent are
+    // available. Every other combination rejects an *explicit* --prune
+    // loudly instead of silently dropping it.
+    let prune = {
+        let on_request = args.switch("prune");
+        if on_request && args.switch("no-prune") {
+            bail!("--prune and --no-prune are mutually exclusive");
+        }
+        let eligible = solver == "leveled" && engine_name == "native";
+        if on_request && engine_name != "native" {
+            bail!(
+                "--prune seeds its incumbent from a deterministic native \
+                 scoring pass; --engine {engine_name} accumulates floats \
+                 in a different order, which would break the bit-identity \
+                 guarantee pruning rests on — drop --prune or use \
+                 --engine native"
+            );
+        }
+        if on_request && !eligible {
+            bail!(
+                "--prune gates the leveled DP's record emission; --solver \
+                 {solver} has no bounds layer — use --solver leveled"
+            );
+        }
+        if eligible && !args.switch("no-prune") {
+            crate::solver::PruneMode::Auto
+        } else {
+            crate::solver::PruneMode::Off
+        }
+    };
     let options = SolveOptions {
         threads: args.get::<usize>("threads", 1)?,
         spill_dir: args.raw("spill-dir").map(PathBuf::from),
         spill_threshold: args.get::<f64>("spill-threshold", 0.5)?,
         batch: args.get::<usize>("batch", 1024)?,
+        prune: prune.clone(),
         ..Default::default()
     };
 
@@ -306,6 +350,7 @@ fn cmd_learn(args: Args) -> Result<()> {
             keep_levels: false,
             hosts: args.get::<usize>("hosts", 1)?,
             backend,
+            prune: prune.clone(),
             ..Default::default()
         };
         let engine = NativeEngine::new(&data, kind);
@@ -538,6 +583,14 @@ fn cmd_learn_from_scores(args: &Args) -> Result<()> {
     }
     if args.switch("cluster") {
         bail!("--cluster needs a dataset-backed sharded run; a .jaa score table is in-RAM only");
+    }
+    if args.switch("prune") {
+        bail!(
+            "--prune builds its admissible bounds from the dataset's \
+             sufficient statistics; a .jaa score table carries none — \
+             drop --prune (the table-backed solve is already a single \
+             full sweep)"
+        );
     }
     let solver = args.raw("solver").unwrap_or("leveled").to_string();
     let streaming = args.switch("streaming");
@@ -799,8 +852,18 @@ fn cmd_info(args: Args) -> Result<()> {
         let mut plans = Json::arr();
         for (p, shards) in INFO_SHARDED_CONFIGS {
             let plan = crate::coordinator::plan::sharded_plan(p, shards, 0, 1024);
+            // the same geometry at the nominal prune ratio: records
+            // distinguish themselves by the `prune_ratio` key
+            let pruned = crate::coordinator::plan::sharded_plan_pruned(
+                p,
+                shards,
+                0,
+                1024,
+                crate::coordinator::plan::NOMINAL_PRUNE_RATIO,
+            );
             for backend in [BackendKind::Posix, BackendKind::Object] {
                 plans = plans.push(plan.to_json_for(backend, &budgets));
+                plans = plans.push(pruned.to_json_for(backend, &budgets));
             }
         }
         let doc = Json::obj()
@@ -824,6 +887,11 @@ fn cmd_info(args: Args) -> Result<()> {
                 for p in INFO_STREAMING_PS {
                     let plan = crate::coordinator::plan::streaming_plan(p);
                     splans = splans.push(plan.to_json_for(&budgets));
+                    let pruned = crate::coordinator::plan::streaming_plan_pruned(
+                        p,
+                        crate::coordinator::plan::NOMINAL_PRUNE_RATIO,
+                    );
+                    splans = splans.push(pruned.to_json_for(&budgets));
                 }
                 splans
             });
@@ -884,6 +952,21 @@ fn cmd_info(args: Args) -> Result<()> {
             } else {
                 format!("NO — {}", verdict.reasons.join("; "))
             }
+        );
+        let pruned = crate::coordinator::plan::sharded_plan_pruned(
+            p,
+            shards,
+            0,
+            1024,
+            crate::coordinator::plan::NOMINAL_PRUNE_RATIO,
+        );
+        println!(
+            "              with --prune at a nominal {:.0}% ratio: disk {}, \
+             ~{}k object requests (measured ratios are data-dependent; \
+             see BENCH_ci.json)",
+            pruned.prune_ratio * 100.0,
+            crate::util::human_bytes(pruned.disk_bytes),
+            pruned.object_requests / 1000,
         );
     }
     for p in INFO_STREAMING_PS {
@@ -1011,6 +1094,7 @@ fn cmd_submit(args: Args) -> Result<()> {
         threads: args.get::<usize>("threads", 0)?,
         batch: args.get::<usize>("batch", 1024)?,
         streaming: args.switch("streaming"),
+        prune: args.switch("prune"),
     };
     let response = crate::service::client::submit(&server, &request)?;
     eprintln!(
@@ -1309,6 +1393,85 @@ mod tests {
             argv.extend(extra.clone());
             assert!(run(argv).is_err(), "should reject --scores with {extra:?}");
         }
+    }
+
+    /// Tentpole (ISSUE 8): the default (pruned) solve and --no-prune
+    /// produce bit-identical records, and the default run actually
+    /// exercised the bounds layer (nonzero considered counter).
+    #[test]
+    fn pruned_learn_is_bit_identical_to_no_prune() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cli_prune_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let on = dir.join("pruned.json").to_string_lossy().to_string();
+        let off = dir.join("dense.json").to_string_lossy().to_string();
+        let base = |out: &str| {
+            vec![
+                "learn".to_string(),
+                "--network".to_string(),
+                "asia".to_string(),
+                "--n".to_string(),
+                "120".to_string(),
+                "--seed".to_string(),
+                "5".to_string(),
+                "--out".to_string(),
+                out.to_string(),
+            ]
+        };
+        run(base(&on)).unwrap();
+        let mut argv = base(&off);
+        argv.push("--no-prune".into());
+        run(argv).unwrap();
+        let a = Json::parse(&std::fs::read_to_string(&on).unwrap()).unwrap();
+        let b = Json::parse(&std::fs::read_to_string(&off).unwrap()).unwrap();
+        let bits = |j: &Json| j.get("log_score").and_then(Json::as_f64).unwrap().to_bits();
+        assert_eq!(bits(&a), bits(&b), "pruning must not move the optimum");
+        assert_eq!(
+            a.get("network").unwrap().to_string(),
+            b.get("network").unwrap().to_string()
+        );
+        let considered = a
+            .get("stats")
+            .and_then(|s| s.get("prune_considered"))
+            .and_then(Json::as_u64)
+            .unwrap();
+        assert!(considered > 0, "default exact solve runs the bounds layer");
+        let off_considered = b
+            .get("stats")
+            .and_then(|s| s.get("prune_considered"))
+            .and_then(Json::as_u64)
+            .unwrap();
+        assert_eq!(off_considered, 0, "--no-prune skips the bounds layer");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An explicit --prune on a path with no bounds layer must fail
+    /// loudly, never silently drop the flag.
+    #[test]
+    fn prune_flag_rejections_are_loud() {
+        for extra in [
+            vec!["--solver".to_string(), "silander".to_string()],
+            vec!["--solver".to_string(), "hillclimb".to_string()],
+            vec!["--no-prune".to_string()],
+        ] {
+            let mut argv = vec![
+                "learn".to_string(),
+                "--network".to_string(),
+                "asia".to_string(),
+                "--n".to_string(),
+                "40".to_string(),
+                "--prune".to_string(),
+            ];
+            argv.extend(extra.clone());
+            assert!(run(argv).is_err(), "should reject --prune with {extra:?}");
+        }
+        // and the dataset-free .jaa path has no statistics to bound
+        assert!(run(vec![
+            "learn".into(),
+            "--scores".into(),
+            "no_such_file.jaa".into(),
+            "--prune".into(),
+        ])
+        .is_err());
     }
 
     #[test]

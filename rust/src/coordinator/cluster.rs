@@ -67,6 +67,7 @@
 
 use super::shard::{ShardRun, ShardSpec};
 use super::storage::{make_backend, CreateOutcome, KeyAge, SharedBackend};
+use crate::solver::PruneStamp;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -425,6 +426,7 @@ pub fn committed_level_patient(
 /// manifest; everyone else waits for it to appear and then takes the
 /// ordinary validate-and-resume path. A lock whose holder died (stale
 /// liveness stamp) is removed and re-contested.
+#[allow(clippy::too_many_arguments)]
 pub fn open_or_create_shared(
     options: &ClusterOptions,
     p: usize,
@@ -432,6 +434,7 @@ pub fn open_or_create_shared(
     mask_bytes: usize,
     score: &str,
     fingerprint: &str,
+    prune: Option<PruneStamp>,
 ) -> Result<ShardRun> {
     let store = make_backend(options.shard.backend, &options.shard.dir)?;
     store.ensure_root()?;
@@ -453,6 +456,7 @@ pub fn open_or_create_shared(
                 mask_bytes,
                 score,
                 fingerprint,
+                prune,
             );
         }
         let lock_body = Json::obj()
@@ -469,6 +473,7 @@ pub fn open_or_create_shared(
                     mask_bytes,
                     score,
                     fingerprint,
+                    prune,
                 );
                 let _ = store.delete(lock);
                 return run;
@@ -870,7 +875,7 @@ mod tests {
             dir: dir.clone(),
             ..Default::default()
         };
-        let mut a = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "aa").unwrap();
+        let mut a = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "aa", None).unwrap();
         // A commits level 0; B (reading the committed state) has its raw
         // double commit rejected…
         a.commit_level(0).unwrap();
@@ -899,7 +904,7 @@ mod tests {
             dir: dir.clone(),
             ..Default::default()
         };
-        let mut run = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "bb").unwrap();
+        let mut run = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "bb", None).unwrap();
         run.commit_level(0).unwrap();
         run.commit_level(1).unwrap();
         // simulate a stalled committer's late publish landing an OLD
@@ -1061,7 +1066,7 @@ mod tests {
                 .map(|host| {
                     let mk = &mk;
                     scope.spawn(move || {
-                        open_or_create_shared(&mk(host), 10, 50, 4, "Jeffreys", "f00f").unwrap()
+                        open_or_create_shared(&mk(host), 10, 50, 4, "Jeffreys", "f00f", None).unwrap()
                     })
                 })
                 .collect();
@@ -1091,7 +1096,7 @@ mod tests {
             poll: Duration::from_millis(2),
             ..Default::default()
         };
-        let run = open_or_create_shared(&opts, 6, 20, 4, "Bic", "0ff0").unwrap();
+        let run = open_or_create_shared(&opts, 6, 20, 4, "Bic", "0ff0", None).unwrap();
         assert_eq!(run.p, 6);
         assert!(
             !dir2.join("manifest.json.tmp.99.0").exists(),
@@ -1122,7 +1127,7 @@ mod tests {
                 .map(|host| {
                     let mk = &mk;
                     scope.spawn(move || {
-                        open_or_create_shared(&mk(host), 9, 30, 4, "Bic", "beef").unwrap()
+                        open_or_create_shared(&mk(host), 9, 30, 4, "Bic", "beef", None).unwrap()
                     })
                 })
                 .collect();

@@ -3,10 +3,20 @@
 //! sharded runs ([`ShardedPlan`]) whose frontier lives entirely on disk.
 
 use crate::bitset::BinomTable;
-use crate::coordinator::shard::{fd_budget, reader_cache_bytes, QR_RECORD, WINDOW};
+use crate::coordinator::shard::{
+    fd_budget, reader_cache_bytes, PRN_BLOCK, PRN_RECORD, QR_RECORD, WINDOW,
+};
 use crate::coordinator::storage::object::PART_BYTES;
 use crate::coordinator::storage::BackendKind;
 use crate::util::json::Json;
+
+/// Nominal what-if prune ratio used when pricing a `--prune` run before
+/// any data has been seen (`bnsl info`). The *measured* ratio is
+/// data-dependent — strong dependencies prune more, near-uniform noise
+/// prunes nearly nothing — so this is a planning figure for the
+/// "how much disk would pruning plausibly save" line, never a promise;
+/// the bench harness records real ratios per dataset in `BENCH_ci.json`.
+pub const NOMINAL_PRUNE_RATIO: f64 = 0.25;
 
 /// Resource budgets a planned run is admitted against — the service
 /// queue's admission contract ([`crate::service::queue`]) and the
@@ -202,20 +212,71 @@ pub struct ShardedPlan {
     /// cache pressure and heartbeat PUTs — which scale with wall time,
     /// not work — are excluded).
     pub object_requests: u64,
+    /// The prune ratio this plan was priced at: the assumed fraction of
+    /// level-`k` (`1 ≤ k < p`) subsets whose `.bps`/`.sink` records the
+    /// bounds layer ([`crate::solver::bounds`]) skips. `0.0` prices the
+    /// dense format exactly (no `.prn` sidecars); any positive ratio
+    /// prices the slim prune format — per-record bytes scaled by
+    /// `1 − ratio` plus the presence-sidecar overhead. `.qr` streams are
+    /// never pruned (the next level's Eq. 9/10 pass reads every `q`).
+    pub prune_ratio: f64,
 }
 
 /// Price a sharded run. `workers == 0` means one worker per shard;
 /// `batch` is the per-worker engine batch ([`crate::solver::SolveOptions`]
 /// default 1024). Pure arithmetic, `p ≤ 62` like [`memory_plan`].
 pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> ShardedPlan {
+    sharded_plan_pruned(p, shards, workers, batch, 0.0)
+}
+
+/// [`sharded_plan`] at an assumed prune ratio. `prune_ratio = 0.0` is
+/// *exactly* [`sharded_plan`] — the dense format, byte for byte (the
+/// solver-accounting identity tests rely on this); a positive ratio
+/// prices the slim prune format: `.bps`/`.sink` records scaled by
+/// `1 − ratio` on the prunable levels (`1 ≤ k < p`; the full set is
+/// never pruned), plus one `.prn` presence record ([`PRN_RECORD`] bytes
+/// per [`PRN_BLOCK`] ranks, rounded up per shard) on every `k ≥ 1`
+/// level. Write buffers are *not* scaled — the sweep still computes
+/// every subset and fills full batches before the bound check drops
+/// records at emission.
+pub fn sharded_plan_pruned(
+    p: usize,
+    shards: usize,
+    workers: usize,
+    batch: usize,
+    prune_ratio: f64,
+) -> ShardedPlan {
     assert!((1..=62).contains(&p), "analytic planner supports p ≤ 62");
     assert!(shards >= 1 && shards.is_power_of_two());
+    assert!(
+        (0.0..=1.0).contains(&prune_ratio),
+        "prune ratio is a fraction"
+    );
     let workers = if workers == 0 { shards } else { workers.min(shards) };
     let batch = batch.max(1) as u64;
     let mask_bytes: u64 = if p <= crate::MAX_VARS { 4 } else { 8 };
     let binom = BinomTable::new(p);
     let bps_record = 8 + mask_bytes;
     let sink_record = 1 + mask_bytes;
+    let pruned = prune_ratio > 0.0;
+    // survivors after pruning `records` slim-format records at level k
+    // (identity at ratio 0 and on the never-pruned levels 0 and p)
+    let keep = |k: usize, records: u64| -> u64 {
+        if !pruned || k == 0 || k == p {
+            records
+        } else {
+            (records as f64 * (1.0 - prune_ratio)).ceil() as u64
+        }
+    };
+    // `.prn` presence-sidecar bytes for one level (0 when the format is
+    // dense): each shard rounds its span up to whole presence blocks
+    let prn_level = |k: usize| -> u64 {
+        if !pruned || k == 0 {
+            return 0;
+        }
+        let width = binom.c(p, k).div_ceil(shards as u64).max(1);
+        shards as u64 * width.div_ceil(PRN_BLOCK as u64) * PRN_RECORD as u64
+    };
     // per-worker read caches over the previous level's shard files
     let read_cache = |k_prev: usize| -> u64 {
         let size = binom.c(p, k_prev);
@@ -231,7 +292,8 @@ pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> Sh
                 let bps = if k_prev == 0 {
                     0
                 } else {
-                    reader_cache_bytes(entries * k_prev, bps_record as usize, shards) as u64
+                    let rows = keep(k_prev, entries as u64 * k_prev as u64) as usize;
+                    reader_cache_bytes(rows, bps_record as usize, shards) as u64
                 };
                 qr + bps
             })
@@ -248,12 +310,14 @@ pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> Sh
         .unwrap();
     // disk: adjacent-level frontier files + cumulative sink records
     let frontier_files = |k: usize| -> u64 {
-        binom.c(p, k) * (QR_RECORD as u64 + k as u64 * bps_record)
+        binom.c(p, k) * QR_RECORD as u64
+            + keep(k, binom.c(p, k) * k as u64) * bps_record
+            + prn_level(k)
     };
     let mut sink_cum = 0u64;
     let mut disk_bytes = 0u64;
     for k1 in 1..=p {
-        sink_cum += binom.c(p, k1) * sink_record;
+        sink_cum += keep(k1, binom.c(p, k1)) * sink_record;
         disk_bytes = disk_bytes.max(frontier_files(k1 - 1) + frontier_files(k1) + sink_cum);
     }
     // object-backend request estimate (see the field docs): writes and
@@ -268,13 +332,22 @@ pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> Sh
             if entries == 0 {
                 continue;
             }
-            // three streams per shard: parts + completion + staged
-            // copy + staged delete each
-            let stream_bytes = [
+            // the per-shard streams (three dense, four in prune
+            // format): parts + completion + staged copy + staged
+            // delete each
+            let mut stream_bytes = vec![
                 entries * QR_RECORD as u64,
-                if k == 0 { 0 } else { entries * k as u64 * bps_record },
-                entries * sink_record,
+                if k == 0 {
+                    0
+                } else {
+                    keep(k, entries * k as u64) * bps_record
+                },
+                keep(k, entries) * sink_record,
             ];
+            if pruned && k > 0 {
+                stream_bytes
+                    .push(entries.div_ceil(PRN_BLOCK as u64) * PRN_RECORD as u64);
+            }
             for bytes in stream_bytes {
                 object_requests += bytes.div_ceil(PART_BYTES).max(1) + 3;
             }
@@ -285,14 +358,22 @@ pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> Sh
         if k < p {
             object_requests += size.div_ceil(WINDOW as u64);
             if k > 0 {
-                object_requests += (size * k as u64).div_ceil(WINDOW as u64);
+                object_requests += keep(k, size * k as u64).div_ceil(WINDOW as u64);
+                if pruned {
+                    // one GET per presence block the readers touch
+                    object_requests += size.div_ceil(PRN_BLOCK as u64);
+                }
             }
         }
         // barrier: finish-marker PUT + manifest GET/PUT round-trip
         object_requests += 4;
     }
-    // reconstruction: one sink GET per level
+    // reconstruction: one sink GET per level, plus one presence-block
+    // GET each to map the optimal rank onto the slim stream
     object_requests += p as u64;
+    if pruned {
+        object_requests += p as u64;
+    }
     ShardedPlan {
         p,
         shards,
@@ -304,6 +385,7 @@ pub fn sharded_plan(p: usize, shards: usize, workers: usize, batch: usize) -> Sh
         disk_bytes,
         fd_budget: fd_budget(workers, shards, true),
         object_requests,
+        prune_ratio,
     }
 }
 
@@ -320,6 +402,7 @@ impl ShardedPlan {
             .set("disk_bytes", self.disk_bytes)
             .set("fd_budget", self.fd_budget)
             .set("object_requests", self.object_requests)
+            .set("prune_ratio", self.prune_ratio)
     }
 
     /// Does this plan fit `budgets` when run on `backend`? Admission for
@@ -417,6 +500,12 @@ pub struct StreamingPlan {
     /// width — the figure the streams replace (strictly larger for all
     /// exact-DP-range `p`; test-asserted at `p ≥ 20`).
     pub resident_sink_bytes: u64,
+    /// The prune ratio this plan was priced at (`0.0` = the dense
+    /// streams, exactly [`streaming_plan`]; positive = in-sweep flag
+    /// vectors plus post-sweep compaction to `1 − ratio` of each
+    /// prunable level's records, retained with a rank→slot presence
+    /// map). See [`streaming_plan_pruned`].
+    pub prune_ratio: f64,
 }
 
 /// Price a streaming run. Pure arithmetic, `p ≤ 62` like
@@ -424,13 +513,41 @@ pub struct StreamingPlan {
 /// masks up to [`crate::MAX_VARS`], `u64` above).
 pub fn streaming_plan(p: usize) -> StreamingPlan {
     let mask_bytes: u64 = if p <= crate::MAX_VARS { 4 } else { 8 };
-    streaming_plan_for_mask_bytes(p, mask_bytes)
+    streaming_plan_pruned_for_mask_bytes(p, mask_bytes, 0.0)
 }
 
 /// [`streaming_plan`] with an explicit mask width — for pricing a
 /// forced-wide run (`StreamingSolver::<u64>` on a narrow-range `p`).
 pub fn streaming_plan_for_mask_bytes(p: usize, mask_bytes: u64) -> StreamingPlan {
+    streaming_plan_pruned_for_mask_bytes(p, mask_bytes, 0.0)
+}
+
+/// [`streaming_plan`] at an assumed prune ratio. `prune_ratio = 0.0` is
+/// *exactly* [`streaming_plan`] — the solver's own `peak_state_bytes`
+/// accounting is test-asserted against it. A positive ratio models the
+/// prune-format sweep: each prunable level (`1 ≤ k < p`) carries a
+/// one-byte-per-subset flag vector *during* its sweep (the records are
+/// written densely first — pruning drops emissions, not computation),
+/// then compacts to `1 − ratio` of its records plus a rank→slot
+/// presence map (one bit per rank + one `u64` survivor prefix per
+/// [`PRN_BLOCK`] ranks) retained through reconstruction.
+pub fn streaming_plan_pruned(p: usize, prune_ratio: f64) -> StreamingPlan {
+    let mask_bytes: u64 = if p <= crate::MAX_VARS { 4 } else { 8 };
+    streaming_plan_pruned_for_mask_bytes(p, mask_bytes, prune_ratio)
+}
+
+/// [`streaming_plan_pruned`] with an explicit mask width.
+pub fn streaming_plan_pruned_for_mask_bytes(
+    p: usize,
+    mask_bytes: u64,
+    prune_ratio: f64,
+) -> StreamingPlan {
     assert!((1..=62).contains(&p), "analytic planner supports p ≤ 62");
+    assert!(
+        (0.0..=1.0).contains(&prune_ratio),
+        "prune ratio is a fraction"
+    );
+    let pruned = prune_ratio > 0.0;
     let binom = BinomTable::new(p);
     let frontier =
         |k: usize| -> u64 { binom.c(p, k) * (16 + (8 + mask_bytes) * k as u64) };
@@ -438,8 +555,27 @@ pub fn streaming_plan_for_mask_bytes(p: usize, mask_bytes: u64) -> StreamingPlan
     let mut peak_bytes = 0u64;
     let mut peak_level = 0usize;
     for k1 in 1..=p {
-        stream_cum += binom.c(p, k1) * streaming_record_bytes(k1);
-        let bytes = frontier(k1 - 1) + frontier(k1) + stream_cum;
+        let size = binom.c(p, k1);
+        let rec = streaming_record_bytes(k1);
+        // in-sweep high-water: the level's stream is dense (plus its
+        // flag vector) until the post-sweep compaction
+        let in_sweep = frontier(k1 - 1)
+            + frontier(k1)
+            + stream_cum
+            + size * rec
+            + if pruned { size } else { 0 };
+        let kept = if pruned && k1 < p {
+            (size as f64 * (1.0 - prune_ratio)).ceil() as u64
+        } else {
+            size
+        };
+        let map = if pruned {
+            size.div_ceil(8) + size.div_ceil(PRN_BLOCK as u64) * 8
+        } else {
+            0
+        };
+        stream_cum += kept * rec + map;
+        let bytes = in_sweep.max(frontier(k1 - 1) + frontier(k1) + stream_cum);
         if bytes > peak_bytes {
             peak_bytes = bytes;
             peak_level = k1;
@@ -452,6 +588,7 @@ pub fn streaming_plan_for_mask_bytes(p: usize, mask_bytes: u64) -> StreamingPlan
         peak_level,
         record_stream_bytes: stream_cum,
         resident_sink_bytes: (1 + mask_bytes) << p,
+        prune_ratio,
     }
 }
 
@@ -464,6 +601,7 @@ impl StreamingPlan {
             .set("peak_level", self.peak_level)
             .set("record_stream_bytes", self.record_stream_bytes)
             .set("resident_sink_bytes", self.resident_sink_bytes)
+            .set("prune_ratio", self.prune_ratio)
     }
 
     /// Does this plan fit `budgets`? Streaming is memory-only: the only
@@ -870,12 +1008,72 @@ mod tests {
                 "peak_level",
                 "record_stream_bytes",
                 "resident_sink_bytes",
+                "prune_ratio",
                 "fits_budget",
             ]
         );
         let verdict = doc.get("fits_budget").expect("fits_budget present");
         assert_eq!(verdict.get("fits"), Some(&Json::Bool(true)));
         assert!(verdict.get("reasons").and_then(Json::as_arr).is_some());
+    }
+
+    /// Tentpole (ISSUE 8): ratio-0 pruned plans ARE the dense plans —
+    /// no hidden sidecar overhead — and a positive ratio moves the disk
+    /// and request bills down while `.qr` (dense by design) holds them
+    /// above a floor.
+    #[test]
+    fn pruned_plans_delegate_at_ratio_zero_and_shrink_disk() {
+        let dense = sharded_plan(20, 4, 0, 1024);
+        let zero = sharded_plan_pruned(20, 4, 0, 1024, 0.0);
+        assert_eq!(zero.disk_bytes, dense.disk_bytes);
+        assert_eq!(zero.peak_resident_bytes, dense.peak_resident_bytes);
+        assert_eq!(zero.object_requests, dense.object_requests);
+        assert_eq!(zero.prune_ratio, 0.0);
+        let half = sharded_plan_pruned(20, 4, 0, 1024, 0.5);
+        assert!(half.disk_bytes < dense.disk_bytes, "bps/sink bytes shrink");
+        assert!(
+            half.object_requests < dense.object_requests,
+            "fewer upload parts and window GETs"
+        );
+        // monotone in the ratio, with the dense .qr streams as a floor
+        let deep = sharded_plan_pruned(20, 4, 0, 1024, 0.9);
+        assert!(deep.disk_bytes < half.disk_bytes);
+        let binom = BinomTable::new(20);
+        let qr_floor = (0..20u64)
+            .map(|k| {
+                binom.c(20, k as usize) * QR_RECORD as u64
+                    + binom.c(20, k as usize + 1) * QR_RECORD as u64
+            })
+            .max()
+            .unwrap();
+        assert!(deep.disk_bytes > qr_floor, "q stays dense at every ratio");
+        let j = half.to_json().to_string();
+        assert!(j.contains("\"prune_ratio\":0.5"), "{j}");
+    }
+
+    /// Tentpole (ISSUE 8): streaming pruned pricing. Ratio 0 is the
+    /// dense model exactly (the solver's accounting identity test rides
+    /// on it); a positive ratio shrinks the *retained* streams but the
+    /// in-sweep high-water still carries the dense level plus its flag
+    /// vector, so the peak never undercuts honest bookkeeping.
+    #[test]
+    fn streaming_pruned_pricing_shrinks_retained_streams_only() {
+        let dense = streaming_plan(22);
+        let zero = streaming_plan_pruned(22, 0.0);
+        assert_eq!(zero.peak_bytes, dense.peak_bytes);
+        assert_eq!(zero.peak_level, dense.peak_level);
+        assert_eq!(zero.record_stream_bytes, dense.record_stream_bytes);
+        let half = streaming_plan_pruned(22, 0.5);
+        assert!(
+            half.record_stream_bytes < dense.record_stream_bytes,
+            "retained streams compact to survivors + presence maps"
+        );
+        // the peak includes the dense in-sweep stream + flags, so it is
+        // never below the level frontiers alone and can exceed the
+        // dense model's peak only by the flag vector
+        assert!(half.peak_bytes >= dense.peak_bytes - dense.record_stream_bytes);
+        let nominal = streaming_plan_pruned(22, NOMINAL_PRUNE_RATIO);
+        assert_eq!(nominal.prune_ratio, NOMINAL_PRUNE_RATIO);
     }
 
     #[test]

@@ -40,7 +40,7 @@
 //! (in-tree: `docs/FORMATS.md`).
 
 use super::spill::{
-    decode_header, encode_header, record_bytes, HEADER, KIND_BPS, KIND_QR, KIND_SINK,
+    decode_header, encode_header, record_bytes, HEADER, KIND_BPS, KIND_PRN, KIND_QR, KIND_SINK,
 };
 use super::storage::{
     make_backend, BackendKind, CreateOutcome, PosixBackend, RandomRead, ShardStream,
@@ -50,6 +50,7 @@ use crate::bitset::{colex_rank, BinomTable, VarMask};
 use crate::bn::Dag;
 use crate::data::Dataset;
 use crate::score::ScoreKind;
+use crate::solver::PruneStamp;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::cell::{Cell, RefCell};
@@ -64,14 +65,24 @@ pub(crate) use super::spill::{SLOTS, WINDOW};
 
 /// Manifest format version written by this binary. Version 2 (ISSUE 3)
 /// added the informational `hosts` field alongside the cluster claim
-/// ledger ([`crate::coordinator::cluster`]); version-1 manifests are
-/// still read (the field defaults to 1).
-const MANIFEST_FORMAT: u64 = 2;
+/// ledger ([`crate::coordinator::cluster`]); version 3 (ISSUE 8) added
+/// the optional prune stamp (`prune_incumbent` / `prune_ub_hash`) that
+/// marks a run's shard files as prune-format (slim `.bps`/`.sink`
+/// streams + `.prn` presence sidecars). Older manifests are still read:
+/// absent fields mean a dense-format run.
+const MANIFEST_FORMAT: u64 = 3;
 /// Oldest manifest format this reader still understands.
 const MANIFEST_FORMAT_MIN: u64 = 1;
 
 /// Bytes of one `.qr` record: little-endian `f64` `log Q` + `f64` `log R`.
 pub(crate) const QR_RECORD: usize = 16;
+
+/// Colex ranks covered by one `.prn` presence block.
+pub(crate) const PRN_BLOCK: usize = 4096;
+
+/// Bytes of one `.prn` record: little-endian `u64` survivor count
+/// *before* the block + a [`PRN_BLOCK`]-bit presence bitmap.
+pub(crate) const PRN_RECORD: usize = 8 + PRN_BLOCK / 8;
 
 /// Bounded patience for manifest reads on the resume/join *entry* path
 /// of backends whose reads may lag writes
@@ -119,14 +130,17 @@ pub(crate) fn reader_cache_bytes(entries: usize, record: usize, shards: usize) -
 /// up front keeps the preflight honest.
 pub(crate) const CLUSTER_FD_MARGIN: u64 = 16;
 
-/// Per-host open-file budget of a sharded run: every worker holds `.qr` +
-/// `.bps` read handles for all previous-level shards plus its own three
-/// writer streams, plus a fixed process margin; cluster mode adds the
-/// claim-ledger headroom. Shared between the solver preflights and
+/// Per-host open-file budget of a sharded run: every worker holds `.qr`
+/// + `.bps` + `.prn` read handles for all previous-level shards plus its
+/// own four writer streams, plus a fixed process margin; cluster mode
+/// adds the claim-ledger headroom. Dense-format runs open fewer handles
+/// (no `.prn` sidecars), but the budget prices the prune-format worst
+/// case uniformly so a run can't pass preflight and then die on EMFILE
+/// when pruning is on. Shared between the solver preflights and
 /// [`crate::coordinator::plan::sharded_plan`], so `bnsl info` prices
 /// exactly what the drivers check.
 pub fn fd_budget(workers: usize, shards: usize, cluster: bool) -> u64 {
-    let base = workers as u64 * (2 * shards as u64 + 3) + 32;
+    let base = workers as u64 * (3 * shards as u64 + 4) + 32;
     if cluster {
         base + CLUSTER_FD_MARGIN
     } else {
@@ -183,6 +197,12 @@ pub struct ShardOptions {
     /// (job cancellation, SIGTERM drain) instead of at a pre-declared
     /// level. The default token never fires.
     pub cancel: crate::solver::CancelToken,
+    /// Order-graph pruning ([`crate::solver::bounds`]): when resolved,
+    /// the run is created in prune format (slim `.bps`/`.sink` streams
+    /// plus `.prn` presence sidecars) and its bound/incumbent stamp is
+    /// recorded in the manifest so every resume provably reruns the
+    /// same pruned sweep. `Off` (the default) keeps the dense format.
+    pub prune: crate::solver::PruneMode,
 }
 
 impl Default for ShardOptions {
@@ -197,6 +217,7 @@ impl Default for ShardOptions {
             hosts: 1,
             backend: BackendKind::Posix,
             cancel: crate::solver::CancelToken::new(),
+            prune: crate::solver::PruneMode::Off,
         }
     }
 }
@@ -294,6 +315,14 @@ pub struct ShardRun {
     /// continually steal them — [`ShardRun::open_on`] rejects the
     /// mismatch up front instead, for every resume, join and raw open.
     pub backend: BackendKind,
+    /// Prune stamp recorded when the run was created (`None` = dense
+    /// format). `Some` marks every level-`k ≥ 1` shard as prune-format —
+    /// slim `.bps`/`.sink` streams plus a `.prn` presence sidecar — and
+    /// pins the exact bounds + incumbent: the DP's inter-level
+    /// dependencies make a half-pruned run unreadable, so a resume whose
+    /// recomputed stamp differs is rejected instead of silently mixing
+    /// two different pruned sweeps ([`crate::solver::bounds`]).
+    pub prune: Option<PruneStamp>,
     /// Highest committed level (`None` before level 0 commits).
     pub completed: Option<usize>,
 }
@@ -304,7 +333,11 @@ impl ShardRun {
     /// run requires `options.shards >= 1`; a resume
     /// (`options.shards == 0` or a matching explicit count) revalidates
     /// `p`, mask width, score and dataset fingerprint against the
-    /// manifest and rejects mismatches by name.
+    /// manifest and rejects mismatches by name. `prune` is the stamp a
+    /// *fresh* run records (prune-format shard files); on resume the
+    /// manifest's recorded stamp wins and the caller reconciles it
+    /// against its own bounds ([`crate::solver::solve_sharded`]).
+    #[allow(clippy::too_many_arguments)]
     pub fn open_or_create(
         options: &ShardOptions,
         p: usize,
@@ -312,13 +345,15 @@ impl ShardRun {
         mask_bytes: usize,
         score: &str,
         fingerprint: &str,
+        prune: Option<PruneStamp>,
     ) -> Result<ShardRun> {
         let store = make_backend(options.backend, &options.dir)?;
-        ShardRun::open_or_create_on(store, options, p, n, mask_bytes, score, fingerprint)
+        ShardRun::open_or_create_on(store, options, p, n, mask_bytes, score, fingerprint, prune)
     }
 
     /// [`ShardRun::open_or_create`] on an already-constructed backend
     /// (the cluster init path builds the backend first for its lock).
+    #[allow(clippy::too_many_arguments)]
     pub fn open_or_create_on(
         store: SharedBackend,
         options: &ShardOptions,
@@ -327,6 +362,7 @@ impl ShardRun {
         mask_bytes: usize,
         score: &str,
         fingerprint: &str,
+        prune: Option<PruneStamp>,
     ) -> Result<ShardRun> {
         if store.exists("manifest.json")? {
             return ShardRun::validate_resume(store, options, p, mask_bytes, score, fingerprint);
@@ -378,6 +414,7 @@ impl ShardRun {
             fingerprint: fingerprint.to_string(),
             hosts: options.hosts.max(1),
             backend: options.backend,
+            prune,
             completed: None,
         };
         // conditional create, not an unconditional publish: the
@@ -568,6 +605,37 @@ impl ShardRun {
                     )
                 })?,
             },
+            // v3 fields; absent (older manifests, unpruned runs) means
+            // the dense shard format
+            prune: {
+                let hex_field = |key: &str| -> Result<Option<u64>> {
+                    match doc.get(key) {
+                        None => Ok(None),
+                        Some(v) => {
+                            let s = v.as_str().ok_or_else(|| {
+                                anyhow::anyhow!("{name}: field '{key}' not a string")
+                            })?;
+                            u64::from_str_radix(s, 16).map(Some).map_err(|_| {
+                                anyhow::anyhow!(
+                                    "{name}: field '{key}' is not a 64-bit hex stamp"
+                                )
+                            })
+                        }
+                    }
+                };
+                match (hex_field("prune_incumbent")?, hex_field("prune_ub_hash")?) {
+                    (Some(incumbent_bits), Some(ub_hash)) => Some(PruneStamp {
+                        incumbent_bits,
+                        ub_hash,
+                    }),
+                    (None, None) => None,
+                    _ => bail!(
+                        "{name}: manifest has one of 'prune_incumbent' / \
+                         'prune_ub_hash' but not the other — the run \
+                         directory is corrupt"
+                    ),
+                }
+            },
             completed,
             store,
         };
@@ -616,7 +684,7 @@ impl ShardRun {
     /// The manifest document for this handle's current state (shared by
     /// the unconditional commit rewrite and the conditional creation).
     fn manifest_doc(&self) -> Json {
-        Json::obj()
+        let mut doc = Json::obj()
             .set("format", MANIFEST_FORMAT)
             .set("p", self.p)
             .set("n", self.n)
@@ -625,11 +693,16 @@ impl ShardRun {
             .set("score", self.score.as_str())
             .set("fingerprint", self.fingerprint.as_str())
             .set("hosts", self.hosts)
-            .set("backend", self.backend.name())
-            .set(
-                "levels_complete",
-                self.completed.map(|k| k as i64).unwrap_or(-1),
-            )
+            .set("backend", self.backend.name());
+        if let Some(stamp) = self.prune {
+            doc = doc
+                .set("prune_incumbent", format!("{:016x}", stamp.incumbent_bits))
+                .set("prune_ub_hash", format!("{:016x}", stamp.ub_hash));
+        }
+        doc.set(
+            "levels_complete",
+            self.completed.map(|k| k as i64).unwrap_or(-1),
+        )
     }
 
     fn write_manifest(&self) -> Result<()> {
@@ -689,7 +762,9 @@ impl ShardRun {
 
     /// Drop the `.bps`/`.qr` files of a level that is no longer needed
     /// for resume (its successor has committed). `.sink` files stay:
-    /// reconstruction reads one record per level at the very end.
+    /// reconstruction reads one record per level at the very end — and
+    /// so do `.prn` presence sidecars, which reconstruction needs to map
+    /// a colex rank to its slot in the slim `.sink` stream.
     pub fn prune_level(&self, k: usize) {
         for s in 0..self.shards {
             let _ = self.store.delete(&self.shard_key(k, s, "bps"));
@@ -701,14 +776,25 @@ impl ShardRun {
 /// Receives one sink record per subset, in colex order — the level sweep
 /// is generic over whether sinks land in the in-RAM `2^p` tables
 /// (unsharded solver) or a per-shard stream buffer ([`SinkBuf`]).
+///
+/// Exactly one of [`SinkOut::put`] / [`SinkOut::put_pruned`] is called
+/// per subset: `put_pruned` marks a subset whose records the bounds
+/// layer ([`crate::solver::bounds`]) proved dominated, so prune-aware
+/// sinks can skip the record while keeping the colex cursor aligned.
+/// The default is a no-op — the resident solver's dense tables simply
+/// never read the pruned entries.
 pub trait SinkOut<M: VarMask> {
     fn put(&mut self, mask: M, sink: u8, pmask: M);
+    fn put_pruned(&mut self, _mask: M) {}
 }
 
 /// Buffered sink records for one shard batch (flushed to the `.sink`
-/// file by [`ShardWriterSet::append`]).
+/// file by [`ShardWriterSet::append`]), plus the batch's per-subset
+/// presence flags (`0` = emitted, `1` = pruned) that drive the slim
+/// prune-format streams.
 pub struct SinkBuf<M: VarMask> {
     buf: Vec<u8>,
+    flags: Vec<u8>,
     _width: PhantomData<M>,
 }
 
@@ -716,6 +802,7 @@ impl<M: VarMask> Default for SinkBuf<M> {
     fn default() -> SinkBuf<M> {
         SinkBuf {
             buf: Vec::new(),
+            flags: Vec::new(),
             _width: PhantomData,
         }
     }
@@ -724,9 +811,15 @@ impl<M: VarMask> Default for SinkBuf<M> {
 impl<M: VarMask> SinkOut<M> for SinkBuf<M> {
     #[inline]
     fn put(&mut self, _mask: M, sink: u8, pmask: M) {
+        self.flags.push(0);
         self.buf.push(sink);
         self.buf
             .extend_from_slice(&pmask.to_u64().to_le_bytes()[..M::BYTES]);
+    }
+
+    #[inline]
+    fn put_pruned(&mut self, _mask: M) {
+        self.flags.push(1);
     }
 }
 
@@ -748,9 +841,53 @@ pub struct ShardWriterSet<M: VarMask> {
     bps: Box<dyn ShardStream>,
     qr: Box<dyn ShardStream>,
     sink: Box<dyn ShardStream>,
+    /// Presence-sidecar writer, only for prune-format runs at `k ≥ 1`
+    /// (level 0 has the single always-present empty set and no `.bps`).
+    prn: Option<PrnWriter>,
+    /// Best-parent records per subset (the level `k`).
+    k: usize,
     entries: u64,
     bytes: u64,
     _width: PhantomData<M>,
+}
+
+/// Streams the `.prn` presence sidecar of one prune-format shard: one
+/// [`PRN_RECORD`]-byte block per [`PRN_BLOCK`] appended ranks, carrying
+/// the survivor count before the block and the block's presence bitmap
+/// (a partial tail block is flushed by [`ShardWriterSet::finish`]).
+struct PrnWriter {
+    stream: Box<dyn ShardStream>,
+    bits: [u8; PRN_RECORD - 8],
+    fill: usize,
+    survivors: u64,
+}
+
+impl PrnWriter {
+    /// Record one rank's presence; returns the bytes flushed (0 unless
+    /// this append completed a block).
+    fn push(&mut self, present: bool) -> Result<u64> {
+        if present {
+            self.bits[self.fill / 8] |= 1 << (self.fill % 8);
+        }
+        self.fill += 1;
+        if self.fill == PRN_BLOCK {
+            return self.flush_block();
+        }
+        Ok(0)
+    }
+
+    fn flush_block(&mut self) -> Result<u64> {
+        self.stream.write_all(&self.survivors.to_le_bytes())?;
+        self.stream.write_all(&self.bits)?;
+        self.survivors += self
+            .bits
+            .iter()
+            .map(|b| b.count_ones() as u64)
+            .sum::<u64>();
+        self.bits = [0u8; PRN_RECORD - 8];
+        self.fill = 0;
+        Ok(PRN_RECORD as u64)
+    }
 }
 
 impl<M: VarMask> ShardWriterSet<M> {
@@ -787,12 +924,28 @@ impl<M: VarMask> ShardWriterSet<M> {
         let bps = open("bps", KIND_BPS)?;
         let qr = open("qr", KIND_QR)?;
         let sink = open("sink", KIND_SINK)?;
+        // prune-format runs carry a presence sidecar for every k ≥ 1
+        // level — even a level nothing was pruned from, so readers never
+        // have to guess which format a file is in
+        let prn = if run.prune.is_some() && k >= 1 {
+            Some(PrnWriter {
+                stream: open("prn", KIND_PRN)?,
+                bits: [0u8; PRN_RECORD - 8],
+                fill: 0,
+                survivors: 0,
+            })
+        } else {
+            None
+        };
+        let streams = if prn.is_some() { 4 } else { 3 };
         Ok(ShardWriterSet {
             bps,
             qr,
             sink,
+            prn,
+            k,
             entries: 0,
-            bytes: 3 * HEADER as u64,
+            bytes: streams * HEADER as u64,
             _width: PhantomData,
         })
     }
@@ -800,6 +953,14 @@ impl<M: VarMask> ShardWriterSet<M> {
     /// Append one computed batch: `take` subsets' `q`/`r`, their
     /// `take·k` best-parent records, and the batch's buffered sink
     /// records (cleared after the flush).
+    ///
+    /// Dense runs write everything. Prune-format runs consult the
+    /// batch's presence flags ([`SinkBuf::put_pruned`]): `.qr` stays
+    /// dense (every predecessor's `log Q` is read by the next level,
+    /// and a pruned subset's `log R = −∞` is one plain record), while
+    /// the `.bps` rows of pruned subsets are skipped — their slots are
+    /// reconstructed as `−∞` by the reader — and the `.sink` buffer is
+    /// already slim because `put_pruned` buffers no record.
     pub fn append(
         &mut self,
         q: &[f64],
@@ -814,33 +975,69 @@ impl<M: VarMask> ShardWriterSet<M> {
             self.qr.write_all(&q[i].to_le_bytes())?;
             self.qr.write_all(&r[i].to_le_bytes())?;
         }
-        for i in 0..bps.len() {
-            self.bps.write_all(&bps[i].to_le_bytes())?;
-            self.bps
-                .write_all(&bpm[i].to_u64().to_le_bytes()[..M::BYTES])?;
+        let mut bps_written = 0usize;
+        match &mut self.prn {
+            None => {
+                for i in 0..bps.len() {
+                    self.bps.write_all(&bps[i].to_le_bytes())?;
+                    self.bps
+                        .write_all(&bpm[i].to_u64().to_le_bytes()[..M::BYTES])?;
+                }
+                bps_written = bps.len();
+            }
+            Some(prn) => {
+                debug_assert_eq!(
+                    sinks.flags.len(),
+                    q.len(),
+                    "prune-format append needs one presence flag per subset"
+                );
+                for (t, &flag) in sinks.flags.iter().enumerate() {
+                    self.bytes += prn.push(flag == 0)?;
+                    if flag != 0 {
+                        continue;
+                    }
+                    for idx in t * self.k..(t + 1) * self.k {
+                        self.bps.write_all(&bps[idx].to_le_bytes())?;
+                        self.bps
+                            .write_all(&bpm[idx].to_u64().to_le_bytes()[..M::BYTES])?;
+                    }
+                    bps_written += self.k;
+                }
+            }
         }
         self.sink.write_all(&sinks.buf)?;
         self.bytes += (q.len() * QR_RECORD
-            + bps.len() * record_bytes::<M>()
+            + bps_written * record_bytes::<M>()
             + sinks.buf.len()) as u64;
         sinks.buf.clear();
+        sinks.flags.clear();
         self.entries += q.len() as u64;
         Ok(())
     }
 
-    /// Finish all three streams — flush, make durable, and (for staged
+    /// Finish all streams — flush, make durable, and (for staged
     /// writers) publish under the canonical keys; returns (subset
-    /// entries, bytes written). Durability errors propagate: the level
-    /// must not commit over shard data the backend could not persist,
-    /// and a staged stream is only published after its bytes are
-    /// durable. (A crash between the three finishes can leave a mix of
-    /// published and unpublished streams — harmless, because the done
-    /// marker that vouches for the shard is only written after all
-    /// three succeed, and the next attempt republishes identical bytes.)
-    pub fn finish(self) -> Result<(u64, u64)> {
+    /// entries, bytes written). `entries` counts every appended rank,
+    /// present or pruned — the shard covers its full colex range either
+    /// way. Durability errors propagate: the level must not commit over
+    /// shard data the backend could not persist, and a staged stream is
+    /// only published after its bytes are durable. (A crash between the
+    /// finishes can leave a mix of published and unpublished streams —
+    /// harmless, because the done marker that vouches for the shard is
+    /// only written after all succeed, and the next attempt republishes
+    /// identical bytes.)
+    pub fn finish(mut self) -> Result<(u64, u64)> {
+        if let Some(prn) = &mut self.prn {
+            if prn.fill > 0 {
+                self.bytes += prn.flush_block()?;
+            }
+        }
         self.bps.finish()?;
         self.qr.finish()?;
         self.sink.finish()?;
+        if let Some(prn) = self.prn {
+            prn.stream.finish()?;
+        }
         Ok((self.entries, self.bytes))
     }
 }
@@ -963,9 +1160,26 @@ pub struct ShardedLevelReader<M: VarMask> {
     /// `.qr` reader per shard (`None` for empty shards).
     qr: Vec<Option<WindowedRecords>>,
     /// `.bps` reader per shard (`None` for empty shards and at level 0,
-    /// which has no best-parent records).
+    /// which has no best-parent records). Prune-format shards hold slim
+    /// streams: one row of `k` records per *surviving* subset.
     bps: Vec<Option<WindowedRecords>>,
+    /// `.prn` presence sidecar per shard (`None` for dense-format runs,
+    /// level 0 and empty shards).
+    prn: Vec<Option<WindowedRecords>>,
+    /// One decoded `.prn` block, cached — colex locality of the
+    /// drop-one ranks makes consecutive `bps_at` calls hit the same
+    /// block almost every time, so the 520-byte record is not re-copied
+    /// and re-decoded per read.
+    prn_cache: RefCell<PrnBlockCache>,
     _width: PhantomData<M>,
+}
+
+struct PrnBlockCache {
+    /// `(shard, block)` tag; `block < 0` = empty cache.
+    shard: usize,
+    block: i64,
+    prefix: u64,
+    bits: [u8; PRN_RECORD - 8],
 }
 
 impl<M: VarMask> ShardedLevelReader<M> {
@@ -973,13 +1187,16 @@ impl<M: VarMask> ShardedLevelReader<M> {
         debug_assert_eq!(run.mask_bytes, M::BYTES);
         let spec = run.spec(binom, k);
         let slots = slot_cap(spec.shards);
+        let prune_format = run.prune.is_some() && k >= 1;
         let mut qr = Vec::with_capacity(spec.shards);
         let mut bps = Vec::with_capacity(spec.shards);
+        let mut prn = Vec::with_capacity(spec.shards);
         for s in 0..spec.shards {
             let entries = spec.entries(s) as usize;
             if entries == 0 {
                 qr.push(None);
                 bps.push(None);
+                prn.push(None);
                 continue;
             }
             qr.push(Some(WindowedRecords::open(
@@ -992,6 +1209,31 @@ impl<M: VarMask> ShardedLevelReader<M> {
                 entries,
                 slots,
             )?));
+            // a prune-format shard's .bps holds rows for survivors only;
+            // the survivor count comes from the last .prn block (its
+            // before-the-block prefix plus its own popcount)
+            let bps_entries = if prune_format {
+                let blocks = entries.div_ceil(PRN_BLOCK);
+                let reader = WindowedRecords::open(
+                    &run.store,
+                    &run.shard_key(k, s, "prn"),
+                    M::BYTES,
+                    k,
+                    KIND_PRN,
+                    PRN_RECORD,
+                    blocks,
+                    slots,
+                )?;
+                let mut last = [0u8; PRN_RECORD];
+                reader.read_into(blocks - 1, &mut last);
+                let prefix = u64::from_le_bytes(last[..8].try_into().unwrap());
+                let tail: u64 = last[8..].iter().map(|b| b.count_ones() as u64).sum();
+                prn.push(Some(reader));
+                (prefix + tail) as usize * k
+            } else {
+                prn.push(None);
+                entries * k
+            };
             bps.push(if k == 0 {
                 None
             } else {
@@ -1002,7 +1244,7 @@ impl<M: VarMask> ShardedLevelReader<M> {
                     k,
                     KIND_BPS,
                     record_bytes::<M>(),
-                    entries * k,
+                    bps_entries,
                     slots,
                 )?)
             });
@@ -1012,6 +1254,13 @@ impl<M: VarMask> ShardedLevelReader<M> {
             spec,
             qr,
             bps,
+            prn,
+            prn_cache: RefCell::new(PrnBlockCache {
+                shard: 0,
+                block: -1,
+                prefix: 0,
+                bits: [0u8; PRN_RECORD - 8],
+            }),
             _width: PhantomData,
         })
     }
@@ -1045,21 +1294,58 @@ impl<M: VarMask> ShardedLevelReader<M> {
     }
 
     /// Best family score + argmax parent mask at flat index `t*k + pos`.
+    /// In a prune-format level, a pruned subset's row was never written;
+    /// its slots read back as the `(−∞, ∅)` the sweep stored in RAM, so
+    /// the caller-side recurrences are untouched by the slim layout.
     #[inline]
     pub fn bps_at(&self, idx: usize) -> (f64, M) {
         let t = idx / self.k;
         let pos = idx % self.k;
         let (s, local) = self.spec.locate(t as u64);
+        let row = match &self.prn[s] {
+            None => local as usize,
+            Some(prn) => match self.survivor_row(prn, s, local as usize) {
+                Some(row) => row,
+                None => return (f64::NEG_INFINITY, M::ZERO),
+            },
+        };
         let mut buf = [0u8; 16];
         let record = record_bytes::<M>();
         self.bps[s]
             .as_ref()
             .expect("bps read at level 0 or empty shard")
-            .read_into(local as usize * self.k + pos, &mut buf[..record]);
+            .read_into(row * self.k + pos, &mut buf[..record]);
         let score = f64::from_le_bytes(buf[..8].try_into().unwrap());
         let mut raw = [0u8; 8];
         raw[..M::BYTES].copy_from_slice(&buf[8..8 + M::BYTES]);
         (score, M::from_u64(u64::from_le_bytes(raw)))
+    }
+
+    /// Row of shard-local rank `local` in the shard's slim `.bps`
+    /// stream, or `None` if the rank was pruned: the covering `.prn`
+    /// block's survivor prefix plus the popcount of presence bits below
+    /// the rank.
+    fn survivor_row(&self, prn: &WindowedRecords, s: usize, local: usize) -> Option<usize> {
+        let block = local / PRN_BLOCK;
+        let within = local % PRN_BLOCK;
+        let mut cache = self.prn_cache.borrow_mut();
+        if cache.shard != s || cache.block != block as i64 {
+            let mut buf = [0u8; PRN_RECORD];
+            prn.read_into(block, &mut buf);
+            cache.shard = s;
+            cache.block = block as i64;
+            cache.prefix = u64::from_le_bytes(buf[..8].try_into().unwrap());
+            cache.bits.copy_from_slice(&buf[8..]);
+        }
+        if cache.bits[within / 8] & (1 << (within % 8)) == 0 {
+            return None;
+        }
+        let mut row = cache.prefix;
+        for b in &cache.bits[..within / 8] {
+            row += b.count_ones() as u64;
+        }
+        row += (cache.bits[within / 8] & ((1u8 << (within % 8)) - 1)).count_ones() as u64;
+        Some(row as usize)
     }
 
     /// Resident bytes of this reader's window caches (memory accounting).
@@ -1071,7 +1357,7 @@ impl<M: VarMask> ShardedLevelReader<M> {
                 .map(WindowedRecords::resident_bytes)
                 .sum()
         };
-        sum(&self.qr) + sum(&self.bps)
+        sum(&self.qr) + sum(&self.bps) + sum(&self.prn)
     }
 }
 
@@ -1135,6 +1421,42 @@ pub fn reconstruct_from_disk<M: VarMask>(
     for k in (1..=p).rev() {
         let rank = colex_rank(binom, mask);
         let (s, local) = run.spec(binom, k).locate(rank);
+        // prune-format levels store slim .sink streams: route the
+        // shard-local rank through the .prn presence sidecar. The chain
+        // subsets of the optimal order always survive the bound check
+        // (the bounds are admissible), so an absent record here means
+        // the directory is corrupt, not that pruning was too eager.
+        let sink_idx = if run.prune.is_some() {
+            let mut prn = [0u8; PRN_RECORD];
+            read_one_record(
+                &run.store,
+                &run.shard_key(k, s, "prn"),
+                M::BYTES,
+                k,
+                KIND_PRN,
+                PRN_RECORD,
+                local / PRN_BLOCK as u64,
+                &mut prn,
+            )?;
+            let within = (local % PRN_BLOCK as u64) as usize;
+            let bits = &prn[8..];
+            if bits[within / 8] & (1 << (within % 8)) == 0 {
+                bail!(
+                    "{}: the optimal order's rank-{rank} subset was pruned \
+                     from level {k} — the run directory is corrupt or its \
+                     bounds were not admissible",
+                    run.shard_file(k, s, "prn").display()
+                );
+            }
+            let mut row = u64::from_le_bytes(prn[..8].try_into().unwrap());
+            for b in &bits[..within / 8] {
+                row += b.count_ones() as u64;
+            }
+            row += (bits[within / 8] & ((1u8 << (within % 8)) - 1)).count_ones() as u64;
+            row
+        } else {
+            local
+        };
         read_one_record(
             &run.store,
             &run.shard_key(k, s, "sink"),
@@ -1142,7 +1464,7 @@ pub fn reconstruct_from_disk<M: VarMask>(
             k,
             KIND_SINK,
             record,
-            local,
+            sink_idx,
             &mut buf,
         )?;
         let x = buf[0] as usize;
@@ -1227,7 +1549,7 @@ mod tests {
             ..Default::default()
         };
         let mut run =
-            ShardRun::open_or_create(&opts, 12, 200, 4, "Jeffreys", "00ff00ff00ff00ff").unwrap();
+            ShardRun::open_or_create(&opts, 12, 200, 4, "Jeffreys", "00ff00ff00ff00ff", None).unwrap();
         assert_eq!(run.completed, None);
         run.commit_level(0).unwrap();
         run.commit_level(1).unwrap();
@@ -1248,6 +1570,7 @@ mod tests {
             4,
             "Jeffreys",
             "00ff00ff00ff00ff",
+            None,
         )
         .unwrap();
         assert_eq!(resumed.shards, 4);
@@ -1264,14 +1587,14 @@ mod tests {
             dir: dir.clone(),
             ..Default::default()
         };
-        ShardRun::open_or_create(&opts, 9, 50, 4, "Bic", "abcd").unwrap();
+        ShardRun::open_or_create(&opts, 9, 50, 4, "Bic", "abcd", None).unwrap();
         let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
-        assert!(text.contains("\"format\": 2"), "{text}");
+        assert!(text.contains("\"format\": 3"), "{text}");
         assert!(text.contains("\"hosts\": 3"), "{text}");
         assert_eq!(ShardRun::open(&dir).unwrap().hosts, 3);
         // a v1 manifest (no hosts field) still opens, defaulting to 1
         let v1 = text
-            .replace("\"format\": 2", "\"format\": 1")
+            .replace("\"format\": 3", "\"format\": 1")
             .lines()
             .filter(|l| !l.contains("\"hosts\""))
             .collect::<Vec<_>>()
@@ -1280,7 +1603,7 @@ mod tests {
         let back = ShardRun::open(&dir).unwrap();
         assert_eq!(back.hosts, 1);
         // ...and a future format is rejected by version range
-        let v9 = text.replace("\"format\": 2", "\"format\": 9");
+        let v9 = text.replace("\"format\": 3", "\"format\": 9");
         std::fs::write(dir.join("manifest.json"), v9).unwrap();
         let err = ShardRun::open(&dir).unwrap_err().to_string();
         assert!(err.contains("format 9"), "{err}");
@@ -1295,7 +1618,7 @@ mod tests {
             dir: dir.clone(),
             ..Default::default()
         };
-        let run = ShardRun::open_or_create(&opts, 8, 10, 4, "Jeffreys", "ff").unwrap();
+        let run = ShardRun::open_or_create(&opts, 8, 10, 4, "Jeffreys", "ff", None).unwrap();
         let k = 2;
         let mut w = ShardWriterSet::<u32>::create_staged(&run, k, 0, "host-0001-42").unwrap();
         let mut sinks = SinkBuf::default();
@@ -1335,7 +1658,7 @@ mod tests {
             dir: dir.clone(),
             ..Default::default()
         };
-        let mut run = ShardRun::open_or_create(&opts, 6, 10, 4, "Bic", "11").unwrap();
+        let mut run = ShardRun::open_or_create(&opts, 6, 10, 4, "Bic", "11", None).unwrap();
         // skipping ahead is rejected
         let err = run.commit_level(1).unwrap_err().to_string();
         assert!(err.contains("out of order"), "{err}");
@@ -1350,7 +1673,7 @@ mod tests {
 
     #[test]
     fn fd_budget_prices_cluster_margin() {
-        assert_eq!(fd_budget(2, 4, false), 2 * 11 + 32);
+        assert_eq!(fd_budget(2, 4, false), 2 * 16 + 32);
         assert_eq!(
             fd_budget(2, 4, true),
             fd_budget(2, 4, false) + CLUSTER_FD_MARGIN
@@ -1365,12 +1688,12 @@ mod tests {
             dir: dir.clone(),
             ..Default::default()
         };
-        ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "aaaa").unwrap();
-        let err = ShardRun::open_or_create(&opts, 11, 100, 4, "Bic", "aaaa")
+        ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "aaaa", None).unwrap();
+        let err = ShardRun::open_or_create(&opts, 11, 100, 4, "Bic", "aaaa", None)
             .unwrap_err()
             .to_string();
         assert!(err.contains("p"), "{err}");
-        let err = ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "bbbb")
+        let err = ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "bbbb", None)
             .unwrap_err()
             .to_string();
         assert!(err.contains("fingerprint"), "{err}");
@@ -1385,6 +1708,7 @@ mod tests {
             4,
             "Bic",
             "aaaa",
+            None,
         )
         .unwrap_err()
         .to_string();
@@ -1406,6 +1730,7 @@ mod tests {
             4,
             "Jeffreys",
             "cc",
+            None,
         )
         .unwrap_err()
         .to_string();
@@ -1424,7 +1749,7 @@ mod tests {
             dir: dir.clone(),
             ..Default::default()
         };
-        let mut run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "ee").unwrap();
+        let mut run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "ee", None).unwrap();
         for lvl in 0..k {
             run.commit_level(lvl).ok();
         }
@@ -1467,6 +1792,154 @@ mod tests {
     }
 
     #[test]
+    fn manifest_v3_roundtrips_the_prune_stamp() {
+        let dir = tmpdir("prune_stamp");
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let stamp = PruneStamp {
+            incumbent_bits: (-12.5f64).to_bits(),
+            ub_hash: 0xfeed_beef_dead_cafe,
+        };
+        ShardRun::open_or_create(&opts, 7, 10, 4, "Bic", "ab12", Some(stamp)).unwrap();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(text.contains("feedbeefdeadcafe"), "{text}");
+        assert_eq!(ShardRun::open(&dir).unwrap().prune, Some(stamp));
+        // on resume the manifest's recorded stamp wins over the caller's
+        let resumed =
+            ShardRun::open_or_create(&opts, 7, 10, 4, "Bic", "ab12", None).unwrap();
+        assert_eq!(resumed.prune, Some(stamp), "manifest stamp survives resume");
+        // a manifest without the fields is a plain dense-format run…
+        let dense = text
+            .lines()
+            .filter(|l| !l.contains("prune_"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(dir.join("manifest.json"), &dense).unwrap();
+        assert_eq!(ShardRun::open(&dir).unwrap().prune, None);
+        // …and a half-written stamp is rejected as corrupt
+        let half = text
+            .lines()
+            .filter(|l| !l.contains("prune_ub_hash"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(dir.join("manifest.json"), &half).unwrap();
+        let err = ShardRun::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("prune_incumbent"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pruned_ranks_vanish_from_bps_but_stay_dense_in_qr() {
+        let dir = tmpdir("prune_slim");
+        // C(16,8) = 12870: each of 2 shards spans more than one 4096-rank
+        // .prn block, so the survivor-prefix arithmetic crosses blocks.
+        let p = 16;
+        let k = 8;
+        let binom = BinomTable::new(p);
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let stamp = PruneStamp {
+            incumbent_bits: 1,
+            ub_hash: 2,
+        };
+        let mut run =
+            ShardRun::open_or_create(&opts, p, 10, 4, "Bic", "cc", Some(stamp)).unwrap();
+        for lvl in 0..k {
+            run.commit_level(lvl).ok();
+        }
+        let spec = run.spec(&binom, k);
+        let dropped = |t: u64| t % 3 == 1;
+        for s in 0..spec.shards {
+            let (lo, hi) = spec.bounds(s);
+            let mut w = ShardWriterSet::<u32>::create(&run, k, s).unwrap();
+            let mut sinks = SinkBuf::default();
+            for t in lo..hi {
+                if dropped(t) {
+                    sinks.put_pruned(t as u32);
+                } else {
+                    sinks.put(t as u32, (t % 5) as u8, t as u32);
+                }
+                let bps: Vec<f64> = (0..k).map(|j| (t as usize * k + j) as f64).collect();
+                let bpm: Vec<u32> = (0..k).map(|j| (t as u32) ^ (j as u32)).collect();
+                w.append(&[t as f64], &[-(t as f64)], &bps, &bpm, &mut sinks)
+                    .unwrap();
+            }
+            let (entries, _) = w.finish().unwrap();
+            assert_eq!(entries, hi - lo, "entries count totals, not survivors");
+            assert!(
+                run.shard_file(k, s, "prn").exists(),
+                "prune-format shards always carry a presence sidecar"
+            );
+        }
+        run.commit_level(k).unwrap();
+        let reader = ShardedLevelReader::<u32>::open(&run, &binom, k).unwrap();
+        for t in (0..spec.size as usize).step_by(7) {
+            // q and r stay dense — every rank reads back
+            assert_eq!(reader.q_at(t), t as f64);
+            assert_eq!(reader.r_at(t), -(t as f64));
+            for j in 0..k {
+                let (sc, m) = reader.bps_at(t * k + j);
+                if dropped(t as u64) {
+                    assert_eq!(sc, f64::NEG_INFINITY, "rank {t} was pruned");
+                    assert_eq!(m, 0);
+                } else {
+                    assert_eq!(sc, (t * k + j) as f64, "rank {t} survived");
+                    assert_eq!(m, (t as u32) ^ (j as u32));
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_format_without_drops_is_all_present() {
+        let dir = tmpdir("prune_nodrop");
+        let p = 8;
+        let k = 3;
+        let binom = BinomTable::new(p);
+        let opts = ShardOptions {
+            shards: 2,
+            dir: dir.clone(),
+            ..Default::default()
+        };
+        let stamp = PruneStamp {
+            incumbent_bits: 3,
+            ub_hash: 4,
+        };
+        let run =
+            ShardRun::open_or_create(&opts, p, 10, 4, "Bic", "dd", Some(stamp)).unwrap();
+        let spec = run.spec(&binom, k);
+        for s in 0..spec.shards {
+            let (lo, hi) = spec.bounds(s);
+            let mut w = ShardWriterSet::<u32>::create(&run, k, s).unwrap();
+            let mut sinks = SinkBuf::default();
+            for t in lo..hi {
+                sinks.put(t as u32, 0, t as u32);
+                let bps: Vec<f64> = (0..k).map(|j| (t as usize * k + j) as f64).collect();
+                w.append(&[t as f64], &[0.0], &bps, &vec![0u32; k], &mut sinks)
+                    .unwrap();
+            }
+            w.finish().unwrap();
+            // the sidecar is written even when nothing was pruned, so the
+            // level's on-disk format is uniform for readers and resumes
+            assert!(run.shard_file(k, s, "prn").exists());
+        }
+        let reader = ShardedLevelReader::<u32>::open(&run, &binom, k).unwrap();
+        for t in 0..spec.size as usize {
+            for j in 0..k {
+                assert_eq!(reader.bps_at(t * k + j).0, (t * k + j) as f64);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn reader_names_corrupt_and_truncated_files() {
         let dir = tmpdir("corrupt");
         let p = 8;
@@ -1477,7 +1950,7 @@ mod tests {
             dir: dir.clone(),
             ..Default::default()
         };
-        let run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "dd").unwrap();
+        let run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "dd", None).unwrap();
         let spec = run.spec(&binom, k);
         for s in 0..spec.shards {
             let (lo, hi) = spec.bounds(s);
@@ -1536,7 +2009,7 @@ mod tests {
             backend: BackendKind::Object,
             ..Default::default()
         };
-        let mut run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "0b0b").unwrap();
+        let mut run = ShardRun::open_or_create(&opts, p, 10, 4, "Jeffreys", "0b0b", None).unwrap();
         assert_eq!(run.store().kind(), BackendKind::Object);
         for lvl in 0..k {
             run.commit_level(lvl).ok();
@@ -1604,7 +2077,7 @@ mod tests {
             backend: BackendKind::Object,
             ..Default::default()
         };
-        let mut run = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "cafe").unwrap();
+        let mut run = ShardRun::open_or_create(&opts, 8, 40, 4, "Jeffreys", "cafe", None).unwrap();
         run.commit_level(0).unwrap();
         // a second host joins through a store whose next TWO GETs lie:
         // the existence probe (sending it down the create path, where
@@ -1617,7 +2090,7 @@ mod tests {
             .store(2, std::sync::atomic::Ordering::Relaxed);
         let store: SharedBackend = Arc::new(object);
         let joined =
-            ShardRun::open_or_create_on(store, &opts, 8, 40, 4, "Jeffreys", "cafe").unwrap();
+            ShardRun::open_or_create_on(store, &opts, 8, 40, 4, "Jeffreys", "cafe", None).unwrap();
         assert_eq!(
             joined.completed,
             Some(0),
@@ -1650,6 +2123,7 @@ mod tests {
             4,
             "Jeffreys",
             "cafe",
+            None,
         )
         .unwrap();
         assert_eq!(resumed.completed, Some(0));
@@ -1665,7 +2139,7 @@ mod tests {
             backend: BackendKind::Object,
             ..Default::default()
         };
-        ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "aaaa").unwrap();
+        ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "aaaa", None).unwrap();
         // resume with shards = 0 adopts the manifest geometry
         let resumed = ShardRun::open_or_create(
             &ShardOptions {
@@ -1679,11 +2153,12 @@ mod tests {
             4,
             "Bic",
             "aaaa",
+            None,
         )
         .unwrap();
         assert_eq!(resumed.shards, 2);
         // identity mismatches are rejected by name, same as POSIX
-        let err = ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "bbbb")
+        let err = ShardRun::open_or_create(&opts, 10, 100, 4, "Bic", "bbbb", None)
             .unwrap_err()
             .to_string();
         assert!(err.contains("fingerprint"), "{err}");
@@ -1702,6 +2177,7 @@ mod tests {
             4,
             "Bic",
             "aaaa",
+            None,
         )
         .unwrap_err()
         .to_string();

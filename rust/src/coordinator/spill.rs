@@ -61,6 +61,11 @@ pub(crate) const KIND_BPS: u8 = 0;
 pub(crate) const KIND_QR: u8 = 1;
 /// Sink records: sink variable byte + parent mask per record.
 pub(crate) const KIND_SINK: u8 = 2;
+/// Prune-presence records (`.prn` sidecars of prune-format sharded
+/// runs): one 520-byte block record per 4096 colex ranks — a little-
+/// endian `u64` count of surviving subsets *before* the block, then a
+/// 512-byte presence bitmap (bit set = the rank's records were emitted).
+pub(crate) const KIND_PRN: u8 = 3;
 
 /// Bytes per record at width `M`: little-endian f64 score + mask.
 #[inline]

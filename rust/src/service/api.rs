@@ -55,6 +55,11 @@ pub struct SubmitRequest {
     /// coordinator (no on-disk run artifacts; cancel re-runs from
     /// scratch). Mutually exclusive with `shards > 1`.
     pub streaming: bool,
+    /// Gate record emission behind the admissible bounds layer
+    /// ([`crate::solver::PruneMode::Auto`]). Dataset-backed jobs only —
+    /// a `.jaa` table carries no sufficient statistics to bound, so
+    /// `scores` jobs reject this flag.
+    pub prune: bool,
 }
 
 impl Default for SubmitRequest {
@@ -69,6 +74,7 @@ impl Default for SubmitRequest {
             threads: 0,
             batch: 1024,
             streaming: false,
+            prune: false,
         }
     }
 }
@@ -118,6 +124,10 @@ impl SubmitRequest {
                     Json::Bool(flag) => req.streaming = flag,
                     other => bail!("field 'streaming' must be a boolean, got {other:?}"),
                 },
+                "prune" => match value {
+                    Json::Bool(flag) => req.prune = flag,
+                    other => bail!("field 'prune' must be a boolean, got {other:?}"),
+                },
                 _ => {} // unknown fields ignored (forward compatibility)
             }
         }
@@ -155,6 +165,13 @@ impl SubmitRequest {
                 req.shards
             );
         }
+        if req.prune && req.scores.is_some() {
+            bail!(
+                "'prune' builds its admissible bounds from the dataset's \
+                 sufficient statistics; a 'scores' table carries none — \
+                 drop 'prune'"
+            );
+        }
         Ok(req)
     }
 
@@ -178,6 +195,7 @@ impl SubmitRequest {
             .set("threads", self.threads)
             .set("batch", self.batch)
             .set("streaming", self.streaming)
+            .set("prune", self.prune)
     }
 
     /// Resolve the score name (`bnsl learn --score` grammar).
@@ -333,6 +351,33 @@ mod tests {
         // streaming stays allowed: it is an in-RAM layout, like the table
         let doc = Json::parse(r#"{"scores": "x", "streaming": true}"#).unwrap();
         assert!(SubmitRequest::from_json(doc).unwrap().streaming);
+    }
+
+    /// Tentpole (ISSUE 8): the `prune` flag roundtrips on dataset jobs
+    /// and is rejected structurally on dataset-free `scores` jobs.
+    #[test]
+    fn prune_flag_roundtrips_and_excludes_scores_jobs() {
+        let doc = Json::parse(r#"{"csv": "a,b\n0,1\n", "prune": true}"#).unwrap();
+        let req = SubmitRequest::from_json(doc).unwrap();
+        assert!(req.prune);
+        let back = SubmitRequest::from_json(req.to_json()).unwrap();
+        assert!(back.prune);
+        for text in [
+            r#"{"scores": "x", "prune": true}"#, // nothing to bound
+            r#"{"csv": "x", "prune": 1}"#,       // wrong type
+        ] {
+            let doc = Json::parse(text).unwrap();
+            assert!(SubmitRequest::from_json(doc).is_err(), "{text}");
+        }
+        // prune composes with both execution styles of dataset jobs
+        for text in [
+            r#"{"csv": "x", "prune": true, "shards": 4}"#,
+            r#"{"csv": "x", "prune": true, "streaming": true}"#,
+            r#"{"scores": "x", "prune": false}"#, // explicit false is fine
+        ] {
+            let doc = Json::parse(text).unwrap();
+            assert!(SubmitRequest::from_json(doc).is_ok(), "{text}");
+        }
     }
 
     #[test]

@@ -112,6 +112,11 @@ struct Job {
     /// Memory-only streaming run: no run dir, no manifest; a cancel or
     /// restart re-runs from scratch.
     streaming: bool,
+    /// Gate record emission behind the admissible bounds layer
+    /// ([`crate::solver::PruneMode::Auto`]). Pruned and dense solves are
+    /// bit-identical on the surviving optimum, so the flag is *not* part
+    /// of the fingerprint — identical submissions dedupe across it.
+    prune: bool,
     /// Dataset-free submission: the staged payload is a `.jaa` score
     /// table ([`crate::engine::ScoreTable`]) served by the table engine.
     scores: bool,
@@ -198,6 +203,7 @@ struct Claim {
     threads: usize,
     batch: usize,
     streaming: bool,
+    prune: bool,
     scores: bool,
     cancel: CancelToken,
 }
@@ -381,6 +387,7 @@ impl JobManager {
             .set("threads", job.threads)
             .set("batch", job.batch)
             .set("streaming", job.streaming)
+            .set("prune", job.prune)
             .set("scores", job.scores)
             .set("backend", self.run_backend.name())
             .set(
@@ -463,6 +470,14 @@ impl JobManager {
                 req.shards
             )));
         }
+        if req.prune && req.scores.is_some() {
+            return Err(SubmitError::Invalid(
+                "'prune' builds its admissible bounds from the dataset's \
+                 sufficient statistics; a 'scores' table carries none — \
+                 drop 'prune'"
+                    .to_string(),
+            ));
+        }
         let is_scores = req.scores.is_some();
         let (fingerprint, p, n, score_name) = if is_scores {
             // dataset-free form: parse + restrict the table now so a bad
@@ -529,7 +544,10 @@ impl JobManager {
                 req.score.clone(),
             )
         };
-        // price exactly the mode that will run (both off the lock)
+        // price exactly the mode that will run (both off the lock);
+        // pruned jobs are admitted at the dense (ratio-0) price — the
+        // measured prune ratio is data-dependent, so admission must not
+        // bank on savings that may not materialise
         let stream_plan = req.streaming.then(|| streaming_plan(p));
         let plan = (!req.streaming).then(|| sharded_plan(p, req.shards, req.threads, req.batch));
 
@@ -602,6 +620,7 @@ impl JobManager {
                 threads: req.threads,
                 batch: req.batch,
                 streaming: req.streaming,
+                prune: req.prune,
                 scores: is_scores,
                 error: None,
                 cancel: CancelToken::new(),
@@ -694,6 +713,7 @@ impl JobManager {
                 threads: job.threads,
                 batch: job.batch,
                 streaming: job.streaming,
+                prune: job.prune,
                 scores: job.scores,
                 cancel: job.cancel.clone(),
             };
@@ -821,6 +841,8 @@ impl JobManager {
                     keep_levels: false,
                     hosts: 1,
                     backend: self.run_backend,
+                    // a table carries no sufficient statistics to bound
+                    prune: crate::solver::PruneMode::Off,
                     cancel: claim.cancel.clone(),
                 })
             };
@@ -893,6 +915,11 @@ impl JobManager {
             keep_levels: false,
             hosts: 1,
             backend: self.run_backend,
+            prune: if claim.prune {
+                crate::solver::PruneMode::Auto
+            } else {
+                crate::solver::PruneMode::Off
+            },
             cancel: claim.cancel.clone(),
         };
         Ok(Prepared {
@@ -956,6 +983,14 @@ impl JobManager {
                     threads,
                     batch: (*batch).max(1),
                     cancel: cancel.clone(),
+                    // claim.prune is dataset-only (submit rejects the
+                    // combination); the guard keeps a hand-edited
+                    // ledger from pruning a table job
+                    prune: if claim.prune && !claim.scores {
+                        crate::solver::PruneMode::Auto
+                    } else {
+                        crate::solver::PruneMode::Off
+                    },
                     ..Default::default()
                 };
                 let solved = match prepared.width {
@@ -1202,6 +1237,8 @@ fn job_from_doc(doc: &Json, dir_name: &str, ledger: &std::path::Path) -> Result<
         batch: count_field("batch")?,
         // absent in pre-streaming ledgers: default to the sharded mode
         streaming: matches!(doc.get("streaming"), Some(Json::Bool(true))),
+        // absent in pre-prune ledgers: default to the dense full sweep
+        prune: matches!(doc.get("prune"), Some(Json::Bool(true))),
         // absent in pre-scores ledgers: default to a dataset job
         scores: matches!(doc.get("scores"), Some(Json::Bool(true))),
         error: doc
@@ -1570,6 +1607,43 @@ mod tests {
         let b = mgr.submit(&inline_request(&text, 2)).unwrap();
         assert!(b.deduped && b.cached);
         assert_eq!(b.id, a.id);
+        assert_eq!(mgr.solver_runs(), 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Tentpole (ISSUE 8): a `prune: true` submission runs the bounds-
+    /// gated sharded solve and publishes a record bit-identical to the
+    /// dense resident solver's — and because pruning never moves the
+    /// optimum, the flag stays out of the fingerprint, so a later dense
+    /// submission of the same dataset is a cache hit.
+    #[test]
+    fn pruned_job_matches_the_dense_solver_and_dedupes_across_the_flag() {
+        let root = temp_root("prunejob");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::random(8, 64, 3, &mut crate::util::rng::Rng::new(29));
+        let text = csv_text(&d);
+        let req = SubmitRequest {
+            csv: Some(text.clone()),
+            shards: 2,
+            prune: true,
+            ..Default::default()
+        };
+        let a = mgr.submit(&req).unwrap();
+        assert!(!a.deduped && !a.cached);
+        assert!(mgr.run_one());
+        assert_eq!(mgr.job_state(&a.id), Some(JobState::Done));
+        let status = mgr.status_json(&a.id).unwrap();
+        assert_eq!(status.get("prune"), Some(&Json::Bool(true)));
+        let parsed = parse_csv(&text).unwrap();
+        let engine = NativeEngine::new(&parsed, ScoreKind::Jeffreys);
+        let direct = LeveledSolver::new(&engine).solve();
+        let record = mgr.result_text(&a.id).unwrap().expect("result ready");
+        let doc = Json::parse(&record).unwrap();
+        let served = doc.get("log_score").unwrap().as_f64().unwrap();
+        assert_eq!(served.to_bits(), direct.log_score.to_bits());
+        // same dataset, dense: bit-identity makes the cached record valid
+        let b = mgr.submit(&inline_request(&text, 1)).unwrap();
+        assert!(b.deduped && b.cached);
         assert_eq!(mgr.solver_runs(), 1);
         let _ = std::fs::remove_dir_all(&root);
     }

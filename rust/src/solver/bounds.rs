@@ -1,0 +1,378 @@
+//! Admissible order-graph pruning bounds — the BFBnB layer.
+//!
+//! Frontier breadth-first branch and bound (Malone et al.; Karan & Zola)
+//! prunes the order graph with an admissible heuristic: a subset `W` can
+//! be dropped when even the most optimistic completion of any ordering
+//! through `W` cannot beat an incumbent network. This module supplies
+//! the two ingredients and the shared bookkeeping:
+//!
+//! * **Per-variable admissible caps** `ub[X]` — the saturated maximum-
+//!   likelihood conditional log-likelihood `LL_ML(X | V∖{X})`, computed
+//!   once in `O(p² · n log n)` by grouping rows on the full context of
+//!   each variable. For every parent set `Π ⊆ V∖{X}` and every shipped
+//!   scoring function, `family(X, Π) ≤ ub[X]`:
+//!
+//!   - `LL_ML(X | Π) ≤ LL_ML(X | V∖{X})`: conditioning on a refinement
+//!     of the context partition never decreases the maximized
+//!     log-likelihood (each coarse block's ML is the sum of its
+//!     sub-blocks' MLs plus a non-negative information gain).
+//!   - Marginal-likelihood scores (Jeffreys, BDeu): the integral over
+//!     parameters is bounded by the maximized likelihood, so
+//!     `family(X, Π) ≤ LL_ML(X | Π)`.
+//!   - Penalized scores (BIC, AIC): `family = LL_ML − penalty` with a
+//!     non-negative penalty.
+//!
+//!   Note the bound deliberately does **not** reuse the level-1
+//!   best-parent scores: those are *achievements* of particular parent
+//!   sets (lower bounds on the per-variable optimum), not admissible
+//!   caps — larger parent sets can score strictly higher.
+//!
+//! * **An incumbent** `I` — the total score of the deterministic
+//!   [`hill_climb`] network (fixed options, seed 0). Any admissible
+//!   `I ≤ OPT` works; a tighter incumbent prunes more.
+//!
+//! The solvers then keep a subset `W` at level `k < p` iff either
+//! optimistic completion survives the threshold `I − ε`:
+//!
+//! * `f̂(W) = r(W) + Σ_{X ∉ W} ub[X] ≥ I − ε` — the best ordering that
+//!   *starts* with `W` (exact prefix score plus capped suffix), or
+//! * `m̂(W) = max_{X ∈ W} (bps(X, W∖{X}) − ub[X]) + Σ_X ub[X] ≥ I − ε`
+//!   — `W` may still *carry* a best-parent-set record some superset
+//!   needs even when no good ordering starts with `W` itself.
+//!
+//! The carrier term `m̂` is what makes the pruned sweep bit-identical
+//! to the unpruned one (see `docs/ARCHITECTURE.md`, "The bounds
+//! layer"): dropping a subset removes its `bps` records from the
+//! inheritance lattice, so a subset is only dropped when provably no
+//! optimal network routes a family *or* an ordering through it.
+//! Everything this layer skips is record *emission* — sink records,
+//! `bps` rows, shard-file bytes; every subset is still scored, so the
+//! closed-form operation counters (Appendix A) are unchanged.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::score::ScoreKind;
+use crate::search::{hill_climb, HillClimbOptions};
+use crate::util::check::fnv1a;
+
+/// Whether (and how) a solver prunes provably-dominated records.
+#[derive(Clone, Debug, Default)]
+pub enum PruneMode {
+    /// No pruning — the seed behavior, and the paper-faithful default.
+    #[default]
+    Off,
+    /// Build a [`PruneCtx`] from the engine's dataset at solve entry
+    /// (saturated-LL caps + deterministic hillclimb incumbent). Only
+    /// meaningful for dataset-backed engines.
+    Auto,
+    /// Caller-supplied context. The caller owns the admissibility
+    /// contract: an inadmissible bound or an incumbent above the true
+    /// optimum silently breaks the bit-identity guarantee (that failure
+    /// mode is exactly what the regression tests inject).
+    Custom(Arc<PruneCtx>),
+}
+
+impl PruneMode {
+    /// Resolve to a concrete context (`Auto` builds one from `data`).
+    pub fn resolve(&self, data: &Dataset, kind: ScoreKind) -> Option<Arc<PruneCtx>> {
+        match self {
+            PruneMode::Off => None,
+            PruneMode::Auto => Some(Arc::new(PruneCtx::build(data, kind))),
+            PruneMode::Custom(ctx) => Some(ctx.clone()),
+        }
+    }
+}
+
+/// Fingerprint of a [`PruneCtx`] — persisted in sharded-run manifests so
+/// a resume (or a cluster peer joining a run) can prove it reconstructed
+/// the *same* bounds and incumbent. The threshold must be constant
+/// across every level of one run: pruning level `k` against a higher
+/// incumbent than level `k−1` used can drop records the earlier levels'
+/// survivors rely on. Host-dependent `libm` rounding would be exactly
+/// such a drift, which is why the hash covers every `ub` bit pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PruneStamp {
+    /// `f64::to_bits` of the incumbent score.
+    pub incumbent_bits: u64,
+    /// FNV-1a over the per-variable bound bit patterns.
+    pub ub_hash: u64,
+}
+
+/// The shared pruning context: per-variable admissible caps, the
+/// incumbent threshold, and the (atomic) prune counters the solvers
+/// report through `SolveStats`.
+#[derive(Debug)]
+pub struct PruneCtx {
+    ub: Vec<f64>,
+    total_ub: f64,
+    incumbent: f64,
+    eps: f64,
+    considered: AtomicU64,
+    pruned: AtomicU64,
+}
+
+impl PruneCtx {
+    /// Build the context for a dataset: saturated-LL caps plus the
+    /// deterministic hillclimb incumbent (default options, seed 0 —
+    /// the same inputs always produce the same stamp on one host).
+    pub fn build(data: &Dataset, kind: ScoreKind) -> PruneCtx {
+        let ub = saturated_ll_bounds(data);
+        let incumbent = hill_climb(data, kind, &HillClimbOptions::default()).log_score;
+        PruneCtx::from_parts(ub, incumbent)
+    }
+
+    /// Assemble a context from explicit parts. Public so tests (and the
+    /// resume path's stamp validation) can construct contexts directly;
+    /// admissibility of `ub` and `incumbent ≤ OPT` are the caller's
+    /// contract.
+    pub fn from_parts(ub: Vec<f64>, incumbent: f64) -> PruneCtx {
+        let total_ub = ub.iter().sum();
+        // Relative slack so float roundoff in `f̂`/`m̂` accumulation can
+        // never tip a protected subset below the threshold.
+        let eps = 1e-6 * (1.0 + incumbent.abs());
+        PruneCtx {
+            ub,
+            total_ub,
+            incumbent,
+            eps,
+            considered: AtomicU64::new(0),
+            pruned: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of variables the bounds cover.
+    pub fn p(&self) -> usize {
+        self.ub.len()
+    }
+
+    /// The admissible cap for variable `x`.
+    #[inline]
+    pub fn ub(&self, x: usize) -> f64 {
+        self.ub[x]
+    }
+
+    /// `Σ_X ub[X]` over all variables.
+    #[inline]
+    pub fn total_ub(&self) -> f64 {
+        self.total_ub
+    }
+
+    /// The incumbent network score `I` seeding the threshold.
+    pub fn incumbent(&self) -> f64 {
+        self.incumbent
+    }
+
+    /// The prune threshold `I − ε`: a subset whose optimistic bounds
+    /// both fall below this provably carries nothing the optimum needs.
+    #[inline]
+    pub fn threshold(&self) -> f64 {
+        self.incumbent - self.eps
+    }
+
+    /// The resume-validation fingerprint.
+    pub fn stamp(&self) -> PruneStamp {
+        let mut bytes = Vec::with_capacity(self.ub.len() * 8);
+        for &b in &self.ub {
+            bytes.extend_from_slice(&b.to_bits().to_le_bytes());
+        }
+        PruneStamp {
+            incumbent_bits: self.incumbent.to_bits(),
+            ub_hash: fnv1a(&bytes),
+        }
+    }
+
+    /// Batched counter flush from one `run_range` call.
+    #[inline]
+    pub fn note(&self, considered: u64, pruned: u64) {
+        if considered > 0 {
+            self.considered.fetch_add(considered, Ordering::Relaxed);
+        }
+        if pruned > 0 {
+            self.pruned.fetch_add(pruned, Ordering::Relaxed);
+        }
+    }
+
+    /// Subsets that went through the bound check so far.
+    pub fn considered(&self) -> u64 {
+        self.considered.load(Ordering::Relaxed)
+    }
+
+    /// Subsets whose records were skipped so far.
+    pub fn pruned(&self) -> u64 {
+        self.pruned.load(Ordering::Relaxed)
+    }
+}
+
+/// `ub[x] = LL_ML(x | V∖{x})`: group rows on the full context (every
+/// column except `x`) and sum `Σ_blocks Σ_values c · ln(c / block)`.
+/// Sort-based grouping keeps it allocation-light and deterministic —
+/// runs are visited in sorted context order, values in value order.
+fn saturated_ll_bounds(data: &Dataset) -> Vec<f64> {
+    let n = data.n();
+    let p = data.p();
+    let mut ub = vec![0.0f64; p];
+    if n == 0 {
+        return ub;
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    for x in 0..p {
+        let context = |a: usize, b: usize| -> std::cmp::Ordering {
+            for v in 0..p {
+                if v == x {
+                    continue;
+                }
+                match data.value(a, v).cmp(&data.value(b, v)) {
+                    std::cmp::Ordering::Equal => {}
+                    other => return other,
+                }
+            }
+            std::cmp::Ordering::Equal
+        };
+        idx.sort_unstable_by(|&a, &b| context(a as usize, b as usize));
+        let col = data.column(x);
+        let arity = data.arities()[x] as usize;
+        let mut counts = vec![0u64; arity.max(1)];
+        let mut ll = 0.0f64;
+        let mut i = 0usize;
+        while i < n {
+            let mut j = i + 1;
+            while j < n
+                && context(idx[i] as usize, idx[j] as usize) == std::cmp::Ordering::Equal
+            {
+                j += 1;
+            }
+            for &row in &idx[i..j] {
+                counts[col[row as usize] as usize] += 1;
+            }
+            let block = (j - i) as f64;
+            for c in counts.iter_mut() {
+                if *c > 0 {
+                    let count = *c as f64;
+                    ll += count * (count / block).ln();
+                    *c = 0;
+                }
+            }
+            i = j;
+        }
+        ub[x] = ll;
+    }
+    ub
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitset::VarMask;
+    use crate::data::synth;
+    use crate::score::LocalScorer;
+    use crate::util::rng::Rng;
+
+    const ALL_KINDS: [ScoreKind; 5] = [
+        ScoreKind::Jeffreys,
+        ScoreKind::JeffreysObserved,
+        ScoreKind::Bdeu { ess: 1.0 },
+        ScoreKind::Bic,
+        ScoreKind::Aic,
+    ];
+
+    fn random_dataset(p: usize, n: usize, seed: u64) -> Dataset {
+        synth::random(p, n, 3, &mut Rng::new(seed))
+    }
+
+    /// Exhaustive admissibility check: for every variable `x` and every
+    /// parent set `Π ⊆ V∖{x}`, `family(x, Π) ≤ ub[x]` (within float
+    /// slack), through both mask widths (which must agree bit for bit).
+    fn assert_admissible(p: usize, n: usize, seed: u64, kinds: &[ScoreKind]) {
+        let data = random_dataset(p, n, seed);
+        let ub = saturated_ll_bounds(&data);
+        for &kind in kinds {
+            let mut scorer = LocalScorer::new(&data, kind);
+            for x in 0..p {
+                let free: Vec<usize> = (0..p).filter(|&v| v != x).collect();
+                for choice in 0u64..(1u64 << free.len()) {
+                    let mut narrow = <u32 as VarMask>::ZERO;
+                    let mut wide = <u64 as VarMask>::ZERO;
+                    for (bit, &v) in free.iter().enumerate() {
+                        if choice >> bit & 1 == 1 {
+                            narrow = narrow.with(v);
+                            wide = wide.with(v);
+                        }
+                    }
+                    let fam32 = scorer.family(x, narrow);
+                    let fam64 = scorer.family(x, wide);
+                    assert_eq!(fam32.to_bits(), fam64.to_bits());
+                    let slack = 1e-9 * (1.0 + fam32.abs());
+                    assert!(
+                        fam32 <= ub[x] + slack,
+                        "{}: family({x}, {choice:#x}) = {fam32} > ub = {}",
+                        kind.name(),
+                        ub[x]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Satellite (ISSUE 8): the admissibility property at p = 12 — all
+    /// 12 · 2^11 parent sets per scoring function, both mask widths.
+    #[test]
+    fn bound_dominates_every_family_score_at_p12_both_widths() {
+        assert_admissible(12, 80, 0xB0047, &[ScoreKind::Jeffreys, ScoreKind::Bic]);
+    }
+
+    /// The same property under every shipped scoring function (smaller p
+    /// keeps the 5-kind exhaustive sweep fast).
+    #[test]
+    fn bound_is_admissible_for_every_score_kind() {
+        assert_admissible(8, 120, 0xADA, &ALL_KINDS);
+    }
+
+    /// The context build is deterministic: same dataset, same stamp.
+    #[test]
+    fn build_is_deterministic() {
+        let data = random_dataset(8, 120, 7);
+        let a = PruneCtx::build(&data, ScoreKind::Jeffreys);
+        let b = PruneCtx::build(&data, ScoreKind::Jeffreys);
+        assert_eq!(a.stamp(), b.stamp());
+        assert_eq!(a.incumbent().to_bits(), b.incumbent().to_bits());
+        assert_eq!(a.threshold().to_bits(), b.threshold().to_bits());
+    }
+
+    /// The stamp separates different bounds and different incumbents.
+    #[test]
+    fn stamp_distinguishes_bounds_and_incumbent() {
+        let base = PruneCtx::from_parts(vec![-1.0, -2.0], -10.0);
+        let other_ub = PruneCtx::from_parts(vec![-1.0, -2.5], -10.0);
+        let other_inc = PruneCtx::from_parts(vec![-1.0, -2.0], -9.0);
+        assert_ne!(base.stamp(), other_ub.stamp());
+        assert_ne!(base.stamp(), other_inc.stamp());
+        assert_eq!(base.stamp(), PruneCtx::from_parts(vec![-1.0, -2.0], -10.0).stamp());
+    }
+
+    /// The saturated-LL cap is exactly 0 when the context determines the
+    /// variable (every block pure) and negative otherwise.
+    #[test]
+    fn saturated_ll_is_zero_iff_context_determines_the_variable() {
+        // x1 = x0 (determined), x2 independent noise
+        let names = vec!["a".into(), "b".into(), "c".into()];
+        let vals = vec![0u8, 1, 0, 1, 1, 0, 0, 1];
+        let noise: Vec<u8> = (0..vals.len()).map(|i| (i % 3) as u8).collect();
+        let data = Dataset::with_inferred_arities(names, vec![vals.clone(), vals, noise]);
+        let ub = saturated_ll_bounds(&data);
+        assert_eq!(ub[0], 0.0, "x0 determined by x1");
+        assert_eq!(ub[1], 0.0, "x1 determined by x0");
+        assert!(ub[2] < 0.0, "noise column cannot be predicted exactly");
+    }
+
+    /// Counters accumulate across `note` batches.
+    #[test]
+    fn counters_accumulate() {
+        let ctx = PruneCtx::from_parts(vec![0.0; 4], -1.0);
+        ctx.note(10, 3);
+        ctx.note(5, 0);
+        assert_eq!(ctx.considered(), 15);
+        assert_eq!(ctx.pruned(), 3);
+    }
+}

@@ -61,6 +61,11 @@ pub struct SolveOptions {
     /// Cooperative stop flag, checked at level boundaries. The default
     /// token is never cancelled, so `solve()` behaves exactly as before.
     pub cancel: CancelToken,
+    /// Order-graph pruning ([`crate::solver::bounds`]): skip emitting
+    /// records for provably-dominated subsets. `Off` (the default) is
+    /// the paper-faithful full sweep; any mode returns a bit-identical
+    /// optimum when the bounds are admissible.
+    pub prune: super::bounds::PruneMode,
 }
 
 impl Default for SolveOptions {
@@ -71,6 +76,7 @@ impl Default for SolveOptions {
             spill_dir: None,
             spill_threshold: 0.5,
             cancel: CancelToken::new(),
+            prune: super::bounds::PruneMode::Off,
         }
     }
 }
@@ -97,6 +103,11 @@ pub struct SolveStats {
     pub peak_state_bytes: usize,
     /// Bytes spilled to disk (0 unless the §5.3 extension is active).
     pub spilled_bytes: u64,
+    /// Subsets that went through the bounds check (0 with pruning off).
+    pub prune_considered: u64,
+    /// Subsets whose records were skipped as provably dominated
+    /// ([`crate::solver::bounds`]; 0 with pruning off).
+    pub pruned_subsets: u64,
     /// Wall-clock time of `solve()`.
     pub wall: Duration,
 }
@@ -142,6 +153,8 @@ impl SolveResult {
                     .set("resumed_levels", self.stats.resumed_levels)
                     .set("peak_state_bytes", self.stats.peak_state_bytes)
                     .set("spilled_bytes", self.stats.spilled_bytes)
+                    .set("prune_considered", self.stats.prune_considered)
+                    .set("pruned_subsets", self.stats.pruned_subsets)
                     .set("wall_secs", self.stats.wall.as_secs_f64()),
             )
     }
@@ -204,6 +217,10 @@ mod tests {
         assert_eq!(o.threads, 1);
         assert!(o.spill_dir.is_none());
         assert!(!o.cancel.is_cancelled());
+        assert!(
+            matches!(o.prune, super::super::bounds::PruneMode::Off),
+            "pruning must be opt-in: the default is the paper's full sweep"
+        );
     }
 
     #[test]

@@ -25,12 +25,14 @@
 //! integration-tested invariant — and expose the operation counters that
 //! back the Table-1 complexity accounting.
 
+pub mod bounds;
 pub mod brute;
 mod common;
 mod leveled;
 mod silander;
 mod streaming;
 
+pub use bounds::{PruneCtx, PruneMode, PruneStamp};
 pub use common::{CancelToken, SolveOptions, SolveResult, SolveStats};
 pub use leveled::{solve_clustered, solve_sharded, LeveledSolver, ShardOutcome};
 pub use silander::SilanderSolver;

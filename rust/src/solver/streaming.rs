@@ -40,7 +40,7 @@ use super::common::{SolveOptions, SolveResult, SolveStats};
 use super::leveled::{run_level_parallel, EngineRef, Level, LevelWorker};
 use crate::bitset::{colex_rank, BinomTable, LevelIter, VarMask};
 use crate::bn::Dag;
-use crate::coordinator::shard::SinkOut;
+use crate::coordinator::shard::{SinkOut, PRN_BLOCK};
 use crate::engine::ScoreEngine;
 use std::time::Instant;
 
@@ -109,12 +109,18 @@ fn decode_record<M: VarMask>(mask: M, val: u64) -> (usize, M) {
 
 /// [`SinkOut`] adapter over one worker's chunk of a level stream.
 ///
-/// [`LevelWorker::run_range`] calls `put` exactly once per subset, in
-/// colex order, so a simple cursor keeps byte offset = rank offset —
-/// and because parallel workers receive *disjoint* `split_at_mut`
-/// chunks, no synchronisation (and no raw pointers) is needed.
+/// [`LevelWorker::run_range`] calls `put` *or* `put_pruned` exactly once
+/// per subset, in colex order, so a simple cursor keeps byte offset =
+/// rank offset — and because parallel workers receive *disjoint*
+/// `split_at_mut` chunks, no synchronisation (and no raw pointers) is
+/// needed. With pruning active, a pruned subset's record slot is left
+/// zeroed and its presence flag set; the level's post-sweep compaction
+/// squeezes those slots out before the stream is retained.
 struct StreamSink<'s> {
     out: &'s mut [u8],
+    /// Per-subset prune flags for this chunk (`1` = pruned); `None`
+    /// when pruning is off and the stream stays dense.
+    flags: Option<&'s mut [u8]>,
     rec: usize,
     cursor: usize,
 }
@@ -128,15 +134,83 @@ impl<M: VarMask> SinkOut<M> for StreamSink<'_> {
         self.out[at..at + self.rec].copy_from_slice(&bytes[..self.rec]);
         self.cursor += 1;
     }
+
+    #[inline]
+    fn put_pruned(&mut self, _mask: M) {
+        let flags = self
+            .flags
+            .as_mut()
+            .expect("put_pruned on a dense stream: pruning resolved without flags");
+        flags[self.cursor] = 1;
+        self.cursor += 1;
+    }
+}
+
+/// Rank → compact-slot map of one pruned, compacted level stream: a
+/// presence bitmap plus a survivor-count prefix per [`PRN_BLOCK`] ranks
+/// (the in-RAM twin of the sharded path's `.prn` sidecar).
+struct PruneMap {
+    bits: Vec<u8>,
+    prefix: Vec<u64>,
+}
+
+impl PruneMap {
+    /// Build the map from a level's prune flags and compact `stream`
+    /// (record size `rec`) in place: surviving records are copied
+    /// forward, the tail truncated, and the spare capacity released.
+    fn compact(flags: &[u8], stream: &mut Vec<u8>, rec: usize) -> PruneMap {
+        let mut bits = vec![0u8; flags.len().div_ceil(8)];
+        let mut prefix = Vec::with_capacity(flags.len().div_ceil(PRN_BLOCK));
+        let mut kept = 0usize;
+        for (t, &flag) in flags.iter().enumerate() {
+            if t % PRN_BLOCK == 0 {
+                prefix.push(kept as u64);
+            }
+            if flag == 0 {
+                bits[t / 8] |= 1 << (t % 8);
+                if kept != t {
+                    stream.copy_within(t * rec..(t + 1) * rec, kept * rec);
+                }
+                kept += 1;
+            }
+        }
+        stream.truncate(kept * rec);
+        stream.shrink_to_fit();
+        PruneMap { bits, prefix }
+    }
+
+    /// Compact slot of rank `t`, or `None` if `t` was pruned.
+    fn slot(&self, t: usize) -> Option<usize> {
+        if self.bits[t / 8] & (1 << (t % 8)) == 0 {
+            return None;
+        }
+        let within = t % PRN_BLOCK;
+        let base = t - within;
+        let mut slot = self.prefix[t / PRN_BLOCK];
+        for b in &self.bits[base / 8..(base + within) / 8] {
+            slot += b.count_ones() as u64;
+        }
+        slot += (self.bits[(base + within) / 8] & ((1u8 << (within % 8)) - 1)).count_ones()
+            as u64;
+        Some(slot as usize)
+    }
+
+    fn bytes(&self) -> usize {
+        self.bits.len() + self.prefix.len() * 8
+    }
 }
 
 /// Walk the retained level streams from the full set down to ∅, exactly
 /// like [`super::common::reconstruct`] walks the sink tables — but
-/// addressed by colex rank instead of by mask value.
+/// addressed by colex rank instead of by mask value. Pruned, compacted
+/// levels route the rank through their [`PruneMap`]; the chain subsets
+/// of the optimal order always survive admissible bounds, so an absent
+/// record means the bounds were not admissible.
 fn reconstruct_streams<M: VarMask>(
     p: usize,
     binom: &BinomTable,
     streams: &[Vec<u8>],
+    maps: &[Option<PruneMap>],
 ) -> (Dag, Vec<usize>) {
     let mut mask = M::low_bits(p);
     let mut parents = vec![0u64; p];
@@ -145,7 +219,16 @@ fn reconstruct_streams<M: VarMask>(
         let k = mask.count_ones() as usize;
         let rec = record_bytes(k);
         let t = colex_rank(binom, mask) as usize;
-        let slot = &streams[k][t * rec..(t + 1) * rec];
+        let slot = match &maps[k] {
+            None => t,
+            Some(map) => map.slot(t).unwrap_or_else(|| {
+                panic!(
+                    "level {k}: the optimal order's rank-{t} subset was \
+                     pruned — the solve's bounds were not admissible"
+                )
+            }),
+        };
+        let slot = &streams[k][slot * rec..(slot + 1) * rec];
         let mut val = 0u64;
         for (i, &b) in slot.iter().enumerate() {
             val |= (b as u64) << (8 * i);
@@ -273,12 +356,19 @@ impl<'e, M: VarMask> StreamingSolver<'e, M> {
             traversals: 1,
             ..Default::default()
         };
+        let prune_ctx = self
+            .options
+            .prune
+            .resolve(self.engine.plain().data(), self.engine.plain().kind());
 
         // Per-level compact sink-record streams. Each is written once
         // during its level sweep and then only *read* — at the very end,
         // by reconstruction. All of them together stay well under the
-        // resident path's sink tables (see the module docs).
+        // resident path's sink tables (see the module docs). With
+        // pruning active each retained stream is compacted to its
+        // survivors, with a per-level rank→slot map alongside.
         let mut streams: Vec<Vec<u8>> = vec![Vec::new(); p + 1];
+        let mut maps: Vec<Option<PruneMap>> = (0..=p).map(|_| None).collect();
         let mut stream_bytes = 0usize;
 
         let mut scorer0 = self.engine.plain().scorer();
@@ -299,16 +389,26 @@ impl<'e, M: VarMask> StreamingSolver<'e, M> {
             let rec = record_bytes(k1);
             let mut cur = Level::allocate(k1, size1);
             let mut stream = vec![0u8; size1 * rec];
-            stream_bytes += stream.len();
+            let mut flags = if prune_ctx.is_some() {
+                vec![0u8; size1]
+            } else {
+                Vec::new()
+            };
+            // the sweep writes the level stream densely (flags mark the
+            // pruned slots); the peak must carry the dense stream plus
+            // the flags — compaction only shrinks what is *retained*
+            stream_bytes += stream.len() + flags.len();
             stats.peak_state_bytes = stats
                 .peak_state_bytes
                 .max(prev.bytes() + cur.bytes() + stream_bytes);
             let threads = max_threads.min(size1.max(1));
             let (evals, bu, su) = if threads == 1 {
                 let mut worker =
-                    LevelWorker::new(self.engine.plain(), &binom, k1, self.options.batch);
+                    LevelWorker::new(self.engine.plain(), &binom, k1, self.options.batch)
+                        .with_prune(prune_ctx.clone());
                 let mut sinks = StreamSink {
                     out: &mut stream,
+                    flags: prune_ctx.is_some().then_some(&mut flags[..]),
                     rec,
                     cursor: 0,
                 };
@@ -331,9 +431,12 @@ impl<'e, M: VarMask> StreamingSolver<'e, M> {
                     }
                 };
                 // lend each chunk its disjoint `len·rec`-byte slice of
-                // the level stream (same split discipline as the
-                // q/r/bps/bpm arrays inside run_level_parallel)
+                // the level stream — and of the flags, when pruning —
+                // (same split discipline as the q/r/bps/bpm arrays
+                // inside run_level_parallel)
                 let mut stream_rest: &mut [u8] = &mut stream;
+                let mut flags_rest: &mut [u8] = &mut flags;
+                let with_flags = prune_ctx.is_some();
                 run_level_parallel(
                     engine,
                     &prev,
@@ -343,13 +446,21 @@ impl<'e, M: VarMask> StreamingSolver<'e, M> {
                     size1,
                     threads,
                     self.options.batch,
+                    prune_ctx.as_ref(),
                     &mut cur,
                     |_, len| {
                         let taken = std::mem::take(&mut stream_rest);
                         let (chunk, rest) = taken.split_at_mut(len * rec);
                         stream_rest = rest;
+                        let flag_chunk = with_flags.then(|| {
+                            let taken = std::mem::take(&mut flags_rest);
+                            let (chunk, rest) = taken.split_at_mut(len);
+                            flags_rest = rest;
+                            chunk
+                        });
                         StreamSink {
                             out: chunk,
+                            flags: flag_chunk,
                             rec,
                             cursor: 0,
                         }
@@ -359,13 +470,24 @@ impl<'e, M: VarMask> StreamingSolver<'e, M> {
             score_evals += evals;
             stats.bps_updates += bu;
             stats.sink_updates += su;
+            if prune_ctx.is_some() {
+                let dense = stream.len() + flags.len();
+                let map = PruneMap::compact(&flags, &mut stream, rec);
+                stream_bytes -= dense;
+                stream_bytes += stream.len() + map.bytes();
+                maps[k1] = Some(map);
+            }
             streams[k1] = stream;
             prev = cur;
         }
 
         stats.score_evals = score_evals;
+        if let Some(ctx) = &prune_ctx {
+            stats.prune_considered = ctx.considered();
+            stats.pruned_subsets = ctx.pruned();
+        }
         let log_score = prev.r[0];
-        let (network, order) = reconstruct_streams::<M>(p, &binom, &streams);
+        let (network, order) = reconstruct_streams::<M>(p, &binom, &streams, &maps);
         stats.wall = start.elapsed();
         Some(SolveResult {
             network,

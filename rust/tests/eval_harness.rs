@@ -72,6 +72,42 @@ fn child_bif_has_the_published_shape() {
     }
 }
 
+/// Satellite (ISSUE 8): the INSURANCE fixture carries the published
+/// shape — 27 nodes, 52 arcs, published arities — and is a well-formed
+/// DAG. At 27 variables it is the largest committed fixture, sized for
+/// anytime/approximate work where exact solves are out of reach.
+#[test]
+fn insurance_bif_has_the_published_shape() {
+    let net = bif::read_bif(&fixture("insurance.bif")).unwrap();
+    assert_eq!(net.p(), 27);
+    assert_eq!(net.dag().edge_count(), 52);
+    assert_eq!(
+        net.arities(),
+        &[
+            3, 4, 4, 2, 4, 2, 2, 5, 2, 4, 2, 3, 3, 3, 3, 2, 2, 5, 4, 4, 4,
+            2, 4, 4, 4, 4, 4
+        ]
+    );
+    assert!(net.dag().topological_order().is_some());
+    let idx = |name: &str| {
+        net.names()
+            .iter()
+            .position(|n| n == name)
+            .unwrap_or_else(|| panic!("{name} missing"))
+    };
+    for (a, b) in [
+        ("Age", "SocioEcon"),
+        ("SocioEcon", "MakeModel"),
+        ("MakeModel", "CarValue"),
+        ("CarValue", "Theft"),
+        ("Theft", "ThisCarCost"),
+        ("ThisCarCost", "PropCost"),
+        ("Accident", "MedCost"),
+    ] {
+        assert!(net.dag().has_edge(idx(a), idx(b)), "{a} -> {b} missing");
+    }
+}
+
 /// Satellite (ISSUE 7, sampler properties): same seed → identical
 /// dataset, different seed → different dataset, and the dataset's
 /// column order / names / arities follow the `.bif` declaration.

@@ -12,6 +12,7 @@ Usage:
 Options:
     --tolerance-wall X   relative wall-time tolerance   (default 0.25)
     --tolerance-heap X   relative heap-peak tolerance   (default 0.25)
+    --tolerance-ratio X  relative prune-ratio tolerance (default 0.25)
     --update             overwrite BASELINE with CURRENT's values
                          (preserving the baseline's _tolerances block)
     --self-test          run the gate against synthetic documents: a
@@ -41,10 +42,18 @@ assembled by tools/bench_smoke.sh):
                           (modes resident/streaming/spill/sharded;
                           wall_secs gated as wall, heap_peak_bytes as
                           heap)
+    prune.<metric>        from the `prune` bench record (dense-vs-pruned
+                          walls and the pruned run's shard footprint,
+                          plus prune_ratio gated as a FLOOR: the ratio
+                          falling below baseline*(1-tol) fails — a
+                          bounds regression that quietly stops pruning
+                          gates like a wall regression)
 
 Wall-clock metrics are compared with --tolerance-wall (shared CI runners
 are noisy); heap peaks come from the deterministic tracking allocator
-and get --tolerance-heap.
+and get --tolerance-heap. Ratio metrics (class "ratio") invert the
+direction: higher is better, so the gate fails on a DROP beyond
+--tolerance-ratio instead of a rise.
 
 The baseline carries an explicit "status" field: "uncalibrated" (the
 shipped stub — metrics must still EXIST in CURRENT, that is the
@@ -65,6 +74,9 @@ import sys
 
 WALL = "wall"
 HEAP = "heap"
+# floor-direction class: the metric is an achievement (higher = better),
+# so the gate fails when the fresh value DROPS below baseline*(1-tol)
+RATIO = "ratio"
 
 # metric name -> class, per section (explicit allowlists: analytic
 # fields like plan_peak_bytes are identical across runs and not gated)
@@ -96,6 +108,14 @@ SCALING_METRICS = {
     "wall_secs": WALL,
     "heap_peak_bytes": HEAP,
 }
+PRUNE_METRICS = {
+    "resident_dense_wall_secs": WALL,
+    "resident_pruned_wall_secs": WALL,
+    "sharded_dense_wall_secs": WALL,
+    "sharded_pruned_wall_secs": WALL,
+    "pruned_shard_bytes": HEAP,
+    "prune_ratio": RATIO,
+}
 
 
 def flatten(doc):
@@ -116,6 +136,7 @@ def flatten(doc):
     for section, metrics in (
         ("scoring", SCORING_METRICS),
         ("streaming", STREAMING_METRICS),
+        ("prune", PRUNE_METRICS),
     ):
         record = doc.get(section) or {}
         for name, cls in metrics.items():
@@ -179,8 +200,24 @@ def compare(current_doc, baseline_doc, tolerances):
             failures.append(f"{name}: fresh value {cur_value!r} is not a number")
             continue
         tol = tolerances[cls]
-        limit = base_value * (1.0 + tol)
         ratio = (cur_value / base_value - 1.0) if base_value else 0.0
+        if cls == RATIO:
+            # floor direction: the metric is an achievement, so a DROP
+            # beyond tolerance is the regression
+            if cur_value < base_value * (1.0 - tol):
+                failures.append(
+                    f"{name}: {cur_value:.6g} vs baseline {base_value:.6g} "
+                    f"({ratio:+.1%} < -{tol:.0%} {cls} floor)"
+                )
+            elif ratio > tol:
+                notes.append(
+                    f"{name}: improved {ratio:+.1%} — consider re-baselining "
+                    f"(tools/bench_compare.py --update)"
+                )
+            else:
+                notes.append(f"{name}: {ratio:+.1%} (ok)")
+            continue
+        limit = base_value * (1.0 + tol)
         if cur_value > limit:
             failures.append(
                 f"{name}: {cur_value:.6g} vs baseline {base_value:.6g} "
@@ -235,7 +272,7 @@ def prove_armed(current_doc, current_path):
     heap) regression is injected, at the default 0.25 tolerances. This is
     the end-to-end demonstration that the gate is armed — the self-test
     covers the comparator logic, this covers the real artifact's shape."""
-    tol = {WALL: 0.25, HEAP: 0.25}
+    tol = {WALL: 0.25, HEAP: 0.25, RATIO: 0.25}
     metrics = flatten(current_doc)
     numeric = {
         name: (value, cls)
@@ -320,8 +357,14 @@ def self_test():
                 {"p": 12, "mode": "sharded", "wall_secs": 1.6, "heap_peak_bytes": 300_000},
             ]
         },
+        "prune": {
+            "bench": "prune",
+            "prune_ratio": 0.2,
+            "resident_pruned_wall_secs": 1.0,
+            "pruned_shard_bytes": 500_000,
+        },
     }
-    tol = {WALL: 0.25, HEAP: 0.25}
+    tol = {WALL: 0.25, HEAP: 0.25, RATIO: 0.25}
 
     # a 10% wobble passes
     ok = json.loads(json.dumps(base))
@@ -376,6 +419,27 @@ def self_test():
     failures, _ = compare(partial, base, tol)
     assert failures, "a vanished scaling point must fail"
 
+    # the prune section gates in BOTH directions: its walls/bytes are
+    # ceilings like everywhere else, but prune_ratio is a FLOOR — the
+    # ratio collapsing (bounds layer quietly stopped pruning) fails,
+    # while a ratio improvement passes
+    bad = json.loads(json.dumps(base))
+    bad["prune"]["prune_ratio"] = 0.1
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a 50% prune-ratio collapse must fail (floor direction)"
+    ok = json.loads(json.dumps(base))
+    ok["prune"]["prune_ratio"] = 0.4
+    failures, _ = compare(ok, base, tol)
+    assert not failures, f"a prune-ratio improvement must pass: {failures}"
+    bad = json.loads(json.dumps(base))
+    bad["prune"]["resident_pruned_wall_secs"] = 1.35
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a pruned-solve wall regression must fail"
+    partial = json.loads(json.dumps(base))
+    del partial["prune"]
+    failures, _ = compare(partial, base, tol)
+    assert failures, "a missing prune bench must fail"
+
     # --prove-armed accepts a healthy artifact and catches injections
     assert prove_armed(json.loads(json.dumps(base)), "<self-test>") == 0
 
@@ -411,7 +475,7 @@ def main(argv):
             flags["prove_armed"] = True
         elif arg == "--update":
             flags["update"] = True
-        elif arg in ("--tolerance-wall", "--tolerance-heap"):
+        elif arg in ("--tolerance-wall", "--tolerance-heap", "--tolerance-ratio"):
             flags[arg.lstrip("-").replace("-", "_")] = float(next(it))
         else:
             positional.append(arg)
@@ -429,7 +493,7 @@ def main(argv):
     baseline_doc = load(baseline_path)
     if baseline_status(baseline_doc) == "uncalibrated":
         print(uncalibrated_banner(baseline_path), file=sys.stderr)
-    tolerances = {WALL: 0.25, HEAP: 0.25}
+    tolerances = {WALL: 0.25, HEAP: 0.25, RATIO: 0.25}
     for cls, override in (baseline_doc.get("_tolerances") or {}).items():
         if cls in tolerances:
             tolerances[cls] = float(override)
@@ -437,6 +501,8 @@ def main(argv):
         tolerances[WALL] = flags["tolerance_wall"]
     if "tolerance_heap" in flags:
         tolerances[HEAP] = flags["tolerance_heap"]
+    if "tolerance_ratio" in flags:
+        tolerances[RATIO] = flags["tolerance_ratio"]
     failures, notes = compare(current_doc, baseline_doc, tolerances)
     for note in notes:
         print(f"  {note}")

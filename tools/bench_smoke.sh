@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Quick-mode perf smoke (CI `bench-smoke` job; runnable locally): run the
-# `levels`, `spill`, `scoring`, `streaming` and `scaling` benches at
+# `levels`, `spill`, `scoring`, `streaming`, `scaling` and `prune` benches at
 # CI-sized configurations and assemble BENCH_ci.json — wall time +
 # memtrack heap peak per configuration — so the repo's perf trajectory
 # accumulates data points as an uploaded artifact per commit (and
@@ -27,10 +27,11 @@ SPILL_JSON="results/spill.json"
 SCORING_JSON="bench_scoring.json"
 STREAMING_JSON="bench_streaming.json"
 SCALING_JSON="bench_scaling.json"
+PRUNE_JSON="bench_prune.json"
 
 # never assemble a stale record into a "fresh" artifact
 rm -f "$OUT" "$CSV" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" \
-    "$STREAMING_JSON" "$SCALING_JSON"
+    "$STREAMING_JSON" "$SCALING_JSON" "$PRUNE_JSON"
 
 # levels + streaming: full analytic plan at p = 20 + quick timed solves
 # at a container-feasible size (the streaming bench *asserts* the heap
@@ -41,6 +42,8 @@ export BNSL_PMIN=14 BNSL_PMAX=15 BNSL_THRESHOLD=0.5
 # scaling: the wall/heap-vs-p curve across all four execution modes
 # (each point asserts bit-identity with the resident optimum)
 export BNSL_SCALING_PS=10,12,14
+# prune: p = 14 dense-vs-pruned identity + measured prune ratio (the
+# bench asserts byte-identical score/network and a nonzero prune count)
 
 run_bench() {
     local name="$1" expect="$2"
@@ -65,13 +68,15 @@ export BNSL_BENCH_JSON="$STREAMING_JSON"
 run_bench streaming "$STREAMING_JSON"
 export BNSL_BENCH_JSON="$SCALING_JSON"
 run_bench scaling "$SCALING_JSON"
+export BNSL_BENCH_JSON="$PRUNE_JSON"
+run_bench prune "$PRUNE_JSON"
 
 python3 - "$OUT" "$CSV" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" \
-    "$STREAMING_JSON" "$SCALING_JSON" <<'EOF'
+    "$STREAMING_JSON" "$SCALING_JSON" "$PRUNE_JSON" <<'EOF'
 import json, pathlib, sys
 
 out, csv_out, levels_path, spill_path, scoring_path, streaming_path, \
-    scaling_path = sys.argv[1:8]
+    scaling_path, prune_path = sys.argv[1:9]
 doc = {"schema": "bnsl-bench-smoke/1"}
 for key, path in (
     ("levels", levels_path),
@@ -79,6 +84,7 @@ for key, path in (
     ("scoring", scoring_path),
     ("streaming", streaming_path),
     ("scaling", scaling_path),
+    ("prune", prune_path),
 ):
     try:
         with open(path) as f:

@@ -8,12 +8,18 @@
 #   3. assert exact-solver structure recovery is no worse than hill
 #      climbing (SHD over CPDAGs), and streaming == resident bit-for-bit;
 #   4. round-trip `bnsl scores` → `bnsl learn --scores` and assert the
-#      dataset-free solve is bit-identical to the dataset-backed one.
+#      dataset-free solve is bit-identical to the dataset-backed one;
+#   5. sweep the exact solver across sample sizes and write the
+#      recovery-vs-n curve to CSV (CI uploads it as the plottable
+#      quality artifact; no monotonicity is asserted — recovery vs n is
+#      noisy at smoke sizes, the curve is the data point).
 #
-# Usage: tools/eval_smoke.sh [path/to/bnsl]   (default target/release/bnsl)
+# Usage: tools/eval_smoke.sh [path/to/bnsl] [out.csv]
+#        (defaults: target/release/bnsl, EVAL_recovery.csv)
 set -euo pipefail
 
 BIN="${1:-target/release/bnsl}"
+CSV="${2:-EVAL_recovery.csv}"
 if [ ! -x "$BIN" ]; then
     echo "FAIL: $BIN not found or not executable (build with: cargo build --release)" >&2
     exit 1
@@ -30,15 +36,20 @@ SEED=1
 "$BIN" eval --network "$NET" --n "$N" --seed "$SEED" --streaming --out "$WORK/eval_streaming.json"
 "$BIN" eval --network "$NET" --n "$N" --seed "$SEED" --solver hillclimb --out "$WORK/eval_hc.json"
 
+# 5. recovery-vs-n sweep (exact solver; the n = 5000 point reuses the
+# record from step 1 rather than re-solving)
+"$BIN" eval --network "$NET" --n 500 --seed "$SEED" --out "$WORK/eval_n500.json"
+"$BIN" eval --network "$NET" --n 2000 --seed "$SEED" --out "$WORK/eval_n2000.json"
+
 # scores interop on the same fixture-sampled data
 "$BIN" scores --network "$NET" --n 500 --seed 3 --out "$WORK/asia.jaa"
 "$BIN" learn --network "$NET" --n 500 --seed 3 --out "$WORK/direct.json"
 "$BIN" learn --scores "$WORK/asia.jaa" --out "$WORK/via_scores.json"
 
-python3 - "$WORK" <<'EOF'
-import json, sys
+python3 - "$WORK" "$CSV" <<'EOF'
+import json, pathlib, sys
 
-work = sys.argv[1]
+work, csv_out = sys.argv[1], sys.argv[2]
 
 def load(name):
     with open(f"{work}/{name}") as f:
@@ -86,6 +97,21 @@ assert direct["log_score"] == via["log_score"], (
     f"scores path diverged: {direct['log_score']} vs {via['log_score']}"
 )
 assert direct["network"] == via["network"], "scores path learned a different DAG"
+
+# 5. the recovery-vs-n curve: one CSV row per sweep point (schema and
+# sanity only — recovery is noisy at smoke sizes, so no monotonicity
+# assertion; the plotted curve is the artifact)
+sweep = [load("eval_n500.json"), load("eval_n2000.json"), exact]
+lines = ["n,solver,shd_total,shd_cpdag_total,log_score,wall_secs"]
+for doc in sweep:
+    assert doc["schema"] == "bnsl-eval/1" and doc["network"] == "asia"
+    lines.append(
+        f"{doc['n']},{doc['solver']},{doc['shd']['total']},"
+        f"{doc['shd_cpdag']['total']},{doc['log_score']},{doc['wall_secs']}"
+    )
+assert len(lines) == 4, f"recovery sweep produced {len(lines) - 1} rows, wanted 3"
+pathlib.Path(csv_out).write_text("\n".join(lines) + "\n")
+print(f"wrote {csv_out} ({len(sweep)} recovery points)")
 
 print(
     f"eval smoke OK: exact shd_cpdag={exact['shd_cpdag']['total']} "

@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""One-off generator for examples/networks/insurance.bif.
+
+Published INSURANCE structure (Binder et al. 1997): 27 nodes, 52 arcs,
+published arities and state labels (sanitized to the repo's .bif token
+grammar). CPTs are representative seeded draws, not the published tables
+(the repo uses INSURANCE for structure-recovery and scaling work, where
+only (structure, arities) matter); every row sums to exactly 1 in
+decimal.
+"""
+import random
+
+rng = random.Random(20260808)
+
+# name -> states, listed in topological order (sanitized: no
+# { } ( ) [ ] , ; | = /  characters)
+VARS = [
+    ("Age", ["Adolescent", "Adult", "Senior"]),
+    ("Mileage", ["FiveThou", "TwentyThou", "FiftyThou", "Domino"]),
+    ("SocioEcon", ["Prole", "Middle", "UpperMiddle", "Wealthy"]),
+    ("GoodStudent", ["True", "False"]),
+    ("RiskAversion", ["Psychopath", "Adventurous", "Normal", "Cautious"]),
+    ("OtherCar", ["True", "False"]),
+    ("SeniorTrain", ["True", "False"]),
+    ("MakeModel", ["SportsCar", "Economy", "FamilySedan", "Luxury", "SuperLuxury"]),
+    ("VehicleYear", ["Current", "Older"]),
+    ("HomeBase", ["Secure", "City", "Suburb", "Rural"]),
+    ("AntiTheft", ["True", "False"]),
+    ("DrivingSkill", ["SubStandard", "Normal", "Expert"]),
+    ("DrivQuality", ["Poor", "Normal", "Excellent"]),
+    ("DrivHist", ["Zero", "One", "Many"]),
+    ("RuggedAuto", ["EggShell", "Football", "Tank"]),
+    ("Antilock", ["True", "False"]),
+    ("Airbag", ["True", "False"]),
+    ("CarValue", ["FiveThou", "TenThou", "TwentyThou", "FiftyThou", "Million"]),
+    ("Accident", ["NoAccident", "Mild", "Moderate", "Severe"]),
+    ("ThisCarDam", ["NoDamage", "Mild", "Moderate", "Severe"]),
+    ("OtherCarCost", ["Thousand", "TenThou", "HundredThou", "Million"]),
+    ("Theft", ["True", "False"]),
+    ("ThisCarCost", ["Thousand", "TenThou", "HundredThou", "Million"]),
+    ("PropCost", ["Thousand", "TenThou", "HundredThou", "Million"]),
+    ("Cushioning", ["Poor", "Fair", "Good", "Excellent"]),
+    ("MedCost", ["Thousand", "TenThou", "HundredThou", "Million"]),
+    ("ILiCost", ["Thousand", "TenThou", "HundredThou", "Million"]),
+]
+assert len(VARS) == 27
+
+ARCS = [
+    ("Age", "SocioEcon"),
+    ("Age", "GoodStudent"),
+    ("SocioEcon", "GoodStudent"),
+    ("Age", "RiskAversion"),
+    ("SocioEcon", "RiskAversion"),
+    ("SocioEcon", "OtherCar"),
+    ("Age", "SeniorTrain"),
+    ("RiskAversion", "SeniorTrain"),
+    ("SocioEcon", "MakeModel"),
+    ("RiskAversion", "MakeModel"),
+    ("SocioEcon", "VehicleYear"),
+    ("RiskAversion", "VehicleYear"),
+    ("SocioEcon", "HomeBase"),
+    ("RiskAversion", "HomeBase"),
+    ("SocioEcon", "AntiTheft"),
+    ("RiskAversion", "AntiTheft"),
+    ("Age", "DrivingSkill"),
+    ("SeniorTrain", "DrivingSkill"),
+    ("DrivingSkill", "DrivQuality"),
+    ("RiskAversion", "DrivQuality"),
+    ("DrivingSkill", "DrivHist"),
+    ("RiskAversion", "DrivHist"),
+    ("MakeModel", "RuggedAuto"),
+    ("VehicleYear", "RuggedAuto"),
+    ("MakeModel", "Antilock"),
+    ("VehicleYear", "Antilock"),
+    ("MakeModel", "Airbag"),
+    ("VehicleYear", "Airbag"),
+    ("MakeModel", "CarValue"),
+    ("VehicleYear", "CarValue"),
+    ("Mileage", "CarValue"),
+    ("DrivQuality", "Accident"),
+    ("Mileage", "Accident"),
+    ("Antilock", "Accident"),
+    ("Accident", "ThisCarDam"),
+    ("RuggedAuto", "ThisCarDam"),
+    ("Accident", "OtherCarCost"),
+    ("RuggedAuto", "OtherCarCost"),
+    ("CarValue", "Theft"),
+    ("HomeBase", "Theft"),
+    ("AntiTheft", "Theft"),
+    ("ThisCarDam", "ThisCarCost"),
+    ("CarValue", "ThisCarCost"),
+    ("Theft", "ThisCarCost"),
+    ("ThisCarCost", "PropCost"),
+    ("OtherCarCost", "PropCost"),
+    ("RuggedAuto", "Cushioning"),
+    ("Airbag", "Cushioning"),
+    ("Accident", "MedCost"),
+    ("Age", "MedCost"),
+    ("Cushioning", "MedCost"),
+    ("Accident", "ILiCost"),
+]
+assert len(ARCS) == 52
+
+states = dict(VARS)
+order = [n for n, _ in VARS]
+parents = {n: [p for p, c in ARCS if c == n] for n in order}
+# every arc endpoint must be a declared variable, and the declaration
+# order above must already be topological
+for p, c in ARCS:
+    assert p in states and c in states, (p, c)
+    assert order.index(p) < order.index(c), f"{p} -> {c} not topological"
+
+
+def row(k, peaked_at=None):
+    """k probabilities in thousandths summing to exactly 1.000."""
+    w = [rng.random() + 0.05 for _ in range(k)]
+    if peaked_at is not None:
+        w[peaked_at] += 2.5  # identifiable CPTs: one state dominates
+    total = sum(w)
+    milli = [max(1, round(1000 * x / total)) for x in w]
+    milli[-1] += 1000 - sum(milli)
+    if milli[-1] < 1:  # rebalance from the largest entry
+        big = milli.index(max(milli[:-1]))
+        milli[big] += milli[-1] - 1
+        milli[-1] = 1
+    assert sum(milli) == 1000 and all(m >= 1 for m in milli)
+    return ", ".join(f"{m / 1000:.3f}" for m in milli)
+
+
+def configs(pas):
+    """Parent configurations, last parent fastest (bif convention)."""
+    out = [[]]
+    for pa in pas:
+        out = [c + [s] for c in out for s in states[pa]]
+    return out
+
+
+lines = [
+    "// INSURANCE network (Binder et al. 1997): published 27-node /",
+    "// 52-arc structure and arities; CPTs are representative seeded",
+    "// draws, not the published tables (see tools note in the generator",
+    "// header) -- rows sum to exactly 1. Regenerate: python3 tools/gen_insurance_bif.py",
+    "network insurance {",
+    "}",
+]
+for name, sts in VARS:
+    lines.append(f"variable {name} {{")
+    lines.append(f"  type discrete [ {len(sts)} ] {{ {', '.join(sts)} }};")
+    lines.append("}")
+for name in order:
+    k = len(states[name])
+    pas = parents[name]
+    if not pas:
+        lines.append(f"probability ( {name} ) {{")
+        lines.append(f"  table {row(k, peaked_at=rng.randrange(k))};")
+        lines.append("}")
+    else:
+        lines.append(f"probability ( {name} | {', '.join(pas)} ) {{")
+        for cfg in configs(pas):
+            lines.append(
+                f"  ({', '.join(cfg)}) {row(k, peaked_at=rng.randrange(k))};"
+            )
+        lines.append("}")
+
+with open("/root/repo/examples/networks/insurance.bif", "w") as fh:
+    fh.write("\n".join(lines) + "\n")
+print(f"wrote insurance.bif: {len(order)} vars, {len(ARCS)} arcs")
