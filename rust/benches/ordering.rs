@@ -1,0 +1,103 @@
+//! Bench — the ordering-based search tier (ISSUE 9): seeded OBS on the
+//! planted-chain fixture, reporting wall time and the achieved-score /
+//! optimal-score ratio against the exact leveled DP. The ratio gates as
+//! a FLOOR in tools/bench_compare.py — a search regression that quietly
+//! degrades the anytime incumbent fails CI like a wall regression.
+//!
+//! The bench also asserts the two properties the service tier rests on:
+//! the search is deterministic (same seed → bit-identical score), and
+//! it never beats the proven optimum (admissibility of the incumbent).
+//! Container-feasible default is `BNSL_SOLVE_P=14`.
+
+use bnsl::data::synth;
+use bnsl::engine::NativeEngine;
+use bnsl::score::ScoreKind;
+use bnsl::search::{ordering_search, OrderingOptions};
+use bnsl::solver::LeveledSolver;
+use bnsl::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let p: usize = std::env::var("BNSL_SOLVE_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(14);
+    let n: usize = std::env::var("BNSL_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let d = synth::chain(p, n, 0.95, 3);
+    let kind = ScoreKind::Jeffreys;
+
+    println!("=== ordering search (OBS), p = {p}, n = {n} (planted chain) ===\n");
+
+    let t = Instant::now();
+    let obs = ordering_search(&d, kind, &OrderingOptions::default());
+    let ordering_wall = t.elapsed().as_secs_f64();
+
+    // determinism: the service fingerprints assume same input + options
+    // → bit-identical search output
+    let again = ordering_search(&d, kind, &OrderingOptions::default());
+    assert_eq!(
+        obs.log_score.to_bits(),
+        again.log_score.to_bits(),
+        "seeded OBS must be deterministic"
+    );
+    assert_eq!(obs.network, again.network, "seeded OBS must be deterministic");
+
+    let e = NativeEngine::new(&d, kind);
+    let t = Instant::now();
+    let exact = LeveledSolver::new(&e).solve();
+    let exact_wall = t.elapsed().as_secs_f64();
+
+    // admissibility: the incumbent the anytime tier serves (and the
+    // BFBnB prune gate trusts) must never exceed the true optimum
+    assert!(
+        obs.log_score <= exact.log_score + 1e-9,
+        "OBS {} beats the exact optimum {}",
+        obs.log_score,
+        exact.log_score
+    );
+    // both log-scores are negative, so optimal/achieved ∈ (0, 1] with
+    // 1.0 = the search found the optimum; higher is better (FLOOR gate)
+    let ratio = exact.log_score / obs.log_score;
+    assert!(
+        (0.0..=1.0 + 1e-12).contains(&ratio),
+        "score ratio {ratio} out of range (achieved {}, optimal {})",
+        obs.log_score,
+        exact.log_score
+    );
+    assert!(
+        ratio > 0.5,
+        "OBS landed implausibly far from the optimum: ratio {ratio:.4}"
+    );
+
+    println!("ordering : {ordering_wall:7.3}s  log-score {:.6}", obs.log_score);
+    println!("exact    : {exact_wall:7.3}s  log-score {:.6}", exact.log_score);
+    println!(
+        "ratio    : {ratio:.6} (optimal/achieved; 1.0 = search found the optimum)"
+    );
+    println!(
+        "work     : {} families evaluated, {} swaps taken",
+        obs.families_evaluated, obs.swaps_taken
+    );
+
+    // CI bench-smoke: machine-readable record for the perf trajectory
+    // (tools/bench_smoke.sh merges it into BENCH_ci.json; score_ratio
+    // gates as a floor in tools/bench_compare.py)
+    if let Ok(path) = std::env::var("BNSL_BENCH_JSON") {
+        let doc = Json::obj()
+            .set("bench", "ordering")
+            .set("solve_p", p)
+            .set("n", n)
+            .set("ordering_wall_secs", ordering_wall)
+            .set("exact_wall_secs", exact_wall)
+            .set("score_ratio", ratio)
+            .set("achieved_log_score", obs.log_score)
+            .set("optimal_log_score", exact.log_score)
+            .set("families_evaluated", obs.families_evaluated)
+            .set("swaps_taken", obs.swaps_taken);
+        std::fs::write(&path, doc.to_pretty()).expect("writing BNSL_BENCH_JSON");
+        println!("bench record: {path}");
+    }
+}

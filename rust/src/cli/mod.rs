@@ -46,7 +46,7 @@ USAGE:
   bnsl learn  (--data file.csv | --network asia|alarm|sachs [--p P] [--n N])
               [--solver leveled|silander|hillclimb|hybrid] [--score jeffreys|bdeu[:e]|bic|aic]
               [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
-              [--streaming] [--prune | --no-prune]
+              [--mode exact|anytime|fast] [--streaming] [--prune | --no-prune]
               [--shards N [--shard-dir DIR] [--stop-after-level K]] [--resume DIR]
               [--backend posix|object]
               [--cluster --host-id I [--hosts N] [--heartbeat-secs S]]
@@ -77,6 +77,13 @@ USAGE:
               same optimum, bit for bit, smaller record streams;
               --no-prune restores the paper's full emission (required
               when resuming a run that was started without pruning);
+              --mode picks the answer portfolio: exact (default) runs
+              the chosen solver to the proven optimum; fast returns the
+              ordering+hillclimb portfolio network immediately (p <= 64,
+              no optimality proof); anytime serves that incumbent at
+              once, then refines with the incumbent-seeded exact sweep,
+              printing the admissible upper bound + optimality gap per
+              completed level (gap is 0 at the last level — the proof);
               hillclimb/hybrid: p <= 64
   bnsl learn  --scores file.jaa [--p P] [--solver leveled|silander]
               [--streaming] [--threads T] [--out net.json] [--dot]
@@ -93,7 +100,7 @@ USAGE:
               2^p subset potentials; --max-parents only trims the
               human-readable family section)
   bnsl eval   --network (asia|alarm|sachs | net.bif) [--n N] [--seed S]
-              [--solver leveled|silander|hillclimb|hybrid] [--streaming]
+              [--solver leveled|silander|hillclimb|hybrid|ordering] [--streaming]
               [--score S] [--threads T] [--out report.json]
               sample the ground-truth network, learn, and report
               structure recovery (SHD + CPDAG-aware edge F1), log-score,
@@ -108,7 +115,8 @@ USAGE:
               submissions are rejected),
               GET /v1/jobs/ID (state machine queued|planning|running|
               done|failed|cancelled + live level progress), GET
-              /v1/jobs/ID/result (bit-identical to a direct run), DELETE
+              /v1/jobs/ID/result (bit-identical to a direct run; while a
+              mode:anytime job runs, the best-so-far network + gap), DELETE
               /v1/jobs/ID (cooperative cancel), GET /v1/healthz, GET
               /v1/stats; identical submissions dedupe onto one solve and
               finished fingerprints are served from the result cache;
@@ -117,11 +125,16 @@ USAGE:
               level boundary and the next `bnsl serve` resumes them
   bnsl submit --server HOST:PORT (--data file.csv | --scores file.jaa)
               [--p P] [--score S] [--shards N] [--threads T] [--batch B]
-              [--streaming] [--prune]
+              [--streaming] [--prune] [--mode exact|anytime|fast]
               [--wait [--out result.json] [--poll-ms 200] [--timeout-secs 3600]]
               prints the job id on stdout; --wait polls to completion;
               --scores posts a `bnsl scores` table instead of a dataset
-              (kind comes from the file header; incompatible with --shards)
+              (kind comes from the file header; incompatible with --shards);
+              --mode anytime serves the best-so-far network + optimality
+              gap from GET /v1/jobs/ID/result while the exact sweep
+              runs (the final record is bit-identical to an exact run);
+              --mode fast publishes the portfolio network immediately,
+              marked \"mode\": \"fast\" in its own cache namespace
   bnsl status --server HOST:PORT --job ID
   bnsl cancel --server HOST:PORT --job ID
   bnsl exp table2     [--pmin 14] [--pmax 18] [--runs 3]  [--n 200] [--threads T]
@@ -187,6 +200,17 @@ fn cmd_learn(args: Args) -> Result<()> {
     let data = load_data(&args)?;
     let kind = ScoreKind::parse(args.raw("score").unwrap_or("jeffreys"))
         .ok_or_else(|| anyhow!("bad --score"))?;
+    // The answer-portfolio knob (ISSUE 9): `exact` is the historical
+    // default; `fast`/`anytime` run the ordering+hillclimb portfolio,
+    // and `anytime` then refines with the incumbent-seeded exact sweep,
+    // reporting the shrinking optimality gap per level.
+    let mode = args.raw("mode").unwrap_or("exact").to_string();
+    if !matches!(mode.as_str(), "exact" | "anytime" | "fast") {
+        bail!("--mode expects 'exact', 'anytime' or 'fast' (got '{mode}')");
+    }
+    if mode != "exact" {
+        return cmd_learn_search(&args, &data, kind, &mode);
+    }
     let solver = args.raw("solver").unwrap_or("leveled").to_string();
     let engine_name = args.raw("engine").unwrap_or("native").to_string();
     // Runtime width dispatch happens exactly once, here: p ≤ MAX_VARS
@@ -543,6 +567,130 @@ fn cmd_learn(args: Args) -> Result<()> {
     let result = result?;
     let solver_label = if streaming { "streaming" } else { solver.as_str() };
     emit_result(&args, &data, kind, solver_label, &engine_name, result, heap)
+}
+
+/// The anytime gap feed for a local `bnsl learn --mode anytime`: one
+/// stderr line per completed DP level with the admissible upper bound
+/// and the gap to the portfolio incumbent (monotone nonincreasing;
+/// exactly 0 at the last level).
+struct StderrInterim {
+    incumbent: f64,
+}
+
+impl crate::solver::InterimObserver for StderrInterim {
+    fn on_level(&self, level: usize, levels_total: usize, upper_bound: f64) {
+        let gap = (upper_bound - self.incumbent).max(0.0);
+        eprintln!(
+            "anytime: level {}/{levels_total} complete  upper-bound {upper_bound:.6}  gap {gap:.6}",
+            level + 1
+        );
+    }
+}
+
+/// `bnsl learn --mode fast|anytime`: the ordering+hillclimb portfolio,
+/// optionally (anytime) followed by the incumbent-seeded exact sweep.
+/// Every exact-tier flag is rejected loudly, never silently dropped —
+/// the `--streaming`/`--scores` precedent.
+fn cmd_learn_search(args: &Args, data: &Dataset, kind: ScoreKind, mode: &str) -> Result<()> {
+    if let Some(solver) = args.raw("solver") {
+        bail!(
+            "--mode {mode} runs the ordering+hillclimb portfolio itself; \
+             drop --solver (got '{solver}')"
+        );
+    }
+    if let Some(engine) = args.raw("engine") {
+        bail!(
+            "--mode {mode} scores with the native engine (the searches \
+             need the dataset's sufficient statistics); drop --engine \
+             (got '{engine}')"
+        );
+    }
+    for flag in ["shards", "resume", "shard-dir", "spill-dir", "backend", "stop-after-level"] {
+        if args.raw(flag).is_some() {
+            bail!(
+                "--{flag} drives the exact tier's disk-assisted \
+                 coordinators; incompatible with --mode {mode}"
+            );
+        }
+    }
+    for switch in ["streaming", "cluster"] {
+        if args.switch(switch) {
+            bail!("--{switch} is an exact-tier mode; incompatible with --mode {mode}");
+        }
+    }
+    if mode == "fast" && args.switch("prune") {
+        bail!(
+            "--prune gates the exact sweep, which --mode fast never \
+             starts — drop --prune (or use --mode anytime)"
+        );
+    }
+    if mode == "anytime" && args.switch("no-prune") {
+        bail!(
+            "the anytime gap feed *is* the bounds layer; --no-prune \
+             leaves it nothing to report — use --mode exact --no-prune \
+             for the paper's full emission"
+        );
+    }
+    let anytime = mode == "anytime";
+    // fast serves any network-sized p; anytime must fit the exact sweep
+    let width = validate_var_count(data.p(), anytime, false)?;
+    let (approx, search_heap) = crate::memtrack::measure(|| {
+        let obs = crate::search::ordering_search(
+            data,
+            kind,
+            &crate::search::OrderingOptions::default(),
+        );
+        let hc = hill_climb(data, kind, &HillClimbOptions::default());
+        // the same portfolio (same options, same seeds, ties to the
+        // ordering search) as `portfolio_incumbent` — the anytime sweep
+        // below shares bounds identity with a default `--prune` run
+        let (network, log_score, origin) = if obs.log_score >= hc.log_score {
+            (obs.network, obs.log_score, "ordering")
+        } else {
+            (hc.network, hc.log_score, "hillclimb")
+        };
+        eprintln!(
+            "portfolio: ordering {:.6} vs hillclimb {:.6} — {origin} leads",
+            obs.log_score, hc.log_score
+        );
+        SolveResult {
+            order: network
+                .topological_order()
+                .expect("search results are DAGs"),
+            log_score,
+            network,
+            stats: Default::default(),
+        }
+    });
+    if !anytime {
+        return emit_result(args, data, kind, "fast", "native", approx, search_heap);
+    }
+    eprintln!(
+        "anytime: incumbent log-score {:.6} serves immediately; the exact \
+         sweep refines below (gap hits 0 at the last level)",
+        approx.log_score
+    );
+    let ctx = std::sync::Arc::new(crate::solver::PruneCtx::with_incumbent(
+        data,
+        approx.log_score,
+    ));
+    let observer: std::sync::Arc<dyn crate::solver::InterimObserver> =
+        std::sync::Arc::new(StderrInterim {
+            incumbent: approx.log_score,
+        });
+    let options = SolveOptions {
+        threads: args.get::<usize>("threads", 1)?,
+        batch: args.get::<usize>("batch", 1024)?,
+        prune: crate::solver::PruneMode::Custom(ctx),
+        interim: Some(observer),
+        ..Default::default()
+    };
+    let engine = NativeEngine::new(data, kind);
+    let (result, heap) = crate::memtrack::measure(|| match width {
+        MaskWidth::Narrow => LeveledSolver::with_options(&engine, options).solve(),
+        MaskWidth::Wide => LeveledSolver::<u64>::with_options_generic(&engine, options).solve(),
+    });
+    emit_result(args, data, kind, "anytime", "native", result, heap)
 }
 
 /// `bnsl learn --scores file.jaa`: solve from a precomputed score table
@@ -1095,6 +1243,14 @@ fn cmd_submit(args: Args) -> Result<()> {
         batch: args.get::<usize>("batch", 1024)?,
         streaming: args.switch("streaming"),
         prune: args.switch("prune"),
+        mode: crate::service::Mode::parse(args.raw("mode").unwrap_or("exact")).ok_or_else(
+            || {
+                anyhow!(
+                    "--mode expects 'exact', 'anytime' or 'fast' (got '{}')",
+                    args.raw("mode").unwrap_or_default()
+                )
+            },
+        )?,
     };
     let response = crate::service::client::submit(&server, &request)?;
     eprintln!(
@@ -1472,6 +1628,83 @@ mod tests {
             "--prune".into(),
         ])
         .is_err());
+    }
+
+    /// Tentpole (ISSUE 9): `--mode fast` answers immediately and
+    /// `--mode anytime` finishes bit-identical to the exact default.
+    #[test]
+    fn learn_mode_portfolio_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bnsl_cli_mode_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let learn = |out: &str, mode: Option<&str>| {
+            let mut argv = vec![
+                "learn".to_string(),
+                "--network".to_string(),
+                "asia".to_string(),
+                "--n".to_string(),
+                "100".to_string(),
+                "--seed".to_string(),
+                "7".to_string(),
+                "--out".to_string(),
+                out.to_string(),
+            ];
+            if let Some(mode) = mode {
+                argv.extend(["--mode".to_string(), mode.to_string()]);
+            }
+            run(argv).unwrap();
+        };
+        let exact = dir.join("exact.json").to_string_lossy().to_string();
+        let anytime = dir.join("anytime.json").to_string_lossy().to_string();
+        let fast = dir.join("fast.json").to_string_lossy().to_string();
+        learn(&exact, None);
+        learn(&anytime, Some("anytime"));
+        learn(&fast, Some("fast"));
+        let parse = |path: &str| Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let (e, a, f) = (parse(&exact), parse(&anytime), parse(&fast));
+        let score = |j: &Json| j.get("log_score").and_then(Json::as_f64).unwrap();
+        assert_eq!(
+            score(&e).to_bits(),
+            score(&a).to_bits(),
+            "anytime ends at the exact optimum"
+        );
+        assert_eq!(
+            e.get("network").unwrap().to_string(),
+            a.get("network").unwrap().to_string()
+        );
+        assert!(
+            score(&f) <= score(&e) + 1e-9,
+            "the fast network never beats the optimum: {} vs {}",
+            score(&f),
+            score(&e)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Search-mode flag conflicts fail loudly, never silently drop.
+    #[test]
+    fn mode_flag_rejections_are_loud() {
+        let base = |extra: &[&str]| {
+            let mut argv = vec![
+                "learn".to_string(),
+                "--network".to_string(),
+                "asia".to_string(),
+                "--n".to_string(),
+                "40".to_string(),
+            ];
+            argv.extend(extra.iter().map(|s| s.to_string()));
+            argv
+        };
+        for extra in [
+            vec!["--mode", "quick"],
+            vec!["--mode", "fast", "--prune"],
+            vec!["--mode", "anytime", "--no-prune"],
+            vec!["--mode", "anytime", "--solver", "silander"],
+            vec!["--mode", "fast", "--streaming"],
+            vec!["--mode", "anytime", "--shards", "2"],
+            vec!["--mode", "fast", "--engine", "jax"],
+        ] {
+            assert!(run(base(&extra)).is_err(), "should reject {extra:?}");
+        }
     }
 
     #[test]

@@ -635,6 +635,100 @@ impl StreamingPlan {
     }
 }
 
+/// Analytic accounting of a search-tier job ([`crate::search`], the
+/// service's `mode: fast | anytime`). The approximate ordering/hill-climb
+/// pass touches no subset lattice at all — its working set is the
+/// dataset plus bounded per-variable scorer state — so a `fast` job is
+/// priced as effectively free next to any exact plan. An `anytime` job
+/// runs the same approximate pass and then the *resident* exact sweep
+/// in-process, so its peak is the [`MemoryPlan`] peak on top of the
+/// search pass.
+#[derive(Clone, Debug)]
+pub struct SearchPlan {
+    pub p: usize,
+    /// Dataset rows the search scores.
+    pub n: usize,
+    /// `true` = anytime (search, then the resident exact sweep);
+    /// `false` = fast (search only, no sweep ever starts).
+    pub exact: bool,
+    /// Resident bytes of the approximate pass alone: two copies of the
+    /// `n·p` value matrix (raw + column-major scorer view) plus a loose
+    /// `p²` ceiling on live family masks/scores during a sweep.
+    pub search_bytes: u64,
+    /// The resident exact sweep's planned peak ([`memory_plan`]); 0 for
+    /// fast plans.
+    pub exact_peak_bytes: u64,
+    /// `search_bytes + exact_peak_bytes` — the figure admission prices.
+    pub peak_bytes: u64,
+}
+
+/// Price a search-tier run. Pure arithmetic like [`memory_plan`];
+/// `exact = true` additionally prices the resident sweep, so it is
+/// restricted to the analytic planner's `p ≤ 62` range (the service
+/// validates `anytime` against the much lower exact-DP caps anyway),
+/// while `fast` plans go up to [`crate::MAX_NET_VARS`].
+pub fn search_plan(p: usize, n: usize, exact: bool) -> SearchPlan {
+    assert!(
+        (1..=crate::MAX_NET_VARS).contains(&p),
+        "search tier supports p ≤ MAX_NET_VARS"
+    );
+    let search_bytes =
+        2 * (n as u64) * (p as u64) + (p as u64) * (p as u64) * 16 + (64 << 10);
+    let exact_peak_bytes = if exact {
+        memory_plan(p, 0.0).peak_bytes
+    } else {
+        0
+    };
+    SearchPlan {
+        p,
+        n,
+        exact,
+        search_bytes,
+        exact_peak_bytes,
+        peak_bytes: search_bytes + exact_peak_bytes,
+    }
+}
+
+impl SearchPlan {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("p", self.p)
+            .set("n", self.n)
+            .set("mode", if self.exact { "anytime" } else { "fast" })
+            .set("search_bytes", self.search_bytes)
+            .set("exact_peak_bytes", self.exact_peak_bytes)
+            .set("peak_bytes", self.peak_bytes)
+    }
+
+    /// Does this plan fit `budgets`? The search tier is memory-only and
+    /// in-process: like [`StreamingPlan::fits_budget`], the only ceiling
+    /// that can bind is resident RAM — no shard files, no object
+    /// requests.
+    pub fn fits_budget(&self, budgets: &Budgets) -> BudgetVerdict {
+        let mut reasons = Vec::new();
+        if self.peak_bytes > budgets.ram_bytes {
+            reasons.push(format!(
+                "planned resident RAM {} exceeds the {} budget (an anytime \
+                 job carries the resident exact sweep — submit mode:fast \
+                 or an exact sharded run instead, or raise the budget)",
+                crate::util::human_bytes(self.peak_bytes),
+                crate::util::human_bytes(budgets.ram_bytes),
+            ));
+        }
+        BudgetVerdict {
+            fits: reasons.is_empty(),
+            reasons,
+        }
+    }
+
+    /// Stable-schema JSON record: every key of [`SearchPlan::to_json`]
+    /// plus the [`BudgetVerdict`] under `fits_budget`.
+    pub fn to_json_for(&self, budgets: &Budgets) -> Json {
+        self.to_json()
+            .set("fits_budget", self.fits_budget(budgets).to_json())
+    }
+}
+
 impl MemoryPlan {
     /// Largest `p` whose planned peak fits a byte budget (paper §5.1:
     /// 16 GB ⇒ 26 for the baseline vs 28 for the proposed method). The
@@ -1074,6 +1168,82 @@ mod tests {
         assert!(half.peak_bytes >= dense.peak_bytes - dense.record_stream_bytes);
         let nominal = streaming_plan_pruned(22, NOMINAL_PRUNE_RATIO);
         assert_eq!(nominal.prune_ratio, NOMINAL_PRUNE_RATIO);
+    }
+
+    /// Tentpole (ISSUE 9): the anytime admission prices the approximate
+    /// pass as ~free — a fast plan's peak is dataset-scale, orders of
+    /// magnitude under any exact plan — while an anytime plan carries
+    /// the full resident exact peak on top.
+    #[test]
+    fn search_plan_prices_fast_as_nearly_free_and_anytime_as_resident() {
+        let fast = search_plan(20, 1000, false);
+        assert_eq!(fast.exact_peak_bytes, 0);
+        assert_eq!(fast.peak_bytes, fast.search_bytes);
+        let resident = memory_plan(20, 0.0);
+        assert!(
+            fast.peak_bytes * 100 < resident.peak_bytes,
+            "fast {} vs resident {}",
+            fast.peak_bytes,
+            resident.peak_bytes
+        );
+        let anytime = search_plan(20, 1000, true);
+        assert_eq!(anytime.exact_peak_bytes, resident.peak_bytes);
+        assert_eq!(
+            anytime.peak_bytes,
+            anytime.search_bytes + resident.peak_bytes
+        );
+        // fast goes beyond the exact caps (the search-only regime)
+        let big = search_plan(crate::MAX_NET_VARS, 5000, false);
+        assert!(big.peak_bytes < 1 << 24, "still tiny at p = 64");
+    }
+
+    /// Tentpole (ISSUE 9): search admission is RAM-only, and the JSON
+    /// record has a stable key set with the verdict attached.
+    #[test]
+    fn search_plan_budget_and_json_schema() {
+        let plan = search_plan(18, 500, true);
+        assert!(plan.fits_budget(&Budgets::unlimited()).fits);
+        let tight = Budgets {
+            ram_bytes: plan.peak_bytes - 1,
+            ..Budgets::unlimited()
+        };
+        let v = plan.fits_budget(&tight);
+        assert!(!v.fits);
+        assert!(v.reasons.iter().any(|r| r.contains("resident RAM")), "{v:?}");
+        // fd/request ceilings never bind
+        let odd = Budgets {
+            ram_bytes: u64::MAX,
+            fd_limit: 0,
+            object_requests: Some(0),
+        };
+        assert!(plan.fits_budget(&odd).fits);
+        let doc = plan.to_json_for(&Budgets::unlimited());
+        let keys = |j: &Json| -> Vec<String> {
+            match j {
+                Json::Obj(fields) => fields.iter().map(|(k, _)| k.clone()).collect(),
+                _ => panic!("plan record must be an object"),
+            }
+        };
+        assert_eq!(
+            keys(&doc),
+            vec![
+                "p",
+                "n",
+                "mode",
+                "search_bytes",
+                "exact_peak_bytes",
+                "peak_bytes",
+                "fits_budget",
+            ]
+        );
+        assert_eq!(doc.get("mode").and_then(Json::as_str), Some("anytime"));
+        assert_eq!(
+            search_plan(18, 500, false)
+                .to_json()
+                .get("mode")
+                .and_then(Json::as_str),
+            Some("fast")
+        );
     }
 
     #[test]

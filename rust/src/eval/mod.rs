@@ -42,7 +42,7 @@ pub struct EvalSpec {
     pub n: usize,
     /// Sampler seed (same seed → same dataset → same learned network).
     pub seed: u64,
-    /// `leveled` | `silander` | `hillclimb` | `hybrid`.
+    /// `leveled` | `silander` | `hillclimb` | `hybrid` | `ordering`.
     pub solver: String,
     /// Run the leveled DP in its memory-only streaming layout.
     pub streaming: bool,
@@ -120,7 +120,7 @@ pub fn run_eval(spec: &EvalSpec) -> Result<EvalOutcome> {
             spec.solver
         );
     }
-    if !exact && !matches!(spec.solver.as_str(), "hillclimb" | "hybrid") {
+    if !exact && !matches!(spec.solver.as_str(), "hillclimb" | "hybrid" | "ordering") {
         bail!("unknown solver '{}'", spec.solver);
     }
     if spec.streaming && data.p() > crate::MAX_VARS_STREAMING {
@@ -147,6 +147,22 @@ pub fn run_eval(spec: &EvalSpec) -> Result<EvalOutcome> {
                         .expect("hc network is a DAG"),
                     log_score: hc.log_score,
                     network: hc.network,
+                    stats: Default::default(),
+                }
+            }
+            "ordering" => {
+                let obs = crate::search::ordering_search(
+                    &data,
+                    kind,
+                    &crate::search::OrderingOptions::default(),
+                );
+                SolveResult {
+                    order: obs
+                        .network
+                        .topological_order()
+                        .expect("ordering network is a DAG"),
+                    log_score: obs.log_score,
+                    network: obs.network,
                     stats: Default::default(),
                 }
             }
@@ -343,6 +359,34 @@ mod tests {
             exact.shd_cpdag.total(),
             hc.shd_cpdag.total()
         );
+    }
+
+    /// Tentpole (ISSUE 9): the ordering search runs through the eval
+    /// harness, labels its report, and never beats the proven optimum.
+    #[test]
+    fn ordering_eval_runs_and_respects_the_optimum() {
+        let exact = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 1000,
+            seed: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        let obs = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 1000,
+            seed: 3,
+            solver: "ordering".into(),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(
+            obs.log_score <= exact.log_score + 1e-9,
+            "ordering {} beats the optimum {}",
+            obs.log_score,
+            exact.log_score
+        );
+        assert!(obs.report.to_pretty().contains("\"ordering\""));
     }
 
     #[test]

@@ -2,18 +2,27 @@
 //!
 //! * [`hill_climb`] — score-based local search with tabu + restarts
 //!   (Bouckaert 1994/1995; Heckerman et al. 1995)
+//! * [`ordering_search`] — ordering-based search with adjacent-swap
+//!   tabu moves + seeded restarts (Teyssier & Koller 2005); the
+//!   approximate tier of the anytime portfolio
 //! * [`pc_stable`] — constraint-based PC-Stable with G² tests
 //!   (Spirtes & Glymour 1991; Colombo & Maathuis 2014)
 //! * [`pc_hill_climb`] — the hybrid pattern (PC skeleton restricts the
 //!   score search, cf. Kuipers et al. 2022 / MMHC)
 //!
 //! None are globally optimal — they are the reference points the exact
-//! solvers are compared against in `examples/hillclimb_vs_exact.rs`.
+//! solvers are compared against in `examples/hillclimb_vs_exact.rs`,
+//! and ([`ordering_search`] especially) the incumbent seeds of the
+//! BFBnB bounds layer ([`crate::solver::bounds`]).
 
 mod hillclimb;
 pub mod hybrid;
+pub mod ordering;
 pub mod pc;
 
 pub use hillclimb::{hill_climb, HillClimbOptions, HillClimbResult};
 pub use hybrid::{pc_hill_climb, HybridResult};
+pub use ordering::{
+    ordering_search, ordering_search_width, OrderingOptions, OrderingResult,
+};
 pub use pc::{pc_stable, PcOptions, PcResult};

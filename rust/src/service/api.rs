@@ -24,6 +24,51 @@ pub const MAX_SHARDS: usize = 1 << 16;
 /// admission) while allowing batches ~16000× the default.
 pub const MAX_BATCH: usize = 1 << 24;
 
+/// The answer-portfolio mode of a submission — which tier(s) of the
+/// solver portfolio serve the job's result.
+///
+/// * `exact` (the default): the historical behaviour — an exact DP run
+///   (sharded, streaming or resident), result available only at `done`.
+/// * `anytime`: the ordering-based search ([`crate::search::ordering`])
+///   produces an incumbent immediately, then the *resident* exact sweep
+///   refines it with the BFBnB bounds layer; `GET /v1/jobs/{id}/result`
+///   serves the best-so-far network, score and optimality gap while the
+///   job runs, and the final record is bit-identical to an exact run's.
+/// * `fast`: the approximate pass alone — the job is done as soon as
+///   the search returns; no optimality certificate, near-zero cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Mode {
+    #[default]
+    Exact,
+    Anytime,
+    Fast,
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Exact => "exact",
+            Mode::Anytime => "anytime",
+            Mode::Fast => "fast",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Mode> {
+        Some(match name {
+            "exact" => Mode::Exact,
+            "anytime" => Mode::Anytime,
+            "fast" => Mode::Fast,
+            _ => return None,
+        })
+    }
+
+    /// Does this mode run the approximate search tier (in-process,
+    /// dataset-backed, unsharded)?
+    pub fn is_search(&self) -> bool {
+        !matches!(self, Mode::Exact)
+    }
+}
+
 /// One job submission (`POST /v1/jobs`).
 ///
 /// Exactly one of `csv` (the dataset inline, as CSV text), `path`
@@ -60,6 +105,10 @@ pub struct SubmitRequest {
     /// a `.jaa` table carries no sufficient statistics to bound, so
     /// `scores` jobs reject this flag.
     pub prune: bool,
+    /// Answer-portfolio tier ([`Mode`]); `exact` is the historical
+    /// default. Search modes (`anytime`, `fast`) are dataset-backed,
+    /// in-process and unsharded.
+    pub mode: Mode,
 }
 
 impl Default for SubmitRequest {
@@ -75,6 +124,7 @@ impl Default for SubmitRequest {
             batch: 1024,
             streaming: false,
             prune: false,
+            mode: Mode::Exact,
         }
     }
 }
@@ -128,6 +178,15 @@ impl SubmitRequest {
                     Json::Bool(flag) => req.prune = flag,
                     other => bail!("field 'prune' must be a boolean, got {other:?}"),
                 },
+                "mode" => {
+                    let name = expect_string(value, "mode")?;
+                    req.mode = Mode::parse(&name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "field 'mode' must be 'exact', 'anytime' or \
+                             'fast' (got '{name}')"
+                        )
+                    })?;
+                }
                 _ => {} // unknown fields ignored (forward compatibility)
             }
         }
@@ -172,6 +231,35 @@ impl SubmitRequest {
                  drop 'prune'"
             );
         }
+        if req.mode.is_search() {
+            let mode = req.mode.name();
+            if req.scores.is_some() {
+                bail!(
+                    "mode '{mode}' scores the search tier from the dataset's \
+                     sufficient statistics; a 'scores' table carries none — \
+                     submit 'csv' or 'path'"
+                );
+            }
+            if req.shards > 1 {
+                bail!(
+                    "mode '{mode}' runs in-process and cannot shard; drop \
+                     'shards' (got {})",
+                    req.shards
+                );
+            }
+            if req.streaming {
+                bail!(
+                    "mode '{mode}' uses the resident solver for its exact \
+                     phase; drop 'streaming'"
+                );
+            }
+        }
+        if req.mode == Mode::Fast && req.prune {
+            bail!(
+                "'prune' gates the exact sweep, which mode 'fast' never \
+                 starts — drop 'prune'"
+            );
+        }
         Ok(req)
     }
 
@@ -196,6 +284,7 @@ impl SubmitRequest {
             .set("batch", self.batch)
             .set("streaming", self.streaming)
             .set("prune", self.prune)
+            .set("mode", self.mode.name())
     }
 
     /// Resolve the score name (`bnsl learn --score` grammar).
@@ -378,6 +467,51 @@ mod tests {
             let doc = Json::parse(text).unwrap();
             assert!(SubmitRequest::from_json(doc).is_ok(), "{text}");
         }
+    }
+
+    /// Tentpole (ISSUE 9): the `mode` knob roundtrips, defaults to
+    /// `exact`, and the search modes enforce dataset-backed, in-process,
+    /// unsharded execution.
+    #[test]
+    fn mode_roundtrips_and_search_modes_enforce_their_shape() {
+        let doc = Json::parse(r#"{"csv": "a,b\n0,1\n"}"#).unwrap();
+        assert_eq!(SubmitRequest::from_json(doc).unwrap().mode, Mode::Exact);
+        for (text, want) in [
+            (r#"{"csv": "x", "mode": "anytime"}"#, Mode::Anytime),
+            (r#"{"csv": "x", "mode": "fast"}"#, Mode::Fast),
+            (r#"{"csv": "x", "mode": "exact"}"#, Mode::Exact),
+        ] {
+            let req = SubmitRequest::from_json(Json::parse(text).unwrap()).unwrap();
+            assert_eq!(req.mode, want, "{text}");
+            let back = SubmitRequest::from_json(req.to_json()).unwrap();
+            assert_eq!(back.mode, want, "roundtrip of {text}");
+        }
+        for text in [
+            r#"{"csv": "x", "mode": "turbo"}"#,            // unknown mode
+            r#"{"csv": "x", "mode": 3}"#,                  // wrong type
+            r#"{"scores": "x", "mode": "anytime"}"#,       // no dataset
+            r#"{"scores": "x", "mode": "fast"}"#,          // no dataset
+            r#"{"csv": "x", "mode": "anytime", "shards": 2}"#,
+            r#"{"csv": "x", "mode": "fast", "streaming": true}"#,
+            r#"{"csv": "x", "mode": "fast", "prune": true}"#, // nothing to prune
+        ] {
+            let doc = Json::parse(text).unwrap();
+            assert!(SubmitRequest::from_json(doc).is_err(), "{text}");
+        }
+        // anytime composes with prune (the flag is implied anyway) and
+        // with threads/batch tuning of the resident sweep
+        for text in [
+            r#"{"csv": "x", "mode": "anytime", "prune": true}"#,
+            r#"{"csv": "x", "mode": "anytime", "threads": 2, "batch": 64}"#,
+            r#"{"csv": "x", "mode": "fast", "prune": false}"#,
+        ] {
+            let doc = Json::parse(text).unwrap();
+            assert!(SubmitRequest::from_json(doc).is_ok(), "{text}");
+        }
+        assert_eq!(Mode::parse("anytime"), Some(Mode::Anytime));
+        assert!(Mode::parse("zombie").is_none());
+        assert!(Mode::Anytime.is_search() && Mode::Fast.is_search());
+        assert!(!Mode::Exact.is_search());
     }
 
     #[test]

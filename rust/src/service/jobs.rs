@@ -36,18 +36,20 @@
 //! (same id back, no new work), and a finished one is served from the
 //! result cache without touching a solver.
 
-use super::api::{JobState, SubmitRequest, SubmitResponse};
+use super::api::{JobState, Mode, SubmitRequest, SubmitResponse};
 use super::cache::ResultCache;
 use super::queue::{Admission, Rejection};
 use crate::cli::MaskWidth;
-use crate::coordinator::plan::{sharded_plan, streaming_plan, Budgets};
+use crate::coordinator::plan::{search_plan, sharded_plan, streaming_plan, Budgets};
 use crate::coordinator::shard::{run_fingerprint, ShardOptions};
 use crate::coordinator::storage::{make_backend, BackendKind, SharedBackend};
 use crate::data::parse_csv;
 use crate::engine::{NativeEngine, ScoreEngine, ScoreSource, TableEngine};
 use crate::score::ScoreKind;
+use crate::search::{hill_climb, ordering_search, HillClimbOptions, OrderingOptions};
 use crate::solver::{
-    solve_sharded, CancelToken, ShardOutcome, SolveOptions, StreamingSolver,
+    solve_sharded, CancelToken, InterimObserver, LeveledSolver, PruneCtx, PruneMode,
+    ShardOutcome, SolveOptions, SolveResult, StreamingSolver,
 };
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -120,6 +122,12 @@ struct Job {
     /// Dataset-free submission: the staged payload is a `.jaa` score
     /// table ([`crate::engine::ScoreTable`]) served by the table engine.
     scores: bool,
+    /// Answer-portfolio tier ([`Mode`]): `exact` is the historical
+    /// behaviour; `anytime` serves interim best-so-far records while
+    /// the resident exact sweep refines; `fast` stops at the
+    /// approximate search network (distinct fingerprint — its record
+    /// is *not* the exact optimum).
+    mode: Mode,
     error: Option<String>,
     cancel: CancelToken,
     /// True only for user cancellation (`DELETE`) — a drain also fires
@@ -191,6 +199,13 @@ pub struct JobManager {
     state: Mutex<State>,
     work: Condvar,
     counters: Counters,
+    /// job id → latest interim (best-so-far) record of a *running*
+    /// anytime job, served by `GET /v1/jobs/{id}/result` before `done`.
+    /// In-memory only — interim answers are a live-progress feature, not
+    /// a durable artifact; entries are dropped when the job finalises.
+    /// Behind an `Arc` so the solve's [`InterimObserver`] can publish
+    /// into it without holding the manager.
+    interims: Arc<Mutex<HashMap<String, String>>>,
 }
 
 /// What the executor needs off-lock for one job.
@@ -205,6 +220,7 @@ struct Claim {
     streaming: bool,
     prune: bool,
     scores: bool,
+    mode: Mode,
     cancel: CancelToken,
 }
 
@@ -215,6 +231,17 @@ struct Claim {
 enum PreparedMode {
     Sharded(ShardOptions),
     Streaming {
+        threads: usize,
+        batch: usize,
+        cancel: CancelToken,
+    },
+    /// The search tier (`mode: fast | anytime`): the approximate
+    /// ordering/hill-climb portfolio pass, and for `anytime` the
+    /// resident bounds-gated exact sweep after it. Entirely in-process
+    /// like `Streaming` — no run dir, no manifest; a fired cancel token
+    /// drops everything.
+    Search {
+        anytime: bool,
         threads: usize,
         batch: usize,
         cancel: CancelToken,
@@ -272,6 +299,7 @@ impl JobManager {
             }),
             work: Condvar::new(),
             counters: Counters::default(),
+            interims: Arc::new(Mutex::new(HashMap::new())),
         };
         manager.recover()?;
         Ok(Arc::new(manager))
@@ -389,6 +417,7 @@ impl JobManager {
             .set("streaming", job.streaming)
             .set("prune", job.prune)
             .set("scores", job.scores)
+            .set("mode", job.mode.name())
             .set("backend", self.run_backend.name())
             .set(
                 "error",
@@ -478,6 +507,40 @@ impl JobManager {
                     .to_string(),
             ));
         }
+        // mode shape, mirrored from SubmitRequest::from_json for
+        // non-HTTP callers: search modes are dataset-backed, in-process
+        // and unsharded
+        if req.mode.is_search() {
+            if req.scores.is_some() {
+                return Err(SubmitError::Invalid(format!(
+                    "mode '{}' scores the search tier from the dataset's \
+                     sufficient statistics; a 'scores' table carries none",
+                    req.mode.name()
+                )));
+            }
+            if req.shards > 1 {
+                return Err(SubmitError::Invalid(format!(
+                    "mode '{}' runs in-process and cannot shard (got \
+                     shards = {})",
+                    req.mode.name(),
+                    req.shards
+                )));
+            }
+            if req.streaming {
+                return Err(SubmitError::Invalid(format!(
+                    "mode '{}' uses the resident solver for its exact \
+                     phase; drop 'streaming'",
+                    req.mode.name()
+                )));
+            }
+        }
+        if req.mode == Mode::Fast && req.prune {
+            return Err(SubmitError::Invalid(
+                "'prune' gates the exact sweep, which mode 'fast' never \
+                 starts — drop 'prune'"
+                    .to_string(),
+            ));
+        }
         let is_scores = req.scores.is_some();
         let (fingerprint, p, n, score_name) = if is_scores {
             // dataset-free form: parse + restrict the table now so a bad
@@ -522,9 +585,15 @@ impl JobManager {
                 }
                 data = data.take_vars(p);
             }
-            // exact-DP caps: streaming jobs run the memory-only engine
-            // (its own, tighter wide cap), the rest the sharded solver
-            if req.streaming {
+            // caps per execution tier: fast is search-only (the loose
+            // network cap), anytime runs the resident exact sweep,
+            // streaming the memory-only engine (its own, tighter wide
+            // cap), the rest the sharded solver
+            if req.mode == Mode::Fast {
+                crate::cli::validate_var_count(data.p(), false, false).map_err(invalid)?;
+            } else if req.mode == Mode::Anytime {
+                crate::cli::validate_var_count(data.p(), true, false).map_err(invalid)?;
+            } else if req.streaming {
                 crate::cli::validate_var_count(data.p(), true, false).map_err(invalid)?;
                 if data.p() > crate::MAX_VARS_STREAMING {
                     return Err(SubmitError::Invalid(format!(
@@ -537,19 +606,29 @@ impl JobManager {
             } else {
                 crate::cli::validate_var_count(data.p(), true, true).map_err(invalid)?;
             }
-            (
-                run_fingerprint(&data, kind),
-                data.p(),
-                data.n(),
-                req.score.clone(),
-            )
+            // a fast job's record is the *approximate* network — never
+            // interchangeable with the exact optimum — so it gets its
+            // own fingerprint namespace; an anytime job's final record
+            // IS the exact record, so it shares the exact fingerprint
+            // (dedup and the result cache work across the modes)
+            let fingerprint = match req.mode {
+                Mode::Fast => format!("{}-fast", run_fingerprint(&data, kind)),
+                _ => run_fingerprint(&data, kind),
+            };
+            (fingerprint, data.p(), data.n(), req.score.clone())
         };
-        // price exactly the mode that will run (both off the lock);
+        // price exactly the mode that will run (all off the lock);
         // pruned jobs are admitted at the dense (ratio-0) price — the
         // measured prune ratio is data-dependent, so admission must not
         // bank on savings that may not materialise
-        let stream_plan = req.streaming.then(|| streaming_plan(p));
-        let plan = (!req.streaming).then(|| sharded_plan(p, req.shards, req.threads, req.batch));
+        let srch_plan = req
+            .mode
+            .is_search()
+            .then(|| search_plan(p, n, req.mode == Mode::Anytime));
+        let stream_plan =
+            (req.streaming && srch_plan.is_none()).then(|| streaming_plan(p));
+        let plan = (!req.streaming && srch_plan.is_none())
+            .then(|| sharded_plan(p, req.shards, req.threads, req.batch));
 
         // Phase 1, under the lock: dedup/cache/admission checks and the
         // id + fingerprint reservation. The job is inserted into the
@@ -591,16 +670,14 @@ impl JobManager {
             }
             // admission counts phase-1 reservations still staging, so
             // concurrent submissions cannot overshoot max_queue
-            let admitted = match (&stream_plan, &plan) {
-                (Some(splan), _) => self
-                    .admission
-                    .admit_streaming(splan, st.queue.len() + st.reserved),
-                (None, Some(plan)) => self.admission.admit(
-                    plan,
-                    self.run_backend,
-                    st.queue.len() + st.reserved,
-                ),
-                (None, None) => unreachable!("exactly one plan is priced"),
+            let depth = st.queue.len() + st.reserved;
+            let admitted = match (&srch_plan, &stream_plan, &plan) {
+                (Some(splan), _, _) => self.admission.admit_search(splan, depth),
+                (None, Some(splan), _) => self.admission.admit_streaming(splan, depth),
+                (None, None, Some(plan)) => {
+                    self.admission.admit(plan, self.run_backend, depth)
+                }
+                (None, None, None) => unreachable!("exactly one plan is priced"),
             };
             if let Err(rejection) = admitted {
                 Counters::bump(&self.counters.rejected);
@@ -622,6 +699,7 @@ impl JobManager {
                 streaming: req.streaming,
                 prune: req.prune,
                 scores: is_scores,
+                mode: req.mode,
                 error: None,
                 cancel: CancelToken::new(),
                 cancel_requested: false,
@@ -715,6 +793,7 @@ impl JobManager {
                 streaming: job.streaming,
                 prune: job.prune,
                 scores: job.scores,
+                mode: job.mode,
                 cancel: job.cancel.clone(),
             };
             let _ = self.persist_locked(job);
@@ -773,6 +852,14 @@ impl JobManager {
                 Counters::bump(&self.counters.failed);
             }
         }
+        drop(st);
+        // the interim record is a live-progress artifact of the run that
+        // just ended — done jobs serve the cached final record, failed/
+        // cancelled ones must not keep serving a stale best-so-far
+        self.interims
+            .lock()
+            .expect("interim lock")
+            .remove(&claim.id);
         true
     }
 
@@ -870,10 +957,37 @@ impl JobManager {
             )));
         }
         let data = parsed.take_vars(claim.p);
-        if run_fingerprint(&data, kind) != claim.fingerprint {
+        // fast jobs live in their own fingerprint namespace (their
+        // record is the approximate network, never the exact optimum)
+        let expected = match claim.mode {
+            Mode::Fast => format!("{}-fast", run_fingerprint(&data, kind)),
+            _ => run_fingerprint(&data, kind),
+        };
+        if expected != claim.fingerprint {
             return Err(Exec::Failed(
                 "staged dataset no longer matches the ledger fingerprint".to_string(),
             ));
+        }
+        if claim.mode.is_search() {
+            // in-process like streaming: no run dir, no manifest; the
+            // width caps mirror the submit-time checks
+            let width = if claim.mode == Mode::Anytime {
+                crate::cli::validate_var_count(data.p(), true, false)
+                    .map_err(|e| Exec::Failed(format!("{e:#}")))?
+            } else {
+                crate::cli::validate_var_count(data.p(), false, false)
+                    .map_err(|e| Exec::Failed(format!("{e:#}")))?
+            };
+            return Ok(Prepared {
+                source: ScoreSource::Data { data, kind },
+                mode: PreparedMode::Search {
+                    anytime: claim.mode == Mode::Anytime,
+                    threads: claim.threads,
+                    batch: claim.batch,
+                    cancel: claim.cancel.clone(),
+                },
+                width,
+            });
         }
         if claim.streaming {
             // memory-only: no run dir, no manifest, nothing to resume —
@@ -934,6 +1048,32 @@ impl JobManager {
     /// Either mode's record is bit-identical, so the fingerprint-keyed
     /// cache (and dedup) is correct across modes.
     fn run_prepared(&self, prepared: &Prepared, claim: &Claim) -> Exec {
+        // the search tier needs the dataset itself (the searches score
+        // straight off sufficient statistics), not a width-erased
+        // engine, so it branches before `drive`'s erasure
+        if let PreparedMode::Search {
+            anytime,
+            threads,
+            batch,
+            cancel,
+        } = &prepared.mode
+        {
+            let ScoreSource::Data { data, kind } = &prepared.source else {
+                return Exec::Failed(
+                    "search-tier jobs are dataset-backed by construction".to_string(),
+                );
+            };
+            return self.run_search(
+                data,
+                *kind,
+                *anytime,
+                *threads,
+                *batch,
+                cancel,
+                claim,
+                prepared.width,
+            );
+        }
         match &prepared.source {
             ScoreSource::Data { data, kind } => {
                 let engine = NativeEngine::new(data, *kind);
@@ -1020,6 +1160,118 @@ impl JobManager {
                     Err(e) => Exec::Failed(format!("{e:#}")),
                 }
             }
+            PreparedMode::Search { .. } => {
+                unreachable!("search jobs are dispatched by run_prepared")
+            }
+        }
+    }
+
+    /// The search-tier execution (`mode: fast | anytime`): the
+    /// approximate portfolio pass (ordering-based search + hill climb,
+    /// both at their fixed default options — the exact pair
+    /// [`crate::solver::portfolio_incumbent`] seeds, so the custom
+    /// prune context below is stamp-identical to an exact `prune: true`
+    /// run's and shares its work). `fast` publishes the better
+    /// approximate network and is done; `anytime` serves it as the
+    /// first interim record, then refines with the resident
+    /// bounds-gated exact sweep, re-publishing the interim (now with a
+    /// certified optimality gap) at every level boundary.
+    #[allow(clippy::too_many_arguments)]
+    fn run_search(
+        &self,
+        data: &crate::data::Dataset,
+        kind: ScoreKind,
+        anytime: bool,
+        threads: usize,
+        batch: usize,
+        cancel: &CancelToken,
+        claim: &Claim,
+        width: MaskWidth,
+    ) -> Exec {
+        let publish = |result: SolveResult, mode: &str| {
+            Counters::bump(&self.counters.solver_runs);
+            let mut doc = result.to_json(data.names());
+            if mode == "fast" {
+                // mark the record: this network is approximate, not the
+                // exact optimum (anytime's final record IS exact, so it
+                // stays schema-identical to an exact run's)
+                doc = doc.set("mode", "fast");
+            }
+            match self.cache.publish(&claim.fingerprint, &doc.to_pretty()) {
+                Ok(()) => Exec::Done { via_cache: false },
+                Err(e) => Exec::Failed(format!("publishing result: {e:#}")),
+            }
+        };
+        let obs = ordering_search(data, kind, &OrderingOptions::default());
+        let hc = hill_climb(data, kind, &HillClimbOptions::default());
+        let (network, log_score) = if obs.log_score >= hc.log_score {
+            (obs.network, obs.log_score)
+        } else {
+            (hc.network, hc.log_score)
+        };
+        let order = network
+            .topological_order()
+            .expect("search results are DAGs");
+        let approx = SolveResult {
+            network,
+            log_score,
+            order,
+            stats: Default::default(),
+        };
+        if !anytime {
+            return publish(approx, "fast");
+        }
+        // first interim: the incumbent network, gap unknown until the
+        // sweep's first level bound lands (`gap: null` — FORMATS.md)
+        let base = approx
+            .to_json(data.names())
+            .set("interim", true)
+            .set("mode", "anytime");
+        let first = base
+            .clone()
+            .set("phase", "search")
+            .set("upper_bound", Json::Null)
+            .set("gap", Json::Null);
+        self.interims
+            .lock()
+            .expect("interim lock")
+            .insert(claim.id.clone(), first.to_pretty());
+        let ctx = Arc::new(PruneCtx::with_incumbent(data, log_score));
+        let observer: Arc<dyn InterimObserver> = Arc::new(InterimPublisher {
+            slot: Arc::clone(&self.interims),
+            id: claim.id.clone(),
+            base,
+            incumbent: log_score,
+        });
+        let threads = match threads {
+            0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+            t => t,
+        };
+        let options = SolveOptions {
+            threads,
+            batch: batch.max(1),
+            cancel: cancel.clone(),
+            prune: PruneMode::Custom(ctx),
+            interim: Some(observer),
+            ..Default::default()
+        };
+        let engine = NativeEngine::new(data, kind);
+        let solved = match width {
+            MaskWidth::Narrow => {
+                LeveledSolver::with_options(&engine, options).try_solve()
+            }
+            MaskWidth::Wide => {
+                LeveledSolver::<u64>::with_options_generic(&engine, options).try_solve()
+            }
+        };
+        match solved {
+            // the final record is the exact optimum — bit-identical to
+            // any other exact solve, so the shared fingerprint's cache
+            // entry is valid for exact submissions too
+            Some(result) => publish(result, "anytime"),
+            // cancel fired at a level boundary: like streaming, nothing
+            // durable exists — a resubmission re-runs from scratch
+            None => Exec::Checkpointed,
         }
     }
 
@@ -1142,6 +1394,19 @@ impl JobManager {
         Ok(Some(record))
     }
 
+    /// The interim (best-so-far) record of a *running* anytime job
+    /// (`GET /v1/jobs/{id}/result` before `done`). `None` when the job
+    /// has published no interim — not an anytime job, still queued, or
+    /// already finalised (terminal jobs drop their interim: `done`
+    /// serves the cached final record instead).
+    pub fn interim_text(&self, id: &str) -> Option<String> {
+        self.interims
+            .lock()
+            .expect("interim lock")
+            .get(id)
+            .cloned()
+    }
+
     /// The job state, for callers that only route on it.
     pub fn job_state(&self, id: &str) -> Option<JobState> {
         let st = self.state.lock().expect("job-manager lock");
@@ -1203,6 +1468,40 @@ impl JobManager {
     }
 }
 
+/// The anytime tier's gap feed: after every completed frontier level
+/// the resident solver hands over a certified admissible upper bound on
+/// the optimum ([`InterimObserver`]), and this publisher turns it into
+/// the served interim record — the search incumbent (still the best
+/// *realised* network until the sweep finishes) plus the bound and the
+/// resulting optimality gap, clamped at 0 because the incumbent itself
+/// never exceeds an admissible bound by more than float slack.
+#[derive(Debug)]
+struct InterimPublisher {
+    slot: Arc<Mutex<HashMap<String, String>>>,
+    id: String,
+    /// Prebuilt incumbent record (network/order/log_score/mode).
+    base: Json,
+    incumbent: f64,
+}
+
+impl InterimObserver for InterimPublisher {
+    fn on_level(&self, level: usize, levels_total: usize, upper_bound: f64) {
+        let gap = (upper_bound - self.incumbent).max(0.0);
+        let doc = self
+            .base
+            .clone()
+            .set("phase", "sweep")
+            .set("levels_complete", (level + 1) as u64)
+            .set("levels_total", levels_total as u64)
+            .set("upper_bound", upper_bound)
+            .set("gap", gap);
+        self.slot
+            .lock()
+            .expect("interim lock")
+            .insert(self.id.clone(), doc.to_pretty());
+    }
+}
+
 /// Rebuild one job from its ledger record.
 fn job_from_doc(doc: &Json, dir_name: &str, ledger: &std::path::Path) -> Result<Job> {
     let bad = |what: &str| anyhow::anyhow!("{}: {what}", ledger.display());
@@ -1241,6 +1540,12 @@ fn job_from_doc(doc: &Json, dir_name: &str, ledger: &std::path::Path) -> Result<
         prune: matches!(doc.get("prune"), Some(Json::Bool(true))),
         // absent in pre-scores ledgers: default to a dataset job
         scores: matches!(doc.get("scores"), Some(Json::Bool(true))),
+        // absent in pre-portfolio ledgers: the historical exact tier
+        mode: match doc.get("mode").and_then(Json::as_str) {
+            None => Mode::Exact,
+            Some(name) => Mode::parse(name)
+                .ok_or_else(|| bad(&format!("unknown mode '{name}'")))?,
+        },
         error: doc
             .get("error")
             .and_then(Json::as_str)
@@ -1646,6 +1951,119 @@ mod tests {
         assert!(b.deduped && b.cached);
         assert_eq!(mgr.solver_runs(), 1);
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Tentpole (ISSUE 9): a `mode: fast` job publishes the approximate
+    /// search network immediately, marked as such, in its own
+    /// fingerprint namespace — a later exact submission of the same
+    /// dataset is a *fresh* job, and the exact optimum it finds is at
+    /// least as good.
+    #[test]
+    fn fast_job_serves_the_approximate_network_in_its_own_namespace() {
+        let root = temp_root("fastjob");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::chain(8, 200, 0.9, 31);
+        let text = csv_text(&d);
+        let fast = SubmitRequest {
+            csv: Some(text.clone()),
+            mode: super::Mode::Fast,
+            ..Default::default()
+        };
+        let a = mgr.submit(&fast).unwrap();
+        assert!(!a.deduped && !a.cached);
+        assert!(mgr.run_one());
+        assert_eq!(mgr.job_state(&a.id), Some(JobState::Done));
+        let status = mgr.status_json(&a.id).unwrap();
+        assert_eq!(status.get("mode").unwrap().as_str(), Some("fast"));
+        let record = mgr.result_text(&a.id).unwrap().expect("fast result");
+        let doc = Json::parse(&record).unwrap();
+        assert_eq!(doc.get("mode").unwrap().as_str(), Some("fast"));
+        let approx = doc.get("log_score").unwrap().as_f64().unwrap();
+        // the record is exactly the better of the two portfolio searches
+        let parsed = parse_csv(&text).unwrap();
+        let obs = ordering_search(&parsed, ScoreKind::Jeffreys, &OrderingOptions::default());
+        let hc = hill_climb(&parsed, ScoreKind::Jeffreys, &HillClimbOptions::default());
+        assert_eq!(approx.to_bits(), obs.log_score.max(hc.log_score).to_bits());
+        // an exact submission is NOT a dedup/cache hit of the fast one
+        let b = mgr.submit(&inline_request(&text, 1)).unwrap();
+        assert!(!b.deduped && !b.cached);
+        assert_ne!(b.id, a.id);
+        assert!(mgr.run_one());
+        let exact = Json::parse(&mgr.result_text(&b.id).unwrap().unwrap()).unwrap();
+        let optimum = exact.get("log_score").unwrap().as_f64().unwrap();
+        assert!(optimum >= approx - 1e-9, "exact {optimum} vs fast {approx}");
+        assert!(exact.get("mode").is_none(), "exact records carry no mode key");
+        assert_eq!(mgr.solver_runs(), 2);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Tentpole (ISSUE 9): an anytime job's final record is
+    /// bit-identical to the dense exact solver's, it shares the exact
+    /// fingerprint (a later exact submission is a cache hit), and its
+    /// interim record is dropped once the job is done.
+    #[test]
+    fn anytime_job_finishes_bit_identical_to_exact_and_shares_the_cache() {
+        let root = temp_root("anytimejob");
+        let mgr = manager(&root, Budgets::unlimited());
+        let d = synth::random(8, 70, 3, &mut crate::util::rng::Rng::new(37));
+        let text = csv_text(&d);
+        let req = SubmitRequest {
+            csv: Some(text.clone()),
+            mode: super::Mode::Anytime,
+            ..Default::default()
+        };
+        let a = mgr.submit(&req).unwrap();
+        assert!(!a.deduped && !a.cached);
+        assert!(mgr.interim_text(&a.id).is_none(), "no interim before the run");
+        assert!(mgr.run_one());
+        assert_eq!(mgr.job_state(&a.id), Some(JobState::Done));
+        assert!(
+            mgr.interim_text(&a.id).is_none(),
+            "done jobs serve the final record, not a stale interim"
+        );
+        let parsed = parse_csv(&text).unwrap();
+        let engine = NativeEngine::new(&parsed, ScoreKind::Jeffreys);
+        let direct = LeveledSolver::new(&engine).solve();
+        let doc = Json::parse(&mgr.result_text(&a.id).unwrap().unwrap()).unwrap();
+        let served = doc.get("log_score").unwrap().as_f64().unwrap();
+        assert_eq!(served.to_bits(), direct.log_score.to_bits());
+        assert_eq!(
+            doc.get("network").unwrap().to_string(),
+            direct.to_json(parsed.names()).get("network").unwrap().to_string()
+        );
+        // shared fingerprint: an exact submission is a cache hit
+        let b = mgr.submit(&inline_request(&text, 1)).unwrap();
+        assert!(b.deduped && b.cached);
+        assert_eq!(b.id, a.id);
+        assert_eq!(mgr.solver_runs(), 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Tentpole (ISSUE 9): the interim record the gap feed publishes —
+    /// sweep phase, level counters, bound, and a gap clamped at zero.
+    #[test]
+    fn interim_publisher_formats_the_gap_record() {
+        let slot = Arc::new(Mutex::new(HashMap::new()));
+        let publisher = InterimPublisher {
+            slot: Arc::clone(&slot),
+            id: "job-000042".to_string(),
+            base: Json::obj()
+                .set("log_score", -12.5)
+                .set("interim", true)
+                .set("mode", "anytime"),
+            incumbent: -12.5,
+        };
+        publisher.on_level(3, 9, -11.0);
+        let doc = Json::parse(slot.lock().unwrap().get("job-000042").unwrap()).unwrap();
+        assert_eq!(doc.get("phase").unwrap().as_str(), Some("sweep"));
+        assert_eq!(doc.get("levels_complete").unwrap().as_u64(), Some(4));
+        assert_eq!(doc.get("levels_total").unwrap().as_u64(), Some(9));
+        assert_eq!(doc.get("upper_bound").unwrap().as_f64(), Some(-11.0));
+        assert_eq!(doc.get("gap").unwrap().as_f64(), Some(1.5));
+        // a bound at (or float-slack below) the incumbent clamps to 0
+        publisher.on_level(8, 9, -12.5 - 1e-12);
+        let doc = Json::parse(slot.lock().unwrap().get("job-000042").unwrap()).unwrap();
+        assert_eq!(doc.get("gap").unwrap().as_f64(), Some(0.0));
     }
 
     /// A cancelled streaming job is terminal with nothing durable; the

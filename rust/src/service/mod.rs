@@ -35,7 +35,7 @@ pub mod jobs;
 pub mod queue;
 pub mod server;
 
-pub use api::{JobState, SubmitRequest, SubmitResponse};
+pub use api::{JobState, Mode, SubmitRequest, SubmitResponse};
 pub use jobs::{CancelOutcome, JobManager, JobManagerOptions, SubmitError};
 pub use queue::{Admission, Rejection};
 pub use server::{ServeOptions, Server};

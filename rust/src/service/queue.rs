@@ -11,7 +11,9 @@
 //! [`BudgetVerdict`]) goes back in the HTTP error body, so the client
 //! learns *which* ceiling it hit and which knob to turn.
 
-use crate::coordinator::plan::{BudgetVerdict, Budgets, ShardedPlan, StreamingPlan};
+use crate::coordinator::plan::{
+    BudgetVerdict, Budgets, SearchPlan, ShardedPlan, StreamingPlan,
+};
 use crate::coordinator::storage::BackendKind;
 use crate::util::json::Json;
 
@@ -64,6 +66,19 @@ impl Admission {
     pub fn admit_streaming(
         &self,
         plan: &StreamingPlan,
+        queue_depth: usize,
+    ) -> Result<(), Rejection> {
+        self.check_queue(queue_depth)?;
+        self.check_budget(plan.fits_budget(&self.budgets))
+    }
+
+    /// Admit or reject one *search-tier* submission (`mode: fast |
+    /// anytime`). Same queue bound; the pricing is
+    /// [`SearchPlan::fits_budget`]'s RAM-only model — a fast job is
+    /// near-free, an anytime job carries the resident exact sweep.
+    pub fn admit_search(
+        &self,
+        plan: &SearchPlan,
         queue_depth: usize,
     ) -> Result<(), Rejection> {
         self.check_queue(queue_depth)?;
@@ -162,6 +177,29 @@ mod tests {
         });
         assert!(metered.admit_streaming(&plan, 0).is_ok());
         let full = metered.admit_streaming(&plan, 4).unwrap_err();
+        assert!(full.verdict.is_none());
+        assert!(full.reason.contains("queue is full"), "{}", full.reason);
+    }
+
+    /// Tentpole (ISSUE 9): search-tier admission. A fast plan fits even
+    /// tiny RAM budgets; an anytime plan is rejected once the budget
+    /// undercuts the resident exact peak it carries.
+    #[test]
+    fn search_admission_prices_the_mode() {
+        let fast = crate::coordinator::plan::search_plan(20, 1000, false);
+        let anytime = crate::coordinator::plan::search_plan(20, 1000, true);
+        let modest = policy(Budgets {
+            ram_bytes: fast.peak_bytes + 1,
+            ..Budgets::unlimited()
+        });
+        assert!(modest.admit_search(&fast, 0).is_ok());
+        let rejection = modest.admit_search(&anytime, 0).unwrap_err();
+        assert!(rejection.verdict.is_some());
+        assert!(rejection.reason.contains("resident RAM"), "{rejection:?}");
+        // queue bound still applies
+        let roomy = policy(Budgets::unlimited());
+        assert!(roomy.admit_search(&anytime, 0).is_ok());
+        let full = roomy.admit_search(&fast, 4).unwrap_err();
         assert!(full.verdict.is_none());
         assert!(full.reason.contains("queue is full"), "{}", full.reason);
     }

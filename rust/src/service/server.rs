@@ -8,7 +8,7 @@
 //! |---|---|
 //! | `POST /v1/jobs` | submit a job ([`crate::service::api::SubmitRequest`]) |
 //! | `GET /v1/jobs/{id}` | job status + live level progress |
-//! | `GET /v1/jobs/{id}/result` | the solved network (bit-identical to a direct run) |
+//! | `GET /v1/jobs/{id}/result` | the solved network (bit-identical to a direct run); while a `mode: anytime` job runs, the best-so-far network + optimality gap |
 //! | `DELETE /v1/jobs/{id}` | cooperative cancel (checkpoints, then `cancelled`) |
 //! | `GET /v1/healthz` | liveness + drain flag |
 //! | `GET /v1/stats` | queue depth, cache/dedup counters, per-endpoint request totals |
@@ -395,13 +395,23 @@ fn route(request: &Request, manager: &JobManager, endpoints: &EndpointStats) -> 
                         Ok(doc) => (200, doc),
                         Err(e) => (500, error_body(&format!("corrupt result record: {e}"))),
                     },
-                    Ok(None) => (
-                        409,
-                        error_body(&format!(
-                            "job '{id}' is {}; the result exists only once it is done",
-                            state.name()
-                        )),
-                    ),
+                    // no final record yet: a running anytime job serves
+                    // its latest interim (best-so-far network + gap)
+                    Ok(None) => match manager.interim_text(id) {
+                        Some(interim) => match Json::parse(&interim) {
+                            Ok(doc) => (200, doc),
+                            Err(e) => {
+                                (500, error_body(&format!("corrupt interim record: {e}")))
+                            }
+                        },
+                        None => (
+                            409,
+                            error_body(&format!(
+                                "job '{id}' is {}; the result exists only once it is done",
+                                state.name()
+                            )),
+                        ),
+                    },
                     Err(e) => (500, error_body(&format!("{e:#}"))),
                 },
             }

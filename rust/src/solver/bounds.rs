@@ -27,9 +27,12 @@
 //!   sets (lower bounds on the per-variable optimum), not admissible
 //!   caps — larger parent sets can score strictly higher.
 //!
-//! * **An incumbent** `I` — the total score of the deterministic
-//!   [`hill_climb`] network (fixed options, seed 0). Any admissible
-//!   `I ≤ OPT` works; a tighter incumbent prunes more.
+//! * **An incumbent** `I` — the better of the deterministic
+//!   [`ordering_search`] and [`hill_climb`] networks (both at fixed
+//!   options, seed 0): the portfolio incumbent. Any admissible
+//!   `I ≤ OPT` works; a tighter incumbent prunes more, and taking the
+//!   max over both searches guarantees the portfolio never prunes
+//!   *less* than the old hillclimb-only seed did.
 //!
 //! The solvers then keep a subset `W` at level `k < p` iff either
 //! optimistic completion survives the threshold `I − ε`:
@@ -54,7 +57,7 @@ use std::sync::Arc;
 
 use crate::data::Dataset;
 use crate::score::ScoreKind;
-use crate::search::{hill_climb, HillClimbOptions};
+use crate::search::{hill_climb, ordering_search, HillClimbOptions, OrderingOptions};
 use crate::util::check::fnv1a;
 
 /// Whether (and how) a solver prunes provably-dominated records.
@@ -115,12 +118,15 @@ pub struct PruneCtx {
 
 impl PruneCtx {
     /// Build the context for a dataset: saturated-LL caps plus the
-    /// deterministic hillclimb incumbent (default options, seed 0 —
-    /// the same inputs always produce the same stamp on one host).
+    /// deterministic portfolio incumbent — the better of the ordering
+    /// search and hillclimb networks, both at default options, seed 0
+    /// (the same inputs always produce the same stamp on one host).
+    /// Flooring at the hillclimb score means swapping the headline seed
+    /// to OBS can only *raise* the incumbent, so the measured prune
+    /// ratio never drops below what the hillclimb-only seed achieved.
     pub fn build(data: &Dataset, kind: ScoreKind) -> PruneCtx {
         let ub = saturated_ll_bounds(data);
-        let incumbent = hill_climb(data, kind, &HillClimbOptions::default()).log_score;
-        PruneCtx::from_parts(ub, incumbent)
+        PruneCtx::from_parts(ub, portfolio_incumbent(data, kind))
     }
 
     /// Assemble a context from explicit parts. Public so tests (and the
@@ -202,6 +208,30 @@ impl PruneCtx {
     /// Subsets whose records were skipped so far.
     pub fn pruned(&self) -> u64 {
         self.pruned.load(Ordering::Relaxed)
+    }
+}
+
+/// The deterministic portfolio incumbent: the better of the ordering
+/// search (the anytime tier's approximate solver) and hill climbing,
+/// both at default options, seed 0. Each is a *realised* network score,
+/// so the max is still `≤ OPT` — admissible by construction. Exposed so
+/// the anytime service tier can compute the incumbent once, serve its
+/// network as the first interim answer, and hand the same score to
+/// [`PruneCtx::with_incumbent`] — the two tiers share the work.
+pub fn portfolio_incumbent(data: &Dataset, kind: ScoreKind) -> f64 {
+    let obs = ordering_search(data, kind, &OrderingOptions::default()).log_score;
+    let hc = hill_climb(data, kind, &HillClimbOptions::default()).log_score;
+    obs.max(hc)
+}
+
+impl PruneCtx {
+    /// Build a context around an already-computed incumbent score (the
+    /// anytime tier passes [`portfolio_incumbent`]'s value so the
+    /// approximate pass is not re-run). Passing exactly that value
+    /// yields a context stamp-identical to [`PruneCtx::build`]'s;
+    /// anything else is the caller's admissibility contract.
+    pub fn with_incumbent(data: &Dataset, incumbent: f64) -> PruneCtx {
+        PruneCtx::from_parts(saturated_ll_bounds(data), incumbent)
     }
 }
 
@@ -364,6 +394,72 @@ mod tests {
         assert_eq!(ub[0], 0.0, "x0 determined by x1");
         assert_eq!(ub[1], 0.0, "x1 determined by x0");
         assert!(ub[2] < 0.0, "noise column cannot be predicted exactly");
+    }
+
+    /// Satellite (ISSUE 9): the portfolio incumbent is admissible —
+    /// `max(OBS, hillclimb) ≤ OPT` — and never below the old
+    /// hillclimb-only seed, so the swap can only tighten the threshold.
+    #[test]
+    fn prop_portfolio_incumbent_is_admissible_and_floored_at_hillclimb() {
+        crate::util::check::Check::new("portfolio incumbent ≤ OPT")
+            .cases(12)
+            .run(|g| {
+                let p = 3 + g.rng.below_usize(3);
+                let n = 30 + g.rng.below_usize(80);
+                let data = synth::random(p, n, 3, &mut g.rng);
+                let kind = ScoreKind::Jeffreys;
+                let incumbent = portfolio_incumbent(&data, kind);
+                let hc = crate::search::hill_climb(
+                    &data,
+                    kind,
+                    &crate::search::HillClimbOptions::default(),
+                )
+                .log_score;
+                let opt = crate::solver::brute::best_dag_score(&data, kind);
+                g.assert(incumbent >= hc, "portfolio dropped below the hillclimb floor");
+                g.assert(incumbent <= opt + 1e-9, "incumbent above the true optimum");
+            });
+    }
+
+    /// Satellite (ISSUE 9): the f̂/m̂ keep test with the OBS-seeded
+    /// portfolio incumbent never prunes the optimum — a solve gated by
+    /// the portfolio context is bit-identical to the dense solve.
+    #[test]
+    fn prop_portfolio_incumbent_never_prunes_the_optimum() {
+        use crate::engine::NativeEngine;
+        use crate::solver::{LeveledSolver, SolveOptions};
+        crate::util::check::Check::new("portfolio keep test preserves OPT")
+            .cases(8)
+            .run(|g| {
+                let p = 4 + g.rng.below_usize(4);
+                let n = 40 + g.rng.below_usize(100);
+                let data = synth::random(p, n, 3, &mut g.rng);
+                let kind = ScoreKind::Jeffreys;
+                let engine = NativeEngine::new(&data, kind);
+                let dense = LeveledSolver::new(&engine).solve();
+                let ctx = Arc::new(PruneCtx::build(&data, kind));
+                let pruned = LeveledSolver::with_options(
+                    &engine,
+                    SolveOptions {
+                        prune: PruneMode::Custom(ctx.clone()),
+                        ..Default::default()
+                    },
+                )
+                .solve();
+                g.assert(
+                    pruned.log_score.to_bits() == dense.log_score.to_bits(),
+                    "pruned optimum drifted from the dense one",
+                );
+                g.assert(
+                    pruned.network == dense.network,
+                    "pruned network differs from the dense one",
+                );
+                g.assert(ctx.considered() > 0, "the gate never engaged");
+                // `with_incumbent` at the same score is stamp-identical
+                let rebuilt =
+                    PruneCtx::with_incumbent(&data, portfolio_incumbent(&data, kind));
+                g.assert(rebuilt.stamp() == ctx.stamp(), "stamp drifted");
+            });
     }
 
     /// Counters accumulate across `note` batches.

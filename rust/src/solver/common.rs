@@ -41,6 +41,22 @@ impl CancelToken {
     }
 }
 
+/// Observer of per-level progress inside an exact solve — the anytime
+/// tier's gap feed. The resident [`crate::solver::LeveledSolver`] calls
+/// [`InterimObserver::on_level`] once per completed frontier level with
+/// a certified admissible upper bound on the optimal network score
+/// (`max(max_W f̂(W), threshold)` over the kept level-`k` subsets — see
+/// `docs/FORMATS.md`, "Interim results"). The bound sequence is monotone
+/// nonincreasing and converges to the optimum at the last level, so
+/// `bound − incumbent` is a true, shrinking optimality gap. Only emitted
+/// when pruning is active (the bound reuses the prune context's caps)
+/// and the frontier is memory-resident; spilled levels skip the pass.
+pub trait InterimObserver: Send + Sync + std::fmt::Debug {
+    /// `level` frontier (of `levels_total = p + 1` DP levels, counting
+    /// level 0) finished with admissible score bound `upper_bound`.
+    fn on_level(&self, level: usize, levels_total: usize, upper_bound: f64);
+}
+
 /// Tuning knobs shared by the DP solvers.
 #[derive(Clone, Debug)]
 pub struct SolveOptions {
@@ -66,6 +82,10 @@ pub struct SolveOptions {
     /// the paper-faithful full sweep; any mode returns a bit-identical
     /// optimum when the bounds are admissible.
     pub prune: super::bounds::PruneMode,
+    /// Per-level progress observer (the anytime tier's gap feed);
+    /// `None` (the default) adds zero work to the sweep. Requires an
+    /// active prune context to have bounds to report.
+    pub interim: Option<Arc<dyn InterimObserver>>,
 }
 
 impl Default for SolveOptions {
@@ -77,6 +97,7 @@ impl Default for SolveOptions {
             spill_threshold: 0.5,
             cancel: CancelToken::new(),
             prune: super::bounds::PruneMode::Off,
+            interim: None,
         }
     }
 }

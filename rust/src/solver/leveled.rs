@@ -486,6 +486,40 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
             score_evals += evals;
             stats.bps_updates += bu;
             stats.sink_updates += su;
+
+            // Anytime gap feed: publish an admissible per-level upper
+            // bound on the optimum. For every kept subset `W` the sweep
+            // left its exact prefix score in `r`, so `f̂(W) = r(W) +
+            // Σ_{X∉W} ub[X]` is computable in one O(C(p,k)·k) pass; the
+            // level bound is `max_W f̂(W)`, floored at the prune
+            // threshold because dropped rows all had `f̂ < threshold`.
+            // Monotonicity (FORMATS.md, "Interim results"): any kept
+            // `W'` at level k+1 has `f̂(W') ≤ f̂(W'∖X) ≤ bound_k` for a
+            // kept predecessor on its path, and the floor is constant —
+            // so `bound_{k+1} ≤ bound_k`, down to exactly `r(V) = OPT`
+            // at the last level. Only runs when an observer is attached;
+            // a plain solve pays nothing.
+            if let (Some(observer), Some(ctx)) = (&self.options.interim, &prune_ctx) {
+                let mut iter = LevelIter::<M>::new(p, k1);
+                let mut best = f64::NEG_INFINITY;
+                for &r in cur.r.iter().take(size1) {
+                    let mask = iter.next().expect("level iter covers the frontier");
+                    if r == f64::NEG_INFINITY {
+                        continue; // pruned row: provably below threshold
+                    }
+                    let mut sum_ub = 0.0f64;
+                    for v in crate::bitset::bits_of(mask) {
+                        sum_ub += ctx.ub(v);
+                    }
+                    let fhat = r + (ctx.total_ub() - sum_ub);
+                    if fhat > best {
+                        best = fhat;
+                    }
+                }
+                let bound = if k1 < p { best.max(ctx.threshold()) } else { best };
+                observer.on_level(k1, p + 1, bound);
+            }
+
             prev = Frontier::Ram(cur);
         }
 

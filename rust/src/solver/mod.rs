@@ -32,8 +32,8 @@ mod leveled;
 mod silander;
 mod streaming;
 
-pub use bounds::{PruneCtx, PruneMode, PruneStamp};
-pub use common::{CancelToken, SolveOptions, SolveResult, SolveStats};
+pub use bounds::{portfolio_incumbent, PruneCtx, PruneMode, PruneStamp};
+pub use common::{CancelToken, InterimObserver, SolveOptions, SolveResult, SolveStats};
 pub use leveled::{solve_clustered, solve_sharded, LeveledSolver, ShardOutcome};
 pub use silander::SilanderSolver;
 pub use streaming::StreamingSolver;

@@ -108,6 +108,40 @@ fn insurance_bif_has_the_published_shape() {
     }
 }
 
+/// Satellite (ISSUE 9): the ALARM fixture carries the published shape —
+/// 37 nodes, 46 arcs, the embedded repo's (name → arity) map and every
+/// published arc — and at p = 37 exceeds every exact cap (30 narrow /
+/// 32 streaming / 34 wide / 36 sharded): it is the zoo's search-tier
+/// workload.
+#[test]
+fn alarm_bif_has_the_published_shape() {
+    let net = bif::read_bif(&fixture("alarm.bif")).unwrap();
+    assert_eq!(net.p(), 37);
+    assert_eq!(net.dag().edge_count(), 46);
+    assert!(
+        net.p() > bnsl::MAX_VARS_SHARDED,
+        "alarm must exceed the largest exact cap to exercise the search tier"
+    );
+    assert!(net.dag().topological_order().is_some());
+    let idx = |name: &str| {
+        net.names()
+            .iter()
+            .position(|n| n == name)
+            .unwrap_or_else(|| panic!("{name} missing"))
+    };
+    // the declaration order is topological, not bnlearn's, so compare
+    // arities through the name map
+    for (name, arity) in repo::ALARM_NAMES.iter().zip(repo::ALARM_ARITIES) {
+        assert_eq!(net.arities()[idx(name)], arity, "{name} arity");
+    }
+    for (a, b) in repo::ALARM_EDGES {
+        assert!(net.dag().has_edge(idx(a), idx(b)), "{a} -> {b} missing");
+    }
+    // seeded sampling works at full width — the search tier's input
+    let d = net.sample(50, 1);
+    assert_eq!((d.p(), d.n()), (37, 50));
+}
+
 /// Satellite (ISSUE 7, sampler properties): same seed → identical
 /// dataset, different seed → different dataset, and the dataset's
 /// column order / names / arities follow the `.bif` declaration.

@@ -1,0 +1,177 @@
+#!/usr/bin/env bash
+# Anytime-portfolio smoke test (CI `anytime` job; runnable locally):
+#
+#   1. direct reference run of the dataset with `--no-prune` (the
+#      paper's full exact emission — score captured bit-exact)
+#   2. `bnsl serve` starts; a `--mode anytime` job is submitted and
+#      `GET /v1/jobs/{id}/result` is polled while it runs
+#   3. every 200-response before the job is done must be an interim
+#      record; across the observed sequence the incumbent log_score
+#      must be monotone NONDECREASING and the certified gap monotone
+#      NONINCREASING (`gap: null` is legal only before the sweep's
+#      first level bound lands)
+#   4. once done, the served final record's score must be
+#      BYTE-identical to the direct `--no-prune` run, and its network
+#      and order must match — the anytime tier refines to the same
+#      exact optimum it shares a fingerprint with
+#
+# Usage: tools/anytime_smoke.sh [path/to/bnsl]   (default target/release/bnsl)
+set -euo pipefail
+
+BNSL="${1:-target/release/bnsl}"
+WORK="$(mktemp -d)"
+SRV=""
+cleanup() {
+    [ -n "$SRV" ] && kill -9 "$SRV" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+PORT="${BNSL_ANYTIME_PORT:-8813}"
+ADDR="127.0.0.1:$PORT"
+
+echo "== dataset + direct --no-prune exact reference =="
+"$BNSL" sample --network alarm --n 1500 --out "$WORK/d.csv"
+"$BNSL" learn --data "$WORK/d.csv" --p 14 --no-prune --out "$WORK/direct.json"
+
+echo "== serve + anytime submission =="
+"$BNSL" serve --port "$PORT" --jobs-dir "$WORK/jobs" --max-concurrent 1 &
+SRV=$!
+for _ in $(seq 1 100); do
+    if python3 - "$ADDR" <<'EOF'
+import http.client, sys
+try:
+    conn = http.client.HTTPConnection(sys.argv[1], timeout=1)
+    conn.request("GET", "/v1/healthz")
+    sys.exit(0 if conn.getresponse().status == 200 else 1)
+except Exception:
+    sys.exit(1)
+EOF
+    then break; fi
+    sleep 0.1
+done
+
+JOB="$("$BNSL" submit --server "$ADDR" --data "$WORK/d.csv" --p 14 --mode anytime)"
+echo "job: $JOB"
+
+echo "== poll interims: score monotone up, gap monotone down =="
+python3 - "$ADDR" "$JOB" "$WORK/served.json" <<'EOF'
+import http.client, json, sys, time
+
+addr, job, out = sys.argv[1:4]
+
+def get_result():
+    conn = http.client.HTTPConnection(addr, timeout=5)
+    conn.request("GET", f"/v1/jobs/{job}/result")
+    resp = conn.getresponse()
+    return resp.status, resp.read().decode()
+
+interims = []
+final = None
+deadline = time.monotonic() + 300
+while time.monotonic() < deadline:
+    code, body = get_result()
+    if code == 409:
+        # queued / no interim published yet — keep polling
+        time.sleep(0.04)
+        continue
+    if code != 200:
+        print(f"FAIL: result route returned {code}: {body}", file=sys.stderr)
+        sys.exit(1)
+    doc = json.loads(body)
+    if doc.get("interim") is True:
+        interims.append(doc)
+        time.sleep(0.04)
+        continue
+    final = doc
+    break
+if final is None:
+    print("FAIL: job never produced a final record within 300s", file=sys.stderr)
+    sys.exit(1)
+if not interims:
+    print(
+        "FAIL: no interim record observed while the job ran — the "
+        "anytime gap feed never published",
+        file=sys.stderr,
+    )
+    sys.exit(1)
+
+# the observed sequence must improve monotonically: best-so-far score
+# never drops, the certified gap never widens
+scores = [doc["log_score"] for doc in interims]
+for a, b in zip(scores, scores[1:]):
+    if b < a - 1e-12:
+        print(f"FAIL: interim log_score regressed: {a} -> {b}", file=sys.stderr)
+        sys.exit(1)
+
+gaps = [doc["gap"] for doc in interims]
+seen_bound = False
+prev = None
+for i, gap in enumerate(gaps):
+    if gap is None:
+        if seen_bound:
+            print(
+                f"FAIL: gap reverted to null at interim {i} after a "
+                "bound was published",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+        continue
+    seen_bound = True
+    if gap < -1e-9:
+        print(f"FAIL: negative gap {gap} at interim {i}", file=sys.stderr)
+        sys.exit(1)
+    if prev is not None and gap > prev + 1e-9:
+        print(f"FAIL: gap widened: {prev} -> {gap}", file=sys.stderr)
+        sys.exit(1)
+    prev = gap
+
+for i, doc in enumerate(interims):
+    if doc.get("mode") != "anytime":
+        print(f"FAIL: interim {i} not marked mode=anytime", file=sys.stderr)
+        sys.exit(1)
+    phase = doc.get("phase")
+    if phase not in ("search", "sweep"):
+        print(f"FAIL: interim {i} has unknown phase {phase!r}", file=sys.stderr)
+        sys.exit(1)
+
+with open(out, "w") as f:
+    json.dump(final, f, indent=2)
+bounds = sum(1 for g in gaps if g is not None)
+print(
+    f"observed {len(interims)} interim(s), {bounds} with a certified "
+    f"bound; final gap {prev}"
+)
+EOF
+
+echo "== final record must match the direct --no-prune exact run =="
+python3 - "$WORK/direct.json" "$WORK/served.json" <<'EOF'
+import json, struct, sys
+
+with open(sys.argv[1]) as f:
+    direct = json.load(f)
+with open(sys.argv[2]) as f:
+    served = json.load(f)
+
+if "interim" in served or "mode" in served:
+    print("FAIL: final anytime record still carries interim markers", file=sys.stderr)
+    sys.exit(1)
+d_bits = struct.pack("<d", direct["log_score"]).hex()
+s_bits = struct.pack("<d", served["log_score"]).hex()
+print(f"direct = {d_bits}")
+print(f"served = {s_bits}")
+if d_bits != s_bits:
+    print("FAIL: anytime final score differs from the direct --no-prune run", file=sys.stderr)
+    sys.exit(1)
+if served["network"] != direct["network"]:
+    print("FAIL: anytime final network differs from the direct run", file=sys.stderr)
+    sys.exit(1)
+if served["order"] != direct["order"]:
+    print("FAIL: anytime final order differs from the direct run", file=sys.stderr)
+    sys.exit(1)
+EOF
+
+kill -TERM "$SRV"
+wait "$SRV" || true
+SRV=""
+echo "OK: anytime served monotone interims and refined to the byte-identical exact optimum"

@@ -48,6 +48,12 @@ assembled by tools/bench_smoke.sh):
                           falling below baseline*(1-tol) fails — a
                           bounds regression that quietly stops pruning
                           gates like a wall regression)
+    ordering.<metric>     from the `ordering` bench record (seeded OBS
+                          wall + the exact solve's wall, plus
+                          score_ratio — optimal/achieved log-score,
+                          1.0 = search found the optimum — gated as a
+                          FLOOR: the anytime incumbent quietly degrading
+                          fails CI like a wall regression)
 
 Wall-clock metrics are compared with --tolerance-wall (shared CI runners
 are noisy); heap peaks come from the deterministic tracking allocator
@@ -116,6 +122,11 @@ PRUNE_METRICS = {
     "pruned_shard_bytes": HEAP,
     "prune_ratio": RATIO,
 }
+ORDERING_METRICS = {
+    "ordering_wall_secs": WALL,
+    "exact_wall_secs": WALL,
+    "score_ratio": RATIO,
+}
 
 
 def flatten(doc):
@@ -137,6 +148,7 @@ def flatten(doc):
         ("scoring", SCORING_METRICS),
         ("streaming", STREAMING_METRICS),
         ("prune", PRUNE_METRICS),
+        ("ordering", ORDERING_METRICS),
     ):
         record = doc.get(section) or {}
         for name, cls in metrics.items():
@@ -363,6 +375,12 @@ def self_test():
             "resident_pruned_wall_secs": 1.0,
             "pruned_shard_bytes": 500_000,
         },
+        "ordering": {
+            "bench": "ordering",
+            "ordering_wall_secs": 0.05,
+            "exact_wall_secs": 2.0,
+            "score_ratio": 0.99,
+        },
     }
     tol = {WALL: 0.25, HEAP: 0.25, RATIO: 0.25}
 
@@ -439,6 +457,27 @@ def self_test():
     del partial["prune"]
     failures, _ = compare(partial, base, tol)
     assert failures, "a missing prune bench must fail"
+
+    # the ordering section gates the same two ways: its walls are
+    # ceilings, score_ratio is a floor (the search quietly landing
+    # further from the optimum fails), and the whole bench vanishing
+    # fails
+    bad = json.loads(json.dumps(base))
+    bad["ordering"]["score_ratio"] = 0.70
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a score-ratio collapse must fail (floor direction)"
+    ok = json.loads(json.dumps(base))
+    ok["ordering"]["score_ratio"] = 1.0
+    failures, _ = compare(ok, base, tol)
+    assert not failures, f"a score-ratio improvement must pass: {failures}"
+    bad = json.loads(json.dumps(base))
+    bad["ordering"]["ordering_wall_secs"] = 0.07
+    failures, _ = compare(bad, base, tol)
+    assert failures, "an ordering-search wall regression must fail"
+    partial = json.loads(json.dumps(base))
+    del partial["ordering"]
+    failures, _ = compare(partial, base, tol)
+    assert failures, "a missing ordering bench must fail"
 
     # --prove-armed accepts a healthy artifact and catches injections
     assert prove_armed(json.loads(json.dumps(base)), "<self-test>") == 0

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Quick-mode perf smoke (CI `bench-smoke` job; runnable locally): run the
-# `levels`, `spill`, `scoring`, `streaming`, `scaling` and `prune` benches at
+# `levels`, `spill`, `scoring`, `streaming`, `scaling`, `prune` and
+# `ordering` benches at
 # CI-sized configurations and assemble BENCH_ci.json — wall time +
 # memtrack heap peak per configuration — so the repo's perf trajectory
 # accumulates data points as an uploaded artifact per commit (and
@@ -28,10 +29,11 @@ SCORING_JSON="bench_scoring.json"
 STREAMING_JSON="bench_streaming.json"
 SCALING_JSON="bench_scaling.json"
 PRUNE_JSON="bench_prune.json"
+ORDERING_JSON="bench_ordering.json"
 
 # never assemble a stale record into a "fresh" artifact
 rm -f "$OUT" "$CSV" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" \
-    "$STREAMING_JSON" "$SCALING_JSON" "$PRUNE_JSON"
+    "$STREAMING_JSON" "$SCALING_JSON" "$PRUNE_JSON" "$ORDERING_JSON"
 
 # levels + streaming: full analytic plan at p = 20 + quick timed solves
 # at a container-feasible size (the streaming bench *asserts* the heap
@@ -70,13 +72,17 @@ export BNSL_BENCH_JSON="$SCALING_JSON"
 run_bench scaling "$SCALING_JSON"
 export BNSL_BENCH_JSON="$PRUNE_JSON"
 run_bench prune "$PRUNE_JSON"
+# ordering: p = 14 seeded OBS vs the exact optimum (the bench asserts
+# determinism and admissibility; score_ratio gates as a floor)
+export BNSL_BENCH_JSON="$ORDERING_JSON"
+run_bench ordering "$ORDERING_JSON"
 
 python3 - "$OUT" "$CSV" "$LEVELS_JSON" "$SPILL_JSON" "$SCORING_JSON" \
-    "$STREAMING_JSON" "$SCALING_JSON" "$PRUNE_JSON" <<'EOF'
+    "$STREAMING_JSON" "$SCALING_JSON" "$PRUNE_JSON" "$ORDERING_JSON" <<'EOF'
 import json, pathlib, sys
 
 out, csv_out, levels_path, spill_path, scoring_path, streaming_path, \
-    scaling_path, prune_path = sys.argv[1:9]
+    scaling_path, prune_path, ordering_path = sys.argv[1:10]
 doc = {"schema": "bnsl-bench-smoke/1"}
 for key, path in (
     ("levels", levels_path),
@@ -85,6 +91,7 @@ for key, path in (
     ("streaming", streaming_path),
     ("scaling", scaling_path),
     ("prune", prune_path),
+    ("ordering", ordering_path),
 ):
     try:
         with open(path) as f:

@@ -12,7 +12,11 @@
 #   5. sweep the exact solver across sample sizes and write the
 #      recovery-vs-n curve to CSV (CI uploads it as the plottable
 #      quality artifact; no monotonicity is asserted — recovery vs n is
-#      noisy at smoke sizes, the curve is the data point).
+#      noisy at smoke sizes, the curve is the data point);
+#   6. `bnsl eval` on the committed alarm.bif fixture (37 variables —
+#      beyond every exact-tier cap) with `--solver ordering`: the
+#      search tier is the only solver that can take this workload, and
+#      its record must carry the same stable schema.
 #
 # Usage: tools/eval_smoke.sh [path/to/bnsl] [out.csv]
 #        (defaults: target/release/bnsl, EVAL_recovery.csv)
@@ -40,6 +44,12 @@ SEED=1
 # record from step 1 rather than re-solving)
 "$BIN" eval --network "$NET" --n 500 --seed "$SEED" --out "$WORK/eval_n500.json"
 "$BIN" eval --network "$NET" --n 2000 --seed "$SEED" --out "$WORK/eval_n2000.json"
+
+# 6. the search tier on the 37-variable alarm fixture (exact caps stop
+# at 34 bits wide — ordering search is the only solver for this zoo
+# entry)
+"$BIN" eval --network examples/networks/alarm.bif --n 1000 --seed "$SEED" \
+    --solver ordering --out "$WORK/eval_alarm.json"
 
 # scores interop on the same fixture-sampled data
 "$BIN" scores --network "$NET" --n 500 --seed 3 --out "$WORK/asia.jaa"
@@ -112,6 +122,24 @@ for doc in sweep:
 assert len(lines) == 4, f"recovery sweep produced {len(lines) - 1} rows, wanted 3"
 pathlib.Path(csv_out).write_text("\n".join(lines) + "\n")
 print(f"wrote {csv_out} ({len(sweep)} recovery points)")
+
+# 6. the 37-variable search-tier record: stable schema, right fixture,
+# and a finite score (no exact reference exists at this width — the
+# ordering bench gates quality at p = 14 where the optimum is provable)
+alarm = load("eval_alarm.json")
+missing = [k for k in KEYS if k not in alarm]
+assert not missing, f"alarm/ordering: missing report keys {missing}"
+assert alarm["schema"] == "bnsl-eval/1"
+assert alarm["network"] == "alarm" and alarm["p"] == 37, "wrong alarm fixture"
+assert alarm["solver"] == "ordering", f"solver {alarm['solver']!r}"
+assert alarm["log_score"] < 0 and alarm["log_score"] == alarm["log_score"], (
+    "alarm/ordering log_score not a finite negative log-likelihood"
+)
+assert alarm["truth_edges"] == 46, f"alarm truth edges {alarm['truth_edges']}"
+print(
+    f"alarm/ordering OK: p=37, shd_cpdag={alarm['shd_cpdag']['total']}, "
+    f"log_score={alarm['log_score']:.3f}"
+)
 
 print(
     f"eval smoke OK: exact shd_cpdag={exact['shd_cpdag']['total']} "

@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""One-off generator for examples/networks/alarm.bif.
+
+Published ALARM structure (Beinlich et al. 1989): 37 nodes, 46 arcs,
+published arities — the same (names, arities, edges) constants the repo
+embeds in rust/src/bn/repo.rs. CPTs are representative seeded draws, not
+the published tables (the repo uses ALARM for scaling and search-tier
+work, where only (structure, arities) matter); every row sums to exactly
+1 in decimal. At 37 variables the fixture exceeds every exact cap
+(30 narrow / 32 streaming / 34 wide / 36 sharded), so it is the zoo's
+search-tier workload: only hillclimb/hybrid/ordering (p <= 64) can
+learn it.
+
+Variables are declared in a deterministic topological order (Kahn,
+ready set processed in bnlearn-index order), so parents always precede
+children.
+"""
+import random
+
+rng = random.Random(20260808)
+
+# bnlearn canonical order, mirrored from rust/src/bn/repo.rs ALARM_NAMES
+NAMES = [
+    "HISTORY", "CVP", "PCWP", "HYPOVOLEMIA", "LVEDVOLUME", "LVFAILURE",
+    "STROKEVOLUME", "ERRLOWOUTPUT", "HRBP", "HREKG", "ERRCAUTER", "HRSAT",
+    "INSUFFANESTH", "ANAPHYLAXIS", "TPR", "EXPCO2", "KINKEDTUBE", "MINVOL",
+    "FIO2", "PVSAT", "SAO2", "PAP", "PULMEMBOLUS", "SHUNT", "INTUBATION",
+    "PRESS", "DISCONNECT", "MINVOLSET", "VENTMACH", "VENTTUBE", "VENTLUNG",
+    "VENTALV", "ARTCO2", "CATECHOL", "HR", "CO", "BP",
+]
+ARITIES = [
+    2, 3, 3, 2, 3, 2, 3, 2, 3, 3, 2, 3, 2, 2, 3, 4, 2, 4, 2, 3, 3, 3, 2,
+    2, 3, 4, 2, 3, 4, 4, 4, 4, 3, 2, 3, 3, 3,
+]
+ARCS = [
+    ("LVFAILURE", "HISTORY"),
+    ("LVEDVOLUME", "CVP"),
+    ("LVEDVOLUME", "PCWP"),
+    ("HYPOVOLEMIA", "LVEDVOLUME"),
+    ("LVFAILURE", "LVEDVOLUME"),
+    ("HYPOVOLEMIA", "STROKEVOLUME"),
+    ("LVFAILURE", "STROKEVOLUME"),
+    ("ERRLOWOUTPUT", "HRBP"),
+    ("HR", "HRBP"),
+    ("ERRCAUTER", "HREKG"),
+    ("HR", "HREKG"),
+    ("ERRCAUTER", "HRSAT"),
+    ("HR", "HRSAT"),
+    ("ANAPHYLAXIS", "TPR"),
+    ("ARTCO2", "EXPCO2"),
+    ("VENTLUNG", "EXPCO2"),
+    ("INTUBATION", "MINVOL"),
+    ("VENTLUNG", "MINVOL"),
+    ("FIO2", "PVSAT"),
+    ("VENTALV", "PVSAT"),
+    ("PVSAT", "SAO2"),
+    ("SHUNT", "SAO2"),
+    ("PULMEMBOLUS", "PAP"),
+    ("INTUBATION", "SHUNT"),
+    ("PULMEMBOLUS", "SHUNT"),
+    ("INTUBATION", "PRESS"),
+    ("KINKEDTUBE", "PRESS"),
+    ("VENTTUBE", "PRESS"),
+    ("MINVOLSET", "VENTMACH"),
+    ("DISCONNECT", "VENTTUBE"),
+    ("VENTMACH", "VENTTUBE"),
+    ("INTUBATION", "VENTLUNG"),
+    ("KINKEDTUBE", "VENTLUNG"),
+    ("VENTTUBE", "VENTLUNG"),
+    ("INTUBATION", "VENTALV"),
+    ("VENTLUNG", "VENTALV"),
+    ("VENTALV", "ARTCO2"),
+    ("ARTCO2", "CATECHOL"),
+    ("INSUFFANESTH", "CATECHOL"),
+    ("SAO2", "CATECHOL"),
+    ("TPR", "CATECHOL"),
+    ("CATECHOL", "HR"),
+    ("HR", "CO"),
+    ("STROKEVOLUME", "CO"),
+    ("CO", "BP"),
+    ("TPR", "BP"),
+]
+assert len(NAMES) == 37 and len(ARITIES) == 37 and len(ARCS) == 46
+
+# state labels by arity (sanitized to the repo's .bif token grammar)
+LABELS = {
+    2: ["TRUE", "FALSE"],
+    3: ["LOW", "NORMAL", "HIGH"],
+    4: ["ZERO", "LOW", "NORMAL", "HIGH"],
+}
+states = {n: LABELS[a] for n, a in zip(NAMES, ARITIES)}
+parents = {n: [p for p, c in ARCS if c == n] for n in NAMES}
+for p, c in ARCS:
+    assert p in states and c in states, (p, c)
+
+# deterministic topological declaration order: Kahn's algorithm, ready
+# set drained in bnlearn-index order (the embedded order is NOT
+# topological — HR -> HRBP points backwards in it)
+indeg = {n: len(parents[n]) for n in NAMES}
+order, ready = [], [n for n in NAMES if indeg[n] == 0]
+while ready:
+    node = ready.pop(0)
+    order.append(node)
+    for child in [c for p, c in ARCS if p == node]:
+        indeg[child] -= 1
+        if indeg[child] == 0 and child not in ready:
+            ready.append(child)
+    ready.sort(key=NAMES.index)
+assert len(order) == 37, "ALARM must be acyclic"
+for p, c in ARCS:
+    assert order.index(p) < order.index(c), f"{p} -> {c} not topological"
+
+
+def row(k, peaked_at=None):
+    """k probabilities in thousandths summing to exactly 1.000."""
+    w = [rng.random() + 0.05 for _ in range(k)]
+    if peaked_at is not None:
+        w[peaked_at] += 2.5  # identifiable CPTs: one state dominates
+    total = sum(w)
+    milli = [max(1, round(1000 * x / total)) for x in w]
+    milli[-1] += 1000 - sum(milli)
+    if milli[-1] < 1:  # rebalance from the largest entry
+        big = milli.index(max(milli[:-1]))
+        milli[big] += milli[-1] - 1
+        milli[-1] = 1
+    assert sum(milli) == 1000 and all(m >= 1 for m in milli)
+    return ", ".join(f"{m / 1000:.3f}" for m in milli)
+
+
+def configs(pas):
+    """Parent configurations, last parent fastest (bif convention)."""
+    out = [[]]
+    for pa in pas:
+        out = [c + [s] for c in out for s in states[pa]]
+    return out
+
+
+lines = [
+    "// ALARM network (Beinlich et al. 1989): published 37-node / 46-arc",
+    "// structure and arities (the constants rust/src/bn/repo.rs embeds);",
+    "// CPTs are representative seeded draws, not the published tables --",
+    "// rows sum to exactly 1. At p = 37 this fixture exceeds every exact",
+    "// cap: it exists for the search tier (hillclimb/hybrid/ordering).",
+    "// Regenerate: python3 tools/gen_alarm_bif.py",
+    "network alarm {",
+    "}",
+]
+for name in order:
+    sts = states[name]
+    lines.append(f"variable {name} {{")
+    lines.append(f"  type discrete [ {len(sts)} ] {{ {', '.join(sts)} }};")
+    lines.append("}")
+for name in order:
+    k = len(states[name])
+    pas = parents[name]
+    if not pas:
+        lines.append(f"probability ( {name} ) {{")
+        lines.append(f"  table {row(k, peaked_at=rng.randrange(k))};")
+        lines.append("}")
+    else:
+        lines.append(f"probability ( {name} | {', '.join(pas)} ) {{")
+        for cfg in configs(pas):
+            lines.append(
+                f"  ({', '.join(cfg)}) {row(k, peaked_at=rng.randrange(k))};"
+            )
+        lines.append("}")
+
+with open("/root/repo/examples/networks/alarm.bif", "w") as fh:
+    fh.write("\n".join(lines) + "\n")
+print(f"wrote alarm.bif: {len(order)} vars, {len(ARCS)} arcs")
