@@ -56,6 +56,28 @@ fn race_widths(p: usize, n: usize) -> (f64, f64, f64) {
     )
 }
 
+/// Telemetry overhead guard: the same resident solve with the trace
+/// sink armed (per-level spans land in a temp JSONL) vs disarmed.
+/// Off-wall is the min of a run before and a run after the traced one,
+/// so drift penalises rather than flatters the ratio; bench_compare.py
+/// gates the result like any other wall metric.
+fn telemetry_overhead(p: usize, n: usize) -> f64 {
+    let d = synth::binary(p, n, 4807);
+    let e = NativeEngine::new(&d, ScoreKind::Jeffreys);
+    let timed = || LeveledSolver::new(&e).solve().stats.wall.as_secs_f64();
+    let off_before = timed();
+    let trace_path = std::env::temp_dir().join(format!(
+        "bnsl_levels_bench_trace_{}.jsonl",
+        std::process::id()
+    ));
+    bnsl::telemetry::trace::init_trace(&trace_path).expect("arming trace sink");
+    let on = timed();
+    bnsl::telemetry::trace::stop_trace();
+    let _ = std::fs::remove_file(&trace_path);
+    let off_after = timed();
+    on / off_before.min(off_after)
+}
+
 fn main() {
     let p: usize = std::env::var("BNSL_P")
         .ok()
@@ -137,6 +159,12 @@ fn main() {
     println!("u64 path + spill: {wide_spill_ns:8.1} ns/subset");
     println!("heap peak       : {}", human_bytes(heap_peak as u64));
 
+    let overhead = telemetry_overhead(solve_p, n);
+    println!(
+        "telemetry       : traced/untraced wall ratio {overhead:.3} \
+         (counters always on; spans only with a sink)"
+    );
+
     // CI bench-smoke: append a machine-readable record so the perf
     // trajectory accumulates data points (tools/bench_smoke.sh merges
     // this with the spill bench's results/spill.json into BENCH_ci.json).
@@ -151,7 +179,8 @@ fn main() {
             .set("wide_spill_ns_per_subset", wide_spill_ns)
             .set("heap_peak_bytes", heap_peak)
             .set("plan_peak_bytes", plan.peak_bytes)
-            .set("plan_baseline_bytes", plan.baseline_bytes);
+            .set("plan_baseline_bytes", plan.baseline_bytes)
+            .set("telemetry_overhead_ratio", overhead);
         std::fs::write(&path, doc.to_pretty()).expect("writing BNSL_BENCH_JSON");
         println!("bench record    : {path}");
     }

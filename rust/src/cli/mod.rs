@@ -48,7 +48,7 @@ USAGE:
               [--engine native|jax] [--threads T] [--spill-dir DIR] [--out net.json] [--dot]
               [--mode exact|anytime|fast] [--streaming] [--prune | --no-prune]
               [--shards N [--shard-dir DIR] [--stop-after-level K]] [--resume DIR]
-              [--backend posix|object]
+              [--backend posix|object] [--trace FILE]
               [--cluster --host-id I [--hosts N] [--heartbeat-secs S]]
               exact solvers: p <= 30 on u32 masks, p <= 34 on the wide u64
               path (auto-dispatched; pair with --spill-dir near the top),
@@ -84,7 +84,11 @@ USAGE:
               once, then refines with the incumbent-seeded exact sweep,
               printing the admissible upper bound + optimality gap per
               completed level (gap is 0 at the last level — the proof);
-              hillclimb/hybrid: p <= 64
+              hillclimb/hybrid: p <= 64;
+              --trace FILE appends structured JSONL trace records
+              (per-level solver spans, cluster claim/steal/commit
+              events — schema in docs/FORMATS.md); the BNSL_TRACE
+              environment variable arms the same sink for any command
   bnsl learn  --scores file.jaa [--p P] [--solver leveled|silander]
               [--streaming] [--threads T] [--out net.json] [--dot]
               solve from precomputed local scores with no dataset: .jaa
@@ -101,15 +105,17 @@ USAGE:
               human-readable family section)
   bnsl eval   --network (asia|alarm|sachs | net.bif) [--n N] [--seed S]
               [--solver leveled|silander|hillclimb|hybrid|ordering] [--streaming]
-              [--score S] [--threads T] [--out report.json]
+              [--score S] [--threads T] [--prune] [--out report.json]
               sample the ground-truth network, learn, and report
               structure recovery (SHD + CPDAG-aware edge F1), log-score,
               wall time and peak heap as one stable JSON record
-              (schema bnsl-eval/1)
+              (schema bnsl-eval/1; includes a telemetry section of the
+              counters the solve moved); --prune runs the exact solve
+              bounds-gated and reports prune_considered/pruned_subsets
   bnsl serve  [--port 7878] [--addr 127.0.0.1] [--jobs-dir bnsl_jobs]
               [--max-concurrent 2] [--max-queue 64] [--backend posix|object]
               [--ram-budget-mb MB] [--fd-budget N] [--request-budget N]
-              [--http-threads 4] [--data-root DIR]
+              [--http-threads 4] [--data-root DIR] [--trace FILE]
               the job service: POST /v1/jobs (inline CSV, or a server
               path confined to --data-root — without one, path
               submissions are rejected),
@@ -118,7 +124,10 @@ USAGE:
               /v1/jobs/ID/result (bit-identical to a direct run; while a
               mode:anytime job runs, the best-so-far network + gap), DELETE
               /v1/jobs/ID (cooperative cancel), GET /v1/healthz, GET
-              /v1/stats; identical submissions dedupe onto one solve and
+              /v1/stats, GET /v1/metrics (Prometheus text: queue depth,
+              jobs by state, per-endpoint latency histograms, solver /
+              storage / memtrack counters — scrape-ready);
+              identical submissions dedupe onto one solve and
               finished fingerprints are served from the result cache;
               over-budget jobs are rejected with the plan verdict;
               SIGTERM drains — running solves checkpoint at the next
@@ -150,6 +159,10 @@ All experiment commands write JSON records to --out-dir (default results/).
 
 /// Entry point used by `main.rs`. Returns the process exit code.
 pub fn run(argv: Vec<String>) -> Result<()> {
+    // BNSL_TRACE arms the JSONL trace sink for any command (the
+    // smoke scripts use it for cluster hosts); an explicit
+    // `--trace FILE` below re-inits onto its own file
+    crate::telemetry::trace::init_trace_from_env();
     let Some((command, rest)) = argv.split_first() else {
         println!("{USAGE}");
         return Ok(());
@@ -161,7 +174,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         )?),
         "sample" => cmd_sample(Args::parse(rest.to_vec(), &[])?),
         "scores" => cmd_scores(Args::parse(rest.to_vec(), &[])?),
-        "eval" => cmd_eval(Args::parse(rest.to_vec(), &["streaming"])?),
+        "eval" => cmd_eval(Args::parse(rest.to_vec(), &["streaming", "prune"])?),
         "exp" => cmd_exp(rest),
         "serve" => cmd_serve(Args::parse(rest.to_vec(), &[])?),
         "submit" => cmd_submit(Args::parse(rest.to_vec(), &["wait", "streaming", "prune"])?),
@@ -174,6 +187,16 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
+}
+
+/// `--trace FILE`: arm (or re-target, when `BNSL_TRACE` already armed
+/// it) the JSONL trace sink for this process.
+fn arm_trace_flag(args: &Args) -> Result<()> {
+    if let Some(path) = args.raw("trace") {
+        crate::telemetry::trace::init_trace(std::path::Path::new(path))
+            .map_err(|e| anyhow!("opening trace file {path}: {e}"))?;
+    }
+    Ok(())
 }
 
 fn load_data(args: &Args) -> Result<Dataset> {
@@ -194,6 +217,7 @@ fn load_data(args: &Args) -> Result<Dataset> {
 }
 
 fn cmd_learn(args: Args) -> Result<()> {
+    arm_trace_flag(&args)?;
     if args.raw("scores").is_some() {
         return cmd_learn_from_scores(&args);
     }
@@ -849,6 +873,7 @@ fn cmd_eval(args: Args) -> Result<()> {
         kind: ScoreKind::parse(args.raw("score").unwrap_or("jeffreys"))
             .ok_or_else(|| anyhow!("bad --score"))?,
         threads: args.get::<usize>("threads", 1)?,
+        prune: args.switch("prune"),
     };
     let outcome = crate::eval::run_eval(&spec)?;
     eprintln!(
@@ -1167,6 +1192,7 @@ fn install_drain_signals() {
 fn install_drain_signals() {}
 
 fn cmd_serve(args: Args) -> Result<()> {
+    arm_trace_flag(&args)?;
     let backend = match args.raw("backend") {
         None => BackendKind::Posix,
         Some(name) => BackendKind::parse(name)

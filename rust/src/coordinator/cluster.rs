@@ -68,6 +68,7 @@
 use super::shard::{ShardRun, ShardSpec};
 use super::storage::{make_backend, CreateOutcome, KeyAge, SharedBackend};
 use crate::solver::PruneStamp;
+use crate::telemetry::{self, trace};
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -161,6 +162,7 @@ impl Claim {
         }
         self.last_beat = Instant::now();
         ledger.store.touch(&self.key);
+        telemetry::cluster_heartbeats().inc();
     }
 }
 
@@ -204,6 +206,14 @@ impl ClaimLedger {
         )
     }
 
+    /// Trace fields for claim/steal events (built only when tracing).
+    fn claim_fields(&self, k: usize, s: usize) -> Json {
+        Json::obj()
+            .set("level", k)
+            .set("shard", s)
+            .set("host", self.host)
+    }
+
     fn claim_key(&self, k: usize, s: usize) -> String {
         format!("claim-{k:02}-{s:04}.json")
     }
@@ -225,6 +235,10 @@ impl ClaimLedger {
         }
         let key = self.claim_key(k, s);
         if let Some(claim) = self.create_claim(&key, k, s)? {
+            telemetry::cluster_claims().inc();
+            if trace::enabled() {
+                trace::event("claim", self.claim_fields(k, s));
+            }
             return Ok(ClaimState::Claimed(claim));
         }
         if self.claim_is_stale(&key) {
@@ -233,6 +247,11 @@ impl ClaimLedger {
             let tag = format!("stale-{}-{}", self.host, std::process::id());
             if self.store.remove_contended(&key, &tag)? {
                 if let Some(claim) = self.create_claim(&key, k, s)? {
+                    telemetry::cluster_claims().inc();
+                    telemetry::cluster_steals().inc();
+                    if trace::enabled() {
+                        trace::event("claim_steal", self.claim_fields(k, s));
+                    }
                     return Ok(ClaimState::Claimed(claim));
                 }
             }
@@ -317,6 +336,15 @@ impl ClaimLedger {
             doc.to_pretty().as_bytes(),
         )?;
         self.release(claim);
+        telemetry::cluster_shards_done().inc();
+        if trace::enabled() {
+            trace::event(
+                "shard_done",
+                self.claim_fields(claim.level, claim.shard)
+                    .set("entries", entries)
+                    .set("bytes", bytes),
+            );
+        }
         Ok(())
     }
 
@@ -620,6 +648,10 @@ fn commit_checked(run: &mut ShardRun, k: usize) -> Result<bool> {
     }
     run.completed = effective;
     run.commit_level(k)?;
+    telemetry::cluster_commits().inc();
+    if trace::enabled() {
+        trace::event("level_commit", Json::obj().set("level", k));
+    }
     Ok(true)
 }
 

@@ -42,6 +42,7 @@
 
 use super::posix::FileRandom;
 use super::{BackendKind, CreateOutcome, KeyAge, RandomRead, ShardStream, StorageBackend};
+use crate::telemetry;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeSet;
@@ -132,16 +133,57 @@ pub struct RequestTotals {
     pub copies: u64,
 }
 
+/// One operation's request counter: the backend-local total behind
+/// [`ObjectBackend::requests`] (what the planner's estimate is compared
+/// against), mirrored live into the process-global
+/// `bnsl_storage_requests_total{backend="object",op=...}` counter so a
+/// scrape mid-run sees the bill as it accrues.
+#[derive(Clone)]
+struct Bill {
+    local: Arc<AtomicU64>,
+    global: telemetry::Counter,
+}
+
+impl Bill {
+    fn new(op: &str) -> Bill {
+        Bill {
+            local: Arc::new(AtomicU64::new(0)),
+            global: telemetry::storage_requests("object", op),
+        }
+    }
+
+    #[inline]
+    fn add(&self, n: u64) {
+        self.local.fetch_add(n, Ordering::Relaxed);
+        self.global.add(n);
+    }
+
+    #[inline]
+    fn inc(&self) {
+        self.add(1);
+    }
+
+    fn total(&self) -> u64 {
+        self.local.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for Bill {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.total())
+    }
+}
+
 /// The object-store backend (see the module docs).
 #[derive(Debug)]
 pub struct ObjectBackend {
     root: PathBuf,
     faults: ObjectFaults,
-    puts: Arc<AtomicU64>,
-    gets: Arc<AtomicU64>,
-    lists: Arc<AtomicU64>,
-    deletes: Arc<AtomicU64>,
-    copies: Arc<AtomicU64>,
+    puts: Bill,
+    gets: Bill,
+    lists: Bill,
+    deletes: Bill,
+    copies: Bill,
     /// Ring of recently deleted keys — fodder for `list_ghosts`.
     recently_deleted: Mutex<Vec<String>>,
 }
@@ -163,11 +205,11 @@ impl ObjectBackend {
         ObjectBackend {
             root: root.to_path_buf(),
             faults,
-            puts: Arc::new(AtomicU64::new(0)),
-            gets: Arc::new(AtomicU64::new(0)),
-            lists: Arc::new(AtomicU64::new(0)),
-            deletes: Arc::new(AtomicU64::new(0)),
-            copies: Arc::new(AtomicU64::new(0)),
+            puts: Bill::new("put"),
+            gets: Bill::new("get"),
+            lists: Bill::new("list"),
+            deletes: Bill::new("delete"),
+            copies: Bill::new("copy"),
             recently_deleted: Mutex::new(Vec::new()),
         }
     }
@@ -181,11 +223,11 @@ impl ObjectBackend {
     /// Request totals so far.
     pub fn requests(&self) -> RequestTotals {
         RequestTotals {
-            puts: self.puts.load(Ordering::Relaxed),
-            gets: self.gets.load(Ordering::Relaxed),
-            lists: self.lists.load(Ordering::Relaxed),
-            deletes: self.deletes.load(Ordering::Relaxed),
-            copies: self.copies.load(Ordering::Relaxed),
+            puts: self.puts.total(),
+            gets: self.gets.total(),
+            lists: self.lists.total(),
+            deletes: self.deletes.total(),
+            copies: self.copies.total(),
         }
     }
 
@@ -279,7 +321,7 @@ impl StorageBackend for ObjectBackend {
     }
 
     fn create_exclusive(&self, key: &str, body: &[u8]) -> Result<CreateOutcome> {
-        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.puts.inc();
         if ObjectFaults::take(&self.faults.put_races) {
             // injected lost race: the PUT is rejected as if a concurrent
             // writer created the key first
@@ -304,7 +346,7 @@ impl StorageBackend for ObjectBackend {
     }
 
     fn publish_doc(&self, key: &str, body: &[u8]) -> Result<()> {
-        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.puts.inc();
         self.write_atomic(&self.data_path(key), body)
     }
 
@@ -321,7 +363,7 @@ impl StorageBackend for ObjectBackend {
     }
 
     fn read_doc(&self, key: &str) -> Result<Option<Vec<u8>>> {
-        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.gets.inc();
         if ObjectFaults::take(&self.faults.stale_reads) {
             return Ok(None);
         }
@@ -334,7 +376,7 @@ impl StorageBackend for ObjectBackend {
     }
 
     fn exists(&self, key: &str) -> Result<bool> {
-        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.gets.inc();
         if ObjectFaults::take(&self.faults.stale_reads) {
             return Ok(false);
         }
@@ -342,7 +384,7 @@ impl StorageBackend for ObjectBackend {
     }
 
     fn delete(&self, key: &str) -> Result<()> {
-        self.deletes.fetch_add(1, Ordering::Relaxed);
+        self.deletes.inc();
         let path = self.data_path(key);
         match std::fs::remove_file(&path) {
             Ok(()) => self.remember_deleted(key),
@@ -361,13 +403,13 @@ impl StorageBackend for ObjectBackend {
         // liveness_age and reaped by sweep_internal)
         // existence probe (a HEAD on a real store) — billed like every
         // other read so requests() matches what a real bill would show
-        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.gets.inc();
         if !self.data_path(key).exists() {
             return;
         }
         // one GET (reading the current heartbeat version) + one PUT
-        self.gets.fetch_add(1, Ordering::Relaxed);
-        self.puts.fetch_add(1, Ordering::Relaxed);
+        self.gets.inc();
+        self.puts.inc();
         let version = self.hb_version(key) + 1;
         self.put_heartbeat(key, version, Self::now_millis());
     }
@@ -376,7 +418,7 @@ impl StorageBackend for ObjectBackend {
         // a HEAD/GET of the heartbeat metadata — billed like any other
         // read, so `requests()` can be compared against the plan's
         // estimate without a wall-time-scaled blind spot
-        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.gets.inc();
         let meta = std::fs::metadata(self.data_path(key)).ok()?;
         let stamp = std::fs::read_to_string(self.hb_path(key))
             .ok()
@@ -403,7 +445,7 @@ impl StorageBackend for ObjectBackend {
     }
 
     fn remove_contended(&self, key: &str, winner_tag: &str) -> Result<bool> {
-        self.deletes.fetch_add(1, Ordering::Relaxed);
+        self.deletes.inc();
         // conditional delete: the simulator serialises contenders by
         // moving the object aside under a contender-unique name, so
         // exactly one delete succeeds
@@ -419,7 +461,7 @@ impl StorageBackend for ObjectBackend {
     }
 
     fn list(&self, prefix: &str) -> Result<Vec<String>> {
-        self.lists.fetch_add(1, Ordering::Relaxed);
+        self.lists.inc();
         let mut names = BTreeSet::new();
         for entry in std::fs::read_dir(&self.root)
             .with_context(|| format!("listing {}", self.root.display()))?
@@ -494,7 +536,7 @@ impl StorageBackend for ObjectBackend {
     }
 
     fn open_random(&self, key: &str) -> Result<Box<dyn RandomRead>> {
-        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.gets.inc();
         Ok(Box::new(ObjectRandom {
             inner: FileRandom::open(self.data_path(key))?,
             gets: self.gets.clone(),
@@ -518,9 +560,9 @@ struct ObjectStream {
     target: PathBuf,
     root: PathBuf,
     bytes: u64,
-    puts: Arc<AtomicU64>,
-    copies: Arc<AtomicU64>,
-    deletes: Arc<AtomicU64>,
+    puts: Bill,
+    copies: Bill,
+    deletes: Bill,
 }
 
 impl ShardStream for ObjectStream {
@@ -541,7 +583,7 @@ impl ShardStream for ObjectStream {
             .with_context(|| format!("syncing upload {}", self.upload.display()))?;
         // bill the upload: one PUT per part + the completion request
         let parts = self.bytes.div_ceil(PART_BYTES).max(1);
-        self.puts.fetch_add(parts + 1, Ordering::Relaxed);
+        self.puts.add(parts + 1);
         match &self.staged {
             None => {
                 // completing the upload IS the atomic publish
@@ -556,7 +598,7 @@ impl ShardStream for ObjectStream {
                 })?;
                 // …server-side copy it over the canonical key (atomic
                 // whole-object replace, like any PUT)…
-                self.copies.fetch_add(1, Ordering::Relaxed);
+                self.copies.inc();
                 let copy_tmp = otmp_path(&self.root);
                 std::fs::copy(staged, &copy_tmp).with_context(|| {
                     format!("copying {} to {}", staged.display(), copy_tmp.display())
@@ -568,7 +610,7 @@ impl ShardStream for ObjectStream {
                     format!("publishing shard file {}", self.target.display())
                 })?;
                 // …and delete the staged upload
-                self.deletes.fetch_add(1, Ordering::Relaxed);
+                self.deletes.inc();
                 let _ = std::fs::remove_file(staged);
             }
         }
@@ -580,7 +622,7 @@ impl ShardStream for ObjectStream {
 /// billing (each window fetch is one ranged GET).
 struct ObjectRandom {
     inner: FileRandom,
-    gets: Arc<AtomicU64>,
+    gets: Bill,
 }
 
 impl RandomRead for ObjectRandom {
@@ -590,7 +632,7 @@ impl RandomRead for ObjectRandom {
 
     fn read_exact_at(&mut self, offset: u64, out: &mut [u8]) -> Result<()> {
         // one ranged GET per window fetch
-        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.gets.inc();
         self.inner.read_exact_at(offset, out)
     }
 }

@@ -88,15 +88,18 @@ impl<'a, M: VarMask> SubsetScorer<M> for NativeScorer<'a> {
 
     /// One virtual dispatch per batch instead of per subset: the whole
     /// batch runs inside [`LocalScorer::log_q_batch_into`]'s monomorphic
-    /// loop over the cache-blocked counting kernel.
+    /// loop over the cache-blocked counting kernel. Telemetry bills the
+    /// batch once — two relaxed adds per *batch call*, never per subset.
     fn log_q_batch_into(&mut self, masks: &[M], out: &mut [f64]) {
+        crate::telemetry::engine_batches().inc();
+        crate::telemetry::engine_batch_rows().add(masks.len() as u64);
         self.inner.log_q_batch_into(masks, out);
     }
 
     fn log_q_batch(&mut self, masks: &[M], out: &mut Vec<f64>) {
         out.clear();
         out.resize(masks.len(), 0.0);
-        self.inner.log_q_batch_into(masks, out);
+        SubsetScorer::log_q_batch_into(self, masks, out);
     }
 
     fn evals(&self) -> u64 {

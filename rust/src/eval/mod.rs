@@ -48,6 +48,11 @@ pub struct EvalSpec {
     pub streaming: bool,
     pub kind: ScoreKind,
     pub threads: usize,
+    /// Bounds-gate the exact solve (`--prune`): same optimum bit for
+    /// bit, and the report's `prune_considered`/`pruned_subsets` show
+    /// how much record emission the admissible bounds removed. Ignored
+    /// by the approximate solvers, which have no emission to gate.
+    pub prune: bool,
 }
 
 impl Default for EvalSpec {
@@ -60,6 +65,7 @@ impl Default for EvalSpec {
             streaming: false,
             kind: ScoreKind::Jeffreys,
             threads: 1,
+            prune: false,
         }
     }
 }
@@ -133,9 +139,20 @@ pub fn run_eval(spec: &EvalSpec) -> Result<EvalOutcome> {
     let width = validate_var_count(data.p(), exact, false)?;
     let options = SolveOptions {
         threads: spec.threads,
+        // bounds gating belongs to the leveled DP's record emission
+        // (resident or streaming); silander and the approximate
+        // solvers have nothing to gate
+        prune: if spec.prune && spec.solver == "leveled" {
+            crate::solver::PruneMode::Auto
+        } else {
+            crate::solver::PruneMode::Off
+        },
         ..Default::default()
     };
     let kind = spec.kind;
+    // counters the solve moves show up as deltas in the report's
+    // telemetry section — the same registry /v1/metrics scrapes
+    let counters_before = crate::telemetry::counter_values();
     let (result, heap) = crate::memtrack::measure(|| -> Result<SolveResult> {
         Ok(match spec.solver.as_str() {
             "hillclimb" => {
@@ -241,7 +258,16 @@ pub fn run_eval(spec: &EvalSpec) -> Result<EvalOutcome> {
         .set("log_score", Json::Num(result.log_score))
         .set("wall_secs", Json::Num(result.stats.wall.as_secs_f64()))
         .set("peak_heap_bytes", Json::Int(heap as i64))
-        .set("score_evals", Json::Int(result.stats.score_evals as i64));
+        .set("score_evals", Json::Int(result.stats.score_evals as i64))
+        .set(
+            "prune_considered",
+            Json::Int(result.stats.prune_considered as i64),
+        )
+        .set(
+            "pruned_subsets",
+            Json::Int(result.stats.pruned_subsets as i64),
+        )
+        .set("telemetry", crate::telemetry::delta_json(&counters_before));
     Ok(EvalOutcome {
         report,
         shd: shd_plain,
@@ -306,9 +332,53 @@ mod tests {
             "\"wall_secs\"",
             "\"peak_heap_bytes\"",
             "\"score_evals\"",
+            "\"prune_considered\"",
+            "\"pruned_subsets\"",
+            "\"telemetry\"",
         ] {
             assert!(text.contains(key), "{key} missing from report:\n{text}");
         }
+    }
+
+    /// The `--prune` satellite: a bounds-gated eval reports its pruning
+    /// work, actually prunes something at this scale, and reaches the
+    /// same optimum bit for bit.
+    #[test]
+    fn pruned_eval_reports_counters_and_matches_the_optimum() {
+        let plain = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 500,
+            seed: 9,
+            ..Default::default()
+        })
+        .unwrap();
+        let pruned = run_eval(&EvalSpec {
+            network: "asia".into(),
+            n: 500,
+            seed: 9,
+            prune: true,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(plain.log_score.to_bits(), pruned.log_score.to_bits());
+        let count = |out: &EvalOutcome, key: &str| {
+            out.report.get(key).and_then(Json::as_u64).unwrap()
+        };
+        assert_eq!(count(&plain, "prune_considered"), 0);
+        assert_eq!(count(&plain, "pruned_subsets"), 0);
+        assert!(
+            count(&pruned, "prune_considered") > 0,
+            "{}",
+            pruned.report.to_pretty()
+        );
+        // the telemetry delta shows the solve moved solver counters
+        let levels = pruned
+            .report
+            .get("telemetry")
+            .and_then(|t| t.get("bnsl_solver_levels_completed_total"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        assert!(levels > 0, "{}", pruned.report.to_pretty());
     }
 
     #[test]

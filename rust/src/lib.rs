@@ -99,6 +99,7 @@ pub mod score;
 pub mod search;
 pub mod service;
 pub mod solver;
+pub mod telemetry;
 pub mod util;
 
 /// Convenience re-exports for the common workflow.

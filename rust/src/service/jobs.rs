@@ -168,6 +168,20 @@ impl Counters {
     }
 }
 
+/// Bill one real solver execution (dedup/cache hits excluded) to the
+/// process-global registry, labeled by the job fingerprint's first 8
+/// hex chars — enough to tell jobs apart on a dashboard without an
+/// unbounded label set of full fingerprints.
+fn bill_executor_solve(fingerprint: &str) {
+    let prefix = &fingerprint[..fingerprint.len().min(8)];
+    crate::telemetry::counter_with(
+        "bnsl_executor_solves_total",
+        &[("fingerprint", prefix)],
+        "Solver executions by job fingerprint prefix",
+    )
+    .inc();
+}
+
 /// Configuration for [`JobManager::open`].
 #[derive(Clone, Debug)]
 pub struct JobManagerOptions {
@@ -1099,6 +1113,7 @@ impl JobManager {
     ) -> Exec {
         let publish = |result: crate::solver::SolveResult| {
             Counters::bump(&self.counters.solver_runs);
+            bill_executor_solve(&claim.fingerprint);
             let record = result.to_json(names).to_pretty();
             match self.cache.publish(&claim.fingerprint, &record) {
                 Ok(()) => Exec::Done { via_cache: false },
@@ -1190,6 +1205,7 @@ impl JobManager {
     ) -> Exec {
         let publish = |result: SolveResult, mode: &str| {
             Counters::bump(&self.counters.solver_runs);
+            bill_executor_solve(&claim.fingerprint);
             let mut doc = result.to_json(data.names());
             if mode == "fast" {
                 // mark the record: this network is approximate, not the
@@ -1415,6 +1431,13 @@ impl JobManager {
 
     pub fn queue_depth(&self) -> usize {
         self.state.lock().expect("job-manager lock").queue.len()
+    }
+
+    /// Ledger jobs currently in `state` (a [`JobState::name`] string) —
+    /// the sampling hook behind the `bnsl_service_jobs_<state>` gauges.
+    pub fn jobs_in_state(&self, state: &str) -> u64 {
+        let st = self.state.lock().expect("job-manager lock");
+        st.jobs.values().filter(|j| j.state.name() == state).count() as u64
     }
 
     /// Times the solver actually ran (dedup/cache hits excluded) — the

@@ -29,6 +29,7 @@ use super::api::{error_body, SubmitRequest};
 use super::jobs::{CancelOutcome, JobManager, JobManagerOptions, SubmitError};
 use crate::coordinator::plan::Budgets;
 use crate::coordinator::storage::BackendKind;
+use crate::telemetry;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -36,7 +37,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Hard limits on one request. The size caps bound what a client can
 /// make a handler *allocate*; the deadline bounds how long one
@@ -90,7 +91,11 @@ impl Default for ServeOptions {
     }
 }
 
-/// Per-endpoint request totals for `GET /v1/stats`.
+/// Per-endpoint request totals for `GET /v1/stats`. Every connection
+/// lands in exactly one bucket — routed endpoints, unknown routes and
+/// unsupported methods in their arms, and requests that never parsed
+/// (`read_request` errors → 400) under `other` — so the bucket sum
+/// reconciles with connections served.
 #[derive(Default)]
 struct EndpointStats {
     submit: AtomicU64,
@@ -99,6 +104,7 @@ struct EndpointStats {
     cancel: AtomicU64,
     healthz: AtomicU64,
     stats: AtomicU64,
+    metrics: AtomicU64,
     other: AtomicU64,
 }
 
@@ -112,6 +118,7 @@ impl EndpointStats {
             .set("cancel", get(&self.cancel))
             .set("healthz", get(&self.healthz))
             .set("stats", get(&self.stats))
+            .set("metrics", get(&self.metrics))
             .set("other", get(&self.other))
     }
 }
@@ -143,6 +150,7 @@ impl Server {
         let local_addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let endpoints = Arc::new(EndpointStats::default());
+        register_service_gauges(&manager);
         let (tx, rx) = mpsc::sync_channel::<TcpStream>(64);
         let rx = Arc::new(Mutex::new(rx));
 
@@ -239,6 +247,33 @@ impl Server {
     }
 }
 
+/// Sampled-at-scrape gauges over the job manager. Re-registering (a
+/// restarted in-process server) replaces the closures, so the gauges
+/// always read the *live* manager, never a drained predecessor's.
+fn register_service_gauges(manager: &Arc<JobManager>) {
+    let m = manager.clone();
+    telemetry::gauge_fn(
+        "bnsl_service_queue_depth",
+        "Jobs waiting for an executor",
+        move || m.queue_depth() as f64,
+    );
+    for (state, help) in [
+        ("queued", "Jobs in state queued"),
+        ("planning", "Jobs in state planning"),
+        ("running", "Jobs in state running"),
+        ("done", "Jobs in state done"),
+        ("failed", "Jobs in state failed"),
+        ("cancelled", "Jobs in state cancelled"),
+    ] {
+        let m = manager.clone();
+        telemetry::gauge_fn(
+            &format!("bnsl_service_jobs_{state}"),
+            help,
+            move || m.jobs_in_state(state) as f64,
+        );
+    }
+}
+
 /// One parsed HTTP request.
 struct Request {
     method: String,
@@ -325,9 +360,16 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
+/// The Prometheus text exposition content type.
+const METRICS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
 fn write_response(stream: &mut TcpStream, status: u16, body: &str) {
+    write_response_as(stream, status, "application/json", body);
+}
+
+fn write_response_as(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) {
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         reason(status),
         body.len()
     );
@@ -336,13 +378,48 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &str) {
     let _ = stream.flush();
 }
 
+/// The histogram label for one request — the same buckets as
+/// [`EndpointStats`], so latency quantiles line up with the `/v1/stats`
+/// request totals.
+fn endpoint_label(method: &str, path: &str) -> &'static str {
+    let segments: Vec<&str> = path.trim_matches('/').split('/').collect();
+    match (method, segments.as_slice()) {
+        ("POST", ["v1", "jobs"]) => "submit",
+        ("GET", ["v1", "jobs", _]) => "status",
+        ("GET", ["v1", "jobs", _, "result"]) => "result",
+        ("DELETE", ["v1", "jobs", _]) => "cancel",
+        ("GET", ["v1", "healthz"]) => "healthz",
+        ("GET", ["v1", "stats"]) => "stats",
+        ("GET", ["v1", "metrics"]) => "metrics",
+        _ => "other",
+    }
+}
+
 fn handle_connection(mut stream: TcpStream, manager: &JobManager, endpoints: &EndpointStats) {
     match read_request(&mut stream) {
         Ok(request) => {
-            let (status, body) = route(&request, manager, endpoints);
-            write_response(&mut stream, status, &body.to_string());
+            let started = Instant::now();
+            let label = endpoint_label(&request.method, &request.path);
+            if label == "metrics" {
+                // Prometheus text, not JSON — served outside route()
+                endpoints.metrics.fetch_add(1, Ordering::Relaxed);
+                write_response_as(&mut stream, 200, METRICS_CONTENT_TYPE, &telemetry::render());
+            } else {
+                let (status, body) = route(&request, manager, endpoints);
+                write_response(&mut stream, status, &body.to_string());
+            }
+            telemetry::histogram_with(
+                "bnsl_http_request_seconds",
+                &[("endpoint", label)],
+                "Request latency by endpoint (read excluded, write included)",
+                &telemetry::LATENCY_BUCKETS,
+            )
+            .observe(started.elapsed().as_secs_f64());
         }
         Err(e) => {
+            // bill the unparseable request under `other` so the
+            // /v1/stats bucket sum still reconciles with connections
+            endpoints.other.fetch_add(1, Ordering::Relaxed);
             write_response(
                 &mut stream,
                 400,
@@ -500,6 +577,55 @@ mod tests {
         assert_eq!(status, 200);
         assert!(body.contains("queue_depth"), "{body}");
         assert!(body.contains("\"http\""), "{body}");
+        server.drain();
+        server.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_prometheus_text() {
+        let (server, addr, dir) = serve_queue_only("metrics");
+        // a 404 first, so its latency observation is in the scrape below
+        let (status, _) =
+            client::request(&addr, "GET", "/v1/definitely-not-a-route", None).unwrap();
+        assert_eq!(status, 404);
+        let (status, body) = client::request(&addr, "GET", "/v1/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        assert!(
+            body.contains("# TYPE bnsl_service_queue_depth gauge"),
+            "{body}"
+        );
+        assert!(body.contains("bnsl_service_jobs_queued"), "{body}");
+        assert!(body.contains("bnsl_memtrack_peak_bytes"), "{body}");
+        assert!(
+            body.contains("bnsl_http_request_seconds_bucket{endpoint=\"other\""),
+            "{body}"
+        );
+        server.drain();
+        server.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unroutable_and_unparseable_requests_bill_under_other() {
+        let (server, addr, dir) = serve_queue_only("othercount");
+        let (status, _) = client::request(&addr, "GET", "/v1/nope", None).unwrap();
+        assert_eq!(status, 404);
+        // a malformed request line never reaches route(); the 400 path
+        // must still land in `other` for the stats sum to reconcile
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        raw.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        let mut reply = String::new();
+        let _ = raw.read_to_string(&mut reply);
+        assert!(reply.starts_with("HTTP/1.1 400"), "{reply}");
+        let (status, body) = client::request(&addr, "GET", "/v1/stats", None).unwrap();
+        assert_eq!(status, 200);
+        let doc = Json::parse(&body).unwrap();
+        let other = doc
+            .get("http")
+            .and_then(|http| http.get("other"))
+            .and_then(Json::as_u64);
+        assert_eq!(other, Some(2), "{body}");
         server.drain();
         server.join().unwrap();
         let _ = std::fs::remove_dir_all(&dir);

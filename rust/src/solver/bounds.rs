@@ -80,11 +80,26 @@ pub enum PruneMode {
 impl PruneMode {
     /// Resolve to a concrete context (`Auto` builds one from `data`).
     pub fn resolve(&self, data: &Dataset, kind: ScoreKind) -> Option<Arc<PruneCtx>> {
-        match self {
+        let ctx = match self {
             PruneMode::Off => None,
             PruneMode::Auto => Some(Arc::new(PruneCtx::build(data, kind))),
             PruneMode::Custom(ctx) => Some(ctx.clone()),
+        };
+        if let Some(ctx) = &ctx {
+            if crate::telemetry::trace::enabled() {
+                // one event per solve: the bounds the whole run prunes
+                // against (the stamp is what resumes must reproduce)
+                crate::telemetry::trace::event(
+                    "prune_ctx",
+                    crate::util::json::Json::obj()
+                        .set("p", crate::util::json::Json::Int(ctx.p() as i64))
+                        .set("incumbent", crate::util::json::Json::Num(ctx.incumbent()))
+                        .set("total_ub", crate::util::json::Json::Num(ctx.total_ub()))
+                        .set("threshold", crate::util::json::Json::Num(ctx.threshold())),
+                );
+            }
         }
+        ctx
     }
 }
 

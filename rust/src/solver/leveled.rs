@@ -36,6 +36,8 @@ use crate::coordinator::shard::{
 };
 use crate::coordinator::spill::{SpilledLevel, SpilledLevelWriter};
 use crate::engine::ScoreEngine;
+use crate::telemetry::{self, trace};
+use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -67,6 +69,60 @@ impl<'e, M: VarMask> EngineRef<'e, M> {
 pub struct LeveledSolver<'e, M: VarMask = u32> {
     engine: EngineRef<'e, M>,
     options: SolveOptions,
+}
+
+/// Per-level instrumentation epilogue shared by the resident, spill,
+/// sharded and streaming sweeps: bump the global solver counters and
+/// close the level span with the level's deltas. Costs a handful of
+/// relaxed atomic adds per *level* (≤ 36 per solve) — the per-subset
+/// hot loop is untouched (the `levels` bench gates the overall ratio).
+pub(super) fn finish_level_span(
+    span: trace::SpanGuard,
+    evals: u64,
+    emitted: u64,
+    sink_updates: u64,
+    prune: Option<(u64, u64)>,
+    frontier_bytes: usize,
+) {
+    telemetry::solver_levels_completed().inc();
+    telemetry::solver_score_evals().add(evals);
+    telemetry::solver_records_emitted().add(emitted);
+    telemetry::solver_frontier_bytes().set(frontier_bytes as f64);
+    if let Some((considered, pruned)) = prune {
+        telemetry::solver_prune_considered().add(considered);
+        telemetry::solver_records_pruned().add(pruned);
+    }
+    let fields = if trace::enabled() {
+        let mut f = Json::obj()
+            .set("score_evals", Json::Int(evals as i64))
+            .set("emitted", Json::Int(emitted as i64))
+            .set("sink_updates", Json::Int(sink_updates as i64))
+            .set("frontier_bytes", Json::Int(frontier_bytes as i64));
+        if let Some((considered, pruned)) = prune {
+            f = f
+                .set("prune_considered", Json::Int(considered as i64))
+                .set("pruned", Json::Int(pruned as i64));
+        }
+        f
+    } else {
+        Json::Null
+    };
+    span.end(fields);
+}
+
+/// Begin a per-level trace span (no-op guard when tracing is off).
+pub(super) fn begin_level_span(mode: &str, k1: usize, p: usize, subsets: usize) -> trace::SpanGuard {
+    if !trace::enabled() {
+        return trace::span("level"); // inert: enabled() is false
+    }
+    trace::span_with(
+        "level",
+        Json::obj()
+            .set("mode", mode)
+            .set("k", Json::Int(k1 as i64))
+            .set("p", Json::Int(p as i64))
+            .set("subsets", Json::Int(subsets as i64)),
+    )
 }
 
 /// Read access to the previous level's frontier, abstracted so the hot
@@ -358,6 +414,19 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
                 .map(|plan| k1 < p && plan.levels[k1].is_peak)
                 .unwrap_or(false);
 
+            let level_evals0 = score_evals;
+            let level_bps0 = stats.bps_updates;
+            let level_sink0 = stats.sink_updates;
+            let level_prune0 = prune_ctx
+                .as_ref()
+                .map(|ctx| (ctx.considered(), ctx.pruned()));
+            let level_span = begin_level_span(
+                if spill_now { "spill" } else { "resident" },
+                k1,
+                p,
+                size1,
+            );
+
             let tables = SinkTables {
                 sink: sink.as_mut_ptr(),
                 pmask: sink_pmask.as_mut_ptr(),
@@ -419,6 +488,16 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
                 let spilled = writer.finish(q1, r1).expect("spill finish");
                 stats.spilled_bytes += spilled.bytes_on_disk();
                 prev = Frontier::Disk(spilled);
+                finish_level_span(
+                    level_span,
+                    score_evals - level_evals0,
+                    stats.bps_updates - level_bps0,
+                    stats.sink_updates - level_sink0,
+                    prune_ctx.as_ref().zip(level_prune0).map(|(ctx, (c0, p0))| {
+                        (ctx.considered() - c0, ctx.pruned() - p0)
+                    }),
+                    prev.resident_bytes(),
+                );
                 continue;
             }
 
@@ -521,6 +600,16 @@ impl<'e, M: VarMask> LeveledSolver<'e, M> {
             }
 
             prev = Frontier::Ram(cur);
+            finish_level_span(
+                level_span,
+                score_evals - level_evals0,
+                stats.bps_updates - level_bps0,
+                stats.sink_updates - level_sink0,
+                prune_ctx.as_ref().zip(level_prune0).map(|(ctx, (c0, p0))| {
+                    (ctx.considered() - c0, ctx.pruned() - p0)
+                }),
+                prev.resident_bytes(),
+            );
         }
 
         stats.score_evals = score_evals;
@@ -806,6 +895,14 @@ pub fn solve_sharded<M: VarMask>(
     for k1 in first..=p {
         let spec1 = run.spec(&binom, k1);
         let shards = spec1.shards;
+        let level_evals0 = stats.score_evals;
+        let level_bps0 = stats.bps_updates;
+        let level_sink0 = stats.sink_updates;
+        let level_bytes0 = stats.spilled_bytes;
+        let level_prune0 = prune_ctx
+            .as_ref()
+            .map(|ctx| (ctx.considered(), ctx.pruned()));
+        let level_span = begin_level_span("sharded", k1, p, binom.c(p, k1) as usize);
         let next = AtomicUsize::new(0);
         let results: Vec<Result<ShardJobStats>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers.min(shards))
@@ -888,6 +985,18 @@ pub fn solve_sharded<M: VarMask>(
             stats.spilled_bytes += job.bytes;
         }
         run.commit_level(k1)?;
+        finish_level_span(
+            level_span,
+            stats.score_evals - level_evals0,
+            stats.bps_updates - level_bps0,
+            stats.sink_updates - level_sink0,
+            prune_ctx.as_ref().zip(level_prune0).map(|(ctx, (c0, p0))| {
+                (ctx.considered() - c0, ctx.pruned() - p0)
+            }),
+            // the sharded frontier lives on disk: record the level's
+            // shard-file bytes instead of resident frontier bytes
+            (stats.spilled_bytes - level_bytes0) as usize,
+        );
         if !options.keep_levels && k1 >= 1 {
             run.prune_level(k1 - 1);
         }
@@ -1094,6 +1203,14 @@ pub fn solve_clustered<M: VarMask>(
             continue;
         }
         let spec1 = run.spec(&binom, k1);
+        let level_evals0 = stats.score_evals;
+        let level_bps0 = stats.bps_updates;
+        let level_sink0 = stats.sink_updates;
+        let level_bytes0 = stats.spilled_bytes;
+        let level_prune0 = prune_ctx
+            .as_ref()
+            .map(|ctx| (ctx.considered(), ctx.pruned()));
+        let level_span = begin_level_span("clustered", k1, p, binom.c(p, k1) as usize);
         let results: Vec<Result<ShardJobStats>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers.min(spec1.shards))
                 .map(|w| {
@@ -1131,6 +1248,16 @@ pub fn solve_clustered<M: VarMask>(
             stats.spilled_bytes += job.bytes;
         }
         let committed_here = barrier_commit(&mut run, &ledger, &spec1, k1, options)?;
+        finish_level_span(
+            level_span,
+            stats.score_evals - level_evals0,
+            stats.bps_updates - level_bps0,
+            stats.sink_updates - level_sink0,
+            prune_ctx.as_ref().zip(level_prune0).map(|(ctx, (c0, p0))| {
+                (ctx.considered() - c0, ctx.pruned() - p0)
+            }),
+            (stats.spilled_bytes - level_bytes0) as usize,
+        );
         if committed_here && k1 >= 1 && !options.shard.keep_levels {
             run.prune_level(k1 - 1);
             cleanup_level(run.store(), k1 - 1, true);

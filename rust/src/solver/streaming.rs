@@ -37,7 +37,9 @@
 //!   Runs that need `--resume` belong on the sharded path.
 
 use super::common::{SolveOptions, SolveResult, SolveStats};
-use super::leveled::{run_level_parallel, EngineRef, Level, LevelWorker};
+use super::leveled::{
+    begin_level_span, finish_level_span, run_level_parallel, EngineRef, Level, LevelWorker,
+};
 use crate::bitset::{colex_rank, BinomTable, LevelIter, VarMask};
 use crate::bn::Dag;
 use crate::coordinator::shard::{SinkOut, PRN_BLOCK};
@@ -386,6 +388,13 @@ impl<'e, M: VarMask> StreamingSolver<'e, M> {
                 return None;
             }
             let size1 = binom.c(p, k1) as usize;
+            let level_evals0 = score_evals;
+            let level_bps0 = stats.bps_updates;
+            let level_sink0 = stats.sink_updates;
+            let level_prune0 = prune_ctx
+                .as_ref()
+                .map(|ctx| (ctx.considered(), ctx.pruned()));
+            let level_span = begin_level_span("streaming", k1, p, size1);
             let rec = record_bytes(k1);
             let mut cur = Level::allocate(k1, size1);
             let mut stream = vec![0u8; size1 * rec];
@@ -479,6 +488,18 @@ impl<'e, M: VarMask> StreamingSolver<'e, M> {
             }
             streams[k1] = stream;
             prev = cur;
+            finish_level_span(
+                level_span,
+                score_evals - level_evals0,
+                stats.bps_updates - level_bps0,
+                stats.sink_updates - level_sink0,
+                prune_ctx.as_ref().zip(level_prune0).map(|(ctx, (c0, p0))| {
+                    (ctx.considered() - c0, ctx.pruned() - p0)
+                }),
+                // cumulative compact sink-record stream bytes: THE
+                // quantity the streaming engine exists to bound
+                stream_bytes,
+            );
         }
 
         stats.score_evals = score_evals;

@@ -1,0 +1,690 @@
+//! Unified telemetry: a process-global, lock-light metrics registry plus
+//! a structured JSONL trace sink ([`trace`]).
+//!
+//! The paper's central claims are *operational* — peak memory, single-
+//! traversal wall time — yet before this layer the repro could only
+//! observe them after the fact through bench artifacts. This module is
+//! the instrument panel: every subsystem registers named **counters**,
+//! **gauges**, and fixed-bucket **histograms** here, and two exporters
+//! read them back out:
+//!
+//! * `GET /v1/metrics` on `bnsl serve` renders the whole registry in
+//!   Prometheus text exposition format ([`render`]);
+//! * `bnsl eval` and the benches fold a counter-delta snapshot into
+//!   their JSON records ([`counter_values`] / [`delta_json`]).
+//!
+//! **Design.** Registration is rare (startup / first touch) and goes
+//! through one `Mutex<Vec<Arc<Metric>>>`; the hot path never touches
+//! that lock — a [`Counter`] is an `Arc`-shared `AtomicU64` and `add`
+//! is a single relaxed `fetch_add`. Histograms keep one atomic per
+//! bucket plus a CAS-loop f64 sum. Gauges come in two flavours: a
+//! stored f64 ([`Gauge`]) and a callback ([`gauge_fn`]) sampled at
+//! render time (used for `memtrack` heap and service queue depth, where
+//! the source of truth already exists elsewhere).
+//!
+//! Registration is **idempotent**: asking for an existing
+//! `(name, labels)` pair returns a handle to the same metric, so
+//! subsystems that are constructed repeatedly (scorers, backends,
+//! servers in tests) can register at construction without duplicating
+//! families. `gauge_fn` *replaces* the callback instead, so a restarted
+//! server's gauges sample the live instance, not a stale one.
+//!
+//! **Naming.** `bnsl_<subsystem>_<what>[_<unit>][_total]`, labels only
+//! where cardinality is bounded (`op`, `endpoint`, `state`, an 8-char
+//! `fingerprint` prefix). FORMATS.md documents the conventions; the
+//! overhead budget is gated by the `levels` bench
+//! (`telemetry_overhead_ratio` in `BENCH_baseline.json`).
+
+pub mod trace;
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Once};
+
+/// Bucket upper bounds (seconds) for request-latency histograms.
+pub const LATENCY_BUCKETS: &[f64] = &[0.001, 0.005, 0.025, 0.1, 0.5, 1.0, 5.0, 30.0];
+
+enum Kind {
+    Counter(AtomicU64),
+    Gauge(AtomicU64), // f64 bits
+    GaugeFn(Mutex<Box<dyn Fn() -> f64 + Send + Sync>>),
+    Histogram(Hist),
+}
+
+struct Hist {
+    /// Finite upper bounds, strictly ascending; `+Inf` is implicit.
+    bounds: Vec<f64>,
+    /// Per-bound observation counts (non-cumulative; render accumulates).
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// f64 bits of the running sum (CAS-loop add).
+    sum_bits: AtomicU64,
+}
+
+struct Metric {
+    name: String,
+    labels: Vec<(String, String)>,
+    help: String,
+    kind: Kind,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Metric>>> {
+    static REGISTRY: Mutex<Vec<Arc<Metric>>> = Mutex::new(Vec::new());
+    &REGISTRY
+}
+
+fn kind_name(k: &Kind) -> &'static str {
+    match k {
+        Kind::Counter(_) => "counter",
+        Kind::Gauge(_) | Kind::GaugeFn(_) => "gauge",
+        Kind::Histogram(_) => "histogram",
+    }
+}
+
+/// Register-or-lookup. Panics if the same `(name, labels)` was already
+/// registered with a different kind — that is a programming error the
+/// exposition format cannot represent.
+fn register(
+    name: &str,
+    labels: &[(&str, &str)],
+    help: &str,
+    make: impl FnOnce() -> Kind,
+) -> Arc<Metric> {
+    let mut reg = registry().lock().expect("telemetry registry");
+    if let Some(existing) = reg
+        .iter()
+        .find(|m| m.name == name && labels_eq(&m.labels, labels))
+    {
+        let made = make();
+        assert_eq!(
+            kind_name(&existing.kind),
+            kind_name(&made),
+            "telemetry metric '{name}' re-registered as a different kind"
+        );
+        if let (Kind::GaugeFn(slot), Kind::GaugeFn(new)) = (&existing.kind, made) {
+            // latest instance wins: a restarted server's queue-depth
+            // gauge must sample the live manager, not the drained one
+            *slot.lock().expect("gauge-fn slot") =
+                new.into_inner().expect("gauge-fn slot");
+        }
+        return Arc::clone(existing);
+    }
+    let metric = Arc::new(Metric {
+        name: name.to_string(),
+        labels: labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect(),
+        help: help.to_string(),
+        kind: make(),
+    });
+    reg.push(Arc::clone(&metric));
+    metric
+}
+
+fn labels_eq(have: &[(String, String)], want: &[(&str, &str)]) -> bool {
+    have.len() == want.len()
+        && have
+            .iter()
+            .zip(want.iter())
+            .all(|((hk, hv), (wk, wv))| hk == wk && hv == wv)
+}
+
+/// Monotone counter handle (`Arc`-shared; clone freely).
+#[derive(Clone)]
+pub struct Counter(Arc<Metric>);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if let Kind::Counter(v) = &self.0.kind {
+            v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        match &self.0.kind {
+            Kind::Counter(v) => v.load(Ordering::Relaxed),
+            _ => 0,
+        }
+    }
+}
+
+/// Stored-value gauge handle.
+#[derive(Clone)]
+pub struct Gauge(Arc<Metric>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if let Kind::Gauge(bits) = &self.0.kind {
+            bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        match &self.0.kind {
+            Kind::Gauge(bits) => f64::from_bits(bits.load(Ordering::Relaxed)),
+            _ => 0.0,
+        }
+    }
+}
+
+/// Fixed-bucket histogram handle.
+#[derive(Clone)]
+pub struct Histogram(Arc<Metric>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        if let Kind::Histogram(h) = &self.0.kind {
+            for (i, bound) in h.bounds.iter().enumerate() {
+                if v <= *bound {
+                    h.buckets[i].fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+            h.count.fetch_add(1, Ordering::Relaxed);
+            let mut cur = h.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + v).to_bits();
+                match h.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        match &self.0.kind {
+            Kind::Histogram(h) => h.count.load(Ordering::Relaxed),
+            _ => 0,
+        }
+    }
+}
+
+/// Register (or look up) a labelless counter.
+pub fn counter(name: &str, help: &str) -> Counter {
+    counter_with(name, &[], help)
+}
+
+/// Register (or look up) a labeled counter.
+pub fn counter_with(name: &str, labels: &[(&str, &str)], help: &str) -> Counter {
+    Counter(register(name, labels, help, || {
+        Kind::Counter(AtomicU64::new(0))
+    }))
+}
+
+/// Register (or look up) a labelless stored gauge.
+pub fn gauge(name: &str, help: &str) -> Gauge {
+    Gauge(register(name, &[], help, || {
+        Kind::Gauge(AtomicU64::new(0f64.to_bits()))
+    }))
+}
+
+/// Register a callback gauge, sampled at render time. Re-registering the
+/// same name replaces the callback (latest instance wins).
+pub fn gauge_fn(name: &str, help: &str, f: impl Fn() -> f64 + Send + Sync + 'static) {
+    register(name, &[], help, move || Kind::GaugeFn(Mutex::new(Box::new(f))));
+}
+
+/// Register (or look up) a labeled fixed-bucket histogram. `bounds` are
+/// the finite bucket upper limits, strictly ascending; `+Inf` is
+/// implicit.
+pub fn histogram_with(
+    name: &str,
+    labels: &[(&str, &str)],
+    help: &str,
+    bounds: &[f64],
+) -> Histogram {
+    assert!(
+        bounds.windows(2).all(|w| w[0] < w[1]),
+        "histogram '{name}' bounds must ascend"
+    );
+    Histogram(register(name, labels, help, || {
+        Kind::Histogram(Hist {
+            bounds: bounds.to_vec(),
+            buckets: bounds.iter().map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        })
+    }))
+}
+
+/// Built-in families every export carries, regardless of which
+/// subsystems ran: the `memtrack` heap panel (live/peak bytes under the
+/// tracking allocator, allocation-call count).
+fn ensure_builtin() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        gauge_fn(
+            "bnsl_memtrack_current_bytes",
+            "Live heap bytes (0 unless TrackingAlloc is the global allocator)",
+            || crate::memtrack::current() as f64,
+        );
+        gauge_fn(
+            "bnsl_memtrack_peak_bytes",
+            "Peak live heap bytes since the last reset_peak",
+            || crate::memtrack::peak() as f64,
+        );
+        gauge_fn(
+            "bnsl_memtrack_alloc_calls",
+            "Total allocation calls under TrackingAlloc",
+            || crate::memtrack::alloc_calls() as f64,
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// well-known instrument handles (OnceLock so hot paths pay one atomic
+// load, not a registry lock, per touch)
+
+macro_rules! well_known_counter {
+    ($fn_name:ident, $metric:expr, $help:expr) => {
+        pub fn $fn_name() -> &'static Counter {
+            static H: OnceLock<Counter> = OnceLock::new();
+            H.get_or_init(|| counter($metric, $help))
+        }
+    };
+}
+
+well_known_counter!(
+    solver_levels_completed,
+    "bnsl_solver_levels_completed_total",
+    "DP levels completed across all solver runs in this process"
+);
+well_known_counter!(
+    solver_score_evals,
+    "bnsl_solver_score_evals_total",
+    "Local-score evaluations (Appendix-A counter) across solver runs"
+);
+well_known_counter!(
+    solver_records_emitted,
+    "bnsl_solver_records_emitted_total",
+    "Best-parent-set records emitted by the shared inner loop"
+);
+well_known_counter!(
+    solver_records_pruned,
+    "bnsl_solver_records_pruned_total",
+    "Subset emissions suppressed by the bounds layer"
+);
+well_known_counter!(
+    solver_prune_considered,
+    "bnsl_solver_prune_considered_total",
+    "Subsets tested against the admissible bound"
+);
+well_known_counter!(
+    engine_batches,
+    "bnsl_engine_batches_total",
+    "Scoring-kernel batch calls (native engine log_q_batch_into)"
+);
+well_known_counter!(
+    engine_batch_rows,
+    "bnsl_engine_batch_rows_total",
+    "Subsets scored through the batched kernel path"
+);
+well_known_counter!(
+    cluster_claims,
+    "bnsl_cluster_claims_total",
+    "Shard claims taken through the cluster ledger"
+);
+well_known_counter!(
+    cluster_steals,
+    "bnsl_cluster_steals_total",
+    "Stale shard claims stolen from dead hosts"
+);
+well_known_counter!(
+    cluster_heartbeats,
+    "bnsl_cluster_heartbeats_total",
+    "Claim heartbeat touches written"
+);
+well_known_counter!(
+    cluster_commits,
+    "bnsl_cluster_commits_total",
+    "Level barrier commits performed by this host"
+);
+well_known_counter!(
+    cluster_shards_done,
+    "bnsl_cluster_shards_done_total",
+    "Shards this host published done markers for"
+);
+
+/// Last completed level's resident frontier bytes (RAM or stream).
+pub fn solver_frontier_bytes() -> &'static Gauge {
+    static H: OnceLock<Gauge> = OnceLock::new();
+    H.get_or_init(|| {
+        gauge(
+            "bnsl_solver_frontier_bytes",
+            "Resident frontier record bytes after the last completed level",
+        )
+    })
+}
+
+/// Storage request billing, labeled by backend and operation.
+pub fn storage_requests(backend: &str, op: &str) -> Counter {
+    counter_with(
+        "bnsl_storage_requests_total",
+        &[("backend", backend), ("op", op)],
+        "StorageBackend requests by backend and operation",
+    )
+}
+
+// ---------------------------------------------------------------------
+// exposition
+
+fn fmt_value(out: &mut String, v: f64) {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+fn escape_label(out: &mut String, v: &str) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+fn fmt_labels(out: &mut String, labels: &[(String, String)], extra: Option<(&str, &str)>) {
+    if labels.is_empty() && extra.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(k);
+        out.push_str("=\"");
+        escape_label(out, v);
+        out.push('"');
+    }
+    if let Some((k, v)) = extra {
+        if !first {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        escape_label(out, v);
+        out.push('"');
+    }
+    out.push('}');
+}
+
+/// Render the whole registry in Prometheus text exposition format
+/// (`text/plain; version=0.0.4`). `# HELP`/`# TYPE` lines are emitted
+/// once per family; histogram buckets are cumulative and end with the
+/// implicit `+Inf` bucket equal to `_count`.
+pub fn render() -> String {
+    ensure_builtin();
+    let reg = registry().lock().expect("telemetry registry");
+    let mut out = String::new();
+    let mut typed: Vec<&str> = Vec::new();
+    for metric in reg.iter() {
+        if !typed.contains(&metric.name.as_str()) {
+            typed.push(&metric.name);
+            let _ = writeln!(out, "# HELP {} {}", metric.name, metric.help);
+            let _ = writeln!(out, "# TYPE {} {}", metric.name, kind_name(&metric.kind));
+        }
+        match &metric.kind {
+            Kind::Counter(v) => {
+                out.push_str(&metric.name);
+                fmt_labels(&mut out, &metric.labels, None);
+                out.push(' ');
+                let _ = write!(out, "{}", v.load(Ordering::Relaxed));
+                out.push('\n');
+            }
+            Kind::Gauge(bits) => {
+                out.push_str(&metric.name);
+                fmt_labels(&mut out, &metric.labels, None);
+                out.push(' ');
+                fmt_value(&mut out, f64::from_bits(bits.load(Ordering::Relaxed)));
+                out.push('\n');
+            }
+            Kind::GaugeFn(f) => {
+                let v = (f.lock().expect("gauge-fn slot"))();
+                out.push_str(&metric.name);
+                fmt_labels(&mut out, &metric.labels, None);
+                out.push(' ');
+                fmt_value(&mut out, v);
+                out.push('\n');
+            }
+            Kind::Histogram(h) => {
+                let mut cumulative = 0u64;
+                let mut le = String::new();
+                for (i, bound) in h.bounds.iter().enumerate() {
+                    cumulative += h.buckets[i].load(Ordering::Relaxed);
+                    le.clear();
+                    fmt_value(&mut le, *bound);
+                    out.push_str(&metric.name);
+                    out.push_str("_bucket");
+                    fmt_labels(&mut out, &metric.labels, Some(("le", &le)));
+                    let _ = writeln!(out, " {cumulative}");
+                }
+                let count = h.count.load(Ordering::Relaxed);
+                out.push_str(&metric.name);
+                out.push_str("_bucket");
+                fmt_labels(&mut out, &metric.labels, Some(("le", "+Inf")));
+                let _ = writeln!(out, " {count}");
+                out.push_str(&metric.name);
+                out.push_str("_sum");
+                fmt_labels(&mut out, &metric.labels, None);
+                out.push(' ');
+                fmt_value(&mut out, f64::from_bits(h.sum_bits.load(Ordering::Relaxed)));
+                out.push('\n');
+                out.push_str(&metric.name);
+                out.push_str("_count");
+                fmt_labels(&mut out, &metric.labels, None);
+                let _ = writeln!(out, " {count}");
+            }
+        }
+    }
+    out
+}
+
+/// Sample every counter as `(exposition key, value)` — the key includes
+/// rendered labels, so deltas line up across snapshots. The input to
+/// [`delta_json`].
+pub fn counter_values() -> Vec<(String, u64)> {
+    ensure_builtin();
+    let reg = registry().lock().expect("telemetry registry");
+    reg.iter()
+        .filter_map(|m| match &m.kind {
+            Kind::Counter(v) => {
+                let mut key = m.name.clone();
+                fmt_labels(&mut key, &m.labels, None);
+                Some((key, v.load(Ordering::Relaxed)))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+/// The counters that moved since `before` (a [`counter_values`]
+/// snapshot), as a JSON object of positive deltas — the `telemetry`
+/// section of eval reports and bench records.
+pub fn delta_json(before: &[(String, u64)]) -> Json {
+    let mut out = Json::obj();
+    for (key, after) in counter_values() {
+        let was = before
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+            .unwrap_or(0);
+        if after > was {
+            out = out.set(&key, Json::Int((after - was) as i64));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Parse an exposition body into (name+labels, value) samples,
+    /// skipping comment lines. Shared by the format tests below.
+    fn samples(body: &str) -> Vec<(String, f64)> {
+        body.lines()
+            .filter(|l| !l.starts_with('#') && !l.is_empty())
+            .map(|l| {
+                let (key, value) = l.rsplit_once(' ').expect("sample line");
+                (key.to_string(), value.parse::<f64>().expect("value"))
+            })
+            .collect()
+    }
+
+    fn sample(body: &str, key: &str) -> Option<f64> {
+        samples(body)
+            .into_iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+    }
+
+    #[test]
+    fn counters_accumulate_and_render_with_type_lines() {
+        let c = counter("bnsl_test_render_total", "test counter");
+        c.add(3);
+        c.inc();
+        assert!(c.get() >= 4);
+        let body = render();
+        assert!(body.contains("# TYPE bnsl_test_render_total counter"));
+        assert!(body.contains("# HELP bnsl_test_render_total test counter"));
+        assert!(sample(&body, "bnsl_test_render_total").unwrap() >= 4.0);
+    }
+
+    #[test]
+    fn registration_is_idempotent_per_name_and_labels() {
+        let a = counter_with("bnsl_test_idem_total", &[("op", "x")], "h");
+        let b = counter_with("bnsl_test_idem_total", &[("op", "x")], "h");
+        let other = counter_with("bnsl_test_idem_total", &[("op", "y")], "h");
+        a.add(2);
+        assert_eq!(b.get(), a.get(), "same (name, labels) shares storage");
+        other.inc();
+        let body = render();
+        // one TYPE line for the family, two samples
+        assert_eq!(
+            body.matches("# TYPE bnsl_test_idem_total counter").count(),
+            1
+        );
+        assert!(sample(&body, "bnsl_test_idem_total{op=\"x\"}").is_some());
+        assert!(sample(&body, "bnsl_test_idem_total{op=\"y\"}").is_some());
+    }
+
+    #[test]
+    fn label_values_escape_backslash_quote_newline() {
+        let c = counter_with(
+            "bnsl_test_escape_total",
+            &[("path", "a\\b\"c\nd")],
+            "h",
+        );
+        c.inc();
+        let body = render();
+        assert!(
+            body.contains("bnsl_test_escape_total{path=\"a\\\\b\\\"c\\nd\"}"),
+            "{body}"
+        );
+    }
+
+    #[test]
+    fn gauges_store_and_gauge_fns_sample_latest_closure() {
+        let g = gauge("bnsl_test_gauge", "h");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        gauge_fn("bnsl_test_gauge_fn", "h", || 7.0);
+        // re-registering replaces the callback (restarted-server rule)
+        gauge_fn("bnsl_test_gauge_fn", "h", || 11.0);
+        let body = render();
+        assert_eq!(sample(&body, "bnsl_test_gauge"), Some(2.5));
+        assert_eq!(sample(&body, "bnsl_test_gauge_fn"), Some(11.0));
+        assert!(body.contains("# TYPE bnsl_test_gauge_fn gauge"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_monotone_with_inf_sum_count() {
+        let h = histogram_with(
+            "bnsl_test_hist_seconds",
+            &[("endpoint", "t")],
+            "h",
+            &[0.1, 1.0, 10.0],
+        );
+        for v in [0.05, 0.5, 0.5, 5.0, 50.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        let body = render();
+        let b = |le: &str| {
+            sample(
+                &body,
+                &format!("bnsl_test_hist_seconds_bucket{{endpoint=\"t\",le=\"{le}\"}}"),
+            )
+            .unwrap_or_else(|| panic!("bucket le={le} missing:\n{body}"))
+        };
+        let buckets = [b("0.1"), b("1"), b("10"), b("+Inf")];
+        assert_eq!(buckets, [1.0, 3.0, 4.0, 5.0]);
+        assert!(
+            buckets.windows(2).all(|w| w[0] <= w[1]),
+            "buckets must be cumulative-monotone: {buckets:?}"
+        );
+        let count = sample(&body, "bnsl_test_hist_seconds_count{endpoint=\"t\"}").unwrap();
+        assert_eq!(count, 5.0);
+        assert_eq!(buckets[3], count, "+Inf bucket equals _count");
+        let sum = sample(&body, "bnsl_test_hist_seconds_sum{endpoint=\"t\"}").unwrap();
+        assert!((sum - 56.05).abs() < 1e-9, "sum {sum}");
+        assert!(body.contains("# TYPE bnsl_test_hist_seconds histogram"));
+    }
+
+    #[test]
+    fn builtin_memtrack_gauges_always_render() {
+        let body = render();
+        assert!(body.contains("# TYPE bnsl_memtrack_current_bytes gauge"));
+        assert!(body.contains("# TYPE bnsl_memtrack_peak_bytes gauge"));
+        assert!(body.contains("# TYPE bnsl_memtrack_alloc_calls gauge"));
+    }
+
+    #[test]
+    fn counter_deltas_fold_to_json() {
+        let c = counter("bnsl_test_delta_total", "h");
+        let before = counter_values();
+        c.add(5);
+        let delta = delta_json(&before);
+        assert_eq!(
+            delta.get("bnsl_test_delta_total").and_then(Json::as_u64),
+            Some(5)
+        );
+        // untouched counters are omitted from the delta
+        let _untouched = counter("bnsl_test_delta_untouched_total", "h");
+        let before = counter_values();
+        c.inc();
+        let delta = delta_json(&before);
+        assert!(delta.get("bnsl_test_delta_untouched_total").is_none());
+    }
+
+    #[test]
+    fn well_known_handles_are_stable() {
+        let a = solver_score_evals() as *const Counter;
+        let b = solver_score_evals() as *const Counter;
+        assert_eq!(a, b);
+        storage_requests("object", "put").inc();
+        assert!(storage_requests("object", "put").get() >= 1);
+    }
+}

@@ -1,0 +1,324 @@
+//! Structured span/event trace sink: JSONL records for offline analysis.
+//!
+//! `--trace FILE` on `bnsl learn`/`bnsl serve` (or the `BNSL_TRACE`
+//! environment variable, honoured by every CLI entry point) opens the
+//! sink; from then on instrumented subsystems emit one JSON object per
+//! line:
+//!
+//! ```json
+//! {"ts_us":1234,"kind":"span_begin","id":7,"parent":3,"thread":2,
+//!  "name":"level","fields":{"k":5}}
+//! ```
+//!
+//! * `ts_us` — microseconds since the sink opened, **globally
+//!   non-decreasing** (timestamps are taken under the sink lock, so the
+//!   file order is the time order; `tools/trace_check.py` asserts it).
+//! * `kind` — `span_begin` | `span_end` | `event`.
+//! * `id` — process-unique record id; `span_end` repeats its begin's.
+//! * `parent` — the enclosing span's id on the same thread, or `null`.
+//! * `thread` — small per-process thread ordinal (not the OS tid).
+//! * `fields` — free-form object; omitted when empty.
+//!
+//! **Cost when disabled:** one relaxed atomic load per call site
+//! ([`enabled`]); spans are returned as inert no-op guards and no JSON
+//! is built. The `levels` bench gates the enabled-path overhead
+//! (`telemetry_overhead_ratio`).
+//!
+//! FORMATS.md carries the normative record schema.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static THREAD_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static THREAD_ORDINAL: u64 = THREAD_COUNTER.fetch_add(1, Ordering::Relaxed);
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+struct Sink {
+    out: BufWriter<File>,
+    t0: Instant,
+    last_us: u64,
+}
+
+/// Is a trace sink attached? One relaxed load — the only cost the
+/// disabled hot path pays.
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Open (or replace) the trace sink. The file is truncated; records
+/// start at `ts_us = 0`.
+pub fn init_trace(path: &Path) -> std::io::Result<()> {
+    let file = File::create(path)?;
+    let mut sink = SINK.lock().expect("trace sink");
+    if let Some(old) = sink.as_mut() {
+        let _ = old.out.flush();
+    }
+    *sink = Some(Sink {
+        out: BufWriter::new(file),
+        t0: Instant::now(),
+        last_us: 0,
+    });
+    TRACE_ON.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Honour `BNSL_TRACE=FILE` — called once from the CLI entry point so
+/// tools and smoke scripts can trace any command without a flag.
+pub fn init_trace_from_env() {
+    if let Ok(path) = std::env::var("BNSL_TRACE") {
+        if !path.is_empty() {
+            if let Err(e) = init_trace(Path::new(&path)) {
+                eprintln!("warning: BNSL_TRACE={path}: {e}");
+            }
+        }
+    }
+}
+
+/// Flush and detach the sink (benches toggle tracing in-process with
+/// this; it is also safe to call when tracing was never enabled).
+pub fn stop_trace() {
+    TRACE_ON.store(false, Ordering::Relaxed);
+    let mut sink = SINK.lock().expect("trace sink");
+    if let Some(old) = sink.as_mut() {
+        let _ = old.out.flush();
+    }
+    *sink = None;
+}
+
+fn write_record(kind: &str, id: u64, parent: Option<u64>, name: Option<&str>, fields: Json) {
+    let thread = THREAD_ORDINAL.with(|t| *t);
+    let mut sink = SINK.lock().expect("trace sink");
+    let Some(sink) = sink.as_mut() else {
+        return; // raced a stop_trace after the enabled() check
+    };
+    // timestamp under the lock: file order IS time order, and the
+    // clamp makes the sequence globally non-decreasing even if the
+    // monotonic clock's micros tie
+    let now = sink.t0.elapsed().as_micros() as u64;
+    let ts = now.max(sink.last_us);
+    sink.last_us = ts;
+    let mut doc = Json::obj()
+        .set("ts_us", Json::Int(ts as i64))
+        .set("kind", kind)
+        .set("id", Json::Int(id as i64))
+        .set(
+            "parent",
+            match parent {
+                Some(p) => Json::Int(p as i64),
+                None => Json::Null,
+            },
+        )
+        .set("thread", Json::Int(thread as i64));
+    if let Some(name) = name {
+        doc = doc.set("name", name);
+    }
+    if !matches!(fields, Json::Null) {
+        doc = doc.set("fields", fields);
+    }
+    let mut line = doc.to_string();
+    line.push('\n');
+    let _ = sink.out.write_all(line.as_bytes());
+    let _ = sink.out.flush();
+}
+
+fn current_parent() -> Option<u64> {
+    SPAN_STACK.with(|s| s.borrow().last().copied())
+}
+
+/// Emit a point event under the current span (if any).
+pub fn event(name: &str, fields: Json) {
+    if !enabled() {
+        return;
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    write_record("event", id, current_parent(), Some(name), fields);
+}
+
+/// RAII span: emits `span_begin` now and `span_end` when dropped (or
+/// explicitly via [`SpanGuard::end`], which can attach result fields).
+/// When tracing is disabled this is an inert zero-cost guard.
+pub struct SpanGuard {
+    id: u64,
+    name: String,
+}
+
+/// Begin a span with no begin-fields.
+pub fn span(name: &str) -> SpanGuard {
+    span_with(name, Json::Null)
+}
+
+/// Begin a span with begin-fields (inputs: level index, shard counts…).
+pub fn span_with(name: &str, fields: Json) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            id: 0,
+            name: String::new(),
+        };
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    write_record("span_begin", id, current_parent(), Some(name), fields);
+    SPAN_STACK.with(|s| s.borrow_mut().push(id));
+    SpanGuard {
+        id,
+        name: name.to_string(),
+    }
+}
+
+impl SpanGuard {
+    /// End the span, attaching result fields (wall is implicit in the
+    /// begin/end timestamps).
+    pub fn end(mut self, fields: Json) {
+        self.finish(fields);
+    }
+
+    fn finish(&mut self, fields: Json) {
+        if self.id == 0 {
+            return;
+        }
+        let id = self.id;
+        self.id = 0;
+        SPAN_STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            debug_assert_eq!(stack.last().copied(), Some(id), "span end out of order");
+            if let Some(pos) = stack.iter().rposition(|&x| x == id) {
+                stack.truncate(pos);
+            }
+        });
+        if enabled() {
+            write_record("span_end", id, current_parent(), Some(&self.name), fields);
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.finish(Json::Null);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the sink is process-global; tests that attach one serialise here
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn temp_trace(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bnsl_trace_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn read_records(path: &Path) -> Vec<Json> {
+        std::fs::read_to_string(path)
+            .expect("trace file")
+            .lines()
+            .map(|l| Json::parse(l).expect("trace line parses"))
+            .collect()
+    }
+
+    #[test]
+    fn disabled_tracing_is_inert() {
+        let _g = LOCK.lock().unwrap();
+        stop_trace();
+        assert!(!enabled());
+        let span = span("noop");
+        event("nothing", Json::obj());
+        span.end(Json::obj());
+        // no sink, no panic, nothing to assert beyond "it returned"
+    }
+
+    #[test]
+    fn spans_nest_and_timestamps_never_decrease() {
+        let _g = LOCK.lock().unwrap();
+        let path = temp_trace("nest");
+        init_trace(&path).unwrap();
+        {
+            let outer = span_with("outer", Json::obj().set("k", 1));
+            let inner = span("inner");
+            event("tick", Json::obj().set("n", 3));
+            inner.end(Json::obj().set("done", true));
+            outer.end(Json::Null);
+        }
+        stop_trace();
+        let records = read_records(&path);
+        assert_eq!(records.len(), 5, "{records:?}");
+        let kinds: Vec<&str> = records
+            .iter()
+            .map(|r| r.get("kind").and_then(Json::as_str).unwrap())
+            .collect();
+        assert_eq!(
+            kinds,
+            ["span_begin", "span_begin", "event", "span_end", "span_end"]
+        );
+        // the event and inner span parent onto the enclosing ids
+        let outer_id = records[0].get("id").and_then(Json::as_u64).unwrap();
+        let inner_id = records[1].get("id").and_then(Json::as_u64).unwrap();
+        assert_eq!(records[1].get("parent").and_then(Json::as_u64), Some(outer_id));
+        assert_eq!(records[2].get("parent").and_then(Json::as_u64), Some(inner_id));
+        assert_eq!(records[3].get("id").and_then(Json::as_u64), Some(inner_id));
+        // global monotone timestamps
+        let ts: Vec<i64> = records
+            .iter()
+            .map(|r| r.get("ts_us").and_then(Json::as_i64).unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn drop_closes_an_unended_span() {
+        let _g = LOCK.lock().unwrap();
+        let path = temp_trace("drop");
+        init_trace(&path).unwrap();
+        {
+            let _s = span("scoped");
+        }
+        stop_trace();
+        let records = read_records(&path);
+        assert_eq!(records.len(), 2);
+        assert_eq!(
+            records[1].get("kind").and_then(Json::as_str),
+            Some("span_end")
+        );
+        assert_eq!(records[0].get("id"), records[1].get("id"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn threads_get_distinct_ordinals_and_own_stacks() {
+        let _g = LOCK.lock().unwrap();
+        let path = temp_trace("threads");
+        init_trace(&path).unwrap();
+        let main_span = span("main");
+        std::thread::spawn(|| {
+            let s = span("worker");
+            s.end(Json::Null);
+        })
+        .join()
+        .unwrap();
+        main_span.end(Json::Null);
+        stop_trace();
+        let records = read_records(&path);
+        let worker_begin = records
+            .iter()
+            .find(|r| r.get("name").and_then(Json::as_str) == Some("worker"))
+            .unwrap();
+        let main_begin = &records[0];
+        assert_ne!(worker_begin.get("thread"), main_begin.get("thread"));
+        // a fresh thread has no enclosing span: parent is null
+        assert!(matches!(worker_begin.get("parent"), Some(Json::Null)));
+        let _ = std::fs::remove_file(&path);
+    }
+}

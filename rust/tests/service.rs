@@ -249,6 +249,83 @@ fn restart_resumes_the_inflight_job_via_the_manifest() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Sum of one metric family's values across label variants in a
+/// Prometheus-text body (`name{labels} value` / `name value` lines).
+fn metric_sum(body: &str, family: &str) -> f64 {
+    let mut total = 0.0;
+    for line in body.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        if let Some((name, value)) = line.rsplit_once(' ') {
+            if name.split('{').next().unwrap_or(name) == family {
+                if let Ok(v) = value.parse::<f64>() {
+                    total += v;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Acceptance: `/v1/metrics` counters move across a real
+/// submit → solve → result cycle. The registry is process-global and
+/// other tests in this binary run concurrently, so everything is
+/// asserted as deltas between two scrapes — only this test's own solve
+/// is needed to make them strictly positive.
+#[test]
+fn metrics_counters_advance_across_a_real_solve() {
+    let dir = temp_dir("metrics_cycle");
+    let data = synth::random(12, 130, 3, &mut Rng::new(99));
+    let text = csv_text(&data);
+    let server = serve(&dir, 1);
+    let addr = server.addr().to_string();
+
+    let (code, before) = client::request(&addr, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(code, 200);
+    let levels_before = metric_sum(&before, "bnsl_solver_levels_completed_total");
+    let evals_before = metric_sum(&before, "bnsl_solver_score_evals_total");
+    let solves_before = metric_sum(&before, "bnsl_executor_solves_total");
+
+    let sub = client::submit(&addr, &inline_request(&text, 2)).unwrap();
+    wait_done(&addr, &sub.id);
+    let served = client::result(&addr, &sub.id).unwrap();
+    let direct = direct_solve(&text);
+    assert_eq!(
+        served.get("log_score").unwrap().as_f64().unwrap().to_bits(),
+        direct.log_score.to_bits()
+    );
+
+    let (code, after) = client::request(&addr, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(code, 200);
+    // the scrape is well-formed Prometheus text with the service,
+    // solver, and memtrack families all present
+    assert!(
+        after.contains("# TYPE bnsl_service_queue_depth gauge"),
+        "{after}"
+    );
+    assert!(
+        after.contains("# TYPE bnsl_http_request_seconds histogram"),
+        "{after}"
+    );
+    assert!(after.contains("bnsl_memtrack_peak_bytes"), "{after}");
+    assert!(
+        after.contains("# TYPE bnsl_solver_levels_completed_total counter"),
+        "{after}"
+    );
+
+    let levels_delta = metric_sum(&after, "bnsl_solver_levels_completed_total") - levels_before;
+    let evals_delta = metric_sum(&after, "bnsl_solver_score_evals_total") - evals_before;
+    let solves_delta = metric_sum(&after, "bnsl_executor_solves_total") - solves_before;
+    assert!(levels_delta > 0.0, "solver level counter did not move");
+    assert!(evals_delta > 0.0, "score-eval counter did not move");
+    assert!(solves_delta >= 1.0, "executor solve counter did not move");
+
+    server.drain();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Satellite: the admission verdict reaches the HTTP client on a 422.
 #[test]
 fn over_budget_submission_rejected_with_verdict_in_the_error_body() {

@@ -91,6 +91,10 @@ LEVELS_METRICS = {
     "wide_ns_per_subset": WALL,
     "wide_spill_ns_per_subset": WALL,
     "heap_peak_bytes": HEAP,
+    # traced/untraced wall ratio from the levels bench: telemetry spans
+    # getting expensive gates like any other wall regression (baseline
+    # 1.0, so the 0.25 wall tolerance caps tracing overhead at +25%)
+    "telemetry_overhead_ratio": WALL,
 }
 SPILL_METRICS = {
     "time_plain": WALL,
@@ -356,6 +360,7 @@ def self_test():
             "narrow_ns_per_subset": 100.0,
             "wide_ns_per_subset": 110.0,
             "heap_peak_bytes": 1_000_000,
+            "telemetry_overhead_ratio": 1.0,
         },
         "spill": {"rows": [{"p": 14, "time_plain": 1.0, "mem_plain": 500_000}]},
         "scoring": {"log_q_ns_per_subset": 900.0, "batch_log_q_ns_per_subset": 800.0},
@@ -401,6 +406,17 @@ def self_test():
     bad["levels"]["heap_peak_bytes"] = 1_300_000
     failures, _ = compare(bad, base, tol)
     assert failures, "a 30% heap regression must fail"
+
+    # telemetry overhead gates as a wall ceiling: tracing growing the
+    # solve wall >25% over baseline fails
+    bad = json.loads(json.dumps(base))
+    bad["levels"]["telemetry_overhead_ratio"] = 1.40
+    failures, _ = compare(bad, base, tol)
+    assert failures, "a telemetry-overhead blowup must fail"
+    ok = json.loads(json.dumps(base))
+    ok["levels"]["telemetry_overhead_ratio"] = 1.10
+    failures, _ = compare(ok, base, tol)
+    assert not failures, f"a 10% telemetry overhead must pass: {failures}"
 
     # a bench that vanished (partial artifact) fails
     partial = json.loads(json.dumps(base))

@@ -8,6 +8,10 @@
 #      last committed level
 #   4. all three emitted scores must be BIT-identical (compared as the
 #      f64's little-endian bytes, not as decimal text)
+#   5. every host process writes its own BNSL_TRACE JSONL;
+#      tools/trace_check.py validates each (the SIGKILLed host's file
+#      with --allow-partial-tail) and, when the kill actually landed,
+#      proves >= 1 claim_steal event appears across the host traces
 #
 # The whole scenario runs on either storage backend: `posix` exercises
 # O_EXCL/rename/mtime on the local filesystem, `object` the S3-semantics
@@ -39,20 +43,28 @@ echo "== reference: single-process sharded run (backend: $BACKEND) =="
     --shard-dir "$WORK/ref" --out "$WORK/ref.json"
 
 echo "== cluster: two hosts, host 1 SIGKILLed mid-run =="
-"$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 0 \
+BNSL_TRACE="$WORK/trace_h0.jsonl" \
+    "$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 0 \
     --out "$WORK/host0.json" &
 H0=$!
-"$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 1 \
+BNSL_TRACE="$WORK/trace_h1_killed.jsonl" \
+    "$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 1 \
     --out "$WORK/host1.json" &
 H1=$!
 
 # let host 1 claim real work, then kill it without ceremony
 sleep 1
-kill -9 "$H1" 2>/dev/null || echo "host 1 already finished before the kill"
+if kill -9 "$H1" 2>/dev/null; then
+    KILL_LANDED=1
+else
+    KILL_LANDED=0
+    echo "host 1 already finished before the kill"
+fi
 wait "$H1" 2>/dev/null || true
 
 echo "== restart the killed host; survivor + restart must both finish =="
-"$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 1 \
+BNSL_TRACE="$WORK/trace_h1_restart.jsonl" \
+    "$BNSL" learn "${DATA[@]}" "${CLUSTER[@]}" --host-id 1 \
     --out "$WORK/host1.json"
 wait "$H0"
 
@@ -75,4 +87,19 @@ if [ "$REF" != "$A" ] || [ "$REF" != "$B" ]; then
     echo "FAIL ($BACKEND): cluster scores diverge from the single-process reference" >&2
     exit 1
 fi
+
+echo "== telemetry: per-host traces must validate =="
+TRACE_CHECK="$(dirname "$0")/trace_check.py"
+# the SIGKILLed process may have been cut mid-write: tolerate a
+# truncated final line and spans left open at EOF in its file only
+python3 "$TRACE_CHECK" "$WORK/trace_h1_killed.jsonl" --allow-partial-tail
+if [ "$KILL_LANDED" = "1" ]; then
+    # the dead host's stale claims MUST have been stolen by the
+    # survivor or the restart — the claim_steal event proves it
+    python3 "$TRACE_CHECK" "$WORK/trace_h0.jsonl" "$WORK/trace_h1_restart.jsonl" \
+        --require-event claim_steal --min 1
+else
+    python3 "$TRACE_CHECK" "$WORK/trace_h0.jsonl" "$WORK/trace_h1_restart.jsonl"
+fi
+
 echo "OK ($BACKEND): survivor, restarted host and single-process reference are bit-identical"

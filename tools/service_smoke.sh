@@ -12,6 +12,10 @@
 #      job must resume via its run manifest and complete with a score
 #      BYTE-identical to the direct run (an identical resubmission with
 #      --wait rides the dedup/cache path to fetch it)
+#   5. telemetry rides along: both server processes run with --trace,
+#      GET /v1/metrics is scraped before/after each solve to prove the
+#      solver/executor counters advance, and tools/trace_check.py
+#      validates the emitted JSONL span structure
 #
 # Usage: tools/service_smoke.sh [path/to/bnsl]   (default target/release/bnsl)
 set -euo pipefail
@@ -44,8 +48,32 @@ print(struct.pack("<d", doc["log_score"]).hex())
 EOF
 }
 
+# sum of a counter's values across label variants on /v1/metrics;
+# prints 0 when the family has not been registered yet (counters appear
+# on first touch, so a fresh server legitimately lacks solver families)
+metric_sum() {
+    python3 - "$ADDR" "$1" <<'EOF'
+import http.client, sys
+conn = http.client.HTTPConnection(sys.argv[1], timeout=5)
+conn.request("GET", "/v1/metrics")
+resp = conn.getresponse()
+if resp.status != 200:
+    print(f"FAIL: /v1/metrics returned {resp.status}", file=sys.stderr)
+    sys.exit(1)
+total = 0.0
+for line in resp.read().decode().splitlines():
+    if line.startswith("#") or not line.strip():
+        continue
+    name, _, value = line.rpartition(" ")
+    if name.split("{")[0] == sys.argv[2]:
+        total += float(value)
+print(int(total))
+EOF
+}
+
 start_server() {
-    "$BNSL" serve --port "$PORT" --jobs-dir "$WORK/jobs" --max-concurrent 1 &
+    "$BNSL" serve --port "$PORT" --jobs-dir "$WORK/jobs" --max-concurrent 1 \
+        --trace "$1" &
     SRV=$!
     # wait for /v1/healthz
     for _ in $(seq 1 100); do
@@ -66,7 +94,9 @@ EOF
 }
 
 echo "== serve + first job: served score must be byte-identical =="
-start_server
+start_server "$WORK/trace_srv1.jsonl"
+LEVELS_BEFORE="$(metric_sum bnsl_solver_levels_completed_total)"
+SOLVES_BEFORE="$(metric_sum bnsl_executor_solves_total)"
 "$BNSL" submit --server "$ADDR" --data "$WORK/a.csv" \
     --wait --out "$WORK/served_a.json" >/dev/null
 A_REF="$(score_bits "$WORK/direct_a.json")"
@@ -75,6 +105,16 @@ echo "direct = $A_REF"
 echo "served = $A_SRV"
 if [ "$A_REF" != "$A_SRV" ]; then
     echo "FAIL: served score differs from the direct run" >&2
+    exit 1
+fi
+
+echo "== telemetry: /v1/metrics counters must advance across the solve =="
+LEVELS_AFTER="$(metric_sum bnsl_solver_levels_completed_total)"
+SOLVES_AFTER="$(metric_sum bnsl_executor_solves_total)"
+echo "solver levels completed: $LEVELS_BEFORE -> $LEVELS_AFTER"
+echo "executor solves:         $SOLVES_BEFORE -> $SOLVES_AFTER"
+if [ "$LEVELS_AFTER" -le "$LEVELS_BEFORE" ] || [ "$SOLVES_AFTER" -le "$SOLVES_BEFORE" ]; then
+    echo "FAIL: solver/executor counters did not advance on /v1/metrics" >&2
     exit 1
 fi
 
@@ -99,7 +139,7 @@ fi
 SRV=""
 
 echo "== restart: the interrupted job must resume and finish =="
-start_server
+start_server "$WORK/trace_srv2.jsonl"
 # identical resubmission dedupes onto the same job and waits it out
 JOB_B2="$("$BNSL" submit --server "$ADDR" --data "$WORK/b_full.csv" --p 14 --shards 4 \
     --wait --out "$WORK/served_b.json" --timeout-secs 300)"
@@ -116,7 +156,21 @@ if [ "$B_REF" != "$B_SRV" ]; then
     exit 1
 fi
 
+echo "== telemetry: restarted process bills the p=14 resume on ITS registry =="
+LEVELS_RESUMED="$(metric_sum bnsl_solver_levels_completed_total)"
+SOLVES_RESUMED="$(metric_sum bnsl_executor_solves_total)"
+echo "solver levels completed: $LEVELS_RESUMED, executor solves: $SOLVES_RESUMED"
+if [ "$LEVELS_RESUMED" -le 0 ] || [ "$SOLVES_RESUMED" -le 0 ]; then
+    echo "FAIL: the restarted server's registry shows no solver activity" >&2
+    exit 1
+fi
+
 kill -TERM "$SRV"
 wait "$SRV" || true
 SRV=""
+
+echo "== telemetry: both servers' trace files must validate =="
+python3 "$(dirname "$0")/trace_check.py" \
+    "$WORK/trace_srv1.jsonl" "$WORK/trace_srv2.jsonl"
+
 echo "OK: served, drained, restarted and resumed — all scores byte-identical"

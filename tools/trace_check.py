@@ -1,0 +1,193 @@
+#!/usr/bin/env python3
+"""Validate bnsl JSONL trace files (the --trace / BNSL_TRACE output).
+
+Checks, per file (the normative schema is docs/FORMATS.md):
+
+* every line parses as a JSON object with the required keys
+  (ts_us, kind, id, parent, thread; name on span_begin/event);
+* kind is one of span_begin | span_end | event;
+* ts_us is a non-negative integer and **globally non-decreasing** in
+  file order (the writer timestamps under the sink lock);
+* ids are positive; no id begins two spans; a span_end matches the
+  **innermost open span of its thread** (per-thread LIFO nesting) and
+  repeats its begin's id;
+* a span_begin/event's parent is the enclosing open span of the same
+  thread (or null at top level).
+
+Spans still open at end-of-file are allowed (a SIGKILLed process never
+writes its span_end records); --strict-open turns them into errors.
+A final line that does not parse is an error unless --allow-partial-tail
+is given (again: the SIGKILL case).
+
+--require-event NAME [--min N] additionally asserts that at least N
+events with that name appear **across all input files** — the smoke
+scripts use this to prove a claim-steal actually happened under the
+SIGKILL test.
+
+Exit status: 0 clean, 1 any violation. Usage:
+
+    python3 tools/trace_check.py TRACE.jsonl [MORE.jsonl ...] \
+        [--require-event NAME] [--min N] [--allow-partial-tail] \
+        [--strict-open] [--quiet]
+"""
+
+import argparse
+import json
+import sys
+
+KINDS = {"span_begin", "span_end", "event"}
+
+
+def fail(errors, path, line_no, message):
+    errors.append(f"{path}:{line_no}: {message}")
+
+
+def check_file(path, errors, allow_partial_tail, strict_open):
+    """Validate one trace file; returns {event name: count} for events."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        fail(errors, path, 0, f"unreadable: {e}")
+        return {}
+    event_counts = {}
+    open_spans = {}  # thread -> [ids] innermost-last
+    begun = set()
+    last_ts = -1
+    records = 0
+    for line_no, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            if allow_partial_tail and line_no == len(lines):
+                break  # a SIGKILL mid-write truncates the final line
+            fail(errors, path, line_no, f"unparseable record: {e}")
+            continue
+        if not isinstance(rec, dict):
+            fail(errors, path, line_no, "record is not a JSON object")
+            continue
+        records += 1
+        kind = rec.get("kind")
+        if kind not in KINDS:
+            fail(errors, path, line_no, f"bad kind {kind!r}")
+            continue
+        ts = rec.get("ts_us")
+        if not isinstance(ts, int) or ts < 0:
+            fail(errors, path, line_no, f"bad ts_us {ts!r}")
+        elif ts < last_ts:
+            fail(
+                errors, path, line_no,
+                f"ts_us went backwards: {ts} after {last_ts}",
+            )
+        else:
+            last_ts = ts
+        rid = rec.get("id")
+        if not isinstance(rid, int) or rid <= 0:
+            fail(errors, path, line_no, f"bad id {rid!r}")
+            continue
+        thread = rec.get("thread")
+        if not isinstance(thread, int) or thread <= 0:
+            fail(errors, path, line_no, f"bad thread {thread!r}")
+            continue
+        parent = rec.get("parent")
+        if parent is not None and not isinstance(parent, int):
+            fail(errors, path, line_no, f"bad parent {parent!r}")
+            continue
+        stack = open_spans.setdefault(thread, [])
+        if kind in ("span_begin", "event"):
+            name = rec.get("name")
+            if not isinstance(name, str) or not name:
+                fail(errors, path, line_no, f"{kind} without a name")
+                continue
+            expect_parent = stack[-1] if stack else None
+            if parent != expect_parent:
+                fail(
+                    errors, path, line_no,
+                    f"{kind} '{name}' parent {parent!r}, but the enclosing "
+                    f"open span on thread {thread} is {expect_parent!r}",
+                )
+            if kind == "event":
+                event_counts[name] = event_counts.get(name, 0) + 1
+            else:
+                if rid in begun:
+                    fail(errors, path, line_no, f"span id {rid} begun twice")
+                begun.add(rid)
+                stack.append(rid)
+        else:  # span_end
+            if not stack:
+                fail(
+                    errors, path, line_no,
+                    f"span_end id {rid} on thread {thread} with no open span",
+                )
+            elif stack[-1] != rid:
+                fail(
+                    errors, path, line_no,
+                    f"span_end id {rid} out of order: innermost open span "
+                    f"on thread {thread} is {stack[-1]} (per-thread LIFO)",
+                )
+            else:
+                stack.pop()
+    still_open = {t: s for t, s in open_spans.items() if s}
+    if still_open and strict_open:
+        fail(
+            errors, path, len(lines),
+            f"spans still open at EOF (strict-open): {still_open}",
+        )
+    return {"_records": records, **event_counts}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", help="trace files to validate")
+    ap.add_argument(
+        "--require-event", metavar="NAME",
+        help="assert >= --min events with this name across all files",
+    )
+    ap.add_argument("--min", type=int, default=1, help="threshold for --require-event")
+    ap.add_argument(
+        "--allow-partial-tail", action="store_true",
+        help="tolerate one unparseable FINAL line per file (SIGKILL truncation)",
+    )
+    ap.add_argument(
+        "--strict-open", action="store_true",
+        help="spans still open at EOF are errors (default: allowed)",
+    )
+    ap.add_argument("--quiet", action="store_true", help="suppress the per-file summary")
+    args = ap.parse_args()
+
+    errors = []
+    total_events = {}
+    total_records = 0
+    for path in args.files:
+        counts = check_file(path, errors, args.allow_partial_tail, args.strict_open)
+        records = counts.pop("_records", 0)
+        total_records += records
+        for name, n in counts.items():
+            total_events[name] = total_events.get(name, 0) + n
+        if not args.quiet:
+            summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items())) or "none"
+            print(f"{path}: {records} records, events: {summary}")
+
+    if args.require_event:
+        have = total_events.get(args.require_event, 0)
+        if have < args.min:
+            errors.append(
+                f"required event '{args.require_event}': found {have}, "
+                f"need >= {args.min} across {len(args.files)} file(s)"
+            )
+
+    if total_records == 0:
+        errors.append("no trace records found in any input file")
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    if not args.quiet:
+        print(f"OK: {total_records} records across {len(args.files)} file(s)")
+
+
+if __name__ == "__main__":
+    main()
